@@ -1,0 +1,98 @@
+//! The paper's motivating scenario (§1): an LLM-powered coding
+//! assistant.  A *proactive* agent silently indexes the repository and
+//! drafts summaries in the background; a *reactive* agent answers the
+//! developer's questions on demand.  Both hit the same on-device LLM.
+//!
+//! This example replays the scenario against the virtual SoC at
+//! Llama-3.2-3B scale and contrasts Agent.xpu with the llama.cpp-like
+//! baseline and the continuous-batching scheme, printing the
+//! interference each developer question experiences.
+//!
+//! ```sh
+//! cargo run --release --example coding_assistant
+//! ```
+
+use agent_xpu::baselines::{CpuFcfsEngine, Scheme, SingleXpuEngine};
+use agent_xpu::config::{SchedulerConfig, default_soc, llama32_3b};
+use agent_xpu::coordinator::AgentXpuEngine;
+use agent_xpu::engine::Engine;
+use agent_xpu::workload::{Priority, Request};
+
+fn scenario() -> Vec<Request> {
+    let mut trace = vec![];
+    // proactive: the indexer wakes every ~2.5s to digest a source file
+    // (long context, short summary)
+    for i in 0..12u64 {
+        trace.push(Request {
+            id: i,
+            priority: Priority::Proactive,
+            arrival_us: i as f64 * 2.5e6,
+            prompt: vec![7; 900],
+            max_new_tokens: 40,
+            profile: "repo-indexer",
+        });
+    }
+    // reactive: the developer asks three questions while the indexer runs
+    for (k, (t, plen, out)) in
+        [(4.0e6, 420usize, 60usize), (14.0e6, 250, 40), (24.0e6, 610, 80)]
+            .iter()
+            .enumerate()
+    {
+        trace.push(Request {
+            id: 100 + k as u64,
+            priority: Priority::Reactive,
+            arrival_us: *t,
+            prompt: vec![3; *plen],
+            max_new_tokens: *out,
+            profile: "dev-question",
+        });
+    }
+    trace
+}
+
+fn main() -> anyhow::Result<()> {
+    let geo = llama32_3b();
+    let soc = default_soc();
+    println!("coding-assistant scenario: 12 proactive indexing calls + 3 developer questions\n");
+    println!(
+        "{:<30} {:>14} {:>14} {:>14} {:>12} {:>10}",
+        "engine", "Q1 TTFT (ms)", "Q2 TTFT (ms)", "Q3 TTFT (ms)", "indexer tok/s", "J/tok"
+    );
+    let mut run = |name: &str, rep: agent_xpu::metrics::RunReport| {
+        let q = |id: u64| {
+            rep.reqs
+                .iter()
+                .find(|m| m.id == id)
+                .and_then(|m| m.ttft_us())
+                .map(|t| format!("{:.0}", t / 1e3))
+                .unwrap_or_else(|| "-".into())
+        };
+        let pro = rep.class(Priority::Proactive);
+        println!(
+            "{:<30} {:>14} {:>14} {:>14} {:>12.1} {:>10.2}",
+            name,
+            q(100),
+            q(101),
+            q(102),
+            pro.tokens_per_s,
+            rep.joules_per_token()
+        );
+    };
+
+    run(
+        "agent.xpu",
+        AgentXpuEngine::synthetic(geo.clone(), soc.clone(), SchedulerConfig::default())
+            .run(scenario())?,
+    );
+    run(
+        "llama.cpp-like (CPU FCFS)",
+        CpuFcfsEngine::new(geo.clone(), soc.clone(), 4).run(scenario())?,
+    );
+    run(
+        "continuous batching (iGPU)",
+        SingleXpuEngine::new(geo, soc, Scheme::ContinuousBatching).run(scenario())?,
+    );
+    println!("\nAgent.xpu answers the developer at interactive latency while the");
+    println!("indexer keeps its throughput — the paper's Fig. 1 promise.");
+    Ok(())
+}

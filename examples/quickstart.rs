@@ -1,0 +1,51 @@
+//! Quickstart: load AOT artifacts, run one reactive request end-to-end
+//! on the real PJRT runtime, print tokens + timings.
+//!
+//! ```sh
+//! make artifacts            # once
+//! cargo run --release --example quickstart [-- artifacts/tiny]
+//! ```
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use agent_xpu::runtime::{KvCache, ModelExecutor, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts/tiny".into());
+    println!("loading {dir} ...");
+    let t0 = Instant::now();
+    let rt = Arc::new(Runtime::load(&dir)?);
+    println!(
+        "loaded {} ({:.1}M params, {} compiled kernels) in {:.1}s",
+        rt.geo.name,
+        rt.geo.n_params() as f64 / 1e6,
+        rt.manifest.artifacts.len(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    let exec = ModelExecutor::new(rt.clone());
+    // a synthetic "user prompt" of token ids (no tokenizer — DESIGN.md §1)
+    let prompt: Vec<i32> = (0..37).map(|i| (i * 13 + 5) % rt.geo.vocab as i32).collect();
+    let chunk = rt.geo.chunk_sizes[rt.geo.chunk_sizes.len() - 1];
+
+    let mut cache = KvCache::new(&rt.geo);
+    let t1 = Instant::now();
+    let hidden = exec.prefill(&prompt, chunk, &mut cache)?;
+    let ttft = t1.elapsed();
+    let t2 = Instant::now();
+    let out = exec.decode(hidden, &mut cache, 16)?;
+    let decode = t2.elapsed();
+
+    println!("prompt ({} tokens): {prompt:?}", prompt.len());
+    println!("generated (16 tokens): {out:?}");
+    println!(
+        "TTFT {:.1} ms  |  TPOT {:.1} ms  |  wall {:.1} ms",
+        ttft.as_secs_f64() * 1e3,
+        decode.as_secs_f64() * 1e3 / 15.0,
+        (ttft + decode).as_secs_f64() * 1e3
+    );
+    println!("(timings here are real PJRT-CPU wall-clock; the paper-scale");
+    println!(" virtual-SoC numbers come from `agent-xpu fig ...` — DESIGN.md §1)");
+    Ok(())
+}

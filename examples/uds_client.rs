@@ -1,0 +1,29 @@
+//! UDS client for the serving frontend (paper §7).
+//!
+//! ```sh
+//! # terminal 1:
+//! cargo run --release --bin agent-xpu -- serve --artifacts artifacts/tiny
+//! # terminal 2:
+//! cargo run --release --example uds_client [-- /tmp/agent-xpu.sock]
+//! ```
+
+use agent_xpu::server::client_generate;
+use agent_xpu::workload::Priority;
+
+fn main() -> anyhow::Result<()> {
+    let socket = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "/tmp/agent-xpu.sock".into());
+    // a reactive question...
+    let prompt: Vec<i32> = (0..24).map(|i| (i * 11 + 2) % 512).collect();
+    let (tokens, ttft, total) =
+        client_generate(&socket, &prompt, Priority::Reactive, 12)?;
+    println!("reactive: {} tokens in {total:.1} ms (TTFT {ttft:.1} ms)", tokens.len());
+    println!("tokens: {tokens:?}");
+    // ...and a background proactive call
+    let prompt: Vec<i32> = (0..64).map(|i| (i * 7 + 9) % 512).collect();
+    let (tokens, ttft, total) =
+        client_generate(&socket, &prompt, Priority::Proactive, 8)?;
+    println!("proactive: {} tokens in {total:.1} ms (TTFT {ttft:.1} ms)", tokens.len());
+    Ok(())
+}

@@ -1,0 +1,2 @@
+"""Build-time compile path: L1 Pallas kernels, L2 JAX model, AOT lowering.
+Never imported on the serving path (the Rust binary loads HLO artifacts)."""

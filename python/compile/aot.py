@@ -1,0 +1,168 @@
+"""AOT lowering pipeline: JAX model -> HLO *text* artifacts + manifest.
+
+This is the only place Python touches the serving stack.  ``make
+artifacts`` runs it once per model config; the Rust coordinator then loads
+``artifacts/<config>/manifest.json`` and the referenced ``*.hlo.txt``
+modules via the xla crate's PJRT CPU client and never calls back into
+Python.
+
+Interchange is HLO **text**, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Per-config outputs (``artifacts/<config>/``):
+  - ``<kernel>.hlo.txt``      one module per (phase, chunk/batch) variant
+  - ``manifest.json``         geometry + per-artifact arg/output specs
+  - ``weights.npz``           seeded-random parameters (uncompressed zip,
+                              read by ``xla::Literal::read_npz`` in Rust)
+  - ``golden.json``           prompt -> greedy tokens, for the Rust
+                              integration test to diff against
+"""
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .configs import CONFIGS, ModelConfig
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side can uniformly unwrap a tuple root)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _arg_json(specs):
+    return [{"dtype": str(s.dtype), "shape": list(s.shape)} for s in specs]
+
+
+def kernel_variants(cfg: ModelConfig):
+    """Yield (name, fn, arg_specs, meta) for every artifact of a config."""
+    d, s = cfg.d_model, cfg.max_seq
+    kh, hd, f, v = cfg.n_kv_heads, cfg.head_dim, cfg.d_ffn, cfg.vocab
+    wspecs = [
+        _spec((d,)), _spec((d, d)), _spec((d, kh * hd)), _spec((d, kh * hd)),
+        _spec((d, d)), _spec((d,)), _spec((d, f)), _spec((d, f)), _spec((f, d)),
+    ]
+
+    sizes = sorted(set(cfg.chunk_sizes) | set(cfg.batch_sizes))
+    for n in sizes:
+        yield (
+            f"embed_n{n}", M.embed,
+            [_spec((n,), jnp.int32), _spec((v, d))],
+            {"kind": "embed", "n": n},
+        )
+    for c in cfg.chunk_sizes:
+        yield (
+            f"layer_prefill_c{c}", M.make_layer_prefill(cfg),
+            [_spec((c, d)), _spec((s, kh, hd)), _spec((s, kh, hd)),
+             _spec((1,), jnp.int32), *wspecs],
+            {"kind": "layer_prefill", "n": c},
+        )
+    for b in cfg.batch_sizes:
+        yield (
+            f"layer_decode_b{b}", M.make_layer_decode(cfg),
+            [_spec((b, d)), _spec((b, s, kh, hd)), _spec((b, s, kh, hd)),
+             _spec((b,), jnp.int32), *wspecs],
+            {"kind": "layer_decode", "n": b},
+        )
+        yield (
+            f"head_b{b}", M.head,
+            [_spec((b, d)), _spec((d,)), _spec((v, d))],
+            {"kind": "head", "n": b},
+        )
+
+
+def export_weights(cfg: ModelConfig, out_dir: Path, seed: int) -> dict:
+    params = M.init_params(cfg, seed=seed)
+    arrays = {k: np.asarray(v) for k, v in params.items()}
+    # np.savez writes ZIP_STORED members — exactly what the xla crate's
+    # npz reader expects.
+    np.savez(out_dir / "weights.npz", **arrays)
+    return params
+
+
+def export_golden(cfg: ModelConfig, params: dict, out_dir: Path):
+    """Golden trajectory the Rust integration test replays byte-for-byte."""
+    rng = np.random.default_rng(42)
+    cases = []
+    for prompt_len, gen in [(21, 8), (cfg.chunk_sizes[0], 4), (5, 6)]:
+        toks = [int(t) for t in rng.integers(0, cfg.vocab, prompt_len)]
+        chunk = cfg.chunk_sizes[0]
+        h, kc, vc = M.prefill_chunked(cfg, params, toks, chunk=chunk)
+        out = M.decode_steps(cfg, params, h, kc, vc, start_pos=prompt_len,
+                             steps=gen)
+        cases.append({
+            "prompt": toks, "chunk": chunk, "generated": out,
+            "last_hidden_l2": float(jnp.linalg.norm(h)),
+        })
+    (out_dir / "golden.json").write_text(json.dumps(cases, indent=1))
+
+
+def build_config(cfg: ModelConfig, root: Path, seed: int, golden: bool):
+    out_dir = root / cfg.name
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest = {
+        "config": cfg.to_dict(),
+        "seed": seed,
+        "weights": "weights.npz",
+        "layer_weight_names": list(M.LAYER_WEIGHTS),
+        "artifacts": {},
+    }
+    t0 = time.time()
+    for name, fn, specs, meta in kernel_variants(cfg):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        (out_dir / f"{name}.hlo.txt").write_text(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "args": _arg_json(specs),
+            **meta,
+        }
+        print(f"  {cfg.name}/{name}: {len(text) / 1024:.0f} KiB "
+              f"({time.time() - t0:.1f}s elapsed)")
+    params = export_weights(cfg, out_dir, seed)
+    if golden:
+        export_golden(cfg, params, out_dir)
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"  {cfg.name}: manifest + weights"
+          + (" + golden" if golden else "") + " written")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact root")
+    ap.add_argument("--configs", default="tiny,small",
+                    help="comma-separated config names (or 'all')")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-golden", action="store_true",
+                    help="skip golden-trajectory export (slow for 'base')")
+    args = ap.parse_args()
+    names = list(CONFIGS) if args.configs == "all" else args.configs.split(",")
+    root = Path(args.out)
+    for name in names:
+        cfg = CONFIGS[name]
+        print(f"building {name} ({cfg.n_params / 1e6:.1f}M params)")
+        # golden replay of `base` takes minutes of CPU; tests use tiny/small
+        golden = not args.no_golden and name != "base"
+        build_config(cfg, root, args.seed, golden)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Model geometry presets shared by the JAX model (L2), the AOT lowering
+pipeline, and (via manifest.json) the Rust coordinator (L3).
+
+The paper serves Llama-3.2-3B on an Intel Core Ultra SoC. We reproduce the
+architecture family (RMSNorm + RoPE + GQA + SwiGLU + tied embeddings) at
+three sizes:
+
+- ``tiny``  (~1M params)  — unit tests and golden vectors; seconds to lower.
+- ``small`` (~8M params)  — default artifact set for examples/benches.
+- ``base``  (~82M params) — the end-to-end serving example (EXPERIMENTS.md).
+"""
+
+from dataclasses import dataclass, field, asdict
+from typing import Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_q_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ffn: int
+    max_seq: int
+    # Static prefill chunk sizes precompiled for the (virtual) NPU.  The
+    # paper's "elastic chunked kernel": token-level op groups are chunked
+    # along the sequence dimension so the NPU can use precompiled static
+    # kernels (Section 5.2).
+    chunk_sizes: Tuple[int, ...]
+    # Decode batch sizes precompiled for the iGPU (adaptive batching, §6.3).
+    batch_sizes: Tuple[int, ...]
+    rope_theta: float = 10000.0
+
+    def __post_init__(self):
+        assert self.d_model == self.n_q_heads * self.head_dim, (
+            f"{self.name}: d_model must equal n_q_heads*head_dim"
+        )
+        assert self.n_q_heads % self.n_kv_heads == 0, (
+            f"{self.name}: GQA requires n_q_heads % n_kv_heads == 0"
+        )
+        for c in self.chunk_sizes:
+            assert self.max_seq % c == 0, (
+                f"{self.name}: chunk {c} must divide max_seq {self.max_seq}"
+            )
+
+    @property
+    def groups(self) -> int:
+        return self.n_q_heads // self.n_kv_heads
+
+    @property
+    def n_params(self) -> int:
+        per_layer = (
+            self.d_model * self.d_model  # wq
+            + 2 * self.d_model * self.n_kv_heads * self.head_dim  # wk, wv
+            + self.d_model * self.d_model  # wo
+            + 3 * self.d_model * self.d_ffn  # wg, wu, wd
+            + 2 * self.d_model  # norms
+        )
+        return self.n_layers * per_layer + self.vocab * self.d_model + self.d_model
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+CONFIGS = {
+    "tiny": ModelConfig(
+        name="tiny", vocab=512, d_model=128, n_layers=2,
+        n_q_heads=4, n_kv_heads=2, head_dim=32, d_ffn=256,
+        max_seq=128, chunk_sizes=(16, 32), batch_sizes=(1, 2, 4),
+    ),
+    "small": ModelConfig(
+        name="small", vocab=2048, d_model=256, n_layers=6,
+        n_q_heads=8, n_kv_heads=2, head_dim=32, d_ffn=704,
+        max_seq=512, chunk_sizes=(16, 32, 64, 128), batch_sizes=(1, 2, 4, 8),
+    ),
+    "base": ModelConfig(
+        name="base", vocab=8192, d_model=768, n_layers=12,
+        n_q_heads=12, n_kv_heads=4, head_dim=64, d_ffn=2048,
+        max_seq=1024, chunk_sizes=(32, 64, 128, 256), batch_sizes=(1, 2, 4, 8),
+    ),
+}

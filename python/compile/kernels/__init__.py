@@ -1,0 +1,2 @@
+"""L1 Pallas kernels for the paper's compute hot-spots, plus the pure-jnp
+oracle (`ref`) they are verified against."""

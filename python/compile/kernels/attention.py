@@ -1,0 +1,129 @@
+"""Pallas GQA attention kernels — the paper's MHA hot-spot (L1).
+
+The paper's NPU cannot run dynamic-shape attention, so MHA lands on the
+iGPU; here we express both the chunked-prefill and the batched-decode
+attention as Pallas kernels with *static* shapes plus a scalar position
+input — exactly the static-kernel + scalar-dynamism contract that makes a
+kernel precompilable for an NPU-class accelerator (DESIGN.md
+§Hardware-Adaptation).
+
+TPU adaptation of the paper's insight:
+  - the KV cache is tiled per KV-head into VMEM-sized blocks via BlockSpec
+    (the paper used fixed-size MAC-array tiles);
+  - the grid iterates over query heads so each program's working set
+    (q-block [c, hd] + kv-block [s, hd] + scores [c, s]) fits VMEM;
+  - ``interpret=True`` everywhere: the CPU PJRT plugin cannot execute
+    Mosaic custom-calls, so kernels lower to plain HLO (see
+    /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+
+def _prefill_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *, scale):
+    """One KV head vs. its whole query-head *group* (GQA reuse: the KV
+    block is loaded into local memory once and serves every query head
+    that shares it — the grid trips scale with kv_heads, not q_heads).
+
+    Block shapes: pos [1], q [c, G, hd], k/v [s, 1, hd], o [c, G, hd].
+    """
+    c, groups, hd = q_ref.shape
+    q = q_ref[...].reshape(c * groups, hd)  # token-major rows
+    k = k_ref[:, 0, :]  # [s, hd]
+    v = v_ref[:, 0, :]
+    s = k.shape[0]
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [c*G, s]
+    pos = pos_ref[0]
+    j = jax.lax.broadcasted_iota(jnp.int32, (c * groups, s), 1)
+    row = jax.lax.broadcasted_iota(jnp.int32, (c * groups, s), 0)
+    i = pos + row // groups  # query token index of each row
+    scores = jnp.where(j <= i, scores, NEG_INF)
+    # Numerically-stable softmax in-kernel (flash-style single pass over
+    # the statically-sized cache block).
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    o = jnp.dot(probs, v, preferred_element_type=jnp.float32)
+    o_ref[...] = o.reshape(c, groups, hd)
+
+
+def gqa_attention(
+    q: jax.Array,  # [c, qh, hd]
+    k_cache: jax.Array,  # [s, kh, hd]
+    v_cache: jax.Array,  # [s, kh, hd]
+    pos: jax.Array,  # i32[1]
+) -> jax.Array:
+    """Chunked-prefill causal GQA attention against a static-max KV cache."""
+    c, qh, hd = q.shape
+    s, kh, _ = k_cache.shape
+    groups = qh // kh
+    scale = 1.0 / (hd ** 0.5)
+    kernel = functools.partial(_prefill_kernel, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(kh,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda g: (0,)),  # pos: broadcast scalar
+            pl.BlockSpec((c, groups, hd), lambda g: (0, g, 0)),  # q group g
+            pl.BlockSpec((s, 1, hd), lambda g: (0, g, 0)),  # k head g
+            pl.BlockSpec((s, 1, hd), lambda g: (0, g, 0)),  # v head g
+        ],
+        out_specs=pl.BlockSpec((c, groups, hd), lambda g: (0, g, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, qh, hd), jnp.float32),
+        interpret=True,
+    )(pos, q, k_cache, v_cache)
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *, scale):
+    """One (sequence, kv-head) pair of a batched decode step; the KV
+    block serves the kv-head's whole query group (GQA reuse).
+
+    Block shapes: pos [1], q [1, G, hd], k/v [1, s, 1, hd], o [1, G, hd].
+    """
+    _, groups, hd = q_ref.shape
+    q = q_ref[0]  # [G, hd]
+    k = k_ref[0, :, 0, :]  # [s, hd]
+    v = v_ref[0, :, 0, :]
+    s = k.shape[0]
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [G, s]
+    pos = pos_ref[0]
+    j = jax.lax.broadcasted_iota(jnp.int32, (groups, s), 1)
+    scores = jnp.where(j <= pos, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(probs, v, preferred_element_type=jnp.float32)
+
+
+def gqa_decode_attention(
+    q: jax.Array,  # [b, qh, hd]
+    k_cache: jax.Array,  # [b, s, kh, hd]
+    v_cache: jax.Array,  # [b, s, kh, hd]
+    pos: jax.Array,  # i32[b]
+) -> jax.Array:
+    """Batched single-token GQA attention (decode step)."""
+    b, qh, hd = q.shape
+    s = k_cache.shape[1]
+    kh = k_cache.shape[2]
+    groups = qh // kh
+    scale = 1.0 / (hd ** 0.5)
+    kernel = functools.partial(_decode_kernel, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, kh),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, g: (i,)),  # pos[i]
+            pl.BlockSpec((1, groups, hd), lambda i, g: (i, g, 0)),
+            pl.BlockSpec((1, s, 1, hd), lambda i, g: (i, 0, g, 0)),
+            pl.BlockSpec((1, s, 1, hd), lambda i, g: (i, 0, g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, groups, hd), lambda i, g: (i, g, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, qh, hd), jnp.float32),
+        interpret=True,
+    )(pos, q, k_cache, v_cache)

@@ -1,0 +1,81 @@
+"""Pallas fused-linear kernels — the paper's NPU chunked-GEMM hot-spot (L1).
+
+The paper precompiles static chunked GEMM kernels for the NPU's MAC array
+(§5.2 "elastic chunked kernel").  The TPU analogue tiles the output
+dimension into VMEM-resident blocks with BlockSpec; the sequence-chunk
+dimension (n) is the static chunk size baked into each artifact variant.
+
+``fused_swiglu`` additionally fuses the SwiGLU gate (silu(x@wg) * (x@wu))
+into one kernel — the paper's op-group fusion of linear + adjacent
+nonlinear ops to maximize local-memory reuse (§5.2 Compute-Communicate
+Balance).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Upper bound on the output-tile width.  Large tiles keep the grid trip
+#: count low (one VMEM-resident block per program; fewer HBM round
+#: trips on TPU, fewer loop iterations under interpret=True).  512 f32
+#: lanes x a few hundred rows stays comfortably inside a 16 MB VMEM
+#: budget alongside the input block (DESIGN.md SHardware-Adaptation).
+_MAX_TILE = 512
+
+
+def _pick_tile(dout: int) -> int:
+    """Largest divisor of dout that is <= _MAX_TILE."""
+    best = 1
+    for t in range(1, min(dout, _MAX_TILE) + 1):
+        if dout % t == 0:
+            best = t
+    return best
+
+
+def _linear_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+
+def linear(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Tiled matmul: x[n, din] @ w[din, dout] with the output dimension
+    split into VMEM-sized column blocks."""
+    n, din = x.shape
+    dout = w.shape[1]
+    bn = _pick_tile(dout)
+    return pl.pallas_call(
+        _linear_kernel,
+        grid=(dout // bn,),
+        in_specs=[
+            pl.BlockSpec((n, din), lambda j: (0, 0)),
+            pl.BlockSpec((din, bn), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((n, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, dout), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def _swiglu_kernel(x_ref, wg_ref, wu_ref, o_ref):
+    x = x_ref[...]
+    g = jnp.dot(x, wg_ref[...], preferred_element_type=jnp.float32)
+    u = jnp.dot(x, wu_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = g * jax.lax.logistic(g) * u  # silu(g) * u
+
+
+def fused_swiglu(x: jax.Array, wg: jax.Array, wu: jax.Array) -> jax.Array:
+    """Fused SwiGLU: silu(x @ wg) * (x @ wu), tiled over the ffn dim."""
+    n, din = x.shape
+    dff = wg.shape[1]
+    bn = _pick_tile(dff)
+    return pl.pallas_call(
+        _swiglu_kernel,
+        grid=(dff // bn,),
+        in_specs=[
+            pl.BlockSpec((n, din), lambda j: (0, 0)),
+            pl.BlockSpec((din, bn), lambda j: (0, j)),
+            pl.BlockSpec((din, bn), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((n, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, dff), jnp.float32),
+        interpret=True,
+    )(x, wg, wu)

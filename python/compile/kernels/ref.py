@@ -1,0 +1,90 @@
+"""Pure-jnp reference oracle for the Pallas kernels (L1 correctness signal).
+
+Every Pallas kernel in this package has an exact counterpart here, written
+with nothing but ``jax.numpy``.  ``python/tests/test_kernel.py`` sweeps
+shapes/seeds with hypothesis and asserts allclose between the two.
+"""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rmsnorm_ref(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm over the last axis."""
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def linear_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Plain matmul: x[n, din] @ w[din, dout]."""
+    return x @ w
+
+
+def swiglu_ref(x: jax.Array, wg: jax.Array, wu: jax.Array) -> jax.Array:
+    """SwiGLU gate: silu(x @ wg) * (x @ wu)."""
+    return jax.nn.silu(x @ wg) * (x @ wu)
+
+
+def rope_ref(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Rotary position embedding.
+
+    x: [n, heads, head_dim]; positions: i32[n].  Rotates pairs
+    (x[..., :hd/2], x[..., hd/2:]) — the "split halves" Llama convention.
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # [n, half]
+    cos = jnp.cos(angles)[:, None, :]  # [n, 1, half]
+    sin = jnp.sin(angles)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def gqa_attention_ref(
+    q: jax.Array,  # [c, qh, hd] — chunk of query tokens at positions pos..pos+c
+    k_cache: jax.Array,  # [s, kh, hd] — KV cache, valid at 0..pos+c
+    v_cache: jax.Array,  # [s, kh, hd]
+    pos: jax.Array,  # i32[1] — number of cached tokens before this chunk
+) -> jax.Array:
+    """Causal GQA attention of a prefill chunk against a static-max cache.
+
+    Query i (global position pos+i) attends to cache slots j <= pos+i.
+    Slots beyond pos+c may hold garbage (padding) — they are masked.
+    """
+    c, qh, hd = q.shape
+    s, kh, _ = k_cache.shape
+    groups = qh // kh
+    scale = 1.0 / jnp.sqrt(jnp.array(hd, jnp.float32))
+    k = jnp.repeat(k_cache, groups, axis=1)  # [s, qh, hd]
+    v = jnp.repeat(v_cache, groups, axis=1)
+    scores = jnp.einsum("cqd,sqd->qcs", q, k) * scale  # [qh, c, s]
+    j = jnp.arange(s)[None, None, :]
+    i = pos[0] + jnp.arange(c)[None, :, None]
+    scores = jnp.where(j <= i, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("qcs,sqd->cqd", probs, v)
+
+
+def gqa_decode_attention_ref(
+    q: jax.Array,  # [b, qh, hd] — one new token per sequence
+    k_cache: jax.Array,  # [b, s, kh, hd]
+    v_cache: jax.Array,  # [b, s, kh, hd]
+    pos: jax.Array,  # i32[b] — position of the new token for each sequence
+) -> jax.Array:
+    """Batched single-token (decode) GQA attention; attends j <= pos[b]."""
+    b, qh, hd = q.shape
+    s = k_cache.shape[1]
+    kh = k_cache.shape[2]
+    groups = qh // kh
+    scale = 1.0 / jnp.sqrt(jnp.array(hd, jnp.float32))
+    k = jnp.repeat(k_cache, groups, axis=2)  # [b, s, qh, hd]
+    v = jnp.repeat(v_cache, groups, axis=2)
+    scores = jnp.einsum("bqd,bsqd->bqs", q, k) * scale
+    j = jnp.arange(s)[None, None, :]
+    mask = j <= pos[:, None, None]
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bqs,bsqd->bqd", probs, v)

@@ -1,0 +1,226 @@
+"""L2: Llama-architecture model in JAX, built on the L1 Pallas kernels.
+
+Each function below is one HEG kernel — the unit the Rust coordinator
+schedules, preempts, and backfills.  The same ``layer_prefill`` /
+``layer_decode`` HLO module is reused for every transformer layer (the
+weights are arguments, not constants), which is what makes the artifact
+set small and the NPU-style precompilation practical.
+
+KV-cache contract (mirrors the paper's unified-memory design):
+  - the cache is a static-max tensor [max_seq, kv_heads, head_dim];
+  - ``pos`` counts valid tokens already cached; a prefill chunk writes its
+    K/V at slots pos..pos+c (a padded margin chunk writes garbage beyond
+    the true length — harmless, because causal masks never look past the
+    current position, and the next decode step overwrites slot pos);
+  - functions return the updated cache; the Rust side owns residency.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.attention import gqa_attention, gqa_decode_attention
+from .kernels.linear import linear, fused_swiglu
+from .kernels.ref import rmsnorm_ref as rmsnorm, rope_ref as rope
+
+#: Per-layer weight tensor names, in artifact argument order.
+LAYER_WEIGHTS = (
+    "attn_norm", "wq", "wk", "wv", "wo", "mlp_norm", "wg", "wu", "wd",
+)
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict:
+    """Seeded-random weights (DESIGN.md §1: no offline checkpoints;
+    scheduling behaviour is weight-value-independent)."""
+    key = jax.random.key(seed)
+    d, f, kvd = cfg.d_model, cfg.d_ffn, cfg.n_kv_heads * cfg.head_dim
+    params = {}
+    key, k = jax.random.split(key)
+    params["emb"] = jax.random.normal(k, (cfg.vocab, d), jnp.float32) * 0.02
+    params["final_norm"] = jnp.ones((d,), jnp.float32)
+    for i in range(cfg.n_layers):
+        shapes = {
+            "attn_norm": (d,), "mlp_norm": (d,),
+            "wq": (d, d), "wk": (d, kvd), "wv": (d, kvd), "wo": (d, d),
+            "wg": (d, f), "wu": (d, f), "wd": (f, d),
+        }
+        for name, shape in shapes.items():
+            key, k = jax.random.split(key)
+            if name.endswith("norm"):
+                params[f"l{i}.{name}"] = jnp.ones(shape, jnp.float32)
+            else:
+                scale = 1.0 / (shape[0] ** 0.5)
+                params[f"l{i}.{name}"] = (
+                    jax.random.normal(k, shape, jnp.float32) * scale
+                )
+    return params
+
+
+def embed(tokens: jax.Array, emb: jax.Array) -> jax.Array:
+    """Token embedding lookup: i32[n] -> f32[n, d]."""
+    return jnp.take(emb, tokens, axis=0)
+
+
+def _make_layer_core(cfg: ModelConfig):
+    """Shared attention+MLP body used by both prefill and decode."""
+
+    def attn_block(x, k_cache, v_cache, pos_vec, positions,
+                   attn_norm, wq, wk, wv, wo, decode: bool):
+        n = x.shape[0]
+        h = rmsnorm(x, attn_norm)
+        q = linear(h, wq).reshape(n, cfg.n_q_heads, cfg.head_dim)
+        k = linear(h, wk).reshape(n, cfg.n_kv_heads, cfg.head_dim)
+        v = linear(h, wv).reshape(n, cfg.n_kv_heads, cfg.head_dim)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        if decode:
+            # Scatter each sequence's new K/V at its own position.
+            def upd(cache, new, p):
+                return jax.lax.dynamic_update_slice(cache, new[None], (p, 0, 0))
+            k_cache = jax.vmap(upd)(k_cache, k, pos_vec)
+            v_cache = jax.vmap(upd)(v_cache, v, pos_vec)
+            o = gqa_decode_attention(q, k_cache, v_cache, pos_vec)
+        else:
+            k_cache = jax.lax.dynamic_update_slice(k_cache, k, (pos_vec[0], 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(v_cache, v, (pos_vec[0], 0, 0))
+            o = gqa_attention(q, k_cache, v_cache, pos_vec)
+        o = linear(o.reshape(n, cfg.d_model), wo)
+        return x + o, k_cache, v_cache
+
+    def mlp_block(x, mlp_norm, wg, wu, wd):
+        h = rmsnorm(x, mlp_norm)
+        return x + linear(fused_swiglu(h, wg, wu), wd)
+
+    return attn_block, mlp_block
+
+
+def make_layer_prefill(cfg: ModelConfig):
+    """Prefill chunk through one transformer layer.
+
+    Signature (static chunk size c, the elastic-chunked-kernel contract):
+      (x[c,d], k_cache[s,kh,hd], v_cache[s,kh,hd], pos i32[1],
+       attn_norm, wq, wk, wv, wo, mlp_norm, wg, wu, wd)
+      -> (y[c,d], k_cache', v_cache')
+    """
+    attn_block, mlp_block = _make_layer_core(cfg)
+
+    def layer_prefill(x, k_cache, v_cache, pos,
+                      attn_norm, wq, wk, wv, wo, mlp_norm, wg, wu, wd):
+        c = x.shape[0]
+        positions = pos[0] + jnp.arange(c, dtype=jnp.int32)
+        x, k_cache, v_cache = attn_block(
+            x, k_cache, v_cache, pos, positions,
+            attn_norm, wq, wk, wv, wo, decode=False)
+        x = mlp_block(x, mlp_norm, wg, wu, wd)
+        return x, k_cache, v_cache
+
+    return layer_prefill
+
+
+def make_layer_decode(cfg: ModelConfig):
+    """Batched decode step through one transformer layer.
+
+    Signature (static batch size b):
+      (x[b,d], k_cache[b,s,kh,hd], v_cache[b,s,kh,hd], pos i32[b],
+       attn_norm, wq, wk, wv, wo, mlp_norm, wg, wu, wd)
+      -> (y[b,d], k_cache', v_cache')
+    """
+    attn_block, mlp_block = _make_layer_core(cfg)
+
+    def layer_decode(x, k_cache, v_cache, pos,
+                     attn_norm, wq, wk, wv, wo, mlp_norm, wg, wu, wd):
+        x, k_cache, v_cache = attn_block(
+            x, k_cache, v_cache, pos, pos,
+            attn_norm, wq, wk, wv, wo, decode=True)
+        x = mlp_block(x, mlp_norm, wg, wu, wd)
+        return x, k_cache, v_cache
+
+    return layer_decode
+
+
+def head(x: jax.Array, final_norm: jax.Array, emb: jax.Array) -> jax.Array:
+    """Greedy sampling head: f32[b, d] -> next-token i32[b].
+
+    Tied embeddings (logits = norm(x) @ emb.T); greedy argmax keeps the
+    reproduction deterministic end-to-end.
+    """
+    h = rmsnorm(x, final_norm)
+    logits = h @ emb.T
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Pure-python full pipelines (test oracles; never lowered).
+# ---------------------------------------------------------------------------
+
+def layer_params(params: dict, i: int) -> list:
+    return [params[f"l{i}.{n}"] for n in LAYER_WEIGHTS]
+
+
+def empty_cache(cfg: ModelConfig) -> jax.Array:
+    return jnp.zeros((cfg.max_seq, cfg.n_kv_heads, cfg.head_dim), jnp.float32)
+
+
+def prefill_chunked(cfg: ModelConfig, params: dict, tokens, chunk: int):
+    """Chunked prefill of a whole prompt (pads the margin chunk).
+
+    Returns (last_valid_hidden[1, d], k_caches, v_caches) — the same data
+    flow the Rust coordinator drives chunk-by-chunk, kernel-by-kernel.
+    """
+    tokens = jnp.asarray(tokens, jnp.int32)
+    n = tokens.shape[0]
+    k_caches = [empty_cache(cfg) for _ in range(cfg.n_layers)]
+    v_caches = [empty_cache(cfg) for _ in range(cfg.n_layers)]
+    fns = [make_layer_prefill(cfg) for _ in range(cfg.n_layers)]
+    last_hidden = None
+    pos = 0
+    while pos < n:
+        m = min(chunk, n - pos)
+        chunk_tokens = jnp.zeros((chunk,), jnp.int32).at[:m].set(tokens[pos:pos + m])
+        x = embed(chunk_tokens, params["emb"])
+        pvec = jnp.array([pos], jnp.int32)
+        for i in range(cfg.n_layers):
+            x, k_caches[i], v_caches[i] = fns[i](
+                x, k_caches[i], v_caches[i], pvec, *layer_params(params, i))
+        last_hidden = x[m - 1:m]
+        pos += m
+    return last_hidden, k_caches, v_caches
+
+
+def decode_steps(cfg: ModelConfig, params: dict, last_hidden, k_caches,
+                 v_caches, start_pos: int, steps: int):
+    """Greedy decode of `steps` tokens for a single sequence (b=1)."""
+    fn = make_layer_decode(cfg)
+    out_tokens = []
+    x = last_hidden  # [1, d]
+    k_caches = [kc[None] for kc in k_caches]  # [1, s, kh, hd]
+    v_caches = [vc[None] for vc in v_caches]
+    pos = start_pos
+    for _ in range(steps):
+        tok = head(x, params["final_norm"], params["emb"])  # i32[1]
+        out_tokens.append(int(tok[0]))
+        x = embed(tok, params["emb"])
+        pvec = jnp.array([pos], jnp.int32)
+        for i in range(cfg.n_layers):
+            x, k_caches[i], v_caches[i] = fn(
+                x, k_caches[i], v_caches[i], pvec, *layer_params(params, i))
+        pos += 1
+    return out_tokens
+
+
+def full_prefill_ref(cfg: ModelConfig, params: dict, tokens):
+    """Un-chunked oracle: whole prompt as one chunk of its exact length,
+    using only ref ops via the same layer functions (chunk == len)."""
+    tokens = jnp.asarray(tokens, jnp.int32)
+    n = tokens.shape[0]
+    x = embed(tokens, params["emb"])
+    k_caches = [empty_cache(cfg) for _ in range(cfg.n_layers)]
+    v_caches = [empty_cache(cfg) for _ in range(cfg.n_layers)]
+    fn = make_layer_prefill(cfg)
+    pvec = jnp.array([0], jnp.int32)
+    for i in range(cfg.n_layers):
+        x, k_caches[i], v_caches[i] = fn(
+            x, k_caches[i], v_caches[i], pvec, *layer_params(params, i))
+    return x[n - 1:n], k_caches, v_caches

@@ -1,0 +1,235 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes, cache positions, and seeds; assert_allclose is
+the core correctness signal for everything the Rust engine later executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, linear, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+RTOL, ATOL = 2e-5, 2e-5
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.key(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# gqa_attention (prefill chunk)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    c=st.sampled_from([1, 2, 4, 8, 16]),
+    qh_kh=st.sampled_from([(4, 4), (4, 2), (8, 2), (4, 1), (8, 8)]),
+    hd=st.sampled_from([4, 8, 16, 32]),
+    s=st.sampled_from([16, 32, 64]),
+    pos_frac=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_prefill_attention_matches_ref(c, qh_kh, hd, s, pos_frac, seed):
+    qh, kh = qh_kh
+    if c > s:
+        c = s
+    pos = int(pos_frac * (s - c))
+    q = _rand(seed, (c, qh, hd))
+    k = _rand(seed + 1, (s, kh, hd))
+    v = _rand(seed + 2, (s, kh, hd))
+    pv = jnp.array([pos], jnp.int32)
+    got = attention.gqa_attention(q, k, v, pv)
+    want = ref.gqa_attention_ref(q, k, v, pv)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_prefill_attention_causality():
+    """Perturbing a future cache slot must not change past outputs."""
+    c, qh, kh, hd, s, pos = 4, 4, 2, 8, 32, 10
+    q = _rand(0, (c, qh, hd))
+    k = _rand(1, (s, kh, hd))
+    v = _rand(2, (s, kh, hd))
+    pv = jnp.array([pos], jnp.int32)
+    base = attention.gqa_attention(q, k, v, pv)
+    # slot pos+c and beyond is the future for every query in the chunk
+    k2 = k.at[pos + c:].set(999.0)
+    v2 = v.at[pos + c:].set(-999.0)
+    pert = attention.gqa_attention(q, k2, v2, pv)
+    np.testing.assert_allclose(base, pert, rtol=0, atol=0)
+
+
+def test_prefill_attention_within_chunk_causality():
+    """Query i must ignore cache slots pos+i+1 .. pos+c-1 (later chunk rows)."""
+    c, qh, kh, hd, s, pos = 8, 4, 2, 8, 32, 4
+    q = _rand(3, (c, qh, hd))
+    k = _rand(4, (s, kh, hd))
+    v = _rand(5, (s, kh, hd))
+    pv = jnp.array([pos], jnp.int32)
+    base = attention.gqa_attention(q, k, v, pv)
+    k2 = k.at[pos + 3:].set(7.0)  # visible only to queries i >= 3
+    pert = attention.gqa_attention(q, k2, v, pv)
+    np.testing.assert_allclose(base[:3], pert[:3], rtol=0, atol=0)
+    assert not np.allclose(base[3:], pert[3:])
+
+
+def test_prefill_attention_pos_zero_is_pure_causal():
+    c, qh, kh, hd, s = 8, 4, 2, 8, 16
+    q = _rand(6, (c, qh, hd))
+    k = _rand(7, (s, kh, hd))
+    v = _rand(8, (s, kh, hd))
+    got = attention.gqa_attention(q, k, v, jnp.array([0], jnp.int32))
+    want = ref.gqa_attention_ref(q, k, v, jnp.array([0], jnp.int32))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# gqa_decode_attention (batched decode)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 3, 4, 8]),
+    qh_kh=st.sampled_from([(4, 4), (4, 2), (8, 2), (4, 1)]),
+    hd=st.sampled_from([4, 8, 16]),
+    s=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_decode_attention_matches_ref(b, qh_kh, hd, s, seed):
+    qh, kh = qh_kh
+    rng = np.random.default_rng(seed)
+    pos = jnp.asarray(rng.integers(0, s, b), jnp.int32)
+    q = _rand(seed, (b, qh, hd))
+    k = _rand(seed + 1, (b, s, kh, hd))
+    v = _rand(seed + 2, (b, s, kh, hd))
+    got = attention.gqa_decode_attention(q, k, v, pos)
+    want = ref.gqa_decode_attention_ref(q, k, v, pos)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_decode_attention_batch_isolation():
+    """Each batch lane must only read its own cache."""
+    b, qh, kh, hd, s = 4, 4, 2, 8, 16
+    q = _rand(0, (b, qh, hd))
+    k = _rand(1, (b, s, kh, hd))
+    v = _rand(2, (b, s, kh, hd))
+    pos = jnp.array([3, 7, 11, 15], jnp.int32)
+    base = attention.gqa_decode_attention(q, k, v, pos)
+    k2 = k.at[2].set(123.0)
+    pert = attention.gqa_decode_attention(q, k2, v, pos)
+    for lane in (0, 1, 3):
+        np.testing.assert_allclose(base[lane], pert[lane], rtol=0, atol=0)
+    assert not np.allclose(base[2], pert[2])
+
+
+def test_decode_attention_respects_pos_mask():
+    """Cache slots beyond pos[b] (garbage/padding) must be invisible."""
+    b, qh, kh, hd, s = 2, 4, 2, 8, 16
+    q = _rand(3, (b, qh, hd))
+    k = _rand(4, (b, s, kh, hd))
+    v = _rand(5, (b, s, kh, hd))
+    pos = jnp.array([5, 9], jnp.int32)
+    base = attention.gqa_decode_attention(q, k, v, pos)
+    k2 = k.at[:, 12:].set(1e4)
+    v2 = v.at[:, 12:].set(-1e4)
+    pert = attention.gqa_decode_attention(q, k2, v2, pos)
+    np.testing.assert_allclose(base, pert, rtol=0, atol=0)
+
+
+def test_decode_matches_prefill_c1():
+    """A b=1 decode step equals a c=1 prefill chunk at the same position."""
+    qh, kh, hd, s, pos = 4, 2, 8, 32, 9
+    q = _rand(9, (1, qh, hd))
+    k = _rand(10, (s, kh, hd))
+    v = _rand(11, (s, kh, hd))
+    pv = jnp.array([pos], jnp.int32)
+    dec = attention.gqa_decode_attention(q, k[None], v[None], pv)
+    pre = attention.gqa_attention(q, k, v, pv)
+    np.testing.assert_allclose(dec, pre, rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# linear / fused_swiglu
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([1, 2, 7, 16, 32]),
+    din=st.sampled_from([8, 24, 64]),
+    dout=st.sampled_from([8, 40, 64, 96, 128, 132]),
+    seed=st.integers(0, 2**16),
+)
+def test_linear_matches_ref(n, din, dout, seed):
+    x = _rand(seed, (n, din))
+    w = _rand(seed + 1, (din, dout))
+    np.testing.assert_allclose(
+        linear.linear(x, w), ref.linear_ref(x, w), rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([1, 4, 16]),
+    din=st.sampled_from([8, 32]),
+    dff=st.sampled_from([16, 40, 88, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_fused_swiglu_matches_ref(n, din, dff, seed):
+    x = _rand(seed, (n, din))
+    wg = _rand(seed + 1, (din, dff))
+    wu = _rand(seed + 2, (din, dff))
+    np.testing.assert_allclose(
+        linear.fused_swiglu(x, wg, wu), ref.swiglu_ref(x, wg, wu),
+        rtol=RTOL, atol=ATOL)
+
+
+def test_linear_tile_picker():
+    # largest divisor <= _MAX_TILE: minimizes grid trips / maximizes the
+    # VMEM-resident block
+    assert linear._pick_tile(704) == 352
+    assert linear._pick_tile(128) == 128
+    assert linear._pick_tile(256) == 256
+    assert linear._pick_tile(1024) == 512
+    assert linear._pick_tile(17) == 17
+    assert linear._pick_tile(40) == 40
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([1, 3, 16]), d=st.sampled_from([8, 64]),
+       seed=st.integers(0, 2**16))
+def test_rmsnorm_unit_scale_preserves_direction(n, d, seed):
+    x = _rand(seed, (n, d))
+    w = jnp.ones((d,))
+    y = ref.rmsnorm_ref(x, w)
+    # every row is rescaled to (approximately) unit RMS
+    rms = np.sqrt(np.mean(np.square(np.asarray(y)), axis=-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3, atol=1e-3)
+
+
+def test_rope_position_zero_identity():
+    x = _rand(0, (3, 4, 8))
+    y = ref.rope_ref(x, jnp.zeros((3,), jnp.int32))
+    np.testing.assert_allclose(x, y, rtol=1e-6, atol=1e-6)
+
+
+def test_rope_preserves_norm():
+    x = _rand(1, (5, 4, 8))
+    y = ref.rope_ref(x, jnp.array([0, 1, 7, 100, 1000], jnp.int32))
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5, atol=1e-5)
+
+
+def test_rope_relative_property():
+    """RoPE dot products depend only on relative distance."""
+    hd = 8
+    q = _rand(2, (1, 1, hd))
+    k = _rand(3, (1, 1, hd))
+    def dot_at(pq, pk):
+        qr = ref.rope_ref(q, jnp.array([pq], jnp.int32))
+        kr = ref.rope_ref(k, jnp.array([pk], jnp.int32))
+        return float(jnp.sum(qr * kr))
+    np.testing.assert_allclose(dot_at(5, 3), dot_at(105, 103), rtol=1e-4, atol=1e-5)

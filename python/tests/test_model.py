@@ -1,0 +1,139 @@
+"""L2 correctness: chunked/batched model pipelines on the tiny config.
+
+These are the invariants the Rust coordinator relies on when it splits a
+prompt into elastic chunks, pads margins, batches decodes, and resumes
+preempted requests from KV-cache checkpoints.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.configs import CONFIGS
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = CONFIGS["tiny"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, seed=0)
+
+
+def _prompt(n, seed=1):
+    return [int(t) for t in np.random.default_rng(seed).integers(0, CFG.vocab, n)]
+
+
+@pytest.mark.parametrize("chunk", CFG.chunk_sizes)
+@pytest.mark.parametrize("plen", [1, 5, 16, 21, 32, 47])
+def test_chunked_prefill_matches_full(params, chunk, plen):
+    """Chunked prefill (with padded margin) == single-shot prefill."""
+    toks = _prompt(plen)
+    h1, k1, v1 = M.prefill_chunked(CFG, params, toks, chunk=chunk)
+    h2, k2, v2 = M.full_prefill_ref(CFG, params, toks)
+    np.testing.assert_allclose(h1, h2, rtol=1e-4, atol=1e-4)
+    # cache agreement on the *valid* prefix only (margin slots may differ)
+    for a, b in zip(k1, k2):
+        np.testing.assert_allclose(a[:plen], b[:plen], rtol=1e-4, atol=1e-4)
+    for a, b in zip(v1, v2):
+        np.testing.assert_allclose(a[:plen], b[:plen], rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("plen,steps", [(21, 6), (8, 4)])
+def test_decode_matches_prefill_extension(params, plen, steps):
+    """Greedy decode == re-prefilling prompt+generated and re-predicting.
+
+    This is the fundamental KV-cache soundness property: garbage written
+    by padded margin chunks must never leak into later steps.
+    """
+    toks = _prompt(plen, seed=7)
+    h, kc, vc = M.prefill_chunked(CFG, params, toks, chunk=CFG.chunk_sizes[0])
+    out = M.decode_steps(CFG, params, h, kc, vc, start_pos=plen, steps=steps)
+    assert len(out) == steps
+    for i in range(1, steps):
+        h2, _, _ = M.full_prefill_ref(CFG, params, toks + out[:i])
+        tok = M.head(h2, params["final_norm"], params["emb"])
+        assert int(tok[0]) == out[i], f"divergence at step {i}"
+
+
+def test_different_chunk_sizes_same_generation(params):
+    """The elastic-chunk choice is a scheduling decision — it must not
+    change the generated tokens."""
+    toks = _prompt(23, seed=3)
+    outs = []
+    for chunk in CFG.chunk_sizes:
+        h, kc, vc = M.prefill_chunked(CFG, params, toks, chunk=chunk)
+        outs.append(M.decode_steps(CFG, params, h, kc, vc, 23, 5))
+    assert all(o == outs[0] for o in outs)
+
+
+def test_batched_decode_matches_single(params):
+    """A b=2 batched decode step must equal two independent b=1 steps."""
+    fn = M.make_layer_decode(CFG)
+    lp = M.layer_params(params, 0)
+    d = CFG.d_model
+    x = jax.random.normal(jax.random.key(5), (2, d), jnp.float32)
+    kc = jax.random.normal(jax.random.key(6),
+                           (2, CFG.max_seq, CFG.n_kv_heads, CFG.head_dim))
+    vc = jax.random.normal(jax.random.key(7), kc.shape)
+    pos = jnp.array([9, 17], jnp.int32)
+    yb, kb, vb = fn(x, kc, vc, pos, *lp)
+    for i in range(2):
+        yi, ki, vi = fn(x[i:i + 1], kc[i:i + 1], vc[i:i + 1],
+                        pos[i:i + 1], *lp)
+        np.testing.assert_allclose(yb[i:i + 1], yi, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(kb[i:i + 1], ki, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(vb[i:i + 1], vi, rtol=1e-4, atol=1e-4)
+
+
+def test_prefill_updates_only_chunk_slots(params):
+    """A prefill chunk at pos writes cache slots [pos, pos+c) and nothing
+    else — the property that makes kernel-boundary preemption checkpoints
+    free (paper §6.2)."""
+    fn = M.make_layer_prefill(CFG)
+    lp = M.layer_params(params, 0)
+    c, pos = CFG.chunk_sizes[0], 32
+    x = jax.random.normal(jax.random.key(8), (c, CFG.d_model), jnp.float32)
+    kc = jax.random.normal(jax.random.key(9),
+                           (CFG.max_seq, CFG.n_kv_heads, CFG.head_dim))
+    vc = jax.random.normal(jax.random.key(10), kc.shape)
+    _, k2, v2 = fn(x, kc, vc, jnp.array([pos], jnp.int32), *lp)
+    np.testing.assert_allclose(k2[:pos], kc[:pos], rtol=0, atol=0)
+    np.testing.assert_allclose(k2[pos + c:], kc[pos + c:], rtol=0, atol=0)
+    np.testing.assert_allclose(v2[:pos], vc[:pos], rtol=0, atol=0)
+    np.testing.assert_allclose(v2[pos + c:], vc[pos + c:], rtol=0, atol=0)
+    assert not np.allclose(k2[pos:pos + c], kc[pos:pos + c])
+
+
+def test_head_is_deterministic(params):
+    x = jax.random.normal(jax.random.key(11), (4, CFG.d_model), jnp.float32)
+    t1 = M.head(x, params["final_norm"], params["emb"])
+    t2 = M.head(x, params["final_norm"], params["emb"])
+    assert (np.asarray(t1) == np.asarray(t2)).all()
+    assert t1.dtype == jnp.int32
+    assert (np.asarray(t1) >= 0).all() and (np.asarray(t1) < CFG.vocab).all()
+
+
+def test_embed_shapes(params):
+    toks = jnp.array([0, 1, CFG.vocab - 1], jnp.int32)
+    x = M.embed(toks, params["emb"])
+    assert x.shape == (3, CFG.d_model)
+    np.testing.assert_allclose(x[2], params["emb"][CFG.vocab - 1])
+
+
+def test_init_params_deterministic():
+    p1 = M.init_params(CFG, seed=0)
+    p2 = M.init_params(CFG, seed=0)
+    p3 = M.init_params(CFG, seed=1)
+    np.testing.assert_allclose(p1["l0.wq"], p2["l0.wq"], rtol=0, atol=0)
+    assert not np.allclose(p1["l0.wq"], p3["l0.wq"])
+
+
+def test_config_param_count():
+    # n_params formula agrees with the actual tensor sizes
+    p = M.init_params(CFG, seed=0)
+    total = sum(int(np.prod(v.shape)) for v in p.values())
+    assert total == CFG.n_params

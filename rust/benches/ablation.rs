@@ -1,0 +1,9 @@
+//! Bench: regenerate the design-choice ablation table.
+
+use agent_xpu::config::default_soc;
+use agent_xpu::figures::fig_ablation;
+use agent_xpu::util::bench::black_box;
+
+fn main() {
+    black_box(fig_ablation(&default_soc(), 45.0, 7).unwrap());
+}

@@ -1,0 +1,28 @@
+//! Bench: regenerate the §3.1 op-XPU affinity roofline and time the
+//! annotation path that feeds it (`cargo bench --bench fig_affinity`).
+
+use agent_xpu::config::{default_soc, llama32_3b};
+use agent_xpu::figures::fig_affinity;
+use agent_xpu::heg::{Annotator, ChunkSpec};
+use agent_xpu::soc::XpuModel;
+use agent_xpu::util::bench::{bench, black_box};
+
+fn main() {
+    let soc = default_soc();
+    let j = fig_affinity(&soc);
+    black_box(j);
+
+    let ann = Annotator::new(
+        llama32_3b(),
+        soc.xpus.iter().cloned().map(XpuModel::new).collect(),
+    );
+    let chunk = ChunkSpec { variant: 256, valid: 256, pos: 512, dynamic: false };
+    let s = bench("annotate prefill kernel (all XPUs)", 100, 5000, || {
+        black_box(ann.prefill_kernel(&chunk));
+    });
+    println!("\n{}", s.report());
+    let s = bench("annotate decode iter b=8", 100, 5000, || {
+        black_box(ann.decode_iter(8, 512));
+    });
+    println!("{}", s.report());
+}

@@ -1,0 +1,9 @@
+//! Bench: regenerate the §3.2 batching-effects table.
+
+use agent_xpu::config::default_soc;
+use agent_xpu::figures::fig_batching;
+use agent_xpu::util::bench::black_box;
+
+fn main() {
+    black_box(fig_batching(&default_soc()));
+}

@@ -1,0 +1,26 @@
+//! Bench: regenerate Fig. 3 (memory contention) and time the DES
+//! bandwidth arbiter under co-execution churn.
+
+use agent_xpu::config::default_soc;
+use agent_xpu::figures::fig_contention;
+use agent_xpu::model::gemv_cost;
+use agent_xpu::soc::{LaunchSpec, SocSim};
+use agent_xpu::util::bench::{bench, black_box};
+
+fn main() {
+    let soc = default_soc();
+    black_box(fig_contention(&soc));
+
+    // DES event throughput: repeatedly co-launch & drain two GEMVs
+    let s = bench("DES co-exec launch+drain (2 kernels)", 20, 2000, || {
+        let mut sim = SocSim::new(&soc);
+        let t0 = sim.xpus[0].timing(&gemv_cost(2048, 2048));
+        let t1 = sim.xpus[1].timing(&gemv_cost(2048, 2048));
+        sim.launch(0, LaunchSpec { timing: t0, reactive: false });
+        sim.launch(1, LaunchSpec { timing: t1, reactive: false });
+        while sim.next_event_in().is_some() {
+            black_box(sim.advance_until(sim.now_us + 1e12));
+        }
+    });
+    println!("\n{}", s.report());
+}

@@ -1,0 +1,11 @@
+//! Bench: regenerate Fig. 7 (proactive-reactive mixed) at a reduced sweep.
+
+use agent_xpu::config::default_soc;
+use agent_xpu::figures::fig_mixed;
+use agent_xpu::util::bench::black_box;
+
+fn main() {
+    let intervals = [6.0, 24.0];
+    let rates = [0.5, 2.0];
+    black_box(fig_mixed(&default_soc(), &intervals, &rates, 45.0, 7).unwrap());
+}

@@ -1,0 +1,10 @@
+//! Bench: regenerate Fig. 6 (proactive-only) at a reduced sweep.
+
+use agent_xpu::config::default_soc;
+use agent_xpu::figures::fig_proactive;
+use agent_xpu::util::bench::black_box;
+
+fn main() {
+    let rates = [0.25, 1.0, 3.0];
+    black_box(fig_proactive(&default_soc(), &rates, 45.0, 7).unwrap());
+}

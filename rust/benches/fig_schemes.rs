@@ -1,0 +1,26 @@
+//! Bench: regenerate Fig. 4 (co-scheduling schemes) and time one full
+//! scheme-(d) DES run.
+
+use agent_xpu::config::{SchedulerConfig, default_soc, llama32_3b};
+use agent_xpu::coordinator::AgentXpuEngine;
+use agent_xpu::engine::Engine;
+use agent_xpu::figures::{fig_schemes, mixed_trace};
+use agent_xpu::util::bench::{bench, black_box};
+
+fn main() {
+    let soc = default_soc();
+    black_box(fig_schemes(&soc).unwrap());
+
+    let geo = llama32_3b();
+    let trace = mixed_trace(1.0, 12.0, 30.0, 7, &geo);
+    println!("\n[{} requests per engine run]", trace.len());
+    let s = bench("agent.xpu full DES run (30s trace)", 2, 20, || {
+        let mut e = AgentXpuEngine::synthetic(
+            geo.clone(),
+            soc.clone(),
+            SchedulerConfig::default(),
+        );
+        black_box(e.run(trace.clone()).unwrap());
+    });
+    println!("{}", s.report());
+}

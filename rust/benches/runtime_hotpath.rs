@@ -1,0 +1,62 @@
+//! L3 hot-path bench: real PJRT kernel execution costs — the request
+//! path of the serving frontend.  This is the §Perf target of
+//! EXPERIMENTS.md: prefill chunk, single-lane decode, batched decode.
+//!
+//! Requires `make artifacts` (skips politely otherwise).
+
+use std::sync::Arc;
+
+use agent_xpu::runtime::{KvCache, ModelExecutor, Runtime};
+use agent_xpu::util::bench::{bench, black_box};
+
+fn main() -> anyhow::Result<()> {
+    for cfg in ["tiny", "small"] {
+        let dir = format!("artifacts/{cfg}");
+        if !std::path::Path::new(&dir).join("manifest.json").exists() {
+            eprintln!("skipping {cfg}: run `make artifacts`");
+            continue;
+        }
+        let rt = Arc::new(Runtime::load(&dir)?);
+        let geo = rt.geo.clone();
+        let exec = ModelExecutor::new(rt);
+        let chunk = geo.max_chunk();
+        let prompt: Vec<i32> =
+            (0..chunk).map(|i| (i as i32 * 7 + 1) % geo.vocab as i32).collect();
+
+        println!("== runtime hot path [{cfg}] ({} layers, d={}) ==", geo.n_layers, geo.d_model);
+        let mut cache = KvCache::new(&geo);
+        let s = bench(&format!("[{cfg}] prefill chunk c{chunk} (all layers)"), 2, 12, || {
+            let mut c = KvCache::new(&geo);
+            black_box(exec.prefill(&prompt, chunk, &mut c).unwrap());
+        });
+        println!("{}", s.report());
+
+        let hidden = exec.prefill(&prompt, chunk, &mut cache)?;
+        let mut c1 = cache.clone();
+        let h1 = hidden.clone();
+        let s = bench(&format!("[{cfg}] decode iteration b=1"), 2, 12, || {
+            let mut h = h1.clone();
+            let tok = exec.head(&h).unwrap()[0];
+            h = exec.embed(&[tok], 1).unwrap();
+            for l in 0..geo.n_layers {
+                h = exec.layer_decode(l, &h, &mut [&mut c1]).unwrap();
+            }
+            black_box(h);
+        });
+        println!("{}", s.report());
+
+        let b = geo.max_batch();
+        let mut caches: Vec<KvCache> = (0..b).map(|_| cache.clone()).collect();
+        let toks: Vec<i32> = (0..b as i32).collect();
+        let s = bench(&format!("[{cfg}] decode iteration b={b}"), 2, 12, || {
+            let mut h = exec.embed(&toks, b).unwrap();
+            for l in 0..geo.n_layers {
+                let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+                h = exec.layer_decode(l, &h, &mut refs).unwrap();
+            }
+            black_box(exec.head(&h).unwrap());
+        });
+        println!("{}", s.report());
+    }
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! Scheduler micro-benchmarks (§6.5 "Synchronization Cost
+//! Minimization"): the coordinator's per-decision costs must be
+//! negligible next to kernel durations (ms).  Targets (DESIGN.md §8):
+//! dispatch decision < 5 µs, DES > 1M events/s equivalents.
+
+use std::collections::HashMap;
+
+use agent_xpu::config::{SchedulerConfig, default_soc, llama32_3b};
+use agent_xpu::coordinator::{decode_lanes, dispatch_check, resume_order};
+use agent_xpu::engine::{ExecBridge, Phase};
+use agent_xpu::heg::{Annotator, ChunkSpec, plan_chunks};
+use agent_xpu::model::gemv_cost;
+use agent_xpu::soc::{LaunchSpec, SocSim, XpuModel};
+use agent_xpu::util::bench::{bench, black_box};
+use agent_xpu::util::json::Json;
+use agent_xpu::workload::{Priority, Request};
+
+fn main() {
+    let soc = default_soc();
+    let cfg = SchedulerConfig::default();
+    let geo = llama32_3b();
+    let ann = Annotator::new(
+        geo.clone(),
+        soc.xpus.iter().cloned().map(XpuModel::new).collect(),
+    );
+
+    // Algorithm 1 decision latency under an active kernel
+    let mut sim = SocSim::new(&soc);
+    let t = sim.xpus[1].timing(&gemv_cost(4096, 4096));
+    sim.launch(1, LaunchSpec { timing: t, reactive: false });
+    let cand = ann
+        .prefill_kernel(&ChunkSpec { variant: 256, valid: 256, pos: 0, dynamic: false });
+    let ct = *cand.timing_on(0);
+    let s = bench("dispatch_check (Algorithm 1)", 1000, 100_000, || {
+        black_box(dispatch_check(&sim, &cfg, &ct, false));
+    });
+    println!("{}", s.report());
+
+    // decode batch formation over a 64-request state table
+    let bridge = ExecBridge::synthetic(geo.clone());
+    let mut states = HashMap::new();
+    for i in 0..64u64 {
+        let req = Request {
+            id: i,
+            priority: if i % 7 == 0 { Priority::Reactive } else { Priority::Proactive },
+            arrival_us: i as f64,
+            prompt: vec![1; 200],
+            max_new_tokens: 8,
+            profile: "bench",
+        };
+        let mut st = bridge.init_state(req, 512);
+        if i % 2 == 0 {
+            st.phase = Phase::Decoding;
+        }
+        states.insert(i, st);
+    }
+    let s = bench("decode_lanes over 64 requests", 1000, 50_000, || {
+        black_box(decode_lanes(&states, 8, true));
+    });
+    println!("{}", s.report());
+
+    let mut cands: Vec<u64> =
+        states.values().filter(|s| s.phase == Phase::Prefilling).map(|s| s.id()).collect();
+    let s = bench("resume_order over 32 candidates", 200, 10_000, || {
+        resume_order(&states, &mut cands, &ann, 0, 1e6, 2e9);
+        black_box(&cands);
+    });
+    println!("{}", s.report());
+
+    let s = bench("plan_chunks (2048-token prompt)", 1000, 100_000, || {
+        black_box(plan_chunks(&geo, 2048, 512));
+    });
+    println!("{}", s.report());
+
+    // DES throughput: one kernel launch+finish cycle
+    let s = bench("DES launch+advance cycle", 1000, 100_000, || {
+        let mut sim = SocSim::new(&soc);
+        let t = sim.xpus[0].timing(&gemv_cost(512, 512));
+        sim.launch(0, LaunchSpec { timing: t, reactive: false });
+        black_box(sim.advance_until(sim.now_us + 1e9));
+    });
+    println!("{}", s.report());
+
+    // control-path JSON (UDS protocol)
+    let msg = r#"{"type":"generate","priority":"reactive","prompt":[1,2,3,4,5,6,7,8],"max_new_tokens":16}"#;
+    let s = bench("UDS request JSON parse", 1000, 100_000, || {
+        black_box(Json::parse(msg).unwrap());
+    });
+    println!("{}", s.report());
+}

@@ -1,0 +1,185 @@
+//! The llama.cpp-like baseline (paper §8.1): a latency-optimized
+//! CPU-only engine with **no batching support** and **no priority
+//! scheduling** — the agent frontend "simply notifies them about the
+//! arrival of each request and leaves the scheduling decision to their
+//! internal schedulers."
+//!
+//! Modeled behaviour: at most `concurrency` admitted requests multiplex
+//! the CPU cores (llama.cpp relies on OS multitasking), served
+//! round-robin at kernel granularity, FCFS admission, decode strictly
+//! b=1 per request.
+
+use anyhow::Result;
+
+use crate::config::{ModelGeometry, SocConfig};
+use crate::engine::{Driver, Engine, ExecBridge, KernelTag, Phase};
+use crate::heg::Annotator;
+use crate::metrics::RunReport;
+use crate::soc::XpuModel;
+use crate::workload::{ReqId, Request};
+
+pub struct CpuFcfsEngine {
+    soc: SocConfig,
+    ann: Annotator,
+    geo: ModelGeometry,
+    cpu: usize,
+    /// Max requests multiplexing the CPU (paper: "we limit the maximum
+    /// concurrency degree to avoid memory overflow").
+    pub concurrency: usize,
+    /// Round-robin cursor.
+    cursor: usize,
+}
+
+impl CpuFcfsEngine {
+    pub fn new(geo: ModelGeometry, soc: SocConfig, concurrency: usize) -> Self {
+        let xpus: Vec<XpuModel> = soc.xpus.iter().cloned().map(XpuModel::new).collect();
+        let ann = Annotator::new(geo.clone(), xpus);
+        let cpu = ann.xpu_index("cpu").expect("soc needs a cpu");
+        Self { soc, ann, geo, cpu, concurrency, cursor: 0 }
+    }
+
+    fn schedule(&mut self, d: &mut Driver) {
+        if d.sim.busy(self.cpu) {
+            return;
+        }
+        // Active set = the `concurrency` oldest unfinished requests
+        // (FCFS admission; no priority awareness at all).
+        let mut active: Vec<ReqId> = d
+            .states
+            .values()
+            .filter(|s| s.phase != Phase::Done)
+            .map(|s| s.id())
+            .collect();
+        active.sort_by(|a, b| {
+            d.states[a]
+                .req
+                .arrival_us
+                .total_cmp(&d.states[b].req.arrival_us)
+                .then(a.cmp(b))
+        });
+        active.truncate(self.concurrency);
+        if active.is_empty() {
+            return;
+        }
+        // Round-robin over the active set at kernel granularity — the
+        // OS-multitasking analogue.
+        for k in 0..active.len() {
+            let id = active[(self.cursor + k) % active.len()];
+            let st = &d.states[&id];
+            if st.running {
+                continue;
+            }
+            self.cursor = (self.cursor + k + 1) % active.len().max(1);
+            match st.phase {
+                Phase::Prefilling => {
+                    let chunk = *st.current_chunk().unwrap();
+                    let a = self.ann.prefill_kernel(&chunk);
+                    let t = *a.timing_on(self.cpu);
+                    d.launch(self.cpu, t, false, KernelTag::Prefill { req: id });
+                }
+                Phase::Decoding => {
+                    // no batching: a lone-lane decode iteration
+                    let a = self.ann.decode_iter(1, st.pos.max(1));
+                    let t = *a.timing_on(self.cpu);
+                    d.launch(self.cpu, t, false, KernelTag::DecodeIter { lanes: vec![id] });
+                }
+                Phase::Done => continue,
+            }
+            return;
+        }
+    }
+}
+
+impl Engine for CpuFcfsEngine {
+    fn name(&self) -> String {
+        format!("llama.cpp-like(c={})", self.concurrency)
+    }
+
+    fn run(&mut self, trace: Vec<Request>) -> Result<RunReport> {
+        self.cursor = 0;
+        let max_chunk = self.geo.max_chunk();
+        let mut d = Driver::new(&self.soc, ExecBridge::synthetic(self.geo.clone()), trace);
+        loop {
+            d.admit_ready(max_chunk);
+            self.schedule(&mut d);
+            if !d.step()? {
+                break;
+            }
+        }
+        d.finish(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{default_soc, llama32_3b};
+    use crate::workload::Priority;
+
+    fn geo() -> ModelGeometry {
+        let mut g = llama32_3b();
+        g.n_layers = 4;
+        g
+    }
+
+    fn req(id: u64, prio: Priority, arrival: f64, plen: usize, out: usize) -> Request {
+        Request {
+            id,
+            priority: prio,
+            arrival_us: arrival,
+            prompt: vec![1; plen],
+            max_new_tokens: out,
+            profile: "test",
+        }
+    }
+
+    #[test]
+    fn completes_all_requests() {
+        let mut e = CpuFcfsEngine::new(geo(), default_soc(), 4);
+        let trace: Vec<Request> = (0..5)
+            .map(|i| req(i, Priority::Proactive, i as f64 * 10_000.0, 200, 6))
+            .collect();
+        let rep = e.run(trace).unwrap();
+        assert_eq!(rep.reqs.iter().filter(|m| m.finished()).count(), 5);
+        // only the CPU did work
+        assert!(rep.utilization("cpu") > 0.0);
+        assert_eq!(rep.utilization("npu"), 0.0);
+        assert_eq!(rep.utilization("igpu"), 0.0);
+    }
+
+    #[test]
+    fn no_priority_reactive_waits_behind_queue() {
+        // The 4.6x story: reactive latency degrades behind proactive work.
+        let mut e = CpuFcfsEngine::new(geo(), default_soc(), 2);
+        let mut trace: Vec<Request> = (0..6)
+            .map(|i| req(i, Priority::Proactive, 0.0, 512, 30))
+            .collect();
+        trace.push(req(100, Priority::Reactive, 1_000.0, 128, 4));
+        let rep = e.run(trace).unwrap();
+        let rt = rep.reqs.iter().find(|m| m.id == 100).unwrap();
+        // solo reactive for comparison
+        let mut e2 = CpuFcfsEngine::new(geo(), default_soc(), 2);
+        let solo = e2.run(vec![req(100, Priority::Reactive, 1_000.0, 128, 4)]).unwrap();
+        let solo_ttft = solo.reqs[0].ttft_us().unwrap();
+        assert!(
+            rt.ttft_us().unwrap() > 3.0 * solo_ttft,
+            "queueing must hurt reactive: {} vs {}",
+            rt.ttft_us().unwrap(),
+            solo_ttft
+        );
+    }
+
+    #[test]
+    fn concurrency_bound_respected_one_at_a_time() {
+        // c=1 serves strictly FCFS: completion order == arrival order
+        let mut e = CpuFcfsEngine::new(geo(), default_soc(), 1);
+        let trace: Vec<Request> = (0..3)
+            .map(|i| req(i, Priority::Proactive, i as f64, 128, 3))
+            .collect();
+        let rep = e.run(trace).unwrap();
+        let mut done: Vec<(u64, f64)> =
+            rep.reqs.iter().map(|m| (m.id, m.done_us.unwrap())).collect();
+        done.sort_by(|a, b| a.1.total_cmp(&b.1));
+        assert_eq!(done.iter().map(|d| d.0).collect::<Vec<_>>(), vec![0, 1, 2]);
+    }
+}

@@ -1,0 +1,18 @@
+//! Baseline engines the paper compares against (§3.3 Fig. 4, §8.1):
+//!
+//! - [`CpuFcfsEngine`] — the llama.cpp-like industrial baseline: CPU
+//!   only, no batching, no priorities, bounded concurrency with
+//!   time-slice multiplexing.
+//! - [`SingleXpuEngine`] — the three single-accelerator co-scheduling
+//!   schemes of Fig. 4: (a) instant preemption that discards prefill
+//!   context, (b) time-sharing with duplicated buffers, (c) standard
+//!   continuous batching at iteration granularity.
+//!
+//! All run on the same DES + numerics bridge as Agent.xpu, so every
+//! comparison isolates *scheduling policy*.
+
+mod cpu_fcfs;
+mod single_xpu;
+
+pub use cpu_fcfs::CpuFcfsEngine;
+pub use single_xpu::{Scheme, SingleXpuEngine};

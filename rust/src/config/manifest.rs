@@ -1,0 +1,268 @@
+//! The AOT artifact manifest: the contract between the Python compile
+//! path (`python/compile/aot.py`) and the Rust serving path.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result, bail};
+
+use crate::util::json::Json;
+
+/// Model geometry, mirroring `python/compile/configs.py::ModelConfig`.
+#[derive(Debug, Clone)]
+pub struct ModelGeometry {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_q_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub d_ffn: usize,
+    pub max_seq: usize,
+    pub chunk_sizes: Vec<usize>,
+    pub batch_sizes: Vec<usize>,
+    pub rope_theta: f64,
+    /// Bytes per weight element streamed from DDR.  AOT artifacts are
+    /// f32 (4); the paper-scale DES preset models the paper's W8A16
+    /// round-to-nearest quantization (1 byte weights, §8.1).
+    pub weight_bytes: f64,
+}
+
+impl ModelGeometry {
+    pub fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            name: v.get("name")?.as_str()?.to_string(),
+            vocab: v.get("vocab")?.as_usize()?,
+            d_model: v.get("d_model")?.as_usize()?,
+            n_layers: v.get("n_layers")?.as_usize()?,
+            n_q_heads: v.get("n_q_heads")?.as_usize()?,
+            n_kv_heads: v.get("n_kv_heads")?.as_usize()?,
+            head_dim: v.get("head_dim")?.as_usize()?,
+            d_ffn: v.get("d_ffn")?.as_usize()?,
+            max_seq: v.get("max_seq")?.as_usize()?,
+            chunk_sizes: v.get("chunk_sizes")?.as_usize_vec()?,
+            batch_sizes: v.get("batch_sizes")?.as_usize_vec()?,
+            rope_theta: v.get("rope_theta")?.as_f64()?,
+            weight_bytes: v.opt("weight_bytes").map(|x| x.as_f64()).unwrap_or(Ok(4.0))?,
+        })
+    }
+
+    /// Elements in one layer's KV cache (one of K or V): `s * kh * hd`.
+    pub fn cache_elems(&self) -> usize {
+        self.max_seq * self.n_kv_heads * self.head_dim
+    }
+
+    /// Total parameter count (matches the Python formula).
+    pub fn n_params(&self) -> usize {
+        let kvd = self.n_kv_heads * self.head_dim;
+        let per_layer = self.d_model * self.d_model
+            + 2 * self.d_model * kvd
+            + self.d_model * self.d_model
+            + 3 * self.d_model * self.d_ffn
+            + 2 * self.d_model;
+        self.n_layers * per_layer + self.vocab * self.d_model + self.d_model
+    }
+
+    /// Largest precompiled chunk size.
+    pub fn max_chunk(&self) -> usize {
+        self.chunk_sizes.iter().copied().max().unwrap_or(1)
+    }
+
+    /// Largest precompiled decode batch.
+    pub fn max_batch(&self) -> usize {
+        self.batch_sizes.iter().copied().max().unwrap_or(1)
+    }
+
+    /// Smallest precompiled chunk size >= `n`, if any.
+    pub fn chunk_for(&self, n: usize) -> Option<usize> {
+        self.chunk_sizes.iter().copied().filter(|&c| c >= n).min()
+    }
+
+    /// Smallest precompiled batch size >= `n`, if any.
+    pub fn batch_for(&self, n: usize) -> Option<usize> {
+        self.batch_sizes.iter().copied().filter(|&b| b >= n).min()
+    }
+}
+
+/// Dtype + shape of one artifact argument.
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+/// What role an artifact plays in the HEG.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    Embed,
+    LayerPrefill,
+    LayerDecode,
+    Head,
+}
+
+impl KernelKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "embed" => Self::Embed,
+            "layer_prefill" => Self::LayerPrefill,
+            "layer_decode" => Self::LayerDecode,
+            "head" => Self::Head,
+            _ => bail!("unknown kernel kind {s:?}"),
+        })
+    }
+}
+
+/// One AOT-compiled HLO module.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub args: Vec<ArgSpec>,
+    pub kind: KernelKind,
+    /// Chunk size (prefill/embed) or batch size (decode/head/embed).
+    pub n: usize,
+}
+
+/// `artifacts/<config>/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub config: ModelGeometry,
+    pub seed: u64,
+    pub weights: String,
+    pub layer_weight_names: Vec<String>,
+    pub artifacts: HashMap<String, ArtifactMeta>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {path:?}"))?;
+        let v = Json::parse(&text).context("parsing manifest.json")?;
+
+        let mut artifacts = HashMap::new();
+        for (name, meta) in v.get("artifacts")?.as_obj()? {
+            let args = meta
+                .get("args")?
+                .as_arr()?
+                .iter()
+                .map(|a| {
+                    Ok(ArgSpec {
+                        dtype: a.get("dtype")?.as_str()?.to_string(),
+                        shape: a.get("shape")?.as_usize_vec()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    file: meta.get("file")?.as_str()?.to_string(),
+                    args,
+                    kind: KernelKind::parse(meta.get("kind")?.as_str()?)?,
+                    n: meta.get("n")?.as_usize()?,
+                },
+            );
+        }
+
+        Ok(Manifest {
+            config: ModelGeometry::from_json(v.get("config")?)?,
+            seed: v.get("seed")?.as_i64()? as u64,
+            weights: v.get("weights")?.as_str()?.to_string(),
+            layer_weight_names: v
+                .get("layer_weight_names")?
+                .as_arr()?
+                .iter()
+                .map(|s| Ok(s.as_str()?.to_string()))
+                .collect::<Result<Vec<_>>>()?,
+            artifacts,
+            dir,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))
+    }
+
+    pub fn artifact_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(name)?.file))
+    }
+
+    pub fn weights_path(&self) -> PathBuf {
+        self.dir.join(&self.weights)
+    }
+
+    pub fn golden_path(&self) -> PathBuf {
+        self.dir.join("golden.json")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn tiny_geo() -> ModelGeometry {
+        ModelGeometry {
+            name: "t".into(),
+            vocab: 512,
+            d_model: 128,
+            n_layers: 2,
+            n_q_heads: 4,
+            n_kv_heads: 2,
+            head_dim: 32,
+            d_ffn: 256,
+            max_seq: 128,
+            chunk_sizes: vec![16, 32],
+            batch_sizes: vec![1, 2, 4],
+            rope_theta: 10000.0,
+            weight_bytes: 4.0,
+        }
+    }
+
+    #[test]
+    fn chunk_for_picks_smallest_covering() {
+        let g = tiny_geo();
+        assert_eq!(g.chunk_for(1), Some(16));
+        assert_eq!(g.chunk_for(16), Some(16));
+        assert_eq!(g.chunk_for(17), Some(32));
+        assert_eq!(g.chunk_for(33), None);
+    }
+
+    #[test]
+    fn batch_for_picks_smallest_covering() {
+        let g = tiny_geo();
+        assert_eq!(g.batch_for(1), Some(1));
+        assert_eq!(g.batch_for(3), Some(4));
+        assert_eq!(g.batch_for(5), None);
+    }
+
+    #[test]
+    fn param_count_matches_python_tiny() {
+        // python: CONFIGS['tiny'].n_params
+        assert_eq!(tiny_geo().n_params(), 361_088);
+    }
+
+    #[test]
+    fn kernel_kind_parses() {
+        assert_eq!(KernelKind::parse("layer_prefill").unwrap(), KernelKind::LayerPrefill);
+        assert!(KernelKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn geometry_from_json() {
+        let j = Json::parse(
+            r#"{"name":"x","vocab":16,"d_model":8,"n_layers":1,
+                "n_q_heads":2,"n_kv_heads":1,"head_dim":4,"d_ffn":16,
+                "max_seq":8,"chunk_sizes":[2,4],"batch_sizes":[1],
+                "rope_theta":10000.0}"#,
+        )
+        .unwrap();
+        let g = ModelGeometry::from_json(&j).unwrap();
+        assert_eq!(g.d_model, 8);
+        assert_eq!(g.chunk_sizes, vec![2, 4]);
+        assert_eq!(g.cache_elems(), 32);
+    }
+}

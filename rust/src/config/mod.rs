@@ -1,0 +1,13 @@
+//! Configuration system: the AOT manifest written by `python/compile/aot.py`
+//! plus the TOML-based runtime configuration (SoC parameters, scheduler
+//! knobs, workload specs).
+
+mod manifest;
+mod presets;
+mod runtime_cfg;
+
+pub use manifest::{ArgSpec, ArtifactMeta, KernelKind, Manifest, ModelGeometry};
+pub use presets::llama32_3b;
+pub use runtime_cfg::{
+    RuntimeConfig, SchedulerConfig, SocConfig, XpuConfig, default_soc,
+};

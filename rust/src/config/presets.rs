@@ -1,0 +1,47 @@
+//! Paper-scale model geometry presets for timing-only (DES) experiments.
+//!
+//! The AOT artifacts use small geometries (real PJRT compute on CPU);
+//! the figure harnesses instead simulate the paper's actual serving
+//! model so the regenerated curves land in the paper's regime.
+
+use super::manifest::ModelGeometry;
+
+/// Llama-3.2-3B-Instruct, the paper's evaluation model (§8.1), with
+/// W8A16 round-to-nearest quantization (1 byte/weight streamed).
+pub fn llama32_3b() -> ModelGeometry {
+    ModelGeometry {
+        name: "llama32-3b".into(),
+        vocab: 128_256,
+        d_model: 3072,
+        n_layers: 28,
+        n_q_heads: 24,
+        n_kv_heads: 8,
+        head_dim: 128,
+        d_ffn: 8192,
+        max_seq: 2048,
+        chunk_sizes: vec![64, 128, 256, 512],
+        batch_sizes: vec![1, 2, 4, 8],
+        rope_theta: 500_000.0,
+        weight_bytes: 1.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_count_is_about_3b() {
+        let g = llama32_3b();
+        let p = g.n_params() as f64;
+        assert!((2.8e9..3.4e9).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn chunks_divide_max_seq() {
+        let g = llama32_3b();
+        for c in &g.chunk_sizes {
+            assert_eq!(g.max_seq % c, 0);
+        }
+    }
+}

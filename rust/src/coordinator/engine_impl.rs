@@ -1,0 +1,584 @@
+//! The Agent.xpu engine: the XPU-coordinator scheduling loop over the
+//! shared DES driver.  This is the paper's system contribution wired
+//! together — see module docs in `coordinator/mod.rs`.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::{ModelGeometry, SchedulerConfig, SocConfig};
+use crate::engine::{Driver, Engine, ExecBridge, KernelTag, Phase};
+use crate::heg::{Annotator, max_chunk_within_budget};
+use crate::metrics::RunReport;
+use crate::runtime::ModelExecutor;
+use crate::soc::XpuModel;
+use crate::workload::{ReqId, Request};
+
+use super::dispatch::{DispatchDecision, dispatch_check};
+use super::memory::MemoryGovernor;
+use super::select::{decode_lanes, resume_order};
+
+/// The Agent.xpu serving engine.
+pub struct AgentXpuEngine {
+    soc: SocConfig,
+    pub sched: SchedulerConfig,
+    ann: Annotator,
+    exec: Option<Arc<ModelExecutor>>,
+    geo: ModelGeometry,
+    max_chunk: usize,
+    npu: usize,
+    igpu: usize,
+    /// Which request last owned the NPU prefill pipeline (preemption
+    /// accounting).
+    npu_owner: Option<ReqId>,
+    /// Kernel trace of the last `run` (Fig. 4 Gantt, debugging).
+    pub last_trace: Option<crate::trace::Trace>,
+    /// DRAM-budget admission control (§6.5 memory management).
+    governor: MemoryGovernor,
+}
+
+impl AgentXpuEngine {
+    /// Timing-only engine at a given geometry (figure sweeps).
+    pub fn synthetic(geo: ModelGeometry, soc: SocConfig, sched: SchedulerConfig) -> Self {
+        Self::build(geo, soc, sched, None)
+    }
+
+    /// Real-compute engine over loaded artifacts.
+    pub fn real(exec: Arc<ModelExecutor>, soc: SocConfig, sched: SchedulerConfig) -> Self {
+        let geo = exec.geo().clone();
+        Self::build(geo, soc, sched, Some(exec))
+    }
+
+    fn build(
+        geo: ModelGeometry,
+        soc: SocConfig,
+        sched: SchedulerConfig,
+        exec: Option<Arc<ModelExecutor>>,
+    ) -> Self {
+        let xpus: Vec<XpuModel> = soc.xpus.iter().cloned().map(XpuModel::new).collect();
+        let ann = Annotator::new(geo.clone(), xpus);
+        let npu = ann.xpu_index("npu").expect("soc needs an npu");
+        let igpu = ann.xpu_index("igpu").expect("soc needs an igpu");
+        let max_chunk = max_chunk_within_budget(
+            &geo,
+            &[&ann.xpus[npu], &ann.xpus[igpu]],
+            sched.chunk_latency_budget_ms,
+        );
+        let governor = MemoryGovernor::new(&geo, &soc);
+        Self {
+            soc, sched, ann, exec, geo, max_chunk, npu, igpu,
+            npu_owner: None, last_trace: None, governor,
+        }
+    }
+
+    /// §6.5 memory management: may `id`'s prefill start (allocate its
+    /// KV) right now?  Started requests always continue (their KV is
+    /// already resident).  Reactive requests that do not fit evict the
+    /// least-progressed waiting proactive prefill (graceful
+    /// degradation — its context is recomputed later, like scheme (a)).
+    fn memory_admit(&mut self, d: &mut Driver, id: ReqId) -> bool {
+        let st = &d.states[&id];
+        let started = st.chunk_idx > 0 || st.layer_idx > 0;
+        if started || self.governor.can_start(&d.states) {
+            return true;
+        }
+        if !st.is_reactive() {
+            return false; // defer proactive start until memory frees
+        }
+        if let Some(victim) = self.governor.eviction_victim(&d.states) {
+            let geo = self.geo.clone();
+            let now = d.now();
+            let vs = d.states.get_mut(&victim).unwrap();
+            vs.restart_prefill(&geo);
+            vs.enqueued_at_us = now;
+            self.governor.evictions += 1;
+            return true;
+        }
+        true // nothing evictable: admit anyway (paper's moderate-density assumption)
+    }
+
+    fn bridge(&self) -> ExecBridge {
+        match &self.exec {
+            Some(e) => ExecBridge::real(e.clone()),
+            None => ExecBridge::synthetic(self.geo.clone()),
+        }
+    }
+
+    /// The "prefill XPU" under disaggregation is the NPU; colocated mode
+    /// (ablation) funnels everything through the iGPU.
+    fn prefill_xpu(&self) -> usize {
+        if self.sched.disaggregation { self.npu } else { self.igpu }
+    }
+
+    /// Preemption accounting (§6.2): whenever a reactive prefill kernel
+    /// launches while a mid-prefill proactive task waits at its
+    /// kernel-boundary checkpoint, that task is preempted — counted once
+    /// per wait episode (the flag clears when the victim runs again).
+    fn account_preemption(d: &mut Driver, _reactive_id: ReqId) {
+        let now = d.now();
+        let victims: Vec<ReqId> = d
+            .states
+            .values()
+            .filter(|s| {
+                !s.is_reactive()
+                    && s.phase == Phase::Prefilling
+                    && !s.running
+                    && !s.preempt_counted
+                    && (s.chunk_idx > 0 || s.layer_idx > 0)
+            })
+            .map(|s| s.id())
+            .collect();
+        for v in victims {
+            let vs = d.states.get_mut(&v).unwrap();
+            vs.preempted += 1;
+            vs.preempt_counted = true;
+            vs.enqueued_at_us = now;
+            d.preemptions += 1;
+        }
+    }
+
+    /// Reactive requests currently mid-system (prefilling or decoding).
+    fn reactive_active(d: &Driver) -> bool {
+        d.states
+            .values()
+            .any(|s| s.is_reactive() && s.phase != Phase::Done)
+    }
+
+    // -- NPU side: the prefill pipeline ---------------------------------
+
+    fn schedule_prefill_pipeline(&mut self, d: &mut Driver) {
+        let pxpu = self.prefill_xpu();
+        if d.sim.busy(pxpu) {
+            return;
+        }
+        // Reactive first (kernel-level preemption: we are at a kernel
+        // boundary by construction — the pipeline is idle).
+        let mut reactive: Vec<ReqId> = d
+            .states
+            .values()
+            .filter(|s| s.phase == Phase::Prefilling && !s.running && s.is_reactive())
+            .map(|s| s.id())
+            .collect();
+        reactive.sort_by(|a, b| {
+            d.states[a]
+                .req
+                .arrival_us
+                .total_cmp(&d.states[b].req.arrival_us)
+                .then(a.cmp(b))
+        });
+        let mut proactive: Vec<ReqId> = d
+            .states
+            .values()
+            .filter(|s| s.phase == Phase::Prefilling && !s.running && !s.is_reactive())
+            .map(|s| s.id())
+            .collect();
+        resume_order(
+            &d.states,
+            &mut proactive,
+            &self.ann,
+            pxpu,
+            d.now(),
+            self.sched.starvation_age_ms * 1e3,
+        );
+
+        let pick = if self.sched.preemption {
+            reactive.first().copied().or_else(|| proactive.first().copied())
+        } else {
+            // no-preemption ablation: FCFS across classes
+            let mut all = [reactive.as_slice(), proactive.as_slice()].concat();
+            all.sort_by(|a, b| {
+                d.states[a]
+                    .req
+                    .arrival_us
+                    .total_cmp(&d.states[b].req.arrival_us)
+                    .then(a.cmp(b))
+            });
+            all.first().copied()
+        };
+        let Some(id) = pick else { return };
+        if !self.memory_admit(d, id) {
+            return;
+        }
+
+        let st = &d.states[&id];
+        let chunk = *st.current_chunk().expect("prefilling has a chunk");
+        // Elastic binding: dynamic margin chunks prefer the iGPU (§5.2);
+        // if the iGPU is busy they wait for it unless this XPU *is* the
+        // iGPU already (colocated mode).
+        if chunk.dynamic && self.sched.disaggregation {
+            return; // the iGPU side will pick it up
+        }
+        let annotated = self.ann.prefill_kernel(&chunk);
+        let timing = *annotated.timing_on(pxpu);
+        let reactive_k = st.is_reactive();
+        if dispatch_check(&d.sim, &self.sched, &timing, reactive_k)
+            == DispatchDecision::Defer
+        {
+            return;
+        }
+        if reactive_k {
+            Self::account_preemption(d, id);
+        }
+        self.npu_owner = Some(id);
+        d.launch(pxpu, timing, reactive_k, KernelTag::Prefill { req: id });
+    }
+
+    // -- iGPU side: decode pipeline, margins, inter-XPU backfill --------
+
+    fn schedule_decode_pipeline(&mut self, d: &mut Driver) {
+        if d.sim.busy(self.igpu) {
+            return;
+        }
+        let reactive_present = Self::reactive_active(d);
+
+        // (1) A reactive dynamic margin chunk gates that request's TTFT:
+        // it outranks everything on the iGPU.
+        if self.sched.disaggregation {
+            if self.try_margin_chunk(d, true) {
+                return;
+            }
+        }
+
+        // (2) Proactive margin chunks outrank proactive-only decode:
+        // finishing a prefill feeds the decode batch (the ETC rationale
+        // of §6.2's resumption strategy) — but never delay a decode
+        // batch that carries a reactive lane.
+        let rt_decoding = d
+            .states
+            .values()
+            .any(|s| s.phase == Phase::Decoding && !s.running && s.is_reactive());
+        if self.sched.disaggregation && !rt_decoding && self.try_margin_chunk(d, false) {
+            return;
+        }
+
+        // (3) Decode iteration with adaptive batching + intra-XPU
+        // backfill (proactive lanes join at the boundary when allowed).
+        let allow_join = self.sched.backfill || !reactive_present;
+        let (lanes, any_rt) = decode_lanes(&d.states, self.sched.b_max, allow_join);
+        if !lanes.is_empty() {
+            let avg_ctx = (lanes.iter().map(|id| d.states[id].pos).sum::<usize>()
+                / lanes.len())
+            .max(1);
+            let annotated = self.ann.decode_iter(lanes.len(), avg_ctx);
+            let timing = *annotated.timing_on(self.igpu);
+            if dispatch_check(&d.sim, &self.sched, &timing, any_rt)
+                == DispatchDecision::Launch
+            {
+                let backfilled =
+                    any_rt && lanes.iter().any(|id| !d.states[id].is_reactive());
+                if backfilled {
+                    d.backfills += 1;
+                }
+                d.launch(self.igpu, timing, any_rt, KernelTag::DecodeIter { lanes });
+                return;
+            }
+            // decode deferred: fall through to cheaper candidates
+        }
+
+        if !self.sched.disaggregation {
+            return; // colocated mode: prefill handled by the other branch
+        }
+
+        // (4) Proactive dynamic margin chunks (the non-rt-decoding case
+        // was already handled above).
+        if self.try_margin_chunk(d, false) {
+            return;
+        }
+
+        // (5) Inter-XPU backfill (§6.3): proactive (or starved) prefill
+        // fills the iGPU bubble while the NPU is held by reactive
+        // prefill; also plain structural slack when the NPU is busy.
+        if !self.sched.backfill {
+            return;
+        }
+        let mut cands: Vec<ReqId> = d
+            .states
+            .values()
+            .filter(|s| {
+                s.phase == Phase::Prefilling
+                    && !s.running
+                    && !s.is_reactive()
+                    && d.sim.busy(self.prefill_xpu()) // structural slack only
+            })
+            .map(|s| s.id())
+            .collect();
+        if cands.is_empty() {
+            return;
+        }
+        // Rank by energy efficiency (TFLOPS/W, §6.3) — here all
+        // candidates share a kernel shape class, so waiting-age + ETC
+        // ordering (resume_order) is the tiebreak the paper applies.
+        resume_order(
+            &d.states,
+            &mut cands,
+            &self.ann,
+            self.igpu,
+            d.now(),
+            self.sched.starvation_age_ms * 1e3,
+        );
+        for id in cands {
+            let st = &d.states[&id];
+            let chunk = *st.current_chunk().unwrap();
+            if chunk.dynamic {
+                continue; // handled by try_margin_chunk
+            }
+            if !self.memory_admit(d, id) {
+                continue;
+            }
+            let annotated = self.ann.prefill_kernel(&chunk);
+            let timing = *annotated.timing_on(self.igpu);
+            // Backfill constraints (§6.3): duration within the reactive
+            // window (chunking bounds this), memory threshold (Alg. 1).
+            if dispatch_check(&d.sim, &self.sched, &timing, false)
+                == DispatchDecision::Launch
+            {
+                d.backfills += 1;
+                d.launch(self.igpu, timing, false, KernelTag::Prefill { req: id });
+                return;
+            }
+        }
+    }
+
+    /// Launch the next *dynamic* (margin) chunk of a reactive/proactive
+    /// request on the iGPU.  Returns true if launched.
+    fn try_margin_chunk(&mut self, d: &mut Driver, reactive: bool) -> bool {
+        let mut cands: Vec<ReqId> = d
+            .states
+            .values()
+            .filter(|s| {
+                s.phase == Phase::Prefilling
+                    && !s.running
+                    && s.is_reactive() == reactive
+                    && s.current_chunk().map(|c| c.dynamic).unwrap_or(false)
+            })
+            .map(|s| s.id())
+            .collect();
+        cands.sort_by(|a, b| {
+            d.states[a]
+                .req
+                .arrival_us
+                .total_cmp(&d.states[b].req.arrival_us)
+                .then(a.cmp(b))
+        });
+        let Some(&id) = cands.first() else { return false };
+        if !self.memory_admit(d, id) {
+            return false;
+        }
+        let chunk = *d.states[&id].current_chunk().unwrap();
+        let annotated = self.ann.prefill_kernel(&chunk);
+        let timing = *annotated.timing_on(self.igpu);
+        if dispatch_check(&d.sim, &self.sched, &timing, reactive)
+            == DispatchDecision::Defer
+        {
+            return false;
+        }
+        if reactive {
+            Self::account_preemption(d, id);
+        }
+        d.launch(self.igpu, timing, reactive, KernelTag::Prefill { req: id });
+        true
+    }
+
+    /// Deadlock guard: if nothing is running, nothing was launched, and
+    /// work remains, force-launch the most urgent kernel (WaitForSlot
+    /// has nothing to wait for on an idle SoC — dispatch_check already
+    /// allows this, so this only fires for margin-vs-busy-iGPU corner
+    /// cases).
+    fn force_progress(&mut self, d: &mut Driver) {
+        if !d.sim.all_idle() {
+            return;
+        }
+        // any runnable prefill (incl. dynamic margins on the NPU with
+        // JIT) — reactive first, then aged proactive
+        let mut cands: Vec<ReqId> = d
+            .states
+            .values()
+            .filter(|s| s.phase == Phase::Prefilling && !s.running)
+            .map(|s| s.id())
+            .collect();
+        if cands.is_empty() {
+            return;
+        }
+        cands.sort_by(|a, b| {
+            let (sa, sb) = (&d.states[a], &d.states[b]);
+            sb.is_reactive()
+                .cmp(&sa.is_reactive())
+                .then(sa.req.arrival_us.total_cmp(&sb.req.arrival_us))
+                .then(a.cmp(b))
+        });
+        let id = cands[0];
+        let st = &d.states[&id];
+        let chunk = *st.current_chunk().unwrap();
+        let annotated = self.ann.prefill_kernel(&chunk);
+        // run on the iGPU if dynamic, NPU otherwise
+        let xpu = if chunk.dynamic { self.igpu } else { self.prefill_xpu() };
+        let timing = *annotated.timing_on(xpu);
+        let reactive = st.is_reactive();
+        d.launch(xpu, timing, reactive, KernelTag::Prefill { req: id });
+    }
+
+    fn schedule(&mut self, d: &mut Driver) {
+        self.schedule_prefill_pipeline(d);
+        self.schedule_decode_pipeline(d);
+        self.force_progress(d);
+    }
+}
+
+impl Engine for AgentXpuEngine {
+    fn name(&self) -> String {
+        "agent.xpu".into()
+    }
+
+    fn run(&mut self, trace: Vec<Request>) -> Result<RunReport> {
+        self.npu_owner = None;
+        let mut d = Driver::new(&self.soc, self.bridge(), trace);
+        loop {
+            d.admit_ready(self.max_chunk);
+            self.schedule(&mut d);
+            if !d.step()? {
+                break;
+            }
+        }
+        self.last_trace = Some(d.trace.clone());
+        d.finish(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::default_soc;
+    use crate::workload::Priority;
+
+    fn geo() -> ModelGeometry {
+        let mut g = crate::config::llama32_3b();
+        g.n_layers = 4; // keep DES unit tests fast
+        g
+    }
+
+    fn engine() -> AgentXpuEngine {
+        AgentXpuEngine::synthetic(geo(), default_soc(), SchedulerConfig::default())
+    }
+
+    fn req(id: u64, prio: Priority, arrival: f64, plen: usize, out: usize) -> Request {
+        Request {
+            id,
+            priority: prio,
+            arrival_us: arrival,
+            prompt: vec![1; plen],
+            max_new_tokens: out,
+            profile: "test",
+        }
+    }
+
+    #[test]
+    fn completes_a_single_reactive_request() {
+        let rep = engine().run(vec![req(1, Priority::Reactive, 0.0, 300, 10)]).unwrap();
+        let m = &rep.reqs[0];
+        assert!(m.finished());
+        assert_eq!(m.output_tokens, 10);
+        assert!(m.ttft_us().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn completes_mixed_load() {
+        let mut trace = vec![];
+        for i in 0..6 {
+            trace.push(req(i, Priority::Proactive, i as f64 * 50_000.0, 256, 12));
+        }
+        trace.push(req(100, Priority::Reactive, 120_000.0, 128, 8));
+        let rep = engine().run(trace).unwrap();
+        assert_eq!(rep.reqs.iter().filter(|m| m.finished()).count(), 7);
+    }
+
+    #[test]
+    fn reactive_latency_unaffected_by_proactive_load() {
+        // the paper's headline property: reactive TTFT stays ~flat as
+        // proactive rate grows (Fig. 7)
+        let solo = engine()
+            .run(vec![req(1, Priority::Reactive, 0.0, 256, 8)])
+            .unwrap();
+        let solo_ttft = solo.reqs[0].ttft_us().unwrap();
+
+        let mut trace: Vec<Request> = (0..10)
+            .map(|i| req(i, Priority::Proactive, i as f64 * 30_000.0, 400, 20))
+            .collect();
+        trace.push(req(100, Priority::Reactive, 200_000.0, 256, 8));
+        let busy = engine().run(trace).unwrap();
+        let busy_ttft = busy
+            .reqs
+            .iter()
+            .find(|m| m.id == 100)
+            .unwrap()
+            .ttft_us()
+            .unwrap();
+        assert!(
+            busy_ttft < 3.0 * solo_ttft,
+            "reactive TTFT under load {busy_ttft} vs solo {solo_ttft}"
+        );
+    }
+
+    #[test]
+    fn preemption_is_counted_under_contention() {
+        // Two long proactive prefills (4 chunks x 4 layers each) occupy
+        // both pipelines; the reactive arrival must displace one of them
+        // at a kernel boundary.
+        let mut trace: Vec<Request> = (0..2)
+            .map(|i| req(i, Priority::Proactive, 0.0, 2048, 4))
+            .collect();
+        trace.push(req(100, Priority::Reactive, 100_000.0, 256, 4));
+        let rep = engine().run(trace).unwrap();
+        assert!(rep.preemptions >= 1, "reactive arrival mid-proactive-prefill must preempt");
+    }
+
+    #[test]
+    fn backfill_happens_with_mixed_decode() {
+        let mut trace: Vec<Request> = (0..4)
+            .map(|i| req(i, Priority::Proactive, 0.0, 128, 30))
+            .collect();
+        trace.push(req(100, Priority::Reactive, 10_000.0, 128, 30));
+        let rep = engine().run(trace).unwrap();
+        assert!(rep.backfills >= 1, "proactive work should backfill");
+    }
+
+    #[test]
+    fn ablation_engines_still_complete() {
+        for (b, p, dg) in
+            [(false, true, true), (true, false, true), (true, true, false), (false, false, false)]
+        {
+            let mut sched = SchedulerConfig::default();
+            sched.backfill = b;
+            sched.preemption = p;
+            sched.disaggregation = dg;
+            let mut e = AgentXpuEngine::synthetic(geo(), default_soc(), sched);
+            let mut trace: Vec<Request> = (0..4)
+                .map(|i| req(i, Priority::Proactive, i as f64 * 40_000.0, 200, 10))
+                .collect();
+            trace.push(req(100, Priority::Reactive, 100_000.0, 150, 6));
+            let rep = e.run(trace).unwrap();
+            assert_eq!(
+                rep.reqs.iter().filter(|m| m.finished()).count(),
+                5,
+                "ablation (backfill={b},preempt={p},disagg={dg}) must finish"
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let mk_trace = || {
+            let mut t: Vec<Request> = (0..5)
+                .map(|i| req(i, Priority::Proactive, i as f64 * 20_000.0, 200, 8))
+                .collect();
+            t.push(req(9, Priority::Reactive, 70_000.0, 100, 5));
+            t
+        };
+        let a = engine().run(mk_trace()).unwrap();
+        let b = engine().run(mk_trace()).unwrap();
+        assert_eq!(a.makespan_us, b.makespan_us);
+        for (x, y) in a.reqs.iter().zip(&b.reqs) {
+            assert_eq!(x.first_token_us, y.first_token_us);
+            assert_eq!(x.done_us, y.done_us);
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Memory management (paper §6.5): the coordinator tracks the footprint
+//! of weights + per-request KV caches against the SoC's physical DRAM
+//! budget, defers *starting* proactive prefills that would not fit, and
+//! — as graceful degradation — evicts a started proactive task (losing
+//! its prefill progress, like scheme (a)) to make room for a reactive
+//! arrival under extreme pressure.
+//!
+//! The paper assumes "moderate workload density without exceeding
+//! available RAM" and treats flash offloading as orthogonal future work;
+//! this governor is the admission-control half that keeps that
+//! assumption true.
+
+use std::collections::HashMap;
+
+use crate::config::{ModelGeometry, SocConfig};
+use crate::engine::{Phase, ReqState};
+use crate::workload::ReqId;
+
+/// Tracks model + KV residency against the DRAM budget.
+#[derive(Debug, Clone)]
+pub struct MemoryGovernor {
+    pub budget_bytes: u64,
+    pub weights_bytes: u64,
+    pub kv_bytes_per_req: u64,
+    /// Requests evicted to admit reactive work (introspection).
+    pub evictions: u64,
+}
+
+impl MemoryGovernor {
+    pub fn new(geo: &ModelGeometry, soc: &SocConfig) -> Self {
+        // weights stream at `weight_bytes`/param; KV caches are f32 in
+        // our runtime (max_seq preallocated per request, both K and V,
+        // all layers)
+        let weights_bytes = (geo.n_params() as f64 * geo.weight_bytes) as u64;
+        let kv_bytes_per_req = (2 * geo.n_layers * geo.cache_elems() * 4) as u64;
+        Self {
+            budget_bytes: (soc.dram_gb * 1e9) as u64,
+            weights_bytes,
+            kv_bytes_per_req,
+            evictions: 0,
+        }
+    }
+
+    /// A request holds KV memory once its prefill has started (progress
+    /// or a running kernel) until it completes.
+    fn holds_memory(st: &ReqState) -> bool {
+        match st.phase {
+            Phase::Prefilling => st.running || st.chunk_idx > 0 || st.layer_idx > 0,
+            Phase::Decoding => true,
+            Phase::Done => false,
+        }
+    }
+
+    /// Current resident footprint (bytes).
+    pub fn footprint(&self, states: &HashMap<ReqId, ReqState>) -> u64 {
+        let held = states.values().filter(|s| Self::holds_memory(s)).count() as u64;
+        self.weights_bytes + held * self.kv_bytes_per_req
+    }
+
+    /// Would starting one more request fit the budget?
+    pub fn can_start(&self, states: &HashMap<ReqId, ReqState>) -> bool {
+        self.footprint(states) + self.kv_bytes_per_req <= self.budget_bytes
+    }
+
+    /// Graceful-degradation victim for a reactive admission: the
+    /// *least-progressed* started proactive prefill that is not
+    /// currently running (its context is recomputable; decode-phase
+    /// tasks are never evicted — their work is nearly done).
+    pub fn eviction_victim(&self, states: &HashMap<ReqId, ReqState>) -> Option<ReqId> {
+        states
+            .values()
+            .filter(|s| {
+                !s.is_reactive()
+                    && s.phase == Phase::Prefilling
+                    && !s.running
+                    && Self::holds_memory(s)
+            })
+            .min_by_key(|s| (s.chunk_idx, s.layer_idx, s.id()))
+            .map(|s| s.id())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{default_soc, llama32_3b};
+    use crate::engine::ExecBridge;
+    use crate::workload::{Priority, Request};
+
+    fn mk_state(id: u64, prio: Priority, progress: usize) -> ReqState {
+        let mut geo = llama32_3b();
+        geo.n_layers = 4;
+        let bridge = ExecBridge::synthetic(geo);
+        let mut st = bridge.init_state(
+            Request {
+                id,
+                priority: prio,
+                arrival_us: 0.0,
+                prompt: vec![1; 600],
+                max_new_tokens: 4,
+                profile: "mem",
+            },
+            512,
+        );
+        st.layer_idx = progress;
+        st
+    }
+
+    fn gov() -> MemoryGovernor {
+        let mut geo = llama32_3b();
+        geo.n_layers = 4;
+        MemoryGovernor::new(&geo, &default_soc())
+    }
+
+    #[test]
+    fn footprint_counts_only_started_requests() {
+        let g = gov();
+        let mut states = HashMap::new();
+        states.insert(1, mk_state(1, Priority::Proactive, 0)); // not started
+        assert_eq!(g.footprint(&states), g.weights_bytes);
+        states.insert(2, mk_state(2, Priority::Proactive, 2)); // mid-prefill
+        assert_eq!(g.footprint(&states), g.weights_bytes + g.kv_bytes_per_req);
+        let mut done = mk_state(3, Priority::Proactive, 1);
+        done.phase = Phase::Done;
+        states.insert(3, done);
+        assert_eq!(g.footprint(&states), g.weights_bytes + g.kv_bytes_per_req);
+    }
+
+    #[test]
+    fn budget_gates_new_starts() {
+        let mut g = gov();
+        // budget: weights + exactly 2 KV slots
+        g.budget_bytes = g.weights_bytes + 2 * g.kv_bytes_per_req;
+        let mut states = HashMap::new();
+        assert!(g.can_start(&states));
+        states.insert(1, mk_state(1, Priority::Proactive, 1));
+        assert!(g.can_start(&states));
+        states.insert(2, mk_state(2, Priority::Proactive, 1));
+        assert!(!g.can_start(&states), "third start must be deferred");
+    }
+
+    #[test]
+    fn eviction_picks_least_progressed_waiting_proactive() {
+        let g = gov();
+        let mut states = HashMap::new();
+        states.insert(1, mk_state(1, Priority::Proactive, 3));
+        states.insert(2, mk_state(2, Priority::Proactive, 1));
+        let mut rt = mk_state(9, Priority::Reactive, 2);
+        rt.phase = Phase::Prefilling;
+        states.insert(9, rt);
+        assert_eq!(g.eviction_victim(&states), Some(2));
+        // a running victim is untouchable (kernel atomicity)
+        states.get_mut(&2).unwrap().running = true;
+        assert_eq!(g.eviction_victim(&states), Some(1));
+        // decoding tasks are never evicted
+        states.get_mut(&1).unwrap().phase = Phase::Decoding;
+        states.get_mut(&2).unwrap().running = false;
+        assert_eq!(g.eviction_victim(&states), Some(2));
+    }
+
+    #[test]
+    fn paper_scale_budget_holds_dozens_of_requests() {
+        let geo = llama32_3b();
+        let g = MemoryGovernor::new(&geo, &default_soc());
+        // 3.2 GB weights in 32 GB DRAM; KV (f32, 2048 ctx) ≈ 0.47 GB/req
+        let slots = (g.budget_bytes - g.weights_bytes) / g.kv_bytes_per_req;
+        assert!((30..200).contains(&slots), "slots {slots}");
+    }
+}

@@ -1,0 +1,28 @@
+//! The Agent.xpu online workload-aware scheduler (paper §6).
+//!
+//! Architecture (Fig. 5): a dual-queue admission front (real-time
+//! reactive vs best-effort proactive), task decomposition onto the HEG,
+//! and the central **XPU coordinator** loop that owns:
+//!
+//! - **hetero-disaggregation** (§5.2): static chunked prefill → NPU,
+//!   dynamic margin + attention + decode → iGPU, with elastic rebinding;
+//! - **kernel-level preemption** (§6.2): reactive tasks take the prefill
+//!   pipeline at the next kernel boundary; proactive contexts checkpoint
+//!   for free in unified memory;
+//! - **slack-aware backfill** (§6.3): proactive decodes join reactive
+//!   decode batches at iteration boundaries (intra-XPU), proactive
+//!   prefill fills NPU/iGPU bubbles (inter-XPU), ranked by TFLOPS/W;
+//! - **memory-aware dispatch** (§6.4, Algorithm 1): a three-tier policy
+//!   over the bandwidth-pressure estimate keeps memory-bound kernels
+//!   from destructive co-execution;
+//! - **starvation prevention + dynamic load balancing** (§6.5).
+
+mod dispatch;
+mod engine_impl;
+mod memory;
+mod select;
+
+pub use dispatch::{DispatchDecision, dispatch_check};
+pub use engine_impl::AgentXpuEngine;
+pub use memory::MemoryGovernor;
+pub use select::{decode_lanes, resume_order};

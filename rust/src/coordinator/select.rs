@@ -1,0 +1,211 @@
+//! Candidate selection: proactive resumption ordering (§6.2) and decode
+//! batch formation / intra-XPU backfill (§6.3).
+
+use std::collections::HashMap;
+
+use crate::engine::{Phase, ReqState};
+use crate::heg::Annotator;
+use crate::workload::ReqId;
+
+/// Resumption strategy (§6.2): among paused proactive prefills, pick
+/// (1) starved tasks first — pending longer than `starvation_age_ms`,
+///     oldest first — to prevent indefinite postponement (§6.5);
+/// (2) otherwise the lowest estimated-time-to-completion (ETC), so tasks
+///     enter the decode pipeline sooner and feed its throughput.
+pub fn resume_order(
+    states: &HashMap<ReqId, ReqState>,
+    candidates: &mut Vec<ReqId>,
+    ann: &Annotator,
+    npu: usize,
+    now_us: f64,
+    starvation_age_us: f64,
+) {
+    let n_layers = ann.geo.n_layers;
+    // Exact ETC (§6.2): sum each remaining chunk's per-layer kernel time
+    // over its remaining layers — the annotations make this a lookup.
+    let etc = |id: &ReqId| -> f64 {
+        let st = &states[id];
+        let mut total = 0.0;
+        for (ci, chunk) in st.plan.iter().enumerate().skip(st.chunk_idx) {
+            let per = ann.prefill_kernel(chunk).timings[npu].nominal_us;
+            let layers = if ci == st.chunk_idx {
+                n_layers - st.layer_idx
+            } else {
+                n_layers
+            };
+            total += per * layers as f64;
+        }
+        total
+    };
+    candidates.sort_by(|a, b| {
+        let (sa, sb) = (&states[a], &states[b]);
+        let (age_a, age_b) = (now_us - sa.enqueued_at_us, now_us - sb.enqueued_at_us);
+        let (starved_a, starved_b) =
+            (age_a > starvation_age_us, age_b > starvation_age_us);
+        match (starved_a, starved_b) {
+            (true, false) => std::cmp::Ordering::Less,
+            (false, true) => std::cmp::Ordering::Greater,
+            (true, true) => age_b.total_cmp(&age_a), // older first
+            (false, false) => etc(a).total_cmp(&etc(b)).then(a.cmp(b)),
+        }
+    });
+}
+
+/// Decode batch formation (§6.3 intra-XPU backfill / adaptive batching):
+/// reactive lanes always join; proactive lanes backfill at the iteration
+/// boundary up to `b_max` when allowed.  Returns (lanes, any_reactive).
+pub fn decode_lanes(
+    states: &HashMap<ReqId, ReqState>,
+    b_max: usize,
+    allow_proactive_join: bool,
+) -> (Vec<ReqId>, bool) {
+    let mut reactive: Vec<ReqId> = vec![];
+    let mut proactive: Vec<(f64, ReqId)> = vec![];
+    for st in states.values() {
+        if st.phase != Phase::Decoding || st.running {
+            continue;
+        }
+        if st.is_reactive() {
+            reactive.push(st.id());
+        } else {
+            proactive.push((st.enqueued_at_us, st.id()));
+        }
+    }
+    reactive.sort_unstable();
+    let any_reactive = !reactive.is_empty();
+    let mut lanes = reactive;
+    if allow_proactive_join || lanes.is_empty() {
+        proactive.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        for (_, id) in proactive {
+            if lanes.len() >= b_max {
+                break;
+            }
+            lanes.push(id);
+        }
+    }
+    lanes.truncate(b_max);
+    (lanes, any_reactive)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{default_soc, llama32_3b};
+    use crate::engine::ExecBridge;
+    use crate::soc::XpuModel;
+    use crate::workload::{Priority, Request};
+
+    fn mk_states(specs: &[(u64, Priority, Phase, f64)]) -> HashMap<ReqId, ReqState> {
+        let mut geo = llama32_3b();
+        geo.n_layers = 4;
+        let bridge = ExecBridge::synthetic(geo);
+        specs
+            .iter()
+            .map(|&(id, prio, phase, enq)| {
+                let req = Request {
+                    id,
+                    priority: prio,
+                    arrival_us: 0.0,
+                    prompt: vec![1; 300],
+                    max_new_tokens: 8,
+                    profile: "test",
+                };
+                let mut st = bridge.init_state(req, 512);
+                st.phase = phase;
+                st.enqueued_at_us = enq;
+                (id, st)
+            })
+            .collect()
+    }
+
+    fn ann() -> Annotator {
+        let mut geo = llama32_3b();
+        geo.n_layers = 4;
+        Annotator::new(
+            geo,
+            default_soc().xpus.iter().cloned().map(XpuModel::new).collect(),
+        )
+    }
+
+    #[test]
+    fn starved_tasks_resume_first_oldest_first() {
+        let states = mk_states(&[
+            (1, Priority::Proactive, Phase::Prefilling, 0.0),
+            (2, Priority::Proactive, Phase::Prefilling, 100.0),
+            (3, Priority::Proactive, Phase::Prefilling, 5_000_000.0),
+        ]);
+        let mut c = vec![3, 2, 1];
+        // now=6s, threshold 2s → tasks 1 and 2 are starved, 3 is not
+        resume_order(&states, &mut c, &ann(), 0, 6e6, 2e6);
+        assert_eq!(&c[..2], &[1, 2], "starved oldest-first");
+        assert_eq!(c[2], 3);
+    }
+
+    #[test]
+    fn unstarved_ordered_by_etc() {
+        let mut states = mk_states(&[
+            (1, Priority::Proactive, Phase::Prefilling, 0.0),
+            (2, Priority::Proactive, Phase::Prefilling, 0.0),
+        ]);
+        // give task 2 more progress → lower ETC
+        states.get_mut(&2).unwrap().chunk_idx = 1;
+        let mut c = vec![1, 2];
+        resume_order(&states, &mut c, &ann(), 0, 1000.0, 1e12);
+        assert_eq!(c, vec![2, 1], "lower ETC first");
+    }
+
+    #[test]
+    fn decode_lanes_reactive_first_then_backfill() {
+        let states = mk_states(&[
+            (1, Priority::Proactive, Phase::Decoding, 10.0),
+            (2, Priority::Reactive, Phase::Decoding, 50.0),
+            (3, Priority::Proactive, Phase::Decoding, 5.0),
+            (4, Priority::Proactive, Phase::Prefilling, 0.0),
+        ]);
+        let (lanes, any_rt) = decode_lanes(&states, 8, true);
+        assert!(any_rt);
+        assert_eq!(lanes[0], 2, "reactive lane leads");
+        // proactive join ordered by wait time
+        assert_eq!(&lanes[1..], &[3, 1]);
+    }
+
+    #[test]
+    fn no_proactive_join_when_disallowed_but_reactive_present() {
+        let states = mk_states(&[
+            (1, Priority::Proactive, Phase::Decoding, 10.0),
+            (2, Priority::Reactive, Phase::Decoding, 50.0),
+        ]);
+        let (lanes, any_rt) = decode_lanes(&states, 8, false);
+        assert!(any_rt);
+        assert_eq!(lanes, vec![2]);
+        // ... but proactive-only batches still form
+        let states = mk_states(&[
+            (1, Priority::Proactive, Phase::Decoding, 10.0),
+            (3, Priority::Proactive, Phase::Decoding, 5.0),
+        ]);
+        let (lanes, any_rt) = decode_lanes(&states, 8, false);
+        assert!(!any_rt);
+        assert_eq!(lanes.len(), 2);
+    }
+
+    #[test]
+    fn b_max_caps_the_batch() {
+        let specs: Vec<_> = (1..=10)
+            .map(|i| (i as u64, Priority::Proactive, Phase::Decoding, i as f64))
+            .collect();
+        let states = mk_states(&specs);
+        let (lanes, _) = decode_lanes(&states, 4, true);
+        assert_eq!(lanes.len(), 4);
+    }
+
+    #[test]
+    fn running_lanes_are_excluded() {
+        let mut states = mk_states(&[
+            (1, Priority::Proactive, Phase::Decoding, 1.0),
+            (2, Priority::Proactive, Phase::Decoding, 2.0),
+        ]);
+        states.get_mut(&1).unwrap().running = true;
+        let (lanes, _) = decode_lanes(&states, 8, true);
+        assert_eq!(lanes, vec![2]);
+    }
+}

@@ -1,0 +1,263 @@
+//! The numerics bridge: when the DES declares a kernel finished, this
+//! executes its *effect* — either for real through the PJRT runtime
+//! (`ModelExecutor`) or synthetically (timing-only sweeps).
+//!
+//! The timing/numerics split is the core of the hardware substitution
+//! (DESIGN.md §1): scheduling decisions consume virtual time from the
+//! SoC simulator; tokens and KV caches are still bit-exact when
+//! `real_compute` is on.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::ModelGeometry;
+use crate::heg::plan_chunks;
+use crate::runtime::{KvCache, ModelExecutor};
+use crate::workload::Request;
+
+use super::reqstate::{Phase, ReqState};
+
+/// Synthetic next-token function (timing-only mode): deterministic,
+/// in-vocab, and distinct per position so traces are inspectable.
+fn synth_token(pos: usize, vocab: usize) -> i32 {
+    ((pos.wrapping_mul(1_103_515_245).wrapping_add(12_345)) % vocab.max(1)) as i32
+}
+
+/// Executes kernel effects for one model.
+pub struct ExecBridge {
+    exec: Option<Arc<ModelExecutor>>,
+    pub geo: ModelGeometry,
+}
+
+impl ExecBridge {
+    pub fn real(exec: Arc<ModelExecutor>) -> Self {
+        let geo = exec.geo().clone();
+        Self { exec: Some(exec), geo }
+    }
+
+    pub fn synthetic(geo: ModelGeometry) -> Self {
+        Self { exec: None, geo }
+    }
+
+    pub fn is_real(&self) -> bool {
+        self.exec.is_some()
+    }
+
+    /// Build the initial serving context for an admitted request.
+    pub fn init_state(&self, req: Request, max_chunk: usize) -> ReqState {
+        let plan = plan_chunks(&self.geo, req.prompt_len(), max_chunk);
+        let cache = self.exec.as_ref().map(|_| KvCache::new(&self.geo));
+        ReqState::new(req, plan, cache)
+    }
+
+    /// Effect of the prefill kernel at (st.chunk_idx, st.layer_idx);
+    /// advances the progress cursor and, at the end of the last chunk,
+    /// emits the first token (TTFT point).  Returns `true` when prefill
+    /// completed.
+    pub fn prefill_kernel_done(&self, st: &mut ReqState) -> Result<bool> {
+        debug_assert_eq!(st.phase, Phase::Prefilling);
+        let chunk = *st.current_chunk().expect("prefill kernel beyond plan");
+        let n_layers = self.geo.n_layers;
+
+        if let Some(exec) = &self.exec {
+            let cache = st.cache.as_mut().expect("real mode has cache");
+            if st.layer_idx == 0 {
+                let toks =
+                    &st.req.prompt[chunk.pos..chunk.pos + chunk.valid];
+                st.x = Some(exec.embed(toks, chunk.variant)?);
+            }
+            let x = st.x.take().expect("activation buffer");
+            let y = exec.layer_prefill(
+                chunk.variant,
+                st.layer_idx,
+                &x,
+                cache,
+                chunk.pos,
+            )?;
+            st.x = Some(y);
+        }
+
+        st.layer_idx += 1;
+        if st.layer_idx < n_layers {
+            return Ok(false);
+        }
+        // chunk finished
+        st.layer_idx = 0;
+        st.chunk_idx += 1;
+        st.pos = chunk.pos + chunk.valid;
+        if let Some(cache) = st.cache.as_mut() {
+            cache.pos = st.pos;
+        }
+        if st.chunk_idx < st.plan.len() {
+            return Ok(false);
+        }
+        // prefill complete → first token
+        let tok = if let Some(exec) = &self.exec {
+            let x = st.x.as_ref().expect("activation buffer");
+            let last = x.row(chunk.valid - 1);
+            st.x = Some(last.clone());
+            exec.head(&last)?[0]
+        } else {
+            synth_token(st.pos, self.geo.vocab)
+        };
+        st.tokens.push(tok);
+        st.last_token = Some(tok);
+        st.metrics.output_tokens = st.tokens.len();
+        st.phase = if st.decode_iterations_left() == 0 {
+            Phase::Done
+        } else {
+            Phase::Decoding
+        };
+        Ok(true)
+    }
+
+    /// Effect of one batched decode iteration over `lanes` (embed last
+    /// token → all layers → head → next token per lane).  Marks lanes
+    /// `Done` when they hit their token budget.
+    pub fn decode_iter_done(&self, lanes: &mut [&mut ReqState]) -> Result<()> {
+        debug_assert!(!lanes.is_empty());
+        if let Some(exec) = &self.exec {
+            let b = lanes.len();
+            let toks: Vec<i32> = lanes
+                .iter()
+                .map(|s| s.last_token.expect("decode lane without token"))
+                .collect();
+            let bv = self.geo.batch_for(b).unwrap_or(b);
+            let x_pad = exec.embed(&toks, bv)?;
+            // drop pad rows
+            let d = self.geo.d_model;
+            let mut x = crate::runtime::HostTensor::new(
+                x_pad.data[..b * d].to_vec(),
+                &[b, d],
+            );
+            {
+                let mut caches: Vec<&mut KvCache> = lanes
+                    .iter_mut()
+                    .map(|s| s.cache.as_mut().expect("real mode has cache"))
+                    .collect();
+                for layer in 0..self.geo.n_layers {
+                    x = exec.layer_decode(layer, &x, &mut caches)?;
+                }
+            }
+            let next = exec.head(&x)?;
+            for (i, st) in lanes.iter_mut().enumerate() {
+                st.pos += 1;
+                if let Some(c) = st.cache.as_mut() {
+                    c.pos = st.pos;
+                }
+                st.x = Some(x.row(i));
+                st.tokens.push(next[i]);
+                st.last_token = Some(next[i]);
+            }
+        } else {
+            for st in lanes.iter_mut() {
+                st.pos += 1;
+                let tok = synth_token(st.pos, self.geo.vocab);
+                st.tokens.push(tok);
+                st.last_token = Some(tok);
+            }
+        }
+        for st in lanes.iter_mut() {
+            st.metrics.output_tokens = st.tokens.len();
+            if st.decode_iterations_left() == 0 {
+                st.phase = Phase::Done;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Priority;
+
+    fn synth_bridge() -> ExecBridge {
+        let mut geo = crate::config::llama32_3b();
+        geo.n_layers = 2;
+        geo.chunk_sizes = vec![16, 32];
+        ExecBridge::synthetic(geo)
+    }
+
+    fn req(plen: usize, maxnew: usize) -> Request {
+        Request {
+            id: 1,
+            priority: Priority::Reactive,
+            arrival_us: 0.0,
+            prompt: vec![7; plen],
+            max_new_tokens: maxnew,
+            profile: "test",
+        }
+    }
+
+    #[test]
+    fn prefill_walks_chunks_and_layers() {
+        let b = synth_bridge();
+        let mut st = b.init_state(req(40, 3), 32);
+        // plan: 32 + margin 8 → 2 chunks × 2 layers = 4 kernels
+        assert_eq!(st.plan.len(), 2);
+        assert!(!b.prefill_kernel_done(&mut st).unwrap());
+        assert_eq!((st.chunk_idx, st.layer_idx), (0, 1));
+        assert!(!b.prefill_kernel_done(&mut st).unwrap());
+        assert_eq!((st.chunk_idx, st.layer_idx), (1, 0));
+        assert_eq!(st.pos, 32);
+        assert!(!b.prefill_kernel_done(&mut st).unwrap());
+        assert!(b.prefill_kernel_done(&mut st).unwrap());
+        assert_eq!(st.phase, Phase::Decoding);
+        assert_eq!(st.tokens.len(), 1, "first token at prefill completion");
+        assert_eq!(st.pos, 40);
+    }
+
+    #[test]
+    fn decode_iterations_finish_request() {
+        let b = synth_bridge();
+        let mut st = b.init_state(req(16, 3), 32);
+        for _ in 0..b.geo.n_layers {
+            b.prefill_kernel_done(&mut st).unwrap();
+        }
+        assert_eq!(st.phase, Phase::Decoding);
+        b.decode_iter_done(&mut [&mut st]).unwrap();
+        assert_eq!(st.tokens.len(), 2);
+        assert_eq!(st.phase, Phase::Decoding);
+        b.decode_iter_done(&mut [&mut st]).unwrap();
+        assert_eq!(st.tokens.len(), 3);
+        assert_eq!(st.phase, Phase::Done);
+        assert_eq!(st.metrics.output_tokens, 3);
+    }
+
+    #[test]
+    fn single_token_request_done_at_prefill() {
+        let b = synth_bridge();
+        let mut st = b.init_state(req(8, 1), 32);
+        for _ in 0..b.geo.n_layers {
+            b.prefill_kernel_done(&mut st).unwrap();
+        }
+        assert_eq!(st.phase, Phase::Done);
+        assert_eq!(st.tokens.len(), 1);
+    }
+
+    #[test]
+    fn batched_decode_advances_all_lanes() {
+        let b = synth_bridge();
+        let mut s1 = b.init_state(req(16, 5), 32);
+        let mut s2 = b.init_state(req(16, 5), 32);
+        for st in [&mut s1, &mut s2] {
+            for _ in 0..b.geo.n_layers {
+                b.prefill_kernel_done(st).unwrap();
+            }
+        }
+        b.decode_iter_done(&mut [&mut s1, &mut s2]).unwrap();
+        assert_eq!(s1.tokens.len(), 2);
+        assert_eq!(s2.tokens.len(), 2);
+        assert_eq!(s1.pos, 17);
+    }
+
+    #[test]
+    fn synthetic_tokens_in_vocab() {
+        for pos in 0..1000 {
+            let t = synth_token(pos, 2048);
+            assert!((0..2048).contains(&t));
+        }
+    }
+}

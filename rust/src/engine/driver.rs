@@ -1,0 +1,357 @@
+//! The shared DES event loop: every engine (Agent.xpu and the
+//! baselines) is a scheduling policy plugged into this driver.
+//!
+//! Responsibilities: arrival admission, kernel-completion effects (via
+//! [`ExecBridge`]), lifecycle metrics (TTFT at prefill completion,
+//! completion time at token budget), and the final [`RunReport`].
+
+use std::collections::{HashMap, VecDeque};
+
+use anyhow::{Context, Result, bail};
+
+use crate::config::SocConfig;
+use crate::metrics::RunReport;
+use crate::soc::{Completion, KernelTiming, LaunchSpec, RunId, SocSim};
+use crate::workload::{ReqId, Request};
+
+use super::bridge::ExecBridge;
+use super::reqstate::{Phase, ReqState};
+use crate::trace::Trace;
+
+/// Semantic meaning of an in-flight kernel.
+#[derive(Debug, Clone, PartialEq)]
+pub enum KernelTag {
+    /// The next prefill kernel (st.chunk_idx, st.layer_idx) of `req`.
+    Prefill { req: ReqId },
+    /// One batched decode iteration over `lanes`.
+    DecodeIter { lanes: Vec<ReqId> },
+}
+
+impl KernelTag {
+    pub fn reqs(&self) -> Vec<ReqId> {
+        match self {
+            KernelTag::Prefill { req } => vec![*req],
+            KernelTag::DecodeIter { lanes } => lanes.clone(),
+        }
+    }
+}
+
+/// An engine = a scheduling policy over the shared driver.
+pub trait Engine {
+    fn name(&self) -> String;
+    fn run(&mut self, trace: Vec<Request>) -> Result<RunReport>;
+}
+
+/// Shared DES driver state.
+pub struct Driver {
+    pub sim: SocSim,
+    pub bridge: ExecBridge,
+    pub states: HashMap<ReqId, ReqState>,
+    pending: VecDeque<Request>,
+    inflight: HashMap<RunId, KernelTag>,
+    pub preemptions: u64,
+    pub backfills: u64,
+    /// Kernel-level execution trace (always recorded; events are tiny).
+    pub trace: Trace,
+    total_requests: usize,
+    finished: usize,
+}
+
+impl Driver {
+    pub fn new(soc: &SocConfig, bridge: ExecBridge, mut trace: Vec<Request>) -> Self {
+        trace.sort_by(|a, b| a.arrival_us.total_cmp(&b.arrival_us));
+        Self {
+            sim: SocSim::new(soc),
+            bridge,
+            states: HashMap::new(),
+            total_requests: trace.len(),
+            pending: trace.into(),
+            inflight: HashMap::new(),
+            preemptions: 0,
+            backfills: 0,
+            trace: Trace::default(),
+            finished: 0,
+        }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.sim.now_us
+    }
+
+    pub fn next_arrival_us(&self) -> Option<f64> {
+        self.pending.front().map(|r| r.arrival_us)
+    }
+
+    /// Admit every request whose arrival time has passed; returns ids.
+    pub fn admit_ready(&mut self, max_chunk: usize) -> Vec<ReqId> {
+        let mut out = vec![];
+        while self
+            .pending
+            .front()
+            .map(|r| r.arrival_us <= self.now() + 1e-9)
+            .unwrap_or(false)
+        {
+            let req = self.pending.pop_front().unwrap();
+            let id = req.id;
+            let mut st = self.bridge.init_state(req, max_chunk);
+            st.enqueued_at_us = self.now();
+            self.states.insert(id, st);
+            out.push(id);
+        }
+        out
+    }
+
+    /// Launch a kernel; marks all tagged requests as running.
+    pub fn launch(&mut self, xpu: usize, timing: KernelTiming, reactive: bool, tag: KernelTag) {
+        for id in tag.reqs() {
+            let st = self.states.get_mut(&id).expect("launch for unknown req");
+            assert!(!st.running, "request {id} already has a kernel in flight");
+            st.running = true;
+            st.preempt_counted = false;
+        }
+        let run = self.sim.launch(xpu, LaunchSpec { timing, reactive });
+        self.inflight.insert(run, tag);
+    }
+
+    /// Abort the kernel on `xpu` (scheme-(a) instant preemption).  The
+    /// tagged requests stop running; the caller decides what progress
+    /// they lose.  Returns the aborted tag.
+    pub fn cancel(&mut self, xpu: usize) -> Option<KernelTag> {
+        let run = self.sim.cancel(xpu)?;
+        let tag = self.inflight.remove(&run).expect("cancelled unknown run");
+        for id in tag.reqs() {
+            if let Some(st) = self.states.get_mut(&id) {
+                st.running = false;
+            }
+        }
+        Some(tag)
+    }
+
+    /// Advance virtual time to the next completion or arrival, applying
+    /// kernel effects.  Returns false when the run is over (no work, no
+    /// arrivals).
+    pub fn step(&mut self) -> Result<bool> {
+        let next_fin = self.sim.next_event_in().map(|dt| self.now() + dt);
+        let next_arr = self.next_arrival_us();
+        let target = match (next_fin, next_arr) {
+            (Some(f), Some(a)) => f.min(a),
+            (Some(f), None) => f,
+            (None, Some(a)) => a,
+            (None, None) => return Ok(false),
+        };
+        let completions = self.sim.advance_until(target);
+        for c in completions {
+            self.apply_completion(&c)?;
+        }
+        Ok(true)
+    }
+
+    fn apply_completion(&mut self, c: &Completion) -> Result<()> {
+        let tag = self
+            .inflight
+            .remove(&c.id)
+            .context("completion for unknown run")?;
+        let (label, reactive) = match &tag {
+            KernelTag::Prefill { req } => (
+                format!("prefill:{req}"),
+                self.states.get(req).map(|s| s.is_reactive()).unwrap_or(false),
+            ),
+            KernelTag::DecodeIter { lanes } => (
+                format!("decode:b{}", lanes.len()),
+                lanes
+                    .iter()
+                    .any(|id| self.states.get(id).map(|s| s.is_reactive()).unwrap_or(false)),
+            ),
+        };
+        self.trace.record(c.xpu, c.started_us, c.finished_us, label, reactive);
+        match &tag {
+            KernelTag::Prefill { req } => {
+                let mut st = self.states.remove(req).context("unknown req")?;
+                st.running = false;
+                let done = self.bridge.prefill_kernel_done(&mut st)?;
+                if done {
+                    st.metrics.first_token_us = Some(c.finished_us);
+                    st.enqueued_at_us = c.finished_us;
+                }
+                if st.phase == Phase::Done {
+                    st.metrics.done_us = Some(c.finished_us);
+                    self.finished += 1;
+                }
+                self.states.insert(*req, st);
+            }
+            KernelTag::DecodeIter { lanes } => {
+                let mut taken: Vec<ReqState> = lanes
+                    .iter()
+                    .map(|id| self.states.remove(id).context("unknown lane"))
+                    .collect::<Result<_>>()?;
+                {
+                    let mut refs: Vec<&mut ReqState> = taken.iter_mut().collect();
+                    self.bridge.decode_iter_done(&mut refs)?;
+                }
+                for mut st in taken {
+                    st.running = false;
+                    if st.phase == Phase::Done {
+                        st.metrics.done_us = Some(c.finished_us);
+                        self.finished += 1;
+                    }
+                    self.states.insert(st.id(), st);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn all_done(&self) -> bool {
+        self.pending.is_empty() && self.finished == self.total_requests
+    }
+
+    pub fn unfinished(&self) -> usize {
+        self.total_requests - self.finished
+    }
+
+    /// Requests in a given phase that do not have a kernel in flight.
+    pub fn idle_in_phase(&self, phase: Phase) -> Vec<ReqId> {
+        let mut v: Vec<ReqId> = self
+            .states
+            .values()
+            .filter(|s| s.phase == phase && !s.running)
+            .map(|s| s.id())
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn finish(self, engine: String) -> Result<RunReport> {
+        if !self.all_done() {
+            bail!(
+                "{engine}: run ended with {} unfinished requests",
+                self.unfinished()
+            );
+        }
+        let makespan_us = self.sim.now_us;
+        Ok(RunReport {
+            engine,
+            reqs: {
+                let mut v: Vec<_> =
+                    self.states.into_values().map(|s| s.metrics).collect();
+                v.sort_by_key(|m| m.id);
+                v
+            },
+            xpus: self.sim.snapshot(),
+            makespan_us,
+            total_energy_j: self.sim.total_energy_j(),
+            peak_power_w: self.sim.peak_power_w,
+            mean_bw_gbps: self.sim.mean_bandwidth_gbps(),
+            preemptions: self.preemptions,
+            backfills: self.backfills,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::default_soc;
+    use crate::heg::Annotator;
+    use crate::soc::XpuModel;
+    use crate::workload::Priority;
+
+    fn mk_driver(traces: Vec<Request>) -> (Driver, Annotator) {
+        let mut geo = crate::config::llama32_3b();
+        geo.n_layers = 2;
+        let soc = default_soc();
+        let ann = Annotator::new(
+            geo.clone(),
+            soc.xpus.iter().cloned().map(XpuModel::new).collect(),
+        );
+        (Driver::new(&soc, ExecBridge::synthetic(geo), traces), ann)
+    }
+
+    fn req(id: u64, arrival: f64, plen: usize, maxnew: usize) -> Request {
+        Request {
+            id,
+            priority: Priority::Proactive,
+            arrival_us: arrival,
+            prompt: vec![3; plen],
+            max_new_tokens: maxnew,
+            profile: "test",
+        }
+    }
+
+    /// A trivial FCFS policy good enough to exercise the driver.
+    fn run_fcfs(trace: Vec<Request>) -> RunReport {
+        let (mut d, ann) = mk_driver(trace);
+        let npu = d.sim.xpu_index("npu").unwrap();
+        let igpu = d.sim.xpu_index("igpu").unwrap();
+        loop {
+            d.admit_ready(512);
+            // NPU: first prefilling request (by id)
+            if !d.sim.busy(npu) {
+                if let Some(&id) = d.idle_in_phase(Phase::Prefilling).first() {
+                    let chunk = *d.states[&id].current_chunk().unwrap();
+                    let a = ann.prefill_kernel(&chunk);
+                    let t = *a.timing_on(npu);
+                    d.launch(npu, t, false, KernelTag::Prefill { req: id });
+                }
+            }
+            // iGPU: batch every idle decoder
+            if !d.sim.busy(igpu) {
+                let lanes = d.idle_in_phase(Phase::Decoding);
+                if !lanes.is_empty() {
+                    let avg = d.states[&lanes[0]].pos;
+                    let a = ann.decode_iter(lanes.len(), avg);
+                    let t = *a.timing_on(igpu);
+                    d.launch(igpu, t, false, KernelTag::DecodeIter { lanes });
+                }
+            }
+            if !d.step().unwrap() {
+                break;
+            }
+        }
+        d.finish("fcfs-test".into()).unwrap()
+    }
+
+    #[test]
+    fn driver_completes_single_request() {
+        let rep = run_fcfs(vec![req(1, 0.0, 100, 5)]);
+        assert_eq!(rep.reqs.len(), 1);
+        let m = &rep.reqs[0];
+        assert!(m.finished());
+        assert_eq!(m.output_tokens, 5);
+        assert!(m.ttft_us().unwrap() > 0.0);
+        assert!(m.done_us.unwrap() > m.first_token_us.unwrap());
+    }
+
+    #[test]
+    fn driver_completes_overlapping_requests() {
+        let rep = run_fcfs(vec![
+            req(1, 0.0, 300, 8),
+            req(2, 1000.0, 200, 4),
+            req(3, 2000.0, 64, 2),
+        ]);
+        assert_eq!(rep.reqs.iter().filter(|m| m.finished()).count(), 3);
+        // arrivals respected: nothing starts before it arrives
+        for m in &rep.reqs {
+            assert!(m.first_token_us.unwrap() > m.arrival_us);
+        }
+        assert!(rep.makespan_us > 0.0);
+        assert!(rep.total_energy_j > 0.0);
+    }
+
+    #[test]
+    fn late_arrivals_wake_the_driver() {
+        // second request arrives long after the first finishes — the
+        // driver must jump the clock to it
+        let rep = run_fcfs(vec![req(1, 0.0, 64, 2), req(2, 5e6, 64, 2)]);
+        assert_eq!(rep.reqs.iter().filter(|m| m.finished()).count(), 2);
+        let m2 = rep.reqs.iter().find(|m| m.id == 2).unwrap();
+        assert!(m2.first_token_us.unwrap() >= 5e6);
+    }
+
+    #[test]
+    fn finish_fails_with_unfinished_requests() {
+        let (d, _) = mk_driver(vec![req(1, 0.0, 64, 2)]);
+        // never scheduled anything
+        assert!(d.finish("broken".into()).is_err());
+    }
+}

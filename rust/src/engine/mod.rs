@@ -1,0 +1,18 @@
+//! Engine plumbing shared by Agent.xpu and every baseline:
+//!
+//! - [`ReqState`] — the paper's `ReqContext` (§6.2): KV cache pointers,
+//!   layer/chunk progress, remaining kernels, activation buffer.  Because
+//!   it lives in unified host memory, a preemption checkpoint is free.
+//! - [`ExecBridge`] — runs kernel *numerics* (real PJRT or synthetic)
+//!   when the DES says a kernel finished.
+//! - [`Driver`] — the DES event loop: arrivals, kernel completions,
+//!   metrics collection.
+//! - [`Engine`] — the trait the figure harnesses run.
+
+mod bridge;
+mod driver;
+mod reqstate;
+
+pub use bridge::ExecBridge;
+pub use driver::{Driver, Engine, KernelTag};
+pub use reqstate::{Phase, ReqState};

@@ -1,0 +1,193 @@
+//! Per-request serving state — the paper's preemption context (§6.2):
+//!
+//! ```c
+//! struct ReqContext {
+//!     int layer_id;                      // model progress
+//!     float16_t** kv_cache_ptr;          // attention states by layer
+//!     std::vector<float16_t*> activation_buffer;
+//!     std::vector<Kernel*> remaining_kernels;
+//! };
+//! ```
+//!
+//! In unified host memory the checkpoint is just this struct: preempting
+//! at a kernel boundary costs nothing, and resumption recalls it with no
+//! data movement.
+
+use crate::heg::ChunkSpec;
+use crate::metrics::ReqMetrics;
+use crate::runtime::{HostTensor, KvCache};
+use crate::workload::{Priority, ReqId, Request};
+
+/// Where a request is in its lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Prefill kernels remain (`chunk_idx`/`layer_idx` point at the next).
+    Prefilling,
+    /// Prefill finished; first token emitted; decode iterations remain.
+    Decoding,
+    Done,
+}
+
+/// The serving context of one request.
+#[derive(Debug)]
+pub struct ReqState {
+    pub req: Request,
+    /// Elastic chunk plan (paper §5.2) — the remaining_kernels list is
+    /// implicit: kernels (chunk_idx.., layer_idx..) × n_layers.
+    pub plan: Vec<ChunkSpec>,
+    /// Next prefill kernel to execute.
+    pub chunk_idx: usize,
+    pub layer_idx: usize,
+    /// KV cache (None in timing-only mode).
+    pub cache: Option<KvCache>,
+    /// Activation buffer: the chunk/lane hidden state flowing between
+    /// kernels (None in timing-only mode).
+    pub x: Option<HostTensor>,
+    /// Last emitted token (input to the next decode iteration).
+    pub last_token: Option<i32>,
+    /// Tokens generated so far (first token counts).
+    pub tokens: Vec<i32>,
+    /// Valid cached positions (mirrors cache.pos in real mode).
+    pub pos: usize,
+    pub phase: Phase,
+    /// A kernel for this request is currently in flight.
+    pub running: bool,
+    /// When the request entered its current wait (for aging, §6.5).
+    pub enqueued_at_us: f64,
+    /// Times this request was preempted (introspection).
+    pub preempted: u64,
+    /// Preemption already counted for the current wait episode (cleared
+    /// whenever the request launches a kernel).
+    pub preempt_counted: bool,
+    pub metrics: ReqMetrics,
+}
+
+impl ReqState {
+    pub fn new(req: Request, plan: Vec<ChunkSpec>, cache: Option<KvCache>) -> Self {
+        let metrics = ReqMetrics {
+            id: req.id,
+            priority: req.priority,
+            profile: req.profile,
+            arrival_us: req.arrival_us,
+            first_token_us: None,
+            done_us: None,
+            input_len: req.prompt_len(),
+            output_tokens: 0,
+        };
+        Self {
+            enqueued_at_us: req.arrival_us,
+            req,
+            plan,
+            chunk_idx: 0,
+            layer_idx: 0,
+            cache,
+            x: None,
+            last_token: None,
+            tokens: vec![],
+            pos: 0,
+            phase: Phase::Prefilling,
+            running: false,
+            preempted: 0,
+            preempt_counted: false,
+            metrics,
+        }
+    }
+
+    pub fn id(&self) -> ReqId {
+        self.req.id
+    }
+
+    pub fn priority(&self) -> Priority {
+        self.req.priority
+    }
+
+    pub fn is_reactive(&self) -> bool {
+        self.req.priority.is_reactive()
+    }
+
+    pub fn current_chunk(&self) -> Option<&ChunkSpec> {
+        self.plan.get(self.chunk_idx)
+    }
+
+    /// Remaining prefill kernels (the paper's remaining_kernels length).
+    pub fn remaining_prefill_kernels(&self, n_layers: usize) -> usize {
+        if self.phase != Phase::Prefilling {
+            return 0;
+        }
+        let whole_chunks = self.plan.len() - self.chunk_idx - 1;
+        whole_chunks * n_layers + (n_layers - self.layer_idx)
+    }
+
+    /// Reset all prefill progress (scheme-(a) baseline: preemption
+    /// without saving context forces recomputation).
+    pub fn restart_prefill(&mut self, geo: &crate::config::ModelGeometry) {
+        assert_eq!(self.phase, Phase::Prefilling, "can only restart prefill");
+        self.chunk_idx = 0;
+        self.layer_idx = 0;
+        self.pos = 0;
+        self.x = None;
+        if self.cache.is_some() {
+            self.cache = Some(KvCache::new(geo));
+        }
+    }
+
+    pub fn decode_iterations_left(&self) -> usize {
+        self.req.max_new_tokens.saturating_sub(self.tokens.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Priority;
+
+    pub(crate) fn mk(id: u64, prio: Priority, plen: usize) -> ReqState {
+        let req = Request {
+            id,
+            priority: prio,
+            arrival_us: 0.0,
+            prompt: vec![1; plen],
+            max_new_tokens: 4,
+            profile: "test",
+        };
+        let plan = vec![
+            ChunkSpec { variant: 16, valid: 16, pos: 0, dynamic: false },
+            ChunkSpec { variant: 16, valid: 5, pos: 16, dynamic: true },
+        ];
+        ReqState::new(req, plan, None)
+    }
+
+    #[test]
+    fn remaining_kernels_counts_down() {
+        let mut st = mk(1, Priority::Proactive, 21);
+        assert_eq!(st.remaining_prefill_kernels(4), 8);
+        st.layer_idx = 3;
+        assert_eq!(st.remaining_prefill_kernels(4), 5);
+        st.chunk_idx = 1;
+        st.layer_idx = 0;
+        assert_eq!(st.remaining_prefill_kernels(4), 4);
+        st.phase = Phase::Decoding;
+        assert_eq!(st.remaining_prefill_kernels(4), 0);
+    }
+
+    #[test]
+    fn restart_prefill_resets_progress() {
+        let geo = crate::config::llama32_3b();
+        let mut st = mk(1, Priority::Proactive, 21);
+        st.chunk_idx = 1;
+        st.layer_idx = 2;
+        st.pos = 16;
+        st.restart_prefill(&geo);
+        assert_eq!((st.chunk_idx, st.layer_idx, st.pos), (0, 0, 0));
+    }
+
+    #[test]
+    fn decode_iterations_left() {
+        let mut st = mk(1, Priority::Reactive, 8);
+        assert_eq!(st.decode_iterations_left(), 4);
+        st.tokens = vec![1, 2, 3];
+        assert_eq!(st.decode_iterations_left(), 1);
+        st.tokens.push(4);
+        assert_eq!(st.decode_iterations_left(), 0);
+    }
+}

@@ -1,0 +1,378 @@
+//! End-to-end figures: the Fig. 4 scheme comparison, Fig. 6
+//! (proactive-only), Fig. 7 (proactive-reactive mixed), and the design
+//! ablations.  All runs are timing-only DES at the paper's Llama-3.2-3B
+//! scale with seeded workload traces.
+
+use anyhow::Result;
+
+use crate::baselines::{CpuFcfsEngine, Scheme, SingleXpuEngine};
+use crate::config::{ModelGeometry, SchedulerConfig, SocConfig, llama32_3b};
+use crate::coordinator::AgentXpuEngine;
+use crate::engine::Engine;
+use crate::metrics::RunReport;
+use crate::util::bench::Table;
+use crate::util::json::Json;
+use crate::workload::{
+    Priority, Request, WorkloadSpec, merge_traces, proactive_trace, profile,
+    reactive_trace,
+};
+
+fn geo_for_sweeps() -> ModelGeometry {
+    llama32_3b()
+}
+
+/// Build the paper's mixed workload: proactive Poisson streams sampled
+/// across the three proactive profiles + one reactive stream.
+pub fn mixed_trace(
+    proactive_rate: f64,
+    reactive_interval_s: f64,
+    duration_s: f64,
+    seed: u64,
+    geo: &ModelGeometry,
+) -> Vec<Request> {
+    let mut streams = vec![];
+    let pro_profiles = ["proactivebench", "samsum", "cnn_dailymail"];
+    for (i, name) in pro_profiles.iter().enumerate() {
+        streams.push(proactive_trace(
+            &WorkloadSpec {
+                profile: profile(name).unwrap(),
+                rate_per_s: proactive_rate / pro_profiles.len() as f64,
+                duration_s,
+                seed: seed + i as u64,
+                max_seq: geo.max_seq,
+            },
+            geo.vocab,
+            (i as u64 + 1) * 1_000_000,
+        ));
+    }
+    if reactive_interval_s > 0.0 {
+        streams.push(reactive_trace(
+            &WorkloadSpec {
+                profile: profile("lmsys").unwrap(),
+                rate_per_s: 1.0 / reactive_interval_s,
+                duration_s,
+                seed: seed + 100,
+                max_seq: geo.max_seq,
+            },
+            geo.vocab,
+            9_000_000,
+        ));
+    }
+    merge_traces(streams)
+}
+
+fn report_row(rep: &RunReport) -> (f64, f64, f64, f64) {
+    let r = rep.class(Priority::Reactive);
+    let p = rep.class(Priority::Proactive);
+    (
+        r.mean_norm_latency_ms,
+        p.mean_norm_latency_ms,
+        p.tokens_per_s,
+        rep.joules_per_token(),
+    )
+}
+
+/// Fig. 4: one long proactive task + one reactive arrival under the
+/// four co-scheduling schemes.  Prints reactive latency, proactive
+/// completion, makespan, and an ASCII Gantt per scheme.
+pub fn fig_schemes(soc: &SocConfig) -> Result<Json> {
+    let geo = geo_for_sweeps();
+    let trace = || {
+        vec![
+            Request {
+                id: 1,
+                priority: Priority::Proactive,
+                arrival_us: 0.0,
+                prompt: vec![1; 1536],
+                max_new_tokens: 48,
+                profile: "proactivebench",
+            },
+            Request {
+                id: 2,
+                priority: Priority::Reactive,
+                arrival_us: 150_000.0,
+                prompt: vec![1; 512],
+                max_new_tokens: 32,
+                profile: "lmsys",
+            },
+        ]
+    };
+
+    let mut rows = vec![];
+    let mut table = Table::new(&[
+        "scheme", "reactive TTFT (ms)", "reactive e2e (ms)",
+        "proactive e2e (ms)", "makespan (ms)",
+    ]);
+    let xpu_names: Vec<&str> = soc.xpus.iter().map(|x| x.name.as_str()).collect();
+    let mut gantts = String::new();
+
+    let mut run_one = |label: &str,
+                       rep: RunReport,
+                       gantt: Option<String>|
+     -> Result<()> {
+        let rt = rep.reqs.iter().find(|m| m.id == 2).unwrap();
+        let pro = rep.reqs.iter().find(|m| m.id == 1).unwrap();
+        table.row(vec![
+            label.to_string(),
+            format!("{:.1}", rt.ttft_us().unwrap() / 1e3),
+            format!("{:.1}", rt.e2e_us().unwrap() / 1e3),
+            format!("{:.1}", pro.e2e_us().unwrap() / 1e3),
+            format!("{:.1}", rep.makespan_us / 1e3),
+        ]);
+        rows.push(
+            Json::obj()
+                .set("scheme", label)
+                .set("reactive_ttft_ms", rt.ttft_us().unwrap() / 1e3)
+                .set("reactive_e2e_ms", rt.e2e_us().unwrap() / 1e3)
+                .set("proactive_e2e_ms", pro.e2e_us().unwrap() / 1e3)
+                .set("makespan_ms", rep.makespan_us / 1e3),
+        );
+        if let Some(g) = gantt {
+            gantts.push_str(&format!("\n[{label}]\n{g}"));
+        }
+        Ok(())
+    };
+
+    for scheme in [Scheme::PreemptRestart, Scheme::TimeShare, Scheme::ContinuousBatching] {
+        let mut e = SingleXpuEngine::new(geo.clone(), soc.clone(), scheme);
+        let rep = e.run(trace())?;
+        let g = e.last_trace.as_ref().map(|t| t.gantt(&xpu_names, 72));
+        run_one(scheme.label(), rep, g)?;
+    }
+    let mut d = AgentXpuEngine::synthetic(geo, soc.clone(), SchedulerConfig::default());
+    let rep = d.run(trace())?;
+    let g = d.last_trace.as_ref().map(|t| t.gantt(&xpu_names, 72));
+    run_one("scheme-d/agent.xpu", rep, g)?;
+
+    println!("\n== fig-schemes: proactive-reactive co-scheduling (Fig. 4) ==");
+    table.print();
+    println!("{gantts}\n(R = reactive kernel, p = proactive kernel)");
+    Ok(Json::obj().set("figure", "schemes").set("rows", Json::Arr(rows)))
+}
+
+/// Fig. 6: proactive-only workloads — normalized latency vs request
+/// rate, Agent.xpu vs the llama.cpp-like baseline, per workload.
+pub fn fig_proactive(
+    soc: &SocConfig,
+    rates: &[f64],
+    duration_s: f64,
+    seed: u64,
+) -> Result<Json> {
+    let geo = geo_for_sweeps();
+    let mut rows = vec![];
+    let mut table = Table::new(&[
+        "workload", "rate(req/s)",
+        "agent.xpu norm-lat (ms/tok)", "llama.cpp norm-lat (ms/tok)",
+        "agent.xpu tok/s", "llama.cpp tok/s",
+        "agent.xpu J/tok", "llama.cpp J/tok",
+    ]);
+    for name in ["proactivebench", "samsum", "cnn_dailymail"] {
+        for &rate in rates {
+            let spec = WorkloadSpec {
+                profile: profile(name).unwrap(),
+                rate_per_s: rate,
+                duration_s,
+                seed,
+                max_seq: geo.max_seq,
+            };
+            let trace = proactive_trace(&spec, geo.vocab, 1);
+            if trace.is_empty() {
+                continue;
+            }
+            let mut ax = AgentXpuEngine::synthetic(
+                geo.clone(),
+                soc.clone(),
+                SchedulerConfig::default(),
+            );
+            let ra = ax.run(trace.clone())?;
+            let mut lc = CpuFcfsEngine::new(geo.clone(), soc.clone(), 4);
+            let rl = lc.run(trace)?;
+            let (_, pa, ta, ja) = report_row(&ra);
+            let (_, pl, tl, jl) = report_row(&rl);
+            table.row(vec![
+                name.into(),
+                format!("{rate:.2}"),
+                format!("{pa:.1}"),
+                format!("{pl:.1}"),
+                format!("{ta:.1}"),
+                format!("{tl:.1}"),
+                format!("{ja:.2}"),
+                format!("{jl:.2}"),
+            ]);
+            rows.push(
+                Json::obj()
+                    .set("workload", name)
+                    .set("rate", rate)
+                    .set("agent_norm_ms", pa)
+                    .set("llamacpp_norm_ms", pl)
+                    .set("agent_tok_s", ta)
+                    .set("llamacpp_tok_s", tl)
+                    .set("agent_j_tok", ja)
+                    .set("llamacpp_j_tok", jl)
+                    .set("agent_peak_w", ra.peak_power_w)
+                    .set("llamacpp_peak_w", rl.peak_power_w),
+            );
+        }
+    }
+    println!("\n== fig-proactive: proactive-only workloads (Fig. 6) ==");
+    table.print();
+    Ok(Json::obj().set("figure", "proactive").set("rows", Json::Arr(rows)))
+}
+
+/// Fig. 7: mixed workloads — reactive + proactive normalized latency
+/// across proactive rates × reactive intervals, both engines.
+pub fn fig_mixed(
+    soc: &SocConfig,
+    reactive_intervals_s: &[f64],
+    proactive_rates: &[f64],
+    duration_s: f64,
+    seed: u64,
+) -> Result<Json> {
+    let geo = geo_for_sweeps();
+    let mut rows = vec![];
+    let mut table = Table::new(&[
+        "rt-interval(s)", "pro-rate(req/s)",
+        "agent rt-lat", "llama.cpp rt-lat",
+        "agent pro-lat", "llama.cpp pro-lat",
+        "preempt", "backfill",
+    ]);
+    for &interval in reactive_intervals_s {
+        for &rate in proactive_rates {
+            let trace = mixed_trace(rate, interval, duration_s, seed, &geo);
+            if trace.is_empty() {
+                continue;
+            }
+            let mut ax = AgentXpuEngine::synthetic(
+                geo.clone(),
+                soc.clone(),
+                SchedulerConfig::default(),
+            );
+            let ra = ax.run(trace.clone())?;
+            let mut lc = CpuFcfsEngine::new(geo.clone(), soc.clone(), 4);
+            let rl = lc.run(trace)?;
+            let (ra_rt, ra_pro, _, _) = report_row(&ra);
+            let (rl_rt, rl_pro, _, _) = report_row(&rl);
+            table.row(vec![
+                format!("{interval:.0}"),
+                format!("{rate:.2}"),
+                format!("{ra_rt:.1}"),
+                format!("{rl_rt:.1}"),
+                format!("{ra_pro:.1}"),
+                format!("{rl_pro:.1}"),
+                format!("{}", ra.preemptions),
+                format!("{}", ra.backfills),
+            ]);
+            rows.push(
+                Json::obj()
+                    .set("reactive_interval_s", interval)
+                    .set("proactive_rate", rate)
+                    .set("agent_reactive_norm_ms", ra_rt)
+                    .set("llamacpp_reactive_norm_ms", rl_rt)
+                    .set("agent_proactive_norm_ms", ra_pro)
+                    .set("llamacpp_proactive_norm_ms", rl_pro)
+                    .set("agent_preemptions", ra.preemptions as usize)
+                    .set("agent_backfills", ra.backfills as usize)
+                    .set("agent_j_tok", ra.joules_per_token())
+                    .set("llamacpp_j_tok", rl.joules_per_token()),
+            );
+        }
+    }
+    println!("\n== fig-mixed: proactive-reactive co-existence (Fig. 7) ==");
+    println!("(norm-lat = mean TTFT / input length, ms/token)");
+    table.print();
+    Ok(Json::obj().set("figure", "mixed").set("rows", Json::Arr(rows)))
+}
+
+/// Design ablations (DESIGN.md §4): toggle each §5/§6 mechanism and
+/// measure reactive latency + proactive throughput on a mixed load.
+pub fn fig_ablation(soc: &SocConfig, duration_s: f64, seed: u64) -> Result<Json> {
+    let geo = geo_for_sweeps();
+    let trace = mixed_trace(1.5, 12.0, duration_s, seed, &geo);
+    let variants: Vec<(&str, SchedulerConfig)> = vec![
+        ("full", SchedulerConfig::default()),
+        ("no-backfill", SchedulerConfig { backfill: false, ..Default::default() }),
+        ("no-preemption", SchedulerConfig { preemption: false, ..Default::default() }),
+        ("no-disaggregation", SchedulerConfig { disaggregation: false, ..Default::default() }),
+        (
+            "no-contention-policy",
+            // collapse the tiers: everything launches aggressively
+            SchedulerConfig { pressure_low: 1e9, pressure_high: 1e9, ..Default::default() },
+        ),
+        ("b_max=1", SchedulerConfig { b_max: 1, ..Default::default() }),
+        (
+            "chunk<=64",
+            SchedulerConfig { chunk_latency_budget_ms: 2.0, ..Default::default() },
+        ),
+    ];
+    let mut rows = vec![];
+    let mut table = Table::new(&[
+        "variant", "reactive norm-lat (ms/tok)", "proactive tok/s",
+        "preempt", "backfill", "J/tok",
+    ]);
+    for (label, sched) in variants {
+        let mut e = AgentXpuEngine::synthetic(geo.clone(), soc.clone(), sched);
+        let rep = e.run(trace.clone())?;
+        let (rt, _, pt, j) = report_row(&rep);
+        table.row(vec![
+            label.into(),
+            format!("{rt:.1}"),
+            format!("{pt:.1}"),
+            format!("{}", rep.preemptions),
+            format!("{}", rep.backfills),
+            format!("{j:.2}"),
+        ]);
+        rows.push(
+            Json::obj()
+                .set("variant", label)
+                .set("reactive_norm_ms", rt)
+                .set("proactive_tok_s", pt)
+                .set("preemptions", rep.preemptions as usize)
+                .set("backfills", rep.backfills as usize)
+                .set("j_per_tok", j),
+        );
+    }
+    println!("\n== fig-ablation: design-choice ablations ==");
+    table.print();
+    Ok(Json::obj().set("figure", "ablation").set("rows", Json::Arr(rows)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::default_soc;
+
+    #[test]
+    fn schemes_reproduce_fig4_ordering() {
+        let j = fig_schemes(&default_soc()).unwrap();
+        let rows = j.get("rows").unwrap().as_arr().unwrap();
+        let get = |s: &str, k: &str| {
+            rows.iter()
+                .find(|r| r.get("scheme").unwrap().as_str().unwrap().contains(s))
+                .unwrap()
+                .get(k)
+                .unwrap()
+                .as_f64()
+                .unwrap()
+        };
+        // (d) achieves the lowest reactive latency...
+        let d_rt = get("agent.xpu", "reactive_ttft_ms");
+        for s in ["scheme-b", "scheme-c"] {
+            assert!(d_rt <= get(s, "reactive_ttft_ms") * 1.05, "{s}");
+        }
+        // ...and the shortest makespan (highest system throughput)
+        let d_mk = get("agent.xpu", "makespan_ms");
+        for s in ["scheme-a", "scheme-b", "scheme-c"] {
+            assert!(d_mk <= get(s, "makespan_ms"), "{s}");
+        }
+    }
+
+    #[test]
+    fn mixed_trace_is_mixed_and_seeded() {
+        let geo = llama32_3b();
+        let t1 = mixed_trace(1.0, 10.0, 60.0, 7, &geo);
+        let t2 = mixed_trace(1.0, 10.0, 60.0, 7, &geo);
+        assert_eq!(t1.len(), t2.len());
+        assert!(t1.iter().any(|r| r.priority == Priority::Reactive));
+        assert!(t1.iter().any(|r| r.priority == Priority::Proactive));
+    }
+}

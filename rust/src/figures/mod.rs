@@ -1,0 +1,12 @@
+//! Figure/table regenerators — one per figure of the paper's analysis
+//! (§3) and evaluation (§8) sections, plus the ablation study DESIGN.md
+//! calls for.  Each returns machine-readable JSON (written under
+//! `results/` by the CLI) and prints the same rows/series the paper
+//! plots.  See DESIGN.md §4 for the experiment index and EXPERIMENTS.md
+//! for recorded paper-vs-measured comparisons.
+
+mod e2e;
+mod micro;
+
+pub use e2e::{fig_ablation, fig_mixed, fig_proactive, fig_schemes, mixed_trace};
+pub use micro::{fig_affinity, fig_batching, fig_contention};

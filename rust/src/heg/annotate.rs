@@ -1,0 +1,137 @@
+//! Per-kernel predictive annotation (paper §5.3): every HEG kernel gets
+//! standalone execution time, bandwidth utilization, memory footprint,
+//! and power for *each* XPU it may elastically bind to, so the online
+//! scheduler's decisions are table lookups, not model evaluations.
+
+use crate::config::ModelGeometry;
+use crate::model::{KernelCost, decode_iter_cost, prefill_layer_cost};
+use crate::soc::{KernelTiming, XpuModel};
+
+use super::plan::ChunkSpec;
+
+/// A kernel with its annotation across all XPUs.
+#[derive(Debug, Clone)]
+pub struct Annotated {
+    pub cost: KernelCost,
+    /// Per-XPU standalone timing, indexed like `Annotator::xpus`.
+    pub timings: Vec<KernelTiming>,
+    /// Fastest XPU index (ties break to lower index).
+    pub fastest: usize,
+    /// Most energy-efficient XPU index (TFLOPS/W — backfill ranking §6.3).
+    pub most_efficient: usize,
+}
+
+impl Annotated {
+    pub fn timing_on(&self, xpu: usize) -> &KernelTiming {
+        &self.timings[xpu]
+    }
+}
+
+/// Annotation factory bound to one geometry + SoC.
+pub struct Annotator {
+    pub geo: ModelGeometry,
+    pub xpus: Vec<XpuModel>,
+}
+
+impl Annotator {
+    pub fn new(geo: ModelGeometry, xpus: Vec<XpuModel>) -> Self {
+        Self { geo, xpus }
+    }
+
+    pub fn xpu_index(&self, name: &str) -> Option<usize> {
+        self.xpus.iter().position(|x| x.name() == name)
+    }
+
+    pub fn annotate(&self, cost: KernelCost) -> Annotated {
+        let timings: Vec<KernelTiming> =
+            self.xpus.iter().map(|x| x.timing(&cost)).collect();
+        let fastest = timings
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.nominal_us.total_cmp(&b.1.nominal_us))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        let most_efficient = self
+            .xpus
+            .iter()
+            .enumerate()
+            .max_by(|a, b| {
+                a.1.tflops_per_watt(&cost).total_cmp(&b.1.tflops_per_watt(&cost))
+            })
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        Annotated { cost, timings, fastest, most_efficient }
+    }
+
+    /// One (chunk, layer) prefill kernel.  All layers share the shape,
+    /// so the annotation is layer-independent.
+    pub fn prefill_kernel(&self, chunk: &ChunkSpec) -> Annotated {
+        self.annotate(prefill_layer_cost(
+            &self.geo,
+            chunk.variant,
+            chunk.valid,
+            chunk.pos,
+            chunk.dynamic,
+        ))
+    }
+
+    /// One batched decode iteration (head + embed + all layers).
+    pub fn decode_iter(&self, lanes: usize, avg_ctx: usize) -> Annotated {
+        self.annotate(decode_iter_cost(&self.geo, lanes, avg_ctx.max(1)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::default_soc;
+
+    fn annot() -> Annotator {
+        // Paper-scale geometry: affinity assertions only hold when
+        // kernels are big enough that compute dominates launch overhead.
+        let geo = crate::config::llama32_3b();
+        let xpus = default_soc().xpus.iter().cloned().map(XpuModel::new).collect();
+        Annotator::new(geo, xpus)
+    }
+
+    #[test]
+    fn static_prefill_prefers_npu() {
+        // §5.2 hetero-disaggregation: static chunked prefill is NPU-affine.
+        let a = annot();
+        let npu = a.xpu_index("npu").unwrap();
+        let k = a.prefill_kernel(&ChunkSpec { variant: 128, valid: 128, pos: 0, dynamic: false });
+        assert_eq!(k.fastest, npu);
+        assert_eq!(k.most_efficient, npu);
+    }
+
+    #[test]
+    fn dynamic_margin_prefers_igpu() {
+        let a = annot();
+        let igpu = a.xpu_index("igpu").unwrap();
+        let k = a.prefill_kernel(&ChunkSpec { variant: 64, valid: 44, pos: 256, dynamic: true });
+        assert_eq!(k.fastest, igpu, "NPU JIT penalty must push margins to iGPU");
+    }
+
+    #[test]
+    fn decode_prefers_igpu_over_npu() {
+        // decode is attention/GEMV heavy and batch-dynamic: iGPU territory
+        let a = annot();
+        let npu = a.xpu_index("npu").unwrap();
+        let igpu = a.xpu_index("igpu").unwrap();
+        let k = a.decode_iter(4, 256);
+        assert!(
+            k.timings[igpu].nominal_us < k.timings[npu].nominal_us * 1.2,
+            "igpu {} npu {}",
+            k.timings[igpu].nominal_us,
+            k.timings[npu].nominal_us
+        );
+    }
+
+    #[test]
+    fn annotations_cover_all_xpus() {
+        let a = annot();
+        let k = a.decode_iter(1, 10);
+        assert_eq!(k.timings.len(), a.xpus.len());
+        assert!(k.timings.iter().all(|t| t.nominal_us > 0.0));
+    }
+}

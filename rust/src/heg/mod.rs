@@ -1,0 +1,14 @@
+//! Heterogeneous Execution Graph (paper §5).
+//!
+//! The HEG is the hetero-centric compute abstraction: the model's op
+//! groups become *elastic chunked kernels* whose XPU binding is decided
+//! at dispatch time, pruned by affinity constraints (static chunks are
+//! NPU-compilable; dynamic margin/attention kernels prefer the iGPU),
+//! and annotated with predictive cost/timing/power so the online
+//! scheduler can reason about them (§5.3).
+
+mod annotate;
+mod plan;
+
+pub use annotate::{Annotated, Annotator};
+pub use plan::{ChunkSpec, max_chunk_within_budget, plan_chunks};

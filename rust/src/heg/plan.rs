@@ -1,0 +1,208 @@
+//! Elastic chunk planning: split a prompt into precompiled static chunks
+//! plus one dynamic margin chunk (paper §5.2 "Elastic Chunked Kernel").
+//!
+//! The plan greedily uses the largest precompiled chunk whose worst-case
+//! per-layer kernel time fits the preemption latency budget (§6.2 keeps
+//! prefill kernels under ~100 ms so a reactive arrival never waits long
+//! for a kernel boundary).
+
+use crate::config::ModelGeometry;
+use crate::model::prefill_layer_cost;
+use crate::soc::XpuModel;
+
+/// One prefill chunk of a request's plan.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChunkSpec {
+    /// Precompiled variant size executed (padded if `valid < variant`).
+    pub variant: usize,
+    /// Real tokens in this chunk.
+    pub valid: usize,
+    /// Cache position where the chunk starts.
+    pub pos: usize,
+    /// Margin chunks are dynamic-shape (iGPU-affine, §5.2).
+    pub dynamic: bool,
+}
+
+/// Pick the largest chunk size whose worst-position per-layer kernel
+/// stays within `budget_ms` on the slowest candidate XPU.
+pub fn max_chunk_within_budget(
+    geo: &ModelGeometry,
+    xpus: &[&XpuModel],
+    budget_ms: f64,
+) -> usize {
+    let mut best = *geo.chunk_sizes.iter().min().unwrap_or(&1);
+    for &c in &geo.chunk_sizes {
+        let worst = prefill_layer_cost(geo, c, c, geo.max_seq.saturating_sub(c), false);
+        let fits = xpus
+            .iter()
+            .all(|x| x.timing(&worst).nominal_us <= budget_ms * 1e3);
+        if fits && c > best {
+            best = c;
+        }
+    }
+    best
+}
+
+/// Split `prompt_len` tokens into a chunk plan.
+pub fn plan_chunks(geo: &ModelGeometry, prompt_len: usize, max_chunk: usize) -> Vec<ChunkSpec> {
+    assert!(prompt_len > 0, "empty prompt");
+    assert!(
+        prompt_len <= geo.max_seq,
+        "prompt {prompt_len} exceeds max_seq {}",
+        geo.max_seq
+    );
+    let smallest = *geo.chunk_sizes.iter().min().unwrap();
+    let mut plan = vec![];
+    let mut pos = 0;
+    // Greedy descending: consume the largest budget-feasible chunk that
+    // fits the remainder, so mid-sized prompts still get static
+    // (NPU-compilable) chunks instead of one big dynamic margin.
+    loop {
+        let left = prompt_len - pos;
+        if left == 0 {
+            break;
+        }
+        let fit = geo
+            .chunk_sizes
+            .iter()
+            .copied()
+            .filter(|&c| c <= max_chunk && c <= left)
+            .max();
+        match fit {
+            Some(c) => {
+                plan.push(ChunkSpec { variant: c, valid: c, pos, dynamic: false });
+                pos += c;
+            }
+            None => {
+                // margin: smaller than every variant — run it as the
+                // smallest one, dynamic-shape (iGPU-affine, §5.2)
+                plan.push(ChunkSpec {
+                    variant: smallest,
+                    valid: left,
+                    pos,
+                    dynamic: true,
+                });
+                pos += left;
+            }
+        }
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::default_soc;
+
+    fn geo() -> ModelGeometry {
+        ModelGeometry {
+            name: "small".into(),
+            vocab: 2048,
+            d_model: 256,
+            n_layers: 6,
+            n_q_heads: 8,
+            n_kv_heads: 2,
+            head_dim: 32,
+            d_ffn: 704,
+            max_seq: 512,
+            chunk_sizes: vec![16, 32, 64, 128],
+            batch_sizes: vec![1, 2, 4, 8],
+            rope_theta: 10000.0,
+            weight_bytes: 4.0,
+        }
+    }
+
+    #[test]
+    fn plan_covers_prompt_exactly() {
+        let g = geo();
+        for len in [1, 15, 16, 17, 100, 128, 129, 300, 512] {
+            let plan = plan_chunks(&g, len, 128);
+            let total: usize = plan.iter().map(|c| c.valid).sum();
+            assert_eq!(total, len, "len {len}");
+            // positions are contiguous
+            let mut pos = 0;
+            for c in &plan {
+                assert_eq!(c.pos, pos);
+                assert!(c.valid <= c.variant);
+                pos += c.valid;
+            }
+        }
+    }
+
+    #[test]
+    fn only_last_chunk_is_margin() {
+        let g = geo();
+        let plan = plan_chunks(&g, 300, 128);
+        for c in &plan[..plan.len() - 1] {
+            assert!(!c.dynamic);
+            assert_eq!(c.valid, c.variant);
+        }
+        // 300 = 128 + 128 + 32 + margin 12
+        assert_eq!(
+            plan.iter().map(|c| c.variant).collect::<Vec<_>>(),
+            vec![128, 128, 32, 16]
+        );
+        let last = plan.last().unwrap();
+        assert_eq!(last.valid, 12);
+        assert!(last.dynamic);
+    }
+
+    #[test]
+    fn mid_sized_prompts_get_static_chunks() {
+        // the bug this guards: a 180-token prompt must NOT become one
+        // big dynamic margin — it gets 128 + 32 + 16 static + margin 4
+        let g = geo();
+        let plan = plan_chunks(&g, 180, 512);
+        assert_eq!(
+            plan.iter().map(|c| (c.variant, c.dynamic)).collect::<Vec<_>>(),
+            vec![(128, false), (32, false), (16, false), (16, true)]
+        );
+        let static_tokens: usize =
+            plan.iter().filter(|c| !c.dynamic).map(|c| c.valid).sum();
+        assert!(static_tokens as f64 >= 0.9 * 176.0);
+    }
+
+    #[test]
+    fn exact_multiple_has_no_margin() {
+        let g = geo();
+        let plan = plan_chunks(&g, 256, 128);
+        assert_eq!(plan.len(), 2);
+        assert!(plan.iter().all(|c| !c.dynamic));
+    }
+
+    #[test]
+    fn small_prompt_single_dynamic_chunk() {
+        let g = geo();
+        let plan = plan_chunks(&g, 5, 128);
+        assert_eq!(plan.len(), 1);
+        assert_eq!(plan[0].variant, 16);
+        assert!(plan[0].dynamic);
+        assert_eq!(plan[0].valid, 5);
+    }
+
+    #[test]
+    fn max_chunk_cap_respected() {
+        let g = geo();
+        let plan = plan_chunks(&g, 300, 32);
+        assert!(plan.iter().all(|c| c.variant <= 32));
+    }
+
+    #[test]
+    fn budget_picks_large_chunk_on_fast_xpus() {
+        let g = geo();
+        let soc = default_soc();
+        let npu = XpuModel::new(soc.xpu("npu").unwrap().clone());
+        let c = max_chunk_within_budget(&g, &[&npu], 100.0);
+        assert_eq!(c, 128, "small model easily fits 128-chunks in 100 ms");
+        // an absurdly tight budget falls back to the smallest chunk
+        let c = max_chunk_within_budget(&g, &[&npu], 1e-6);
+        assert_eq!(c, 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds max_seq")]
+    fn oversized_prompt_panics() {
+        let g = geo();
+        plan_chunks(&g, 513, 128);
+    }
+}

@@ -1,0 +1,52 @@
+//! # Agent.xpu — agentic LLM serving on a heterogeneous SoC
+//!
+//! Reproduction of *Agent.xpu: Efficient Scheduling of Agentic LLM
+//! Workloads on Heterogeneous SoC* (CS.DC 2025) as a three-layer
+//! Rust + JAX + Pallas stack.  This crate is Layer 3: the coordinator
+//! that owns the event loop, the heterogeneous execution graph, the
+//! dual-queue scheduler with kernel-level preemption and slack-aware
+//! backfill, the virtual-SoC substrate, and the PJRT runtime that
+//! executes the AOT-compiled model kernels.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! - [`config`] — manifest + TOML configuration system.
+//! - [`model`] — model geometry and the analytic kernel cost model
+//!   (FLOPs / bytes / footprint) that feeds predictive annotation.
+//! - [`soc`] — the hetero-SoC substrate: virtual NPU/iGPU/CPU rooflines,
+//!   the shared-DDR bandwidth arbiter, the power model, and the
+//!   discrete-event clock.
+//! - [`runtime`] — PJRT CPU client wrapper: loads `artifacts/*.hlo.txt`,
+//!   owns weights and KV caches, executes kernels.
+//! - [`heg`] — the heterogeneous execution graph (paper §5): elastic
+//!   chunked kernels, affinity constraints, predictive annotation.
+//! - [`coordinator`] — the online scheduler (paper §6): dual queues,
+//!   kernel-level preemption, slack-aware backfill, memory-aware
+//!   dispatch, the XPU coordinator loop.
+//! - [`engine`] — offline load + online serve; the `Engine` trait shared
+//!   with baselines.
+//! - [`baselines`] — llama.cpp-like CPU FCFS engine and the Fig. 4
+//!   co-scheduling schemes (a)/(b)/(c).
+//! - [`workload`] — agentic workload generators (Poisson proactive,
+//!   exponential-think-time reactive, dataset-analog trace profiles).
+//! - [`metrics`] — TTFT/TPOT/normalized latency, throughput, energy.
+//! - [`server`] — UDS JSON-lines frontend (paper §7).
+//! - [`trace`] — kernel-level execution traces for figures + debugging.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod figures;
+pub mod heg;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod server;
+pub mod soc;
+pub mod trace;
+pub mod util;
+pub mod workload;
+
+pub use config::{Manifest, ModelGeometry};
+

@@ -1,0 +1,223 @@
+//! `agent-xpu` — launcher CLI.
+//!
+//! ```text
+//! agent-xpu fig <affinity|contention|batching|schemes|proactive|mixed|ablation|all>
+//!           [--out results/] [--duration 120] [--seed 7]
+//! agent-xpu run --rate 1.5 --interval 12 --duration 60 [--engine agent.xpu|llamacpp|scheme-a|b|c]
+//! agent-xpu serve --artifacts artifacts/small [--socket /tmp/agent-xpu.sock] [--b-max 8]
+//! agent-xpu inspect --artifacts artifacts/small
+//! agent-xpu soc-probe
+//! ```
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{Context, Result, bail};
+
+use agent_xpu::baselines::{CpuFcfsEngine, Scheme, SingleXpuEngine};
+use agent_xpu::config::{SchedulerConfig, default_soc, llama32_3b};
+use agent_xpu::coordinator::AgentXpuEngine;
+use agent_xpu::engine::{Engine, ExecBridge};
+use agent_xpu::figures;
+use agent_xpu::runtime::{ModelExecutor, Runtime};
+use agent_xpu::server::Server;
+use agent_xpu::util::cli::Args;
+use agent_xpu::util::json::Json;
+use agent_xpu::workload::Priority;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("fig") => cmd_fig(&args),
+        Some("run") => cmd_run(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("inspect") => cmd_inspect(&args),
+        Some("soc-probe") => cmd_soc_probe(),
+        _ => {
+            eprintln!(
+                "usage: agent-xpu <fig|run|serve|inspect|soc-probe> [flags]\n\
+                 see `rust/src/main.rs` docs for flags"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn write_result(out_dir: &str, name: &str, j: &Json) -> Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    let path = Path::new(out_dir).join(format!("{name}.json"));
+    std::fs::write(&path, j.to_string())?;
+    println!("[written {path:?}]");
+    Ok(())
+}
+
+fn cmd_fig(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let out = args.str_or("out", "results");
+    let duration = args.f64_or("duration", 120.0)?;
+    let seed = args.usize_or("seed", 7)? as u64;
+    let soc = default_soc();
+
+    let mut ran = false;
+    let do_fig = |name: &str, j: Json| -> Result<()> { write_result(&out, name, &j) };
+    if which == "affinity" || which == "all" {
+        do_fig("fig_affinity", figures::fig_affinity(&soc))?;
+        ran = true;
+    }
+    if which == "contention" || which == "all" {
+        do_fig("fig_contention", figures::fig_contention(&soc))?;
+        ran = true;
+    }
+    if which == "batching" || which == "all" {
+        do_fig("fig_batching", figures::fig_batching(&soc))?;
+        ran = true;
+    }
+    if which == "schemes" || which == "all" {
+        do_fig("fig_schemes", figures::fig_schemes(&soc)?)?;
+        ran = true;
+    }
+    if which == "proactive" || which == "all" {
+        let rates = [0.25, 0.5, 1.0, 2.0, 3.0, 4.0];
+        do_fig(
+            "fig_proactive",
+            figures::fig_proactive(&soc, &rates, duration, seed)?,
+        )?;
+        ran = true;
+    }
+    if which == "mixed" || which == "all" {
+        let intervals = [6.0, 12.0, 24.0];
+        let rates = [0.25, 0.5, 1.0, 2.0, 3.0];
+        do_fig(
+            "fig_mixed",
+            figures::fig_mixed(&soc, &intervals, &rates, duration, seed)?,
+        )?;
+        ran = true;
+    }
+    if which == "ablation" || which == "all" {
+        do_fig("fig_ablation", figures::fig_ablation(&soc, duration, seed)?)?;
+        ran = true;
+    }
+    if !ran {
+        bail!("unknown figure {which:?}");
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let rate = args.f64_or("rate", 1.5)?;
+    let interval = args.f64_or("interval", 12.0)?;
+    let duration = args.f64_or("duration", 60.0)?;
+    let seed = args.usize_or("seed", 7)? as u64;
+    let engine_name = args.str_or("engine", "agent.xpu");
+    let geo = llama32_3b();
+    let soc = default_soc();
+    let trace = figures::mixed_trace(rate, interval, duration, seed, &geo);
+    println!(
+        "trace: {} requests over {duration}s (proactive {rate}/s, reactive interval {interval}s)",
+        trace.len()
+    );
+    let rep = match engine_name.as_str() {
+        "agent.xpu" => {
+            AgentXpuEngine::synthetic(geo, soc, SchedulerConfig::default()).run(trace)?
+        }
+        "llamacpp" => CpuFcfsEngine::new(geo, soc, 4).run(trace)?,
+        "scheme-a" => SingleXpuEngine::new(geo, soc, Scheme::PreemptRestart).run(trace)?,
+        "scheme-b" => SingleXpuEngine::new(geo, soc, Scheme::TimeShare).run(trace)?,
+        "scheme-c" => {
+            SingleXpuEngine::new(geo, soc, Scheme::ContinuousBatching).run(trace)?
+        }
+        other => bail!("unknown engine {other:?}"),
+    };
+    println!("{}", rep.to_json());
+    let r = rep.class(Priority::Reactive);
+    let p = rep.class(Priority::Proactive);
+    println!(
+        "\n{}: reactive norm-lat {:.1} ms/tok (ttft {:.0} ms), proactive {:.1} tok/s, \
+         {:.2} J/tok, peak {:.1} W, npu util {:.0}%, igpu util {:.0}%",
+        rep.engine,
+        r.mean_norm_latency_ms,
+        r.mean_ttft_ms,
+        p.tokens_per_s,
+        rep.joules_per_token(),
+        rep.peak_power_w,
+        rep.utilization("npu") * 100.0,
+        rep.utilization("igpu") * 100.0,
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let artifacts = args
+        .get("artifacts")
+        .context("--artifacts <dir> required (run `make artifacts` first)")?;
+    let socket = args.str_or("socket", "/tmp/agent-xpu.sock");
+    let b_max = args.usize_or("b-max", 8)?;
+    println!("loading artifacts from {artifacts} ...");
+    let rt = Arc::new(Runtime::load(artifacts)?);
+    println!(
+        "model {} ({:.1}M params), {} artifacts compiled",
+        rt.geo.name,
+        rt.geo.n_params() as f64 / 1e6,
+        rt.manifest.artifacts.len()
+    );
+    let bridge = Arc::new(ExecBridge::real(Arc::new(ModelExecutor::new(rt))));
+    Server::new(bridge, socket, b_max).run()
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let artifacts = args.get("artifacts").context("--artifacts <dir> required")?;
+    let rt = Runtime::load(artifacts)?;
+    println!("config: {}", rt.geo.name);
+    println!("  params:      {:.2}M", rt.geo.n_params() as f64 / 1e6);
+    println!("  layers:      {}", rt.geo.n_layers);
+    println!("  d_model:     {}", rt.geo.d_model);
+    println!("  heads (q/kv):{}/{}", rt.geo.n_q_heads, rt.geo.n_kv_heads);
+    println!("  max_seq:     {}", rt.geo.max_seq);
+    println!("  chunks:      {:?}", rt.geo.chunk_sizes);
+    println!("  batches:     {:?}", rt.geo.batch_sizes);
+    let mut names: Vec<&String> = rt.manifest.artifacts.keys().collect();
+    names.sort();
+    println!("artifacts ({}):", names.len());
+    for n in names {
+        let a = &rt.manifest.artifacts[n];
+        println!("  {n:<22} {:?} n={} args={}", a.kind, a.n, a.args.len());
+    }
+    Ok(())
+}
+
+fn cmd_soc_probe() -> Result<()> {
+    let soc = default_soc();
+    println!(
+        "virtual SoC (paper testbed analog): DDR {:.1} GB/s, {} GB DRAM",
+        soc.ddr_bw_gbps, soc.dram_gb
+    );
+    for x in &soc.xpus {
+        println!(
+            "  {:<5} {:>5.1} TOPS  gemm-eff {:.2}  attn-eff {:.2}  bw {:>4.0} GB/s  \
+             launch {:>4.0} µs  dynamic {}  jit {:>4.1} ms  cap {:.2}  {:>4.1} W",
+            x.name,
+            x.peak_tflops,
+            x.gemm_efficiency,
+            x.attn_efficiency,
+            x.max_bw_gbps,
+            x.launch_overhead_us,
+            x.supports_dynamic,
+            x.jit_compile_ms,
+            x.util_cap,
+            x.active_power_w,
+        );
+    }
+    figures::fig_affinity(&soc);
+    Ok(())
+}

@@ -1,0 +1,7 @@
+//! Serving metrics (paper §8.1): TTFT, TPOT, *normalized latency*
+//! (mean TTFT / input length — the paper's headline per-request metric),
+//! throughput, per-XPU utilization, and energy (peak W, J/token).
+
+mod report;
+
+pub use report::{Aggregate, ReqMetrics, RunReport, percentile};

@@ -1,0 +1,253 @@
+//! Per-request and per-run measurement containers shared by every
+//! engine, plus the aggregates the figure harnesses print.
+
+use crate::soc::XpuSnapshot;
+use crate::util::json::Json;
+use crate::workload::{Priority, ReqId};
+
+/// Lifecycle timestamps of one served request (virtual µs).
+#[derive(Debug, Clone)]
+pub struct ReqMetrics {
+    pub id: ReqId,
+    pub priority: Priority,
+    pub profile: &'static str,
+    pub arrival_us: f64,
+    /// TTFT reference point: prefill completion / first token.
+    pub first_token_us: Option<f64>,
+    pub done_us: Option<f64>,
+    pub input_len: usize,
+    pub output_tokens: usize,
+}
+
+impl ReqMetrics {
+    pub fn ttft_us(&self) -> Option<f64> {
+        self.first_token_us.map(|t| t - self.arrival_us)
+    }
+
+    /// The paper's normalized latency: TTFT / input length (ms/token).
+    pub fn normalized_latency_ms(&self) -> Option<f64> {
+        self.ttft_us().map(|t| t / 1e3 / self.input_len as f64)
+    }
+
+    /// Mean time per output token after the first (ms).
+    pub fn tpot_ms(&self) -> Option<f64> {
+        match (self.first_token_us, self.done_us) {
+            (Some(f), Some(d)) if self.output_tokens > 1 => {
+                Some((d - f) / 1e3 / (self.output_tokens - 1) as f64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn e2e_us(&self) -> Option<f64> {
+        self.done_us.map(|d| d - self.arrival_us)
+    }
+
+    pub fn finished(&self) -> bool {
+        self.done_us.is_some()
+    }
+}
+
+/// Everything one engine run produces.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub engine: String,
+    pub reqs: Vec<ReqMetrics>,
+    pub xpus: Vec<XpuSnapshot>,
+    pub makespan_us: f64,
+    pub total_energy_j: f64,
+    pub peak_power_w: f64,
+    pub mean_bw_gbps: f64,
+    /// Proactive-task preemption count (scheduler introspection).
+    pub preemptions: u64,
+    /// Kernels launched via slack-aware backfill.
+    pub backfills: u64,
+}
+
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx]
+}
+
+/// Aggregate statistics over a priority class.
+#[derive(Debug, Clone)]
+pub struct Aggregate {
+    pub count: usize,
+    pub finished: usize,
+    pub mean_norm_latency_ms: f64,
+    pub p95_norm_latency_ms: f64,
+    pub mean_ttft_ms: f64,
+    pub mean_tpot_ms: f64,
+    pub tokens_per_s: f64,
+    pub reqs_per_s: f64,
+}
+
+impl RunReport {
+    pub fn class(&self, p: Priority) -> Aggregate {
+        let sel: Vec<&ReqMetrics> =
+            self.reqs.iter().filter(|r| r.priority == p).collect();
+        let fin: Vec<&ReqMetrics> = sel.iter().copied().filter(|r| r.finished()).collect();
+        let mut norms: Vec<f64> =
+            fin.iter().filter_map(|r| r.normalized_latency_ms()).collect();
+        norms.sort_by(|a, b| a.total_cmp(b));
+        let mean = |xs: &[f64]| {
+            if xs.is_empty() { f64::NAN } else { xs.iter().sum::<f64>() / xs.len() as f64 }
+        };
+        let ttfts: Vec<f64> =
+            fin.iter().filter_map(|r| r.ttft_us().map(|t| t / 1e3)).collect();
+        let tpots: Vec<f64> = fin.iter().filter_map(|r| r.tpot_ms()).collect();
+        let span_s = (self.makespan_us / 1e6).max(1e-9);
+        let tokens: usize = fin.iter().map(|r| r.output_tokens).sum();
+        Aggregate {
+            count: sel.len(),
+            finished: fin.len(),
+            mean_norm_latency_ms: mean(&norms),
+            p95_norm_latency_ms: percentile(&norms, 0.95),
+            mean_ttft_ms: mean(&ttfts),
+            mean_tpot_ms: mean(&tpots),
+            tokens_per_s: tokens as f64 / span_s,
+            reqs_per_s: fin.len() as f64 / span_s,
+        }
+    }
+
+    /// Total generated tokens (all classes).
+    pub fn total_tokens(&self) -> usize {
+        self.reqs.iter().filter(|r| r.finished()).map(|r| r.output_tokens).sum()
+    }
+
+    /// Energy per generated token (J/token) — the paper's efficiency
+    /// metric (§8.1).
+    pub fn joules_per_token(&self) -> f64 {
+        let t = self.total_tokens();
+        if t == 0 { f64::NAN } else { self.total_energy_j / t as f64 }
+    }
+
+    /// Fraction of the makespan each XPU was busy.
+    pub fn utilization(&self, name: &str) -> f64 {
+        self.xpus
+            .iter()
+            .find(|x| x.name == name)
+            .map(|x| x.busy_us / self.makespan_us.max(1e-9))
+            .unwrap_or(0.0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let cls = |p: Priority| {
+            let a = self.class(p);
+            Json::obj()
+                .set("count", a.count)
+                .set("finished", a.finished)
+                .set("mean_norm_latency_ms", a.mean_norm_latency_ms)
+                .set("p95_norm_latency_ms", a.p95_norm_latency_ms)
+                .set("mean_ttft_ms", a.mean_ttft_ms)
+                .set("mean_tpot_ms", a.mean_tpot_ms)
+                .set("tokens_per_s", a.tokens_per_s)
+                .set("reqs_per_s", a.reqs_per_s)
+        };
+        Json::obj()
+            .set("engine", self.engine.as_str())
+            .set("makespan_s", self.makespan_us / 1e6)
+            .set("reactive", cls(Priority::Reactive))
+            .set("proactive", cls(Priority::Proactive))
+            .set("total_energy_j", self.total_energy_j)
+            .set("peak_power_w", self.peak_power_w)
+            .set("joules_per_token", self.joules_per_token())
+            .set("mean_bw_gbps", self.mean_bw_gbps)
+            .set("preemptions", self.preemptions as usize)
+            .set("backfills", self.backfills as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, p: Priority, arr: f64, ttft: f64, done: f64, il: usize, ot: usize) -> ReqMetrics {
+        ReqMetrics {
+            id,
+            priority: p,
+            profile: "test",
+            arrival_us: arr,
+            first_token_us: Some(arr + ttft),
+            done_us: Some(arr + done),
+            input_len: il,
+            output_tokens: ot,
+        }
+    }
+
+    fn report(reqs: Vec<ReqMetrics>) -> RunReport {
+        RunReport {
+            engine: "test".into(),
+            reqs,
+            xpus: vec![],
+            makespan_us: 2e6,
+            total_energy_j: 10.0,
+            peak_power_w: 20.0,
+            mean_bw_gbps: 30.0,
+            preemptions: 0,
+            backfills: 0,
+        }
+    }
+
+    #[test]
+    fn normalized_latency_is_ttft_over_len() {
+        let r = req(1, Priority::Reactive, 1000.0, 50_000.0, 100_000.0, 100, 10);
+        assert!((r.normalized_latency_ms().unwrap() - 0.5).abs() < 1e-9);
+        assert!((r.ttft_us().unwrap() - 50_000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tpot_excludes_first_token() {
+        let r = req(1, Priority::Reactive, 0.0, 10_000.0, 100_000.0, 10, 10);
+        // 90 ms over 9 tokens
+        assert!((r.tpot_ms().unwrap() - 10.0).abs() < 1e-9);
+        let single = req(2, Priority::Reactive, 0.0, 10_000.0, 10_000.0, 10, 1);
+        assert!(single.tpot_ms().is_none());
+    }
+
+    #[test]
+    fn class_aggregates_split_priorities() {
+        let rep = report(vec![
+            req(1, Priority::Reactive, 0.0, 20_000.0, 50_000.0, 20, 5),
+            req(2, Priority::Proactive, 0.0, 200_000.0, 500_000.0, 100, 50),
+            req(3, Priority::Proactive, 0.0, 400_000.0, 900_000.0, 100, 45),
+        ]);
+        let r = rep.class(Priority::Reactive);
+        let p = rep.class(Priority::Proactive);
+        assert_eq!(r.count, 1);
+        assert_eq!(p.count, 2);
+        assert!((r.mean_norm_latency_ms - 1.0).abs() < 1e-9);
+        assert!((p.mean_norm_latency_ms - 3.0).abs() < 1e-9);
+        // 95 tokens over 2 s
+        assert!((p.tokens_per_s - 47.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn joules_per_token() {
+        let rep = report(vec![req(1, Priority::Proactive, 0.0, 1.0, 2.0, 10, 5)]);
+        assert!((rep.joules_per_token() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unfinished_requests_excluded_from_aggregates() {
+        let mut m = req(1, Priority::Reactive, 0.0, 1.0, 2.0, 10, 5);
+        m.first_token_us = None;
+        m.done_us = None;
+        let rep = report(vec![m]);
+        let a = rep.class(Priority::Reactive);
+        assert_eq!(a.count, 1);
+        assert_eq!(a.finished, 0);
+        assert!(a.mean_norm_latency_ms.is_nan());
+    }
+
+    #[test]
+    fn report_serializes() {
+        let rep = report(vec![req(1, Priority::Reactive, 0.0, 1000.0, 2000.0, 10, 5)]);
+        let j = rep.to_json();
+        assert_eq!(j.get("engine").unwrap().as_str().unwrap(), "test");
+        assert!(j.get("reactive").unwrap().get("mean_ttft_ms").is_ok());
+    }
+}

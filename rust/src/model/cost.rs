@@ -1,0 +1,283 @@
+//! Per-kernel FLOP/byte accounting.
+//!
+//! Conventions:
+//! - all weights/activations are f32 (4 bytes) — see DESIGN.md §9;
+//! - a matmul `[m,k]@[k,n]` counts `2*m*k*n` FLOPs;
+//! - memory traffic counts DDR-visible bytes: weight streaming,
+//!   activation in/out, and KV-cache read/write.  On-chip reuse within a
+//!   fused kernel is already excluded (the paper's op-group fusion is
+//!   what makes this the right accounting granularity, §5.2);
+//! - `gemm_flops` vs `attn_flops` are separated because op-XPU affinity
+//!   differs (§3.1): NPUs run static GEMM near peak but collapse on
+//!   dynamic attention.
+
+use crate::config::ModelGeometry;
+
+pub const BYTES_F32: f64 = 4.0;
+
+/// Cost annotation for one HEG kernel.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KernelCost {
+    /// Dense token-level matmul work (static-shape compilable).
+    pub gemm_flops: f64,
+    /// Sequence-level attention work (dynamic-shape).
+    pub attn_flops: f64,
+    /// DDR traffic (bytes): weights + activations + KV.
+    pub bytes: f64,
+    /// Transient working-set bytes while the kernel runs (activations +
+    /// scratch; weights are resident and accounted separately).
+    pub footprint_bytes: f64,
+    /// True if the kernel shape is not one of the precompiled static
+    /// variants (margin chunks, odd batches) — NPU pays JIT (§3.1).
+    pub is_dynamic: bool,
+}
+
+impl KernelCost {
+    pub fn zero() -> Self {
+        Self {
+            gemm_flops: 0.0,
+            attn_flops: 0.0,
+            bytes: 0.0,
+            footprint_bytes: 0.0,
+            is_dynamic: false,
+        }
+    }
+
+    pub fn total_flops(&self) -> f64 {
+        self.gemm_flops + self.attn_flops
+    }
+
+    /// Arithmetic intensity (FLOPs / byte) — the roofline x-axis.
+    pub fn arithmetic_intensity(&self) -> f64 {
+        if self.bytes == 0.0 { 0.0 } else { self.total_flops() / self.bytes }
+    }
+
+    fn add(mut self, o: &KernelCost) -> Self {
+        self.gemm_flops += o.gemm_flops;
+        self.attn_flops += o.attn_flops;
+        self.bytes += o.bytes;
+        self.footprint_bytes = self.footprint_bytes.max(o.footprint_bytes);
+        self.is_dynamic |= o.is_dynamic;
+        self
+    }
+}
+
+/// Per-layer weight bytes (streamed from DDR once per kernel).
+fn layer_weight_bytes(g: &ModelGeometry) -> f64 {
+    let kvd = g.n_kv_heads * g.head_dim;
+    let params = g.d_model * g.d_model            // wq
+        + 2 * g.d_model * kvd                     // wk, wv
+        + g.d_model * g.d_model                   // wo
+        + 3 * g.d_model * g.d_ffn                 // wg, wu, wd
+        + 2 * g.d_model;                          // norms
+    params as f64 * g.weight_bytes
+}
+
+/// Raw dense GEMM `[m,k]@[k,n]` (used by the §3.1 affinity/contention
+/// micro-benchmarks, mirroring the paper's profiled op shapes).
+pub fn gemm_cost(m: usize, k: usize, n: usize) -> KernelCost {
+    let flops = 2.0 * m as f64 * k as f64 * n as f64;
+    let bytes = (m * k + k * n + m * n) as f64 * BYTES_F32;
+    KernelCost {
+        gemm_flops: flops,
+        attn_flops: 0.0,
+        bytes,
+        footprint_bytes: (m * k + m * n) as f64 * BYTES_F32,
+        is_dynamic: false,
+    }
+}
+
+/// GEMV = GEMM with m=1 (the decode-time op of the paper's Fig. 3).
+pub fn gemv_cost(k: usize, n: usize) -> KernelCost {
+    gemm_cost(1, k, n)
+}
+
+/// Standalone GQA attention of `c` query tokens against `ctx` cached
+/// positions (the paper's MHA op; always dynamic-shape).
+pub fn mha_cost(g: &ModelGeometry, c: usize, ctx: usize) -> KernelCost {
+    let qh = g.n_q_heads as f64;
+    let hd = g.head_dim as f64;
+    // scores (c x ctx per q-head) + probs @ V
+    let flops = 2.0 * 2.0 * c as f64 * ctx as f64 * qh * hd;
+    let kv_bytes = 2.0 * ctx as f64 * (g.n_kv_heads * g.head_dim) as f64 * BYTES_F32;
+    let qo_bytes = 2.0 * c as f64 * qh * hd * BYTES_F32;
+    KernelCost {
+        gemm_flops: 0.0,
+        attn_flops: flops,
+        bytes: kv_bytes + qo_bytes,
+        footprint_bytes: (c * ctx * g.n_q_heads) as f64 * BYTES_F32,
+        is_dynamic: true,
+    }
+}
+
+/// One transformer layer over a prefill chunk: `valid` real tokens at
+/// positions `pos..pos+valid`, run as static chunk variant `chunk`
+/// (padded) or as a dynamic margin kernel when `valid < chunk`.
+///
+/// Includes the (tiny) embed share for layer 0 — embed is fused into the
+/// chunk's first kernel in the HEG.
+pub fn prefill_layer_cost(
+    g: &ModelGeometry,
+    chunk: usize,
+    valid: usize,
+    pos: usize,
+    is_dynamic: bool,
+) -> KernelCost {
+    // A static kernel computes all `chunk` rows (padding included); a
+    // dynamic margin kernel computes only `valid` rows.
+    let c = if is_dynamic { valid } else { chunk };
+    let d = g.d_model as f64;
+    let kvd = (g.n_kv_heads * g.head_dim) as f64;
+    let f = g.d_ffn as f64;
+    let cf = c as f64;
+    // qkv + o + swiglu(mlp): 2*c*d*(d + 2kvd + d) + 2*c*(2*d*f + f*d)
+    let gemm = 2.0 * cf * d * (2.0 * d + 2.0 * kvd) + 2.0 * cf * 3.0 * d * f;
+    let attn = mha_cost(g, valid, pos + valid);
+    let act_bytes = 2.0 * cf * d * BYTES_F32; // x in + out
+    let kv_write = 2.0 * cf * kvd * BYTES_F32;
+    KernelCost {
+        gemm_flops: gemm,
+        attn_flops: attn.attn_flops,
+        bytes: layer_weight_bytes(g) + act_bytes + kv_write + attn.bytes,
+        footprint_bytes: (cf * d * 4.0 + attn.footprint_bytes).max(cf * f * 2.0 * BYTES_F32),
+        is_dynamic,
+    }
+}
+
+/// One batched decode iteration: head (sampling) + embed + all layers
+/// for `lanes` sequences with mean context length `avg_ctx`.
+///
+/// This is the composite iGPU kernel the scheduler treats as one unit —
+/// backfill joins happen only at iteration boundaries (§6.3).
+pub fn decode_iter_cost(g: &ModelGeometry, lanes: usize, avg_ctx: usize) -> KernelCost {
+    let d = g.d_model as f64;
+    let kvd = (g.n_kv_heads * g.head_dim) as f64;
+    let f = g.d_ffn as f64;
+    let b = lanes as f64;
+    let mut total = KernelCost::zero();
+
+    // head: logits GEMV [b,d]@[d,V] — weights stream the whole embedding
+    let v = g.vocab as f64;
+    total = total.add(&KernelCost {
+        gemm_flops: 2.0 * b * d * v,
+        attn_flops: 0.0,
+        bytes: v * d * g.weight_bytes + (b * v + b * d) * BYTES_F32,
+        footprint_bytes: b * v * BYTES_F32,
+        is_dynamic: false,
+    });
+
+    // per layer: GEMV-shaped linear ops (weight-streaming dominated) +
+    // single-token attention over the cache
+    for _ in 0..g.n_layers {
+        let gemm = 2.0 * b * d * (2.0 * d + 2.0 * kvd) + 2.0 * b * 3.0 * d * f;
+        let attn = mha_cost(g, 1, avg_ctx);
+        total = total.add(&KernelCost {
+            gemm_flops: gemm,
+            attn_flops: attn.attn_flops * b,
+            bytes: layer_weight_bytes(g)
+                + 2.0 * b * d * BYTES_F32
+                + b * (attn.bytes + 2.0 * kvd * BYTES_F32),
+            footprint_bytes: b * d * 4.0 * BYTES_F32,
+            is_dynamic: false, // iGPU-batched variants are precompiled
+        });
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geo() -> ModelGeometry {
+        ModelGeometry {
+            name: "small".into(),
+            vocab: 2048,
+            d_model: 256,
+            n_layers: 6,
+            n_q_heads: 8,
+            n_kv_heads: 2,
+            head_dim: 32,
+            d_ffn: 704,
+            max_seq: 512,
+            chunk_sizes: vec![16, 32, 64, 128],
+            batch_sizes: vec![1, 2, 4, 8],
+            rope_theta: 10000.0,
+            weight_bytes: 4.0,
+        }
+    }
+
+    #[test]
+    fn gemm_is_compute_heavy_gemv_is_memory_heavy() {
+        // The paper's Fig. 3 premise: GEMM has high AI, GEMV low AI.
+        let gemm = gemm_cost(4096, 4096, 4096);
+        let gemv = gemv_cost(4096, 4096);
+        assert!(gemm.arithmetic_intensity() > 500.0, "{}", gemm.arithmetic_intensity());
+        assert!(gemv.arithmetic_intensity() < 1.0, "{}", gemv.arithmetic_intensity());
+    }
+
+    #[test]
+    fn prefill_gemm_flops_scale_with_chunk() {
+        let g = geo();
+        let c64 = prefill_layer_cost(&g, 64, 64, 0, false);
+        let c128 = prefill_layer_cost(&g, 128, 128, 0, false);
+        let ratio = c128.gemm_flops / c64.gemm_flops;
+        assert!((ratio - 2.0).abs() < 1e-9, "ratio {ratio}");
+    }
+
+    #[test]
+    fn attention_flops_grow_with_position() {
+        let g = geo();
+        let early = prefill_layer_cost(&g, 64, 64, 0, false);
+        let late = prefill_layer_cost(&g, 64, 64, 448, false);
+        assert!(late.attn_flops > 5.0 * early.attn_flops);
+        assert_eq!(late.gemm_flops, early.gemm_flops);
+    }
+
+    #[test]
+    fn margin_kernel_is_dynamic_and_cheaper() {
+        let g = geo();
+        let full = prefill_layer_cost(&g, 64, 64, 0, false);
+        let margin = prefill_layer_cost(&g, 64, 10, 0, true);
+        assert!(margin.is_dynamic);
+        assert!(margin.gemm_flops < full.gemm_flops / 5.0);
+    }
+
+    #[test]
+    fn decode_iter_is_memory_bound() {
+        let g = geo();
+        let c = decode_iter_cost(&g, 1, 256);
+        // decode AI must be tiny (weight streaming per token)
+        assert!(c.arithmetic_intensity() < 2.0, "{}", c.arithmetic_intensity());
+    }
+
+    #[test]
+    fn batching_decode_amortizes_weights() {
+        let g = geo();
+        let b1 = decode_iter_cost(&g, 1, 256);
+        let b8 = decode_iter_cost(&g, 8, 256);
+        // 8 lanes: ~8x flops but far less than 8x bytes (weights shared)
+        assert!(b8.total_flops() / b1.total_flops() > 7.0);
+        assert!(b8.bytes / b1.bytes < 3.0);
+    }
+
+    #[test]
+    fn prefill_chunk_dominated_by_gemm() {
+        let g = geo();
+        let c = prefill_layer_cost(&g, 128, 128, 0, false);
+        assert!(c.gemm_flops > 10.0 * c.attn_flops);
+    }
+
+    #[test]
+    fn costs_are_positive_and_finite() {
+        let g = geo();
+        for c in [
+            prefill_layer_cost(&g, 16, 3, 0, true),
+            decode_iter_cost(&g, 4, 1),
+            mha_cost(&g, 1, 1),
+            gemm_cost(1, 1, 1),
+        ] {
+            assert!(c.total_flops() > 0.0 && c.total_flops().is_finite());
+            assert!(c.bytes > 0.0 && c.bytes.is_finite());
+        }
+    }
+}

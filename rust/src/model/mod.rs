@@ -1,0 +1,16 @@
+//! Analytic model-kernel cost model: FLOPs, memory traffic, and
+//! footprints per HEG kernel, derived from the model geometry.
+//!
+//! This is the substrate behind the paper's *per-kernel predictive
+//! annotation* (§5.3): LLM kernels are idempotent dense linear algebra,
+//! so their op counts and byte traffic are exact functions of
+//! (geometry, chunk/batch, position) — which is what makes standalone
+//! execution time, bandwidth utilization, footprint, and power
+//! predictable enough to schedule against.
+
+mod cost;
+
+pub use cost::{
+    KernelCost, decode_iter_cost, gemm_cost, gemv_cost, mha_cost,
+    prefill_layer_cost,
+};

@@ -1,0 +1,342 @@
+//! Kernel executor: compiles the manifest's HLO modules once, keeps the
+//! weights resident, and exposes the per-kernel operations the HEG
+//! schedules (embed / layer_prefill / layer_decode / head).
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result, anyhow, bail};
+use xla::{FromRawBytes, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::config::{KernelKind, Manifest, ModelGeometry};
+
+use super::kvcache::{KvCache, assemble_batch, scatter_batch};
+use super::tensor::{HostTensor, literal_i32};
+
+/// Compiled artifacts + resident weights on the PJRT CPU client.
+pub struct Runtime {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    pub geo: ModelGeometry,
+    exes: HashMap<String, PjRtLoadedExecutable>,
+    /// Weights resident as device buffers (§Perf: uploaded once at
+    /// load, never re-transferred on the request path — on the paper's
+    /// unified-memory SoC this mirrors weights pinned in shared DRAM).
+    weight_bufs: HashMap<String, PjRtBuffer>,
+    /// Available variant sizes per kernel kind, sorted ascending.
+    variants: HashMap<KernelKind, Vec<usize>>,
+}
+
+// SAFETY: the PJRT CPU client and its compiled executables are
+// internally thread-safe (XLA's PjRt API contract); `Literal`s stored
+// here are only read after construction.  The xla crate merely forgot
+// the markers on its opaque pointer wrappers.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Load manifest + weights and compile every artifact.
+    pub fn load(artifact_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(&artifact_dir)?;
+        let geo = manifest.config.clone();
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e}"))?;
+
+        let mut exes = HashMap::new();
+        let mut variants: HashMap<KernelKind, Vec<usize>> = HashMap::new();
+        for (name, meta) in &manifest.artifacts {
+            let path = manifest.artifact_path(name)?;
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parse HLO {path:?}: {e}"))?;
+            let comp = XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e}"))?;
+            exes.insert(name.clone(), exe);
+            variants.entry(meta.kind).or_default().push(meta.n);
+        }
+        for v in variants.values_mut() {
+            v.sort_unstable();
+            v.dedup();
+        }
+
+        let weights_path = manifest.weights_path();
+        let loaded = Literal::read_npz(&weights_path, &())
+            .map_err(|e| anyhow!("read weights {weights_path:?}: {e}"))?;
+        let expected = geo.n_layers * manifest.layer_weight_names.len() + 2;
+        if loaded.len() != expected {
+            bail!("weights.npz has {} arrays, expected {expected}", loaded.len());
+        }
+        let mut weight_bufs = HashMap::new();
+        for (name, lit) in loaded {
+            // buffer_from_host_buffer copies synchronously
+            // (kImmutableOnlyDuringCall), so the literal may drop after
+            // this call; BufferFromHostLiteral would copy *async* and
+            // read freed memory.
+            let shape = lit.array_shape().map_err(|e| anyhow!("{e}"))?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            let data = lit.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+            let buf = client
+                .buffer_from_host_buffer(&data, &dims, None)
+                .map_err(|e| anyhow!("upload weight {name}: {e}"))?;
+            weight_bufs.insert(name, buf);
+        }
+
+        Ok(Self { client, manifest, geo, exes, weight_bufs, variants })
+    }
+
+    /// Smallest precompiled variant of `kind` covering `n` tokens/lanes.
+    pub fn variant_for(&self, kind: KernelKind, n: usize) -> Result<usize> {
+        self.variants
+            .get(&kind)
+            .and_then(|v| v.iter().copied().find(|&s| s >= n))
+            .with_context(|| format!("no {kind:?} variant covers n={n}"))
+    }
+
+    /// All precompiled variants of `kind`, ascending.
+    pub fn variants_of(&self, kind: KernelKind) -> &[usize] {
+        self.variants.get(&kind).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    fn weight(&self, name: &str) -> Result<&PjRtBuffer> {
+        self.weight_bufs
+            .get(name)
+            .with_context(|| format!("weight {name:?} missing"))
+    }
+
+    /// Debug/bench helper: public view of the per-layer weight buffers.
+    pub fn layer_weight_args_dbg(&self, layer: usize) -> Result<Vec<&PjRtBuffer>> {
+        self.layer_weight_args(layer)
+    }
+
+    fn layer_weight_args(&self, layer: usize) -> Result<Vec<&PjRtBuffer>> {
+        self.manifest
+            .layer_weight_names
+            .iter()
+            .map(|w| self.weight(&format!("l{layer}.{w}")))
+            .collect()
+    }
+
+    /// Upload host f32 data as a transient device buffer.
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload f32 {dims:?}: {e}"))
+    }
+
+    /// Upload host i32 data as a transient device buffer.
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload i32 {dims:?}: {e}"))
+    }
+
+    /// Execute artifact `name` over device buffers; returns the
+    /// decomposed output tuple (host literals).
+    pub fn execute_bufs(&self, name: &str, args: &[&PjRtBuffer]) -> Result<Vec<Literal>> {
+        let exe = self
+            .exes
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not compiled"))?;
+        let out = exe
+            .execute_b::<&PjRtBuffer>(args)
+            .map_err(|e| anyhow!("execute {name}: {e}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e}"))
+    }
+
+    /// Execute artifact `name` from host literals (uploads each arg).
+    /// Compatibility path for tests; the hot path uses `execute_bufs`.
+    /// The upload is synchronous, so the literals may drop afterwards.
+    pub fn execute(&self, name: &str, args: &[&Literal]) -> Result<Vec<Literal>> {
+        let bufs: Vec<PjRtBuffer> = args
+            .iter()
+            .map(|l| {
+                let shape = l.array_shape().map_err(|e| anyhow!("{e}"))?;
+                let dims: Vec<usize> =
+                    shape.dims().iter().map(|&d| d as usize).collect();
+                match l.ty().map_err(|e| anyhow!("{e}"))? {
+                    xla::ElementType::S32 => {
+                        let data = l.to_vec::<i32>().map_err(|e| anyhow!("{e}"))?;
+                        self.upload_i32(&data, &dims)
+                    }
+                    _ => {
+                        let data = l.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+                        self.upload_f32(&data, &dims)
+                    }
+                }
+            })
+            .collect::<Result<_>>()?;
+        let refs: Vec<&PjRtBuffer> = bufs.iter().collect();
+        self.execute_bufs(name, &refs)
+    }
+}
+
+/// High-level per-kernel model operations over a [`Runtime`] — the
+/// compute backend every engine (Agent.xpu and baselines) shares.
+pub struct ModelExecutor {
+    pub rt: std::sync::Arc<Runtime>,
+}
+
+impl ModelExecutor {
+    pub fn new(rt: std::sync::Arc<Runtime>) -> Self {
+        Self { rt }
+    }
+
+    pub fn geo(&self) -> &ModelGeometry {
+        &self.rt.geo
+    }
+
+    /// Embed `tokens`, padding to the chosen precompiled size `n`.
+    /// Returns `[n, d]` (caller tracks how many rows are valid).
+    pub fn embed(&self, tokens: &[i32], n: usize) -> Result<HostTensor> {
+        let mut padded = tokens.to_vec();
+        padded.resize(n, 0);
+        let toks = self.rt.upload_i32(&padded, &[n])?;
+        let emb = self.rt.weight("emb")?;
+        let outs = self.rt.execute_bufs(&format!("embed_n{n}"), &[&toks, emb])?;
+        HostTensor::from_literal(&outs[0])
+    }
+
+    /// One transformer layer over a prefill chunk.  `x` is `[c, d]`,
+    /// `pos` is the number of tokens already cached; updates the
+    /// request's layer-`layer` cache in place and returns the new `x`.
+    pub fn layer_prefill(
+        &self,
+        chunk: usize,
+        layer: usize,
+        x: &HostTensor,
+        cache: &mut KvCache,
+        pos: usize,
+    ) -> Result<HostTensor> {
+        let geo = &self.rt.geo;
+        let cdims = [geo.max_seq, geo.n_kv_heads, geo.head_dim];
+        let xl = self.rt.upload_f32(&x.data, &x.shape)?;
+        let kl = self.rt.upload_f32(&cache.k[layer], &cdims)?;
+        let vl = self.rt.upload_f32(&cache.v[layer], &cdims)?;
+        let pl = self.rt.upload_i32(&[pos as i32], &[1])?;
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&xl, &kl, &vl, &pl];
+        let wargs = self.rt.layer_weight_args(layer)?;
+        args.extend(wargs);
+        let outs = self
+            .rt
+            .execute_bufs(&format!("layer_prefill_c{chunk}"), &args)?;
+        cache.k[layer] = outs[1].to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+        cache.v[layer] = outs[2].to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+        HostTensor::from_literal(&outs[0])
+    }
+
+    /// One transformer layer of a batched decode step.  `x` is `[b, d]`
+    /// with `b == caches.len()` valid lanes (padded internally to the
+    /// precompiled batch variant); updates each request's cache in place.
+    pub fn layer_decode(
+        &self,
+        layer: usize,
+        x: &HostTensor,
+        caches: &mut [&mut KvCache],
+    ) -> Result<HostTensor> {
+        let geo = &self.rt.geo;
+        let b = caches.len();
+        let bv = self.rt.variant_for(KernelKind::LayerDecode, b)?;
+        let d = geo.d_model;
+        let per = geo.cache_elems();
+
+        // Assemble [bv, d] activations and [bv, s, kh, hd] caches with
+        // zero-padded scratch lanes.
+        let mut xd = x.data.clone();
+        xd.resize(bv * d, 0.0);
+        let ro_caches: Vec<&KvCache> = caches.iter().map(|c| &**c).collect();
+        let mut kb = assemble_batch(&ro_caches, layer, false);
+        let mut vb = assemble_batch(&ro_caches, layer, true);
+        kb.resize(bv * per, 0.0);
+        vb.resize(bv * per, 0.0);
+        let mut pos: Vec<i32> = ro_caches.iter().map(|c| c.pos as i32).collect();
+        pos.resize(bv, 0);
+
+        let cdims = [bv, geo.max_seq, geo.n_kv_heads, geo.head_dim];
+        let xl = self.rt.upload_f32(&xd, &[bv, d])?;
+        let kl = self.rt.upload_f32(&kb, &cdims)?;
+        let vl = self.rt.upload_f32(&vb, &cdims)?;
+        let plit = self.rt.upload_i32(&pos, &[bv])?;
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&xl, &kl, &vl, &plit];
+        let wargs = self.rt.layer_weight_args(layer)?;
+        args.extend(wargs);
+        let outs = self.rt.execute_bufs(&format!("layer_decode_b{bv}"), &args)?;
+
+        let knew = outs[1].to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+        let vnew = outs[2].to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+        scatter_batch(caches, layer, false, &knew[..b * per]);
+        scatter_batch(caches, layer, true, &vnew[..b * per]);
+        let y = HostTensor::from_literal(&outs[0])?;
+        // Drop padded lanes.
+        Ok(HostTensor::new(y.data[..b * d].to_vec(), &[b, d]))
+    }
+
+    /// Greedy next-token head over `[b, d]` hidden states.
+    pub fn head(&self, x: &HostTensor) -> Result<Vec<i32>> {
+        let b = x.shape[0];
+        let bv = self.rt.variant_for(KernelKind::Head, b)?;
+        let d = x.shape[1];
+        let mut xd = x.data.clone();
+        xd.resize(bv * d, 0.0);
+        let xl = self.rt.upload_f32(&xd, &[bv, d])?;
+        let norm = self.rt.weight("final_norm")?;
+        let emb = self.rt.weight("emb")?;
+        let outs = self.rt.execute_bufs(&format!("head_b{bv}"), &[&xl, norm, emb])?;
+        let toks = literal_i32(&outs[0])?;
+        Ok(toks[..b].to_vec())
+    }
+
+    /// Convenience: full sequential prefill of `prompt` with fixed
+    /// `chunk`, returning the last valid hidden row `[1, d]`.
+    pub fn prefill(
+        &self,
+        prompt: &[i32],
+        chunk: usize,
+        cache: &mut KvCache,
+    ) -> Result<HostTensor> {
+        let n_layers = self.rt.geo.n_layers;
+        let mut last = None;
+        let mut pos = 0usize;
+        while pos < prompt.len() {
+            let m = chunk.min(prompt.len() - pos);
+            let mut x = self.embed(&prompt[pos..pos + m], chunk)?;
+            for layer in 0..n_layers {
+                x = self.layer_prefill(chunk, layer, &x, cache, pos)?;
+            }
+            last = Some(x.row(m - 1));
+            pos += m;
+        }
+        cache.pos = prompt.len();
+        last.context("empty prompt")
+    }
+
+    /// Convenience: greedy single-sequence decode of `steps` tokens.
+    pub fn decode(
+        &self,
+        mut hidden: HostTensor,
+        cache: &mut KvCache,
+        steps: usize,
+    ) -> Result<Vec<i32>> {
+        let n_layers = self.rt.geo.n_layers;
+        let mut out = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            let tok = self.head(&hidden)?[0];
+            out.push(tok);
+            let mut x = self.embed(&[tok], 1)?;
+            for layer in 0..n_layers {
+                x = self.layer_decode(layer, &x, &mut [cache])?;
+            }
+            cache.pos += 1;
+            hidden = x;
+        }
+        Ok(out)
+    }
+
+    /// Convenience: prefill + decode (the golden-trajectory replay).
+    pub fn generate(&self, prompt: &[i32], chunk: usize, steps: usize) -> Result<Vec<i32>> {
+        let mut cache = KvCache::new(&self.rt.geo);
+        let hidden = self.prefill(prompt, chunk, &mut cache)?;
+        self.decode(hidden, &mut cache, steps)
+    }
+}

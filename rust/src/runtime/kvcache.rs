@@ -1,0 +1,141 @@
+//! Per-request KV caches and decode-batch assembly.
+//!
+//! Each request owns one `[max_seq, kv_heads, head_dim]` K and V buffer
+//! per layer, in host memory — the unified-memory design that makes the
+//! paper's kernel-boundary preemption checkpoints free (§6.2): a
+//! preempted request's context is just these buffers plus a position.
+//!
+//! Batched decode kernels take `[b, max_seq, kv_heads, head_dim]`
+//! tensors; `assemble_batch` / `scatter_batch` convert between the
+//! per-request and batched layouts at batch-membership changes.
+
+use crate::config::ModelGeometry;
+
+/// KV cache for one request: `k[layer]`, `v[layer]`, each
+/// `max_seq * kv_heads * head_dim` f32s.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    pub k: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+    /// Valid cached tokens (the next write position).
+    pub pos: usize,
+    cache_elems: usize,
+}
+
+impl KvCache {
+    pub fn new(geo: &ModelGeometry) -> Self {
+        let n = geo.cache_elems();
+        Self {
+            k: vec![vec![0.0; n]; geo.n_layers],
+            v: vec![vec![0.0; n]; geo.n_layers],
+            pos: 0,
+            cache_elems: n,
+        }
+    }
+
+    /// Bytes of host memory held by this cache (footprint accounting for
+    /// the kernel-level garbage collector / memory estimator).
+    pub fn bytes(&self) -> usize {
+        2 * self.k.len() * self.cache_elems * 4
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.k.len()
+    }
+}
+
+/// Gather lane `i` of each request's layer-`l` cache into one
+/// `[b, s, kh, hd]` buffer (b = `caches.len()`).
+pub fn assemble_batch(caches: &[&KvCache], layer: usize, which_v: bool) -> Vec<f32> {
+    let per = caches.first().map(|c| c.cache_elems).unwrap_or(0);
+    let mut out = Vec::with_capacity(per * caches.len());
+    for c in caches {
+        let src = if which_v { &c.v[layer] } else { &c.k[layer] };
+        out.extend_from_slice(src);
+    }
+    out
+}
+
+/// Scatter an updated `[b, s, kh, hd]` buffer back to per-request caches.
+pub fn scatter_batch(
+    caches: &mut [&mut KvCache],
+    layer: usize,
+    which_v: bool,
+    batch: &[f32],
+) {
+    let per = caches.first().map(|c| c.cache_elems).unwrap_or(0);
+    assert_eq!(batch.len(), per * caches.len(), "batch size mismatch");
+    for (i, c) in caches.iter_mut().enumerate() {
+        let dst = if which_v { &mut c.v[layer] } else { &mut c.k[layer] };
+        dst.copy_from_slice(&batch[i * per..(i + 1) * per]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geo() -> ModelGeometry {
+        ModelGeometry {
+            name: "t".into(),
+            vocab: 16,
+            d_model: 8,
+            n_layers: 2,
+            n_q_heads: 2,
+            n_kv_heads: 1,
+            head_dim: 4,
+            d_ffn: 16,
+            max_seq: 4,
+            chunk_sizes: vec![2],
+            batch_sizes: vec![1, 2],
+            rope_theta: 10000.0,
+            weight_bytes: 4.0,
+        }
+    }
+
+    #[test]
+    fn new_cache_is_zeroed() {
+        let c = KvCache::new(&geo());
+        assert_eq!(c.n_layers(), 2);
+        assert_eq!(c.pos, 0);
+        assert!(c.k[0].iter().all(|&x| x == 0.0));
+        // 2 (k+v) * 2 layers * 16 elems * 4 bytes
+        assert_eq!(c.bytes(), 256);
+    }
+
+    #[test]
+    fn assemble_scatter_roundtrip() {
+        let g = geo();
+        let mut a = KvCache::new(&g);
+        let mut b = KvCache::new(&g);
+        for (i, x) in a.k[0].iter_mut().enumerate() {
+            *x = i as f32;
+        }
+        for (i, x) in b.k[0].iter_mut().enumerate() {
+            *x = 100.0 + i as f32;
+        }
+        let batch = assemble_batch(&[&a, &b], 0, false);
+        assert_eq!(batch.len(), 32);
+        assert_eq!(batch[0], 0.0);
+        assert_eq!(batch[16], 100.0);
+
+        let mut batch2 = batch.clone();
+        for x in &mut batch2 {
+            *x += 1.0;
+        }
+        scatter_batch(&mut [&mut a, &mut b], 0, false, &batch2);
+        assert_eq!(a.k[0][0], 1.0);
+        assert_eq!(b.k[0][15], 116.0);
+        // v untouched
+        assert!(a.v[0].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn assemble_v_reads_v() {
+        let g = geo();
+        let mut a = KvCache::new(&g);
+        a.v[1][3] = 9.0;
+        let batch = assemble_batch(&[&a], 1, true);
+        assert_eq!(batch[3], 9.0);
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, keeps model weights resident, and executes
+//! kernels on the CPU PJRT client.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `client.compile` → `execute`.
+//! Interchange is HLO *text* because xla_extension 0.5.1 rejects
+//! jax≥0.5's 64-bit-id serialized protos.
+
+mod executor;
+mod kvcache;
+mod tensor;
+
+pub use executor::{ModelExecutor, Runtime};
+pub use kvcache::{KvCache, assemble_batch, scatter_batch};
+pub use tensor::{HostTensor, f32_literal, i32_literal, literal_f32, literal_i32};

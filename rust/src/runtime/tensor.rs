@@ -1,0 +1,110 @@
+//! Host-side tensor helpers: plain `Vec`-backed tensors plus conversions
+//! to/from `xla::Literal`.  All activation and KV-cache state lives on
+//! the host (the SoC's unified memory — DESIGN.md §1); PJRT copies are
+//! made at kernel-execution boundaries.
+
+use anyhow::{Result, anyhow};
+use xla::{ElementType, Literal};
+
+/// A host f32 tensor with an explicit shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl HostTensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { data: vec![0.0; n], shape: shape.to_vec() }
+    }
+
+    pub fn new(data: Vec<f32>, shape: &[usize]) -> Self {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        Self { data, shape: shape.to_vec() }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Row `i` of a 2-D tensor, as a new `[1, cols]` tensor.
+    pub fn row(&self, i: usize) -> HostTensor {
+        assert_eq!(self.shape.len(), 2, "row() needs a 2-D tensor");
+        let cols = self.shape[1];
+        HostTensor::new(self.data[i * cols..(i + 1) * cols].to_vec(), &[1, cols])
+    }
+
+    pub fn to_literal(&self) -> Result<Literal> {
+        f32_literal(&self.data, &self.shape)
+    }
+
+    pub fn from_literal(lit: &Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        Ok(Self { data: lit.to_vec::<f32>()?, shape: dims })
+    }
+}
+
+/// Build an f32 literal from host data.
+pub fn f32_literal(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Literal::create_from_shape_and_untyped_data(ElementType::F32, dims, bytes)
+        .map_err(|e| anyhow!("f32 literal: {e}"))
+}
+
+/// Build an i32 literal from host data.
+pub fn i32_literal(data: &[i32], dims: &[usize]) -> Result<Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Literal::create_from_shape_and_untyped_data(ElementType::S32, dims, bytes)
+        .map_err(|e| anyhow!("i32 literal: {e}"))
+}
+
+/// Read an f32 literal back to host.
+pub fn literal_f32(lit: &Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("literal->f32: {e}"))
+}
+
+/// Read an i32 literal back to host.
+pub fn literal_i32(lit: &Literal) -> Result<Vec<i32>> {
+    lit.to_vec::<i32>().map_err(|e| anyhow!("literal->i32: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_zeros_and_row() {
+        let t = HostTensor::zeros(&[3, 4]);
+        assert_eq!(t.numel(), 12);
+        let mut t = t;
+        t.data[4] = 1.5;
+        t.data[7] = -2.0;
+        let r = t.row(1);
+        assert_eq!(r.shape, vec![1, 4]);
+        assert_eq!(r.data, vec![1.5, 0.0, 0.0, -2.0]);
+    }
+
+    #[test]
+    fn f32_literal_roundtrip() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = f32_literal(&data, &[2, 3]).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        assert_eq!(literal_f32(&lit).unwrap(), data);
+        let t = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t.shape, vec![2, 3]);
+        assert_eq!(t.data, data);
+    }
+
+    #[test]
+    fn i32_literal_roundtrip() {
+        let data = vec![7i32, -1, 0, 42];
+        let lit = i32_literal(&data, &[4]).unwrap();
+        assert_eq!(literal_i32(&lit).unwrap(), data);
+    }
+}

@@ -1,0 +1,21 @@
+//! The serving frontend (paper §7): a JSON-lines protocol over Unix
+//! Domain Sockets, backed by a *real-time* miniature of the XPU
+//! coordinator running real PJRT compute.
+//!
+//! Wire protocol (one JSON object per line):
+//!
+//! ```text
+//! → {"type":"generate","priority":"reactive","prompt":[1,2,3],"max_new_tokens":8}
+//! ← {"type":"accepted","id":1}
+//! ← {"type":"token","id":1,"token":42,"n":1}
+//! ← ...
+//! ← {"type":"done","id":1,"ttft_ms":12.3,"total_ms":80.1,"tokens":[...]}
+//! → {"type":"stats"}
+//! ← {"type":"stats","served":3,"queued_reactive":0,"queued_proactive":1}
+//! ```
+
+mod rt;
+mod uds;
+
+pub use rt::{RtRequest, RtScheduler, TokenEvent, spawn};
+pub use uds::{Server, client_generate};

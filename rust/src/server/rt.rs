@@ -1,0 +1,333 @@
+//! Real-time scheduler: the online coordinator policy (dual queues,
+//! reactive-first kernel-level preemption, decode batching) executed
+//! against *wall-clock* time with real PJRT compute.
+//!
+//! The CPU PJRT substrate serializes kernel execution on one compute
+//! thread, so "the pipelines" collapse to one lane — but the scheduling
+//! decisions (who runs the next kernel, who joins the decode batch, who
+//! gets preempted at a kernel boundary) are exactly the coordinator's,
+//! which is what the serving frontend needs.
+
+use std::sync::Arc;
+use std::sync::mpsc::{Receiver, Sender, channel};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::engine::{ExecBridge, Phase, ReqState};
+use crate::workload::{Priority, ReqId, Request};
+
+/// A request submitted to the real-time scheduler.
+pub struct RtRequest {
+    pub id: ReqId,
+    pub priority: Priority,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    /// Streamed token events land here.
+    pub events: Sender<TokenEvent>,
+}
+
+/// Streamed output.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TokenEvent {
+    Accepted { id: ReqId },
+    Token { id: ReqId, token: i32, n: usize },
+    Done { id: ReqId, ttft_ms: f64, total_ms: f64, tokens: Vec<i32> },
+    Error { id: ReqId, message: String },
+}
+
+struct Active {
+    st: ReqState,
+    events: Sender<TokenEvent>,
+    t_arrive: Instant,
+    t_first: Option<Instant>,
+    sent: usize,
+}
+
+/// The real-time coordinator loop.  Owns the bridge (and through it the
+/// PJRT runtime); consumes `RtRequest`s from a channel until it closes.
+pub struct RtScheduler {
+    bridge: Arc<ExecBridge>,
+    b_max: usize,
+    max_chunk: usize,
+}
+
+impl RtScheduler {
+    pub fn new(bridge: Arc<ExecBridge>, b_max: usize) -> Self {
+        let max_chunk = bridge.geo.max_chunk();
+        Self { bridge, b_max, max_chunk }
+    }
+
+    /// Run until the request channel closes and all work drains.
+    pub fn serve(&self, rx: Receiver<RtRequest>) -> Result<u64> {
+        let mut active: Vec<Active> = vec![];
+        let mut served = 0u64;
+        let mut open = true;
+        loop {
+            // Admit — block only when there is nothing to do.
+            if open {
+                if active.is_empty() {
+                    match rx.recv() {
+                        Ok(r) => self.admit(&mut active, r),
+                        Err(_) => open = false,
+                    }
+                }
+                loop {
+                    match rx.try_recv() {
+                        Ok(r) => self.admit(&mut active, r),
+                        Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                        Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                            open = false;
+                            break;
+                        }
+                    }
+                }
+            }
+            if active.is_empty() {
+                if !open {
+                    return Ok(served);
+                }
+                continue;
+            }
+
+            // One scheduling decision = one kernel, reactive first
+            // (kernel-level preemption: proactive work pauses at this
+            // boundary whenever a reactive request is present).
+            self.run_one_kernel(&mut active)?;
+
+            // Retire finished requests.
+            let mut i = 0;
+            while i < active.len() {
+                if active[i].st.phase == Phase::Done {
+                    let a = active.swap_remove(i);
+                    let ttft = a
+                        .t_first
+                        .map(|t| t.duration_since(a.t_arrive).as_secs_f64() * 1e3)
+                        .unwrap_or(f64::NAN);
+                    let total = a.t_arrive.elapsed().as_secs_f64() * 1e3;
+                    let _ = a.events.send(TokenEvent::Done {
+                        id: a.st.id(),
+                        ttft_ms: ttft,
+                        total_ms: total,
+                        tokens: a.st.tokens.clone(),
+                    });
+                    served += 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+
+    fn admit(&self, active: &mut Vec<Active>, r: RtRequest) {
+        let req = Request {
+            id: r.id,
+            priority: r.priority,
+            arrival_us: 0.0,
+            prompt: r.prompt,
+            max_new_tokens: r.max_new_tokens,
+            profile: "uds",
+        };
+        let _ = r.events.send(TokenEvent::Accepted { id: req.id });
+        let st = self.bridge.init_state(req, self.max_chunk);
+        active.push(Active {
+            st,
+            events: r.events,
+            t_arrive: Instant::now(),
+            t_first: None,
+            sent: 0,
+        });
+    }
+
+    /// Pick and execute exactly one kernel according to the coordinator
+    /// policy: reactive prefill > reactive decode (with proactive
+    /// backfill) > proactive prefill > proactive decode batch.
+    fn run_one_kernel(&self, active: &mut Vec<Active>) -> Result<()> {
+        let pick_prefill = |active: &Vec<Active>, reactive: bool| -> Option<usize> {
+            let mut idxs: Vec<usize> = (0..active.len())
+                .filter(|&i| {
+                    active[i].st.phase == Phase::Prefilling
+                        && active[i].st.is_reactive() == reactive
+                })
+                .collect();
+            idxs.sort_by_key(|&i| active[i].st.id());
+            idxs.first().copied()
+        };
+        let decode_lanes = |active: &Vec<Active>, b_max: usize| -> Vec<usize> {
+            let mut rt: Vec<usize> = (0..active.len())
+                .filter(|&i| {
+                    active[i].st.phase == Phase::Decoding && active[i].st.is_reactive()
+                })
+                .collect();
+            let mut pro: Vec<usize> = (0..active.len())
+                .filter(|&i| {
+                    active[i].st.phase == Phase::Decoding && !active[i].st.is_reactive()
+                })
+                .collect();
+            rt.append(&mut pro);
+            rt.truncate(b_max);
+            rt
+        };
+
+        if let Some(i) = pick_prefill(active, true) {
+            self.prefill_step(&mut active[i])?;
+            return Ok(());
+        }
+        let lanes = {
+            let has_rt_decode = active
+                .iter()
+                .any(|a| a.st.phase == Phase::Decoding && a.st.is_reactive());
+            if has_rt_decode { decode_lanes(active, self.b_max) } else { vec![] }
+        };
+        if !lanes.is_empty() {
+            self.decode_step(active, &lanes)?;
+            return Ok(());
+        }
+        if let Some(i) = pick_prefill(active, false) {
+            self.prefill_step(&mut active[i])?;
+            return Ok(());
+        }
+        let lanes = decode_lanes(active, self.b_max);
+        if !lanes.is_empty() {
+            self.decode_step(active, &lanes)?;
+        }
+        Ok(())
+    }
+
+    fn prefill_step(&self, a: &mut Active) -> Result<()> {
+        let done = self.bridge.prefill_kernel_done(&mut a.st)?;
+        if done {
+            a.t_first = Some(Instant::now());
+            self.flush_tokens(a);
+        }
+        Ok(())
+    }
+
+    fn decode_step(&self, active: &mut Vec<Active>, lanes: &[usize]) -> Result<()> {
+        // take the lane states out to build &mut refs
+        let mut sorted: Vec<usize> = lanes.to_vec();
+        sorted.sort_unstable();
+        // split_at_mut-free approach: temporarily move the states
+        let mut taken: Vec<(usize, ReqState)> = vec![];
+        for &i in sorted.iter().rev() {
+            let st = std::mem::replace(
+                &mut active[i].st,
+                // placeholder; restored below
+                self.bridge.init_state(
+                    Request {
+                        id: u64::MAX,
+                        priority: Priority::Proactive,
+                        arrival_us: 0.0,
+                        prompt: vec![0],
+                        max_new_tokens: 1,
+                        profile: "placeholder",
+                    },
+                    self.max_chunk,
+                ),
+            );
+            taken.push((i, st));
+        }
+        {
+            let mut refs: Vec<&mut ReqState> =
+                taken.iter_mut().map(|(_, s)| s).collect();
+            self.bridge.decode_iter_done(&mut refs)?;
+        }
+        for (i, st) in taken {
+            active[i].st = st;
+            self.flush_tokens(&mut active[i]);
+        }
+        Ok(())
+    }
+
+    fn flush_tokens(&self, a: &mut Active) {
+        while a.sent < a.st.tokens.len() {
+            let tok = a.st.tokens[a.sent];
+            a.sent += 1;
+            let _ = a.events.send(TokenEvent::Token {
+                id: a.st.id(),
+                token: tok,
+                n: a.sent,
+            });
+        }
+    }
+}
+
+/// Convenience used by tests and the UDS layer: run a scheduler on its
+/// own thread, returning the request sender.
+pub fn spawn(bridge: Arc<ExecBridge>, b_max: usize) -> Sender<RtRequest> {
+    let (tx, rx) = channel();
+    std::thread::spawn(move || {
+        let sched = RtScheduler::new(bridge, b_max);
+        let _ = sched.serve(rx);
+    });
+    tx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::llama32_3b;
+
+    fn bridge() -> Arc<ExecBridge> {
+        let mut geo = llama32_3b();
+        geo.n_layers = 2;
+        Arc::new(ExecBridge::synthetic(geo))
+    }
+
+    fn submit(
+        tx: &Sender<RtRequest>,
+        id: u64,
+        priority: Priority,
+        plen: usize,
+        maxnew: usize,
+    ) -> Receiver<TokenEvent> {
+        let (etx, erx) = channel();
+        tx.send(RtRequest {
+            id,
+            priority,
+            prompt: vec![1; plen],
+            max_new_tokens: maxnew,
+            events: etx,
+        })
+        .unwrap();
+        erx
+    }
+
+    #[test]
+    fn serves_a_request_with_streaming() {
+        let tx = spawn(bridge(), 8);
+        let erx = submit(&tx, 1, Priority::Reactive, 100, 5);
+        drop(tx);
+        let events: Vec<TokenEvent> = erx.iter().collect();
+        assert!(matches!(events[0], TokenEvent::Accepted { id: 1 }));
+        let toks: Vec<&TokenEvent> = events
+            .iter()
+            .filter(|e| matches!(e, TokenEvent::Token { .. }))
+            .collect();
+        assert_eq!(toks.len(), 5);
+        match events.last().unwrap() {
+            TokenEvent::Done { id, tokens, ttft_ms, .. } => {
+                assert_eq!(*id, 1);
+                assert_eq!(tokens.len(), 5);
+                assert!(*ttft_ms >= 0.0);
+            }
+            e => panic!("expected Done, got {e:?}"),
+        }
+    }
+
+    #[test]
+    fn serves_concurrent_mixed_requests() {
+        let tx = spawn(bridge(), 8);
+        let rx1 = submit(&tx, 1, Priority::Proactive, 200, 8);
+        let rx2 = submit(&tx, 2, Priority::Reactive, 64, 4);
+        let rx3 = submit(&tx, 3, Priority::Proactive, 64, 4);
+        drop(tx);
+        for rx in [rx1, rx2, rx3] {
+            let events: Vec<TokenEvent> = rx.iter().collect();
+            assert!(
+                matches!(events.last().unwrap(), TokenEvent::Done { .. }),
+                "{events:?}"
+            );
+        }
+    }
+}

@@ -1,0 +1,284 @@
+//! Unix-Domain-Socket JSON-lines frontend (paper §7) over the real-time
+//! scheduler, plus a small blocking client helper.
+
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Sender, channel};
+
+use anyhow::{Context, Result, bail};
+
+use crate::engine::ExecBridge;
+use crate::util::json::Json;
+use crate::workload::Priority;
+
+use super::rt::{RtRequest, TokenEvent, spawn};
+
+/// The UDS server: accepts connections, parses request lines, streams
+/// responses.
+pub struct Server {
+    socket_path: PathBuf,
+    sched_tx: Sender<RtRequest>,
+    next_id: Arc<AtomicU64>,
+    served: Arc<AtomicU64>,
+}
+
+impl Server {
+    pub fn new(bridge: Arc<ExecBridge>, socket_path: impl AsRef<Path>, b_max: usize) -> Self {
+        Self {
+            socket_path: socket_path.as_ref().to_path_buf(),
+            sched_tx: spawn(bridge, b_max),
+            next_id: Arc::new(AtomicU64::new(1)),
+            served: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Bind and serve forever (one thread per connection).
+    pub fn run(&self) -> Result<()> {
+        let _ = std::fs::remove_file(&self.socket_path);
+        let listener = UnixListener::bind(&self.socket_path)
+            .with_context(|| format!("binding {:?}", self.socket_path))?;
+        eprintln!("agent-xpu serving on {:?}", self.socket_path);
+        for stream in listener.incoming() {
+            let stream = stream?;
+            let tx = self.sched_tx.clone();
+            let next_id = self.next_id.clone();
+            let served = self.served.clone();
+            std::thread::spawn(move || {
+                if let Err(e) = handle_conn(stream, tx, next_id, served) {
+                    eprintln!("connection error: {e:#}");
+                }
+            });
+        }
+        Ok(())
+    }
+}
+
+fn handle_conn(
+    stream: UnixStream,
+    tx: Sender<RtRequest>,
+    next_id: Arc<AtomicU64>,
+    served: Arc<AtomicU64>,
+) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let msg = match Json::parse(&line) {
+            Ok(m) => m,
+            Err(e) => {
+                // malformed-request resilience (§6.5 error handling)
+                writeln!(
+                    out,
+                    "{}",
+                    Json::obj().set("type", "error").set("message", format!("{e:#}"))
+                )?;
+                continue;
+            }
+        };
+        match msg.opt("type").and_then(|t| t.as_str().ok()) {
+            Some("generate") => {
+                let id = next_id.fetch_add(1, Ordering::SeqCst);
+                match submit_generate(&tx, &msg, id) {
+                    Ok(erx) => {
+                        for ev in erx.iter() {
+                            writeln!(out, "{}", event_json(&ev))?;
+                            if matches!(ev, TokenEvent::Done { .. } | TokenEvent::Error { .. }) {
+                                served.fetch_add(1, Ordering::SeqCst);
+                                break;
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        writeln!(
+                            out,
+                            "{}",
+                            Json::obj()
+                                .set("type", "error")
+                                .set("message", format!("{e:#}"))
+                        )?;
+                    }
+                }
+            }
+            Some("stats") => {
+                writeln!(
+                    out,
+                    "{}",
+                    Json::obj()
+                        .set("type", "stats")
+                        .set("served", served.load(Ordering::SeqCst) as usize)
+                )?;
+            }
+            other => {
+                writeln!(
+                    out,
+                    "{}",
+                    Json::obj()
+                        .set("type", "error")
+                        .set("message", format!("unknown type {other:?}"))
+                )?;
+            }
+        }
+    }
+}
+
+fn submit_generate(
+    tx: &Sender<RtRequest>,
+    msg: &Json,
+    id: u64,
+) -> Result<std::sync::mpsc::Receiver<TokenEvent>> {
+    let prompt = msg.get("prompt")?.as_i32_vec()?;
+    if prompt.is_empty() {
+        bail!("empty prompt");
+    }
+    let priority = match msg.opt("priority").and_then(|p| p.as_str().ok()) {
+        Some("proactive") => Priority::Proactive,
+        _ => Priority::Reactive,
+    };
+    let max_new_tokens = msg
+        .opt("max_new_tokens")
+        .map(|v| v.as_usize())
+        .unwrap_or(Ok(16))?;
+    let (etx, erx) = channel();
+    tx.send(RtRequest { id, priority, prompt, max_new_tokens, events: etx })
+        .map_err(|_| anyhow::anyhow!("scheduler is down"))?;
+    Ok(erx)
+}
+
+fn event_json(ev: &TokenEvent) -> Json {
+    match ev {
+        TokenEvent::Accepted { id } => Json::obj()
+            .set("type", "accepted")
+            .set("id", *id as usize),
+        TokenEvent::Token { id, token, n } => Json::obj()
+            .set("type", "token")
+            .set("id", *id as usize)
+            .set("token", *token)
+            .set("n", *n),
+        TokenEvent::Done { id, ttft_ms, total_ms, tokens } => Json::obj()
+            .set("type", "done")
+            .set("id", *id as usize)
+            .set("ttft_ms", *ttft_ms)
+            .set("total_ms", *total_ms)
+            .set("tokens", tokens.clone()),
+        TokenEvent::Error { id, message } => Json::obj()
+            .set("type", "error")
+            .set("id", *id as usize)
+            .set("message", message.as_str()),
+    }
+}
+
+/// Blocking client helper: send one generate request, return
+/// (tokens, ttft_ms, total_ms).
+pub fn client_generate(
+    socket_path: impl AsRef<Path>,
+    prompt: &[i32],
+    priority: Priority,
+    max_new_tokens: usize,
+) -> Result<(Vec<i32>, f64, f64)> {
+    let stream = UnixStream::connect(socket_path.as_ref())
+        .with_context(|| format!("connecting {:?}", socket_path.as_ref()))?;
+    let mut out = stream.try_clone()?;
+    let req = Json::obj()
+        .set("type", "generate")
+        .set("priority", priority.label())
+        .set("prompt", prompt.to_vec())
+        .set("max_new_tokens", max_new_tokens);
+    writeln!(out, "{req}")?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        let msg = Json::parse(&line)?;
+        match msg.get("type")?.as_str()? {
+            "done" => {
+                return Ok((
+                    msg.get("tokens")?.as_i32_vec()?,
+                    msg.get("ttft_ms")?.as_f64()?,
+                    msg.get("total_ms")?.as_f64()?,
+                ));
+            }
+            "error" => bail!("server error: {}", msg.get("message")?.as_str()?),
+            _ => {}
+        }
+    }
+    bail!("connection closed before done")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::llama32_3b;
+
+    fn tmp_socket(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("agent-xpu-test-{name}-{}.sock", std::process::id()))
+    }
+
+    fn start_server(name: &str) -> PathBuf {
+        let mut geo = llama32_3b();
+        geo.n_layers = 2;
+        let bridge = Arc::new(ExecBridge::synthetic(geo));
+        let path = tmp_socket(name);
+        let server = Server::new(bridge, &path, 8);
+        let p = path.clone();
+        std::thread::spawn(move || {
+            let _ = server.run();
+        });
+        // wait for bind
+        for _ in 0..200 {
+            if p.exists() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        path
+    }
+
+    #[test]
+    fn uds_roundtrip() {
+        let path = start_server("roundtrip");
+        let (tokens, ttft, total) =
+            client_generate(&path, &[1, 2, 3, 4], Priority::Reactive, 5).unwrap();
+        assert_eq!(tokens.len(), 5);
+        assert!(ttft >= 0.0 && total >= ttft);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn uds_rejects_garbage_then_keeps_serving() {
+        let path = start_server("garbage");
+        let stream = UnixStream::connect(&path).unwrap();
+        let mut out = stream.try_clone().unwrap();
+        writeln!(out, "this is not json").unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let msg = Json::parse(&line).unwrap();
+        assert_eq!(msg.get("type").unwrap().as_str().unwrap(), "error");
+        // the same connection still works
+        writeln!(out, "{}", Json::obj().set("type", "stats")).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(
+            Json::parse(&line).unwrap().get("type").unwrap().as_str().unwrap(),
+            "stats"
+        );
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn uds_empty_prompt_is_error() {
+        let path = start_server("empty");
+        let err = client_generate(&path, &[], Priority::Reactive, 3);
+        assert!(err.is_err());
+        let _ = std::fs::remove_file(path);
+    }
+}

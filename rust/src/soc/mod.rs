@@ -1,0 +1,15 @@
+//! The hetero-SoC substrate: virtual accelerators with roofline timing,
+//! a shared-DDR bandwidth arbiter with proportional contention, a power
+//! model, and the discrete-event simulator the engines schedule against.
+//!
+//! DESIGN.md §1 explains the substitution: the paper's Intel Core Ultra
+//! NPU/iGPU are unavailable, so *timing* comes from these calibrated
+//! models while kernel *numerics* still execute for real on PJRT CPU.
+//! All experiment figures are reported in this virtual time, which makes
+//! the reproduction deterministic.
+
+mod sim;
+mod xpu;
+
+pub use sim::{Completion, LaunchSpec, RunId, SocSim, XpuSnapshot};
+pub use xpu::{KernelTiming, XpuModel};

@@ -1,0 +1,468 @@
+//! Discrete-event SoC simulator with a shared-DDR bandwidth arbiter.
+//!
+//! Model: each XPU runs at most one kernel; a running kernel has a
+//! compute phase of `tc + launch` µs (advances at wall rate, private to
+//! the XPU) and a memory phase of `tm` µs (advances at the *contended*
+//! rate).  When the sum of active kernels' bandwidth demands exceeds the
+//! DDR peak, every active memory phase is scaled by
+//! `s = peak / Σ demand` — the proportional-share contention that
+//! reproduces the paper's Fig. 3: co-executed memory-bound GEMVs stretch
+//! while compute-bound GEMMs are barely affected.
+//!
+//! The scale factor only changes at launch/finish events, so piecewise
+//! integration between events is exact and the simulation is fully
+//! deterministic.
+
+use super::xpu::{KernelTiming, XpuModel};
+use crate::config::SocConfig;
+
+pub type RunId = u64;
+
+const EPS: f64 = 1e-6;
+
+/// What the engine hands the simulator at kernel launch.
+#[derive(Debug, Clone)]
+pub struct LaunchSpec {
+    pub timing: KernelTiming,
+    /// Reactive (real-time) or proactive (best-effort) — recorded for
+    /// traces and pressure policies.
+    pub reactive: bool,
+}
+
+/// A finished kernel execution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Completion {
+    pub id: RunId,
+    pub xpu: usize,
+    pub started_us: f64,
+    pub finished_us: f64,
+}
+
+#[derive(Debug, Clone)]
+struct Run {
+    id: RunId,
+    tc_left: f64,
+    tm_left: f64,
+    bw_gbps: f64,
+    power_w: f64,
+    started_us: f64,
+    #[allow(dead_code)]
+    reactive: bool,
+    /// tm > tc at launch (for selective pairing, §6.4).
+    memory_bound: bool,
+}
+
+impl Run {
+    fn finished(&self) -> bool {
+        self.tc_left <= EPS && self.tm_left <= EPS
+    }
+
+    /// Remaining wall time under memory scale `s`.
+    fn remaining(&self, s: f64) -> f64 {
+        let tm = if s > 0.0 { self.tm_left / s } else { f64::INFINITY };
+        self.tc_left.max(tm)
+    }
+}
+
+/// Per-XPU utilization/energy snapshot.
+#[derive(Debug, Clone, Default)]
+pub struct XpuSnapshot {
+    pub name: String,
+    pub busy_us: f64,
+    pub energy_j: f64,
+    pub kernels: u64,
+}
+
+/// The simulated SoC.
+pub struct SocSim {
+    pub xpus: Vec<XpuModel>,
+    slots: Vec<Option<Run>>,
+    pub now_us: f64,
+    ddr_bw_gbps: f64,
+    next_id: RunId,
+    busy_us: Vec<f64>,
+    energy_j: Vec<f64>,
+    kernels: Vec<u64>,
+    /// Σ over time of (achieved DDR bandwidth · dt) for mean-BW reporting.
+    bw_integral_gb: f64,
+    pub peak_power_w: f64,
+}
+
+impl SocSim {
+    pub fn new(cfg: &SocConfig) -> Self {
+        let xpus: Vec<XpuModel> =
+            cfg.xpus.iter().cloned().map(XpuModel::new).collect();
+        let n = xpus.len();
+        Self {
+            xpus,
+            slots: vec![None; n],
+            now_us: 0.0,
+            ddr_bw_gbps: cfg.ddr_bw_gbps,
+            next_id: 1,
+            busy_us: vec![0.0; n],
+            energy_j: vec![0.0; n],
+            kernels: vec![0; n],
+            bw_integral_gb: 0.0,
+            peak_power_w: 0.0,
+        }
+    }
+
+    pub fn xpu_index(&self, name: &str) -> Option<usize> {
+        self.xpus.iter().position(|x| x.name() == name)
+    }
+
+    pub fn busy(&self, xpu: usize) -> bool {
+        self.slots[xpu].is_some()
+    }
+
+    pub fn idle_xpus(&self) -> Vec<usize> {
+        (0..self.slots.len()).filter(|&i| !self.busy(i)).collect()
+    }
+
+    /// Current memory pressure P_mem(t) = Σ BW_k / BW_peak (§6.4).
+    /// May exceed 1.0 when oversubscribed.
+    pub fn memory_pressure(&self) -> f64 {
+        self.demand_sum() / self.ddr_bw_gbps
+    }
+
+    /// Pressure increase ΔP that launching `t` would cause.
+    pub fn pressure_increase(&self, t: &KernelTiming) -> f64 {
+        t.bw_gbps / self.ddr_bw_gbps
+    }
+
+    fn demand_sum(&self) -> f64 {
+        self.slots
+            .iter()
+            .flatten()
+            .filter(|r| r.tm_left > EPS)
+            .map(|r| r.bw_gbps)
+            .sum()
+    }
+
+    /// True when no XPU is executing anything.
+    pub fn all_idle(&self) -> bool {
+        self.slots.iter().all(|s| s.is_none())
+    }
+
+    /// Is any active kernel memory-bound (tm-dominated)?  Feeds the
+    /// medium-pressure "selective pairing" tier of Algorithm 1.
+    pub fn any_active_memory_bound(&self) -> bool {
+        self.slots.iter().flatten().any(|r| r.memory_bound)
+    }
+
+    /// Proportional-share memory scale: 1 when unsaturated.
+    fn scale(&self) -> f64 {
+        let d = self.demand_sum();
+        if d <= self.ddr_bw_gbps { 1.0 } else { self.ddr_bw_gbps / d }
+    }
+
+    /// Launch a kernel on `xpu` (panics if busy — the scheduler owns the
+    /// invariant; see coordinator::dispatch).
+    pub fn launch(&mut self, xpu: usize, spec: LaunchSpec) -> RunId {
+        assert!(!self.busy(xpu), "XPU {xpu} already busy");
+        let id = self.next_id;
+        self.next_id += 1;
+        let launch_us = self.xpus[xpu].cfg.launch_overhead_us;
+        self.slots[xpu] = Some(Run {
+            id,
+            tc_left: spec.timing.tc_us + launch_us,
+            tm_left: spec.timing.tm_us,
+            bw_gbps: spec.timing.bw_gbps,
+            power_w: spec.timing.power_w,
+            started_us: self.now_us,
+            reactive: spec.reactive,
+            memory_bound: spec.timing.tm_us > spec.timing.tc_us,
+        });
+        self.kernels[xpu] += 1;
+        id
+    }
+
+    /// Abort the kernel on `xpu` (scheme-(a) baseline: instant preemption
+    /// discards in-flight work).  Returns the aborted run id.
+    pub fn cancel(&mut self, xpu: usize) -> Option<RunId> {
+        self.slots[xpu].take().map(|r| r.id)
+    }
+
+    /// Earliest time any running kernel could finish (µs from now).
+    pub fn next_event_in(&self) -> Option<f64> {
+        let s = self.scale();
+        self.slots
+            .iter()
+            .flatten()
+            .map(|r| r.remaining(s))
+            .min_by(|a, b| a.total_cmp(b))
+    }
+
+    /// Advance virtual time to `t_target` at the latest, stopping at the
+    /// first completion instant.  Returns the kernels that finished
+    /// (possibly several, if they tie).
+    pub fn advance_until(&mut self, t_target: f64) -> Vec<Completion> {
+        assert!(t_target >= self.now_us - EPS, "time went backwards");
+        loop {
+            let s = self.scale();
+            let next_fin = self
+                .slots
+                .iter()
+                .flatten()
+                .map(|r| r.remaining(s))
+                .min_by(|a, b| a.total_cmp(b));
+            let dt_target = t_target - self.now_us;
+            match next_fin {
+                None => {
+                    self.integrate(dt_target.max(0.0), s);
+                    self.now_us = t_target;
+                    return vec![];
+                }
+                Some(rem) if rem > dt_target + EPS => {
+                    self.integrate(dt_target.max(0.0), s);
+                    self.now_us = t_target;
+                    return vec![];
+                }
+                Some(rem) => {
+                    self.integrate(rem, s);
+                    self.now_us += rem;
+                    let mut done = vec![];
+                    for (xpu, slot) in self.slots.iter_mut().enumerate() {
+                        if slot.as_ref().map(|r| r.finished()).unwrap_or(false) {
+                            let r = slot.take().unwrap();
+                            done.push(Completion {
+                                id: r.id,
+                                xpu,
+                                started_us: r.started_us,
+                                finished_us: self.now_us,
+                            });
+                        }
+                    }
+                    if !done.is_empty() {
+                        return done;
+                    }
+                    // numerical corner: nothing crossed the threshold;
+                    // keep integrating
+                }
+            }
+        }
+    }
+
+    /// Piecewise-exact progress + accounting over `dt` at scale `s`.
+    fn integrate(&mut self, dt: f64, s: f64) {
+        if dt <= 0.0 {
+            return;
+        }
+        let mut power_now = 0.0;
+        let mut achieved_bw = 0.0;
+        for (i, slot) in self.slots.iter_mut().enumerate() {
+            match slot {
+                Some(r) => {
+                    r.tc_left = (r.tc_left - dt).max(0.0);
+                    if r.tm_left > EPS {
+                        achieved_bw += r.bw_gbps * s;
+                    }
+                    r.tm_left = (r.tm_left - dt * s).max(0.0);
+                    self.busy_us[i] += dt;
+                    self.energy_j[i] += r.power_w * dt * 1e-6;
+                    power_now += r.power_w;
+                }
+                None => {
+                    let idle = self.xpus[i].cfg.idle_power_w;
+                    self.energy_j[i] += idle * dt * 1e-6;
+                    power_now += idle;
+                }
+            }
+        }
+        self.bw_integral_gb += achieved_bw * dt * 1e-6;
+        self.peak_power_w = self.peak_power_w.max(power_now);
+    }
+
+    /// Mean achieved DDR bandwidth since t=0 (GB/s).
+    pub fn mean_bandwidth_gbps(&self) -> f64 {
+        if self.now_us <= 0.0 { 0.0 } else { self.bw_integral_gb / (self.now_us * 1e-6) }
+    }
+
+    /// Instantaneous achieved DDR bandwidth (GB/s).
+    pub fn current_bandwidth_gbps(&self) -> f64 {
+        let s = self.scale();
+        self.slots
+            .iter()
+            .flatten()
+            .filter(|r| r.tm_left > EPS)
+            .map(|r| r.bw_gbps * s)
+            .sum()
+    }
+
+    pub fn snapshot(&self) -> Vec<XpuSnapshot> {
+        (0..self.xpus.len())
+            .map(|i| XpuSnapshot {
+                name: self.xpus[i].name().to_string(),
+                busy_us: self.busy_us[i],
+                energy_j: self.energy_j[i],
+                kernels: self.kernels[i],
+            })
+            .collect()
+    }
+
+    pub fn total_energy_j(&self) -> f64 {
+        self.energy_j.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::default_soc;
+    use crate::model::{gemm_cost, gemv_cost};
+
+    fn sim() -> SocSim {
+        SocSim::new(&default_soc())
+    }
+
+    fn run_to_completion(sim: &mut SocSim) -> Vec<Completion> {
+        let mut all = vec![];
+        while sim.next_event_in().is_some() {
+            all.extend(sim.advance_until(sim.now_us + 1e12));
+        }
+        all
+    }
+
+    #[test]
+    fn standalone_kernel_matches_nominal() {
+        let mut s = sim();
+        let npu = s.xpu_index("npu").unwrap();
+        let t = s.xpus[npu].timing(&gemm_cost(1024, 1024, 1024));
+        s.launch(npu, LaunchSpec { timing: t, reactive: false });
+        let done = run_to_completion(&mut s);
+        assert_eq!(done.len(), 1);
+        assert!(
+            (done[0].finished_us - t.nominal_us).abs() < 1.0,
+            "got {} want {}",
+            done[0].finished_us,
+            t.nominal_us
+        );
+    }
+
+    #[test]
+    fn coexec_gemv_stretches_gemm_does_not() {
+        // Fig. 3: memory-bound co-execution stretches; compute-bound
+        // co-execution is latency-friendly.
+        let soc = default_soc();
+
+        // GEMM on NPU + GEMM on iGPU
+        let mut s = SocSim::new(&soc);
+        let (npu, igpu) = (s.xpu_index("npu").unwrap(), s.xpu_index("igpu").unwrap());
+        let g = gemm_cost(2048, 2048, 2048);
+        let tn = s.xpus[npu].timing(&g);
+        let ti = s.xpus[igpu].timing(&g);
+        s.launch(npu, LaunchSpec { timing: tn, reactive: false });
+        s.launch(igpu, LaunchSpec { timing: ti, reactive: false });
+        let done = run_to_completion(&mut s);
+        for c in &done {
+            let nominal = if c.xpu == npu { tn.nominal_us } else { ti.nominal_us };
+            let stretch = (c.finished_us - c.started_us) / nominal;
+            assert!(stretch < 1.05, "GEMM stretched {stretch}");
+        }
+
+        // GEMV on NPU + GEMV on iGPU: 60+70 GB/s demanded > 89.6 peak
+        let mut s = SocSim::new(&soc);
+        let v = gemv_cost(8192, 8192);
+        let tn = s.xpus[npu].timing(&v);
+        let ti = s.xpus[igpu].timing(&v);
+        s.launch(npu, LaunchSpec { timing: tn, reactive: false });
+        s.launch(igpu, LaunchSpec { timing: ti, reactive: false });
+        let done = run_to_completion(&mut s);
+        let mut stretched = 0;
+        for c in &done {
+            let nominal = if c.xpu == npu { tn.nominal_us } else { ti.nominal_us };
+            let stretch = (c.finished_us - c.started_us) / nominal;
+            if stretch > 1.2 {
+                stretched += 1;
+            }
+        }
+        assert!(stretched >= 1, "GEMV co-execution should stretch");
+    }
+
+    #[test]
+    fn pressure_reflects_active_demands() {
+        let mut s = sim();
+        assert_eq!(s.memory_pressure(), 0.0);
+        let igpu = s.xpu_index("igpu").unwrap();
+        let t = s.xpus[igpu].timing(&gemv_cost(8192, 8192));
+        s.launch(igpu, LaunchSpec { timing: t, reactive: false });
+        let p = s.memory_pressure();
+        assert!(p > 0.5, "GEMV pressure {p}");
+        run_to_completion(&mut s);
+        assert_eq!(s.memory_pressure(), 0.0);
+    }
+
+    #[test]
+    fn cancel_frees_the_slot() {
+        let mut s = sim();
+        let npu = s.xpu_index("npu").unwrap();
+        let t = s.xpus[npu].timing(&gemm_cost(2048, 2048, 2048));
+        let id = s.launch(npu, LaunchSpec { timing: t, reactive: false });
+        assert!(s.busy(npu));
+        assert_eq!(s.cancel(npu), Some(id));
+        assert!(!s.busy(npu));
+        assert!(run_to_completion(&mut s).is_empty());
+    }
+
+    #[test]
+    fn advance_without_work_jumps_clock() {
+        let mut s = sim();
+        let done = s.advance_until(5_000.0);
+        assert!(done.is_empty());
+        assert_eq!(s.now_us, 5_000.0);
+        // idle power accrues
+        assert!(s.total_energy_j() > 0.0);
+    }
+
+    #[test]
+    fn determinism() {
+        let mk = || {
+            let mut s = sim();
+            let npu = s.xpu_index("npu").unwrap();
+            let igpu = s.xpu_index("igpu").unwrap();
+            let t1 = s.xpus[npu].timing(&gemm_cost(1024, 1024, 1024));
+            let t2 = s.xpus[igpu].timing(&gemv_cost(8192, 8192));
+            s.launch(npu, LaunchSpec { timing: t1, reactive: true });
+            s.launch(igpu, LaunchSpec { timing: t2, reactive: false });
+            run_to_completion(&mut s)
+        };
+        assert_eq!(mk(), mk());
+    }
+
+    #[test]
+    fn energy_and_busy_accounting() {
+        let mut s = sim();
+        let npu = s.xpu_index("npu").unwrap();
+        let t = s.xpus[npu].timing(&gemm_cost(1024, 1024, 1024));
+        s.launch(npu, LaunchSpec { timing: t, reactive: false });
+        run_to_completion(&mut s);
+        let snap = s.snapshot();
+        let n = &snap[npu];
+        assert_eq!(n.kernels, 1);
+        assert!((n.busy_us - t.nominal_us).abs() < 1.0);
+        // E ≈ P·t
+        let expect_j = s.xpus[npu].cfg.active_power_w * t.nominal_us * 1e-6;
+        assert!((n.energy_j - expect_j).abs() / expect_j < 0.01);
+        assert!(s.peak_power_w >= s.xpus[npu].cfg.active_power_w);
+    }
+
+    #[test]
+    fn mean_bandwidth_positive_under_load() {
+        let mut s = sim();
+        let igpu = s.xpu_index("igpu").unwrap();
+        let t = s.xpus[igpu].timing(&gemv_cost(8192, 8192));
+        s.launch(igpu, LaunchSpec { timing: t, reactive: false });
+        run_to_completion(&mut s);
+        assert!(s.mean_bandwidth_gbps() > 10.0);
+        assert!(s.current_bandwidth_gbps() == 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "already busy")]
+    fn double_launch_panics() {
+        let mut s = sim();
+        let t = s.xpus[0].timing(&gemm_cost(64, 64, 64));
+        s.launch(0, LaunchSpec { timing: t, reactive: false });
+        s.launch(0, LaunchSpec { timing: t, reactive: false });
+    }
+}

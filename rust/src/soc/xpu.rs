@@ -1,0 +1,188 @@
+//! Virtual accelerator timing: KernelCost → roofline execution profile
+//! on a given XPU.  This is the paper's *standalone execution time* and
+//! *memory bandwidth utilization* annotation (§5.3), parameterized by
+//! the op-XPU affinities measured in §3.1.
+
+use crate::config::XpuConfig;
+use crate::model::KernelCost;
+
+/// How a kernel runs on one XPU, before memory contention.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KernelTiming {
+    /// Pure-compute time at this XPU's effective throughput (µs).
+    pub tc_us: f64,
+    /// Pure-memory time at this XPU's standalone bandwidth (µs).
+    pub tm_us: f64,
+    /// Standalone (uncontended) duration: launch + max(tc, tm) (µs).
+    pub nominal_us: f64,
+    /// Bandwidth this kernel draws while its memory phase runs (GB/s).
+    pub bw_gbps: f64,
+    /// Dynamic power while the kernel runs (W).
+    pub power_w: f64,
+}
+
+/// A virtual accelerator (thin wrapper adding behaviour to the config).
+#[derive(Debug, Clone)]
+pub struct XpuModel {
+    pub cfg: XpuConfig,
+}
+
+impl XpuModel {
+    pub fn new(cfg: XpuConfig) -> Self {
+        Self { cfg }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.cfg.name
+    }
+
+    /// Can this XPU execute the kernel at all?  (Dynamic kernels are
+    /// *possible* on a static-only NPU, but pay the JIT cost.)
+    pub fn runs_natively(&self, cost: &KernelCost) -> bool {
+        self.cfg.supports_dynamic || !cost.is_dynamic
+    }
+
+    /// Roofline timing of `cost` on this XPU (standalone).
+    pub fn timing(&self, cost: &KernelCost) -> KernelTiming {
+        let c = &self.cfg;
+        let gemm_rate = c.peak_tflops * 1e12 * c.gemm_efficiency * c.util_cap;
+        let attn_rate = c.peak_tflops * 1e12 * c.attn_efficiency * c.util_cap;
+        let mut tc_us =
+            (cost.gemm_flops / gemm_rate + cost.attn_flops / attn_rate) * 1e6;
+        if cost.is_dynamic && !c.supports_dynamic {
+            // amortized JIT compilation of a dynamic-shape kernel (§3.1)
+            tc_us += c.jit_compile_ms * 1e3;
+        }
+        let tm_us = cost.bytes / (c.max_bw_gbps * 1e9) * 1e6;
+        // Launch overhead serializes with compute (it is host-side work);
+        // the memory phase can overlap it.  This matches the simulator's
+        // progress model exactly: duration = max(tc + launch, tm).
+        let body = (tc_us + c.launch_overhead_us).max(tm_us);
+        let nominal_us = body;
+        // Bandwidth demand: traffic spread over the body duration,
+        // capped at the XPU's link width.
+        let bw_gbps = if body > 0.0 {
+            (cost.bytes / (body * 1e-6) / 1e9).min(c.max_bw_gbps)
+        } else {
+            0.0
+        };
+        KernelTiming {
+            tc_us,
+            tm_us,
+            nominal_us,
+            bw_gbps,
+            power_w: c.active_power_w,
+        }
+    }
+
+    /// Achieved FLOP/s of `cost` on this XPU (standalone) — the roofline
+    /// y-axis of the paper's op-XPU affinity study.
+    pub fn achieved_tflops(&self, cost: &KernelCost) -> f64 {
+        let t = self.timing(cost);
+        cost.total_flops() / (t.nominal_us * 1e-6) / 1e12
+    }
+
+    /// Energy efficiency (TFLOPS/W) — the backfill candidate ranking
+    /// metric (§6.3) and the second roofline axis.
+    pub fn tflops_per_watt(&self, cost: &KernelCost) -> f64 {
+        self.achieved_tflops(cost) / self.cfg.active_power_w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::default_soc;
+    use crate::model::{decode_iter_cost, gemm_cost, gemv_cost, mha_cost, prefill_layer_cost};
+    use crate::config::ModelGeometry;
+
+    fn geo() -> ModelGeometry {
+        ModelGeometry {
+            name: "small".into(),
+            vocab: 2048,
+            d_model: 256,
+            n_layers: 6,
+            n_q_heads: 8,
+            n_kv_heads: 2,
+            head_dim: 32,
+            d_ffn: 704,
+            max_seq: 512,
+            chunk_sizes: vec![16, 32, 64, 128],
+            batch_sizes: vec![1, 2, 4, 8],
+            rope_theta: 10000.0,
+            weight_bytes: 4.0,
+        }
+    }
+
+    fn npu() -> XpuModel {
+        XpuModel::new(default_soc().xpu("npu").unwrap().clone())
+    }
+    fn igpu() -> XpuModel {
+        XpuModel::new(default_soc().xpu("igpu").unwrap().clone())
+    }
+
+    #[test]
+    fn npu_beats_igpu_on_static_gemm() {
+        // §3.1: "For GEMM, NPU manifests superior efficiency"
+        let c = gemm_cost(4096, 4096, 4096);
+        assert!(npu().achieved_tflops(&c) > igpu().achieved_tflops(&c));
+        assert!(npu().tflops_per_watt(&c) > 3.0 * igpu().tflops_per_watt(&c));
+    }
+
+    #[test]
+    fn igpu_beats_npu_on_dynamic_mha() {
+        // §3.1: "MHA poses a significant performance bottleneck for the NPU"
+        let c = mha_cost(&geo(), 256, 256);
+        assert!(igpu().achieved_tflops(&c) > 2.0 * npu().achieved_tflops(&c));
+    }
+
+    #[test]
+    fn npu_pays_jit_on_dynamic_kernels() {
+        let g = geo();
+        let static_k = prefill_layer_cost(&g, 64, 64, 0, false);
+        let dynamic_k = prefill_layer_cost(&g, 64, 64, 0, true);
+        let n = npu();
+        let dt = n.timing(&dynamic_k).nominal_us - n.timing(&static_k).nominal_us;
+        assert!(dt >= n.cfg.jit_compile_ms * 1e3 * 0.99, "JIT not charged: {dt}");
+        // iGPU charges nothing extra
+        let i = igpu();
+        assert!(
+            (i.timing(&dynamic_k).nominal_us - i.timing(&static_k).nominal_us).abs() < 1e-6
+        );
+    }
+
+    #[test]
+    fn gemv_saturates_bandwidth_gemm_does_not() {
+        // Fig. 3 premise: memory-bound GEMV demands ~max link bandwidth.
+        let i = igpu();
+        let gemv = i.timing(&gemv_cost(4096, 4096));
+        assert!(gemv.bw_gbps > 0.9 * i.cfg.max_bw_gbps, "{}", gemv.bw_gbps);
+        let gemm = i.timing(&gemm_cost(4096, 4096, 4096));
+        assert!(gemm.bw_gbps < 0.3 * i.cfg.max_bw_gbps, "{}", gemm.bw_gbps);
+    }
+
+    #[test]
+    fn decode_iter_on_igpu_is_memory_bound() {
+        let g = geo();
+        let t = igpu().timing(&decode_iter_cost(&g, 1, 256));
+        assert!(t.tm_us > t.tc_us);
+    }
+
+    #[test]
+    fn prefill_chunk_meets_latency_budget() {
+        // §6.2: chunking keeps each prefill kernel under ~100 ms.
+        let g = geo();
+        let worst = prefill_layer_cost(&g, 128, 128, g.max_seq - 128, false);
+        let t = npu().timing(&worst);
+        assert!(t.nominal_us < 100_000.0, "{} µs", t.nominal_us);
+    }
+
+    #[test]
+    fn timing_monotone_in_flops() {
+        let g = geo();
+        let small = prefill_layer_cost(&g, 16, 16, 0, false);
+        let big = prefill_layer_cost(&g, 128, 128, 0, false);
+        let n = npu();
+        assert!(n.timing(&big).nominal_us > n.timing(&small).nominal_us);
+    }
+}

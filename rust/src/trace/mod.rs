@@ -1,0 +1,137 @@
+//! Kernel-level execution traces: who ran what, where, when.  Used by
+//! the Fig. 4 scheme comparison (Gantt rendering), debugging, and the
+//! scheduler's own introspection tests.
+
+use crate::util::json::Json;
+
+/// One executed kernel.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub xpu: usize,
+    pub start_us: f64,
+    pub end_us: f64,
+    pub label: String,
+    pub reactive: bool,
+}
+
+/// An append-only execution trace.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    pub fn record(&mut self, xpu: usize, start_us: f64, end_us: f64, label: String, reactive: bool) {
+        self.events.push(TraceEvent { xpu, start_us, end_us, label, reactive });
+    }
+
+    /// Events on one XPU, time-ordered.
+    pub fn on_xpu(&self, xpu: usize) -> Vec<&TraceEvent> {
+        let mut v: Vec<&TraceEvent> =
+            self.events.iter().filter(|e| e.xpu == xpu).collect();
+        v.sort_by(|a, b| a.start_us.total_cmp(&b.start_us));
+        v
+    }
+
+    /// Verify the per-XPU serialization invariant: kernels on one XPU
+    /// never overlap (the simulator's one-kernel-per-XPU contract).
+    pub fn assert_serialized(&self) {
+        let xpus: std::collections::BTreeSet<usize> =
+            self.events.iter().map(|e| e.xpu).collect();
+        for x in xpus {
+            let evs = self.on_xpu(x);
+            for w in evs.windows(2) {
+                assert!(
+                    w[1].start_us >= w[0].end_us - 1e-3,
+                    "overlap on xpu {x}: {:?} then {:?}",
+                    w[0],
+                    w[1]
+                );
+            }
+        }
+    }
+
+    /// Render an ASCII Gantt chart (one row per XPU) — the Fig. 4 view.
+    pub fn gantt(&self, xpu_names: &[&str], width: usize) -> String {
+        let t_end = self
+            .events
+            .iter()
+            .map(|e| e.end_us)
+            .fold(0.0f64, f64::max)
+            .max(1.0);
+        let mut out = String::new();
+        for (x, name) in xpu_names.iter().enumerate() {
+            let mut row = vec![' '; width];
+            for e in self.on_xpu(x) {
+                let a = ((e.start_us / t_end) * width as f64) as usize;
+                let b = (((e.end_us / t_end) * width as f64) as usize).min(width);
+                let ch = if e.reactive { 'R' } else { 'p' };
+                for c in row.iter_mut().take(b).skip(a.min(width)) {
+                    *c = ch;
+                }
+            }
+            out.push_str(&format!("{name:>5} |{}|\n", row.iter().collect::<String>()));
+        }
+        out.push_str(&format!("       0 {:>w$.1} ms\n", t_end / 1e3, w = width - 2));
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.events
+                .iter()
+                .map(|e| {
+                    Json::obj()
+                        .set("xpu", e.xpu)
+                        .set("start_us", e.start_us)
+                        .set("end_us", e.end_us)
+                        .set("label", e.label.as_str())
+                        .set("reactive", e.reactive)
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_filters() {
+        let mut t = Trace::default();
+        t.record(0, 0.0, 10.0, "a".into(), false);
+        t.record(1, 5.0, 15.0, "b".into(), true);
+        t.record(0, 10.0, 20.0, "c".into(), false);
+        assert_eq!(t.on_xpu(0).len(), 2);
+        t.assert_serialized();
+    }
+
+    #[test]
+    #[should_panic(expected = "overlap")]
+    fn overlap_detected() {
+        let mut t = Trace::default();
+        t.record(0, 0.0, 10.0, "a".into(), false);
+        t.record(0, 5.0, 15.0, "b".into(), false);
+        t.assert_serialized();
+    }
+
+    #[test]
+    fn gantt_renders() {
+        let mut t = Trace::default();
+        t.record(0, 0.0, 500.0, "p".into(), false);
+        t.record(1, 500.0, 1000.0, "r".into(), true);
+        let g = t.gantt(&["npu", "igpu"], 40);
+        assert!(g.contains("npu"));
+        assert!(g.contains('p'));
+        assert!(g.contains('R'));
+    }
+
+    #[test]
+    fn json_export() {
+        let mut t = Trace::default();
+        t.record(0, 0.0, 1.0, "k".into(), true);
+        let j = t.to_json();
+        assert_eq!(j.as_arr().unwrap().len(), 1);
+    }
+}

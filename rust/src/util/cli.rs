@@ -1,0 +1,108 @@
+//! Minimal command-line flag parser for the `agent-xpu` binary and the
+//! bench harnesses: `--key value`, `--flag`, positional args.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result, bail};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse(args: impl IntoIterator<Item = String>) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare `--` not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.flags.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?}: not a number")),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?}: not an integer")),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            None => default,
+            Some(v) => v != "false" && v != "0",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_mixed_styles() {
+        let a = parse("fig affinity --rate 3.5 --verbose --out=x.json tail");
+        assert_eq!(a.positional, vec!["fig", "affinity", "tail"]);
+        assert_eq!(a.f64_or("rate", 1.0).unwrap(), 3.5);
+        assert!(a.bool_or("verbose", false));
+        assert_eq!(a.str_or("out", ""), "x.json");
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_boolean() {
+        let a = parse("--x --y 2");
+        assert!(a.bool_or("x", false));
+        assert_eq!(a.usize_or("y", 0).unwrap(), 2);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("");
+        assert_eq!(a.usize_or("n", 7).unwrap(), 7);
+        assert!(!a.bool_or("v", false));
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse("--n abc");
+        assert!(a.usize_or("n", 0).is_err());
+    }
+}

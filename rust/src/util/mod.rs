@@ -1,0 +1,18 @@
+//! Dependency-free utility substrates.
+//!
+//! The build environment is fully offline and the paper's reference
+//! implementation is deliberately dependency-free (§7: "without any
+//! third-party dependencies"), so the pieces a serving framework would
+//! normally pull from crates.io are implemented here:
+//!
+//! - [`json`] — JSON parser/serializer (manifest, configs, UDS protocol).
+//! - [`rng`] — deterministic PRNG + exponential/Poisson/normal samplers
+//!   for the workload generators.
+//! - [`cli`] — minimal flag parser for the `agent-xpu` binary.
+//! - [`bench`] — the measurement harness used by `cargo bench`
+//!   (`harness = false`) targets: warmup, iterations, mean/p50/p99.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;

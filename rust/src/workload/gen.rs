@@ -1,0 +1,148 @@
+//! Trace synthesis: arrival processes + length sampling → `Vec<Request>`.
+
+use crate::util::rng::Rng;
+
+use super::profiles::TraceProfile;
+use super::request::{Priority, ReqId, Request};
+
+/// Parameters of one generated workload stream.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub profile: &'static TraceProfile,
+    /// Proactive: Poisson request rate (req/s).  Reactive: 1 / mean
+    /// think-time interval (req/s) — the paper sweeps the *interval*.
+    pub rate_per_s: f64,
+    pub duration_s: f64,
+    pub seed: u64,
+    /// Context budget (the model's max_seq).
+    pub max_seq: usize,
+}
+
+fn prompt_tokens(r: &mut Rng, len: usize, vocab: usize) -> Vec<i32> {
+    (0..len).map(|_| r.usize(0, vocab) as i32).collect()
+}
+
+/// Event-driven proactive stream: Poisson arrivals (exponential gaps).
+pub fn proactive_trace(spec: &WorkloadSpec, vocab: usize, first_id: ReqId) -> Vec<Request> {
+    let mut r = Rng::new(spec.seed);
+    let mut out = vec![];
+    let mut t_s = 0.0f64;
+    let mut id = first_id;
+    loop {
+        t_s += r.exponential(spec.rate_per_s);
+        if t_s >= spec.duration_s {
+            return out;
+        }
+        let (pl, ol) = spec.profile.sample_lengths(&mut r, spec.max_seq);
+        out.push(Request {
+            id,
+            priority: Priority::Proactive,
+            arrival_us: t_s * 1e6,
+            prompt: prompt_tokens(&mut r, pl, vocab),
+            max_new_tokens: ol,
+            profile: spec.profile.name,
+        });
+        id += 1;
+    }
+}
+
+/// User-driven reactive stream: the next question arrives one
+/// exponential think-time after the previous one (paper §8.1), with at
+/// most one outstanding conversation (the §4 workload assumption is
+/// enforced by spacing, not by dropping).
+pub fn reactive_trace(spec: &WorkloadSpec, vocab: usize, first_id: ReqId) -> Vec<Request> {
+    let mut r = Rng::new(spec.seed);
+    let mut out = vec![];
+    let mut t_s = r.exponential(spec.rate_per_s);
+    let mut id = first_id;
+    while t_s < spec.duration_s {
+        let (pl, ol) = spec.profile.sample_lengths(&mut r, spec.max_seq);
+        out.push(Request {
+            id,
+            priority: Priority::Reactive,
+            arrival_us: t_s * 1e6,
+            prompt: prompt_tokens(&mut r, pl, vocab),
+            max_new_tokens: ol,
+            profile: spec.profile.name,
+        });
+        id += 1;
+        t_s += r.exponential(spec.rate_per_s);
+    }
+    out
+}
+
+/// Merge streams into one arrival-ordered trace.
+pub fn merge_traces(mut streams: Vec<Vec<Request>>) -> Vec<Request> {
+    let mut all: Vec<Request> = streams.drain(..).flatten().collect();
+    all.sort_by(|a, b| a.arrival_us.total_cmp(&b.arrival_us));
+    all
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::profiles::profile;
+
+    fn spec(name: &str, rate: f64, seed: u64) -> WorkloadSpec {
+        WorkloadSpec {
+            profile: profile(name).unwrap(),
+            rate_per_s: rate,
+            duration_s: 100.0,
+            seed,
+            max_seq: 512,
+        }
+    }
+
+    #[test]
+    fn poisson_rate_approximates_spec() {
+        let t = proactive_trace(&spec("samsum", 2.0, 1), 2048, 0);
+        // 2 req/s over 100 s → ~200 requests
+        assert!((150..260).contains(&t.len()), "{}", t.len());
+        assert!(t.windows(2).all(|w| w[0].arrival_us <= w[1].arrival_us));
+        assert!(t.iter().all(|q| q.priority == Priority::Proactive));
+    }
+
+    #[test]
+    fn traces_are_seeded() {
+        let a = proactive_trace(&spec("samsum", 1.0, 7), 2048, 0);
+        let b = proactive_trace(&spec("samsum", 1.0, 7), 2048, 0);
+        let c = proactive_trace(&spec("samsum", 1.0, 8), 2048, 0);
+        assert_eq!(a.len(), b.len());
+        assert!(a.iter().zip(&b).all(|(x, y)| x.arrival_us == y.arrival_us
+            && x.prompt == y.prompt));
+        assert!(a.len() != c.len()
+            || a.iter().zip(&c).any(|(x, y)| x.arrival_us != y.arrival_us));
+    }
+
+    #[test]
+    fn reactive_trace_is_reactive_and_sparser() {
+        let t = reactive_trace(&spec("lmsys", 0.1, 2), 2048, 100);
+        assert!(t.iter().all(|q| q.priority == Priority::Reactive));
+        assert!(t.len() < 30, "{}", t.len());
+        assert_eq!(t[0].id, 100);
+    }
+
+    #[test]
+    fn prompts_in_vocab_and_budget() {
+        let t = proactive_trace(&spec("cnn_dailymail", 1.0, 3), 512, 0);
+        for q in &t {
+            assert!(q.prompt.iter().all(|&x| (0..512).contains(&x)));
+            assert!(q.prompt_len() + q.max_new_tokens <= 512);
+            assert!(q.max_new_tokens >= 1);
+        }
+    }
+
+    #[test]
+    fn merge_orders_by_arrival_with_unique_ids() {
+        let a = proactive_trace(&spec("samsum", 1.0, 1), 2048, 0);
+        let b = reactive_trace(&spec("lmsys", 0.2, 2), 2048, 10_000);
+        let n = a.len() + b.len();
+        let m = merge_traces(vec![a, b]);
+        assert_eq!(m.len(), n);
+        assert!(m.windows(2).all(|w| w[0].arrival_us <= w[1].arrival_us));
+        let mut ids: Vec<_> = m.iter().map(|q| q.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "ids must be unique");
+    }
+}

@@ -1,0 +1,16 @@
+//! Agentic workload generation (paper §8.1).
+//!
+//! Real datasets (ProactiveBench, SAMSum, CNN/DailyMail, LMSys-chat-1M,
+//! MTRAG, BFCL) are not available offline, so each is replaced by a
+//! *trace profile* matching its published prompt/output length
+//! statistics (DESIGN.md §1).  Arrival processes follow the paper:
+//! Poisson for proactive requests, exponential inter-arrival (user
+//! think-time) for reactive requests.  Everything is seeded.
+
+mod gen;
+mod profiles;
+mod request;
+
+pub use gen::{WorkloadSpec, merge_traces, proactive_trace, reactive_trace};
+pub use profiles::{TraceProfile, profile, profiles};
+pub use request::{Priority, ReqId, Request};

@@ -1,0 +1,59 @@
+//! The unit of work every engine schedules: one LLM call from an agent.
+
+pub type ReqId = u64;
+
+/// The paper's workload dichotomy (§1): reactive requests are
+/// user-initiated and latency-critical; proactive requests are
+/// event-driven, background, throughput-oriented.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Priority {
+    Reactive,
+    Proactive,
+}
+
+impl Priority {
+    pub fn is_reactive(&self) -> bool {
+        matches!(self, Priority::Reactive)
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Priority::Reactive => "reactive",
+            Priority::Proactive => "proactive",
+        }
+    }
+}
+
+/// One LLM request.  The engine is non-clairvoyant (§4): it sees only
+/// the priority tag and the prompt at arrival; `max_new_tokens` stands
+/// in for the EOS the real agent would produce (identical across engines
+/// so comparisons are fair — DESIGN.md §1).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: ReqId,
+    pub priority: Priority,
+    /// Virtual arrival time (µs).
+    pub arrival_us: f64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    /// Which trace profile generated it (for per-workload reporting).
+    pub profile: &'static str,
+}
+
+impl Request {
+    pub fn prompt_len(&self) -> usize {
+        self.prompt.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn priority_labels() {
+        assert!(Priority::Reactive.is_reactive());
+        assert!(!Priority::Proactive.is_reactive());
+        assert_eq!(Priority::Proactive.label(), "proactive");
+    }
+}

@@ -1,0 +1,316 @@
+//! Property-based tests over the coordinator and baselines: randomized
+//! agentic traces (seeded — shrinking replaced by printing the failing
+//! seed) checked against the scheduler's core invariants.
+//!
+//! Invariants (DESIGN.md §6):
+//!  - completeness: every admitted request finishes with exactly its
+//!    token budget; none lost, none duplicated;
+//!  - per-XPU serialization: kernels on one XPU never overlap;
+//!  - causality: arrival ≤ TTFT point ≤ completion;
+//!  - determinism: identical traces → identical schedules;
+//!  - priority: reactive requests see (much) lower normalized latency
+//!    than proactive ones under mixed load;
+//!  - all engines (agent.xpu, schemes a/b/c, llama.cpp-like) uphold the
+//!    same lifecycle invariants on the same random traces.
+
+use agent_xpu::baselines::{CpuFcfsEngine, Scheme, SingleXpuEngine};
+use agent_xpu::config::{ModelGeometry, SchedulerConfig, default_soc, llama32_3b};
+use agent_xpu::coordinator::AgentXpuEngine;
+use agent_xpu::engine::Engine;
+use agent_xpu::heg::plan_chunks;
+use agent_xpu::metrics::RunReport;
+use agent_xpu::util::rng::Rng;
+use agent_xpu::workload::{Priority, Request};
+
+fn geo() -> ModelGeometry {
+    let mut g = llama32_3b();
+    g.n_layers = 3; // keep property sweeps fast; geometry ratios intact
+    g
+}
+
+/// Random mixed trace: 3–14 requests, mixed priorities, bursty arrivals.
+fn random_trace(seed: u64) -> Vec<Request> {
+    let g = geo();
+    let mut r = Rng::new(seed);
+    let n = r.usize(3, 15);
+    let mut t = 0.0f64;
+    (0..n as u64)
+        .map(|i| {
+            t += r.exponential(1.0 / 0.4) * 1e6; // ~0.4 req/s
+            let reactive = r.f64() < 0.3;
+            let plen = r.usize(4, g.max_seq / 2);
+            Request {
+                id: i,
+                priority: if reactive { Priority::Reactive } else { Priority::Proactive },
+                arrival_us: t,
+                prompt: vec![1; plen],
+                max_new_tokens: r.usize(1, 24),
+                profile: "prop",
+            }
+        })
+        .collect()
+}
+
+fn check_lifecycle(rep: &RunReport, trace: &[Request]) {
+    assert_eq!(rep.reqs.len(), trace.len(), "request count");
+    for (m, q) in rep.reqs.iter().zip(trace.iter()) {
+        assert_eq!(m.id, q.id);
+        assert!(m.finished(), "req {} unfinished", m.id);
+        assert_eq!(m.output_tokens, q.max_new_tokens, "req {} tokens", m.id);
+        let ttft = m.first_token_us.unwrap();
+        let done = m.done_us.unwrap();
+        assert!(ttft > m.arrival_us, "req {} ttft before arrival", m.id);
+        assert!(done >= ttft, "req {} done before first token", m.id);
+        assert!(done <= rep.makespan_us + 1e-6);
+    }
+    // busy time cannot exceed makespan per XPU
+    for x in &rep.xpus {
+        assert!(
+            x.busy_us <= rep.makespan_us + 1.0,
+            "{} busy {} > makespan {}",
+            x.name,
+            x.busy_us,
+            rep.makespan_us
+        );
+    }
+    assert!(rep.total_energy_j >= 0.0 && rep.total_energy_j.is_finite());
+}
+
+#[test]
+fn agent_xpu_lifecycle_invariants_hold_over_random_traces() {
+    for seed in 0..40 {
+        let trace = random_trace(seed);
+        let mut e =
+            AgentXpuEngine::synthetic(geo(), default_soc(), SchedulerConfig::default());
+        let rep = e.run(trace.clone()).unwrap_or_else(|x| panic!("seed {seed}: {x:#}"));
+        check_lifecycle(&rep, &trace);
+        // kernels never overlap on an XPU
+        e.last_trace.as_ref().unwrap().assert_serialized();
+    }
+}
+
+#[test]
+fn all_engines_uphold_lifecycle_on_same_traces() {
+    for seed in 0..12 {
+        let trace = random_trace(1000 + seed);
+        let engines: Vec<Box<dyn Engine>> = vec![
+            Box::new(AgentXpuEngine::synthetic(
+                geo(),
+                default_soc(),
+                SchedulerConfig::default(),
+            )),
+            Box::new(CpuFcfsEngine::new(geo(), default_soc(), 4)),
+            Box::new(SingleXpuEngine::new(geo(), default_soc(), Scheme::PreemptRestart)),
+            Box::new(SingleXpuEngine::new(geo(), default_soc(), Scheme::TimeShare)),
+            Box::new(SingleXpuEngine::new(
+                geo(),
+                default_soc(),
+                Scheme::ContinuousBatching,
+            )),
+        ];
+        for mut e in engines {
+            let name = e.name();
+            let rep = e
+                .run(trace.clone())
+                .unwrap_or_else(|x| panic!("seed {seed} engine {name}: {x:#}"));
+            check_lifecycle(&rep, &trace);
+        }
+    }
+}
+
+#[test]
+fn schedules_are_deterministic_per_seed() {
+    for seed in 0..10 {
+        let run = || {
+            let mut e = AgentXpuEngine::synthetic(
+                geo(),
+                default_soc(),
+                SchedulerConfig::default(),
+            );
+            e.run(random_trace(2000 + seed)).unwrap()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.makespan_us, b.makespan_us, "seed {seed}");
+        assert_eq!(a.preemptions, b.preemptions);
+        assert_eq!(a.backfills, b.backfills);
+        for (x, y) in a.reqs.iter().zip(&b.reqs) {
+            assert_eq!(x.first_token_us, y.first_token_us, "seed {seed} req {}", x.id);
+            assert_eq!(x.done_us, y.done_us);
+        }
+    }
+}
+
+#[test]
+fn reactive_latency_dominates_proactive_under_load() {
+    // aggregate over seeds: mixed loads where both classes appear
+    let mut rt_sum = 0.0;
+    let mut pro_sum = 0.0;
+    let mut n = 0;
+    for seed in 0..20 {
+        let trace = random_trace(3000 + seed);
+        let has_both = trace.iter().any(|r| r.priority == Priority::Reactive)
+            && trace.iter().any(|r| r.priority == Priority::Proactive);
+        if !has_both {
+            continue;
+        }
+        let mut e =
+            AgentXpuEngine::synthetic(geo(), default_soc(), SchedulerConfig::default());
+        let rep = e.run(trace).unwrap();
+        let r = rep.class(Priority::Reactive);
+        let p = rep.class(Priority::Proactive);
+        if r.mean_norm_latency_ms.is_finite() && p.mean_norm_latency_ms.is_finite() {
+            rt_sum += r.mean_norm_latency_ms;
+            pro_sum += p.mean_norm_latency_ms;
+            n += 1;
+        }
+    }
+    assert!(n >= 5, "not enough mixed seeds ({n})");
+    assert!(
+        rt_sum <= pro_sum,
+        "reactive norm-lat {rt_sum} must not exceed proactive {pro_sum} in aggregate"
+    );
+}
+
+#[test]
+fn ablations_never_lose_requests() {
+    for seed in [11u64, 47, 90] {
+        let trace = random_trace(seed);
+        for (b, p, dg) in [
+            (false, false, false),
+            (false, true, false),
+            (true, false, true),
+            (false, true, true),
+            (true, true, false),
+        ] {
+            let sched = SchedulerConfig {
+                backfill: b,
+                preemption: p,
+                disaggregation: dg,
+                ..Default::default()
+            };
+            let mut e = AgentXpuEngine::synthetic(geo(), default_soc(), sched);
+            let rep = e
+                .run(trace.clone())
+                .unwrap_or_else(|x| panic!("seed {seed} b={b} p={p} dg={dg}: {x:#}"));
+            check_lifecycle(&rep, &trace);
+        }
+    }
+}
+
+#[test]
+fn chunk_plans_cover_every_prompt_exactly() {
+    let g = llama32_3b();
+    let mut r = Rng::new(99);
+    for _ in 0..500 {
+        let len = r.usize(1, g.max_seq + 1);
+        let cap = *r.choice(&g.chunk_sizes);
+        let plan = plan_chunks(&g, len, cap);
+        let total: usize = plan.iter().map(|c| c.valid).sum();
+        assert_eq!(total, len);
+        let mut pos = 0;
+        for (i, c) in plan.iter().enumerate() {
+            assert_eq!(c.pos, pos, "len {len} cap {cap}");
+            assert!(c.valid >= 1 && c.valid <= c.variant);
+            assert!(c.variant <= cap.max(*g.chunk_sizes.iter().min().unwrap()));
+            assert!(g.chunk_sizes.contains(&c.variant));
+            if c.dynamic {
+                assert_eq!(i, plan.len() - 1, "only the margin may be dynamic");
+            }
+            pos += c.valid;
+        }
+    }
+}
+
+#[test]
+fn extreme_loads_still_complete() {
+    let g = geo();
+    // burst: everything arrives at t=0
+    let burst: Vec<Request> = (0..30u64)
+        .map(|i| Request {
+            id: i,
+            priority: if i % 4 == 0 { Priority::Reactive } else { Priority::Proactive },
+            arrival_us: 0.0,
+            prompt: vec![1; 64 + (i as usize * 37) % 900],
+            max_new_tokens: 1 + (i as usize % 20),
+            profile: "burst",
+        })
+        .collect();
+    let mut e = AgentXpuEngine::synthetic(g.clone(), default_soc(), SchedulerConfig::default());
+    let rep = e.run(burst.clone()).unwrap();
+    check_lifecycle(&rep, &burst);
+
+    // pathological: max-length prompts, single-token outputs
+    let long: Vec<Request> = (0..4u64)
+        .map(|i| Request {
+            id: i,
+            priority: Priority::Proactive,
+            arrival_us: i as f64,
+            prompt: vec![1; g.max_seq],
+            max_new_tokens: 1,
+            profile: "long",
+        })
+        .collect();
+    let mut e = AgentXpuEngine::synthetic(g, default_soc(), SchedulerConfig::default());
+    let rep = e.run(long.clone()).unwrap();
+    check_lifecycle(&rep, &long);
+}
+
+#[test]
+fn starvation_prevention_bounds_proactive_wait() {
+    // a constant reactive stream + one proactive task: aging must let
+    // the proactive task finish while reactive traffic continues
+    let g = geo();
+    let mut trace = vec![Request {
+        id: 0,
+        priority: Priority::Proactive,
+        arrival_us: 0.0,
+        prompt: vec![1; 1024],
+        max_new_tokens: 4,
+        profile: "victim",
+    }];
+    for i in 0..30u64 {
+        trace.push(Request {
+            id: 1 + i,
+            priority: Priority::Reactive,
+            arrival_us: 10_000.0 + i as f64 * 400_000.0,
+            prompt: vec![1; 256],
+            max_new_tokens: 6,
+            profile: "stream",
+        });
+    }
+    let mut e = AgentXpuEngine::synthetic(g, default_soc(), SchedulerConfig::default());
+    let rep = e.run(trace).unwrap();
+    let victim = rep.reqs.iter().find(|m| m.id == 0).unwrap();
+    assert!(victim.finished(), "proactive task starved");
+    let last_reactive_done = rep
+        .reqs
+        .iter()
+        .filter(|m| m.priority == Priority::Reactive)
+        .map(|m| m.done_us.unwrap())
+        .fold(0.0f64, f64::max);
+    assert!(
+        victim.done_us.unwrap() < last_reactive_done,
+        "aging must promote the proactive task before the stream ends"
+    );
+}
+
+#[test]
+fn memory_governor_keeps_everything_completing_under_tiny_dram() {
+    // Shrink DRAM so only ~2 KV slots fit beyond the weights: the
+    // governor must serialize starts (and evict for reactive arrivals)
+    // without ever losing a request.
+    let g = geo();
+    let mut soc = default_soc();
+    let weights_gb = g.n_params() as f64 * g.weight_bytes / 1e9;
+    let kv_gb = (2 * g.n_layers * g.cache_elems() * 4) as f64 / 1e9;
+    soc.dram_gb = weights_gb + 2.2 * kv_gb;
+    for seed in [5u64, 21, 77] {
+        let trace = random_trace(seed);
+        let mut e =
+            AgentXpuEngine::synthetic(g.clone(), soc.clone(), SchedulerConfig::default());
+        let rep = e
+            .run(trace.clone())
+            .unwrap_or_else(|x| panic!("seed {seed}: {x:#}"));
+        check_lifecycle(&rep, &trace);
+    }
+}
