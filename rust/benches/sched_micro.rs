@@ -46,7 +46,8 @@ fn main() {
             arrival_us: i as f64,
             prompt: vec![1; 200],
             max_new_tokens: 8,
-            profile: "bench",
+            profile: "bench".into(),
+            flow: None,
         };
         let mut st = bridge.init_state(req, 512);
         if i % 2 == 0 {

@@ -29,7 +29,8 @@ fn scenario() -> Vec<Request> {
             arrival_us: i as f64 * 2.5e6,
             prompt: vec![7; 900],
             max_new_tokens: 40,
-            profile: "repo-indexer",
+            profile: "repo-indexer".into(),
+            flow: None,
         });
     }
     // reactive: the developer asks three questions while the indexer runs
@@ -44,7 +45,8 @@ fn scenario() -> Vec<Request> {
             arrival_us: *t,
             prompt: vec![3; *plen],
             max_new_tokens: *out,
-            profile: "dev-question",
+            profile: "dev-question".into(),
+            flow: None,
         });
     }
     trace

@@ -270,7 +270,8 @@ mod tests {
             arrival_us: arrival,
             prompt: vec![1; plen],
             max_new_tokens: out,
-            profile: "test",
+            profile: "test".into(),
+            flow: None,
         }
     }
 

@@ -138,6 +138,10 @@ pub struct SchedulerConfig {
     /// Hung-kernel watchdog (virtual ms); exceeded kernels are retried
     /// (failure handling, §6.5).
     pub kernel_timeout_ms: f64,
+    /// Max idle flow sessions whose KV stays resident between turns
+    /// (cross-turn prefix reuse, DESIGN.md §3).  0 disables retention:
+    /// every turn recomputes its full conversation prefix.
+    pub session_capacity: usize,
 }
 
 impl Default for SchedulerConfig {
@@ -152,6 +156,7 @@ impl Default for SchedulerConfig {
             disaggregation: true,
             chunk_latency_budget_ms: 100.0,
             kernel_timeout_ms: 10_000.0,
+            session_capacity: 32,
         }
     }
 }
@@ -175,6 +180,10 @@ impl SchedulerConfig {
             disaggregation: b("disaggregation", d.disaggregation)?,
             chunk_latency_budget_ms: f("chunk_latency_budget_ms", d.chunk_latency_budget_ms)?,
             kernel_timeout_ms: f("kernel_timeout_ms", d.kernel_timeout_ms)?,
+            session_capacity: v
+                .opt("session_capacity")
+                .map(|x| x.as_usize())
+                .unwrap_or(Ok(d.session_capacity))?,
         })
     }
 
@@ -189,6 +198,7 @@ impl SchedulerConfig {
             .set("disaggregation", self.disaggregation)
             .set("chunk_latency_budget_ms", self.chunk_latency_budget_ms)
             .set("kernel_timeout_ms", self.kernel_timeout_ms)
+            .set("session_capacity", self.session_capacity)
     }
 }
 
@@ -327,6 +337,7 @@ mod tests {
         assert!((s.pressure_high - 0.7).abs() < 1e-9);
         assert!(s.backfill && s.preemption && s.disaggregation);
         assert!((s.chunk_latency_budget_ms - 100.0).abs() < 1e-9);
+        assert!(s.session_capacity > 0, "session retention on by default");
     }
 
     #[test]

@@ -73,17 +73,45 @@ impl AgentXpuEngine {
 
     /// §6.5 memory management: may `id`'s prefill start (allocate its
     /// KV) right now?  Started requests always continue (their KV is
-    /// already resident).  Reactive requests that do not fit evict the
+    /// already resident).  Under pressure the governor sheds residency
+    /// cheapest-first: idle retained session caches go LRU-first (a
+    /// dropped session only costs one conversation-prefix recompute),
+    /// then a reactive request that still does not fit evicts the
     /// least-progressed waiting proactive prefill (graceful
     /// degradation — its context is recomputed later, like scheme (a)).
     fn memory_admit(&mut self, d: &mut Driver, id: ReqId) -> bool {
         let st = &d.states[&id];
-        let started = st.chunk_idx > 0 || st.layer_idx > 0;
-        if started || self.governor.can_start(&d.states) {
+        // A claimed session cache counts as already-resident KV: the
+        // slot moved from the pool's books onto this request at
+        // admission, so "starting" it allocates nothing new.
+        let started = st.chunk_idx > 0 || st.layer_idx > 0 || st.cached_prefix_len > 0;
+        if started
+            || self
+                .governor
+                .can_start_with_sessions(&d.states, d.retained_sessions())
+        {
             return true;
         }
         if !st.is_reactive() {
-            return false; // defer proactive start until memory frees
+            // Defer the proactive start until memory frees — without
+            // shedding sessions: evicting reactive chat state to admit
+            // background work would invert the priority order, and a
+            // deferred start gains nothing from the eviction anyway.
+            return false;
+        }
+        // First valve for reactive arrivals: drop idle sessions,
+        // least-recently-used first (cheapest residency to rebuild).
+        while let Some(pool) = d.sessions.as_mut() {
+            if pool.evict_lru().is_none() {
+                break;
+            }
+            d.session_evictions += 1;
+            if self
+                .governor
+                .can_start_with_sessions(&d.states, d.retained_sessions())
+            {
+                return true;
+            }
         }
         if let Some(victim) = self.governor.eviction_victim(&d.states) {
             let geo = self.geo.clone();
@@ -91,7 +119,7 @@ impl AgentXpuEngine {
             let vs = d.states.get_mut(&victim).unwrap();
             vs.restart_prefill(&geo);
             vs.enqueued_at_us = now;
-            self.governor.evictions += 1;
+            d.kv_evictions += 1; // surfaces in RunReport::kv_evictions
             return true;
         }
         true // nothing evictable: admit anyway (paper's moderate-density assumption)
@@ -432,6 +460,13 @@ impl Engine for AgentXpuEngine {
     fn run(&mut self, trace: Vec<Request>) -> Result<RunReport> {
         self.npu_owner = None;
         let mut d = Driver::new(&self.soc, self.bridge(), trace);
+        // Flow-level session retention (DESIGN.md §3): continuation
+        // turns prefill only their delta tokens.  Baselines run the
+        // same flow traces without this — full-prefix recompute —
+        // so the figures quantify the reuse win.
+        if self.sched.session_capacity > 0 {
+            d.enable_session_reuse(self.sched.session_capacity);
+        }
         loop {
             d.admit_ready(self.max_chunk);
             self.schedule(&mut d);
@@ -467,8 +502,39 @@ mod tests {
             arrival_us: arrival,
             prompt: vec![1; plen],
             max_new_tokens: out,
-            profile: "test",
+            profile: "test".into(),
+            flow: None,
         }
+    }
+
+    /// A hand-built multi-turn reactive flow (see driver tests).
+    fn flow(flow_id: u64, first_id: u64, arrival: f64, turns: usize, think_us: f64) -> Vec<Request> {
+        let (p0, out, delta) = (128usize, 6usize, 48usize);
+        let mut out_reqs = vec![];
+        let mut prompt = vec![1i32; p0];
+        for k in 0..turns {
+            if k > 0 {
+                let ds = prompt.len() + out;
+                prompt = vec![2; ds];
+                prompt.extend(vec![1; delta]);
+            }
+            out_reqs.push(Request {
+                id: first_id + k as u64,
+                priority: Priority::Reactive,
+                arrival_us: arrival,
+                prompt: prompt.clone(),
+                max_new_tokens: out,
+                profile: "flow".into(),
+                flow: Some(crate::workload::FlowBinding {
+                    flow_id,
+                    turn_idx: k,
+                    total_turns: turns,
+                    think_time_us: if k == 0 { 0.0 } else { think_us },
+                    delta_start: if k == 0 { 0 } else { prompt.len() - delta },
+                }),
+            });
+        }
+        out_reqs
     }
 
     #[test]
@@ -562,6 +628,99 @@ mod tests {
                 "ablation (backfill={b},preempt={p},disagg={dg}) must finish"
             );
         }
+    }
+
+    #[test]
+    fn flow_turns_reuse_session_kv() {
+        let rep = engine().run(flow(7, 0, 0.0, 3, 30_000.0)).unwrap();
+        assert_eq!(rep.reqs.iter().filter(|m| m.finished()).count(), 3);
+        for m in rep.reqs.iter().filter(|m| m.turn_idx > 0) {
+            assert!(
+                m.cached_prefix_len > 0,
+                "turn {} must admit from the session pool",
+                m.turn_idx
+            );
+            assert_eq!(m.prefill_tokens, m.input_len - m.cached_prefix_len);
+        }
+        assert!((rep.prefix_cache_hit_rate() - 1.0).abs() < 1e-9);
+        let flows = rep.flows();
+        assert_eq!(flows.len(), 1);
+        assert!(flows[0].finished);
+        assert!(flows[0].e2e_us.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn session_capacity_zero_disables_reuse() {
+        let mut sched = SchedulerConfig::default();
+        sched.session_capacity = 0;
+        let mut e = AgentXpuEngine::synthetic(geo(), default_soc(), sched);
+        let rep = e.run(flow(7, 0, 0.0, 3, 30_000.0)).unwrap();
+        assert_eq!(rep.reqs.iter().filter(|m| m.finished()).count(), 3);
+        assert!(rep.reqs.iter().all(|m| m.cached_prefix_len == 0));
+        assert!(rep.prefix_cache_hit_rate().abs() < 1e-9);
+    }
+
+    /// Satellite: reactive arrival under memory pressure evicts the
+    /// least-progressed waiting proactive prefill; the victim's
+    /// restart_prefill resets its plan and it still completes.
+    #[test]
+    fn reactive_arrival_under_pressure_evicts_proactive_prefill() {
+        let g = geo();
+        let mut soc = default_soc();
+        // room for weights + ~2 KV slots only
+        let weights_gb = g.n_params() as f64 * g.weight_bytes / 1e9;
+        let kv_gb = (2 * g.n_layers * g.cache_elems() * 4) as f64 / 1e9;
+        soc.dram_gb = weights_gb + 2.2 * kv_gb;
+        let mut e = AgentXpuEngine::synthetic(g, soc, SchedulerConfig::default());
+        let mut trace: Vec<Request> = (0..3)
+            .map(|i| req(i, Priority::Proactive, 0.0, 1800, 4))
+            .collect();
+        trace.push(req(100, Priority::Reactive, 120_000.0, 256, 4));
+        let rep = e.run(trace).unwrap();
+        assert!(
+            rep.kv_evictions >= 1,
+            "reactive under pressure must evict a proactive prefill"
+        );
+        // nothing is lost: the victim recomputed and finished
+        assert_eq!(rep.reqs.iter().filter(|m| m.finished()).count(), 4);
+        // the victim's restart shows up as extra prefilled tokens
+        assert!(
+            rep.reqs
+                .iter()
+                .any(|m| m.priority == Priority::Proactive
+                    && m.prefill_tokens > m.input_len),
+            "a restarted prefill recomputes chunks it had already run"
+        );
+    }
+
+    /// Satellite: idle retained sessions are the first thing the
+    /// governor sheds — LRU-first, before touching any in-flight work.
+    #[test]
+    fn idle_sessions_evicted_lru_first_under_pressure() {
+        let g = geo();
+        let mut soc = default_soc();
+        let weights_gb = g.n_params() as f64 * g.weight_bytes / 1e9;
+        let kv_gb = (2 * g.n_layers * g.cache_elems() * 4) as f64 / 1e9;
+        // weights + ~1.5 KV slots: an idle session + a new start can
+        // never coexist
+        soc.dram_gb = weights_gb + 1.5 * kv_gb;
+        let mut e = AgentXpuEngine::synthetic(g, soc, SchedulerConfig::default());
+        // flow turn 0 finishes and parks its session; a big single-shot
+        // arrives during the think-time window
+        let mut trace = flow(7, 0, 0.0, 2, 3_000_000.0);
+        trace.push(req(100, Priority::Reactive, 1_000_000.0, 512, 4));
+        let rep = e.run(trace).unwrap();
+        assert!(
+            rep.session_evictions >= 1,
+            "the idle session must be dropped to fit the arrival"
+        );
+        assert_eq!(rep.reqs.iter().filter(|m| m.finished()).count(), 3);
+        // the evicted session forces turn 1 back to full recompute
+        let turn1 = rep.reqs.iter().find(|m| m.turn_idx == 1).unwrap();
+        assert_eq!(turn1.cached_prefix_len, 0);
+        assert_eq!(turn1.prefill_tokens, turn1.input_len);
+        // no in-flight prefill was harmed
+        assert_eq!(rep.kv_evictions, 0);
     }
 
     #[test]

@@ -5,6 +5,13 @@
 //! its prefill progress, like scheme (a)) to make room for a reactive
 //! arrival under extreme pressure.
 //!
+//! Flow-level sessions add a third residency class: *idle* retained
+//! session caches (a finished turn's KV parked for the next turn).
+//! They are charged one KV slot each and evicted LRU-first **before**
+//! any in-flight prefill — losing a session only costs a recompute of
+//! one conversation prefix, while losing an in-flight prefill wastes
+//! work already scheduled.
+//!
 //! The paper assumes "moderate workload density without exceeding
 //! available RAM" and treats flash offloading as orthogonal future work;
 //! this governor is the admission-control half that keeps that
@@ -22,8 +29,6 @@ pub struct MemoryGovernor {
     pub budget_bytes: u64,
     pub weights_bytes: u64,
     pub kv_bytes_per_req: u64,
-    /// Requests evicted to admit reactive work (introspection).
-    pub evictions: u64,
 }
 
 impl MemoryGovernor {
@@ -37,29 +42,57 @@ impl MemoryGovernor {
             budget_bytes: (soc.dram_gb * 1e9) as u64,
             weights_bytes,
             kv_bytes_per_req,
-            evictions: 0,
         }
     }
 
     /// A request holds KV memory once its prefill has started (progress
-    /// or a running kernel) until it completes.
+    /// or a running kernel) until it completes.  A continuation turn
+    /// that claimed its session's retained cache holds that KV from
+    /// admission — the slot moved out of the pool's books and into the
+    /// request's (an eviction resets `cached_prefix_len`, releasing it).
     fn holds_memory(st: &ReqState) -> bool {
         match st.phase {
-            Phase::Prefilling => st.running || st.chunk_idx > 0 || st.layer_idx > 0,
+            Phase::Prefilling => {
+                st.running
+                    || st.chunk_idx > 0
+                    || st.layer_idx > 0
+                    || st.cached_prefix_len > 0
+            }
             Phase::Decoding => true,
             Phase::Done => false,
         }
     }
 
-    /// Current resident footprint (bytes).
-    pub fn footprint(&self, states: &HashMap<ReqId, ReqState>) -> u64 {
+    /// Current resident footprint (bytes): weights + in-flight KV +
+    /// `retained_sessions` idle session caches (one KV slot each).
+    pub fn footprint_with_sessions(
+        &self,
+        states: &HashMap<ReqId, ReqState>,
+        retained_sessions: usize,
+    ) -> u64 {
         let held = states.values().filter(|s| Self::holds_memory(s)).count() as u64;
-        self.weights_bytes + held * self.kv_bytes_per_req
+        self.weights_bytes + (held + retained_sessions as u64) * self.kv_bytes_per_req
+    }
+
+    /// Current resident footprint (bytes), ignoring retained sessions.
+    pub fn footprint(&self, states: &HashMap<ReqId, ReqState>) -> u64 {
+        self.footprint_with_sessions(states, 0)
     }
 
     /// Would starting one more request fit the budget?
     pub fn can_start(&self, states: &HashMap<ReqId, ReqState>) -> bool {
-        self.footprint(states) + self.kv_bytes_per_req <= self.budget_bytes
+        self.can_start_with_sessions(states, 0)
+    }
+
+    /// Like [`Self::can_start`], also charging `retained_sessions` idle
+    /// session caches against the budget.
+    pub fn can_start_with_sessions(
+        &self,
+        states: &HashMap<ReqId, ReqState>,
+        retained_sessions: usize,
+    ) -> bool {
+        self.footprint_with_sessions(states, retained_sessions) + self.kv_bytes_per_req
+            <= self.budget_bytes
     }
 
     /// Graceful-degradation victim for a reactive admission: the
@@ -98,7 +131,8 @@ mod tests {
                 arrival_us: 0.0,
                 prompt: vec![1; 600],
                 max_new_tokens: 4,
-                profile: "mem",
+                profile: "mem".into(),
+                flow: None,
             },
             512,
         );
@@ -156,6 +190,61 @@ mod tests {
         states.get_mut(&1).unwrap().phase = Phase::Decoding;
         states.get_mut(&2).unwrap().running = false;
         assert_eq!(g.eviction_victim(&states), Some(2));
+    }
+
+    #[test]
+    fn claimed_session_kv_is_charged_from_admission() {
+        // a continuation turn that claimed its session cache holds a KV
+        // slot before its first kernel runs — the slot left the pool's
+        // books at take_match time and must not vanish from the total
+        let mut geo = llama32_3b();
+        geo.n_layers = 4;
+        let bridge = ExecBridge::synthetic(geo);
+        let seed = crate::runtime::SessionSeed { cache: None, reuse: 200 };
+        let st = bridge.init_state_with_session(
+            Request {
+                id: 1,
+                priority: Priority::Reactive,
+                arrival_us: 0.0,
+                prompt: vec![1; 300],
+                max_new_tokens: 4,
+                profile: "mem".into(),
+                flow: None,
+            },
+            512,
+            Some(seed),
+        );
+        assert_eq!(st.cached_prefix_len, 200);
+        let g = gov();
+        let mut states = HashMap::new();
+        states.insert(1, st);
+        assert_eq!(g.footprint(&states), g.weights_bytes + g.kv_bytes_per_req);
+        // ... and an eviction releases it again
+        let geo2 = {
+            let mut g2 = llama32_3b();
+            g2.n_layers = 4;
+            g2
+        };
+        states.get_mut(&1).unwrap().restart_prefill(&geo2);
+        assert_eq!(g.footprint(&states), g.weights_bytes);
+    }
+
+    #[test]
+    fn retained_sessions_are_charged_one_kv_slot_each() {
+        let mut g = gov();
+        g.budget_bytes = g.weights_bytes + 3 * g.kv_bytes_per_req;
+        let mut states = HashMap::new();
+        states.insert(1, mk_state(1, Priority::Proactive, 1)); // one in-flight KV
+        assert_eq!(
+            g.footprint_with_sessions(&states, 2),
+            g.weights_bytes + 3 * g.kv_bytes_per_req
+        );
+        // in-flight + 1 session + new start = 3 slots → fits exactly
+        assert!(g.can_start_with_sessions(&states, 1));
+        // a second idle session pushes the new start over budget
+        assert!(!g.can_start_with_sessions(&states, 2));
+        // ignoring sessions (legacy view) it still fits
+        assert!(g.can_start(&states));
     }
 
     #[test]

@@ -10,7 +10,11 @@ use crate::workload::ReqId;
 /// Resumption strategy (§6.2): among paused proactive prefills, pick
 /// (1) starved tasks first — pending longer than `starvation_age_ms`,
 ///     oldest first — to prevent indefinite postponement (§6.5);
-/// (2) otherwise the lowest estimated-time-to-completion (ETC), so tasks
+/// (2) otherwise continuation turns of in-flight flows first — their
+///     session KV is already resident, so finishing them both frees the
+///     retained cache soonest and keeps the flow's think-time pipeline
+///     moving (DESIGN.md §3);
+/// (3) then the lowest estimated-time-to-completion (ETC), so tasks
 ///     enter the decode pipeline sooner and feed its throughput.
 pub fn resume_order(
     states: &HashMap<ReqId, ReqState>,
@@ -42,11 +46,17 @@ pub fn resume_order(
         let (age_a, age_b) = (now_us - sa.enqueued_at_us, now_us - sb.enqueued_at_us);
         let (starved_a, starved_b) =
             (age_a > starvation_age_us, age_b > starvation_age_us);
+        let cont = |s: &ReqState| {
+            s.req.flow.as_ref().map(|f| f.is_continuation()).unwrap_or(false)
+        };
         match (starved_a, starved_b) {
             (true, false) => std::cmp::Ordering::Less,
             (false, true) => std::cmp::Ordering::Greater,
             (true, true) => age_b.total_cmp(&age_a), // older first
-            (false, false) => etc(a).total_cmp(&etc(b)).then(a.cmp(b)),
+            (false, false) => cont(sb)
+                .cmp(&cont(sa)) // flow continuations first
+                .then(etc(a).total_cmp(&etc(b)))
+                .then(a.cmp(b)),
         }
     });
 }
@@ -59,21 +69,23 @@ pub fn decode_lanes(
     b_max: usize,
     allow_proactive_join: bool,
 ) -> (Vec<ReqId>, bool) {
-    let mut reactive: Vec<ReqId> = vec![];
+    let mut reactive: Vec<(f64, ReqId)> = vec![];
     let mut proactive: Vec<(f64, ReqId)> = vec![];
     for st in states.values() {
         if st.phase != Phase::Decoding || st.running {
             continue;
         }
         if st.is_reactive() {
-            reactive.push(st.id());
+            reactive.push((st.enqueued_at_us, st.id()));
         } else {
             proactive.push((st.enqueued_at_us, st.id()));
         }
     }
-    reactive.sort_unstable();
+    // longest-waiting reactive lanes lead (enqueue order, not ReqId —
+    // ids say nothing about who has been decoding-ready longest)
+    reactive.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
     let any_reactive = !reactive.is_empty();
-    let mut lanes = reactive;
+    let mut lanes: Vec<ReqId> = reactive.into_iter().map(|(_, id)| id).collect();
     if allow_proactive_join || lanes.is_empty() {
         proactive.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
         for (_, id) in proactive {
@@ -108,7 +120,8 @@ mod tests {
                     arrival_us: 0.0,
                     prompt: vec![1; 300],
                     max_new_tokens: 8,
-                    profile: "test",
+                    profile: "test".into(),
+                    flow: None,
                 };
                 let mut st = bridge.init_state(req, 512);
                 st.phase = phase;
@@ -155,6 +168,31 @@ mod tests {
     }
 
     #[test]
+    fn flow_continuations_resume_before_fresh_starts() {
+        let mut states = mk_states(&[
+            (1, Priority::Proactive, Phase::Prefilling, 0.0),
+            (2, Priority::Proactive, Phase::Prefilling, 0.0),
+        ]);
+        // request 2 is turn 1 of an in-flight monitor flow
+        states.get_mut(&2).unwrap().req.flow = Some(crate::workload::FlowBinding {
+            flow_id: 9,
+            turn_idx: 1,
+            total_turns: 3,
+            think_time_us: 0.0,
+            delta_start: 100,
+        });
+        // equal ETC and age: the continuation outranks the fresh start
+        let mut c = vec![1, 2];
+        resume_order(&states, &mut c, &ann(), 0, 1000.0, 1e12);
+        assert_eq!(c, vec![2, 1], "continuation work first");
+        // ... but starvation still dominates: starve request 1
+        states.get_mut(&1).unwrap().enqueued_at_us = -1e9;
+        let mut c = vec![1, 2];
+        resume_order(&states, &mut c, &ann(), 0, 1000.0, 1e6);
+        assert_eq!(c, vec![1, 2], "starved task outranks continuation");
+    }
+
+    #[test]
     fn decode_lanes_reactive_first_then_backfill() {
         let states = mk_states(&[
             (1, Priority::Proactive, Phase::Decoding, 10.0),
@@ -167,6 +205,31 @@ mod tests {
         assert_eq!(lanes[0], 2, "reactive lane leads");
         // proactive join ordered by wait time
         assert_eq!(&lanes[1..], &[3, 1]);
+    }
+
+    #[test]
+    fn reactive_lanes_ordered_by_enqueue_time_not_id() {
+        // request 9 has the higher id but has waited longer than 2 —
+        // enqueue order must win (sorting by ReqId starved late-id
+        // requests that became decode-ready first)
+        let states = mk_states(&[
+            (2, Priority::Reactive, Phase::Decoding, 500.0),
+            (9, Priority::Reactive, Phase::Decoding, 100.0),
+            (5, Priority::Reactive, Phase::Decoding, 300.0),
+        ]);
+        let (lanes, any_rt) = decode_lanes(&states, 8, true);
+        assert!(any_rt);
+        assert_eq!(lanes, vec![9, 5, 2], "enqueue order, oldest first");
+        // b_max truncation drops the *newest* reactive lanes
+        let (lanes, _) = decode_lanes(&states, 2, true);
+        assert_eq!(lanes, vec![9, 5]);
+        // ties fall back to id for determinism
+        let tied = mk_states(&[
+            (4, Priority::Reactive, Phase::Decoding, 7.0),
+            (1, Priority::Reactive, Phase::Decoding, 7.0),
+        ]);
+        let (lanes, _) = decode_lanes(&tied, 8, true);
+        assert_eq!(lanes, vec![1, 4]);
     }
 
     #[test]

@@ -12,8 +12,8 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::config::ModelGeometry;
-use crate::heg::plan_chunks;
-use crate::runtime::{KvCache, ModelExecutor};
+use crate::heg::plan_chunks_from;
+use crate::runtime::{KvCache, ModelExecutor, SessionSeed};
 use crate::workload::Request;
 
 use super::reqstate::{Phase, ReqState};
@@ -46,9 +46,35 @@ impl ExecBridge {
 
     /// Build the initial serving context for an admitted request.
     pub fn init_state(&self, req: Request, max_chunk: usize) -> ReqState {
-        let plan = plan_chunks(&self.geo, req.prompt_len(), max_chunk);
-        let cache = self.exec.as_ref().map(|_| KvCache::new(&self.geo));
-        ReqState::new(req, plan, cache)
+        self.init_state_with_session(req, max_chunk, None)
+    }
+
+    /// Build the serving context for a flow turn, optionally seeded from
+    /// the session pool: with a usable seed the chunk plan covers only
+    /// the delta tokens `[reuse..prompt_len)` and (in real mode) the
+    /// retained KV becomes the turn's cache.  A real-compute turn can
+    /// only reuse a seed that actually carries a KV cache.
+    pub fn init_state_with_session(
+        &self,
+        req: Request,
+        max_chunk: usize,
+        session: Option<SessionSeed>,
+    ) -> ReqState {
+        let plen = req.prompt_len();
+        let cap = plen.saturating_sub(1);
+        let (cache, cached) = match (self.exec.is_some(), session) {
+            (true, Some(s)) if s.cache.is_some() => {
+                let reuse = s.reuse.min(cap);
+                let mut kv = s.cache.unwrap();
+                kv.pos = reuse; // positions beyond a partial match are stale
+                (Some(kv), reuse)
+            }
+            (true, _) => (Some(KvCache::new(&self.geo)), 0),
+            (false, Some(s)) => (None, s.reuse.min(cap)),
+            (false, None) => (None, 0),
+        };
+        let plan = plan_chunks_from(&self.geo, plen, max_chunk, cached);
+        ReqState::new(req, plan, cache, max_chunk, cached)
     }
 
     /// Effect of the prefill kernel at (st.chunk_idx, st.layer_idx);
@@ -86,6 +112,7 @@ impl ExecBridge {
         st.layer_idx = 0;
         st.chunk_idx += 1;
         st.pos = chunk.pos + chunk.valid;
+        st.metrics.prefill_tokens += chunk.valid;
         if let Some(cache) = st.cache.as_mut() {
             cache.pos = st.pos;
         }
@@ -187,7 +214,8 @@ mod tests {
             arrival_us: 0.0,
             prompt: vec![7; plen],
             max_new_tokens: maxnew,
-            profile: "test",
+            profile: "test".into(),
+            flow: None,
         }
     }
 
@@ -207,6 +235,50 @@ mod tests {
         assert_eq!(st.phase, Phase::Decoding);
         assert_eq!(st.tokens.len(), 1, "first token at prefill completion");
         assert_eq!(st.pos, 40);
+    }
+
+    #[test]
+    fn session_seed_prefills_only_the_delta() {
+        let b = synth_bridge();
+        // 40-token conversation, 24 already cached from the last turn
+        let seed = crate::runtime::SessionSeed { cache: None, reuse: 24 };
+        let mut st = b.init_state_with_session(req(40, 3), 32, Some(seed));
+        assert_eq!(st.cached_prefix_len, 24);
+        assert_eq!(st.pos, 24);
+        let delta: usize = st.plan.iter().map(|c| c.valid).sum();
+        assert_eq!(delta, 16, "only 40 - 24 tokens planned");
+        assert_eq!(st.plan[0].pos, 24);
+        // run the (shorter) prefill to completion
+        let kernels = st.remaining_prefill_kernels(b.geo.n_layers);
+        for k in 0..kernels {
+            let done = b.prefill_kernel_done(&mut st).unwrap();
+            assert_eq!(done, k + 1 == kernels);
+        }
+        assert_eq!(st.pos, 40);
+        assert_eq!(st.metrics.prefill_tokens, 16);
+        assert_eq!(st.tokens.len(), 1);
+    }
+
+    #[test]
+    fn session_reuse_never_swallows_the_whole_prompt() {
+        let b = synth_bridge();
+        // a reuse claim covering the full prompt still leaves the last
+        // token to prefill (it must produce the first-token logits)
+        let seed = crate::runtime::SessionSeed { cache: None, reuse: 999 };
+        let st = b.init_state_with_session(req(16, 2), 32, Some(seed));
+        assert_eq!(st.cached_prefix_len, 15);
+        assert_eq!(st.plan.iter().map(|c| c.valid).sum::<usize>(), 1);
+    }
+
+    #[test]
+    fn full_prefill_counts_every_prompt_token() {
+        let b = synth_bridge();
+        let mut st = b.init_state(req(40, 3), 32);
+        while st.phase == Phase::Prefilling {
+            b.prefill_kernel_done(&mut st).unwrap();
+        }
+        assert_eq!(st.metrics.prefill_tokens, 40);
+        assert_eq!(st.metrics.cached_prefix_len, 0);
     }
 
     #[test]

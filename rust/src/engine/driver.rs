@@ -4,6 +4,15 @@
 //! Responsibilities: arrival admission, kernel-completion effects (via
 //! [`ExecBridge`]), lifecycle metrics (TTFT at prefill completion,
 //! completion time at token budget), and the final [`RunReport`].
+//!
+//! Flow-level sessions (DESIGN.md §3): the driver owns the workload
+//! semantics of multi-turn flows — a turn after the first is *held*
+//! until its predecessor completes, released one think-time later with
+//! the actual generated conversation stitched into its prompt.  Every
+//! engine gets this for free (so baselines see identical flow traffic);
+//! engines that additionally call [`Driver::enable_session_reuse`] get
+//! cross-turn KV retention — turn *k+1* then prefills only its delta
+//! tokens instead of recomputing the whole conversation prefix.
 
 use std::collections::{HashMap, VecDeque};
 
@@ -11,8 +20,9 @@ use anyhow::{Context, Result, bail};
 
 use crate::config::SocConfig;
 use crate::metrics::RunReport;
+use crate::runtime::SessionCachePool;
 use crate::soc::{Completion, KernelTiming, LaunchSpec, RunId, SocSim};
-use crate::workload::{ReqId, Request};
+use crate::workload::{FlowId, ReqId, Request};
 
 use super::bridge::ExecBridge;
 use super::reqstate::{Phase, ReqState};
@@ -48,9 +58,19 @@ pub struct Driver {
     pub bridge: ExecBridge,
     pub states: HashMap<ReqId, ReqState>,
     pending: VecDeque<Request>,
+    /// Later turns of multi-turn flows, waiting on their predecessor
+    /// (front = next turn to release per flow).
+    chains: HashMap<FlowId, VecDeque<Request>>,
+    /// Cross-turn KV retention — `None` (full recompute every turn)
+    /// unless the engine opted in via [`Driver::enable_session_reuse`].
+    pub sessions: Option<SessionCachePool>,
     inflight: HashMap<RunId, KernelTag>,
     pub preemptions: u64,
     pub backfills: u64,
+    /// In-flight prefills evicted by the memory governor (KV wiped).
+    pub kv_evictions: u64,
+    /// Idle retained sessions dropped by the memory governor.
+    pub session_evictions: u64,
     /// Kernel-level execution trace (always recorded; events are tiny).
     pub trace: Trace,
     total_requests: usize,
@@ -58,20 +78,56 @@ pub struct Driver {
 }
 
 impl Driver {
-    pub fn new(soc: &SocConfig, bridge: ExecBridge, mut trace: Vec<Request>) -> Self {
-        trace.sort_by(|a, b| a.arrival_us.total_cmp(&b.arrival_us));
+    pub fn new(soc: &SocConfig, bridge: ExecBridge, trace: Vec<Request>) -> Self {
+        let total_requests = trace.len();
+        // Split flows into their opening turn (arrives like any other
+        // request) and the held successor chain, ordered by turn index.
+        let mut chains: HashMap<FlowId, VecDeque<Request>> = HashMap::new();
+        let mut groups: HashMap<FlowId, Vec<Request>> = HashMap::new();
+        let mut pending: Vec<Request> = vec![];
+        for r in trace {
+            match r.flow_id() {
+                Some(fid) => groups.entry(fid).or_default().push(r),
+                None => pending.push(r),
+            }
+        }
+        for (fid, mut turns) in groups {
+            turns.sort_by_key(|r| (r.turn_idx(), r.id));
+            let mut dq: VecDeque<Request> = turns.into();
+            pending.push(dq.pop_front().unwrap());
+            if !dq.is_empty() {
+                chains.insert(fid, dq);
+            }
+        }
+        pending.sort_by(|a, b| a.arrival_us.total_cmp(&b.arrival_us).then(a.id.cmp(&b.id)));
         Self {
             sim: SocSim::new(soc),
             bridge,
             states: HashMap::new(),
-            total_requests: trace.len(),
-            pending: trace.into(),
+            total_requests,
+            pending: pending.into(),
+            chains,
+            sessions: None,
             inflight: HashMap::new(),
             preemptions: 0,
             backfills: 0,
+            kv_evictions: 0,
+            session_evictions: 0,
             trace: Trace::default(),
             finished: 0,
         }
+    }
+
+    /// Opt in to cross-turn KV retention: finished flow turns park
+    /// their cache (real or logical) in a [`SessionCachePool`] keyed by
+    /// flow id, and continuation turns admit with a delta-only plan.
+    pub fn enable_session_reuse(&mut self, capacity: usize) {
+        self.sessions = Some(SessionCachePool::new(capacity));
+    }
+
+    /// Retained idle sessions (for the memory governor's accounting).
+    pub fn retained_sessions(&self) -> usize {
+        self.sessions.as_ref().map(|p| p.len()).unwrap_or(0)
     }
 
     pub fn now(&self) -> f64 {
@@ -80,6 +136,15 @@ impl Driver {
 
     pub fn next_arrival_us(&self) -> Option<f64> {
         self.pending.front().map(|r| r.arrival_us)
+    }
+
+    fn insert_pending(&mut self, req: Request) {
+        let at = self
+            .pending
+            .partition_point(|r| {
+                (r.arrival_us, r.id) <= (req.arrival_us, req.id)
+            });
+        self.pending.insert(at, req);
     }
 
     /// Admit every request whose arrival time has passed; returns ids.
@@ -93,7 +158,15 @@ impl Driver {
         {
             let req = self.pending.pop_front().unwrap();
             let id = req.id;
-            let mut st = self.bridge.init_state(req, max_chunk);
+            // Continuation turns try the session pool first: a hit
+            // seeds the state with the retained KV + prefix length.
+            let seed = match (&mut self.sessions, &req.flow) {
+                (Some(pool), Some(fb)) if fb.is_continuation() => {
+                    pool.take_match(fb.flow_id, &req.prompt)
+                }
+                _ => None,
+            };
+            let mut st = self.bridge.init_state_with_session(req, max_chunk, seed);
             st.enqueued_at_us = self.now();
             self.states.insert(id, st);
             out.push(id);
@@ -176,6 +249,7 @@ impl Driver {
                 if st.phase == Phase::Done {
                     st.metrics.done_us = Some(c.finished_us);
                     self.finished += 1;
+                    self.on_request_done(&mut st, c.finished_us);
                 }
                 self.states.insert(*req, st);
             }
@@ -193,12 +267,50 @@ impl Driver {
                     if st.phase == Phase::Done {
                         st.metrics.done_us = Some(c.finished_us);
                         self.finished += 1;
+                        self.on_request_done(&mut st, c.finished_us);
                     }
                     self.states.insert(st.id(), st);
                 }
             }
         }
         Ok(())
+    }
+
+    /// Flow bookkeeping at turn completion: retain the session KV for
+    /// the successor turn, record the actual conversation, and release
+    /// the successor one think-time later with that conversation
+    /// stitched over the generator's placeholder prefix.
+    fn on_request_done(&mut self, st: &mut ReqState, now_us: f64) {
+        let Some(fb) = st.req.flow.clone() else { return };
+        let successor = self.chains.get_mut(&fb.flow_id).and_then(|c| c.pop_front());
+        if self.chains.get(&fb.flow_id).map(|c| c.is_empty()).unwrap_or(false) {
+            self.chains.remove(&fb.flow_id);
+        }
+        let Some(mut nxt) = successor else {
+            // flow over: nothing will reuse this session
+            if let Some(pool) = &mut self.sessions {
+                pool.drop_session(fb.flow_id);
+            }
+            return;
+        };
+        // actual conversation = this turn's prompt + everything generated
+        let mut convo = st.req.prompt.clone();
+        convo.extend(&st.tokens);
+        if let Some(pool) = &mut self.sessions {
+            pool.retain(fb.flow_id, st.cache.take(), convo.clone(), st.pos, now_us);
+        }
+        // stitch: replace the placeholder conversation estimate with
+        // the real one (same length by construction: the reply budget
+        // is always generated in full)
+        let nfb = nxt.flow.as_ref().expect("chained turn has a binding");
+        let think = nfb.think_time_us.max(0.0);
+        let ds = nfb.delta_start.min(nxt.prompt.len());
+        let delta = nxt.prompt.split_off(ds);
+        nxt.prompt = convo;
+        nxt.prompt.extend(delta);
+        // the turn "arrives" when the user finishes thinking
+        nxt.arrival_us = now_us + think;
+        self.insert_pending(nxt);
     }
 
     pub fn all_done(&self) -> bool {
@@ -244,6 +356,8 @@ impl Driver {
             mean_bw_gbps: self.sim.mean_bandwidth_gbps(),
             preemptions: self.preemptions,
             backfills: self.backfills,
+            kv_evictions: self.kv_evictions,
+            session_evictions: self.session_evictions,
         })
     }
 }
@@ -274,13 +388,52 @@ mod tests {
             arrival_us: arrival,
             prompt: vec![3; plen],
             max_new_tokens: maxnew,
-            profile: "test",
+            profile: "test".into(),
+            flow: None,
         }
+    }
+
+    /// A hand-built 3-turn flow whose conversation grows by `delta`
+    /// tokens + the full reply budget each turn.
+    fn flow_turns(flow_id: u64, first_id: u64, think_us: f64) -> Vec<Request> {
+        let (p0, out, delta) = (60usize, 4usize, 30usize);
+        let mut turns = vec![];
+        let mut prompt = vec![3i32; p0];
+        for k in 0..3usize {
+            if k > 0 {
+                let ds = prompt.len() + out;
+                prompt = vec![9; ds]; // placeholder convo (driver re-stitches)
+                prompt.extend(vec![3; delta]);
+            }
+            turns.push(Request {
+                id: first_id + k as u64,
+                priority: Priority::Reactive,
+                arrival_us: 0.0,
+                prompt: prompt.clone(),
+                max_new_tokens: out,
+                profile: "flow".into(),
+                flow: Some(crate::workload::FlowBinding {
+                    flow_id,
+                    turn_idx: k,
+                    total_turns: 3,
+                    think_time_us: if k == 0 { 0.0 } else { think_us },
+                    delta_start: if k == 0 { 0 } else { prompt.len() - delta },
+                }),
+            });
+        }
+        turns
     }
 
     /// A trivial FCFS policy good enough to exercise the driver.
     fn run_fcfs(trace: Vec<Request>) -> RunReport {
+        run_fcfs_opts(trace, false)
+    }
+
+    fn run_fcfs_opts(trace: Vec<Request>, session_reuse: bool) -> RunReport {
         let (mut d, ann) = mk_driver(trace);
+        if session_reuse {
+            d.enable_session_reuse(8);
+        }
         let npu = d.sim.xpu_index("npu").unwrap();
         let igpu = d.sim.xpu_index("igpu").unwrap();
         loop {
@@ -353,5 +506,69 @@ mod tests {
         let (d, _) = mk_driver(vec![req(1, 0.0, 64, 2)]);
         // never scheduled anything
         assert!(d.finish("broken".into()).is_err());
+    }
+
+    #[test]
+    fn flow_turns_run_in_order_with_think_time() {
+        let think = 50_000.0;
+        let rep = run_fcfs(flow_turns(1, 10, think));
+        assert_eq!(rep.reqs.iter().filter(|m| m.finished()).count(), 3);
+        for w in rep.reqs.windows(2) {
+            let (prev, next) = (&w[0], &w[1]);
+            // turn k+1 arrives exactly one think-time after turn k ends
+            assert!(
+                (next.arrival_us - (prev.done_us.unwrap() + think)).abs() < 1e-6,
+                "turn {} release", next.id
+            );
+            assert!(next.first_token_us.unwrap() >= prev.done_us.unwrap() + think);
+        }
+        // flow identity lands in the metrics
+        assert!(rep.reqs.iter().all(|m| m.flow_id == Some(1)));
+        assert_eq!(rep.reqs.iter().map(|m| m.turn_idx).collect::<Vec<_>>(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn flow_reuse_prefills_only_deltas() {
+        let rep = run_fcfs_opts(flow_turns(1, 10, 10_000.0), true);
+        let m: Vec<_> = rep.reqs.iter().collect();
+        assert_eq!(m[0].cached_prefix_len, 0);
+        assert_eq!(m[0].prefill_tokens, 60);
+        // turn 0 ends with pos = 60 + (4 - 1) generated = 63 cached;
+        // the stitched turn-1 prompt (94 tokens) extends it exactly
+        assert_eq!(m[1].cached_prefix_len, 63, "turn 1 reuses the session KV");
+        assert_eq!(m[1].prefill_tokens, 94 - 63);
+        assert_eq!(m[2].cached_prefix_len, 94 + 3);
+        assert_eq!(m[2].prefill_tokens, 128 - 97);
+        assert!(
+            rep.recomputed_prefill_tokens()
+                < rep.reqs.iter().map(|m| m.input_len).sum::<usize>(),
+            "delta prefill must beat full recompute"
+        );
+    }
+
+    #[test]
+    fn flows_without_session_reuse_recompute_everything() {
+        let rep = run_fcfs(flow_turns(1, 10, 10_000.0));
+        for m in &rep.reqs {
+            assert_eq!(m.cached_prefix_len, 0);
+            assert_eq!(m.prefill_tokens, m.input_len, "full recompute per turn");
+        }
+        // head-to-head: the reuse run does strictly less prefill work
+        let reuse = run_fcfs_opts(flow_turns(1, 10, 10_000.0), true);
+        assert!(reuse.recomputed_prefill_tokens() < rep.recomputed_prefill_tokens());
+        assert_eq!(reuse.reused_prefix_tokens(), 63 + 97);
+    }
+
+    #[test]
+    fn mixed_flow_and_single_shot_traffic_completes() {
+        let mut trace = flow_turns(5, 100, 20_000.0);
+        trace.push(req(1, 0.0, 80, 3));
+        trace.push(req(2, 30_000.0, 50, 2));
+        let rep = run_fcfs_opts(trace, true);
+        assert_eq!(rep.reqs.iter().filter(|m| m.finished()).count(), 5);
+        // single-shot requests never touch the session pool
+        for m in rep.reqs.iter().filter(|m| m.flow_id.is_none()) {
+            assert_eq!(m.cached_prefix_len, 0);
+        }
     }
 }

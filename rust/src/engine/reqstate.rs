@@ -12,6 +12,10 @@
 //! In unified host memory the checkpoint is just this struct: preempting
 //! at a kernel boundary costs nothing, and resumption recalls it with no
 //! data movement.
+//!
+//! Flow turns additionally carry `cached_prefix_len`: the conversation
+//! prefix already resident from the session's previous turn, so the
+//! chunk plan covers only the delta tokens (DESIGN.md §3).
 
 use crate::heg::ChunkSpec;
 use crate::metrics::ReqMetrics;
@@ -33,12 +37,15 @@ pub enum Phase {
 pub struct ReqState {
     pub req: Request,
     /// Elastic chunk plan (paper §5.2) — the remaining_kernels list is
-    /// implicit: kernels (chunk_idx.., layer_idx..) × n_layers.
+    /// implicit: kernels (chunk_idx.., layer_idx..) × n_layers.  Covers
+    /// only `[cached_prefix_len..prompt_len)` when a session cache was
+    /// reused.
     pub plan: Vec<ChunkSpec>,
     /// Next prefill kernel to execute.
     pub chunk_idx: usize,
     pub layer_idx: usize,
-    /// KV cache (None in timing-only mode).
+    /// KV cache (None in timing-only mode).  Seeded from the session
+    /// pool for continuation turns in real-compute mode.
     pub cache: Option<KvCache>,
     /// Activation buffer: the chunk/lane hidden state flowing between
     /// kernels (None in timing-only mode).
@@ -49,6 +56,12 @@ pub struct ReqState {
     pub tokens: Vec<i32>,
     /// Valid cached positions (mirrors cache.pos in real mode).
     pub pos: usize,
+    /// Prompt tokens already resident from this flow's previous turn
+    /// (0 for single-shot requests and prefix-cache misses).
+    pub cached_prefix_len: usize,
+    /// Chunk-size cap the plan was built with (needed to replan the
+    /// full prompt if an eviction wipes the reused prefix).
+    pub max_chunk: usize,
     pub phase: Phase,
     /// A kernel for this request is currently in flight.
     pub running: bool,
@@ -63,16 +76,26 @@ pub struct ReqState {
 }
 
 impl ReqState {
-    pub fn new(req: Request, plan: Vec<ChunkSpec>, cache: Option<KvCache>) -> Self {
+    pub fn new(
+        req: Request,
+        plan: Vec<ChunkSpec>,
+        cache: Option<KvCache>,
+        max_chunk: usize,
+        cached_prefix_len: usize,
+    ) -> Self {
         let metrics = ReqMetrics {
             id: req.id,
             priority: req.priority,
-            profile: req.profile,
+            profile: req.profile.clone(),
+            flow_id: req.flow_id(),
+            turn_idx: req.turn_idx(),
             arrival_us: req.arrival_us,
             first_token_us: None,
             done_us: None,
             input_len: req.prompt_len(),
             output_tokens: 0,
+            cached_prefix_len,
+            prefill_tokens: 0,
         };
         Self {
             enqueued_at_us: req.arrival_us,
@@ -84,7 +107,9 @@ impl ReqState {
             x: None,
             last_token: None,
             tokens: vec![],
-            pos: 0,
+            pos: cached_prefix_len,
+            cached_prefix_len,
+            max_chunk,
             phase: Phase::Prefilling,
             running: false,
             preempted: 0,
@@ -119,9 +144,16 @@ impl ReqState {
     }
 
     /// Reset all prefill progress (scheme-(a) baseline: preemption
-    /// without saving context forces recomputation).
+    /// without saving context forces recomputation).  Any reused
+    /// session prefix is lost with the KV, so the plan is rebuilt over
+    /// the full prompt.
     pub fn restart_prefill(&mut self, geo: &crate::config::ModelGeometry) {
         assert_eq!(self.phase, Phase::Prefilling, "can only restart prefill");
+        if self.cached_prefix_len > 0 {
+            self.cached_prefix_len = 0;
+            self.metrics.cached_prefix_len = 0; // the reuse never materialized
+            self.plan = crate::heg::plan_chunks(geo, self.req.prompt_len(), self.max_chunk);
+        }
         self.chunk_idx = 0;
         self.layer_idx = 0;
         self.pos = 0;
@@ -148,13 +180,14 @@ mod tests {
             arrival_us: 0.0,
             prompt: vec![1; plen],
             max_new_tokens: 4,
-            profile: "test",
+            profile: "test".into(),
+            flow: None,
         };
         let plan = vec![
             ChunkSpec { variant: 16, valid: 16, pos: 0, dynamic: false },
             ChunkSpec { variant: 16, valid: 5, pos: 16, dynamic: true },
         ];
-        ReqState::new(req, plan, None)
+        ReqState::new(req, plan, None, 64, 0)
     }
 
     #[test]
@@ -179,6 +212,33 @@ mod tests {
         st.pos = 16;
         st.restart_prefill(&geo);
         assert_eq!((st.chunk_idx, st.layer_idx, st.pos), (0, 0, 0));
+    }
+
+    #[test]
+    fn restart_prefill_discards_reused_prefix_and_replans() {
+        let geo = crate::config::llama32_3b();
+        let req = Request {
+            id: 1,
+            priority: Priority::Proactive,
+            arrival_us: 0.0,
+            prompt: vec![1; 300],
+            max_new_tokens: 4,
+            profile: "test".into(),
+            flow: None,
+        };
+        // continuation turn: 200 of 300 tokens already cached
+        let plan = crate::heg::plan_chunks_from(&geo, 300, 128, 200);
+        let mut st = ReqState::new(req, plan, None, 128, 200);
+        assert_eq!(st.pos, 200);
+        assert_eq!(st.metrics.cached_prefix_len, 200);
+        st.restart_prefill(&geo);
+        assert_eq!(st.cached_prefix_len, 0);
+        assert_eq!(st.metrics.cached_prefix_len, 0);
+        assert_eq!(st.pos, 0);
+        // the new plan covers the whole prompt from position 0
+        assert_eq!(st.plan.first().unwrap().pos, 0);
+        let total: usize = st.plan.iter().map(|c| c.valid).sum();
+        assert_eq!(total, 300);
     }
 
     #[test]

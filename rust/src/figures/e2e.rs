@@ -13,8 +13,8 @@ use crate::metrics::RunReport;
 use crate::util::bench::Table;
 use crate::util::json::Json;
 use crate::workload::{
-    Priority, Request, WorkloadSpec, merge_traces, proactive_trace, profile,
-    reactive_trace,
+    FlowSpec, Priority, Request, WorkloadSpec, flatten_flows, flow_trace, merge_traces,
+    proactive_trace, profile, reactive_trace,
 };
 
 fn geo_for_sweeps() -> ModelGeometry {
@@ -85,7 +85,8 @@ pub fn fig_schemes(soc: &SocConfig) -> Result<Json> {
                 arrival_us: 0.0,
                 prompt: vec![1; 1536],
                 max_new_tokens: 48,
-                profile: "proactivebench",
+                profile: "proactivebench".into(),
+                flow: None,
             },
             Request {
                 id: 2,
@@ -93,7 +94,8 @@ pub fn fig_schemes(soc: &SocConfig) -> Result<Json> {
                 arrival_us: 150_000.0,
                 prompt: vec![1; 512],
                 max_new_tokens: 32,
-                profile: "lmsys",
+                profile: "lmsys".into(),
+                flow: None,
             },
         ]
     };
@@ -283,6 +285,119 @@ pub fn fig_mixed(
     Ok(Json::obj().set("figure", "mixed").set("rows", Json::Arr(rows)))
 }
 
+/// Build a mixed *flow* workload: reactive multi-turn chat sessions
+/// (lmsys-shaped, user think-time between turns) + proactive monitor
+/// flows (proactivebench-shaped, event-driven wake-ups into a growing
+/// context).
+pub fn flow_trace_mixed(
+    chat_rate: f64,
+    monitor_rate: f64,
+    duration_s: f64,
+    seed: u64,
+    geo: &ModelGeometry,
+) -> Vec<Request> {
+    let chats = flow_trace(
+        &FlowSpec {
+            profile: profile("lmsys").unwrap(),
+            flow_rate_per_s: chat_rate,
+            think_time_s: 8.0,
+            turns: (2, 5),
+            duration_s,
+            seed,
+            max_seq: geo.max_seq,
+        },
+        Priority::Reactive,
+        geo.vocab,
+        0,
+        0,
+    );
+    let n_chat_reqs: u64 = chats.iter().map(|f| f.total_turns() as u64).sum();
+    let n_chat_flows = chats.len() as u64;
+    let monitors = flow_trace(
+        &FlowSpec {
+            profile: profile("proactivebench").unwrap(),
+            flow_rate_per_s: monitor_rate,
+            think_time_s: 20.0,
+            turns: (2, 4),
+            duration_s,
+            seed: seed + 1,
+            max_seq: geo.max_seq,
+        },
+        Priority::Proactive,
+        geo.vocab,
+        n_chat_reqs,
+        n_chat_flows,
+    );
+    let mut all = flatten_flows(chats);
+    all.extend(flatten_flows(monitors));
+    merge_traces(vec![all])
+}
+
+/// Flow-level sessions: multi-turn chat + monitor flows under the
+/// Agent.xpu engine (cross-turn KV reuse) vs the single-XPU
+/// continuous-batching scheme and the llama.cpp-like baseline (both
+/// full-prefix recompute) — quantifies the delta-prefill win per
+/// engine: per-flow e2e latency, per-turn TTFT, prefix-cache hit-rate,
+/// and reused vs recomputed prefill tokens.
+pub fn fig_flows(soc: &SocConfig, duration_s: f64, seed: u64) -> Result<Json> {
+    // undefined means (no flows in a short trace) serialize as null,
+    // never as a bare NaN the results file's consumers would choke on
+    fn num_or_null(v: f64) -> Json {
+        if v.is_finite() { Json::Num(v) } else { Json::Null }
+    }
+    let geo = geo_for_sweeps();
+    let trace = flow_trace_mixed(0.06, 0.04, duration_s, seed, &geo);
+    let mut rows = vec![];
+    let mut table = Table::new(&[
+        "engine", "flows", "flow e2e (ms)", "turn TTFT (ms)",
+        "hit-rate", "reused tok", "recomputed tok",
+    ]);
+    let mut engines: Vec<Box<dyn Engine>> = vec![
+        Box::new(AgentXpuEngine::synthetic(
+            geo.clone(),
+            soc.clone(),
+            SchedulerConfig::default(),
+        )),
+        Box::new(SingleXpuEngine::new(
+            geo.clone(),
+            soc.clone(),
+            Scheme::ContinuousBatching,
+        )),
+        Box::new(CpuFcfsEngine::new(geo.clone(), soc.clone(), 4)),
+    ];
+    for e in engines.iter_mut() {
+        let rep = e.run(trace.clone())?;
+        let flows = rep.flows();
+        let turn_ttft = {
+            let ts: Vec<f64> = flows.iter().map(|f| f.mean_turn_ttft_ms).collect();
+            if ts.is_empty() { f64::NAN } else { ts.iter().sum::<f64>() / ts.len() as f64 }
+        };
+        table.row(vec![
+            rep.engine.clone(),
+            format!("{}", flows.len()),
+            format!("{:.1}", rep.mean_flow_e2e_ms()),
+            format!("{turn_ttft:.1}"),
+            format!("{:.2}", rep.prefix_cache_hit_rate()),
+            format!("{}", rep.reused_prefix_tokens()),
+            format!("{}", rep.recomputed_prefill_tokens()),
+        ]);
+        rows.push(
+            Json::obj()
+                .set("engine", rep.engine.as_str())
+                .set("flows", flows.len())
+                .set("mean_flow_e2e_ms", num_or_null(rep.mean_flow_e2e_ms()))
+                .set("mean_turn_ttft_ms", num_or_null(turn_ttft))
+                .set("prefix_cache_hit_rate", num_or_null(rep.prefix_cache_hit_rate()))
+                .set("reused_prefix_tokens", rep.reused_prefix_tokens())
+                .set("recomputed_prefill_tokens", rep.recomputed_prefill_tokens()),
+        );
+    }
+    println!("\n== fig-flows: multi-turn flows & cross-turn KV reuse ==");
+    println!("(flow e2e includes user think-time; hit-rate over continuation turns)");
+    table.print();
+    Ok(Json::obj().set("figure", "flows").set("rows", Json::Arr(rows)))
+}
+
 /// Design ablations (DESIGN.md §4): toggle each §5/§6 mechanism and
 /// measure reactive latency + proactive throughput on a mixed load.
 pub fn fig_ablation(soc: &SocConfig, duration_s: f64, seed: u64) -> Result<Json> {
@@ -374,5 +489,52 @@ mod tests {
         assert_eq!(t1.len(), t2.len());
         assert!(t1.iter().any(|r| r.priority == Priority::Reactive));
         assert!(t1.iter().any(|r| r.priority == Priority::Proactive));
+    }
+
+    #[test]
+    fn flow_trace_mixed_has_both_flow_classes_and_unique_ids() {
+        let geo = llama32_3b();
+        let t = flow_trace_mixed(0.08, 0.05, 120.0, 7, &geo);
+        assert!(t.iter().any(|r| r.priority == Priority::Reactive && r.flow.is_some()));
+        assert!(t.iter().any(|r| r.priority == Priority::Proactive && r.flow.is_some()));
+        let mut ids: Vec<u64> = t.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), t.len(), "request ids unique across flow streams");
+        let mut fids: Vec<(u64, usize)> = t
+            .iter()
+            .filter_map(|r| r.flow.as_ref().map(|f| (f.flow_id, f.turn_idx)))
+            .collect();
+        fids.sort_unstable();
+        fids.dedup();
+        assert_eq!(fids.len(), t.len(), "(flow, turn) pairs unique");
+    }
+
+    #[test]
+    fn fig_flows_agent_engine_wins_on_reuse() {
+        let j = fig_flows(&default_soc(), 90.0, 7).unwrap();
+        let rows = j.get("rows").unwrap().as_arr().unwrap();
+        let get = |s: &str, k: &str| {
+            rows.iter()
+                .find(|r| r.get("engine").unwrap().as_str().unwrap().contains(s))
+                .unwrap()
+                .get(k)
+                .unwrap()
+                .as_f64()
+                .unwrap()
+        };
+        // the acceptance criterion: Agent.xpu reuses cross-turn KV —
+        // fewer recomputed prefill tokens and a real hit-rate — while
+        // the single-XPU baseline recomputes every conversation prefix
+        assert!(get("agent.xpu", "prefix_cache_hit_rate") > 0.5);
+        assert_eq!(get("scheme-c", "reused_prefix_tokens"), 0.0);
+        assert!(
+            get("agent.xpu", "recomputed_prefill_tokens")
+                < get("scheme-c", "recomputed_prefill_tokens")
+        );
+        // ... and turns that skip their prefix finish their flows sooner
+        assert!(
+            get("agent.xpu", "mean_flow_e2e_ms") <= get("scheme-c", "mean_flow_e2e_ms")
+        );
     }
 }

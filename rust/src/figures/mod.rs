@@ -8,5 +8,8 @@
 mod e2e;
 mod micro;
 
-pub use e2e::{fig_ablation, fig_mixed, fig_proactive, fig_schemes, mixed_trace};
+pub use e2e::{
+    fig_ablation, fig_flows, fig_mixed, fig_proactive, fig_schemes, flow_trace_mixed,
+    mixed_trace,
+};
 pub use micro::{fig_affinity, fig_batching, fig_contention};

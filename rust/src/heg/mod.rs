@@ -11,4 +11,4 @@ mod annotate;
 mod plan;
 
 pub use annotate::{Annotated, Annotator};
-pub use plan::{ChunkSpec, max_chunk_within_budget, plan_chunks};
+pub use plan::{ChunkSpec, max_chunk_within_budget, plan_chunks, plan_chunks_from};

@@ -45,7 +45,23 @@ pub fn max_chunk_within_budget(
 
 /// Split `prompt_len` tokens into a chunk plan.
 pub fn plan_chunks(geo: &ModelGeometry, prompt_len: usize, max_chunk: usize) -> Vec<ChunkSpec> {
+    plan_chunks_from(geo, prompt_len, max_chunk, 0)
+}
+
+/// Split the tokens `[start..prompt_len)` into a chunk plan whose cache
+/// positions begin at `start` — the *delta-prefill* path of flow-level
+/// session reuse (DESIGN.md §3): positions `[0..start)` are already
+/// resident in the session's retained KV cache, so only the fresh turn
+/// delta is planned (and each chunk's attention still spans the full
+/// prefix via its absolute `pos`).
+pub fn plan_chunks_from(
+    geo: &ModelGeometry,
+    prompt_len: usize,
+    max_chunk: usize,
+    start: usize,
+) -> Vec<ChunkSpec> {
     assert!(prompt_len > 0, "empty prompt");
+    assert!(start < prompt_len, "cached prefix {start} swallows prompt {prompt_len}");
     assert!(
         prompt_len <= geo.max_seq,
         "prompt {prompt_len} exceeds max_seq {}",
@@ -53,7 +69,7 @@ pub fn plan_chunks(geo: &ModelGeometry, prompt_len: usize, max_chunk: usize) -> 
     );
     let smallest = *geo.chunk_sizes.iter().min().unwrap();
     let mut plan = vec![];
-    let mut pos = 0;
+    let mut pos = start;
     // Greedy descending: consume the largest budget-feasible chunk that
     // fits the remainder, so mid-sized prompts still get static
     // (NPU-compilable) chunks instead of one big dynamic margin.
@@ -178,6 +194,31 @@ mod tests {
         assert_eq!(plan[0].variant, 16);
         assert!(plan[0].dynamic);
         assert_eq!(plan[0].valid, 5);
+    }
+
+    #[test]
+    fn offset_plan_covers_only_the_delta() {
+        let g = geo();
+        // 300-token conversation, 180 already cached → plan 120 tokens
+        let plan = plan_chunks_from(&g, 300, 128, 180);
+        let total: usize = plan.iter().map(|c| c.valid).sum();
+        assert_eq!(total, 120);
+        assert_eq!(plan[0].pos, 180, "first chunk starts at the cached prefix");
+        let mut pos = 180;
+        for c in &plan {
+            assert_eq!(c.pos, pos);
+            pos += c.valid;
+        }
+        assert_eq!(pos, 300);
+        // zero offset is the plain plan
+        assert_eq!(plan_chunks_from(&g, 300, 128, 0), plan_chunks(&g, 300, 128));
+    }
+
+    #[test]
+    #[should_panic(expected = "swallows prompt")]
+    fn offset_must_leave_delta_tokens() {
+        let g = geo();
+        plan_chunks_from(&g, 100, 128, 100);
     }
 
     #[test]

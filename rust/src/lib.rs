@@ -28,9 +28,13 @@
 //! - [`baselines`] — llama.cpp-like CPU FCFS engine and the Fig. 4
 //!   co-scheduling schemes (a)/(b)/(c).
 //! - [`workload`] — agentic workload generators (Poisson proactive,
-//!   exponential-think-time reactive, dataset-analog trace profiles).
-//! - [`metrics`] — TTFT/TPOT/normalized latency, throughput, energy.
-//! - [`server`] — UDS JSON-lines frontend (paper §7).
+//!   exponential-think-time reactive, dataset-analog trace profiles)
+//!   and multi-turn **flows**: ordered turn sequences sharing a session
+//!   id and a growing conversation prefix (paper §1, DESIGN.md §3).
+//! - [`metrics`] — TTFT/TPOT/normalized latency, throughput, energy,
+//!   per-flow rollups (flow e2e, prefix-cache hit-rate).
+//! - [`server`] — UDS JSON-lines frontend (paper §7) with `session`
+//!   tags that keep KV alive across calls.
 //! - [`trace`] — kernel-level execution traces for figures + debugging.
 
 pub mod baselines;

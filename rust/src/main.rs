@@ -1,7 +1,7 @@
 //! `agent-xpu` — launcher CLI.
 //!
 //! ```text
-//! agent-xpu fig <affinity|contention|batching|schemes|proactive|mixed|ablation|all>
+//! agent-xpu fig <affinity|contention|batching|schemes|proactive|mixed|flows|ablation|all>
 //!           [--out results/] [--duration 120] [--seed 7]
 //! agent-xpu run --rate 1.5 --interval 12 --duration 60 [--engine agent.xpu|llamacpp|scheme-a|b|c]
 //! agent-xpu serve --artifacts artifacts/small [--socket /tmp/agent-xpu.sock] [--b-max 8]
@@ -102,6 +102,10 @@ fn cmd_fig(args: &Args) -> Result<()> {
             "fig_mixed",
             figures::fig_mixed(&soc, &intervals, &rates, duration, seed)?,
         )?;
+        ran = true;
+    }
+    if which == "flows" || which == "all" {
+        do_fig("fig_flows", figures::fig_flows(&soc, duration, seed)?)?;
         ran = true;
     }
     if which == "ablation" || which == "all" {

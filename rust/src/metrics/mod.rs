@@ -1,7 +1,9 @@
 //! Serving metrics (paper §8.1): TTFT, TPOT, *normalized latency*
 //! (mean TTFT / input length — the paper's headline per-request metric),
-//! throughput, per-XPU utilization, and energy (peak W, J/token).
+//! throughput, per-XPU utilization, energy (peak W, J/token), and
+//! flow-level rollups (per-flow e2e latency, per-turn TTFT,
+//! prefix-cache hit-rate, reused/recomputed prefill tokens).
 
 mod report;
 
-pub use report::{Aggregate, ReqMetrics, RunReport, percentile};
+pub use report::{Aggregate, FlowStats, ReqMetrics, RunReport, percentile};

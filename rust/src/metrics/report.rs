@@ -1,22 +1,36 @@
 //! Per-request and per-run measurement containers shared by every
-//! engine, plus the aggregates the figure harnesses print.
+//! engine, plus the aggregates the figure harnesses print: per-class
+//! latency/throughput, and flow-level rollups (per-flow end-to-end
+//! latency, per-turn TTFT, prefix-cache hit-rate, reused vs recomputed
+//! prefill tokens — DESIGN.md §3).
 
 use crate::soc::XpuSnapshot;
 use crate::util::json::Json;
-use crate::workload::{Priority, ReqId};
+use crate::workload::{FlowId, Priority, ProfileTag, ReqId};
 
 /// Lifecycle timestamps of one served request (virtual µs).
 #[derive(Debug, Clone)]
 pub struct ReqMetrics {
     pub id: ReqId,
     pub priority: Priority,
-    pub profile: &'static str,
+    pub profile: ProfileTag,
+    /// Flow/session membership (None for single-shot requests).
+    pub flow_id: Option<FlowId>,
+    /// Turn index within the flow (0 for single-shot requests).
+    pub turn_idx: usize,
     pub arrival_us: f64,
     /// TTFT reference point: prefill completion / first token.
     pub first_token_us: Option<f64>,
     pub done_us: Option<f64>,
     pub input_len: usize,
     pub output_tokens: usize,
+    /// Prompt tokens served from the session cache (0 = no reuse).
+    pub cached_prefix_len: usize,
+    /// Prompt tokens actually pushed through prefill kernels — equals
+    /// `input_len` under full recompute, `input_len - cached_prefix_len`
+    /// under session reuse, and *more* than `input_len` if an eviction
+    /// forced a restart.
+    pub prefill_tokens: usize,
 }
 
 impl ReqMetrics {
@@ -62,6 +76,24 @@ pub struct RunReport {
     pub preemptions: u64,
     /// Kernels launched via slack-aware backfill.
     pub backfills: u64,
+    /// In-flight prefills whose KV the memory governor evicted.
+    pub kv_evictions: u64,
+    /// Idle retained sessions the memory governor dropped.
+    pub session_evictions: u64,
+}
+
+/// Rollup of one multi-turn flow.
+#[derive(Debug, Clone)]
+pub struct FlowStats {
+    pub flow_id: FlowId,
+    pub turns: usize,
+    pub finished: bool,
+    /// First turn arrival → last turn completion (includes think-time).
+    pub e2e_us: Option<f64>,
+    /// Mean per-turn TTFT (ms) over finished turns.
+    pub mean_turn_ttft_ms: f64,
+    pub reused_tokens: usize,
+    pub recomputed_tokens: usize,
 }
 
 pub fn percentile(sorted: &[f64], p: f64) -> f64 {
@@ -113,6 +145,78 @@ impl RunReport {
         }
     }
 
+    /// Per-flow rollups, ordered by flow id.
+    pub fn flows(&self) -> Vec<FlowStats> {
+        let mut by_flow: std::collections::BTreeMap<FlowId, Vec<&ReqMetrics>> =
+            std::collections::BTreeMap::new();
+        for m in self.reqs.iter().filter(|m| m.flow_id.is_some()) {
+            by_flow.entry(m.flow_id.unwrap()).or_default().push(m);
+        }
+        by_flow
+            .into_iter()
+            .map(|(flow_id, mut turns)| {
+                turns.sort_by_key(|m| m.turn_idx);
+                let finished = turns.iter().all(|m| m.finished());
+                let first_arrival = turns.first().map(|m| m.arrival_us).unwrap_or(0.0);
+                let last_done =
+                    turns.iter().filter_map(|m| m.done_us).fold(f64::NAN, f64::max);
+                let ttfts: Vec<f64> = turns
+                    .iter()
+                    .filter_map(|m| m.ttft_us().map(|t| t / 1e3))
+                    .collect();
+                FlowStats {
+                    flow_id,
+                    turns: turns.len(),
+                    finished,
+                    e2e_us: finished.then_some(last_done - first_arrival),
+                    mean_turn_ttft_ms: if ttfts.is_empty() {
+                        f64::NAN
+                    } else {
+                        ttfts.iter().sum::<f64>() / ttfts.len() as f64
+                    },
+                    reused_tokens: turns.iter().map(|m| m.cached_prefix_len).sum(),
+                    recomputed_tokens: turns.iter().map(|m| m.prefill_tokens).sum(),
+                }
+            })
+            .collect()
+    }
+
+    /// Mean flow end-to-end latency (ms) over finished flows.
+    pub fn mean_flow_e2e_ms(&self) -> f64 {
+        let e2es: Vec<f64> =
+            self.flows().iter().filter_map(|f| f.e2e_us.map(|t| t / 1e3)).collect();
+        if e2es.is_empty() {
+            f64::NAN
+        } else {
+            e2es.iter().sum::<f64>() / e2es.len() as f64
+        }
+    }
+
+    /// Fraction of continuation turns (turn_idx > 0) that admitted with
+    /// a usable session cache.  NaN when no continuation turns ran.
+    pub fn prefix_cache_hit_rate(&self) -> f64 {
+        let eligible: Vec<&ReqMetrics> = self
+            .reqs
+            .iter()
+            .filter(|m| m.flow_id.is_some() && m.turn_idx > 0)
+            .collect();
+        if eligible.is_empty() {
+            return f64::NAN;
+        }
+        eligible.iter().filter(|m| m.cached_prefix_len > 0).count() as f64
+            / eligible.len() as f64
+    }
+
+    /// Prompt tokens served from session caches instead of recomputed.
+    pub fn reused_prefix_tokens(&self) -> usize {
+        self.reqs.iter().map(|m| m.cached_prefix_len).sum()
+    }
+
+    /// Prompt tokens pushed through prefill kernels across the run.
+    pub fn recomputed_prefill_tokens(&self) -> usize {
+        self.reqs.iter().map(|m| m.prefill_tokens).sum()
+    }
+
     /// Total generated tokens (all classes).
     pub fn total_tokens(&self) -> usize {
         self.reqs.iter().filter(|r| r.finished()).map(|r| r.output_tokens).sum()
@@ -135,29 +239,64 @@ impl RunReport {
     }
 
     pub fn to_json(&self) -> Json {
+        // Undefined aggregates (no flows ran, no finished requests in a
+        // class, …) serialize as null — a bare NaN is not valid JSON.
+        fn num_or_null(v: f64) -> Json {
+            if v.is_finite() { Json::Num(v) } else { Json::Null }
+        }
         let cls = |p: Priority| {
             let a = self.class(p);
             Json::obj()
                 .set("count", a.count)
                 .set("finished", a.finished)
-                .set("mean_norm_latency_ms", a.mean_norm_latency_ms)
-                .set("p95_norm_latency_ms", a.p95_norm_latency_ms)
-                .set("mean_ttft_ms", a.mean_ttft_ms)
-                .set("mean_tpot_ms", a.mean_tpot_ms)
+                .set("mean_norm_latency_ms", num_or_null(a.mean_norm_latency_ms))
+                .set("p95_norm_latency_ms", num_or_null(a.p95_norm_latency_ms))
+                .set("mean_ttft_ms", num_or_null(a.mean_ttft_ms))
+                .set("mean_tpot_ms", num_or_null(a.mean_tpot_ms))
                 .set("tokens_per_s", a.tokens_per_s)
                 .set("reqs_per_s", a.reqs_per_s)
         };
+        // one rollup pass shared by every flow-level field below
+        let flows = self.flows();
+        let mean_e2e = {
+            let e2es: Vec<f64> =
+                flows.iter().filter_map(|f| f.e2e_us.map(|t| t / 1e3)).collect();
+            if e2es.is_empty() {
+                f64::NAN
+            } else {
+                e2es.iter().sum::<f64>() / e2es.len() as f64
+            }
+        };
+        let flows_json = Json::obj()
+            .set("count", flows.len())
+            .set("finished", flows.iter().filter(|f| f.finished).count())
+            .set("mean_e2e_ms", num_or_null(mean_e2e))
+            .set(
+                "mean_turn_ttft_ms",
+                num_or_null(if flows.is_empty() {
+                    f64::NAN
+                } else {
+                    flows.iter().map(|f| f.mean_turn_ttft_ms).sum::<f64>()
+                        / flows.len() as f64
+                }),
+            )
+            .set("prefix_cache_hit_rate", num_or_null(self.prefix_cache_hit_rate()))
+            .set("reused_prefix_tokens", self.reused_prefix_tokens())
+            .set("recomputed_prefill_tokens", self.recomputed_prefill_tokens());
         Json::obj()
             .set("engine", self.engine.as_str())
             .set("makespan_s", self.makespan_us / 1e6)
             .set("reactive", cls(Priority::Reactive))
             .set("proactive", cls(Priority::Proactive))
+            .set("flows", flows_json)
             .set("total_energy_j", self.total_energy_j)
             .set("peak_power_w", self.peak_power_w)
-            .set("joules_per_token", self.joules_per_token())
+            .set("joules_per_token", num_or_null(self.joules_per_token()))
             .set("mean_bw_gbps", self.mean_bw_gbps)
             .set("preemptions", self.preemptions as usize)
             .set("backfills", self.backfills as usize)
+            .set("kv_evictions", self.kv_evictions as usize)
+            .set("session_evictions", self.session_evictions as usize)
     }
 }
 
@@ -169,13 +308,34 @@ mod tests {
         ReqMetrics {
             id,
             priority: p,
-            profile: "test",
+            profile: "test".into(),
+            flow_id: None,
+            turn_idx: 0,
             arrival_us: arr,
             first_token_us: Some(arr + ttft),
             done_us: Some(arr + done),
             input_len: il,
             output_tokens: ot,
+            cached_prefix_len: 0,
+            prefill_tokens: il,
         }
+    }
+
+    fn flow_req(
+        id: u64,
+        flow: u64,
+        turn: usize,
+        arr: f64,
+        done: f64,
+        il: usize,
+        cached: usize,
+    ) -> ReqMetrics {
+        let mut m = req(id, Priority::Reactive, arr, 10_000.0, done - arr, il, 4);
+        m.flow_id = Some(flow);
+        m.turn_idx = turn;
+        m.cached_prefix_len = cached;
+        m.prefill_tokens = il - cached;
+        m
     }
 
     fn report(reqs: Vec<ReqMetrics>) -> RunReport {
@@ -189,6 +349,8 @@ mod tests {
             mean_bw_gbps: 30.0,
             preemptions: 0,
             backfills: 0,
+            kv_evictions: 0,
+            session_evictions: 0,
         }
     }
 
@@ -249,5 +411,67 @@ mod tests {
         let j = rep.to_json();
         assert_eq!(j.get("engine").unwrap().as_str().unwrap(), "test");
         assert!(j.get("reactive").unwrap().get("mean_ttft_ms").is_ok());
+        assert!(j.get("flows").unwrap().get("prefix_cache_hit_rate").is_ok());
+        assert!(j.get("kv_evictions").is_ok());
+    }
+
+    #[test]
+    fn report_json_is_parseable_even_without_flows() {
+        // proactive-only run: reactive aggregates and all flow metrics
+        // are undefined — they must serialize as null, not a bare NaN
+        // that no JSON parser accepts
+        let rep = report(vec![req(1, Priority::Proactive, 0.0, 1.0, 2.0, 10, 5)]);
+        let text = rep.to_json().to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(*back.get("flows").unwrap().get("mean_e2e_ms").unwrap(), Json::Null);
+        assert_eq!(
+            *back.get("flows").unwrap().get("prefix_cache_hit_rate").unwrap(),
+            Json::Null
+        );
+        assert_eq!(
+            *back.get("reactive").unwrap().get("mean_ttft_ms").unwrap(),
+            Json::Null
+        );
+    }
+
+    #[test]
+    fn flow_rollups_aggregate_turns() {
+        let rep = report(vec![
+            // flow 1: two turns, second reused 50 tokens
+            flow_req(1, 1, 0, 0.0, 40_000.0, 60, 0),
+            flow_req(2, 1, 1, 100_000.0, 150_000.0, 100, 50),
+            // flow 2: single finished turn
+            flow_req(3, 2, 0, 10_000.0, 30_000.0, 40, 0),
+            // an unrelated single-shot request
+            req(4, Priority::Proactive, 0.0, 1.0, 2.0, 20, 3),
+        ]);
+        let flows = rep.flows();
+        assert_eq!(flows.len(), 2);
+        let f1 = &flows[0];
+        assert_eq!((f1.flow_id, f1.turns), (1, 2));
+        assert!(f1.finished);
+        // first arrival 0, last done 150_000
+        assert!((f1.e2e_us.unwrap() - 150_000.0).abs() < 1e-9);
+        assert_eq!(f1.reused_tokens, 50);
+        assert_eq!(f1.recomputed_tokens, 60 + 50);
+        // hit rate: one continuation turn, one hit
+        assert!((rep.prefix_cache_hit_rate() - 1.0).abs() < 1e-9);
+        assert_eq!(rep.reused_prefix_tokens(), 50);
+        assert_eq!(rep.recomputed_prefill_tokens(), 60 + 50 + 40 + 20);
+    }
+
+    #[test]
+    fn hit_rate_counts_misses_and_skips_single_shots() {
+        let rep = report(vec![
+            flow_req(1, 1, 0, 0.0, 1.0, 60, 0),
+            flow_req(2, 1, 1, 2.0, 3.0, 80, 0),  // continuation, missed
+            flow_req(3, 1, 2, 4.0, 5.0, 90, 70), // continuation, hit
+        ]);
+        assert!((rep.prefix_cache_hit_rate() - 0.5).abs() < 1e-9);
+        // no flows at all → NaN (undefined, not zero)
+        let none = report(vec![req(1, Priority::Reactive, 0.0, 1.0, 2.0, 10, 2)]);
+        assert!(none.prefix_cache_hit_rate().is_nan());
+        assert!(none.flows().is_empty());
+        assert!(none.mean_flow_e2e_ms().is_nan());
     }
 }

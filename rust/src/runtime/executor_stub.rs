@@ -1,0 +1,95 @@
+//! Stub runtime used when the crate is built **without** the
+//! `real-pjrt` feature: the API surface of `executor.rs` with every
+//! entry point failing fast.  Timing-only DES engines never touch this
+//! (their `ExecBridge` has no executor); the stub only exists so the
+//! serving binary, examples, and integration tests compile unchanged
+//! and degrade to a clear runtime error instead of a build break when
+//! the `xla` bindings are unavailable.
+
+use anyhow::{Result, bail};
+
+use crate::config::{Manifest, ModelGeometry};
+
+use super::kvcache::KvCache;
+use super::tensor::HostTensor;
+
+const NO_PJRT: &str = "built without the `real-pjrt` feature: real compute is \
+     unavailable (enable the feature and provide the `xla` bindings crate; \
+     timing-only DES mode needs no artifacts)";
+
+/// Compiled artifacts + resident weights — unavailable in this build.
+pub struct Runtime {
+    pub manifest: Manifest,
+    pub geo: ModelGeometry,
+}
+
+impl Runtime {
+    pub fn load(_artifact_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        bail!(NO_PJRT)
+    }
+}
+
+/// High-level per-kernel model operations over a [`Runtime`].
+pub struct ModelExecutor {
+    pub rt: std::sync::Arc<Runtime>,
+}
+
+impl ModelExecutor {
+    pub fn new(rt: std::sync::Arc<Runtime>) -> Self {
+        Self { rt }
+    }
+
+    pub fn geo(&self) -> &ModelGeometry {
+        &self.rt.geo
+    }
+
+    pub fn embed(&self, _tokens: &[i32], _n: usize) -> Result<HostTensor> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn layer_prefill(
+        &self,
+        _chunk: usize,
+        _layer: usize,
+        _x: &HostTensor,
+        _cache: &mut KvCache,
+        _pos: usize,
+    ) -> Result<HostTensor> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn layer_decode(
+        &self,
+        _layer: usize,
+        _x: &HostTensor,
+        _caches: &mut [&mut KvCache],
+    ) -> Result<HostTensor> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn head(&self, _x: &HostTensor) -> Result<Vec<i32>> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn prefill(
+        &self,
+        _prompt: &[i32],
+        _chunk: usize,
+        _cache: &mut KvCache,
+    ) -> Result<HostTensor> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn decode(
+        &self,
+        _hidden: HostTensor,
+        _cache: &mut KvCache,
+        _steps: usize,
+    ) -> Result<Vec<i32>> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn generate(&self, _prompt: &[i32], _chunk: usize, _steps: usize) -> Result<Vec<i32>> {
+        bail!(NO_PJRT)
+    }
+}

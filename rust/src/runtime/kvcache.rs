@@ -71,6 +71,135 @@ pub fn scatter_batch(
     }
 }
 
+/// Serving state a finished flow turn leaves behind for its successor.
+///
+/// In real-compute mode `cache` is the turn's KV buffers; in
+/// timing-only DES mode it is `None` but the entry still models the
+/// *logical* KV residency (the memory governor charges one KV slot per
+/// retained session either way).  `prefix` holds the actual
+/// conversation tokens (prompt + generated reply) so a match can verify
+/// the new prompt really extends what the cache contains.
+#[derive(Debug, Clone)]
+pub struct SessionEntry {
+    pub cache: Option<KvCache>,
+    /// Actual conversation tokens this session's KV was built from.
+    pub prefix: Vec<i32>,
+    /// Valid cached positions (≤ `prefix.len()`: the final generated
+    /// token was emitted but never fed back through the model).
+    pub pos: usize,
+    /// Last touch (virtual µs for the DES, wall µs for the RT server) —
+    /// the LRU eviction key.
+    pub last_used_us: f64,
+}
+
+/// What a session match seeds a new turn's `ReqState` with.
+#[derive(Debug)]
+pub struct SessionSeed {
+    pub cache: Option<KvCache>,
+    /// Prompt tokens already covered by the retained KV — the turn
+    /// prefills only `prompt_len - reuse` delta tokens.
+    pub reuse: usize,
+}
+
+/// Cross-turn KV retention (paper §1 "long-lived, stateful LLM flows"):
+/// a finished turn's cache stays resident keyed by flow/session id so
+/// turn *k+1* prefills only its delta tokens instead of recomputing the
+/// whole conversation prefix.  Capacity-bounded; least-recently-used
+/// sessions are dropped first (and the coordinator's memory governor
+/// may evict further under DRAM pressure — idle sessions go before any
+/// in-flight prefill).
+#[derive(Debug, Default)]
+pub struct SessionCachePool {
+    capacity: usize,
+    entries: std::collections::HashMap<u64, SessionEntry>,
+    /// Sessions dropped by capacity or external (governor) eviction.
+    pub evicted: u64,
+    /// Matches served / continuation lookups that found nothing usable.
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl SessionCachePool {
+    pub fn new(capacity: usize) -> Self {
+        Self { capacity: capacity.max(1), ..Default::default() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Retain a finished turn's serving state for its successor.
+    /// Evicts LRU entries beyond capacity.
+    pub fn retain(
+        &mut self,
+        session: u64,
+        cache: Option<KvCache>,
+        prefix: Vec<i32>,
+        pos: usize,
+        now_us: f64,
+    ) {
+        let pos = pos.min(prefix.len());
+        self.entries
+            .insert(session, SessionEntry { cache, prefix, pos, last_used_us: now_us });
+        while self.entries.len() > self.capacity {
+            if self.evict_lru().is_none() {
+                break;
+            }
+        }
+    }
+
+    /// Claim the retained state for `session` if it actually covers a
+    /// prefix of `prompt`.  The entry is removed either way (a stale
+    /// mismatch is useless; the turn that claimed it owns the KV now).
+    /// Returns `None` — a recorded miss — when nothing usable exists.
+    pub fn take_match(&mut self, session: u64, prompt: &[i32]) -> Option<SessionSeed> {
+        let Some(e) = self.entries.remove(&session) else {
+            self.misses += 1;
+            return None;
+        };
+        // longest common prefix between what the KV contains and what
+        // the new turn wants; at least the final prompt token must be
+        // recomputed to produce first-token logits
+        let lcp = e.prefix.iter().zip(prompt).take_while(|(a, b)| a == b).count();
+        let reuse = lcp.min(e.pos).min(prompt.len().saturating_sub(1));
+        if reuse == 0 {
+            self.misses += 1;
+            return None;
+        }
+        self.hits += 1;
+        Some(SessionSeed { cache: e.cache, reuse })
+    }
+
+    /// Drop a session (flow ended; nothing to reuse).
+    pub fn drop_session(&mut self, session: u64) {
+        self.entries.remove(&session);
+    }
+
+    /// Evict the least-recently-used session; returns its id.
+    pub fn evict_lru(&mut self) -> Option<u64> {
+        let victim = self
+            .entries
+            .iter()
+            .min_by(|a, b| {
+                a.1.last_used_us.total_cmp(&b.1.last_used_us).then(a.0.cmp(b.0))
+            })
+            .map(|(k, _)| *k)?;
+        self.entries.remove(&victim);
+        self.evicted += 1;
+        Some(victim)
+    }
+
+    /// Host bytes held by retained *real* caches (0 in timing-only mode;
+    /// the memory governor accounts logical slots separately).
+    pub fn bytes(&self) -> usize {
+        self.entries.values().filter_map(|e| e.cache.as_ref()).map(|c| c.bytes()).sum()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -137,5 +266,61 @@ mod tests {
         a.v[1][3] = 9.0;
         let batch = assemble_batch(&[&a], 1, true);
         assert_eq!(batch[3], 9.0);
+    }
+
+    #[test]
+    fn session_pool_matches_extending_prompts() {
+        let mut p = SessionCachePool::new(4);
+        // conversation [1,2,3,4] with 3 cached positions
+        p.retain(7, None, vec![1, 2, 3, 4], 3, 10.0);
+        assert_eq!(p.len(), 1);
+        // next turn extends the conversation → reuse the cached 3
+        let seed = p.take_match(7, &[1, 2, 3, 4, 5, 6]).unwrap();
+        assert_eq!(seed.reuse, 3);
+        assert_eq!((p.hits, p.misses), (1, 0));
+        assert!(p.is_empty(), "a claimed session is consumed");
+        // unknown session → miss
+        assert!(p.take_match(7, &[1, 2]).is_none());
+        assert_eq!(p.misses, 1);
+    }
+
+    #[test]
+    fn session_pool_rejects_diverged_prompts_and_caps_reuse() {
+        let mut p = SessionCachePool::new(4);
+        p.retain(1, None, vec![1, 2, 3], 3, 0.0);
+        // diverges at position 0 → nothing reusable
+        assert!(p.take_match(1, &[9, 9, 9, 9]).is_none());
+        // at least one prompt token must remain to prefill
+        p.retain(2, None, vec![1, 2, 3], 3, 0.0);
+        let seed = p.take_match(2, &[1, 2, 3]).unwrap();
+        assert_eq!(seed.reuse, 2, "last token recomputed for logits");
+    }
+
+    #[test]
+    fn session_pool_evicts_lru_beyond_capacity() {
+        let mut p = SessionCachePool::new(2);
+        p.retain(1, None, vec![1], 1, 10.0);
+        p.retain(2, None, vec![1], 1, 20.0);
+        p.retain(3, None, vec![1], 1, 5.0); // oldest touch, arrives last
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.evicted, 1);
+        // session 3 (last_used 5.0) was the LRU victim
+        assert!(p.take_match(3, &[1, 2]).is_none());
+        assert!(p.take_match(1, &[1, 2]).is_some());
+        // explicit LRU eviction picks the remaining entry
+        assert_eq!(p.evict_lru(), Some(2));
+        assert_eq!(p.evict_lru(), None);
+    }
+
+    #[test]
+    fn session_pool_accounts_real_cache_bytes() {
+        let g = geo();
+        let mut p = SessionCachePool::new(4);
+        p.retain(1, Some(KvCache::new(&g)), vec![1, 2], 2, 0.0);
+        p.retain(2, None, vec![1, 2], 2, 0.0);
+        assert_eq!(p.bytes(), 256, "one real cache resident");
+        let seed = p.take_match(1, &[1, 2, 3]).unwrap();
+        assert!(seed.cache.is_some());
+        assert_eq!(p.bytes(), 0);
     }
 }

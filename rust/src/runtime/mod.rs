@@ -6,11 +6,26 @@
 //! → `XlaComputation::from_proto` → `client.compile` → `execute`.
 //! Interchange is HLO *text* because xla_extension 0.5.1 rejects
 //! jax≥0.5's 64-bit-id serialized protos.
+//!
+//! Real PJRT compute sits behind the `real-pjrt` cargo feature (it
+//! needs the `xla` bindings crate, which is not vendored — see
+//! Cargo.toml).  Without the feature, [`Runtime::load`] returns an
+//! error and every engine runs in timing-only DES mode; the rest of
+//! the API (including [`KvCache`] and the [`SessionCachePool`] used
+//! for cross-turn flow reuse) is always available.
 
+#[cfg(feature = "real-pjrt")]
+mod executor;
+#[cfg(not(feature = "real-pjrt"))]
+#[path = "executor_stub.rs"]
 mod executor;
 mod kvcache;
 mod tensor;
 
 pub use executor::{ModelExecutor, Runtime};
-pub use kvcache::{KvCache, assemble_batch, scatter_batch};
-pub use tensor::{HostTensor, f32_literal, i32_literal, literal_f32, literal_i32};
+pub use kvcache::{
+    KvCache, SessionCachePool, SessionEntry, SessionSeed, assemble_batch, scatter_batch,
+};
+pub use tensor::HostTensor;
+#[cfg(feature = "real-pjrt")]
+pub use tensor::{f32_literal, i32_literal, literal_f32, literal_i32};

@@ -3,7 +3,9 @@
 //! the host (the SoC's unified memory — DESIGN.md §1); PJRT copies are
 //! made at kernel-execution boundaries.
 
+#[cfg(feature = "real-pjrt")]
 use anyhow::{Result, anyhow};
+#[cfg(feature = "real-pjrt")]
 use xla::{ElementType, Literal};
 
 /// A host f32 tensor with an explicit shape.
@@ -35,10 +37,12 @@ impl HostTensor {
         HostTensor::new(self.data[i * cols..(i + 1) * cols].to_vec(), &[1, cols])
     }
 
+    #[cfg(feature = "real-pjrt")]
     pub fn to_literal(&self) -> Result<Literal> {
         f32_literal(&self.data, &self.shape)
     }
 
+    #[cfg(feature = "real-pjrt")]
     pub fn from_literal(lit: &Literal) -> Result<Self> {
         let shape = lit.array_shape()?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
@@ -47,6 +51,7 @@ impl HostTensor {
 }
 
 /// Build an f32 literal from host data.
+#[cfg(feature = "real-pjrt")]
 pub fn f32_literal(data: &[f32], dims: &[usize]) -> Result<Literal> {
     let bytes: &[u8] = unsafe {
         std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
@@ -56,6 +61,7 @@ pub fn f32_literal(data: &[f32], dims: &[usize]) -> Result<Literal> {
 }
 
 /// Build an i32 literal from host data.
+#[cfg(feature = "real-pjrt")]
 pub fn i32_literal(data: &[i32], dims: &[usize]) -> Result<Literal> {
     let bytes: &[u8] = unsafe {
         std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
@@ -65,11 +71,13 @@ pub fn i32_literal(data: &[i32], dims: &[usize]) -> Result<Literal> {
 }
 
 /// Read an f32 literal back to host.
+#[cfg(feature = "real-pjrt")]
 pub fn literal_f32(lit: &Literal) -> Result<Vec<f32>> {
     lit.to_vec::<f32>().map_err(|e| anyhow!("literal->f32: {e}"))
 }
 
 /// Read an i32 literal back to host.
+#[cfg(feature = "real-pjrt")]
 pub fn literal_i32(lit: &Literal) -> Result<Vec<i32>> {
     lit.to_vec::<i32>().map_err(|e| anyhow!("literal->i32: {e}"))
 }
@@ -90,6 +98,7 @@ mod tests {
         assert_eq!(r.data, vec![1.5, 0.0, 0.0, -2.0]);
     }
 
+    #[cfg(feature = "real-pjrt")]
     #[test]
     fn f32_literal_roundtrip() {
         let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
@@ -101,6 +110,7 @@ mod tests {
         assert_eq!(t.data, data);
     }
 
+    #[cfg(feature = "real-pjrt")]
     #[test]
     fn i32_literal_roundtrip() {
         let data = vec![7i32, -1, 0, 42];

@@ -9,13 +9,19 @@
 //! ← {"type":"accepted","id":1}
 //! ← {"type":"token","id":1,"token":42,"n":1}
 //! ← ...
-//! ← {"type":"done","id":1,"ttft_ms":12.3,"total_ms":80.1,"tokens":[...]}
+//! ← {"type":"done","id":1,"ttft_ms":12.3,"total_ms":80.1,"cached_prefix":0,"tokens":[...]}
 //! → {"type":"stats"}
-//! ← {"type":"stats","served":3,"queued_reactive":0,"queued_proactive":1}
+//! ← {"type":"stats","served":3}
 //! ```
+//!
+//! The optional `"session":"<tag>"` field on `generate` keeps the KV
+//! cache alive across calls (flow-level sessions, DESIGN.md §3): a
+//! later call whose prompt extends the tagged conversation prefills
+//! only the delta tokens, and `done.cached_prefix` reports how many
+//! prompt tokens the retained KV covered.
 
 mod rt;
 mod uds;
 
 pub use rt::{RtRequest, RtScheduler, TokenEvent, spawn};
-pub use uds::{Server, client_generate};
+pub use uds::{GenerateResult, Server, client_generate, client_generate_session};

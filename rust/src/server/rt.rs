@@ -2,12 +2,19 @@
 //! reactive-first kernel-level preemption, decode batching) executed
 //! against *wall-clock* time with real PJRT compute.
 //!
+//! Sessions: a request carrying a `session` tag retains its KV after
+//! completion, keyed by that tag, and the session's next call prefills
+//! only the tokens beyond the retained conversation prefix — the
+//! serving-side face of flow-level cross-turn reuse (DESIGN.md §3).
+//! Retention is LRU-bounded.
+//!
 //! The CPU PJRT substrate serializes kernel execution on one compute
 //! thread, so "the pipelines" collapse to one lane — but the scheduling
 //! decisions (who runs the next kernel, who joins the decode batch, who
 //! gets preempted at a kernel boundary) are exactly the coordinator's,
 //! which is what the serving frontend needs.
 
+use std::collections::HashMap;
 use std::sync::Arc;
 use std::sync::mpsc::{Receiver, Sender, channel};
 use std::time::Instant;
@@ -15,7 +22,53 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::engine::{ExecBridge, Phase, ReqState};
+use crate::runtime::SessionCachePool;
 use crate::workload::{Priority, ReqId, Request};
+
+/// Max sessions whose KV stays resident between calls (LRU beyond).
+const SESSION_CAPACITY: usize = 32;
+
+/// Max session *tags* remembered by the server.  Tags arrive from
+/// clients, so the map must be bounded for a long-lived server; when
+/// it overflows, the oldest tag (and its retained KV, if any) is
+/// forgotten — that session's next call simply starts cold.
+const SESSION_TAGS_MAX: usize = 1024;
+
+/// Bounded session-tag registry: maps client tags to stable pool keys.
+/// Ids are monotonic (never reused), so a forgotten tag can never
+/// alias another session's retained cache.
+#[derive(Default)]
+struct SessionRegistry {
+    ids: HashMap<String, u64>,
+    order: std::collections::VecDeque<String>,
+    next: u64,
+}
+
+impl SessionRegistry {
+    /// Resolve a tag to its pool key, registering it if new; evicts the
+    /// oldest tag (dropping its pool entry) beyond `SESSION_TAGS_MAX`.
+    fn resolve(&mut self, tag: &str, pool: &mut SessionCachePool) -> u64 {
+        if let Some(&sid) = self.ids.get(tag) {
+            return sid;
+        }
+        let sid = self.next;
+        self.next += 1;
+        self.ids.insert(tag.to_string(), sid);
+        self.order.push_back(tag.to_string());
+        while self.order.len() > SESSION_TAGS_MAX {
+            if let Some(old) = self.order.pop_front() {
+                if let Some(old_sid) = self.ids.remove(&old) {
+                    pool.drop_session(old_sid);
+                }
+            }
+        }
+        sid
+    }
+
+    fn get(&self, tag: &str) -> Option<u64> {
+        self.ids.get(tag).copied()
+    }
+}
 
 /// A request submitted to the real-time scheduler.
 pub struct RtRequest {
@@ -23,6 +76,9 @@ pub struct RtRequest {
     pub priority: Priority,
     pub prompt: Vec<i32>,
     pub max_new_tokens: usize,
+    /// Session tag: calls sharing a tag reuse the retained KV of the
+    /// previous call's conversation (`None` = single-shot).
+    pub session: Option<String>,
     /// Streamed token events land here.
     pub events: Sender<TokenEvent>,
 }
@@ -32,13 +88,21 @@ pub struct RtRequest {
 pub enum TokenEvent {
     Accepted { id: ReqId },
     Token { id: ReqId, token: i32, n: usize },
-    Done { id: ReqId, ttft_ms: f64, total_ms: f64, tokens: Vec<i32> },
+    Done {
+        id: ReqId,
+        ttft_ms: f64,
+        total_ms: f64,
+        tokens: Vec<i32>,
+        /// Prompt tokens served from the session cache (0 = no reuse).
+        cached_prefix: usize,
+    },
     Error { id: ReqId, message: String },
 }
 
 struct Active {
     st: ReqState,
     events: Sender<TokenEvent>,
+    session: Option<String>,
     t_arrive: Instant,
     t_first: Option<Instant>,
     sent: usize,
@@ -63,18 +127,28 @@ impl RtScheduler {
         let mut active: Vec<Active> = vec![];
         let mut served = 0u64;
         let mut open = true;
+        // session-tag → pool key, plus the retained KV itself; both
+        // live exactly as long as this serve loop
+        let mut session_ids = SessionRegistry::default();
+        let mut sessions = SessionCachePool::new(SESSION_CAPACITY);
+        let t0 = Instant::now();
         loop {
+            let now_us = t0.elapsed().as_secs_f64() * 1e6;
             // Admit — block only when there is nothing to do.
             if open {
                 if active.is_empty() {
                     match rx.recv() {
-                        Ok(r) => self.admit(&mut active, r),
+                        Ok(r) => {
+                            self.admit(&mut active, r, &mut sessions, &mut session_ids)
+                        }
                         Err(_) => open = false,
                     }
                 }
                 loop {
                     match rx.try_recv() {
-                        Ok(r) => self.admit(&mut active, r),
+                        Ok(r) => {
+                            self.admit(&mut active, r, &mut sessions, &mut session_ids)
+                        }
                         Err(std::sync::mpsc::TryRecvError::Empty) => break,
                         Err(std::sync::mpsc::TryRecvError::Disconnected) => {
                             open = false;
@@ -99,17 +173,32 @@ impl RtScheduler {
             let mut i = 0;
             while i < active.len() {
                 if active[i].st.phase == Phase::Done {
-                    let a = active.swap_remove(i);
+                    let mut a = active.swap_remove(i);
                     let ttft = a
                         .t_first
                         .map(|t| t.duration_since(a.t_arrive).as_secs_f64() * 1e3)
                         .unwrap_or(f64::NAN);
                     let total = a.t_arrive.elapsed().as_secs_f64() * 1e3;
+                    // park the conversation KV for the session's next call
+                    if let Some(tag) = &a.session {
+                        if let Some(sid) = session_ids.get(tag) {
+                            let mut convo = a.st.req.prompt.clone();
+                            convo.extend(&a.st.tokens);
+                            sessions.retain(
+                                sid,
+                                a.st.cache.take(),
+                                convo,
+                                a.st.pos,
+                                now_us,
+                            );
+                        }
+                    }
                     let _ = a.events.send(TokenEvent::Done {
                         id: a.st.id(),
                         ttft_ms: ttft,
                         total_ms: total,
                         tokens: a.st.tokens.clone(),
+                        cached_prefix: a.st.cached_prefix_len,
                     });
                     served += 1;
                 } else {
@@ -119,20 +208,33 @@ impl RtScheduler {
         }
     }
 
-    fn admit(&self, active: &mut Vec<Active>, r: RtRequest) {
+    fn admit(
+        &self,
+        active: &mut Vec<Active>,
+        r: RtRequest,
+        sessions: &mut SessionCachePool,
+        session_ids: &mut SessionRegistry,
+    ) {
         let req = Request {
             id: r.id,
             priority: r.priority,
             arrival_us: 0.0,
             prompt: r.prompt,
             max_new_tokens: r.max_new_tokens,
-            profile: "uds",
+            profile: "uds".into(),
+            flow: None,
         };
         let _ = r.events.send(TokenEvent::Accepted { id: req.id });
-        let st = self.bridge.init_state(req, self.max_chunk);
+        // resolve the session tag and claim any retained prefix KV
+        let seed = r.session.as_ref().and_then(|tag| {
+            let sid = session_ids.resolve(tag, sessions);
+            sessions.take_match(sid, &req.prompt)
+        });
+        let st = self.bridge.init_state_with_session(req, self.max_chunk, seed);
         active.push(Active {
             st,
             events: r.events,
+            session: r.session,
             t_arrive: Instant::now(),
             t_first: None,
             sent: 0,
@@ -220,7 +322,8 @@ impl RtScheduler {
                         arrival_us: 0.0,
                         prompt: vec![0],
                         max_new_tokens: 1,
-                        profile: "placeholder",
+                        profile: "placeholder".into(),
+                        flow: None,
                     },
                     self.max_chunk,
                 ),
@@ -287,10 +390,40 @@ mod tests {
             priority,
             prompt: vec![1; plen],
             max_new_tokens: maxnew,
+            session: None,
             events: etx,
         })
         .unwrap();
         erx
+    }
+
+    fn submit_session(
+        tx: &Sender<RtRequest>,
+        id: u64,
+        session: &str,
+        prompt: Vec<i32>,
+        maxnew: usize,
+    ) -> Receiver<TokenEvent> {
+        let (etx, erx) = channel();
+        tx.send(RtRequest {
+            id,
+            priority: Priority::Reactive,
+            prompt,
+            max_new_tokens: maxnew,
+            session: Some(session.into()),
+            events: etx,
+        })
+        .unwrap();
+        erx
+    }
+
+    fn done_of(events: &[TokenEvent]) -> (Vec<i32>, usize) {
+        match events.last().unwrap() {
+            TokenEvent::Done { tokens, cached_prefix, .. } => {
+                (tokens.clone(), *cached_prefix)
+            }
+            e => panic!("expected Done, got {e:?}"),
+        }
     }
 
     #[test]
@@ -313,6 +446,66 @@ mod tests {
             }
             e => panic!("expected Done, got {e:?}"),
         }
+    }
+
+    #[test]
+    fn session_calls_reuse_the_conversation_prefix() {
+        // call 1 establishes the session; call 2 extends the exact
+        // conversation (prompt + generated tokens) with new user input
+        let tx = spawn(bridge(), 8);
+        let prompt1: Vec<i32> = vec![5; 40];
+        let erx1 = submit_session(&tx, 1, "chat-1", prompt1.clone(), 4);
+        let ev1: Vec<TokenEvent> = erx1.iter().collect();
+        let (toks1, cached1) = done_of(&ev1);
+        assert_eq!(cached1, 0, "first call has nothing to reuse");
+        assert_eq!(toks1.len(), 4);
+
+        let mut prompt2 = prompt1;
+        prompt2.extend(&toks1);
+        prompt2.extend(vec![6; 16]);
+        let erx2 = submit_session(&tx, 2, "chat-1", prompt2.clone(), 3);
+        let ev2: Vec<TokenEvent> = erx2.iter().collect();
+        let (toks2, cached2) = done_of(&ev2);
+        assert_eq!(toks2.len(), 3);
+        // KV covers prompt1 + 3 of the 4 generated tokens
+        assert_eq!(cached2, 43, "second call must reuse the session KV");
+
+        // an unrelated session starts cold
+        let erx3 = submit_session(&tx, 3, "chat-2", prompt2, 2);
+        drop(tx);
+        let (_, cached3) = done_of(&erx3.iter().collect::<Vec<_>>());
+        assert_eq!(cached3, 0);
+    }
+
+    #[test]
+    fn session_registry_is_bounded_and_ids_are_stable() {
+        let mut reg = SessionRegistry::default();
+        let mut pool = SessionCachePool::new(4);
+        let a = reg.resolve("a", &mut pool);
+        assert_eq!(reg.resolve("a", &mut pool), a, "same tag, same id");
+        let b = reg.resolve("b", &mut pool);
+        assert_ne!(a, b);
+        // overflow the registry: oldest tags are forgotten...
+        for i in 0..SESSION_TAGS_MAX {
+            reg.resolve(&format!("t{i}"), &mut pool);
+        }
+        assert!(reg.get("a").is_none(), "oldest tag evicted");
+        // ...and ids are monotonic, so a re-registered tag can never
+        // alias another session's retained cache
+        let a2 = reg.resolve("a", &mut pool);
+        assert!(a2 > b);
+    }
+
+    #[test]
+    fn diverged_session_prompt_recomputes() {
+        let tx = spawn(bridge(), 8);
+        let erx1 = submit_session(&tx, 1, "s", vec![5; 30], 3);
+        let _ = erx1.iter().collect::<Vec<_>>();
+        // same session, unrelated prompt → no usable prefix
+        let erx2 = submit_session(&tx, 2, "s", vec![9; 30], 3);
+        drop(tx);
+        let (_, cached) = done_of(&erx2.iter().collect::<Vec<_>>());
+        assert_eq!(cached, 0);
     }
 
     #[test]

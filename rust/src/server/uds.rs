@@ -148,8 +148,14 @@ fn submit_generate(
         .opt("max_new_tokens")
         .map(|v| v.as_usize())
         .unwrap_or(Ok(16))?;
+    // Optional session tag: calls sharing it keep their KV alive
+    // across the connection (flow-level reuse, DESIGN.md §3).
+    let session = msg
+        .opt("session")
+        .and_then(|s| s.as_str().ok())
+        .map(|s| s.to_string());
     let (etx, erx) = channel();
-    tx.send(RtRequest { id, priority, prompt, max_new_tokens, events: etx })
+    tx.send(RtRequest { id, priority, prompt, max_new_tokens, session, events: etx })
         .map_err(|_| anyhow::anyhow!("scheduler is down"))?;
     Ok(erx)
 }
@@ -164,17 +170,28 @@ fn event_json(ev: &TokenEvent) -> Json {
             .set("id", *id as usize)
             .set("token", *token)
             .set("n", *n),
-        TokenEvent::Done { id, ttft_ms, total_ms, tokens } => Json::obj()
+        TokenEvent::Done { id, ttft_ms, total_ms, tokens, cached_prefix } => Json::obj()
             .set("type", "done")
             .set("id", *id as usize)
             .set("ttft_ms", *ttft_ms)
             .set("total_ms", *total_ms)
-            .set("tokens", tokens.clone()),
+            .set("tokens", tokens.clone())
+            .set("cached_prefix", *cached_prefix),
         TokenEvent::Error { id, message } => Json::obj()
             .set("type", "error")
             .set("id", *id as usize)
             .set("message", message.as_str()),
     }
+}
+
+/// Result of one completed generate call.
+#[derive(Debug, Clone)]
+pub struct GenerateResult {
+    pub tokens: Vec<i32>,
+    pub ttft_ms: f64,
+    pub total_ms: f64,
+    /// Prompt tokens served from the session's retained KV.
+    pub cached_prefix: usize,
 }
 
 /// Blocking client helper: send one generate request, return
@@ -185,14 +202,31 @@ pub fn client_generate(
     priority: Priority,
     max_new_tokens: usize,
 ) -> Result<(Vec<i32>, f64, f64)> {
+    let r = client_generate_session(socket_path, None, prompt, priority, max_new_tokens)?;
+    Ok((r.tokens, r.ttft_ms, r.total_ms))
+}
+
+/// Like [`client_generate`], with an optional session tag: calls that
+/// share a tag keep the conversation KV alive server-side, so a prompt
+/// extending the previous call's conversation prefills only its delta.
+pub fn client_generate_session(
+    socket_path: impl AsRef<Path>,
+    session: Option<&str>,
+    prompt: &[i32],
+    priority: Priority,
+    max_new_tokens: usize,
+) -> Result<GenerateResult> {
     let stream = UnixStream::connect(socket_path.as_ref())
         .with_context(|| format!("connecting {:?}", socket_path.as_ref()))?;
     let mut out = stream.try_clone()?;
-    let req = Json::obj()
+    let mut req = Json::obj()
         .set("type", "generate")
         .set("priority", priority.label())
         .set("prompt", prompt.to_vec())
         .set("max_new_tokens", max_new_tokens);
+    if let Some(s) = session {
+        req = req.set("session", s);
+    }
     writeln!(out, "{req}")?;
     let reader = BufReader::new(stream);
     for line in reader.lines() {
@@ -200,11 +234,15 @@ pub fn client_generate(
         let msg = Json::parse(&line)?;
         match msg.get("type")?.as_str()? {
             "done" => {
-                return Ok((
-                    msg.get("tokens")?.as_i32_vec()?,
-                    msg.get("ttft_ms")?.as_f64()?,
-                    msg.get("total_ms")?.as_f64()?,
-                ));
+                return Ok(GenerateResult {
+                    tokens: msg.get("tokens")?.as_i32_vec()?,
+                    ttft_ms: msg.get("ttft_ms")?.as_f64()?,
+                    total_ms: msg.get("total_ms")?.as_f64()?,
+                    cached_prefix: msg
+                        .opt("cached_prefix")
+                        .map(|v| v.as_usize())
+                        .unwrap_or(Ok(0))?,
+                });
             }
             "error" => bail!("server error: {}", msg.get("message")?.as_str()?),
             _ => {}
@@ -271,6 +309,39 @@ mod tests {
             Json::parse(&line).unwrap().get("type").unwrap().as_str().unwrap(),
             "stats"
         );
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn uds_session_field_keeps_kv_across_calls() {
+        let path = start_server("session");
+        let prompt: Vec<i32> = vec![4; 32];
+        let first = client_generate_session(
+            &path,
+            Some("conv-1"),
+            &prompt,
+            Priority::Reactive,
+            4,
+        )
+        .unwrap();
+        assert_eq!(first.cached_prefix, 0);
+        // extend the conversation with the actual reply + new input
+        let mut next = prompt.clone();
+        next.extend(&first.tokens);
+        next.extend(vec![8; 12]);
+        let second = client_generate_session(
+            &path,
+            Some("conv-1"),
+            &next,
+            Priority::Reactive,
+            3,
+        )
+        .unwrap();
+        // KV covers the 32-token prompt + 3 of the 4 reply tokens
+        assert_eq!(second.cached_prefix, 35);
+        // untagged calls never reuse
+        let (toks, _, _) = client_generate(&path, &next, Priority::Reactive, 2).unwrap();
+        assert_eq!(toks.len(), 2);
         let _ = std::fs::remove_file(path);
     }
 

@@ -1,0 +1,153 @@
+//! Flow-level sessions (paper §1, §4): a *flow* is the unit of agentic
+//! work — an ordered sequence of LLM-call turns that share a session
+//! id, a growing conversation prefix, and one priority class.  Reactive
+//! flows are multi-turn chats (user think-time between turns);
+//! proactive flows are long-lived monitors that wake on events and
+//! digest them into the same running context.
+//!
+//! A flow turn `k+1` never exists independently of turn `k`: its prompt
+//! is the conversation so far plus a fresh *delta* (the new user
+//! message / the new event batch), and it arrives one think-time after
+//! turn `k` completes.  The DES driver enforces both properties — it
+//! holds later turns until their predecessor finishes, stitches the
+//! *actual* generated conversation into the successor prompt, and (for
+//! engines with session-cache reuse enabled) seeds the turn's serving
+//! state from the retained KV so only the delta is prefilled
+//! (DESIGN.md §3).
+
+use super::request::{Priority, ProfileTag, Request};
+
+/// Session identity shared by every turn of one flow.
+pub type FlowId = u64;
+
+/// Per-request flow membership, carried on [`Request::flow`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlowBinding {
+    pub flow_id: FlowId,
+    /// Position of this turn within the flow (0-based).
+    pub turn_idx: usize,
+    /// Turns the flow was generated with (the driver trusts the actual
+    /// chain it observes, so a truncated trace still drains cleanly).
+    pub total_turns: usize,
+    /// Think-time gap (µs) between the previous turn's completion and
+    /// this turn's arrival — user reading/typing for reactive chats,
+    /// event inter-arrival for proactive monitors (paper §8.1).
+    pub think_time_us: f64,
+    /// Offset into `prompt` where this turn's fresh tokens start; the
+    /// prefix `[..delta_start]` is the generator's *estimate* of the
+    /// conversation so far, which the driver replaces with the actual
+    /// one before admission.
+    pub delta_start: usize,
+}
+
+impl FlowBinding {
+    /// Turns after the first reuse the session's conversation prefix.
+    pub fn is_continuation(&self) -> bool {
+        self.turn_idx > 0
+    }
+}
+
+/// An ordered multi-turn agentic flow: the workload-level object the
+/// generators emit and the engines consume (flattened into per-turn
+/// [`Request`]s whose `flow` bindings carry the session linkage).
+#[derive(Debug, Clone)]
+pub struct Flow {
+    pub id: FlowId,
+    pub priority: Priority,
+    pub profile: ProfileTag,
+    /// Turns in order; every element carries a `FlowBinding` with this
+    /// flow's id and its own `turn_idx`.
+    pub turns: Vec<Request>,
+}
+
+impl Flow {
+    pub fn total_turns(&self) -> usize {
+        self.turns.len()
+    }
+
+    /// Arrival time of the opening turn (later turns are released by
+    /// the driver relative to their predecessor's completion).
+    pub fn first_arrival_us(&self) -> f64 {
+        self.turns.first().map(|t| t.arrival_us).unwrap_or(0.0)
+    }
+
+    /// Total delta tokens across all turns — the prefill work a
+    /// session-cache-aware engine performs (a full-recompute engine
+    /// prefills the whole growing prefix every turn instead).
+    pub fn delta_tokens(&self) -> usize {
+        self.turns
+            .iter()
+            .map(|t| {
+                let ds = t.flow.as_ref().map(|f| f.delta_start).unwrap_or(0);
+                t.prompt_len().saturating_sub(ds)
+            })
+            .sum()
+    }
+}
+
+/// Flatten flows into one arrival-ordered request trace (the form every
+/// `Engine::run` takes; `merge_traces` applies the final global sort).
+pub fn flatten_flows(flows: Vec<Flow>) -> Vec<Request> {
+    let mut all: Vec<Request> = flows.into_iter().flat_map(|f| f.turns).collect();
+    all.sort_by(|a, b| a.arrival_us.total_cmp(&b.arrival_us).then(a.id.cmp(&b.id)));
+    all
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn turn(flow_id: u64, idx: usize, total: usize, plen: usize, ds: usize) -> Request {
+        Request {
+            id: flow_id * 100 + idx as u64,
+            priority: Priority::Reactive,
+            arrival_us: idx as f64,
+            prompt: vec![1; plen],
+            max_new_tokens: 4,
+            profile: "test".into(),
+            flow: Some(FlowBinding {
+                flow_id,
+                turn_idx: idx,
+                total_turns: total,
+                think_time_us: 1e6,
+                delta_start: ds,
+            }),
+        }
+    }
+
+    #[test]
+    fn flow_accessors() {
+        let f = Flow {
+            id: 3,
+            priority: Priority::Reactive,
+            profile: "chat".into(),
+            turns: vec![turn(3, 0, 2, 10, 0), turn(3, 1, 2, 20, 14)],
+        };
+        assert_eq!(f.total_turns(), 2);
+        assert_eq!(f.first_arrival_us(), 0.0);
+        // 10 (whole first prompt) + 6 (20 - delta_start 14)
+        assert_eq!(f.delta_tokens(), 16);
+        assert!(!f.turns[0].flow.as_ref().unwrap().is_continuation());
+        assert!(f.turns[1].flow.as_ref().unwrap().is_continuation());
+    }
+
+    #[test]
+    fn flatten_orders_by_arrival() {
+        let a = Flow {
+            id: 1,
+            priority: Priority::Reactive,
+            profile: "chat".into(),
+            turns: vec![turn(1, 0, 1, 8, 0)],
+        };
+        let mut b = Flow {
+            id: 2,
+            priority: Priority::Reactive,
+            profile: "chat".into(),
+            turns: vec![turn(2, 0, 1, 8, 0)],
+        };
+        b.turns[0].arrival_us = -5.0;
+        let t = flatten_flows(vec![a, b]);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t[0].id, 200);
+    }
+}

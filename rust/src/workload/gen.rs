@@ -1,7 +1,9 @@
-//! Trace synthesis: arrival processes + length sampling → `Vec<Request>`.
+//! Trace synthesis: arrival processes + length sampling → `Vec<Request>`
+//! (single-shot streams) and `Vec<Flow>` (multi-turn session flows).
 
 use crate::util::rng::Rng;
 
+use super::flow::{Flow, FlowBinding, FlowId};
 use super::profiles::TraceProfile;
 use super::request::{Priority, ReqId, Request};
 
@@ -40,7 +42,8 @@ pub fn proactive_trace(spec: &WorkloadSpec, vocab: usize, first_id: ReqId) -> Ve
             arrival_us: t_s * 1e6,
             prompt: prompt_tokens(&mut r, pl, vocab),
             max_new_tokens: ol,
-            profile: spec.profile.name,
+            profile: spec.profile.name.into(),
+            flow: None,
         });
         id += 1;
     }
@@ -63,12 +66,120 @@ pub fn reactive_trace(spec: &WorkloadSpec, vocab: usize, first_id: ReqId) -> Vec
             arrival_us: t_s * 1e6,
             prompt: prompt_tokens(&mut r, pl, vocab),
             max_new_tokens: ol,
-            profile: spec.profile.name,
+            profile: spec.profile.name.into(),
+            flow: None,
         });
         id += 1;
         t_s += r.exponential(spec.rate_per_s);
     }
     out
+}
+
+/// Parameters of one generated *flow* stream (multi-turn sessions).
+#[derive(Debug, Clone)]
+pub struct FlowSpec {
+    pub profile: &'static TraceProfile,
+    /// Poisson rate of flow *starts* (flows/s).
+    pub flow_rate_per_s: f64,
+    /// Mean think-time between a turn's completion and the next turn's
+    /// arrival (s) — user reading/typing for chats, event inter-arrival
+    /// for monitors (paper §8.1).  Exponentially distributed per gap.
+    pub think_time_s: f64,
+    /// Turns per flow, sampled uniformly from this inclusive range
+    /// (flows truncate early if the conversation outgrows `max_seq`).
+    pub turns: (usize, usize),
+    pub duration_s: f64,
+    pub seed: u64,
+    /// Context budget (the model's max_seq).
+    pub max_seq: usize,
+}
+
+/// Generate multi-turn flows: reactive chat sessions
+/// (`Priority::Reactive`) or proactive monitor sessions
+/// (`Priority::Proactive`).  Turn 0 carries the opening prompt; every
+/// later turn's prompt is the conversation-so-far estimate (prior
+/// prompt + `max_new_tokens` placeholder reply tokens) plus a fresh
+/// delta, with `FlowBinding::delta_start` marking the boundary so the
+/// driver can stitch in the *actual* generated reply at release time.
+pub fn flow_trace(
+    spec: &FlowSpec,
+    priority: Priority,
+    vocab: usize,
+    first_id: ReqId,
+    first_flow: FlowId,
+) -> Vec<Flow> {
+    assert!(spec.turns.0 >= 1 && spec.turns.0 <= spec.turns.1, "bad turn range");
+    let mut r = Rng::new(spec.seed);
+    let mut flows = vec![];
+    let mut t_s = 0.0f64;
+    let mut id = first_id;
+    let mut flow_id = first_flow;
+    loop {
+        t_s += r.exponential(spec.flow_rate_per_s);
+        if t_s >= spec.duration_s {
+            break;
+        }
+        let want_turns = r.usize(spec.turns.0, spec.turns.1 + 1);
+        let (pl, ol) = spec.profile.sample_lengths(&mut r, spec.max_seq);
+        // conversation so far: turn-k prompt + its (placeholder) reply
+        let mut convo = prompt_tokens(&mut r, pl, vocab);
+        let mut turns = vec![Request {
+            id,
+            priority,
+            arrival_us: t_s * 1e6,
+            prompt: convo.clone(),
+            max_new_tokens: ol,
+            profile: spec.profile.name.into(),
+            flow: None, // bindings filled below once total_turns is known
+        }];
+        id += 1;
+        convo.extend(prompt_tokens(&mut r, ol, vocab));
+        let mut think_times = vec![0.0f64];
+        while turns.len() < want_turns {
+            let Some((dl, ol)) =
+                spec.profile.sample_turn_delta(&mut r, spec.max_seq, convo.len())
+            else {
+                break; // context budget exhausted: truncate the flow
+            };
+            let mut prompt = convo.clone();
+            prompt.extend(prompt_tokens(&mut r, dl, vocab));
+            turns.push(Request {
+                id,
+                priority,
+                // placeholder — the driver re-stamps on release
+                arrival_us: t_s * 1e6,
+                prompt: prompt.clone(),
+                max_new_tokens: ol,
+                profile: spec.profile.name.into(),
+                flow: None,
+            });
+            id += 1;
+            think_times.push(r.exponential(1.0 / spec.think_time_s) * 1e6);
+            convo = prompt;
+            convo.extend(prompt_tokens(&mut r, ol, vocab));
+        }
+        let total = turns.len();
+        // fill bindings (delta_start = previous turn's prompt+reply len)
+        let mut prior = 0usize;
+        for (k, t) in turns.iter_mut().enumerate() {
+            t.flow = Some(FlowBinding {
+                flow_id,
+                turn_idx: k,
+                total_turns: total,
+                think_time_us: think_times[k],
+                delta_start: if k == 0 { 0 } else { prior },
+            });
+            prior = t.prompt_len() + t.max_new_tokens;
+        }
+        flows.push(Flow {
+            id: flow_id,
+            priority,
+            profile: spec.profile.name.into(),
+            turns,
+        });
+        flow_id += 1;
+    }
+    flows
 }
 
 /// Merge streams into one arrival-ordered trace.
@@ -130,6 +241,63 @@ mod tests {
             assert!(q.prompt_len() + q.max_new_tokens <= 512);
             assert!(q.max_new_tokens >= 1);
         }
+    }
+
+    fn flow_spec(seed: u64) -> FlowSpec {
+        FlowSpec {
+            profile: profile("lmsys").unwrap(),
+            flow_rate_per_s: 0.05,
+            think_time_s: 8.0,
+            turns: (2, 4),
+            duration_s: 200.0,
+            seed,
+            max_seq: 512,
+        }
+    }
+
+    #[test]
+    fn flow_traces_have_coherent_turn_structure() {
+        let flows = flow_trace(&flow_spec(9), Priority::Reactive, 2048, 0, 100);
+        assert!(!flows.is_empty());
+        let mut next_id = 0u64;
+        for f in &flows {
+            assert!((1..=4).contains(&f.total_turns()));
+            for (k, t) in f.turns.iter().enumerate() {
+                let fb = t.flow.as_ref().unwrap();
+                assert_eq!((fb.flow_id, fb.turn_idx, fb.total_turns), (f.id, k, f.total_turns()));
+                assert_eq!(t.id, next_id);
+                next_id += 1;
+                assert!(t.prompt_len() + t.max_new_tokens <= 512);
+                assert!(t.priority == Priority::Reactive);
+                if k == 0 {
+                    assert_eq!(fb.delta_start, 0);
+                } else {
+                    let prev = &f.turns[k - 1];
+                    // delta starts right after the prior conversation
+                    // (prev prompt + its reply-token budget)
+                    assert_eq!(fb.delta_start, prev.prompt_len() + prev.max_new_tokens);
+                    assert!(fb.delta_start < t.prompt_len());
+                    // the new prompt literally extends the old one
+                    assert_eq!(&t.prompt[..prev.prompt_len()], &prev.prompt[..]);
+                    assert!(fb.think_time_us > 0.0);
+                }
+            }
+        }
+        // seeded: identical regeneration
+        let again = flow_trace(&flow_spec(9), Priority::Reactive, 2048, 0, 100);
+        assert_eq!(flows.len(), again.len());
+        assert!(flows.iter().zip(&again).all(|(a, b)| {
+            a.turns.len() == b.turns.len()
+                && a.turns.iter().zip(&b.turns).all(|(x, y)| x.prompt == y.prompt)
+        }));
+        let other = flow_trace(&flow_spec(10), Priority::Reactive, 2048, 0, 100);
+        assert!(
+            flows.len() != other.len()
+                || flows
+                    .iter()
+                    .zip(&other)
+                    .any(|(a, b)| a.first_arrival_us() != b.first_arrival_us())
+        );
     }
 
     #[test]

@@ -6,11 +6,22 @@
 //! statistics (DESIGN.md §1).  Arrival processes follow the paper:
 //! Poisson for proactive requests, exponential inter-arrival (user
 //! think-time) for reactive requests.  Everything is seeded.
+//!
+//! Two workload shapes are emitted:
+//! - single-shot streams (`proactive_trace`/`reactive_trace`) — one
+//!   isolated `Request` per agent call;
+//! - multi-turn **flows** (`flow_trace`) — ordered turn sequences
+//!   sharing a session id and a growing conversation prefix, the
+//!   paper's "long-lived, stateful LLM flows" (§1; DESIGN.md §3).
 
+mod flow;
 mod gen;
 mod profiles;
 mod request;
 
-pub use gen::{WorkloadSpec, merge_traces, proactive_trace, reactive_trace};
+pub use flow::{Flow, FlowBinding, FlowId, flatten_flows};
+pub use gen::{
+    FlowSpec, WorkloadSpec, flow_trace, merge_traces, proactive_trace, reactive_trace,
+};
 pub use profiles::{TraceProfile, profile, profiles};
-pub use request::{Priority, ReqId, Request};
+pub use request::{Priority, ProfileTag, ReqId, Request};

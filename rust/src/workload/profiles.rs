@@ -21,6 +21,11 @@ pub struct TraceProfile {
     /// Median output length and log-normal sigma.
     pub out_median: f64,
     pub out_sigma: f64,
+    /// Follow-up turns of a multi-turn flow carry a fresh *delta*
+    /// prompt this fraction of the opening prompt's median (chat
+    /// follow-ups are shorter than openers; monitor events are smaller
+    /// than the initial briefing).
+    pub follow_up_frac: f64,
 }
 
 impl TraceProfile {
@@ -38,6 +43,27 @@ impl TraceProfile {
         let o = Self::sample(r, self.out_median, self.out_sigma, 1, o_hi.max(1));
         (p, o)
     }
+
+    /// Sample the (delta_len, out_len) of a *follow-up* flow turn whose
+    /// conversation so far already occupies `ctx` tokens of a `max_seq`
+    /// context.  Returns `None` when the remaining budget cannot fit a
+    /// minimal turn (the flow is then truncated).
+    pub fn sample_turn_delta(
+        &self,
+        r: &mut Rng,
+        max_seq: usize,
+        ctx: usize,
+    ) -> Option<(usize, usize)> {
+        let left = max_seq.saturating_sub(ctx);
+        if left < 8 {
+            return None;
+        }
+        let d_hi = left - (left / 4).max(4);
+        let d_median = (self.prompt_median * self.follow_up_frac).max(4.0);
+        let d = Self::sample(r, d_median, self.prompt_sigma, 2, d_hi.max(2));
+        let o = Self::sample(r, self.out_median, self.out_sigma, 1, (left - d).max(1));
+        if d + o > left { None } else { Some((d, o)) }
+    }
 }
 
 /// The six dataset analogs (paper §8.1).  Medians are relative to the
@@ -52,6 +78,7 @@ pub const PROFILES: [TraceProfile; 6] = [
         prompt_sigma: 0.45,
         out_median: 48.0,
         out_sigma: 0.5,
+        follow_up_frac: 0.35,
     },
     // SAMSum group-chat summarization: short dialogues, short drafts.
     TraceProfile {
@@ -61,6 +88,7 @@ pub const PROFILES: [TraceProfile; 6] = [
         prompt_sigma: 0.5,
         out_median: 32.0,
         out_sigma: 0.4,
+        follow_up_frac: 0.4,
     },
     // CNN/DailyMail news summarization: long articles, medium summaries.
     TraceProfile {
@@ -70,6 +98,7 @@ pub const PROFILES: [TraceProfile; 6] = [
         prompt_sigma: 0.35,
         out_median: 56.0,
         out_sigma: 0.35,
+        follow_up_frac: 0.3,
     },
     // Reactive: LMSys chat — medium prompts, long answers.
     TraceProfile {
@@ -79,6 +108,7 @@ pub const PROFILES: [TraceProfile; 6] = [
         prompt_sigma: 0.7,
         out_median: 160.0,
         out_sigma: 0.6,
+        follow_up_frac: 0.45,
     },
     // MTRAG multi-turn RAG: long retrieved context, medium answers.
     TraceProfile {
@@ -88,6 +118,7 @@ pub const PROFILES: [TraceProfile; 6] = [
         prompt_sigma: 0.4,
         out_median: 96.0,
         out_sigma: 0.5,
+        follow_up_frac: 0.35,
     },
     // Berkeley Function-Calling: structured call outputs — short.
     TraceProfile {
@@ -97,6 +128,7 @@ pub const PROFILES: [TraceProfile; 6] = [
         prompt_sigma: 0.45,
         out_median: 24.0,
         out_sigma: 0.35,
+        follow_up_frac: 0.5,
     },
 ];
 
@@ -147,6 +179,22 @@ mod tests {
         lens.sort_unstable();
         let med = lens[lens.len() / 2] as f64;
         assert!((med - p.prompt_median).abs() / p.prompt_median < 0.25, "median {med}");
+    }
+
+    #[test]
+    fn follow_up_deltas_are_shorter_and_fit_remaining_budget() {
+        let mut r = Rng::new(5);
+        for p in profiles() {
+            assert!(p.follow_up_frac > 0.0 && p.follow_up_frac < 1.0, "{}", p.name);
+            for ctx in [32usize, 200, 400, 480, 504] {
+                if let Some((d, o)) = p.sample_turn_delta(&mut r, 512, ctx) {
+                    assert!(d >= 2 && o >= 1);
+                    assert!(ctx + d + o <= 512, "{}: ctx {ctx} + {d} + {o}", p.name);
+                }
+            }
+            // no budget left → turn refused
+            assert!(p.sample_turn_delta(&mut r, 512, 508).is_none());
+        }
     }
 
     #[test]

@@ -1,6 +1,13 @@
 //! The unit of work every engine schedules: one LLM call from an agent.
 
+use super::flow::FlowBinding;
+
 pub type ReqId = u64;
+
+/// Workload tag for per-profile reporting.  Owned and cheaply clonable
+/// (`Arc<str>`) so the serving frontend can tag dynamically created
+/// flows/sessions without a static profile table.
+pub type ProfileTag = std::sync::Arc<str>;
 
 /// The paper's workload dichotomy (§1): reactive requests are
 /// user-initiated and latency-critical; proactive requests are
@@ -32,17 +39,32 @@ impl Priority {
 pub struct Request {
     pub id: ReqId,
     pub priority: Priority,
-    /// Virtual arrival time (µs).
+    /// Virtual arrival time (µs).  For flow turns after the first this
+    /// is a placeholder: the driver re-stamps it to `predecessor
+    /// completion + think_time` when the turn is released.
     pub arrival_us: f64,
     pub prompt: Vec<i32>,
     pub max_new_tokens: usize,
     /// Which trace profile generated it (for per-workload reporting).
-    pub profile: &'static str,
+    pub profile: ProfileTag,
+    /// Flow membership: `None` for single-shot requests, `Some` for a
+    /// turn of a multi-turn session (see [`crate::workload::Flow`]).
+    pub flow: Option<FlowBinding>,
 }
 
 impl Request {
     pub fn prompt_len(&self) -> usize {
         self.prompt.len()
+    }
+
+    /// Flow this request belongs to, if any.
+    pub fn flow_id(&self) -> Option<super::flow::FlowId> {
+        self.flow.as_ref().map(|f| f.flow_id)
+    }
+
+    /// Turn index within its flow (0 for single-shot requests).
+    pub fn turn_idx(&self) -> usize {
+        self.flow.as_ref().map(|f| f.turn_idx).unwrap_or(0)
     }
 }
 
@@ -55,5 +77,21 @@ mod tests {
         assert!(Priority::Reactive.is_reactive());
         assert!(!Priority::Proactive.is_reactive());
         assert_eq!(Priority::Proactive.label(), "proactive");
+    }
+
+    #[test]
+    fn single_shot_requests_have_no_flow() {
+        let r = Request {
+            id: 1,
+            priority: Priority::Reactive,
+            arrival_us: 0.0,
+            prompt: vec![1, 2, 3],
+            max_new_tokens: 4,
+            profile: "test".into(),
+            flow: None,
+        };
+        assert_eq!(r.flow_id(), None);
+        assert_eq!(r.turn_idx(), 0);
+        assert_eq!(r.prompt_len(), 3);
     }
 }

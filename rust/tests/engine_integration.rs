@@ -29,7 +29,8 @@ fn mk_trace(vocab: usize) -> Vec<Request> {
             arrival_us: 0.0,
             prompt: prompt(1, 40),
             max_new_tokens: 6,
-            profile: "it",
+            profile: "it".into(),
+            flow: None,
         },
         Request {
             id: 2,
@@ -37,7 +38,8 @@ fn mk_trace(vocab: usize) -> Vec<Request> {
             arrival_us: 10.0,
             prompt: prompt(2, 21),
             max_new_tokens: 5,
-            profile: "it",
+            profile: "it".into(),
+            flow: None,
         },
         Request {
             id: 3,
@@ -45,7 +47,8 @@ fn mk_trace(vocab: usize) -> Vec<Request> {
             arrival_us: 20.0,
             prompt: prompt(3, 17),
             max_new_tokens: 7,
-            profile: "it",
+            profile: "it".into(),
+            flow: None,
         },
     ]
 }
@@ -96,6 +99,7 @@ fn scheduled_execution_matches_sequential_generation() {
                 priority: r.priority,
                 prompt: r.prompt.clone(),
                 max_new_tokens: r.max_new_tokens,
+                session: None,
                 events: etx,
             })
             .unwrap();

@@ -45,7 +45,8 @@ fn random_trace(seed: u64) -> Vec<Request> {
                 arrival_us: t,
                 prompt: vec![1; plen],
                 max_new_tokens: r.usize(1, 24),
-                profile: "prop",
+                profile: "prop".into(),
+                flow: None,
             }
         })
         .collect()
@@ -232,7 +233,8 @@ fn extreme_loads_still_complete() {
             arrival_us: 0.0,
             prompt: vec![1; 64 + (i as usize * 37) % 900],
             max_new_tokens: 1 + (i as usize % 20),
-            profile: "burst",
+            profile: "burst".into(),
+            flow: None,
         })
         .collect();
     let mut e = AgentXpuEngine::synthetic(g.clone(), default_soc(), SchedulerConfig::default());
@@ -247,7 +249,8 @@ fn extreme_loads_still_complete() {
             arrival_us: i as f64,
             prompt: vec![1; g.max_seq],
             max_new_tokens: 1,
-            profile: "long",
+            profile: "long".into(),
+            flow: None,
         })
         .collect();
     let mut e = AgentXpuEngine::synthetic(g, default_soc(), SchedulerConfig::default());
@@ -266,7 +269,8 @@ fn starvation_prevention_bounds_proactive_wait() {
         arrival_us: 0.0,
         prompt: vec![1; 1024],
         max_new_tokens: 4,
-        profile: "victim",
+        profile: "victim".into(),
+        flow: None,
     }];
     for i in 0..30u64 {
         trace.push(Request {
@@ -275,7 +279,8 @@ fn starvation_prevention_bounds_proactive_wait() {
             arrival_us: 10_000.0 + i as f64 * 400_000.0,
             prompt: vec![1; 256],
             max_new_tokens: 6,
-            profile: "stream",
+            profile: "stream".into(),
+            flow: None,
         });
     }
     let mut e = AgentXpuEngine::synthetic(g, default_soc(), SchedulerConfig::default());
