@@ -6,8 +6,8 @@
 use std::collections::HashMap;
 
 use agent_xpu::config::{SchedulerConfig, default_soc, llama32_3b};
-use agent_xpu::coordinator::{decode_lanes, dispatch_check, resume_order};
-use agent_xpu::engine::{ExecBridge, Phase};
+use agent_xpu::coordinator::{AgentXpuEngine, decode_lanes, dispatch_check, resume_order};
+use agent_xpu::engine::{Engine, EngineClock, ExecBridge, Phase};
 use agent_xpu::heg::{Annotator, ChunkSpec, plan_chunks};
 use agent_xpu::model::gemv_cost;
 use agent_xpu::soc::{LaunchSpec, SocSim, XpuModel};
@@ -86,6 +86,39 @@ fn main() {
     let msg = r#"{"type":"generate","priority":"reactive","prompt":[1,2,3,4,5,6,7,8],"max_new_tokens":16}"#;
     let s = bench("UDS request JSON parse", 1000, 100_000, || {
         black_box(Json::parse(msg).unwrap());
+    });
+    println!("{}", s.report());
+
+    // EngineCore::step() — one full decision point of the streaming
+    // API (admissions + scheduling pass + event advance) on a live
+    // 32-request mix.  This is the serving loop's inner cost and must
+    // stay inside the §8 dispatch budget (< 5 µs).
+    let mk_trace = || -> Vec<agent_xpu::workload::Request> {
+        (0..32u64)
+            .map(|i| Request {
+                id: i,
+                priority: if i % 4 == 0 { Priority::Reactive } else { Priority::Proactive },
+                arrival_us: i as f64 * 50.0,
+                prompt: vec![1; 64 + (i as usize * 37) % 400],
+                max_new_tokens: 4 + (i as usize % 8),
+                profile: "bench".into(),
+                flow: None,
+            })
+            .collect()
+    };
+    let mut eng = AgentXpuEngine::synthetic(geo.clone(), soc.clone(), cfg.clone());
+    eng.start(EngineClock::Virtual).unwrap();
+    for r in mk_trace() {
+        eng.submit(r).unwrap();
+    }
+    let s = bench("EngineCore::step (agent.xpu, 32-req mix)", 500, 50_000, || {
+        if !eng.has_work() {
+            eng.start(EngineClock::Virtual).unwrap();
+            for r in mk_trace() {
+                eng.submit(r).unwrap();
+            }
+        }
+        black_box(eng.step().unwrap());
     });
     println!("{}", s.report());
 }

@@ -9,10 +9,12 @@
 //! round-robin at kernel granularity, FCFS admission, decode strictly
 //! b=1 per request.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::config::{ModelGeometry, SocConfig};
-use crate::engine::{Driver, Engine, ExecBridge, KernelTag, Phase};
+use crate::engine::{
+    Driver, EngineClock, EngineCore, EngineEvent, ExecBridge, KernelTag, Phase,
+};
 use crate::heg::Annotator;
 use crate::metrics::RunReport;
 use crate::soc::XpuModel;
@@ -28,6 +30,10 @@ pub struct CpuFcfsEngine {
     pub concurrency: usize,
     /// Round-robin cursor.
     cursor: usize,
+    /// The open run, if `start` has been called (EngineCore lifecycle).
+    active: Option<Driver>,
+    /// The last `step` made no progress (run idle).
+    stalled: bool,
 }
 
 impl CpuFcfsEngine {
@@ -35,7 +41,7 @@ impl CpuFcfsEngine {
         let xpus: Vec<XpuModel> = soc.xpus.iter().cloned().map(XpuModel::new).collect();
         let ann = Annotator::new(geo.clone(), xpus);
         let cpu = ann.xpu_index("cpu").expect("soc needs a cpu");
-        Self { soc, ann, geo, cpu, concurrency, cursor: 0 }
+        Self { soc, ann, geo, cpu, concurrency, cursor: 0, active: None, stalled: false }
     }
 
     fn schedule(&mut self, d: &mut Driver) {
@@ -90,22 +96,67 @@ impl CpuFcfsEngine {
     }
 }
 
-impl Engine for CpuFcfsEngine {
+impl EngineCore for CpuFcfsEngine {
     fn name(&self) -> String {
         format!("llama.cpp-like(c={})", self.concurrency)
     }
 
-    fn run(&mut self, trace: Vec<Request>) -> Result<RunReport> {
+    fn start(&mut self, clock: EngineClock) -> Result<()> {
         self.cursor = 0;
-        let max_chunk = self.geo.max_chunk();
-        let mut d = Driver::new(&self.soc, ExecBridge::synthetic(self.geo.clone()), trace);
-        loop {
-            d.admit_ready(max_chunk);
-            self.schedule(&mut d);
-            if !d.step()? {
-                break;
-            }
+        self.active = Some(Driver::open(
+            &self.soc,
+            ExecBridge::synthetic(self.geo.clone()),
+            clock,
+        ));
+        self.stalled = false;
+        Ok(())
+    }
+
+    fn submit(&mut self, req: Request) -> Result<()> {
+        self.active
+            .as_mut()
+            .context("llama.cpp-like: submit before start")?
+            .submit(req);
+        self.stalled = false;
+        Ok(())
+    }
+
+    fn cancel(&mut self, id: ReqId) -> Result<bool> {
+        let hit = self
+            .active
+            .as_mut()
+            .context("llama.cpp-like: cancel before start")?
+            .cancel_request(id);
+        if hit {
+            // wake a stalled run so the Cancelled event flushes
+            self.stalled = false;
         }
+        Ok(hit)
+    }
+
+    fn step(&mut self) -> Result<Vec<EngineEvent>> {
+        let mut d = self
+            .active
+            .take()
+            .context("llama.cpp-like: step before start")?;
+        d.admit_ready(self.geo.max_chunk());
+        self.schedule(&mut d);
+        let progressed = d.step()?;
+        self.stalled = !progressed;
+        let events = d.take_events();
+        self.active = Some(d);
+        Ok(events)
+    }
+
+    fn has_work(&self) -> bool {
+        self.active.is_some() && !self.stalled
+    }
+
+    fn finish(&mut self) -> Result<RunReport> {
+        let d = self
+            .active
+            .take()
+            .context("llama.cpp-like: finish before start")?;
         d.finish(self.name())
     }
 }

@@ -15,10 +15,12 @@
 //!   between prefills; a reactive request waits for the proactive
 //!   prefill ahead of it.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::config::{ModelGeometry, SocConfig};
-use crate::engine::{Driver, Engine, ExecBridge, KernelTag, Phase};
+use crate::engine::{
+    Driver, EngineClock, EngineCore, EngineEvent, ExecBridge, KernelTag, Phase,
+};
 use crate::heg::Annotator;
 use crate::metrics::RunReport;
 use crate::soc::XpuModel;
@@ -51,6 +53,10 @@ pub struct SingleXpuEngine {
     cursor: usize,
     /// Kernel trace of the last `run` (Fig. 4 Gantt).
     pub last_trace: Option<crate::trace::Trace>,
+    /// The open run, if `start` has been called (EngineCore lifecycle).
+    active: Option<Driver>,
+    /// The last `step` made no progress (run idle).
+    stalled: bool,
 }
 
 impl SingleXpuEngine {
@@ -58,7 +64,10 @@ impl SingleXpuEngine {
         let xpus: Vec<XpuModel> = soc.xpus.iter().cloned().map(XpuModel::new).collect();
         let ann = Annotator::new(geo.clone(), xpus);
         let xpu = ann.xpu_index("igpu").expect("soc needs an igpu");
-        Self { soc, ann, geo, scheme, xpu, b_max: 8, cursor: 0, last_trace: None }
+        Self {
+            soc, ann, geo, scheme, xpu, b_max: 8, cursor: 0, last_trace: None,
+            active: None, stalled: false,
+        }
     }
 
     fn launch_prefill(&self, d: &mut Driver, id: ReqId, reactive: bool) {
@@ -99,7 +108,7 @@ impl SingleXpuEngine {
                 .all(|s| !s.is_reactive());
             if victim_is_proactive {
                 if let Some(tag) = d.cancel(self.xpu) {
-                    d.preemptions += 1;
+                    d.note_preemption(tag.reqs()[0]);
                     for vid in tag.reqs() {
                         let st = d.states.get_mut(&vid).unwrap();
                         // "without saving the prefill context": all
@@ -230,22 +239,61 @@ impl SingleXpuEngine {
     }
 }
 
-impl Engine for SingleXpuEngine {
+impl EngineCore for SingleXpuEngine {
     fn name(&self) -> String {
         self.scheme.label().to_string()
     }
 
-    fn run(&mut self, trace: Vec<Request>) -> Result<RunReport> {
+    fn start(&mut self, clock: EngineClock) -> Result<()> {
         self.cursor = 0;
-        let max_chunk = self.geo.max_chunk();
-        let mut d = Driver::new(&self.soc, ExecBridge::synthetic(self.geo.clone()), trace);
-        loop {
-            d.admit_ready(max_chunk);
-            self.schedule(&mut d);
-            if !d.step()? {
-                break;
-            }
+        self.active = Some(Driver::open(
+            &self.soc,
+            ExecBridge::synthetic(self.geo.clone()),
+            clock,
+        ));
+        self.stalled = false;
+        Ok(())
+    }
+
+    fn submit(&mut self, req: Request) -> Result<()> {
+        self.active
+            .as_mut()
+            .context("single-xpu: submit before start")?
+            .submit(req);
+        self.stalled = false;
+        Ok(())
+    }
+
+    fn cancel(&mut self, id: ReqId) -> Result<bool> {
+        let hit = self
+            .active
+            .as_mut()
+            .context("single-xpu: cancel before start")?
+            .cancel_request(id);
+        if hit {
+            // wake a stalled run so the Cancelled event flushes
+            self.stalled = false;
         }
+        Ok(hit)
+    }
+
+    fn step(&mut self) -> Result<Vec<EngineEvent>> {
+        let mut d = self.active.take().context("single-xpu: step before start")?;
+        d.admit_ready(self.geo.max_chunk());
+        self.schedule(&mut d);
+        let progressed = d.step()?;
+        self.stalled = !progressed;
+        let events = d.take_events();
+        self.active = Some(d);
+        Ok(events)
+    }
+
+    fn has_work(&self) -> bool {
+        self.active.is_some() && !self.stalled
+    }
+
+    fn finish(&mut self) -> Result<RunReport> {
+        let d = self.active.take().context("single-xpu: finish before start")?;
         self.last_trace = Some(d.trace.clone());
         d.finish(self.name())
     }

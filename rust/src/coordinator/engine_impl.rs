@@ -4,10 +4,12 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::config::{ModelGeometry, SchedulerConfig, SocConfig};
-use crate::engine::{Driver, Engine, ExecBridge, KernelTag, Phase};
+use crate::engine::{
+    Driver, EngineClock, EngineCore, EngineEvent, ExecBridge, KernelTag, Phase,
+};
 use crate::heg::{Annotator, max_chunk_within_budget};
 use crate::metrics::RunReport;
 use crate::runtime::ModelExecutor;
@@ -35,6 +37,10 @@ pub struct AgentXpuEngine {
     pub last_trace: Option<crate::trace::Trace>,
     /// DRAM-budget admission control (§6.5 memory management).
     governor: MemoryGovernor,
+    /// The open run, if `start` has been called (EngineCore lifecycle).
+    active: Option<Driver>,
+    /// The last `step` made no progress (run idle).
+    stalled: bool,
 }
 
 impl AgentXpuEngine {
@@ -68,6 +74,7 @@ impl AgentXpuEngine {
         Self {
             soc, sched, ann, exec, geo, max_chunk, npu, igpu,
             npu_owner: None, last_trace: None, governor,
+            active: None, stalled: false,
         }
     }
 
@@ -101,11 +108,8 @@ impl AgentXpuEngine {
         }
         // First valve for reactive arrivals: drop idle sessions,
         // least-recently-used first (cheapest residency to rebuild).
-        while let Some(pool) = d.sessions.as_mut() {
-            if pool.evict_lru().is_none() {
-                break;
-            }
-            d.session_evictions += 1;
+        while let Some(fid) = d.sessions.as_mut().and_then(|p| p.evict_lru()) {
+            d.note_session_eviction(fid);
             if self
                 .governor
                 .can_start_with_sessions(&d.states, d.retained_sessions())
@@ -119,7 +123,7 @@ impl AgentXpuEngine {
             let vs = d.states.get_mut(&victim).unwrap();
             vs.restart_prefill(&geo);
             vs.enqueued_at_us = now;
-            d.kv_evictions += 1; // surfaces in RunReport::kv_evictions
+            d.note_kv_eviction(victim); // surfaces in RunReport::kv_evictions
             return true;
         }
         true // nothing evictable: admit anyway (paper's moderate-density assumption)
@@ -161,7 +165,7 @@ impl AgentXpuEngine {
             vs.preempted += 1;
             vs.preempt_counted = true;
             vs.enqueued_at_us = now;
-            d.preemptions += 1;
+            d.note_preemption(v);
         }
     }
 
@@ -452,14 +456,14 @@ impl AgentXpuEngine {
     }
 }
 
-impl Engine for AgentXpuEngine {
+impl EngineCore for AgentXpuEngine {
     fn name(&self) -> String {
         "agent.xpu".into()
     }
 
-    fn run(&mut self, trace: Vec<Request>) -> Result<RunReport> {
+    fn start(&mut self, clock: EngineClock) -> Result<()> {
         self.npu_owner = None;
-        let mut d = Driver::new(&self.soc, self.bridge(), trace);
+        let mut d = Driver::open(&self.soc, self.bridge(), clock);
         // Flow-level session retention (DESIGN.md §3): continuation
         // turns prefill only their delta tokens.  Baselines run the
         // same flow traces without this — full-prefix recompute —
@@ -467,13 +471,50 @@ impl Engine for AgentXpuEngine {
         if self.sched.session_capacity > 0 {
             d.enable_session_reuse(self.sched.session_capacity);
         }
-        loop {
-            d.admit_ready(self.max_chunk);
-            self.schedule(&mut d);
-            if !d.step()? {
-                break;
-            }
+        self.active = Some(d);
+        self.stalled = false;
+        Ok(())
+    }
+
+    fn submit(&mut self, req: Request) -> Result<()> {
+        self.active
+            .as_mut()
+            .context("agent.xpu: submit before start")?
+            .submit(req);
+        self.stalled = false;
+        Ok(())
+    }
+
+    fn cancel(&mut self, id: ReqId) -> Result<bool> {
+        let hit = self
+            .active
+            .as_mut()
+            .context("agent.xpu: cancel before start")?
+            .cancel_request(id);
+        if hit {
+            // wake a stalled run so the Cancelled event flushes
+            self.stalled = false;
         }
+        Ok(hit)
+    }
+
+    fn step(&mut self) -> Result<Vec<EngineEvent>> {
+        let mut d = self.active.take().context("agent.xpu: step before start")?;
+        d.admit_ready(self.max_chunk);
+        self.schedule(&mut d);
+        let progressed = d.step()?;
+        self.stalled = !progressed;
+        let events = d.take_events();
+        self.active = Some(d);
+        Ok(events)
+    }
+
+    fn has_work(&self) -> bool {
+        self.active.is_some() && !self.stalled
+    }
+
+    fn finish(&mut self) -> Result<RunReport> {
+        let d = self.active.take().context("agent.xpu: finish before start")?;
         self.last_trace = Some(d.trace.clone());
         d.finish(self.name())
     }

@@ -44,6 +44,13 @@ impl ExecBridge {
         self.exec.is_some()
     }
 
+    /// The underlying PJRT executor, when this is a real-compute bridge
+    /// (lets the serving layer rebuild an engine around the same
+    /// loaded artifacts).
+    pub fn executor(&self) -> Option<Arc<ModelExecutor>> {
+        self.exec.clone()
+    }
+
     /// Build the initial serving context for an admitted request.
     pub fn init_state(&self, req: Request, max_chunk: usize) -> ReqState {
         self.init_state_with_session(req, max_chunk, None)

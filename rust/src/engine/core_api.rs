@@ -1,0 +1,171 @@
+//! The incremental engine API (DESIGN.md §7): one clock-abstracted
+//! `submit`/`step`/`cancel`/`drain` surface shared by the DES figure
+//! harnesses and the real-time server.
+//!
+//! An engine is a *streaming* object: requests are submitted one at a
+//! time, `step()` advances the engine to its next decision point and
+//! returns what happened as [`EngineEvent`]s, and in-flight work can be
+//! cancelled.  The run-to-completion `run(trace)` every figure harness
+//! and baseline comparison uses is just a default-method loop over this
+//! surface, so there is exactly one copy of every scheduling policy —
+//! the same `AgentXpuEngine` serves a UDS socket against wall-clock
+//! time and regenerates the paper's figures against virtual time.
+//!
+//! The clock split:
+//!
+//! - [`EngineClock::Virtual`] — discrete-event time from the SoC
+//!   simulator; arrivals are honored at their trace `arrival_us`, and
+//!   all lifecycle timestamps are virtual µs.  Simulation mode.
+//! - [`EngineClock::Wall`] — wall-clock µs since `start()`; submissions
+//!   are stamped on arrival and admitted immediately, kernel *ordering*
+//!   still comes from the virtual SoC (so preemption, backfill, and
+//!   batching decisions match the DES exactly), but lifecycle
+//!   timestamps (TTFT, completion) are measured wall time.  Serving
+//!   mode.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::metrics::RunReport;
+use crate::workload::{FlowId, ReqId, Request};
+
+/// The time base an engine run executes against.
+#[derive(Debug, Clone, Copy)]
+pub enum EngineClock {
+    /// Discrete-event virtual time (simulation / figures).
+    Virtual,
+    /// Wall-clock time measured from `t0` (real-time serving).
+    Wall { t0: Instant },
+}
+
+impl EngineClock {
+    /// A wall clock whose epoch is now.
+    pub fn wall() -> Self {
+        EngineClock::Wall { t0: Instant::now() }
+    }
+
+    pub fn is_wall(&self) -> bool {
+        matches!(self, EngineClock::Wall { .. })
+    }
+}
+
+/// What happened during one `step()` — the streaming face of the run.
+/// Timestamps are in the run's clock domain (virtual or wall µs).
+#[derive(Debug, Clone, PartialEq)]
+pub enum EngineEvent {
+    /// The request entered the engine's working set (serving state
+    /// allocated, session cache claimed if one matched).
+    Admitted { id: ReqId, at_us: f64 },
+    /// One generated token (the first marks the TTFT point).
+    TokenEmitted { id: ReqId, token: i32, n: usize, at_us: f64 },
+    /// The request completed with its full token budget.
+    TurnDone {
+        id: ReqId,
+        at_us: f64,
+        arrival_us: f64,
+        first_token_us: f64,
+        tokens: Vec<i32>,
+        /// Prompt tokens served from a retained session cache.
+        cached_prefix: usize,
+    },
+    /// A proactive task waiting at its kernel-boundary checkpoint was
+    /// displaced by a reactive launch (§6.2).
+    Preempted { id: ReqId, at_us: f64 },
+    /// The memory governor wiped this in-flight prefill's KV (§6.5);
+    /// the request recomputes from scratch.
+    KvEvicted { id: ReqId, at_us: f64 },
+    /// An idle retained session's KV was dropped (LRU shedding).
+    SessionEvicted { flow_id: FlowId, at_us: f64 },
+    /// The request was cancelled; its state and KV are freed.
+    Cancelled { id: ReqId, at_us: f64 },
+}
+
+impl EngineEvent {
+    /// The request this event concerns (None for session-level events).
+    pub fn req_id(&self) -> Option<ReqId> {
+        match self {
+            EngineEvent::Admitted { id, .. }
+            | EngineEvent::TokenEmitted { id, .. }
+            | EngineEvent::TurnDone { id, .. }
+            | EngineEvent::Preempted { id, .. }
+            | EngineEvent::KvEvicted { id, .. }
+            | EngineEvent::Cancelled { id, .. } => Some(*id),
+            EngineEvent::SessionEvicted { .. } => None,
+        }
+    }
+
+    /// True for events that end a request's lifecycle.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, EngineEvent::TurnDone { .. } | EngineEvent::Cancelled { .. })
+    }
+}
+
+/// The streaming engine core: every engine (Agent.xpu and the
+/// baselines) is a scheduling policy behind this one surface.
+///
+/// Lifecycle: `start(clock)` opens a run, `submit` feeds it requests
+/// (any time, including mid-run under a wall clock), `step` advances to
+/// the next decision point, `cancel` aborts an in-flight request, and
+/// `finish` closes the run into a [`RunReport`].  `has_work()` is false
+/// when the engine is idle *right now* — under a wall clock new
+/// submissions wake it again.
+///
+/// `run(trace)` — the legacy batch entry point — is a provided method:
+/// submit everything, step until idle, report.  Nothing reimplements
+/// the loop, so the DES harnesses, property tests, and the real-time
+/// server all exercise the same policy code.
+pub trait EngineCore {
+    fn name(&self) -> String;
+
+    /// Open a fresh run against the given clock, discarding any
+    /// previous run's state.
+    fn start(&mut self, clock: EngineClock) -> Result<()>;
+
+    /// Feed one request into the run.  Under [`EngineClock::Virtual`]
+    /// the request's `arrival_us` is honored; under a wall clock it is
+    /// re-stamped to the submission instant.
+    fn submit(&mut self, req: Request) -> Result<()>;
+
+    /// Abort a request wherever it is (queued, held flow turn,
+    /// prefilling, or decoding), freeing its KV.  Later turns of the
+    /// same flow that can no longer be stitched are cancelled with it.
+    /// Returns false if the id is unknown or already finished.
+    fn cancel(&mut self, id: ReqId) -> Result<bool>;
+
+    /// Advance to the next decision point (admissions, one scheduling
+    /// pass, the next kernel completion or arrival) and report what
+    /// happened.  An empty result with `has_work() == false` means the
+    /// engine is idle.
+    fn step(&mut self) -> Result<Vec<EngineEvent>>;
+
+    /// True while the run can still make progress without new input.
+    fn has_work(&self) -> bool;
+
+    /// Close the run and produce its report.  Fails if admitted work
+    /// never completed (a policy bug, surfaced loudly).
+    fn finish(&mut self) -> Result<RunReport>;
+
+    /// Step until idle, collecting every event.
+    fn drain(&mut self) -> Result<Vec<EngineEvent>> {
+        let mut out = vec![];
+        while self.has_work() {
+            out.extend(self.step()?);
+        }
+        Ok(out)
+    }
+
+    /// Legacy batch entry point: run a whole trace to completion on the
+    /// virtual clock.  This is the thin generic loop every figure
+    /// harness and property test goes through.
+    fn run(&mut self, trace: Vec<Request>) -> Result<RunReport> {
+        self.start(EngineClock::Virtual)?;
+        for r in trace {
+            self.submit(r)?;
+        }
+        while self.has_work() {
+            let _ = self.step()?;
+        }
+        self.finish()
+    }
+}

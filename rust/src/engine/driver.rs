@@ -1,9 +1,19 @@
 //! The shared DES event loop: every engine (Agent.xpu and the
 //! baselines) is a scheduling policy plugged into this driver.
 //!
-//! Responsibilities: arrival admission, kernel-completion effects (via
-//! [`ExecBridge`]), lifecycle metrics (TTFT at prefill completion,
-//! completion time at token budget), and the final [`RunReport`].
+//! Responsibilities: incremental request submission, arrival admission,
+//! kernel-completion effects (via [`ExecBridge`]), cancellation,
+//! lifecycle metrics (TTFT at prefill completion, completion time at
+//! token budget), the [`EngineEvent`] stream, and the final
+//! [`RunReport`].
+//!
+//! Clock abstraction (DESIGN.md §7): the driver runs against an
+//! [`EngineClock`].  Under `Virtual` it is the classic DES — arrivals
+//! honored at their trace times, timestamps in virtual µs.  Under
+//! `Wall` submissions are stamped on arrival and admitted immediately,
+//! kernel *ordering* still comes from the virtual SoC (so the serving
+//! path makes exactly the coordinator's decisions), and lifecycle
+//! timestamps are measured wall µs.
 //!
 //! Flow-level sessions (DESIGN.md §3): the driver owns the workload
 //! semantics of multi-turn flows — a turn after the first is *held*
@@ -12,19 +22,23 @@
 //! engine gets this for free (so baselines see identical flow traffic);
 //! engines that additionally call [`Driver::enable_session_reuse`] get
 //! cross-turn KV retention — turn *k+1* then prefills only its delta
-//! tokens instead of recomputing the whole conversation prefix.
+//! tokens instead of recomputing the whole conversation prefix.  A
+//! flow's opening turn must carry `turn_idx == 0`; under a wall clock a
+//! continuation turn submitted after its predecessor completed is
+//! admitted directly (the online-session path the server uses).
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 
 use anyhow::{Context, Result, bail};
 
 use crate::config::SocConfig;
-use crate::metrics::RunReport;
+use crate::metrics::{ReqMetrics, RunReport};
 use crate::runtime::SessionCachePool;
 use crate::soc::{Completion, KernelTiming, LaunchSpec, RunId, SocSim};
 use crate::workload::{FlowId, ReqId, Request};
 
 use super::bridge::ExecBridge;
+use super::core_api::{EngineClock, EngineEvent};
 use super::reqstate::{Phase, ReqState};
 use crate::trace::Trace;
 
@@ -46,31 +60,46 @@ impl KernelTag {
     }
 }
 
-/// An engine = a scheduling policy over the shared driver.
-pub trait Engine {
-    fn name(&self) -> String;
-    fn run(&mut self, trace: Vec<Request>) -> Result<RunReport>;
-}
+/// Wall-clock runs bound their history so a long-lived server never
+/// grows without limit: `retired` keeps the most recent window of
+/// request metrics (older ones have already been streamed as events),
+/// and `flow_done` keeps watermarks for the most recent flows (ids are
+/// monotonic on the serving path, so the smallest keys are oldest).
+const WALL_RETIRED_MAX: usize = 8_192;
+const FLOW_DONE_MAX: usize = 65_536;
 
 /// Shared DES driver state.
 pub struct Driver {
     pub sim: SocSim,
     pub bridge: ExecBridge,
+    clock: EngineClock,
     pub states: HashMap<ReqId, ReqState>,
     pending: VecDeque<Request>,
     /// Later turns of multi-turn flows, waiting on their predecessor
     /// (front = next turn to release per flow).
     chains: HashMap<FlowId, VecDeque<Request>>,
+    /// Completed turns per flow (the next turn index that may admit
+    /// directly) — lets a wall-clock continuation submitted *after* its
+    /// predecessor finished skip the hold queue.  Ordered so the oldest
+    /// flows can be shed once `FLOW_DONE_MAX` is exceeded.
+    flow_done: BTreeMap<FlowId, usize>,
     /// Cross-turn KV retention — `None` (full recompute every turn)
     /// unless the engine opted in via [`Driver::enable_session_reuse`].
     pub sessions: Option<SessionCachePool>,
     inflight: HashMap<RunId, KernelTag>,
+    /// Streaming events since the last [`Driver::take_events`].
+    events: Vec<EngineEvent>,
+    /// Metrics of retired requests (cancelled, or completed under a
+    /// wall clock) whose live state has been dropped.
+    retired: Vec<ReqMetrics>,
     pub preemptions: u64,
     pub backfills: u64,
     /// In-flight prefills evicted by the memory governor (KV wiped).
     pub kv_evictions: u64,
     /// Idle retained sessions dropped by the memory governor.
     pub session_evictions: u64,
+    /// Requests aborted via [`Driver::cancel_request`].
+    pub cancellations: u64,
     /// Kernel-level execution trace (always recorded; events are tiny).
     pub trace: Trace,
     total_requests: usize,
@@ -78,43 +107,64 @@ pub struct Driver {
 }
 
 impl Driver {
-    pub fn new(soc: &SocConfig, bridge: ExecBridge, trace: Vec<Request>) -> Self {
-        let total_requests = trace.len();
-        // Split flows into their opening turn (arrives like any other
-        // request) and the held successor chain, ordered by turn index.
-        let mut chains: HashMap<FlowId, VecDeque<Request>> = HashMap::new();
-        let mut groups: HashMap<FlowId, Vec<Request>> = HashMap::new();
-        let mut pending: Vec<Request> = vec![];
-        for r in trace {
-            match r.flow_id() {
-                Some(fid) => groups.entry(fid).or_default().push(r),
-                None => pending.push(r),
-            }
-        }
-        for (fid, mut turns) in groups {
-            turns.sort_by_key(|r| (r.turn_idx(), r.id));
-            let mut dq: VecDeque<Request> = turns.into();
-            pending.push(dq.pop_front().unwrap());
-            if !dq.is_empty() {
-                chains.insert(fid, dq);
-            }
-        }
-        pending.sort_by(|a, b| a.arrival_us.total_cmp(&b.arrival_us).then(a.id.cmp(&b.id)));
+    /// Open an empty driver against a clock; feed it with
+    /// [`Driver::submit`].
+    pub fn open(soc: &SocConfig, bridge: ExecBridge, clock: EngineClock) -> Self {
         Self {
             sim: SocSim::new(soc),
             bridge,
+            clock,
             states: HashMap::new(),
-            total_requests,
-            pending: pending.into(),
-            chains,
+            total_requests: 0,
+            pending: VecDeque::new(),
+            chains: HashMap::new(),
+            flow_done: BTreeMap::new(),
             sessions: None,
             inflight: HashMap::new(),
+            events: vec![],
+            retired: vec![],
             preemptions: 0,
             backfills: 0,
             kv_evictions: 0,
             session_evictions: 0,
+            cancellations: 0,
             trace: Trace::default(),
             finished: 0,
+        }
+    }
+
+    /// Classic batch construction: a virtual-clock driver preloaded
+    /// with a whole trace.
+    pub fn new(soc: &SocConfig, bridge: ExecBridge, trace: Vec<Request>) -> Self {
+        let mut d = Self::open(soc, bridge, EngineClock::Virtual);
+        for r in trace {
+            d.submit(r);
+        }
+        d
+    }
+
+    /// Feed one request.  Flow turns after the first are held behind
+    /// their predecessor; everything else queues by arrival time.
+    /// Under a wall clock the arrival is re-stamped to *now*.
+    pub fn submit(&mut self, mut req: Request) {
+        if self.clock.is_wall() {
+            req.arrival_us = self.now();
+        }
+        self.total_requests += 1;
+        let held = match &req.flow {
+            Some(fb) if fb.turn_idx > 0 => {
+                fb.turn_idx > self.flow_done.get(&fb.flow_id).copied().unwrap_or(0)
+            }
+            _ => false,
+        };
+        if held {
+            let fid = req.flow_id().expect("held turn has a flow");
+            let key = (req.turn_idx(), req.id);
+            let chain = self.chains.entry(fid).or_default();
+            let at = chain.partition_point(|r| (r.turn_idx(), r.id) <= key);
+            chain.insert(at, req);
+        } else {
+            self.insert_pending(req);
         }
     }
 
@@ -130,12 +180,29 @@ impl Driver {
         self.sessions.as_ref().map(|p| p.len()).unwrap_or(0)
     }
 
+    /// Current time in the run's clock domain (virtual or wall µs).
     pub fn now(&self) -> f64 {
-        self.sim.now_us
+        match &self.clock {
+            EngineClock::Virtual => self.sim.now_us,
+            EngineClock::Wall { t0 } => t0.elapsed().as_secs_f64() * 1e6,
+        }
+    }
+
+    /// Map a virtual completion instant into the run's clock domain.
+    fn stamp(&self, virtual_us: f64) -> f64 {
+        match &self.clock {
+            EngineClock::Virtual => virtual_us,
+            EngineClock::Wall { t0 } => t0.elapsed().as_secs_f64() * 1e6,
+        }
     }
 
     pub fn next_arrival_us(&self) -> Option<f64> {
         self.pending.front().map(|r| r.arrival_us)
+    }
+
+    /// Drain the events accumulated since the last call.
+    pub fn take_events(&mut self) -> Vec<EngineEvent> {
+        std::mem::take(&mut self.events)
     }
 
     fn insert_pending(&mut self, req: Request) {
@@ -169,6 +236,7 @@ impl Driver {
             let mut st = self.bridge.init_state_with_session(req, max_chunk, seed);
             st.enqueued_at_us = self.now();
             self.states.insert(id, st);
+            self.events.push(EngineEvent::Admitted { id, at_us: self.now() });
             out.push(id);
         }
         out
@@ -200,10 +268,245 @@ impl Driver {
         Some(tag)
     }
 
-    /// Advance virtual time to the next completion or arrival, applying
-    /// kernel effects.  Returns false when the run is over (no work, no
-    /// arrivals).
+    /// Preemption accounting hook: bump the counter and stream the
+    /// event (the caller decides *who* was preempted and why).
+    pub fn note_preemption(&mut self, id: ReqId) {
+        self.preemptions += 1;
+        self.events.push(EngineEvent::Preempted { id, at_us: self.now() });
+    }
+
+    /// Memory-governor accounting: an in-flight prefill lost its KV.
+    pub fn note_kv_eviction(&mut self, id: ReqId) {
+        self.kv_evictions += 1;
+        self.events.push(EngineEvent::KvEvicted { id, at_us: self.now() });
+    }
+
+    /// Memory-governor accounting: an idle retained session was shed.
+    pub fn note_session_eviction(&mut self, flow_id: FlowId) {
+        self.session_evictions += 1;
+        self.events
+            .push(EngineEvent::SessionEvicted { flow_id, at_us: self.now() });
+    }
+
+    /// Abort a request wherever it is: still queued, held behind a flow
+    /// predecessor, waiting at a kernel boundary, or mid-kernel.  A
+    /// lone prefill kernel is aborted immediately; a lane of a batched
+    /// decode retires at the iteration boundary (the other lanes keep
+    /// their tokens).  The request's KV is freed and chained successor
+    /// turns that can no longer be stitched are cancelled with it.
+    /// Returns false when the id is unknown or already finished.
+    pub fn cancel_request(&mut self, id: ReqId) -> bool {
+        // not yet admitted
+        if let Some(i) = self.pending.iter().position(|r| r.id == id) {
+            let req = self.pending.remove(i).unwrap();
+            let fid = req.flow_id();
+            self.retire_cancelled_request(req);
+            if let Some(fid) = fid {
+                self.cancel_flow_successors(fid);
+            }
+            return true;
+        }
+        // held behind a flow predecessor
+        if let Some(fid) = self
+            .chains
+            .iter()
+            .find(|(_, c)| c.iter().any(|r| r.id == id))
+            .map(|(fid, _)| *fid)
+        {
+            let mut chain = self.chains.remove(&fid).unwrap();
+            let i = chain.iter().position(|r| r.id == id).unwrap();
+            let mut rest = chain.split_off(i);
+            let turn = rest.pop_front().unwrap();
+            self.retire_cancelled_request(turn);
+            // Placeholder successors (delta_start > 0) can never be
+            // stitched without this turn — they die with it.  Self-
+            // contained successors (the serving path) stay held and
+            // release in order as the surviving turns complete; they
+            // merely miss the prefix cache.  Earlier turns are
+            // untouched (their predecessors are still alive).
+            let placeholder = rest
+                .front()
+                .and_then(|r| r.flow.as_ref())
+                .map(|f| f.delta_start > 0)
+                .unwrap_or(false);
+            if placeholder {
+                for req in rest {
+                    self.retire_cancelled_request(req);
+                }
+            } else {
+                chain.append(&mut rest);
+            }
+            if !chain.is_empty() {
+                self.chains.insert(fid, chain);
+            }
+            return true;
+        }
+        // live serving state
+        let (running, done, already, fid) = match self.states.get(&id) {
+            Some(st) => (
+                st.running,
+                st.phase == Phase::Done,
+                st.cancelled,
+                st.req.flow_id(),
+            ),
+            None => return false,
+        };
+        if done || already {
+            return false;
+        }
+        if running {
+            let prefill_run = self.inflight.iter().find_map(|(run, tag)| match tag {
+                KernelTag::Prefill { req } if *req == id => Some(*run),
+                _ => None,
+            });
+            match prefill_run {
+                Some(run) => {
+                    // lone prefill kernel: abort it at once
+                    if let Some(xpu) = self.sim.xpu_of(run) {
+                        self.cancel(xpu);
+                    }
+                }
+                None => {
+                    // mid decode batch: the iteration finishes, the
+                    // lane retires at the boundary
+                    self.states.get_mut(&id).unwrap().cancelled = true;
+                    if let Some(fid) = fid {
+                        self.cancel_flow_successors(fid);
+                    }
+                    return true;
+                }
+            }
+        }
+        let st = self.states.remove(&id).unwrap();
+        self.retire_cancelled_state(st);
+        if let Some(fid) = fid {
+            self.cancel_flow_successors(fid);
+        }
+        true
+    }
+
+    /// A flow turn died: successor turns whose prompts are generator
+    /// placeholders (`delta_start > 0`) can never be stitched without
+    /// it — they die too, and the retained session is dropped.
+    /// Self-contained successors (`delta_start == 0`, the serving path)
+    /// are released instead: their session prefix match simply fails
+    /// and they recompute.
+    fn cancel_flow_successors(&mut self, fid: FlowId) {
+        let Some(mut chain) = self.chains.remove(&fid) else { return };
+        let placeholder = chain
+            .front()
+            .and_then(|r| r.flow.as_ref())
+            .map(|f| f.delta_start > 0)
+            .unwrap_or(false);
+        if placeholder {
+            for req in chain {
+                self.retire_cancelled_request(req);
+            }
+            if let Some(pool) = &mut self.sessions {
+                pool.drop_session(fid);
+            }
+            return;
+        }
+        let now = self.now();
+        if let Some(mut nxt) = chain.pop_front() {
+            let think = nxt
+                .flow
+                .as_ref()
+                .map(|f| f.think_time_us.max(0.0))
+                .unwrap_or(0.0);
+            nxt.arrival_us = now + think;
+            self.insert_pending(nxt);
+        }
+        if !chain.is_empty() {
+            self.chains.insert(fid, chain);
+        }
+    }
+
+    fn retire_cancelled_state(&mut self, mut st: ReqState) {
+        st.metrics.cancelled = true;
+        let flow = st.req.flow.as_ref().map(|f| (f.flow_id, f.turn_idx));
+        let m = st.metrics.clone();
+        self.push_cancelled(m, flow);
+        // st — and its KV, if any — drops here
+    }
+
+    fn retire_cancelled_request(&mut self, req: Request) {
+        let m = ReqMetrics {
+            id: req.id,
+            priority: req.priority,
+            profile: req.profile.clone(),
+            flow_id: req.flow_id(),
+            turn_idx: req.turn_idx(),
+            arrival_us: req.arrival_us,
+            first_token_us: None,
+            done_us: None,
+            input_len: req.prompt_len(),
+            output_tokens: 0,
+            cached_prefix_len: 0,
+            prefill_tokens: 0,
+            cancelled: true,
+        };
+        let flow = req.flow.as_ref().map(|f| (f.flow_id, f.turn_idx));
+        self.push_cancelled(m, flow);
+    }
+
+    fn push_cancelled(&mut self, m: ReqMetrics, flow: Option<(FlowId, usize)>) {
+        if let Some((fid, turn)) = flow {
+            self.advance_flow_done(fid, turn + 1);
+        }
+        self.events
+            .push(EngineEvent::Cancelled { id: m.id, at_us: self.now() });
+        self.cancellations += 1;
+        self.finished += 1;
+        self.retire_metrics(m);
+    }
+
+    /// Record retired metrics.  Wall-clock runs keep only the most
+    /// recent `WALL_RETIRED_MAX` (older ones were already streamed as
+    /// events), so a long-lived server's history stays bounded.
+    fn retire_metrics(&mut self, m: ReqMetrics) {
+        self.retired.push(m);
+        if self.clock.is_wall() && self.retired.len() > WALL_RETIRED_MAX {
+            // amortized: shed the older half of the window at once
+            let _ = self.retired.drain(..WALL_RETIRED_MAX / 2);
+        }
+    }
+
+    /// Bump a flow's completed-turn watermark, shedding the oldest
+    /// watermarks beyond `FLOW_DONE_MAX` (serving-path flow ids are
+    /// monotonic; a shed flow's next call merely starts cold).
+    fn advance_flow_done(&mut self, fid: FlowId, next_turn: usize) {
+        let e = self.flow_done.entry(fid).or_insert(0);
+        *e = (*e).max(next_turn);
+        while self.flow_done.len() > FLOW_DONE_MAX {
+            let _ = self.flow_done.pop_first();
+        }
+    }
+
+    /// Advance to the next completion or arrival, applying kernel
+    /// effects.  Returns false when the run is idle: under a virtual
+    /// clock that means the run is over (no work, no arrivals); under a
+    /// wall clock new submissions make it runnable again.
     pub fn step(&mut self) -> Result<bool> {
+        if self.clock.is_wall() {
+            // Wall mode: virtual durations only *order* the in-flight
+            // kernels; their effects execute now, stamped in wall time.
+            if let Some(dt) = self.sim.next_event_in() {
+                let target = self.sim.now_us + dt;
+                let completions = self.sim.advance_until(target);
+                for c in completions {
+                    self.apply_completion(&c)?;
+                }
+                return Ok(true);
+            }
+            // nothing in flight: runnable iff an arrival is already due
+            let due = self
+                .pending
+                .front()
+                .map(|r| r.arrival_us <= self.now() + 1e-9)
+                .unwrap_or(false);
+            return Ok(due);
+        }
         let next_fin = self.sim.next_event_in().map(|dt| self.now() + dt);
         let next_arr = self.next_arrival_us();
         let target = match (next_fin, next_arr) {
@@ -224,34 +527,48 @@ impl Driver {
             .inflight
             .remove(&c.id)
             .context("completion for unknown run")?;
-        let (label, reactive) = match &tag {
-            KernelTag::Prefill { req } => (
-                format!("prefill:{req}"),
-                self.states.get(req).map(|s| s.is_reactive()).unwrap_or(false),
-            ),
-            KernelTag::DecodeIter { lanes } => (
-                format!("decode:b{}", lanes.len()),
-                lanes
-                    .iter()
-                    .any(|id| self.states.get(id).map(|s| s.is_reactive()).unwrap_or(false)),
-            ),
-        };
-        self.trace.record(c.xpu, c.started_us, c.finished_us, label, reactive);
+        // The kernel trace is a simulation artifact (Gantt figures,
+        // invariant checks); a long-lived wall-clock server must not
+        // accumulate one event per kernel forever.
+        if !self.clock.is_wall() {
+            let (label, reactive) = match &tag {
+                KernelTag::Prefill { req } => (
+                    format!("prefill:{req}"),
+                    self.states.get(req).map(|s| s.is_reactive()).unwrap_or(false),
+                ),
+                KernelTag::DecodeIter { lanes } => (
+                    format!("decode:b{}", lanes.len()),
+                    lanes.iter().any(|id| {
+                        self.states.get(id).map(|s| s.is_reactive()).unwrap_or(false)
+                    }),
+                ),
+            };
+            self.trace.record(c.xpu, c.started_us, c.finished_us, label, reactive);
+        }
+        // lifecycle timestamps in the run's clock domain
+        let t = self.stamp(c.finished_us);
         match &tag {
             KernelTag::Prefill { req } => {
                 let mut st = self.states.remove(req).context("unknown req")?;
                 st.running = false;
                 let done = self.bridge.prefill_kernel_done(&mut st)?;
                 if done {
-                    st.metrics.first_token_us = Some(c.finished_us);
-                    st.enqueued_at_us = c.finished_us;
+                    st.metrics.first_token_us = Some(t);
+                    st.enqueued_at_us = t;
+                    if let Some(&tok) = st.tokens.last() {
+                        self.events.push(EngineEvent::TokenEmitted {
+                            id: *req,
+                            token: tok,
+                            n: st.tokens.len(),
+                            at_us: t,
+                        });
+                    }
                 }
                 if st.phase == Phase::Done {
-                    st.metrics.done_us = Some(c.finished_us);
-                    self.finished += 1;
-                    self.on_request_done(&mut st, c.finished_us);
+                    self.complete(st, t);
+                } else {
+                    self.states.insert(*req, st);
                 }
-                self.states.insert(*req, st);
             }
             KernelTag::DecodeIter { lanes } => {
                 let mut taken: Vec<ReqState> = lanes
@@ -264,16 +581,52 @@ impl Driver {
                 }
                 for mut st in taken {
                     st.running = false;
-                    if st.phase == Phase::Done {
-                        st.metrics.done_us = Some(c.finished_us);
-                        self.finished += 1;
-                        self.on_request_done(&mut st, c.finished_us);
+                    if st.cancelled {
+                        // deferred lane cancellation: the iteration is
+                        // over, the KV can go
+                        self.retire_cancelled_state(st);
+                        continue;
                     }
-                    self.states.insert(st.id(), st);
+                    if let Some(&tok) = st.tokens.last() {
+                        self.events.push(EngineEvent::TokenEmitted {
+                            id: st.id(),
+                            token: tok,
+                            n: st.tokens.len(),
+                            at_us: t,
+                        });
+                    }
+                    if st.phase == Phase::Done {
+                        self.complete(st, t);
+                    } else {
+                        self.states.insert(st.id(), st);
+                    }
                 }
             }
         }
         Ok(())
+    }
+
+    /// Request completion: stamp metrics, run flow bookkeeping, stream
+    /// `TurnDone`, and either keep the state for the final report
+    /// (virtual clock) or retire it so a long-lived server's working
+    /// set stays bounded (wall clock).
+    fn complete(&mut self, mut st: ReqState, t: f64) {
+        st.metrics.done_us = Some(t);
+        self.finished += 1;
+        self.on_request_done(&mut st, t);
+        self.events.push(EngineEvent::TurnDone {
+            id: st.id(),
+            at_us: t,
+            arrival_us: st.metrics.arrival_us,
+            first_token_us: st.metrics.first_token_us.unwrap_or(t),
+            tokens: st.tokens.clone(),
+            cached_prefix: st.cached_prefix_len,
+        });
+        if self.clock.is_wall() {
+            self.retire_metrics(st.metrics.clone());
+        } else {
+            self.states.insert(st.id(), st);
+        }
     }
 
     /// Flow bookkeeping at turn completion: retain the session KV for
@@ -282,13 +635,25 @@ impl Driver {
     /// stitched over the generator's placeholder prefix.
     fn on_request_done(&mut self, st: &mut ReqState, now_us: f64) {
         let Some(fb) = st.req.flow.clone() else { return };
+        self.advance_flow_done(fb.flow_id, fb.turn_idx + 1);
         let successor = self.chains.get_mut(&fb.flow_id).and_then(|c| c.pop_front());
         if self.chains.get(&fb.flow_id).map(|c| c.is_empty()).unwrap_or(false) {
             self.chains.remove(&fb.flow_id);
         }
         let Some(mut nxt) = successor else {
-            // flow over: nothing will reuse this session
-            if let Some(pool) = &mut self.sessions {
+            // Wall clock: a later call of this session may still arrive
+            // online — retain while the binding expects more turns.
+            // Virtual clock: the observed chain *is* the flow; nothing
+            // will reuse this session.
+            let expects_more =
+                self.clock.is_wall() && fb.turn_idx + 1 < fb.total_turns;
+            if expects_more {
+                let mut convo = st.req.prompt.clone();
+                convo.extend(&st.tokens);
+                if let Some(pool) = &mut self.sessions {
+                    pool.retain(fb.flow_id, st.cache.take(), convo, st.pos, now_us);
+                }
+            } else if let Some(pool) = &mut self.sessions {
                 pool.drop_session(fb.flow_id);
             }
             return;
@@ -299,15 +664,19 @@ impl Driver {
         if let Some(pool) = &mut self.sessions {
             pool.retain(fb.flow_id, st.cache.take(), convo.clone(), st.pos, now_us);
         }
-        // stitch: replace the placeholder conversation estimate with
-        // the real one (same length by construction: the reply budget
-        // is always generated in full)
         let nfb = nxt.flow.as_ref().expect("chained turn has a binding");
         let think = nfb.think_time_us.max(0.0);
-        let ds = nfb.delta_start.min(nxt.prompt.len());
-        let delta = nxt.prompt.split_off(ds);
-        nxt.prompt = convo;
-        nxt.prompt.extend(delta);
+        // stitch: replace the placeholder conversation estimate with
+        // the real one (same length by construction: the reply budget
+        // is always generated in full).  A self-contained successor
+        // (delta_start == 0 — the online-session path) already carries
+        // its real prompt and is released as-is.
+        if nfb.delta_start > 0 {
+            let ds = nfb.delta_start.min(nxt.prompt.len());
+            let delta = nxt.prompt.split_off(ds);
+            nxt.prompt = convo;
+            nxt.prompt.extend(delta);
+        }
         // the turn "arrives" when the user finishes thinking
         nxt.arrival_us = now_us + think;
         self.insert_pending(nxt);
@@ -340,12 +709,13 @@ impl Driver {
                 self.unfinished()
             );
         }
-        let makespan_us = self.sim.now_us;
+        let makespan_us = self.now();
         Ok(RunReport {
             engine,
             reqs: {
                 let mut v: Vec<_> =
                     self.states.into_values().map(|s| s.metrics).collect();
+                v.extend(self.retired);
                 v.sort_by_key(|m| m.id);
                 v
             },
@@ -358,6 +728,7 @@ impl Driver {
             backfills: self.backfills,
             kv_evictions: self.kv_evictions,
             session_evictions: self.session_evictions,
+            cancellations: self.cancellations,
         })
     }
 }
@@ -429,11 +800,7 @@ mod tests {
         run_fcfs_opts(trace, false)
     }
 
-    fn run_fcfs_opts(trace: Vec<Request>, session_reuse: bool) -> RunReport {
-        let (mut d, ann) = mk_driver(trace);
-        if session_reuse {
-            d.enable_session_reuse(8);
-        }
+    fn drive_fcfs(d: &mut Driver, ann: &Annotator) {
         let npu = d.sim.xpu_index("npu").unwrap();
         let igpu = d.sim.xpu_index("igpu").unwrap();
         loop {
@@ -461,6 +828,14 @@ mod tests {
                 break;
             }
         }
+    }
+
+    fn run_fcfs_opts(trace: Vec<Request>, session_reuse: bool) -> RunReport {
+        let (mut d, ann) = mk_driver(trace);
+        if session_reuse {
+            d.enable_session_reuse(8);
+        }
+        drive_fcfs(&mut d, &ann);
         d.finish("fcfs-test".into()).unwrap()
     }
 
@@ -570,5 +945,114 @@ mod tests {
         for m in rep.reqs.iter().filter(|m| m.flow_id.is_none()) {
             assert_eq!(m.cached_prefix_len, 0);
         }
+    }
+
+    #[test]
+    fn events_stream_tokens_and_completions() {
+        let (mut d, ann) = mk_driver(vec![req(1, 0.0, 100, 5), req(2, 500.0, 60, 3)]);
+        drive_fcfs(&mut d, &ann);
+        let evs = d.take_events();
+        use crate::engine::EngineEvent::{Admitted, TokenEmitted, TurnDone};
+        let admitted = evs.iter().filter(|e| matches!(e, Admitted { .. })).count();
+        let tokens = evs.iter().filter(|e| matches!(e, TokenEmitted { .. })).count();
+        let done = evs.iter().filter(|e| matches!(e, TurnDone { .. })).count();
+        assert_eq!(admitted, 2);
+        assert_eq!(tokens, 5 + 3, "one event per generated token");
+        assert_eq!(done, 2);
+        // the TurnDone carries the full token vector and timestamps
+        let td = evs
+            .iter()
+            .find_map(|e| match e {
+                TurnDone { id: 1, tokens, first_token_us, at_us, arrival_us, .. } => {
+                    Some((tokens.clone(), *first_token_us, *at_us, *arrival_us))
+                }
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(td.0.len(), 5);
+        assert!(td.3 <= td.1 && td.1 <= td.2);
+        let rep = d.finish("fcfs-test".into()).unwrap();
+        assert_eq!(rep.reqs.iter().filter(|m| m.finished()).count(), 2);
+    }
+
+    #[test]
+    fn cancel_pending_request_never_admits() {
+        let (mut d, ann) = mk_driver(vec![req(1, 0.0, 80, 3), req(2, 50_000.0, 80, 3)]);
+        assert!(d.cancel_request(2), "queued request is cancellable");
+        assert!(!d.cancel_request(2), "double cancel is a no-op");
+        drive_fcfs(&mut d, &ann);
+        let evs = d.take_events();
+        assert!(evs.iter().any(|e| matches!(e, EngineEvent::Cancelled { id: 2, .. })));
+        let rep = d.finish("fcfs-test".into()).unwrap();
+        assert_eq!(rep.cancellations, 1);
+        let m2 = rep.reqs.iter().find(|m| m.id == 2).unwrap();
+        assert!(m2.cancelled && !m2.finished());
+        assert!(rep.reqs.iter().find(|m| m.id == 1).unwrap().finished());
+    }
+
+    #[test]
+    fn cancel_mid_prefill_aborts_the_kernel() {
+        let (mut d, ann) = mk_driver(vec![req(1, 0.0, 400, 3)]);
+        let npu = d.sim.xpu_index("npu").unwrap();
+        d.admit_ready(512);
+        let chunk = *d.states[&1].current_chunk().unwrap();
+        let t = *ann.prefill_kernel(&chunk).timing_on(npu);
+        d.launch(npu, t, false, KernelTag::Prefill { req: 1 });
+        assert!(d.sim.busy(npu));
+        assert!(d.cancel_request(1));
+        assert!(!d.sim.busy(npu), "the in-flight prefill kernel is aborted");
+        assert!(d.states.is_empty(), "state and KV freed");
+        assert!(d.all_done());
+        let rep = d.finish("fcfs-test".into()).unwrap();
+        assert_eq!(rep.cancellations, 1);
+    }
+
+    #[test]
+    fn cancel_decode_lane_retires_at_iteration_boundary() {
+        let (mut d, ann) = mk_driver(vec![req(1, 0.0, 60, 8), req(2, 0.0, 60, 8)]);
+        let npu = d.sim.xpu_index("npu").unwrap();
+        let igpu = d.sim.xpu_index("igpu").unwrap();
+        // prefill both to decode phase
+        loop {
+            d.admit_ready(512);
+            if !d.sim.busy(npu) {
+                if let Some(&id) = d.idle_in_phase(Phase::Prefilling).first() {
+                    let chunk = *d.states[&id].current_chunk().unwrap();
+                    let t = *ann.prefill_kernel(&chunk).timing_on(npu);
+                    d.launch(npu, t, false, KernelTag::Prefill { req: id });
+                }
+            }
+            if d.idle_in_phase(Phase::Decoding).len() == 2 {
+                break;
+            }
+            assert!(d.step().unwrap());
+        }
+        // launch a 2-lane decode, then cancel lane 2 mid-kernel
+        let lanes = d.idle_in_phase(Phase::Decoding);
+        let t = *ann.decode_iter(2, 64).timing_on(igpu);
+        d.launch(igpu, t, false, KernelTag::DecodeIter { lanes });
+        assert!(d.cancel_request(2));
+        assert!(d.sim.busy(igpu), "a batched decode is never aborted mid-kernel");
+        drive_fcfs(&mut d, &ann);
+        let rep = d.finish("fcfs-test".into()).unwrap();
+        let m1 = rep.reqs.iter().find(|m| m.id == 1).unwrap();
+        let m2 = rep.reqs.iter().find(|m| m.id == 2).unwrap();
+        assert!(m1.finished() && m1.output_tokens == 8, "surviving lane unaffected");
+        assert!(m2.cancelled && !m2.finished());
+    }
+
+    #[test]
+    fn cancel_flow_turn_kills_placeholder_successors() {
+        let (mut d, ann) = mk_driver(flow_turns(1, 10, 1_000.0));
+        // cancel the middle turn while it is still held
+        assert!(d.cancel_request(11));
+        drive_fcfs(&mut d, &ann);
+        let rep = d.finish("fcfs-test".into()).unwrap();
+        // turn 0 completes; turns 1 and 2 are cancelled together (turn
+        // 2's placeholder prompt can never be stitched without turn 1)
+        assert!(rep.reqs.iter().find(|m| m.id == 10).unwrap().finished());
+        assert!(rep.reqs.iter().find(|m| m.id == 11).unwrap().cancelled);
+        assert!(rep.reqs.iter().find(|m| m.id == 12).unwrap().cancelled);
+        assert_eq!(rep.cancellations, 2);
     }
 }

@@ -5,14 +5,20 @@
 //!   it lives in unified host memory, a preemption checkpoint is free.
 //! - [`ExecBridge`] — runs kernel *numerics* (real PJRT or synthetic)
 //!   when the DES says a kernel finished.
-//! - [`Driver`] — the DES event loop: arrivals, kernel completions,
-//!   metrics collection.
-//! - [`Engine`] — the trait the figure harnesses run.
+//! - [`Driver`] — the clock-abstracted event loop: submission, arrivals,
+//!   kernel-completion effects, cancellation, the [`EngineEvent`] stream.
+//! - [`EngineCore`] — the streaming `submit`/`step`/`cancel`/`drain`
+//!   trait every engine implements; the batch `run(trace)` entry point
+//!   the figure harnesses use is a provided method over it.  `Engine`
+//!   is the same trait under its historical name.
 
 mod bridge;
+mod core_api;
 mod driver;
 mod reqstate;
 
 pub use bridge::ExecBridge;
-pub use driver::{Driver, Engine, KernelTag};
+pub use core_api::EngineCore as Engine;
+pub use core_api::{EngineClock, EngineCore, EngineEvent};
+pub use driver::{Driver, KernelTag};
 pub use reqstate::{Phase, ReqState};

@@ -72,6 +72,9 @@ pub struct ReqState {
     /// Preemption already counted for the current wait episode (cleared
     /// whenever the request launches a kernel).
     pub preempt_counted: bool,
+    /// The request was cancelled while a batched decode kernel carrying
+    /// it was in flight; it retires at the iteration boundary.
+    pub cancelled: bool,
     pub metrics: ReqMetrics,
 }
 
@@ -96,6 +99,7 @@ impl ReqState {
             output_tokens: 0,
             cached_prefix_len,
             prefill_tokens: 0,
+            cancelled: false,
         };
         Self {
             enqueued_at_us: req.arrival_us,
@@ -114,6 +118,7 @@ impl ReqState {
             running: false,
             preempted: 0,
             preempt_counted: false,
+            cancelled: false,
             metrics,
         }
     }

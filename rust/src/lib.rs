@@ -23,8 +23,10 @@
 //! - [`coordinator`] — the online scheduler (paper §6): dual queues,
 //!   kernel-level preemption, slack-aware backfill, memory-aware
 //!   dispatch, the XPU coordinator loop.
-//! - [`engine`] — offline load + online serve; the `Engine` trait shared
-//!   with baselines.
+//! - [`engine`] — the streaming `EngineCore` API (`submit`/`step`/
+//!   `cancel`/`drain`) over a clock-abstracted driver; the batch
+//!   `run(trace)` the figure harnesses use is a provided method, so
+//!   simulation and serving share one policy code path.
 //! - [`baselines`] — llama.cpp-like CPU FCFS engine and the Fig. 4
 //!   co-scheduling schemes (a)/(b)/(c).
 //! - [`workload`] — agentic workload generators (Poisson proactive,
@@ -33,8 +35,9 @@
 //!   id and a growing conversation prefix (paper §1, DESIGN.md §3).
 //! - [`metrics`] — TTFT/TPOT/normalized latency, throughput, energy,
 //!   per-flow rollups (flow e2e, prefix-cache hit-rate).
-//! - [`server`] — UDS JSON-lines frontend (paper §7) with `session`
-//!   tags that keep KV alive across calls.
+//! - [`server`] — UDS JSON-lines frontend (paper §7) driving the shared
+//!   engine core against wall-clock time, with `session` tags that keep
+//!   KV alive across calls and a `cancel` verb for in-flight aborts.
 //! - [`trace`] — kernel-level execution traces for figures + debugging.
 
 pub mod baselines;

@@ -4,7 +4,8 @@
 //! agent-xpu fig <affinity|contention|batching|schemes|proactive|mixed|flows|ablation|all>
 //!           [--out results/] [--duration 120] [--seed 7]
 //! agent-xpu run --rate 1.5 --interval 12 --duration 60 [--engine agent.xpu|llamacpp|scheme-a|b|c]
-//! agent-xpu serve --artifacts artifacts/small [--socket /tmp/agent-xpu.sock] [--b-max 8]
+//! agent-xpu serve --artifacts artifacts/small [--socket /tmp/agent-xpu.sock]
+//!           [--config runtime.json] [--b-max 8] [--session-capacity 32]
 //! agent-xpu inspect --artifacts artifacts/small
 //! agent-xpu soc-probe
 //! ```
@@ -15,7 +16,7 @@ use std::sync::Arc;
 use anyhow::{Context, Result, bail};
 
 use agent_xpu::baselines::{CpuFcfsEngine, Scheme, SingleXpuEngine};
-use agent_xpu::config::{SchedulerConfig, default_soc, llama32_3b};
+use agent_xpu::config::{RuntimeConfig, SchedulerConfig, default_soc, llama32_3b};
 use agent_xpu::coordinator::AgentXpuEngine;
 use agent_xpu::engine::{Engine, ExecBridge};
 use agent_xpu::figures;
@@ -166,17 +167,31 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .get("artifacts")
         .context("--artifacts <dir> required (run `make artifacts` first)")?;
     let socket = args.str_or("socket", "/tmp/agent-xpu.sock");
-    let b_max = args.usize_or("b-max", 8)?;
+    // Runtime config drives the serving loop: the server honors the
+    // same SoC + scheduler knobs the simulated coordinator does, with
+    // individual flag overrides on top.
+    let (soc, mut sched) = match args.get("config") {
+        Some(path) => {
+            let cfg = RuntimeConfig::load(path)?;
+            (cfg.soc, cfg.scheduler)
+        }
+        None => (default_soc(), SchedulerConfig::default()),
+    };
+    sched.b_max = args.usize_or("b-max", sched.b_max)?;
+    sched.session_capacity =
+        args.usize_or("session-capacity", sched.session_capacity)?;
     println!("loading artifacts from {artifacts} ...");
     let rt = Arc::new(Runtime::load(artifacts)?);
     println!(
-        "model {} ({:.1}M params), {} artifacts compiled",
+        "model {} ({:.1}M params), {} artifacts compiled; b_max {}, sessions {}",
         rt.geo.name,
         rt.geo.n_params() as f64 / 1e6,
-        rt.manifest.artifacts.len()
+        rt.manifest.artifacts.len(),
+        sched.b_max,
+        sched.session_capacity,
     );
     let bridge = Arc::new(ExecBridge::real(Arc::new(ModelExecutor::new(rt))));
-    Server::new(bridge, socket, b_max).run()
+    Server::new(bridge, socket, soc, sched).run()
 }
 
 fn cmd_inspect(args: &Args) -> Result<()> {

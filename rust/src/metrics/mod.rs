@@ -6,4 +6,4 @@
 
 mod report;
 
-pub use report::{Aggregate, FlowStats, ReqMetrics, RunReport, percentile};
+pub use report::{Aggregate, FlowStats, ReportAccumulator, ReqMetrics, RunReport, percentile};

@@ -31,6 +31,8 @@ pub struct ReqMetrics {
     /// under session reuse, and *more* than `input_len` if an eviction
     /// forced a restart.
     pub prefill_tokens: usize,
+    /// The request was aborted via `cancel` (never counts as finished).
+    pub cancelled: bool,
 }
 
 impl ReqMetrics {
@@ -80,6 +82,8 @@ pub struct RunReport {
     pub kv_evictions: u64,
     /// Idle retained sessions the memory governor dropped.
     pub session_evictions: u64,
+    /// Requests aborted via `cancel`.
+    pub cancellations: u64,
 }
 
 /// Rollup of one multi-turn flow.
@@ -297,6 +301,75 @@ impl RunReport {
             .set("backfills", self.backfills as usize)
             .set("kv_evictions", self.kv_evictions as usize)
             .set("session_evictions", self.session_evictions as usize)
+            .set("cancellations", self.cancellations as usize)
+    }
+}
+
+/// Incremental event → report accumulation: folds the
+/// [`EngineEvent`](crate::engine::EngineEvent) stream of a live engine
+/// into running serving statistics, without holding per-request state.
+/// This is what a long-lived server reports from (`stats` verb) — the
+/// batch [`RunReport`] requires the whole run to have ended, an
+/// accumulator never does.
+#[derive(Debug, Clone, Default)]
+pub struct ReportAccumulator {
+    /// Requests completed with their full token budget.
+    pub served: usize,
+    /// Requests aborted via cancel.
+    pub cancelled: usize,
+    /// Generated tokens across all requests.
+    pub tokens: usize,
+    /// Prompt tokens served from retained session caches.
+    pub reused_prefix_tokens: usize,
+    /// Proactive prefills preempted at kernel boundaries.
+    pub preemptions: usize,
+    ttft_sum_ms: f64,
+    ttft_n: usize,
+}
+
+impl ReportAccumulator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold one engine event into the running totals.
+    pub fn absorb(&mut self, ev: &crate::engine::EngineEvent) {
+        use crate::engine::EngineEvent::*;
+        match ev {
+            TokenEmitted { .. } => self.tokens += 1,
+            TurnDone { arrival_us, first_token_us, cached_prefix, .. } => {
+                self.served += 1;
+                self.reused_prefix_tokens += cached_prefix;
+                self.ttft_sum_ms += (first_token_us - arrival_us) / 1e3;
+                self.ttft_n += 1;
+            }
+            Cancelled { .. } => self.cancelled += 1,
+            Preempted { .. } => self.preemptions += 1,
+            Admitted { .. } | KvEvicted { .. } | SessionEvicted { .. } => {}
+        }
+    }
+
+    /// Mean TTFT (ms) over served requests; NaN before the first.
+    pub fn mean_ttft_ms(&self) -> f64 {
+        if self.ttft_n == 0 {
+            f64::NAN
+        } else {
+            self.ttft_sum_ms / self.ttft_n as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let ttft = self.mean_ttft_ms();
+        Json::obj()
+            .set("served", self.served)
+            .set("cancelled", self.cancelled)
+            .set("tokens", self.tokens)
+            .set("reused_prefix_tokens", self.reused_prefix_tokens)
+            .set("preemptions", self.preemptions)
+            .set(
+                "mean_ttft_ms",
+                if ttft.is_finite() { Json::Num(ttft) } else { Json::Null },
+            )
     }
 }
 
@@ -318,6 +391,7 @@ mod tests {
             output_tokens: ot,
             cached_prefix_len: 0,
             prefill_tokens: il,
+            cancelled: false,
         }
     }
 
@@ -351,6 +425,7 @@ mod tests {
             backfills: 0,
             kv_evictions: 0,
             session_evictions: 0,
+            cancellations: 0,
         }
     }
 

@@ -1,6 +1,7 @@
 //! The serving frontend (paper §7): a JSON-lines protocol over Unix
-//! Domain Sockets, backed by a *real-time* miniature of the XPU
-//! coordinator running real PJRT compute.
+//! Domain Sockets, backed by the *same* engine core the DES figure
+//! harnesses run (`AgentXpuEngine` behind the clock-abstracted
+//! `EngineCore` API, DESIGN.md §7) executing against wall-clock time.
 //!
 //! Wire protocol (one JSON object per line):
 //!
@@ -10,18 +11,33 @@
 //! ← {"type":"token","id":1,"token":42,"n":1}
 //! ← ...
 //! ← {"type":"done","id":1,"ttft_ms":12.3,"total_ms":80.1,"cached_prefix":0,"tokens":[...]}
+//! → {"type":"cancel","id":2}
+//! ← {"type":"cancel.ack","id":2}
+//! ← {"type":"done.cancelled","id":2}
 //! → {"type":"stats"}
-//! ← {"type":"stats","served":3}
+//! ← {"type":"stats","served":3,"cancelled":1,"tokens":24,"reused_prefix_tokens":35,
+//!    "preemptions":0,"mean_ttft_ms":1.9}
 //! ```
+//!
+//! Connections are full-duplex: `generate` frames stream from a writer
+//! thread while the reader keeps accepting lines, so `cancel` (and
+//! further `generate`s) work on the same connection.  `cancel` aborts
+//! an in-flight generation wherever it is — queued, mid-prefill (the
+//! kernel is aborted), or decoding (the lane retires at the iteration
+//! boundary) — frees its KV, and ends the stream with a terminal
+//! `done.cancelled` frame.  A connection may only cancel ids it issued
+//! itself; foreign ids get an `error` frame.
 //!
 //! The optional `"session":"<tag>"` field on `generate` keeps the KV
 //! cache alive across calls (flow-level sessions, DESIGN.md §3): a
 //! later call whose prompt extends the tagged conversation prefills
 //! only the delta tokens, and `done.cached_prefix` reports how many
-//! prompt tokens the retained KV covered.
+//! prompt tokens the retained KV covered.  Retention is bounded by
+//! `SchedulerConfig::session_capacity` and shed LRU-first under memory
+//! pressure — the same policy the simulated coordinator applies.
 
 mod rt;
 mod uds;
 
-pub use rt::{RtRequest, RtScheduler, TokenEvent, spawn};
+pub use rt::{RtMsg, RtRequest, RtScheduler, TokenEvent, spawn};
 pub use uds::{GenerateResult, Server, client_generate, client_generate_session};

@@ -1,76 +1,81 @@
-//! Real-time scheduler: the online coordinator policy (dual queues,
-//! reactive-first kernel-level preemption, decode batching) executed
-//! against *wall-clock* time with real PJRT compute.
+//! Real-time serving loop: drives the *same* [`EngineCore`] the DES
+//! figure harnesses run — `AgentXpuEngine` with its dual queues,
+//! kernel-level preemption, decode batching, backfill, and memory
+//! governor — against a wall clock ([`EngineClock::wall`]).
 //!
-//! Sessions: a request carrying a `session` tag retains its KV after
-//! completion, keyed by that tag, and the session's next call prefills
-//! only the tokens beyond the retained conversation prefix — the
-//! serving-side face of flow-level cross-turn reuse (DESIGN.md §3).
-//! Retention is LRU-bounded.
+//! There is no scheduling policy in this file.  The loop only moves
+//! bytes: channel messages in ([`RtMsg`]), engine events out
+//! ([`TokenEvent`]).  Scheduler knobs (`b_max`, `session_capacity`,
+//! preemption/backfill switches, …) come from the caller's
+//! [`SchedulerConfig`] — the same configuration the simulated
+//! coordinator honors.
 //!
-//! The CPU PJRT substrate serializes kernel execution on one compute
-//! thread, so "the pipelines" collapse to one lane — but the scheduling
-//! decisions (who runs the next kernel, who joins the decode batch, who
-//! gets preempted at a kernel boundary) are exactly the coordinator's,
-//! which is what the serving frontend needs.
+//! Sessions: a request carrying a `session` tag maps to a flow id; the
+//! engine's session pool retains the conversation KV after completion,
+//! and the session's next call prefills only the tokens beyond the
+//! retained prefix (`done.cached_prefix` reports the reuse).  Retention
+//! is bounded by `SchedulerConfig::session_capacity` and shed LRU-first
+//! by the memory governor, exactly as in simulation.
 
-use std::collections::HashMap;
-use std::sync::Arc;
-use std::sync::mpsc::{Receiver, Sender, channel};
-use std::time::Instant;
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{Receiver, Sender, TryRecvError, channel};
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
-use crate::engine::{ExecBridge, Phase, ReqState};
-use crate::runtime::SessionCachePool;
-use crate::workload::{Priority, ReqId, Request};
-
-/// Max sessions whose KV stays resident between calls (LRU beyond).
-const SESSION_CAPACITY: usize = 32;
+use crate::config::{SchedulerConfig, SocConfig};
+use crate::coordinator::AgentXpuEngine;
+use crate::engine::{EngineClock, EngineCore, EngineEvent, ExecBridge};
+use crate::metrics::ReportAccumulator;
+use crate::workload::{FlowBinding, Priority, ReqId, Request};
 
 /// Max session *tags* remembered by the server.  Tags arrive from
 /// clients, so the map must be bounded for a long-lived server; when
-/// it overflows, the oldest tag (and its retained KV, if any) is
-/// forgotten — that session's next call simply starts cold.
+/// it overflows, the oldest tag is forgotten — that session's next
+/// call simply starts cold (its retained KV ages out of the engine's
+/// LRU-bounded pool on its own).
 const SESSION_TAGS_MAX: usize = 1024;
 
-/// Bounded session-tag registry: maps client tags to stable pool keys.
-/// Ids are monotonic (never reused), so a forgotten tag can never
-/// alias another session's retained cache.
+/// Bounded session-tag registry: maps client tags to stable flow ids
+/// and counts the calls seen per tag (the flow turn index).  Ids are
+/// monotonic (never reused), so a forgotten tag can never alias
+/// another session's retained cache.
 #[derive(Default)]
 struct SessionRegistry {
-    ids: HashMap<String, u64>,
-    order: std::collections::VecDeque<String>,
+    /// tag → (flow id, calls seen so far)
+    ids: HashMap<String, (u64, usize)>,
+    order: VecDeque<String>,
     next: u64,
 }
 
 impl SessionRegistry {
-    /// Resolve a tag to its pool key, registering it if new; evicts the
-    /// oldest tag (dropping its pool entry) beyond `SESSION_TAGS_MAX`.
-    fn resolve(&mut self, tag: &str, pool: &mut SessionCachePool) -> u64 {
-        if let Some(&sid) = self.ids.get(tag) {
-            return sid;
+    /// Resolve a tag to `(flow_id, turn_idx)` for its next call,
+    /// registering the tag if new; evicts the oldest tag beyond
+    /// `SESSION_TAGS_MAX`.
+    fn resolve(&mut self, tag: &str) -> (u64, usize) {
+        if let Some(e) = self.ids.get_mut(tag) {
+            e.1 += 1;
+            return (e.0, e.1);
         }
         let sid = self.next;
         self.next += 1;
-        self.ids.insert(tag.to_string(), sid);
+        self.ids.insert(tag.to_string(), (sid, 0));
         self.order.push_back(tag.to_string());
         while self.order.len() > SESSION_TAGS_MAX {
             if let Some(old) = self.order.pop_front() {
-                if let Some(old_sid) = self.ids.remove(&old) {
-                    pool.drop_session(old_sid);
-                }
+                self.ids.remove(&old);
             }
         }
-        sid
+        (sid, 0)
     }
 
+    #[cfg(test)]
     fn get(&self, tag: &str) -> Option<u64> {
-        self.ids.get(tag).copied()
+        self.ids.get(tag).map(|e| e.0)
     }
 }
 
-/// A request submitted to the real-time scheduler.
+/// A request submitted to the real-time serving loop.
 pub struct RtRequest {
     pub id: ReqId,
     pub priority: Priority,
@@ -81,6 +86,14 @@ pub struct RtRequest {
     pub session: Option<String>,
     /// Streamed token events land here.
     pub events: Sender<TokenEvent>,
+}
+
+/// Control messages into the serving loop.
+pub enum RtMsg {
+    Submit(RtRequest),
+    /// Abort an in-flight generation; its KV is freed and the client
+    /// receives a terminal [`TokenEvent::Cancelled`].
+    Cancel(ReqId),
 }
 
 /// Streamed output.
@@ -96,280 +109,179 @@ pub enum TokenEvent {
         /// Prompt tokens served from the session cache (0 = no reuse).
         cached_prefix: usize,
     },
+    /// Terminal frame of a cancelled generation.
+    Cancelled { id: ReqId },
     Error { id: ReqId, message: String },
 }
 
-struct Active {
-    st: ReqState,
-    events: Sender<TokenEvent>,
-    session: Option<String>,
-    t_arrive: Instant,
-    t_first: Option<Instant>,
-    sent: usize,
-}
-
-/// The real-time coordinator loop.  Owns the bridge (and through it the
-/// PJRT runtime); consumes `RtRequest`s from a channel until it closes.
+/// The real-time serving loop.  Owns the engine core (and through it
+/// the PJRT runtime); consumes [`RtMsg`]s from a channel until it
+/// closes and all work drains.
 pub struct RtScheduler {
-    bridge: Arc<ExecBridge>,
-    b_max: usize,
-    max_chunk: usize,
+    core: Box<dyn EngineCore + Send>,
+    stats: Arc<Mutex<ReportAccumulator>>,
 }
 
 impl RtScheduler {
-    pub fn new(bridge: Arc<ExecBridge>, b_max: usize) -> Self {
-        let max_chunk = bridge.geo.max_chunk();
-        Self { bridge, b_max, max_chunk }
+    /// Build the serving loop around the shared coordinator policy:
+    /// real-compute when the bridge carries a PJRT executor, timing
+    /// bridge otherwise.  `sched` is honored wholesale — `b_max`,
+    /// `session_capacity`, preemption/backfill/disaggregation switches.
+    pub fn new(bridge: Arc<ExecBridge>, soc: SocConfig, sched: SchedulerConfig) -> Self {
+        let core: Box<dyn EngineCore + Send> = match bridge.executor() {
+            Some(exec) => Box::new(AgentXpuEngine::real(exec, soc, sched)),
+            None => {
+                Box::new(AgentXpuEngine::synthetic(bridge.geo.clone(), soc, sched))
+            }
+        };
+        Self { core, stats: Arc::new(Mutex::new(ReportAccumulator::new())) }
+    }
+
+    /// Running serving statistics (shared with the `stats` verb).
+    pub fn stats(&self) -> Arc<Mutex<ReportAccumulator>> {
+        self.stats.clone()
     }
 
     /// Run until the request channel closes and all work drains.
-    pub fn serve(&self, rx: Receiver<RtRequest>) -> Result<u64> {
-        let mut active: Vec<Active> = vec![];
+    /// Returns the number of completed (non-cancelled) generations.
+    pub fn serve(mut self, rx: Receiver<RtMsg>) -> Result<u64> {
+        self.core.start(EngineClock::wall())?;
+        let mut registry = SessionRegistry::default();
+        let mut subs: HashMap<ReqId, Sender<TokenEvent>> = HashMap::new();
         let mut served = 0u64;
         let mut open = true;
-        // session-tag → pool key, plus the retained KV itself; both
-        // live exactly as long as this serve loop
-        let mut session_ids = SessionRegistry::default();
-        let mut sessions = SessionCachePool::new(SESSION_CAPACITY);
-        let t0 = Instant::now();
         loop {
-            let now_us = t0.elapsed().as_secs_f64() * 1e6;
-            // Admit — block only when there is nothing to do.
+            // Intake — block only when there is nothing else to do.
             if open {
-                if active.is_empty() {
+                if !self.core.has_work() {
                     match rx.recv() {
-                        Ok(r) => {
-                            self.admit(&mut active, r, &mut sessions, &mut session_ids)
-                        }
+                        Ok(m) => self.handle_msg(m, &mut registry, &mut subs)?,
                         Err(_) => open = false,
                     }
                 }
                 loop {
                     match rx.try_recv() {
-                        Ok(r) => {
-                            self.admit(&mut active, r, &mut sessions, &mut session_ids)
-                        }
-                        Err(std::sync::mpsc::TryRecvError::Empty) => break,
-                        Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                        Ok(m) => self.handle_msg(m, &mut registry, &mut subs)?,
+                        Err(TryRecvError::Empty) => break,
+                        Err(TryRecvError::Disconnected) => {
                             open = false;
                             break;
                         }
                     }
                 }
             }
-            if active.is_empty() {
+            if !self.core.has_work() {
                 if !open {
                     return Ok(served);
                 }
                 continue;
             }
-
-            // One scheduling decision = one kernel, reactive first
-            // (kernel-level preemption: proactive work pauses at this
-            // boundary whenever a reactive request is present).
-            self.run_one_kernel(&mut active)?;
-
-            // Retire finished requests.
-            let mut i = 0;
-            while i < active.len() {
-                if active[i].st.phase == Phase::Done {
-                    let mut a = active.swap_remove(i);
-                    let ttft = a
-                        .t_first
-                        .map(|t| t.duration_since(a.t_arrive).as_secs_f64() * 1e3)
-                        .unwrap_or(f64::NAN);
-                    let total = a.t_arrive.elapsed().as_secs_f64() * 1e3;
-                    // park the conversation KV for the session's next call
-                    if let Some(tag) = &a.session {
-                        if let Some(sid) = session_ids.get(tag) {
-                            let mut convo = a.st.req.prompt.clone();
-                            convo.extend(&a.st.tokens);
-                            sessions.retain(
-                                sid,
-                                a.st.cache.take(),
-                                convo,
-                                a.st.pos,
-                                now_us,
-                            );
+            // One decision point of the shared coordinator policy.
+            for ev in self.core.step()? {
+                self.stats.lock().unwrap().absorb(&ev);
+                match ev {
+                    EngineEvent::TokenEmitted { id, token, n, .. } => {
+                        if let Some(tx) = subs.get(&id) {
+                            let _ = tx.send(TokenEvent::Token { id, token, n });
                         }
                     }
-                    let _ = a.events.send(TokenEvent::Done {
-                        id: a.st.id(),
-                        ttft_ms: ttft,
-                        total_ms: total,
-                        tokens: a.st.tokens.clone(),
-                        cached_prefix: a.st.cached_prefix_len,
-                    });
-                    served += 1;
-                } else {
-                    i += 1;
+                    EngineEvent::TurnDone {
+                        id,
+                        at_us,
+                        arrival_us,
+                        first_token_us,
+                        tokens,
+                        cached_prefix,
+                    } => {
+                        served += 1;
+                        if let Some(tx) = subs.remove(&id) {
+                            let _ = tx.send(TokenEvent::Done {
+                                id,
+                                ttft_ms: (first_token_us - arrival_us) / 1e3,
+                                total_ms: (at_us - arrival_us) / 1e3,
+                                tokens,
+                                cached_prefix,
+                            });
+                        }
+                    }
+                    EngineEvent::Cancelled { id, .. } => {
+                        if let Some(tx) = subs.remove(&id) {
+                            let _ = tx.send(TokenEvent::Cancelled { id });
+                        }
+                    }
+                    EngineEvent::Admitted { .. }
+                    | EngineEvent::Preempted { .. }
+                    | EngineEvent::KvEvicted { .. }
+                    | EngineEvent::SessionEvicted { .. } => {}
                 }
             }
         }
     }
 
-    fn admit(
-        &self,
-        active: &mut Vec<Active>,
-        r: RtRequest,
-        sessions: &mut SessionCachePool,
-        session_ids: &mut SessionRegistry,
-    ) {
-        let req = Request {
-            id: r.id,
-            priority: r.priority,
-            arrival_us: 0.0,
-            prompt: r.prompt,
-            max_new_tokens: r.max_new_tokens,
-            profile: "uds".into(),
-            flow: None,
-        };
-        let _ = r.events.send(TokenEvent::Accepted { id: req.id });
-        // resolve the session tag and claim any retained prefix KV
-        let seed = r.session.as_ref().and_then(|tag| {
-            let sid = session_ids.resolve(tag, sessions);
-            sessions.take_match(sid, &req.prompt)
-        });
-        let st = self.bridge.init_state_with_session(req, self.max_chunk, seed);
-        active.push(Active {
-            st,
-            events: r.events,
-            session: r.session,
-            t_arrive: Instant::now(),
-            t_first: None,
-            sent: 0,
-        });
-    }
-
-    /// Pick and execute exactly one kernel according to the coordinator
-    /// policy: reactive prefill > reactive decode (with proactive
-    /// backfill) > proactive prefill > proactive decode batch.
-    fn run_one_kernel(&self, active: &mut Vec<Active>) -> Result<()> {
-        let pick_prefill = |active: &Vec<Active>, reactive: bool| -> Option<usize> {
-            let mut idxs: Vec<usize> = (0..active.len())
-                .filter(|&i| {
-                    active[i].st.phase == Phase::Prefilling
-                        && active[i].st.is_reactive() == reactive
-                })
-                .collect();
-            idxs.sort_by_key(|&i| active[i].st.id());
-            idxs.first().copied()
-        };
-        let decode_lanes = |active: &Vec<Active>, b_max: usize| -> Vec<usize> {
-            let mut rt: Vec<usize> = (0..active.len())
-                .filter(|&i| {
-                    active[i].st.phase == Phase::Decoding && active[i].st.is_reactive()
-                })
-                .collect();
-            let mut pro: Vec<usize> = (0..active.len())
-                .filter(|&i| {
-                    active[i].st.phase == Phase::Decoding && !active[i].st.is_reactive()
-                })
-                .collect();
-            rt.append(&mut pro);
-            rt.truncate(b_max);
-            rt
-        };
-
-        if let Some(i) = pick_prefill(active, true) {
-            self.prefill_step(&mut active[i])?;
-            return Ok(());
-        }
-        let lanes = {
-            let has_rt_decode = active
-                .iter()
-                .any(|a| a.st.phase == Phase::Decoding && a.st.is_reactive());
-            if has_rt_decode { decode_lanes(active, self.b_max) } else { vec![] }
-        };
-        if !lanes.is_empty() {
-            self.decode_step(active, &lanes)?;
-            return Ok(());
-        }
-        if let Some(i) = pick_prefill(active, false) {
-            self.prefill_step(&mut active[i])?;
-            return Ok(());
-        }
-        let lanes = decode_lanes(active, self.b_max);
-        if !lanes.is_empty() {
-            self.decode_step(active, &lanes)?;
+    fn handle_msg(
+        &mut self,
+        m: RtMsg,
+        registry: &mut SessionRegistry,
+        subs: &mut HashMap<ReqId, Sender<TokenEvent>>,
+    ) -> Result<()> {
+        match m {
+            RtMsg::Submit(r) => {
+                // A session call is a turn of an open-ended flow: the
+                // engine's pool seeds its KV from the tag's previous
+                // call and retains it again afterwards.  delta_start=0
+                // marks the prompt self-contained (no trace stitching).
+                let flow = r.session.as_ref().map(|tag| {
+                    let (flow_id, turn_idx) = registry.resolve(tag);
+                    FlowBinding {
+                        flow_id,
+                        turn_idx,
+                        total_turns: usize::MAX,
+                        think_time_us: 0.0,
+                        delta_start: 0,
+                    }
+                });
+                let _ = r.events.send(TokenEvent::Accepted { id: r.id });
+                subs.insert(r.id, r.events);
+                self.core.submit(Request {
+                    id: r.id,
+                    priority: r.priority,
+                    arrival_us: 0.0, // re-stamped to wall now on submit
+                    prompt: r.prompt,
+                    max_new_tokens: r.max_new_tokens,
+                    profile: "uds".into(),
+                    flow,
+                })?;
+            }
+            RtMsg::Cancel(id) => {
+                // Unknown / already-finished ids are a harmless no-op;
+                // a hit streams a terminal Cancelled on the next step.
+                let _ = self.core.cancel(id)?;
+            }
         }
         Ok(())
-    }
-
-    fn prefill_step(&self, a: &mut Active) -> Result<()> {
-        let done = self.bridge.prefill_kernel_done(&mut a.st)?;
-        if done {
-            a.t_first = Some(Instant::now());
-            self.flush_tokens(a);
-        }
-        Ok(())
-    }
-
-    fn decode_step(&self, active: &mut Vec<Active>, lanes: &[usize]) -> Result<()> {
-        // take the lane states out to build &mut refs
-        let mut sorted: Vec<usize> = lanes.to_vec();
-        sorted.sort_unstable();
-        // split_at_mut-free approach: temporarily move the states
-        let mut taken: Vec<(usize, ReqState)> = vec![];
-        for &i in sorted.iter().rev() {
-            let st = std::mem::replace(
-                &mut active[i].st,
-                // placeholder; restored below
-                self.bridge.init_state(
-                    Request {
-                        id: u64::MAX,
-                        priority: Priority::Proactive,
-                        arrival_us: 0.0,
-                        prompt: vec![0],
-                        max_new_tokens: 1,
-                        profile: "placeholder".into(),
-                        flow: None,
-                    },
-                    self.max_chunk,
-                ),
-            );
-            taken.push((i, st));
-        }
-        {
-            let mut refs: Vec<&mut ReqState> =
-                taken.iter_mut().map(|(_, s)| s).collect();
-            self.bridge.decode_iter_done(&mut refs)?;
-        }
-        for (i, st) in taken {
-            active[i].st = st;
-            self.flush_tokens(&mut active[i]);
-        }
-        Ok(())
-    }
-
-    fn flush_tokens(&self, a: &mut Active) {
-        while a.sent < a.st.tokens.len() {
-            let tok = a.st.tokens[a.sent];
-            a.sent += 1;
-            let _ = a.events.send(TokenEvent::Token {
-                id: a.st.id(),
-                token: tok,
-                n: a.sent,
-            });
-        }
     }
 }
 
-/// Convenience used by tests and the UDS layer: run a scheduler on its
-/// own thread, returning the request sender.
-pub fn spawn(bridge: Arc<ExecBridge>, b_max: usize) -> Sender<RtRequest> {
+/// Convenience used by tests and the UDS layer: run a serving loop on
+/// its own thread, returning the message sender and the live stats.
+pub fn spawn(
+    bridge: Arc<ExecBridge>,
+    soc: SocConfig,
+    sched: SchedulerConfig,
+) -> (Sender<RtMsg>, Arc<Mutex<ReportAccumulator>>) {
     let (tx, rx) = channel();
+    let sched = RtScheduler::new(bridge, soc, sched);
+    let stats = sched.stats();
     std::thread::spawn(move || {
-        let sched = RtScheduler::new(bridge, b_max);
         let _ = sched.serve(rx);
     });
-    tx
+    (tx, stats)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::llama32_3b;
+    use crate::config::{default_soc, llama32_3b};
 
     fn bridge() -> Arc<ExecBridge> {
         let mut geo = llama32_3b();
@@ -377,42 +289,46 @@ mod tests {
         Arc::new(ExecBridge::synthetic(geo))
     }
 
+    fn spawn_default() -> (Sender<RtMsg>, Arc<Mutex<ReportAccumulator>>) {
+        spawn(bridge(), default_soc(), SchedulerConfig::default())
+    }
+
     fn submit(
-        tx: &Sender<RtRequest>,
+        tx: &Sender<RtMsg>,
         id: u64,
         priority: Priority,
         plen: usize,
         maxnew: usize,
     ) -> Receiver<TokenEvent> {
         let (etx, erx) = channel();
-        tx.send(RtRequest {
+        tx.send(RtMsg::Submit(RtRequest {
             id,
             priority,
             prompt: vec![1; plen],
             max_new_tokens: maxnew,
             session: None,
             events: etx,
-        })
+        }))
         .unwrap();
         erx
     }
 
     fn submit_session(
-        tx: &Sender<RtRequest>,
+        tx: &Sender<RtMsg>,
         id: u64,
         session: &str,
         prompt: Vec<i32>,
         maxnew: usize,
     ) -> Receiver<TokenEvent> {
         let (etx, erx) = channel();
-        tx.send(RtRequest {
+        tx.send(RtMsg::Submit(RtRequest {
             id,
             priority: Priority::Reactive,
             prompt,
             max_new_tokens: maxnew,
             session: Some(session.into()),
             events: etx,
-        })
+        }))
         .unwrap();
         erx
     }
@@ -428,7 +344,7 @@ mod tests {
 
     #[test]
     fn serves_a_request_with_streaming() {
-        let tx = spawn(bridge(), 8);
+        let (tx, _) = spawn_default();
         let erx = submit(&tx, 1, Priority::Reactive, 100, 5);
         drop(tx);
         let events: Vec<TokenEvent> = erx.iter().collect();
@@ -439,10 +355,10 @@ mod tests {
             .collect();
         assert_eq!(toks.len(), 5);
         match events.last().unwrap() {
-            TokenEvent::Done { id, tokens, ttft_ms, .. } => {
+            TokenEvent::Done { id, tokens, ttft_ms, total_ms, .. } => {
                 assert_eq!(*id, 1);
                 assert_eq!(tokens.len(), 5);
-                assert!(*ttft_ms >= 0.0);
+                assert!(*ttft_ms >= 0.0 && *total_ms >= *ttft_ms);
             }
             e => panic!("expected Done, got {e:?}"),
         }
@@ -452,7 +368,7 @@ mod tests {
     fn session_calls_reuse_the_conversation_prefix() {
         // call 1 establishes the session; call 2 extends the exact
         // conversation (prompt + generated tokens) with new user input
-        let tx = spawn(bridge(), 8);
+        let (tx, stats) = spawn_default();
         let prompt1: Vec<i32> = vec![5; 40];
         let erx1 = submit_session(&tx, 1, "chat-1", prompt1.clone(), 4);
         let ev1: Vec<TokenEvent> = erx1.iter().collect();
@@ -475,30 +391,37 @@ mod tests {
         drop(tx);
         let (_, cached3) = done_of(&erx3.iter().collect::<Vec<_>>());
         assert_eq!(cached3, 0);
+        // stats accumulated incrementally from the event stream
+        let s = stats.lock().unwrap();
+        assert_eq!(s.served, 3);
+        assert_eq!(s.tokens, 4 + 3 + 2);
+        assert_eq!(s.reused_prefix_tokens, 43);
     }
 
     #[test]
     fn session_registry_is_bounded_and_ids_are_stable() {
         let mut reg = SessionRegistry::default();
-        let mut pool = SessionCachePool::new(4);
-        let a = reg.resolve("a", &mut pool);
-        assert_eq!(reg.resolve("a", &mut pool), a, "same tag, same id");
-        let b = reg.resolve("b", &mut pool);
+        let (a, t0) = reg.resolve("a");
+        assert_eq!(t0, 0);
+        let (a2, t1) = reg.resolve("a");
+        assert_eq!((a2, t1), (a, 1), "same tag, same id, next turn");
+        let (b, _) = reg.resolve("b");
         assert_ne!(a, b);
         // overflow the registry: oldest tags are forgotten...
         for i in 0..SESSION_TAGS_MAX {
-            reg.resolve(&format!("t{i}"), &mut pool);
+            reg.resolve(&format!("t{i}"));
         }
         assert!(reg.get("a").is_none(), "oldest tag evicted");
         // ...and ids are monotonic, so a re-registered tag can never
         // alias another session's retained cache
-        let a2 = reg.resolve("a", &mut pool);
-        assert!(a2 > b);
+        let (a3, t) = reg.resolve("a");
+        assert!(a3 > b);
+        assert_eq!(t, 0, "a forgotten tag starts cold");
     }
 
     #[test]
     fn diverged_session_prompt_recomputes() {
-        let tx = spawn(bridge(), 8);
+        let (tx, _) = spawn_default();
         let erx1 = submit_session(&tx, 1, "s", vec![5; 30], 3);
         let _ = erx1.iter().collect::<Vec<_>>();
         // same session, unrelated prompt → no usable prefix
@@ -510,7 +433,7 @@ mod tests {
 
     #[test]
     fn serves_concurrent_mixed_requests() {
-        let tx = spawn(bridge(), 8);
+        let (tx, _) = spawn_default();
         let rx1 = submit(&tx, 1, Priority::Proactive, 200, 8);
         let rx2 = submit(&tx, 2, Priority::Reactive, 64, 4);
         let rx3 = submit(&tx, 3, Priority::Proactive, 64, 4);
@@ -522,5 +445,51 @@ mod tests {
                 "{events:?}"
             );
         }
+    }
+
+    #[test]
+    fn cancel_aborts_an_inflight_generation() {
+        let (tx, stats) = spawn_default();
+        // a generation long enough that the cancel always lands first
+        let erx = submit(&tx, 1, Priority::Reactive, 64, 200_000);
+        tx.send(RtMsg::Cancel(1)).unwrap();
+        drop(tx);
+        let events: Vec<TokenEvent> = erx.iter().collect();
+        assert!(matches!(events[0], TokenEvent::Accepted { id: 1 }));
+        assert!(
+            matches!(events.last().unwrap(), TokenEvent::Cancelled { id: 1 }),
+            "terminal frame must be Cancelled, got {:?}",
+            events.last()
+        );
+        assert_eq!(stats.lock().unwrap().cancelled, 1);
+    }
+
+    #[test]
+    fn cancel_of_unknown_id_is_harmless() {
+        let (tx, _) = spawn_default();
+        tx.send(RtMsg::Cancel(999)).unwrap();
+        let erx = submit(&tx, 1, Priority::Reactive, 64, 3);
+        drop(tx);
+        let events: Vec<TokenEvent> = erx.iter().collect();
+        assert!(matches!(events.last().unwrap(), TokenEvent::Done { .. }));
+    }
+
+    #[test]
+    fn session_capacity_zero_disables_serving_reuse() {
+        // the config knob the simulated coordinator honors now reaches
+        // the server too
+        let mut sched = SchedulerConfig::default();
+        sched.session_capacity = 0;
+        let (tx, _) = spawn(bridge(), default_soc(), sched);
+        let p: Vec<i32> = vec![5; 30];
+        let erx1 = submit_session(&tx, 1, "s", p.clone(), 3);
+        let (toks1, _) = done_of(&erx1.iter().collect::<Vec<_>>());
+        let mut p2 = p;
+        p2.extend(&toks1);
+        p2.extend(vec![6; 8]);
+        let erx2 = submit_session(&tx, 2, "s", p2, 2);
+        drop(tx);
+        let (_, cached) = done_of(&erx2.iter().collect::<Vec<_>>());
+        assert_eq!(cached, 0, "capacity 0 must disable retention");
     }
 }

@@ -1,37 +1,54 @@
-//! Unix-Domain-Socket JSON-lines frontend (paper §7) over the real-time
-//! scheduler, plus a small blocking client helper.
+//! Unix-Domain-Socket JSON-lines frontend (paper §7) over the
+//! real-time serving loop, plus a small blocking client helper.
+//!
+//! A connection is full-duplex: `generate` streams its frames from a
+//! writer thread while the reader keeps accepting lines, so a client
+//! can `cancel` an in-flight generation (or pipeline several
+//! generations) on the same connection.
 
+use std::collections::HashSet;
 use std::io::{BufRead, BufReader, Write};
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::{Path, PathBuf};
-use std::sync::Arc;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Sender, channel};
+use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result, bail};
 
+use crate::config::{SchedulerConfig, SocConfig};
 use crate::engine::ExecBridge;
+use crate::metrics::ReportAccumulator;
 use crate::util::json::Json;
 use crate::workload::Priority;
 
-use super::rt::{RtRequest, TokenEvent, spawn};
+use super::rt::{RtMsg, RtRequest, TokenEvent, spawn};
 
 /// The UDS server: accepts connections, parses request lines, streams
 /// responses.
 pub struct Server {
     socket_path: PathBuf,
-    sched_tx: Sender<RtRequest>,
+    sched_tx: Sender<RtMsg>,
     next_id: Arc<AtomicU64>,
-    served: Arc<AtomicU64>,
+    stats: Arc<Mutex<ReportAccumulator>>,
 }
 
 impl Server {
-    pub fn new(bridge: Arc<ExecBridge>, socket_path: impl AsRef<Path>, b_max: usize) -> Self {
+    /// Stand the serving loop up on the caller's SoC + scheduler
+    /// configuration — the same knobs (`b_max`, `session_capacity`,
+    /// preemption/backfill, …) the simulated coordinator honors.
+    pub fn new(
+        bridge: Arc<ExecBridge>,
+        socket_path: impl AsRef<Path>,
+        soc: SocConfig,
+        sched: SchedulerConfig,
+    ) -> Self {
+        let (sched_tx, stats) = spawn(bridge, soc, sched);
         Self {
             socket_path: socket_path.as_ref().to_path_buf(),
-            sched_tx: spawn(bridge, b_max),
+            sched_tx,
             next_id: Arc::new(AtomicU64::new(1)),
-            served: Arc::new(AtomicU64::new(0)),
+            stats,
         }
     }
 
@@ -45,9 +62,9 @@ impl Server {
             let stream = stream?;
             let tx = self.sched_tx.clone();
             let next_id = self.next_id.clone();
-            let served = self.served.clone();
+            let stats = self.stats.clone();
             std::thread::spawn(move || {
-                if let Err(e) = handle_conn(stream, tx, next_id, served) {
+                if let Err(e) = handle_conn(stream, tx, next_id, stats) {
                     eprintln!("connection error: {e:#}");
                 }
             });
@@ -58,12 +75,21 @@ impl Server {
 
 fn handle_conn(
     stream: UnixStream,
-    tx: Sender<RtRequest>,
+    tx: Sender<RtMsg>,
     next_id: Arc<AtomicU64>,
-    served: Arc<AtomicU64>,
+    stats: Arc<Mutex<ReportAccumulator>>,
 ) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
-    let mut out = stream;
+    // frames from concurrent generations interleave line-atomically
+    let out = Arc::new(Mutex::new(stream));
+    // ids issued on THIS connection — a client may only cancel its own
+    // generations (ids are globally sequential, so without this check
+    // any connection could abort any other's work)
+    let mut my_ids: HashSet<u64> = HashSet::new();
+    let say = |j: Json| -> Result<()> {
+        writeln!(out.lock().unwrap(), "{j}")?;
+        Ok(())
+    };
     let mut line = String::new();
     loop {
         line.clear();
@@ -77,11 +103,7 @@ fn handle_conn(
             Ok(m) => m,
             Err(e) => {
                 // malformed-request resilience (§6.5 error handling)
-                writeln!(
-                    out,
-                    "{}",
-                    Json::obj().set("type", "error").set("message", format!("{e:#}"))
-                )?;
+                say(Json::obj().set("type", "error").set("message", format!("{e:#}")))?;
                 continue;
             }
         };
@@ -90,49 +112,68 @@ fn handle_conn(
                 let id = next_id.fetch_add(1, Ordering::SeqCst);
                 match submit_generate(&tx, &msg, id) {
                     Ok(erx) => {
-                        for ev in erx.iter() {
-                            writeln!(out, "{}", event_json(&ev))?;
-                            if matches!(ev, TokenEvent::Done { .. } | TokenEvent::Error { .. }) {
-                                served.fetch_add(1, Ordering::SeqCst);
-                                break;
+                        my_ids.insert(id);
+                        // stream from a writer thread so this reader
+                        // stays free for cancel / further generates
+                        let out = out.clone();
+                        std::thread::spawn(move || {
+                            for ev in erx.iter() {
+                                let terminal = matches!(
+                                    ev,
+                                    TokenEvent::Done { .. }
+                                        | TokenEvent::Cancelled { .. }
+                                        | TokenEvent::Error { .. }
+                                );
+                                let mut o = out.lock().unwrap();
+                                if writeln!(o, "{}", event_json(&ev)).is_err() {
+                                    break;
+                                }
+                                if terminal {
+                                    break;
+                                }
                             }
-                        }
+                        });
                     }
                     Err(e) => {
-                        writeln!(
-                            out,
-                            "{}",
-                            Json::obj()
-                                .set("type", "error")
-                                .set("message", format!("{e:#}"))
-                        )?;
+                        say(Json::obj()
+                            .set("type", "error")
+                            .set("message", format!("{e:#}")))?;
                     }
                 }
             }
+            Some("cancel") => match msg.get("id").and_then(|v| v.as_usize()) {
+                Ok(id) if my_ids.contains(&(id as u64)) => {
+                    let _ = tx.send(RtMsg::Cancel(id as u64));
+                    // the terminal done.cancelled frame arrives on the
+                    // generation's own stream; ack the verb here
+                    say(Json::obj().set("type", "cancel.ack").set("id", id))?;
+                }
+                Ok(id) => {
+                    say(Json::obj()
+                        .set("type", "error")
+                        .set("message", format!("no generation {id} on this connection")))?;
+                }
+                Err(e) => {
+                    say(Json::obj()
+                        .set("type", "error")
+                        .set("message", format!("cancel needs an id: {e:#}")))?;
+                }
+            },
             Some("stats") => {
-                writeln!(
-                    out,
-                    "{}",
-                    Json::obj()
-                        .set("type", "stats")
-                        .set("served", served.load(Ordering::SeqCst) as usize)
-                )?;
+                let j = stats.lock().unwrap().to_json().set("type", "stats");
+                say(j)?;
             }
             other => {
-                writeln!(
-                    out,
-                    "{}",
-                    Json::obj()
-                        .set("type", "error")
-                        .set("message", format!("unknown type {other:?}"))
-                )?;
+                say(Json::obj()
+                    .set("type", "error")
+                    .set("message", format!("unknown type {other:?}")))?;
             }
         }
     }
 }
 
 fn submit_generate(
-    tx: &Sender<RtRequest>,
+    tx: &Sender<RtMsg>,
     msg: &Json,
     id: u64,
 ) -> Result<std::sync::mpsc::Receiver<TokenEvent>> {
@@ -155,8 +196,15 @@ fn submit_generate(
         .and_then(|s| s.as_str().ok())
         .map(|s| s.to_string());
     let (etx, erx) = channel();
-    tx.send(RtRequest { id, priority, prompt, max_new_tokens, session, events: etx })
-        .map_err(|_| anyhow::anyhow!("scheduler is down"))?;
+    tx.send(RtMsg::Submit(RtRequest {
+        id,
+        priority,
+        prompt,
+        max_new_tokens,
+        session,
+        events: etx,
+    }))
+    .map_err(|_| anyhow::anyhow!("scheduler is down"))?;
     Ok(erx)
 }
 
@@ -177,6 +225,9 @@ fn event_json(ev: &TokenEvent) -> Json {
             .set("total_ms", *total_ms)
             .set("tokens", tokens.clone())
             .set("cached_prefix", *cached_prefix),
+        TokenEvent::Cancelled { id } => Json::obj()
+            .set("type", "done.cancelled")
+            .set("id", *id as usize),
         TokenEvent::Error { id, message } => Json::obj()
             .set("type", "error")
             .set("id", *id as usize)
@@ -244,6 +295,7 @@ pub fn client_generate_session(
                         .unwrap_or(Ok(0))?,
                 });
             }
+            "done.cancelled" => bail!("generation cancelled"),
             "error" => bail!("server error: {}", msg.get("message")?.as_str()?),
             _ => {}
         }
@@ -254,7 +306,7 @@ pub fn client_generate_session(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::llama32_3b;
+    use crate::config::{default_soc, llama32_3b};
 
     fn tmp_socket(name: &str) -> PathBuf {
         std::env::temp_dir().join(format!("agent-xpu-test-{name}-{}.sock", std::process::id()))
@@ -265,7 +317,8 @@ mod tests {
         geo.n_layers = 2;
         let bridge = Arc::new(ExecBridge::synthetic(geo));
         let path = tmp_socket(name);
-        let server = Server::new(bridge, &path, 8);
+        let server =
+            Server::new(bridge, &path, default_soc(), SchedulerConfig::default());
         let p = path.clone();
         std::thread::spawn(move || {
             let _ = server.run();
@@ -342,6 +395,65 @@ mod tests {
         // untagged calls never reuse
         let (toks, _, _) = client_generate(&path, &next, Priority::Reactive, 2).unwrap();
         assert_eq!(toks.len(), 2);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn uds_cancel_verb_aborts_and_frees_the_generation() {
+        let path = start_server("cancel");
+        let stream = UnixStream::connect(&path).unwrap();
+        let mut out = stream.try_clone().unwrap();
+        // a generation long enough that the cancel always lands first
+        writeln!(
+            out,
+            "{}",
+            Json::obj()
+                .set("type", "generate")
+                .set("prompt", vec![1i32; 64])
+                .set("max_new_tokens", 200_000usize)
+        )
+        .unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let acc = Json::parse(&line).unwrap();
+        assert_eq!(acc.get("type").unwrap().as_str().unwrap(), "accepted");
+        let id = acc.get("id").unwrap().as_usize().unwrap();
+        writeln!(out, "{}", Json::obj().set("type", "cancel").set("id", id)).unwrap();
+        // read until the terminal frame: it must be done.cancelled
+        loop {
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            let msg = Json::parse(&line).unwrap();
+            match msg.get("type").unwrap().as_str().unwrap() {
+                "done.cancelled" => {
+                    assert_eq!(msg.get("id").unwrap().as_usize().unwrap(), id);
+                    break;
+                }
+                "done" => panic!("generation finished before the cancel landed"),
+                _ => {} // token / cancel.ack frames
+            }
+        }
+        // the connection (and the server) keep working afterwards
+        let (toks, _, _) = client_generate(&path, &[1, 2, 3], Priority::Reactive, 2).unwrap();
+        assert_eq!(toks.len(), 2);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn uds_stats_reports_accumulated_serving_counters() {
+        let path = start_server("stats");
+        let _ = client_generate(&path, &[1, 2, 3, 4], Priority::Reactive, 3).unwrap();
+        let stream = UnixStream::connect(&path).unwrap();
+        let mut out = stream.try_clone().unwrap();
+        writeln!(out, "{}", Json::obj().set("type", "stats")).unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let msg = Json::parse(&line).unwrap();
+        assert_eq!(msg.get("type").unwrap().as_str().unwrap(), "stats");
+        assert!(msg.get("served").unwrap().as_usize().unwrap() >= 1);
+        assert!(msg.get("tokens").unwrap().as_usize().unwrap() >= 3);
         let _ = std::fs::remove_file(path);
     }
 

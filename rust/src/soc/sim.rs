@@ -183,6 +183,13 @@ impl SocSim {
         self.slots[xpu].take().map(|r| r.id)
     }
 
+    /// Which XPU `run` is executing on, if it is still in flight.
+    pub fn xpu_of(&self, run: RunId) -> Option<usize> {
+        self.slots
+            .iter()
+            .position(|s| s.as_ref().map(|r| r.id == run).unwrap_or(false))
+    }
+
     /// Earliest time any running kernel could finish (µs from now).
     pub fn next_event_in(&self) -> Option<f64> {
         let s = self.scale();

@@ -1,0 +1,318 @@
+//! The streaming EngineCore API (DESIGN.md §7): incremental
+//! submission, the event stream, cancellation in every lifecycle
+//! stage, and wall-clock runs — the surface the real-time server
+//! drives, exercised here deterministically on the virtual clock.
+
+use agent_xpu::baselines::{CpuFcfsEngine, Scheme, SingleXpuEngine};
+use agent_xpu::config::{ModelGeometry, SchedulerConfig, default_soc, llama32_3b};
+use agent_xpu::coordinator::AgentXpuEngine;
+use agent_xpu::engine::{Engine, EngineClock, EngineEvent};
+use agent_xpu::workload::{FlowBinding, Priority, Request};
+
+fn geo() -> ModelGeometry {
+    let mut g = llama32_3b();
+    g.n_layers = 3;
+    g
+}
+
+fn agent() -> AgentXpuEngine {
+    AgentXpuEngine::synthetic(geo(), default_soc(), SchedulerConfig::default())
+}
+
+fn req(id: u64, prio: Priority, arrival: f64, plen: usize, out: usize) -> Request {
+    Request {
+        id,
+        priority: prio,
+        arrival_us: arrival,
+        prompt: vec![1; plen],
+        max_new_tokens: out,
+        profile: "core".into(),
+        flow: None,
+    }
+}
+
+fn flow_turns(flow_id: u64, first_id: u64) -> Vec<Request> {
+    let (p0, out, delta) = (80usize, 4usize, 30usize);
+    let mut turns = vec![];
+    let mut prompt = vec![1i32; p0];
+    for k in 0..3usize {
+        if k > 0 {
+            let ds = prompt.len() + out;
+            prompt = vec![2; ds];
+            prompt.extend(vec![1; delta]);
+        }
+        turns.push(Request {
+            id: first_id + k as u64,
+            priority: Priority::Reactive,
+            arrival_us: 0.0,
+            prompt: prompt.clone(),
+            max_new_tokens: out,
+            profile: "flow".into(),
+            flow: Some(FlowBinding {
+                flow_id,
+                turn_idx: k,
+                total_turns: 3,
+                think_time_us: if k == 0 { 0.0 } else { 10_000.0 },
+                delta_start: if k == 0 { 0 } else { prompt.len() - delta },
+            }),
+        });
+    }
+    turns
+}
+
+#[test]
+fn event_stream_orders_each_request_lifecycle() {
+    let mut e = agent();
+    e.start(EngineClock::Virtual).unwrap();
+    e.submit(req(1, Priority::Reactive, 0.0, 120, 4)).unwrap();
+    e.submit(req(2, Priority::Proactive, 5_000.0, 200, 3)).unwrap();
+    let events = e.drain().unwrap();
+    let rep = e.finish().unwrap();
+    assert_eq!(rep.reqs.iter().filter(|m| m.finished()).count(), 2);
+
+    for id in [1u64, 2] {
+        let mine: Vec<&EngineEvent> =
+            events.iter().filter(|e| e.req_id() == Some(id)).collect();
+        assert!(
+            matches!(mine.first().unwrap(), EngineEvent::Admitted { .. }),
+            "req {id} must admit first"
+        );
+        assert!(
+            matches!(mine.last().unwrap(), EngineEvent::TurnDone { .. }),
+            "req {id} must finish last"
+        );
+        assert!(mine.last().unwrap().is_terminal());
+        let toks: Vec<_> = mine
+            .iter()
+            .filter(|e| matches!(e, EngineEvent::TokenEmitted { .. }))
+            .collect();
+        let want = rep.reqs.iter().find(|m| m.id == id).unwrap().output_tokens;
+        assert_eq!(toks.len(), want, "req {id} streams every token");
+        // token ordinals count up from 1
+        for (i, t) in toks.iter().enumerate() {
+            match t {
+                EngineEvent::TokenEmitted { n, .. } => assert_eq!(*n, i + 1),
+                _ => unreachable!(),
+            }
+        }
+        // timestamps are monotone along the lifecycle
+        let times: Vec<f64> = mine
+            .iter()
+            .map(|e| match e {
+                EngineEvent::Admitted { at_us, .. }
+                | EngineEvent::TokenEmitted { at_us, .. }
+                | EngineEvent::TurnDone { at_us, .. }
+                | EngineEvent::Preempted { at_us, .. }
+                | EngineEvent::KvEvicted { at_us, .. }
+                | EngineEvent::SessionEvicted { at_us, .. }
+                | EngineEvent::Cancelled { at_us, .. } => *at_us,
+            })
+            .collect();
+        for w in times.windows(2) {
+            assert!(w[1] >= w[0], "req {id}: event timestamps must be monotone");
+        }
+    }
+}
+
+#[test]
+fn submissions_can_arrive_mid_run() {
+    let mut e = agent();
+    e.start(EngineClock::Virtual).unwrap();
+    e.submit(req(1, Priority::Proactive, 0.0, 300, 6)).unwrap();
+    // advance a few decision points, then feed more work online
+    let mut seen = vec![];
+    for _ in 0..4 {
+        seen.extend(e.step().unwrap());
+    }
+    assert!(seen.iter().any(|ev| matches!(ev, EngineEvent::Admitted { id: 1, .. })));
+    e.submit(req(2, Priority::Reactive, 0.0, 100, 3)).unwrap();
+    e.drain().unwrap();
+    let rep = e.finish().unwrap();
+    assert_eq!(rep.reqs.iter().filter(|m| m.finished()).count(), 2);
+}
+
+#[test]
+fn cancel_between_steps_frees_the_request_and_the_rest_completes() {
+    let mut e = agent();
+    e.start(EngineClock::Virtual).unwrap();
+    e.submit(req(1, Priority::Proactive, 0.0, 600, 30)).unwrap();
+    e.submit(req(2, Priority::Proactive, 0.0, 600, 30)).unwrap();
+    // run until both are admitted and in flight
+    let mut events = vec![];
+    while events.iter().filter(|ev| matches!(ev, EngineEvent::Admitted { .. })).count() < 2
+    {
+        events.extend(e.step().unwrap());
+    }
+    assert!(e.cancel(2).unwrap(), "in-flight request is cancellable");
+    assert!(!e.cancel(2).unwrap(), "cancel is idempotent");
+    events.extend(e.drain().unwrap());
+    let rep = e.finish().unwrap();
+    assert_eq!(rep.cancellations, 1);
+    assert!(events.iter().any(|ev| matches!(ev, EngineEvent::Cancelled { id: 2, .. })));
+    let m1 = rep.reqs.iter().find(|m| m.id == 1).unwrap();
+    let m2 = rep.reqs.iter().find(|m| m.id == 2).unwrap();
+    assert!(m1.finished() && m1.output_tokens == 30, "survivor unaffected");
+    assert!(m2.cancelled && !m2.finished());
+    // no TurnDone ever follows a cancel
+    assert!(!events.iter().any(|ev| matches!(ev, EngineEvent::TurnDone { id: 2, .. })));
+}
+
+#[test]
+fn cancel_mid_decode_retires_at_the_iteration_boundary() {
+    let mut e = agent();
+    e.start(EngineClock::Virtual).unwrap();
+    e.submit(req(1, Priority::Reactive, 0.0, 64, 40)).unwrap();
+    // run until decode is underway (some tokens out), then cancel
+    let mut events = vec![];
+    while events
+        .iter()
+        .filter(|ev| matches!(ev, EngineEvent::TokenEmitted { id: 1, .. }))
+        .count()
+        < 3
+    {
+        events.extend(e.step().unwrap());
+    }
+    assert!(e.cancel(1).unwrap());
+    events.extend(e.drain().unwrap());
+    let rep = e.finish().unwrap();
+    let m = &rep.reqs[0];
+    assert!(m.cancelled && !m.finished());
+    assert!(m.output_tokens < 40, "cancel stopped generation early");
+    assert_eq!(rep.cancellations, 1);
+}
+
+#[test]
+fn cancelling_a_held_flow_turn_kills_its_placeholder_successors() {
+    let mut e = agent();
+    e.start(EngineClock::Virtual).unwrap();
+    for r in flow_turns(9, 20) {
+        e.submit(r).unwrap();
+    }
+    // turn 1 (id 21) is still held behind turn 0
+    assert!(e.cancel(21).unwrap());
+    let events = e.drain().unwrap();
+    let rep = e.finish().unwrap();
+    assert!(rep.reqs.iter().find(|m| m.id == 20).unwrap().finished());
+    assert!(rep.reqs.iter().find(|m| m.id == 21).unwrap().cancelled);
+    assert!(
+        rep.reqs.iter().find(|m| m.id == 22).unwrap().cancelled,
+        "turn 2's placeholder prompt cannot exist without turn 1"
+    );
+    assert_eq!(rep.cancellations, 2);
+    assert_eq!(
+        events.iter().filter(|ev| matches!(ev, EngineEvent::TurnDone { .. })).count(),
+        1
+    );
+}
+
+#[test]
+fn baselines_support_cancel_through_the_same_api() {
+    let mk: Vec<Box<dyn Fn() -> Box<dyn Engine>>> = vec![
+        Box::new(|| -> Box<dyn Engine> {
+            Box::new(CpuFcfsEngine::new(geo(), default_soc(), 4))
+        }),
+        Box::new(|| -> Box<dyn Engine> {
+            Box::new(SingleXpuEngine::new(geo(), default_soc(), Scheme::TimeShare))
+        }),
+    ];
+    for b in &mk {
+        let mut e = b();
+        let name = e.name();
+        e.start(EngineClock::Virtual).unwrap();
+        e.submit(req(1, Priority::Proactive, 0.0, 200, 5)).unwrap();
+        e.submit(req(2, Priority::Proactive, 0.0, 200, 5)).unwrap();
+        assert!(e.cancel(2).unwrap(), "{name}");
+        e.drain().unwrap();
+        let rep = e.finish().unwrap();
+        assert_eq!(rep.cancellations, 1, "{name}");
+        assert!(rep.reqs.iter().find(|m| m.id == 1).unwrap().finished(), "{name}");
+        assert!(rep.reqs.iter().find(|m| m.id == 2).unwrap().cancelled, "{name}");
+    }
+}
+
+#[test]
+fn wall_clock_runs_serve_the_same_policy_with_measured_time() {
+    let mut e = agent();
+    e.start(EngineClock::wall()).unwrap();
+    e.submit(req(1, Priority::Reactive, 0.0, 120, 4)).unwrap();
+    e.submit(req(2, Priority::Proactive, 0.0, 200, 3)).unwrap();
+    let events = e.drain().unwrap();
+    assert!(!e.has_work(), "idle after drain");
+    let rep = e.finish().unwrap();
+    assert_eq!(rep.reqs.iter().filter(|m| m.finished()).count(), 2);
+    for m in &rep.reqs {
+        // wall timestamps: measured, ordered, non-negative
+        assert!(m.arrival_us >= 0.0);
+        assert!(m.first_token_us.unwrap() >= m.arrival_us);
+        assert!(m.done_us.unwrap() >= m.first_token_us.unwrap());
+    }
+    assert!(rep.makespan_us >= 0.0);
+    assert_eq!(
+        events.iter().filter(|ev| matches!(ev, EngineEvent::TurnDone { .. })).count(),
+        2
+    );
+}
+
+#[test]
+fn wall_clock_session_flows_reuse_kv_across_online_turns() {
+    // the serving pattern: a continuation turn submitted only after its
+    // predecessor completed, carrying the real conversation
+    let mut e = agent();
+    e.start(EngineClock::wall()).unwrap();
+    let p1: Vec<i32> = vec![5; 60];
+    e.submit(Request {
+        id: 1,
+        priority: Priority::Reactive,
+        arrival_us: 0.0,
+        prompt: p1.clone(),
+        max_new_tokens: 4,
+        profile: "sess".into(),
+        flow: Some(FlowBinding {
+            flow_id: 7,
+            turn_idx: 0,
+            total_turns: usize::MAX,
+            think_time_us: 0.0,
+            delta_start: 0,
+        }),
+    })
+    .unwrap();
+    let events = e.drain().unwrap();
+    let toks: Vec<i32> = events
+        .iter()
+        .filter_map(|ev| match ev {
+            EngineEvent::TokenEmitted { id: 1, token, .. } => Some(*token),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(toks.len(), 4);
+    // turn 2 extends the actual conversation
+    let mut p2 = p1;
+    p2.extend(&toks);
+    p2.extend(vec![6; 12]);
+    e.submit(Request {
+        id: 2,
+        priority: Priority::Reactive,
+        arrival_us: 0.0,
+        prompt: p2,
+        max_new_tokens: 3,
+        profile: "sess".into(),
+        flow: Some(FlowBinding {
+            flow_id: 7,
+            turn_idx: 1,
+            total_turns: usize::MAX,
+            think_time_us: 0.0,
+            delta_start: 0,
+        }),
+    })
+    .unwrap();
+    let events2 = e.drain().unwrap();
+    let done2 = events2
+        .iter()
+        .find_map(|ev| match ev {
+            EngineEvent::TurnDone { id: 2, cached_prefix, .. } => Some(*cached_prefix),
+            _ => None,
+        })
+        .unwrap();
+    // retained KV covers the 60-token prompt + 3 of the 4 reply tokens
+    assert_eq!(done2, 63, "online continuation must reuse the session KV");
+}

@@ -89,19 +89,23 @@ fn scheduled_execution_matches_sequential_generation() {
     let rt2 = Arc::new(Runtime::load(&dir).unwrap());
     let bridge = Arc::new(ExecBridge::real(Arc::new(ModelExecutor::new(rt2))));
     let (tx, rx) = std::sync::mpsc::channel();
-    let sched = agent_xpu::server::RtScheduler::new(bridge, 8);
+    let sched = agent_xpu::server::RtScheduler::new(
+        bridge,
+        default_soc(),
+        SchedulerConfig::default(),
+    );
     let handles: Vec<std::sync::mpsc::Receiver<agent_xpu::server::TokenEvent>> = trace
         .iter()
         .map(|r| {
             let (etx, erx) = std::sync::mpsc::channel();
-            tx.send(agent_xpu::server::RtRequest {
+            tx.send(agent_xpu::server::RtMsg::Submit(agent_xpu::server::RtRequest {
                 id: r.id,
                 priority: r.priority,
                 prompt: r.prompt.clone(),
                 max_new_tokens: r.max_new_tokens,
                 session: None,
                 events: etx,
-            })
+            }))
             .unwrap();
             erx
         })
@@ -134,7 +138,8 @@ fn uds_server_serves_real_model() {
     let socket = std::env::temp_dir()
         .join(format!("agent-xpu-it-{}.sock", std::process::id()));
     let bridge = Arc::new(ExecBridge::real(Arc::new(ModelExecutor::new(rt))));
-    let server = Server::new(bridge, &socket, 8);
+    let server =
+        Server::new(bridge, &socket, default_soc(), SchedulerConfig::default());
     let s = socket.clone();
     std::thread::spawn(move || {
         let _ = server.run();

@@ -16,7 +16,7 @@
 use agent_xpu::baselines::{CpuFcfsEngine, Scheme, SingleXpuEngine};
 use agent_xpu::config::{ModelGeometry, SchedulerConfig, default_soc, llama32_3b};
 use agent_xpu::coordinator::AgentXpuEngine;
-use agent_xpu::engine::Engine;
+use agent_xpu::engine::{Engine, EngineClock, EngineEvent};
 use agent_xpu::heg::plan_chunks;
 use agent_xpu::metrics::RunReport;
 use agent_xpu::util::rng::Rng;
@@ -137,6 +137,86 @@ fn schedules_are_deterministic_per_seed() {
         for (x, y) in a.reqs.iter().zip(&b.reqs) {
             assert_eq!(x.first_token_us, y.first_token_us, "seed {seed} req {}", x.id);
             assert_eq!(x.done_us, y.done_us);
+        }
+    }
+}
+
+/// §6 determinism, extended across the API redesign: the incremental
+/// `submit`/`step` loop must reproduce the batch `run()` RunReport
+/// bit-for-bit on every engine family — the real-time server drives
+/// the same code path, so this is the serving/simulation parity proof.
+#[test]
+fn incremental_submit_step_matches_batch_run_bit_for_bit() {
+    type Mk = Box<dyn Fn() -> Box<dyn Engine>>;
+    let builders: Vec<Mk> = vec![
+        Box::new(|| -> Box<dyn Engine> {
+            Box::new(AgentXpuEngine::synthetic(
+                geo(),
+                default_soc(),
+                SchedulerConfig::default(),
+            ))
+        }),
+        Box::new(|| -> Box<dyn Engine> {
+            Box::new(CpuFcfsEngine::new(geo(), default_soc(), 4))
+        }),
+        Box::new(|| -> Box<dyn Engine> {
+            Box::new(SingleXpuEngine::new(geo(), default_soc(), Scheme::PreemptRestart))
+        }),
+        Box::new(|| -> Box<dyn Engine> {
+            Box::new(SingleXpuEngine::new(
+                geo(),
+                default_soc(),
+                Scheme::ContinuousBatching,
+            ))
+        }),
+    ];
+    for seed in [7u64, 404] {
+        let trace = random_trace(5000 + seed);
+        for mk in &builders {
+            let mut batch = mk();
+            let name = batch.name();
+            let a = batch.run(trace.clone()).unwrap();
+
+            let mut incr = mk();
+            incr.start(EngineClock::Virtual).unwrap();
+            for r in trace.clone() {
+                incr.submit(r).unwrap();
+            }
+            let events = incr.drain().unwrap();
+            let b = incr.finish().unwrap();
+
+            assert_eq!(a.makespan_us, b.makespan_us, "{name} seed {seed}: makespan");
+            assert_eq!(a.preemptions, b.preemptions, "{name} seed {seed}");
+            assert_eq!(a.backfills, b.backfills, "{name} seed {seed}");
+            assert_eq!(a.kv_evictions, b.kv_evictions, "{name} seed {seed}");
+            assert_eq!(a.total_energy_j, b.total_energy_j, "{name} seed {seed}");
+            assert_eq!(a.reqs.len(), b.reqs.len(), "{name} seed {seed}");
+            for (x, y) in a.reqs.iter().zip(&b.reqs) {
+                assert_eq!(x.id, y.id);
+                assert_eq!(x.first_token_us, y.first_token_us, "{name} req {}", x.id);
+                assert_eq!(x.done_us, y.done_us, "{name} req {}", x.id);
+                assert_eq!(x.output_tokens, y.output_tokens, "{name} req {}", x.id);
+                assert_eq!(x.prefill_tokens, y.prefill_tokens, "{name} req {}", x.id);
+            }
+
+            // the event stream is complete: one Admitted and one
+            // TurnDone per request, one TokenEmitted per token
+            let count = |f: fn(&EngineEvent) -> bool| events.iter().filter(|e| f(e)).count();
+            assert_eq!(
+                count(|e| matches!(e, EngineEvent::Admitted { .. })),
+                trace.len(),
+                "{name} seed {seed}: admissions"
+            );
+            assert_eq!(
+                count(|e| matches!(e, EngineEvent::TurnDone { .. })),
+                trace.len(),
+                "{name} seed {seed}: completions"
+            );
+            assert_eq!(
+                count(|e| matches!(e, EngineEvent::TokenEmitted { .. })),
+                b.total_tokens(),
+                "{name} seed {seed}: token events"
+            );
         }
     }
 }
