@@ -63,7 +63,7 @@ fn main() {
     let mut cands: Vec<u64> =
         states.values().filter(|s| s.phase == Phase::Prefilling).map(|s| s.id()).collect();
     let s = bench("resume_order over 32 candidates", 200, 10_000, || {
-        resume_order(&states, &mut cands, &ann, 0, 1e6, 2e9);
+        resume_order(&states, &mut cands, &ann, 0, 1e6, 2e9, true);
         black_box(&cands);
     });
     println!("{}", s.report());

@@ -142,6 +142,12 @@ pub struct SchedulerConfig {
     /// (cross-turn prefix reuse, DESIGN.md §3).  0 disables retention:
     /// every turn recomputes its full conversation prefix.
     pub session_capacity: usize,
+    /// Among unstarved same-class resume candidates, prefer the node
+    /// with the longest remaining dependency chain in its workflow DAG
+    /// (`FlowBinding::crit_path`) so the scheduler finishes the deepest
+    /// chain first (DESIGN.md §3).  Ablation switch — `false` falls
+    /// back to the plain FIFO/ETC turn order.
+    pub critical_path_priority: bool,
 }
 
 impl Default for SchedulerConfig {
@@ -157,6 +163,7 @@ impl Default for SchedulerConfig {
             chunk_latency_budget_ms: 100.0,
             kernel_timeout_ms: 10_000.0,
             session_capacity: 32,
+            critical_path_priority: true,
         }
     }
 }
@@ -184,6 +191,7 @@ impl SchedulerConfig {
                 .opt("session_capacity")
                 .map(|x| x.as_usize())
                 .unwrap_or(Ok(d.session_capacity))?,
+            critical_path_priority: b("critical_path_priority", d.critical_path_priority)?,
         })
     }
 
@@ -199,6 +207,7 @@ impl SchedulerConfig {
             .set("chunk_latency_budget_ms", self.chunk_latency_budget_ms)
             .set("kernel_timeout_ms", self.kernel_timeout_ms)
             .set("session_capacity", self.session_capacity)
+            .set("critical_path_priority", self.critical_path_priority)
     }
 }
 
@@ -338,6 +347,7 @@ mod tests {
         assert!(s.backfill && s.preemption && s.disaggregation);
         assert!((s.chunk_latency_budget_ms - 100.0).abs() < 1e-9);
         assert!(s.session_capacity > 0, "session retention on by default");
+        assert!(s.critical_path_priority, "critical-path priority on by default");
     }
 
     #[test]

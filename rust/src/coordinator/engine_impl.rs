@@ -169,6 +169,21 @@ impl AgentXpuEngine {
         }
     }
 
+    /// Reference scan for the driver's waiting-proactive-prefill index
+    /// (debug-assert parity checks only — release builds trust the
+    /// index, and the index's id order matches this sorted scan
+    /// exactly, so both feed `resume_order` identical candidate lists).
+    fn scan_waiting_proactive(d: &Driver) -> Vec<ReqId> {
+        let mut v: Vec<ReqId> = d
+            .states
+            .values()
+            .filter(|s| s.phase == Phase::Prefilling && !s.running && !s.is_reactive())
+            .map(|s| s.id())
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
     /// Reactive requests currently mid-system (prefilling or decoding).
     fn reactive_active(d: &Driver) -> bool {
         d.states
@@ -198,12 +213,12 @@ impl AgentXpuEngine {
                 .total_cmp(&d.states[b].req.arrival_us)
                 .then(a.cmp(b))
         });
-        let mut proactive: Vec<ReqId> = d
-            .states
-            .values()
-            .filter(|s| s.phase == Phase::Prefilling && !s.running && !s.is_reactive())
-            .map(|s| s.id())
-            .collect();
+        let mut proactive: Vec<ReqId> = d.waiting_proactive_prefills();
+        debug_assert_eq!(
+            proactive,
+            Self::scan_waiting_proactive(d),
+            "waiting-proactive-prefill index diverged from a state scan"
+        );
         resume_order(
             &d.states,
             &mut proactive,
@@ -211,6 +226,7 @@ impl AgentXpuEngine {
             pxpu,
             d.now(),
             self.sched.starvation_age_ms * 1e3,
+            self.sched.critical_path_priority,
         );
 
         let pick = if self.sched.preemption {
@@ -323,23 +339,26 @@ impl AgentXpuEngine {
         if !self.sched.backfill {
             return;
         }
-        let mut cands: Vec<ReqId> = d
-            .states
-            .values()
-            .filter(|s| {
-                s.phase == Phase::Prefilling
-                    && !s.running
-                    && !s.is_reactive()
-                    && d.sim.busy(self.prefill_xpu()) // structural slack only
-            })
-            .map(|s| s.id())
-            .collect();
+        if !d.sim.busy(self.prefill_xpu()) {
+            return; // structural slack only
+        }
+        // Candidates come from the driver's incrementally maintained
+        // waiting-proactive-prefill index — a full `states` scan per
+        // step was the old hot path; the debug assert proves the index
+        // always matches it, so schedules are bit-identical.
+        let mut cands: Vec<ReqId> = d.waiting_proactive_prefills();
+        debug_assert_eq!(
+            cands,
+            Self::scan_waiting_proactive(d),
+            "waiting-proactive-prefill index diverged from a state scan"
+        );
         if cands.is_empty() {
             return;
         }
-        // Rank by energy efficiency (TFLOPS/W, §6.3) — here all
-        // candidates share a kernel shape class, so waiting-age + ETC
-        // ordering (resume_order) is the tiebreak the paper applies.
+        // Order by the §6.2 resumption strategy (starvation age →
+        // continuation → critical path → ETC): the candidates share one
+        // kernel shape class on the iGPU, so this is the tiebreak that
+        // decides which proactive prefill claims the backfill bubble.
         resume_order(
             &d.states,
             &mut cands,
@@ -347,6 +366,7 @@ impl AgentXpuEngine {
             self.igpu,
             d.now(),
             self.sched.starvation_age_ms * 1e3,
+            self.sched.critical_path_priority,
         );
         for id in cands {
             let st = &d.states[&id];
@@ -566,13 +586,13 @@ mod tests {
                 prompt: prompt.clone(),
                 max_new_tokens: out,
                 profile: "flow".into(),
-                flow: Some(crate::workload::FlowBinding {
+                flow: Some(crate::workload::FlowBinding::linear(
                     flow_id,
-                    turn_idx: k,
-                    total_turns: turns,
-                    think_time_us: if k == 0 { 0.0 } else { think_us },
-                    delta_start: if k == 0 { 0 } else { prompt.len() - delta },
-                }),
+                    k,
+                    turns,
+                    if k == 0 { 0.0 } else { think_us },
+                    if k == 0 { 0 } else { prompt.len() - delta },
+                )),
             });
         }
         out_reqs
@@ -688,6 +708,38 @@ mod tests {
         assert_eq!(flows.len(), 1);
         assert!(flows[0].finished);
         assert!(flows[0].e2e_us.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn workflow_dags_complete_with_tool_nodes_on_the_cpu() {
+        use crate::workload::{DagShape, DagSpec, dag_flow_trace, flatten_flows, profile};
+        let spec = DagSpec {
+            profile: profile("proactivebench").unwrap(),
+            flow_rate_per_s: 0.05,
+            think_time_s: 4.0,
+            shape: DagShape::MapReduce { fanout: 3 },
+            duration_s: 60.0,
+            seed: 11,
+            max_seq: 2048,
+        };
+        let flows = dag_flow_trace(&spec, Priority::Proactive, 2048, 0, 0);
+        let trace = flatten_flows(flows);
+        assert!(!trace.is_empty());
+        let total = trace.len();
+        let rep = engine().run(trace).unwrap();
+        assert_eq!(rep.reqs.iter().filter(|m| m.finished()).count(), total);
+        // tool nodes ran on the CPU, LLM turns on NPU/iGPU
+        assert!(rep.reqs.iter().any(|m| m.tool));
+        assert!(rep.utilization("cpu") > 0.0);
+        // every flow's makespan is bounded below by its critical path
+        for f in rep.flows() {
+            assert!(f.finished);
+            assert!(
+                f.e2e_us.unwrap() + 1e-6 >= f.critical_path_us.unwrap(),
+                "flow {}: makespan below its critical path",
+                f.flow_id
+            );
+        }
     }
 
     #[test]

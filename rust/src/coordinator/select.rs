@@ -14,7 +14,12 @@ use crate::workload::ReqId;
 ///     session KV is already resident, so finishing them both frees the
 ///     retained cache soonest and keeps the flow's think-time pipeline
 ///     moving (DESIGN.md §3);
-/// (3) then the lowest estimated-time-to-completion (ETC), so tasks
+/// (3) then, when `critical_path` is set, the longest remaining
+///     dependency chain first (`FlowBinding::crit_path`): finishing the
+///     deepest workflow DAG keeps its serial tail from gating the
+///     overall makespan while shallow branches fill the bubbles
+///     (DESIGN.md §3 critical-path priority);
+/// (4) then the lowest estimated-time-to-completion (ETC), so tasks
 ///     enter the decode pipeline sooner and feed its throughput.
 pub fn resume_order(
     states: &HashMap<ReqId, ReqState>,
@@ -23,6 +28,7 @@ pub fn resume_order(
     npu: usize,
     now_us: f64,
     starvation_age_us: f64,
+    critical_path: bool,
 ) {
     let n_layers = ann.geo.n_layers;
     // Exact ETC (§6.2): sum each remaining chunk's per-layer kernel time
@@ -49,12 +55,20 @@ pub fn resume_order(
         let cont = |s: &ReqState| {
             s.req.flow.as_ref().map(|f| f.is_continuation()).unwrap_or(false)
         };
+        let cp = |s: &ReqState| -> usize {
+            if critical_path {
+                s.req.flow.as_ref().map(|f| f.crit_path_len()).unwrap_or(1)
+            } else {
+                1 // FIFO/ETC baseline: critical path never discriminates
+            }
+        };
         match (starved_a, starved_b) {
             (true, false) => std::cmp::Ordering::Less,
             (false, true) => std::cmp::Ordering::Greater,
             (true, true) => age_b.total_cmp(&age_a), // older first
             (false, false) => cont(sb)
                 .cmp(&cont(sa)) // flow continuations first
+                .then(cp(sb).cmp(&cp(sa))) // longest remaining chain first
                 .then(etc(a).total_cmp(&etc(b)))
                 .then(a.cmp(b)),
         }
@@ -149,7 +163,7 @@ mod tests {
         ]);
         let mut c = vec![3, 2, 1];
         // now=6s, threshold 2s → tasks 1 and 2 are starved, 3 is not
-        resume_order(&states, &mut c, &ann(), 0, 6e6, 2e6);
+        resume_order(&states, &mut c, &ann(), 0, 6e6, 2e6, true);
         assert_eq!(&c[..2], &[1, 2], "starved oldest-first");
         assert_eq!(c[2], 3);
     }
@@ -163,7 +177,7 @@ mod tests {
         // give task 2 more progress → lower ETC
         states.get_mut(&2).unwrap().chunk_idx = 1;
         let mut c = vec![1, 2];
-        resume_order(&states, &mut c, &ann(), 0, 1000.0, 1e12);
+        resume_order(&states, &mut c, &ann(), 0, 1000.0, 1e12, true);
         assert_eq!(c, vec![2, 1], "lower ETC first");
     }
 
@@ -174,22 +188,48 @@ mod tests {
             (2, Priority::Proactive, Phase::Prefilling, 0.0),
         ]);
         // request 2 is turn 1 of an in-flight monitor flow
-        states.get_mut(&2).unwrap().req.flow = Some(crate::workload::FlowBinding {
-            flow_id: 9,
-            turn_idx: 1,
-            total_turns: 3,
-            think_time_us: 0.0,
-            delta_start: 100,
-        });
+        states.get_mut(&2).unwrap().req.flow =
+            Some(crate::workload::FlowBinding::linear(9, 1, 3, 0.0, 100));
         // equal ETC and age: the continuation outranks the fresh start
         let mut c = vec![1, 2];
-        resume_order(&states, &mut c, &ann(), 0, 1000.0, 1e12);
+        resume_order(&states, &mut c, &ann(), 0, 1000.0, 1e12, true);
         assert_eq!(c, vec![2, 1], "continuation work first");
         // ... but starvation still dominates: starve request 1
         states.get_mut(&1).unwrap().enqueued_at_us = -1e9;
         let mut c = vec![1, 2];
-        resume_order(&states, &mut c, &ann(), 0, 1000.0, 1e6);
+        resume_order(&states, &mut c, &ann(), 0, 1000.0, 1e6, true);
         assert_eq!(c, vec![1, 2], "starved task outranks continuation");
+    }
+
+    #[test]
+    fn longest_critical_path_resumes_first_among_continuations() {
+        let mut states = mk_states(&[
+            (1, Priority::Proactive, Phase::Prefilling, 0.0),
+            (2, Priority::Proactive, Phase::Prefilling, 0.0),
+        ]);
+        // both are continuations; request 1 sits on a 6-node chain,
+        // request 2 on a 2-node chain
+        states.get_mut(&1).unwrap().req.flow =
+            Some(crate::workload::FlowBinding::linear(7, 1, 7, 0.0, 100));
+        states.get_mut(&2).unwrap().req.flow =
+            Some(crate::workload::FlowBinding::linear(8, 1, 3, 0.0, 100));
+        let mut c = vec![2, 1];
+        resume_order(&states, &mut c, &ann(), 0, 1000.0, 1e12, true);
+        assert_eq!(c, vec![1, 2], "deepest remaining chain first");
+        // the FIFO/ETC baseline (ablation) ignores the critical path:
+        // equal ETC and age fall back to id order
+        let mut c = vec![2, 1];
+        resume_order(&states, &mut c, &ann(), 0, 1000.0, 1e12, false);
+        assert_eq!(c, vec![1, 2], "ties break by id without cp priority");
+        // give request 2 more progress → lower ETC wins when cp is off
+        states.get_mut(&2).unwrap().chunk_idx = 1;
+        let mut c = vec![1, 2];
+        resume_order(&states, &mut c, &ann(), 0, 1000.0, 1e12, false);
+        assert_eq!(c, vec![2, 1], "ETC decides without cp priority");
+        // ... while cp priority keeps the deep chain ahead regardless
+        let mut c = vec![1, 2];
+        resume_order(&states, &mut c, &ann(), 0, 1000.0, 1e12, true);
+        assert_eq!(c, vec![1, 2], "cp outranks ETC");
     }
 
     #[test]

@@ -15,27 +15,33 @@
 //! path makes exactly the coordinator's decisions), and lifecycle
 //! timestamps are measured wall µs.
 //!
-//! Flow-level sessions (DESIGN.md §3): the driver owns the workload
-//! semantics of multi-turn flows — a turn after the first is *held*
-//! until its predecessor completes, released one think-time later with
-//! the actual generated conversation stitched into its prompt.  Every
-//! engine gets this for free (so baselines see identical flow traffic);
-//! engines that additionally call [`Driver::enable_session_reuse`] get
-//! cross-turn KV retention — turn *k+1* then prefills only its delta
-//! tokens instead of recomputing the whole conversation prefix.  A
-//! flow's opening turn must carry `turn_idx == 0`; under a wall clock a
-//! continuation turn submitted after its predecessor completed is
-//! admitted directly (the online-session path the server uses).
+//! Workflow DAGs (DESIGN.md §3): the driver owns the workload semantics
+//! of agentic flows — a node with DAG predecessors is *held* until all
+//! of them complete, released one think-time later with the actual
+//! generated context stitched over the generator's placeholder prefix
+//! (a join merges its first predecessor's conversation with the other
+//! branches' contributions, in dependency order).  CPU **tool-call
+//! nodes** never allocate serving state: the driver runs each as one
+//! kernel on the SoC's CPU roofline, contending for DDR like any
+//! accelerator kernel, and passes the conversation through to its
+//! dependents.  Every engine gets all of this for free (so baselines
+//! see identical workflow traffic); engines that additionally call
+//! [`Driver::enable_session_reuse`] get cross-turn KV retention — a
+//! continuation turn then prefills only its delta tokens instead of
+//! recomputing the whole conversation prefix.  Under a wall clock a
+//! node submitted after its predecessors completed is admitted directly
+//! (the online-session path the server uses).
 
-use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
 
 use anyhow::{Context, Result, bail};
 
 use crate::config::SocConfig;
 use crate::metrics::{ReqMetrics, RunReport};
-use crate::runtime::SessionCachePool;
+use crate::model::KernelCost;
+use crate::runtime::{KvCache, SessionCachePool};
 use crate::soc::{Completion, KernelTiming, LaunchSpec, RunId, SocSim};
-use crate::workload::{FlowId, ReqId, Request};
+use crate::workload::{FlowBinding, FlowId, NodeKind, ReqId, Request};
 
 use super::bridge::ExecBridge;
 use super::core_api::{EngineClock, EngineEvent};
@@ -62,11 +68,66 @@ impl KernelTag {
 
 /// Wall-clock runs bound their history so a long-lived server never
 /// grows without limit: `retired` keeps the most recent window of
-/// request metrics (older ones have already been streamed as events),
-/// and `flow_done` keeps watermarks for the most recent flows (ids are
+/// request metrics (older ones have already been streamed as events —
+/// the shed count surfaces as [`RunReport::dropped_reqs`], and the
+/// incremental `metrics::ReportAccumulator` stays exact), and the
+/// per-flow DAG progress keeps only the most recent flows (ids are
 /// monotonic on the serving path, so the smallest keys are oldest).
 const WALL_RETIRED_MAX: usize = 8_192;
 const FLOW_DONE_MAX: usize = 65_536;
+/// Completed/cancelled node indices remembered *per flow*: a long-lived
+/// serving session completes unboundedly many calls, so the per-flow
+/// progress sets keep only the most recent indices (far beyond any
+/// distance an online `deps` reference can reach — the server remembers
+/// at most 64 generation ids per tag).
+const NODE_DONE_MAX: usize = 4_096;
+
+/// Conversation state a completed workflow node leaves for stitching.
+struct NodeOutput {
+    /// The conversation after this node (first-predecessor lineage):
+    /// stitched prompt + generated reply for LLM turns, the inherited
+    /// context for tool calls.
+    context: Vec<i32>,
+    /// This node's branch contribution (delta + reply) — what a join
+    /// appends for each predecessor beyond its first.
+    contrib: Vec<i32>,
+}
+
+/// Per-flow DAG progress.  The index sets are ordered so the oldest
+/// entries can be shed once `NODE_DONE_MAX` is exceeded, keeping a
+/// long-lived serving session's footprint bounded (the pre-DAG
+/// watermark was one integer; this is its DAG generalization).
+#[derive(Default)]
+struct FlowProgress {
+    /// Completed (or cancelled) node indices — releases gate on this.
+    done: BTreeSet<usize>,
+    /// Cancelled node indices: held placeholder dependents can never be
+    /// stitched and die transitively.
+    dead: BTreeSet<usize>,
+    /// Completed nodes' conversation state, retained while held nodes
+    /// may still stitch against it (cleared once nothing is held).
+    outputs: HashMap<usize, NodeOutput>,
+}
+
+impl FlowProgress {
+    /// Record a completed node, shedding the oldest indices beyond the
+    /// bound (an old shed index can only matter to a dep reaching
+    /// further back than anything the server hands out).
+    fn mark_done(&mut self, turn: usize) {
+        self.done.insert(turn);
+        while self.done.len() > NODE_DONE_MAX {
+            let _ = self.done.pop_first();
+        }
+    }
+
+    fn mark_dead(&mut self, turn: usize) {
+        self.mark_done(turn);
+        self.dead.insert(turn);
+        while self.dead.len() > NODE_DONE_MAX {
+            let _ = self.dead.pop_first();
+        }
+    }
+}
 
 /// Shared DES driver state.
 pub struct Driver {
@@ -75,23 +136,40 @@ pub struct Driver {
     clock: EngineClock,
     pub states: HashMap<ReqId, ReqState>,
     pending: VecDeque<Request>,
-    /// Later turns of multi-turn flows, waiting on their predecessor
-    /// (front = next turn to release per flow).
-    chains: HashMap<FlowId, VecDeque<Request>>,
-    /// Completed turns per flow (the next turn index that may admit
-    /// directly) — lets a wall-clock continuation submitted *after* its
-    /// predecessor finished skip the hold queue.  Ordered so the oldest
-    /// flows can be shed once `FLOW_DONE_MAX` is exceeded.
-    flow_done: BTreeMap<FlowId, usize>,
+    /// Workflow nodes waiting on DAG predecessors, per flow (sorted by
+    /// (turn_idx, id) for determinism).
+    held: HashMap<FlowId, Vec<Request>>,
+    /// Per-flow DAG progress — the completed-node set doubles as the
+    /// watermark that lets a wall-clock continuation submitted *after*
+    /// its predecessors finished skip the hold queue.  Ordered so the
+    /// oldest flows can be shed once `FLOW_DONE_MAX` is exceeded.
+    flows: BTreeMap<FlowId, FlowProgress>,
     /// Cross-turn KV retention — `None` (full recompute every turn)
     /// unless the engine opted in via [`Driver::enable_session_reuse`].
     pub sessions: Option<SessionCachePool>,
     inflight: HashMap<RunId, KernelTag>,
+    /// Ready CPU tool-call nodes waiting for the CPU to free.
+    tool_wait: VecDeque<Request>,
+    /// Tool kernels in flight on the CPU.
+    tool_inflight: HashMap<RunId, Request>,
+    /// The SoC's CPU index (tool nodes run here; `None` = the SoC
+    /// models no CPU and tools complete instantly).
+    cpu: Option<usize>,
+    /// Index of waiting proactive prefills (phase == Prefilling, not
+    /// running, not reactive) — kept in sync at every lifecycle
+    /// transition so schedulers don't rescan every live request per
+    /// step (see `coordinator::engine_impl` inter-XPU backfill).
+    waiting_pro_prefill: BTreeSet<ReqId>,
     /// Streaming events since the last [`Driver::take_events`].
     events: Vec<EngineEvent>,
     /// Metrics of retired requests (cancelled, or completed under a
     /// wall clock) whose live state has been dropped.
     retired: Vec<ReqMetrics>,
+    retired_cap: usize,
+    /// Retired metrics shed from the bounded wall-clock history — the
+    /// final RunReport flags this truncation instead of silently
+    /// reporting fewer requests than were served.
+    pub dropped_reqs: u64,
     pub preemptions: u64,
     pub backfills: u64,
     /// In-flight prefills evicted by the memory governor (KV wiped).
@@ -110,19 +188,27 @@ impl Driver {
     /// Open an empty driver against a clock; feed it with
     /// [`Driver::submit`].
     pub fn open(soc: &SocConfig, bridge: ExecBridge, clock: EngineClock) -> Self {
+        let sim = SocSim::new(soc);
+        let cpu = sim.xpu_index("cpu");
         Self {
-            sim: SocSim::new(soc),
+            sim,
             bridge,
             clock,
             states: HashMap::new(),
             total_requests: 0,
             pending: VecDeque::new(),
-            chains: HashMap::new(),
-            flow_done: BTreeMap::new(),
+            held: HashMap::new(),
+            flows: BTreeMap::new(),
             sessions: None,
             inflight: HashMap::new(),
+            tool_wait: VecDeque::new(),
+            tool_inflight: HashMap::new(),
+            cpu,
+            waiting_pro_prefill: BTreeSet::new(),
             events: vec![],
             retired: vec![],
+            retired_cap: WALL_RETIRED_MAX,
+            dropped_reqs: 0,
             preemptions: 0,
             backfills: 0,
             kv_evictions: 0,
@@ -143,24 +229,27 @@ impl Driver {
         d
     }
 
-    /// Feed one request.  Flow turns after the first are held behind
-    /// their predecessor; everything else queues by arrival time.
-    /// Under a wall clock the arrival is re-stamped to *now*.
+    /// Feed one request.  A workflow node whose DAG predecessors have
+    /// not all completed is held; everything else queues by arrival
+    /// time.  Under a wall clock the arrival is re-stamped to *now*.
     pub fn submit(&mut self, mut req: Request) {
         if self.clock.is_wall() {
             req.arrival_us = self.now();
         }
         self.total_requests += 1;
         let held = match &req.flow {
-            Some(fb) if fb.turn_idx > 0 => {
-                fb.turn_idx > self.flow_done.get(&fb.flow_id).copied().unwrap_or(0)
+            Some(fb) => {
+                let prog = self.flows.get(&fb.flow_id);
+                fb.dep_indices()
+                    .iter()
+                    .any(|d| !prog.map(|p| p.done.contains(d)).unwrap_or(false))
             }
-            _ => false,
+            None => false,
         };
         if held {
-            let fid = req.flow_id().expect("held turn has a flow");
+            let fid = req.flow_id().expect("held node has a flow");
             let key = (req.turn_idx(), req.id);
-            let chain = self.chains.entry(fid).or_default();
+            let chain = self.held.entry(fid).or_default();
             let at = chain.partition_point(|r| (r.turn_idx(), r.id) <= key);
             chain.insert(at, req);
         } else {
@@ -205,16 +294,45 @@ impl Driver {
         std::mem::take(&mut self.events)
     }
 
+    /// Bound the retired-metrics window (wall-clock runs only; shed
+    /// entries are counted in [`RunReport::dropped_reqs`]).
+    pub fn limit_retained_history(&mut self, cap: usize) {
+        self.retired_cap = cap.max(2);
+    }
+
+    /// Waiting proactive prefills (phase == Prefilling, not running),
+    /// in id order — maintained incrementally, identical to a fresh
+    /// scan of `states` (property-checked in debug builds by the
+    /// coordinator's backfill path).
+    pub fn waiting_proactive_prefills(&self) -> Vec<ReqId> {
+        self.waiting_pro_prefill.iter().copied().collect()
+    }
+
+    /// Re-derive `id`'s membership in the waiting-proactive-prefill
+    /// index from its current state (idempotent; absent state = out).
+    fn reindex(&mut self, id: ReqId) {
+        let waiting = self
+            .states
+            .get(&id)
+            .map(|s| s.phase == Phase::Prefilling && !s.running && !s.is_reactive())
+            .unwrap_or(false);
+        if waiting {
+            self.waiting_pro_prefill.insert(id);
+        } else {
+            self.waiting_pro_prefill.remove(&id);
+        }
+    }
+
     fn insert_pending(&mut self, req: Request) {
         let at = self
             .pending
-            .partition_point(|r| {
-                (r.arrival_us, r.id) <= (req.arrival_us, req.id)
-            });
+            .partition_point(|r| (r.arrival_us, r.id) <= (req.arrival_us, req.id));
         self.pending.insert(at, req);
     }
 
-    /// Admit every request whose arrival time has passed; returns ids.
+    /// Admit every request whose arrival time has passed; returns the
+    /// ids of newly allocated LLM serving states (tool nodes queue for
+    /// the CPU instead — the driver runs them itself).
     pub fn admit_ready(&mut self, max_chunk: usize) -> Vec<ReqId> {
         let mut out = vec![];
         while self
@@ -225,6 +343,14 @@ impl Driver {
         {
             let req = self.pending.pop_front().unwrap();
             let id = req.id;
+            if req.is_tool() {
+                // Tool nodes never allocate serving state: they run as
+                // one CPU kernel (launch_tools) and pass the flow's
+                // conversation through.
+                self.events.push(EngineEvent::Admitted { id, at_us: self.now() });
+                self.tool_wait.push_back(req);
+                continue;
+            }
             // Continuation turns try the session pool first: a hit
             // seeds the state with the retained KV + prefix length.
             let seed = match (&mut self.sessions, &req.flow) {
@@ -236,10 +362,46 @@ impl Driver {
             let mut st = self.bridge.init_state_with_session(req, max_chunk, seed);
             st.enqueued_at_us = self.now();
             self.states.insert(id, st);
+            self.reindex(id);
             self.events.push(EngineEvent::Admitted { id, at_us: self.now() });
             out.push(id);
         }
+        self.launch_tools();
         out
+    }
+
+    /// Launch ready tool nodes on the SoC's CPU — one roofline kernel
+    /// each, drawing DDR bandwidth like any accelerator kernel.  A SoC
+    /// without a CPU model completes tools instantly.
+    fn launch_tools(&mut self) {
+        if self.tool_wait.is_empty() {
+            return;
+        }
+        let Some(cpu) = self.cpu else {
+            while let Some(req) = self.tool_wait.pop_front() {
+                let t = self.now();
+                self.finish_tool(req, t);
+            }
+            return;
+        };
+        while !self.sim.busy(cpu) {
+            let Some(req) = self.tool_wait.pop_front() else { break };
+            let (flops, bytes) = match req.flow.as_ref().map(|f| f.node) {
+                Some(NodeKind::Tool { flops, bytes }) => (flops, bytes),
+                _ => (0.0, 0.0),
+            };
+            let cost = KernelCost {
+                gemm_flops: flops,
+                attn_flops: 0.0,
+                bytes,
+                footprint_bytes: 0.0,
+                is_dynamic: false,
+            };
+            let timing: KernelTiming = self.sim.xpus[cpu].timing(&cost);
+            let reactive = req.priority.is_reactive();
+            let run = self.sim.launch(cpu, LaunchSpec { timing, reactive });
+            self.tool_inflight.insert(run, req);
+        }
     }
 
     /// Launch a kernel; marks all tagged requests as running.
@@ -250,20 +412,31 @@ impl Driver {
             st.running = true;
             st.preempt_counted = false;
         }
+        for id in tag.reqs() {
+            self.reindex(id);
+        }
         let run = self.sim.launch(xpu, LaunchSpec { timing, reactive });
         self.inflight.insert(run, tag);
     }
 
     /// Abort the kernel on `xpu` (scheme-(a) instant preemption).  The
     /// tagged requests stop running; the caller decides what progress
-    /// they lose.  Returns the aborted tag.
+    /// they lose.  Returns the aborted tag (`None` when the slot held a
+    /// driver-managed tool kernel — it is re-queued, not lost).
     pub fn cancel(&mut self, xpu: usize) -> Option<KernelTag> {
         let run = self.sim.cancel(xpu)?;
+        if let Some(req) = self.tool_inflight.remove(&run) {
+            self.tool_wait.push_front(req);
+            return None;
+        }
         let tag = self.inflight.remove(&run).expect("cancelled unknown run");
         for id in tag.reqs() {
             if let Some(st) = self.states.get_mut(&id) {
                 st.running = false;
             }
+        }
+        for id in tag.reqs() {
+            self.reindex(id);
         }
         Some(tag)
     }
@@ -288,13 +461,14 @@ impl Driver {
             .push(EngineEvent::SessionEvicted { flow_id, at_us: self.now() });
     }
 
-    /// Abort a request wherever it is: still queued, held behind a flow
-    /// predecessor, waiting at a kernel boundary, or mid-kernel.  A
-    /// lone prefill kernel is aborted immediately; a lane of a batched
-    /// decode retires at the iteration boundary (the other lanes keep
-    /// their tokens).  The request's KV is freed and chained successor
-    /// turns that can no longer be stitched are cancelled with it.
-    /// Returns false when the id is unknown or already finished.
+    /// Abort a request wherever it is: still queued, held behind DAG
+    /// predecessors, queued or running as a CPU tool kernel, waiting at
+    /// a kernel boundary, or mid-kernel.  A lone prefill kernel is
+    /// aborted immediately; a lane of a batched decode retires at the
+    /// iteration boundary (the other lanes keep their tokens).  The
+    /// request's KV is freed and dependent nodes that can no longer be
+    /// stitched are cancelled with it.  Returns false when the id is
+    /// unknown or already finished.
     pub fn cancel_request(&mut self, id: ReqId) -> bool {
         // not yet admitted
         if let Some(i) = self.pending.iter().position(|r| r.id == id) {
@@ -302,43 +476,53 @@ impl Driver {
             let fid = req.flow_id();
             self.retire_cancelled_request(req);
             if let Some(fid) = fid {
-                self.cancel_flow_successors(fid);
+                self.propagate_flow_cancel(fid);
             }
             return true;
         }
-        // held behind a flow predecessor
+        // ready tool node waiting for the CPU
+        if let Some(i) = self.tool_wait.iter().position(|r| r.id == id) {
+            let req = self.tool_wait.remove(i).unwrap();
+            let fid = req.flow_id();
+            self.retire_cancelled_request(req);
+            if let Some(fid) = fid {
+                self.propagate_flow_cancel(fid);
+            }
+            return true;
+        }
+        // tool kernel in flight on the CPU: abort it
+        if let Some(run) = self
+            .tool_inflight
+            .iter()
+            .find(|(_, r)| r.id == id)
+            .map(|(run, _)| *run)
+        {
+            if let Some(xpu) = self.sim.xpu_of(run) {
+                self.sim.cancel(xpu);
+            }
+            let req = self.tool_inflight.remove(&run).unwrap();
+            let fid = req.flow_id();
+            self.retire_cancelled_request(req);
+            if let Some(fid) = fid {
+                self.propagate_flow_cancel(fid);
+            }
+            return true;
+        }
+        // held behind DAG predecessors
         if let Some(fid) = self
-            .chains
+            .held
             .iter()
             .find(|(_, c)| c.iter().any(|r| r.id == id))
             .map(|(fid, _)| *fid)
         {
-            let mut chain = self.chains.remove(&fid).unwrap();
+            let chain = self.held.get_mut(&fid).unwrap();
             let i = chain.iter().position(|r| r.id == id).unwrap();
-            let mut rest = chain.split_off(i);
-            let turn = rest.pop_front().unwrap();
-            self.retire_cancelled_request(turn);
-            // Placeholder successors (delta_start > 0) can never be
-            // stitched without this turn — they die with it.  Self-
-            // contained successors (the serving path) stay held and
-            // release in order as the surviving turns complete; they
-            // merely miss the prefix cache.  Earlier turns are
-            // untouched (their predecessors are still alive).
-            let placeholder = rest
-                .front()
-                .and_then(|r| r.flow.as_ref())
-                .map(|f| f.delta_start > 0)
-                .unwrap_or(false);
-            if placeholder {
-                for req in rest {
-                    self.retire_cancelled_request(req);
-                }
-            } else {
-                chain.append(&mut rest);
+            let node = chain.remove(i);
+            if chain.is_empty() {
+                self.held.remove(&fid);
             }
-            if !chain.is_empty() {
-                self.chains.insert(fid, chain);
-            }
+            self.retire_cancelled_request(node);
+            self.propagate_flow_cancel(fid);
             return true;
         }
         // live serving state
@@ -369,57 +553,72 @@ impl Driver {
                 None => {
                     // mid decode batch: the iteration finishes, the
                     // lane retires at the boundary
+                    let turn = self.states[&id].req.turn_idx();
                     self.states.get_mut(&id).unwrap().cancelled = true;
                     if let Some(fid) = fid {
-                        self.cancel_flow_successors(fid);
+                        self.mark_node_dead(fid, turn);
+                        self.propagate_flow_cancel(fid);
                     }
                     return true;
                 }
             }
         }
         let st = self.states.remove(&id).unwrap();
+        self.reindex(id);
         self.retire_cancelled_state(st);
         if let Some(fid) = fid {
-            self.cancel_flow_successors(fid);
+            self.propagate_flow_cancel(fid);
         }
         true
     }
 
-    /// A flow turn died: successor turns whose prompts are generator
-    /// placeholders (`delta_start > 0`) can never be stitched without
-    /// it — they die too, and the retained session is dropped.
-    /// Self-contained successors (`delta_start == 0`, the serving path)
-    /// are released instead: their session prefix match simply fails
-    /// and they recompute.
-    fn cancel_flow_successors(&mut self, fid: FlowId) {
-        let Some(mut chain) = self.chains.remove(&fid) else { return };
-        let placeholder = chain
-            .front()
-            .and_then(|r| r.flow.as_ref())
-            .map(|f| f.delta_start > 0)
-            .unwrap_or(false);
-        if placeholder {
-            for req in chain {
-                self.retire_cancelled_request(req);
+    /// Record a node as cancelled in its flow's DAG progress: done (so
+    /// surviving dependents can still release) *and* dead (so held
+    /// placeholder dependents die transitively).
+    fn mark_node_dead(&mut self, fid: FlowId, turn: usize) {
+        self.flows.entry(fid).or_default().mark_dead(turn);
+        self.shed_flow_state();
+    }
+
+    /// A workflow node died: held nodes whose prompts are generator
+    /// placeholders (`delta_start > 0`) and depend — directly or
+    /// transitively — on a dead node can never be stitched; they die
+    /// with it and the retained session is dropped.  Self-contained
+    /// dependents (`delta_start == 0`, the serving path) release as
+    /// soon as their remaining predecessors complete; they merely miss
+    /// the prefix cache.
+    fn propagate_flow_cancel(&mut self, fid: FlowId) {
+        let mut any_killed = false;
+        loop {
+            let victim = {
+                let Some(prog) = self.flows.get(&fid) else { break };
+                let Some(chain) = self.held.get(&fid) else { break };
+                chain.iter().position(|r| {
+                    r.flow
+                        .as_ref()
+                        .map(|fb| {
+                            fb.delta_start > 0
+                                && fb.dep_indices().iter().any(|d| prog.dead.contains(d))
+                        })
+                        .unwrap_or(false)
+                })
+            };
+            let Some(i) = victim else { break };
+            let chain = self.held.get_mut(&fid).unwrap();
+            let node = chain.remove(i);
+            if chain.is_empty() {
+                self.held.remove(&fid);
             }
+            any_killed = true;
+            self.retire_cancelled_request(node); // marks it dead in turn
+        }
+        if any_killed {
             if let Some(pool) = &mut self.sessions {
                 pool.drop_session(fid);
             }
-            return;
         }
-        let now = self.now();
-        if let Some(mut nxt) = chain.pop_front() {
-            let think = nxt
-                .flow
-                .as_ref()
-                .map(|f| f.think_time_us.max(0.0))
-                .unwrap_or(0.0);
-            nxt.arrival_us = now + think;
-            self.insert_pending(nxt);
-        }
-        if !chain.is_empty() {
-            self.chains.insert(fid, chain);
-        }
+        self.release_ready(fid);
+        self.cleanup_flow(fid);
     }
 
     fn retire_cancelled_state(&mut self, mut st: ReqState) {
@@ -437,6 +636,9 @@ impl Driver {
             profile: req.profile.clone(),
             flow_id: req.flow_id(),
             turn_idx: req.turn_idx(),
+            deps: req.dep_indices(),
+            think_time_us: req.flow.as_ref().map(|f| f.think_time_us).unwrap_or(0.0),
+            tool: req.is_tool(),
             arrival_us: req.arrival_us,
             first_token_us: None,
             done_us: None,
@@ -452,7 +654,7 @@ impl Driver {
 
     fn push_cancelled(&mut self, m: ReqMetrics, flow: Option<(FlowId, usize)>) {
         if let Some((fid, turn)) = flow {
-            self.advance_flow_done(fid, turn + 1);
+            self.mark_node_dead(fid, turn);
         }
         self.events
             .push(EngineEvent::Cancelled { id: m.id, at_us: self.now() });
@@ -462,24 +664,26 @@ impl Driver {
     }
 
     /// Record retired metrics.  Wall-clock runs keep only the most
-    /// recent `WALL_RETIRED_MAX` (older ones were already streamed as
-    /// events), so a long-lived server's history stays bounded.
+    /// recent window (older ones were already streamed as events), so a
+    /// long-lived server's history stays bounded; the shed count is
+    /// reported as `RunReport::dropped_reqs` so `finish()` never
+    /// *silently* under-reports what `ReportAccumulator` counted.
     fn retire_metrics(&mut self, m: ReqMetrics) {
         self.retired.push(m);
-        if self.clock.is_wall() && self.retired.len() > WALL_RETIRED_MAX {
+        if self.clock.is_wall() && self.retired.len() > self.retired_cap {
             // amortized: shed the older half of the window at once
-            let _ = self.retired.drain(..WALL_RETIRED_MAX / 2);
+            let shed = self.retired_cap / 2;
+            let _ = self.retired.drain(..shed);
+            self.dropped_reqs += shed as u64;
         }
     }
 
-    /// Bump a flow's completed-turn watermark, shedding the oldest
-    /// watermarks beyond `FLOW_DONE_MAX` (serving-path flow ids are
-    /// monotonic; a shed flow's next call merely starts cold).
-    fn advance_flow_done(&mut self, fid: FlowId, next_turn: usize) {
-        let e = self.flow_done.entry(fid).or_insert(0);
-        *e = (*e).max(next_turn);
-        while self.flow_done.len() > FLOW_DONE_MAX {
-            let _ = self.flow_done.pop_first();
+    /// Drop the oldest flows' DAG progress beyond `FLOW_DONE_MAX`
+    /// (serving-path flow ids are monotonic; a shed flow's next call
+    /// merely starts cold).
+    fn shed_flow_state(&mut self) {
+        while self.flows.len() > FLOW_DONE_MAX {
+            let _ = self.flows.pop_first();
         }
     }
 
@@ -488,6 +692,7 @@ impl Driver {
     /// clock that means the run is over (no work, no arrivals); under a
     /// wall clock new submissions make it runnable again.
     pub fn step(&mut self) -> Result<bool> {
+        self.launch_tools();
         if self.clock.is_wall() {
             // Wall mode: virtual durations only *order* the in-flight
             // kernels; their effects execute now, stamped in wall time.
@@ -499,13 +704,22 @@ impl Driver {
                 }
                 return Ok(true);
             }
-            // nothing in flight: runnable iff an arrival is already due
-            let due = self
-                .pending
-                .front()
-                .map(|r| r.arrival_us <= self.now() + 1e-9)
-                .unwrap_or(false);
-            return Ok(due);
+            // Nothing in flight: runnable iff an arrival is pending.  A
+            // flow node released with think-time arrives in the *future*
+            // in wall µs (the release stamp is wall time, never virtual
+            // SoC time) — nap briefly instead of stalling the run, so
+            // the held turn still admits without an external wake-up.
+            return Ok(match self.pending.front().map(|r| r.arrival_us) {
+                None => false,
+                Some(a) => {
+                    let now = self.now();
+                    if a > now + 1e-9 {
+                        let us = (a - now).clamp(1.0, 1_000.0);
+                        std::thread::sleep(std::time::Duration::from_micros(us as u64));
+                    }
+                    true
+                }
+            });
         }
         let next_fin = self.sim.next_event_in().map(|dt| self.now() + dt);
         let next_arr = self.next_arrival_us();
@@ -523,6 +737,22 @@ impl Driver {
     }
 
     fn apply_completion(&mut self, c: &Completion) -> Result<()> {
+        // Driver-managed tool kernels complete outside the engine's
+        // prefill/decode lifecycle.
+        if let Some(req) = self.tool_inflight.remove(&c.id) {
+            if !self.clock.is_wall() {
+                self.trace.record(
+                    c.xpu,
+                    c.started_us,
+                    c.finished_us,
+                    format!("tool:{}", req.id),
+                    req.priority.is_reactive(),
+                );
+            }
+            let t = self.stamp(c.finished_us);
+            self.finish_tool(req, t);
+            return Ok(());
+        }
         let tag = self
             .inflight
             .remove(&c.id)
@@ -569,6 +799,7 @@ impl Driver {
                 } else {
                     self.states.insert(*req, st);
                 }
+                self.reindex(*req);
             }
             KernelTag::DecodeIter { lanes } => {
                 let mut taken: Vec<ReqState> = lanes
@@ -611,11 +842,12 @@ impl Driver {
     /// (virtual clock) or retire it so a long-lived server's working
     /// set stays bounded (wall clock).
     fn complete(&mut self, mut st: ReqState, t: f64) {
+        let id = st.id();
         st.metrics.done_us = Some(t);
         self.finished += 1;
         self.on_request_done(&mut st, t);
         self.events.push(EngineEvent::TurnDone {
-            id: st.id(),
+            id,
             at_us: t,
             arrival_us: st.metrics.arrival_us,
             first_token_us: st.metrics.first_token_us.unwrap_or(t),
@@ -625,65 +857,212 @@ impl Driver {
         if self.clock.is_wall() {
             self.retire_metrics(st.metrics.clone());
         } else {
-            self.states.insert(st.id(), st);
+            self.states.insert(id, st);
+        }
+        self.reindex(id);
+    }
+
+    /// Tool-node completion: stamp metrics (the TTFT point *is* the
+    /// completion — a tool emits no tokens), stream `TurnDone`, and run
+    /// the shared DAG bookkeeping (tools pass the conversation through
+    /// to their dependents).
+    fn finish_tool(&mut self, req: Request, t: f64) {
+        self.finished += 1;
+        let m = ReqMetrics {
+            id: req.id,
+            priority: req.priority,
+            profile: req.profile.clone(),
+            flow_id: req.flow_id(),
+            turn_idx: req.turn_idx(),
+            deps: req.dep_indices(),
+            think_time_us: req.flow.as_ref().map(|f| f.think_time_us).unwrap_or(0.0),
+            tool: true,
+            arrival_us: req.arrival_us,
+            first_token_us: Some(t),
+            done_us: Some(t),
+            input_len: req.prompt_len(),
+            output_tokens: 0,
+            cached_prefix_len: 0,
+            prefill_tokens: 0,
+            cancelled: false,
+        };
+        self.events.push(EngineEvent::TurnDone {
+            id: req.id,
+            at_us: t,
+            arrival_us: req.arrival_us,
+            first_token_us: t,
+            tokens: vec![],
+            cached_prefix: 0,
+        });
+        self.on_tool_done(&req, t);
+        self.retire_metrics(m);
+    }
+
+    /// Flow bookkeeping at LLM-turn completion: record the actual
+    /// conversation and branch contribution, retain the session KV, and
+    /// release whatever the DAG unblocked.
+    fn on_request_done(&mut self, st: &mut ReqState, now_us: f64) {
+        let Some(fb) = st.req.flow.clone() else { return };
+        let mut context = st.req.prompt.clone();
+        context.extend(&st.tokens);
+        let ds = fb.delta_start.min(st.req.prompt.len());
+        let mut contrib = st.req.prompt[ds..].to_vec();
+        contrib.extend(&st.tokens);
+        let cache = st.cache.take();
+        let pos = st.pos;
+        self.flow_node_done(&fb, context, contrib, Some((cache, pos)), now_us);
+    }
+
+    /// Flow bookkeeping at tool completion: the conversation passes
+    /// through from the tool's first predecessor (its result is part of
+    /// the *next* LLM turn's delta), so the retained LLM cache stays
+    /// valid across the hop.
+    fn on_tool_done(&mut self, req: &Request, now_us: f64) {
+        let Some(fb) = req.flow.clone() else { return };
+        let context = fb
+            .dep_indices()
+            .first()
+            .and_then(|d| {
+                self.flows
+                    .get(&fb.flow_id)
+                    .and_then(|p| p.outputs.get(d))
+                    .map(|o| o.context.clone())
+            })
+            .unwrap_or_default();
+        self.flow_node_done(&fb, context, vec![], None, now_us);
+    }
+
+    /// Shared DAG bookkeeping at node completion: mark the node done,
+    /// retain conversation state for joins and (LLM nodes) the session
+    /// KV, then release every held node whose predecessors are all
+    /// complete — each one think-time later, with the actual context
+    /// stitched over its placeholder prefix.
+    fn flow_node_done(
+        &mut self,
+        fb: &FlowBinding,
+        context: Vec<i32>,
+        contrib: Vec<i32>,
+        session: Option<(Option<KvCache>, usize)>,
+        now_us: f64,
+    ) {
+        let fid = fb.flow_id;
+        self.flows.entry(fid).or_default().mark_done(fb.turn_idx);
+        let held_more = self.held.get(&fid).map(|c| !c.is_empty()).unwrap_or(false);
+        // Wall clock: a later call of this session may still arrive
+        // online — retain while the binding expects more nodes.
+        // Virtual clock: the observed DAG *is* the flow.
+        let expects_more = self.clock.is_wall() && fb.turn_idx + 1 < fb.total_turns;
+        match session {
+            Some((cache, pos)) => {
+                if let Some(pool) = &mut self.sessions {
+                    if held_more || expects_more {
+                        pool.retain(fid, cache, context.clone(), pos, now_us);
+                    } else {
+                        pool.drop_session(fid);
+                    }
+                }
+            }
+            // Tool nodes leave the retained LLM cache untouched.
+            None => {
+                if !held_more && !expects_more {
+                    if let Some(pool) = &mut self.sessions {
+                        pool.drop_session(fid);
+                    }
+                }
+            }
+        }
+        if held_more {
+            self.flows
+                .entry(fid)
+                .or_default()
+                .outputs
+                .insert(fb.turn_idx, NodeOutput { context, contrib });
+        }
+        self.release_ready(fid);
+        self.cleanup_flow(fid);
+        self.shed_flow_state();
+    }
+
+    /// Release every held node of `fid` whose DAG predecessors are all
+    /// done: stitch the actual merged context over placeholder
+    /// prefixes, stamp the arrival one think-time after the *last*
+    /// predecessor's completion (i.e. now), and queue it.
+    fn release_ready(&mut self, fid: FlowId) {
+        let ready: Vec<Request> = {
+            let Some(prog) = self.flows.get(&fid) else { return };
+            let Some(chain) = self.held.get_mut(&fid) else { return };
+            let mut out = vec![];
+            let mut i = 0;
+            while i < chain.len() {
+                let ok = chain[i]
+                    .flow
+                    .as_ref()
+                    .map(|fb| fb.dep_indices().iter().all(|d| prog.done.contains(d)))
+                    .unwrap_or(true);
+                if ok {
+                    out.push(chain.remove(i));
+                } else {
+                    i += 1;
+                }
+            }
+            out
+        };
+        if self.held.get(&fid).map(|c| c.is_empty()).unwrap_or(false) {
+            self.held.remove(&fid);
+        }
+        if ready.is_empty() {
+            return;
+        }
+        let now = self.now();
+        for mut nxt in ready {
+            let fb = nxt.flow.clone().expect("held node has a binding");
+            if fb.delta_start > 0 {
+                self.stitch(&mut nxt, &fb);
+            }
+            // the node "arrives" one think-time after its predecessors
+            nxt.arrival_us = now + fb.think_time_us.max(0.0);
+            self.insert_pending(nxt);
         }
     }
 
-    /// Flow bookkeeping at turn completion: retain the session KV for
-    /// the successor turn, record the actual conversation, and release
-    /// the successor one think-time later with that conversation
-    /// stitched over the generator's placeholder prefix.
-    fn on_request_done(&mut self, st: &mut ReqState, now_us: f64) {
-        let Some(fb) = st.req.flow.clone() else { return };
-        self.advance_flow_done(fb.flow_id, fb.turn_idx + 1);
-        let successor = self.chains.get_mut(&fb.flow_id).and_then(|c| c.pop_front());
-        if self.chains.get(&fb.flow_id).map(|c| c.is_empty()).unwrap_or(false) {
-            self.chains.remove(&fb.flow_id);
-        }
-        let Some(mut nxt) = successor else {
-            // Wall clock: a later call of this session may still arrive
-            // online — retain while the binding expects more turns.
-            // Virtual clock: the observed chain *is* the flow; nothing
-            // will reuse this session.
-            let expects_more =
-                self.clock.is_wall() && fb.turn_idx + 1 < fb.total_turns;
-            if expects_more {
-                let mut convo = st.req.prompt.clone();
-                convo.extend(&st.tokens);
-                if let Some(pool) = &mut self.sessions {
-                    pool.retain(fb.flow_id, st.cache.take(), convo, st.pos, now_us);
-                }
-            } else if let Some(pool) = &mut self.sessions {
-                pool.drop_session(fb.flow_id);
+    /// Replace a placeholder context estimate with the actual one: the
+    /// first predecessor's conversation plus every other predecessor's
+    /// branch contribution, in dependency order.  Same length by
+    /// construction (reply budgets are always generated in full); if
+    /// the outputs were shed, the placeholder stays — a deterministic,
+    /// mild degradation.
+    fn stitch(&self, nxt: &mut Request, fb: &FlowBinding) {
+        let Some(prog) = self.flows.get(&fb.flow_id) else { return };
+        let deps = fb.dep_indices();
+        let Some(first) = deps.first() else { return };
+        let Some(base) = prog.outputs.get(first) else { return };
+        let mut merged = base.context.clone();
+        for d in &deps[1..] {
+            if let Some(o) = prog.outputs.get(d) {
+                merged.extend_from_slice(&o.contrib);
             }
-            return;
-        };
-        // actual conversation = this turn's prompt + everything generated
-        let mut convo = st.req.prompt.clone();
-        convo.extend(&st.tokens);
-        if let Some(pool) = &mut self.sessions {
-            pool.retain(fb.flow_id, st.cache.take(), convo.clone(), st.pos, now_us);
         }
-        let nfb = nxt.flow.as_ref().expect("chained turn has a binding");
-        let think = nfb.think_time_us.max(0.0);
-        // stitch: replace the placeholder conversation estimate with
-        // the real one (same length by construction: the reply budget
-        // is always generated in full).  A self-contained successor
-        // (delta_start == 0 — the online-session path) already carries
-        // its real prompt and is released as-is.
-        if nfb.delta_start > 0 {
-            let ds = nfb.delta_start.min(nxt.prompt.len());
-            let delta = nxt.prompt.split_off(ds);
-            nxt.prompt = convo;
-            nxt.prompt.extend(delta);
+        let ds = fb.delta_start.min(nxt.prompt.len());
+        let delta = nxt.prompt.split_off(ds);
+        nxt.prompt = merged;
+        nxt.prompt.extend(delta);
+    }
+
+    /// Once a flow has no held nodes left, nothing will stitch against
+    /// its outputs — drop them.  The done/dead sets stay as the online
+    /// continuation watermark (bounded by `FLOW_DONE_MAX`).
+    fn cleanup_flow(&mut self, fid: FlowId) {
+        if !self.held.contains_key(&fid) {
+            if let Some(p) = self.flows.get_mut(&fid) {
+                p.outputs.clear();
+            }
         }
-        // the turn "arrives" when the user finishes thinking
-        nxt.arrival_us = now_us + think;
-        self.insert_pending(nxt);
     }
 
     pub fn all_done(&self) -> bool {
-        self.pending.is_empty() && self.finished == self.total_requests
+        self.pending.is_empty()
+            && self.tool_wait.is_empty()
+            && self.finished == self.total_requests
     }
 
     pub fn unfinished(&self) -> usize {
@@ -729,6 +1108,7 @@ impl Driver {
             kv_evictions: self.kv_evictions,
             session_evictions: self.session_evictions,
             cancellations: self.cancellations,
+            dropped_reqs: self.dropped_reqs,
         })
     }
 }
@@ -783,16 +1163,101 @@ mod tests {
                 prompt: prompt.clone(),
                 max_new_tokens: out,
                 profile: "flow".into(),
-                flow: Some(crate::workload::FlowBinding {
+                flow: Some(crate::workload::FlowBinding::linear(
                     flow_id,
-                    turn_idx: k,
-                    total_turns: 3,
-                    think_time_us: if k == 0 { 0.0 } else { think_us },
-                    delta_start: if k == 0 { 0 } else { prompt.len() - delta },
-                }),
+                    k,
+                    3,
+                    if k == 0 { 0.0 } else { think_us },
+                    if k == 0 { 0 } else { prompt.len() - delta },
+                )),
             });
         }
         turns
+    }
+
+    /// A fan-out/join DAG: 0 → {1, 2} → 3 (all LLM nodes).
+    ///
+    /// node 0: 40-token opener, 4-token reply → context 44;
+    /// nodes 1/2: deltas 10/12 over the context → prompts 54/56;
+    /// node 3: join of both branches — merged context
+    /// 44 + (10+4) + (12+4) = 74, delta 8 → prompt 82.
+    fn diamond_flow(flow_id: u64, first_id: u64) -> Vec<Request> {
+        let mk = |idx: usize, plen: usize, ds: usize, deps: Vec<usize>, think: f64| {
+            let mut prompt = vec![9i32; ds];
+            prompt.extend(vec![(3 + idx) as i32; plen - ds]);
+            Request {
+                id: first_id + idx as u64,
+                priority: Priority::Reactive,
+                arrival_us: 0.0,
+                prompt,
+                max_new_tokens: 4,
+                profile: "dag".into(),
+                flow: Some(crate::workload::FlowBinding {
+                    flow_id,
+                    turn_idx: idx,
+                    total_turns: 4,
+                    think_time_us: think,
+                    delta_start: ds,
+                    deps,
+                    node: crate::workload::NodeKind::Llm,
+                    crit_path: 1,
+                }),
+            }
+        };
+        vec![
+            mk(0, 40, 0, vec![], 0.0),
+            mk(1, 54, 44, vec![0], 1_000.0),
+            mk(2, 56, 44, vec![0], 2_000.0),
+            mk(3, 82, 74, vec![1, 2], 500.0),
+        ]
+    }
+
+    /// LLM turn → CPU tool call → LLM digest.
+    fn tool_chain_flow(flow_id: u64, first_id: u64) -> Vec<Request> {
+        let fb = |idx: usize, ds: usize, deps: Vec<usize>, node| {
+            crate::workload::FlowBinding {
+                flow_id,
+                turn_idx: idx,
+                total_turns: 3,
+                think_time_us: 0.0,
+                delta_start: ds,
+                deps,
+                node,
+                crit_path: 1,
+            }
+        };
+        use crate::workload::NodeKind;
+        let mut digest = vec![9i32; 44];
+        digest.extend(vec![5; 16]);
+        vec![
+            Request {
+                id: first_id,
+                priority: Priority::Reactive,
+                arrival_us: 0.0,
+                prompt: vec![3; 40],
+                max_new_tokens: 4,
+                profile: "agent".into(),
+                flow: Some(fb(0, 0, vec![], NodeKind::Llm)),
+            },
+            Request {
+                id: first_id + 1,
+                priority: Priority::Reactive,
+                arrival_us: 0.0,
+                prompt: vec![7; 8],
+                max_new_tokens: 0,
+                profile: "agent".into(),
+                flow: Some(fb(1, 0, vec![0], NodeKind::Tool { flops: 7e9, bytes: 2e8 })),
+            },
+            Request {
+                id: first_id + 2,
+                priority: Priority::Reactive,
+                arrival_us: 0.0,
+                prompt: digest,
+                max_new_tokens: 4,
+                profile: "agent".into(),
+                flow: Some(fb(2, 44, vec![1], NodeKind::Llm)),
+            },
+        ]
     }
 
     /// A trivial FCFS policy good enough to exercise the driver.
@@ -900,6 +1365,9 @@ mod tests {
         // flow identity lands in the metrics
         assert!(rep.reqs.iter().all(|m| m.flow_id == Some(1)));
         assert_eq!(rep.reqs.iter().map(|m| m.turn_idx).collect::<Vec<_>>(), vec![0, 1, 2]);
+        // linear chains resolve their implicit DAG edges
+        assert_eq!(rep.reqs[1].deps, vec![0]);
+        assert_eq!(rep.reqs[2].deps, vec![1]);
     }
 
     #[test]
@@ -945,6 +1413,56 @@ mod tests {
         for m in rep.reqs.iter().filter(|m| m.flow_id.is_none()) {
             assert_eq!(m.cached_prefix_len, 0);
         }
+    }
+
+    #[test]
+    fn fan_out_join_releases_after_all_predecessors() {
+        let rep = run_fcfs_opts(diamond_flow(1, 10), true);
+        assert_eq!(rep.reqs.iter().filter(|m| m.finished()).count(), 4);
+        let m = |i: u64| rep.reqs.iter().find(|m| m.id == 10 + i).unwrap();
+        let (m0, m1, m2, m3) = (m(0), m(1), m(2), m(3));
+        // both branches release one think-time after the root completes
+        assert!((m1.arrival_us - (m0.done_us.unwrap() + 1_000.0)).abs() < 1e-6);
+        assert!((m2.arrival_us - (m0.done_us.unwrap() + 2_000.0)).abs() < 1e-6);
+        // the join waits for *both* branches, then its own think-time
+        let last = m1.done_us.unwrap().max(m2.done_us.unwrap());
+        assert!(
+            (m3.arrival_us - (last + 500.0)).abs() < 1e-6,
+            "join released at {} want {}", m3.arrival_us, last + 500.0
+        );
+        assert!(m3.first_token_us.unwrap() > last + 500.0);
+        // join stitching preserves the generator's length estimate
+        assert_eq!(m3.input_len, 82);
+        // the first branch claimed the root's session cache (43 of the
+        // 44 trunk tokens; the last prompt token always recomputes)
+        assert_eq!(m1.cached_prefix_len, 43);
+        // the join reuses the shared 44-token trunk of whichever branch
+        // was retained last — both agree on the trunk
+        assert_eq!(m3.cached_prefix_len, 44);
+        // DAG identity lands in the metrics
+        assert_eq!(m3.deps, vec![1, 2]);
+        assert_eq!(m1.deps, vec![0]);
+    }
+
+    #[test]
+    fn tool_nodes_run_on_the_cpu_and_pass_the_context_through() {
+        let rep = run_fcfs_opts(tool_chain_flow(1, 20), true);
+        assert_eq!(rep.reqs.iter().filter(|m| m.finished()).count(), 3);
+        let m = |i: u64| rep.reqs.iter().find(|m| m.id == 20 + i).unwrap();
+        let (m0, mt, m2) = (m(0), m(1), m(2));
+        // the tool runs right after its predecessor, for a real CPU
+        // roofline duration, and generates no tokens
+        assert!(mt.tool);
+        assert!((mt.arrival_us - m0.done_us.unwrap()).abs() < 1e-6);
+        assert!(mt.done_us.unwrap() > mt.arrival_us + 1_000.0, "CPU roofline time");
+        assert_eq!(mt.output_tokens, 0);
+        assert!(rep.utilization("cpu") > 0.0, "the tool kernel ran on the CPU");
+        // the digest waits for the tool, sees the stitched conversation,
+        // and still reuses the LLM turn's KV across the tool hop
+        assert!((m2.arrival_us - mt.done_us.unwrap()).abs() < 1e-6);
+        assert_eq!(m2.input_len, 60);
+        assert_eq!(m2.cached_prefix_len, 43, "KV survives the tool hop");
+        assert_eq!(m2.prefill_tokens, 60 - 43);
     }
 
     #[test]
@@ -1054,5 +1572,68 @@ mod tests {
         assert!(rep.reqs.iter().find(|m| m.id == 11).unwrap().cancelled);
         assert!(rep.reqs.iter().find(|m| m.id == 12).unwrap().cancelled);
         assert_eq!(rep.cancellations, 2);
+    }
+
+    #[test]
+    fn cancelling_a_tool_node_kills_placeholder_dependents() {
+        let (mut d, ann) = mk_driver(tool_chain_flow(1, 20));
+        // the tool is still held behind the opening turn
+        assert!(d.cancel_request(21));
+        drive_fcfs(&mut d, &ann);
+        let rep = d.finish("fcfs-test".into()).unwrap();
+        assert!(rep.reqs.iter().find(|m| m.id == 20).unwrap().finished());
+        assert!(rep.reqs.iter().find(|m| m.id == 21).unwrap().cancelled);
+        assert!(
+            rep.reqs.iter().find(|m| m.id == 22).unwrap().cancelled,
+            "the digest's placeholder prompt cannot exist without the tool"
+        );
+        assert_eq!(rep.cancellations, 2);
+    }
+
+    #[test]
+    fn waiting_proactive_prefill_index_tracks_the_lifecycle() {
+        let (mut d, ann) = mk_driver(vec![req(1, 0.0, 100, 2), req(2, 0.0, 100, 2)]);
+        d.admit_ready(512);
+        assert_eq!(d.waiting_proactive_prefills(), vec![1, 2]);
+        let npu = d.sim.xpu_index("npu").unwrap();
+        let chunk = *d.states[&1].current_chunk().unwrap();
+        let t = *ann.prefill_kernel(&chunk).timing_on(npu);
+        d.launch(npu, t, false, KernelTag::Prefill { req: 1 });
+        assert_eq!(
+            d.waiting_proactive_prefills(),
+            vec![2],
+            "a running prefill leaves the index"
+        );
+        drive_fcfs(&mut d, &ann);
+        assert!(d.waiting_proactive_prefills().is_empty(), "drained at completion");
+        d.finish("fcfs-test".into()).unwrap();
+    }
+
+    #[test]
+    fn wall_bounded_history_flags_truncation_and_stream_stays_exact() {
+        let mut geo = crate::config::llama32_3b();
+        geo.n_layers = 2;
+        let soc = default_soc();
+        let ann = Annotator::new(
+            geo.clone(),
+            soc.xpus.iter().cloned().map(XpuModel::new).collect(),
+        );
+        let mut d = Driver::open(&soc, ExecBridge::synthetic(geo), EngineClock::wall());
+        d.limit_retained_history(4);
+        for i in 0..8u64 {
+            d.submit(req(i, 0.0, 40, 2));
+        }
+        drive_fcfs(&mut d, &ann);
+        let evs = d.take_events();
+        let mut acc = crate::metrics::ReportAccumulator::new();
+        for e in &evs {
+            acc.absorb(e);
+        }
+        let rep = d.finish("fcfs-test".into()).unwrap();
+        // the bounded window shed old entries — flagged, never silent
+        assert!(rep.dropped_reqs > 0);
+        assert_eq!(rep.reqs.len() + rep.dropped_reqs as usize, 8);
+        // the incremental accumulator still saw every completion
+        assert_eq!(acc.served, 8);
     }
 }

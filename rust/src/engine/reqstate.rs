@@ -92,6 +92,9 @@ impl ReqState {
             profile: req.profile.clone(),
             flow_id: req.flow_id(),
             turn_idx: req.turn_idx(),
+            deps: req.dep_indices(),
+            think_time_us: req.flow.as_ref().map(|f| f.think_time_us).unwrap_or(0.0),
+            tool: false, // tool nodes never allocate serving state
             arrival_us: req.arrival_us,
             first_token_us: None,
             done_us: None,

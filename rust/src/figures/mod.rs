@@ -7,9 +7,11 @@
 
 mod e2e;
 mod micro;
+mod workflows;
 
 pub use e2e::{
     fig_ablation, fig_flows, fig_mixed, fig_proactive, fig_schemes, flow_trace_mixed,
     mixed_trace,
 };
 pub use micro::{fig_affinity, fig_batching, fig_contention};
+pub use workflows::{dag_fanout_trace, dag_trace_mixed, fig_workflows};

@@ -1,0 +1,354 @@
+//! `fig workflows` — agentic workflow DAGs (DESIGN.md §3): tool-call
+//! nodes on the CPU, fan-out/join turns, and critical-path-aware
+//! scheduling, quantified on every engine family.
+//!
+//! Two experiments:
+//!
+//! 1. **Mixed DAG workload** — reactive tool-agents, proactive
+//!    map-reduce research flows, and proactive monitors with tool
+//!    fetches, run on every engine family.  Reported per engine: DAG
+//!    makespan vs the critical-path lower bound (their ratio is the
+//!    scheduling-induced serialization of parallelizable branches),
+//!    tool-node counts, prefix-cache hit-rate, and recomputed tokens.
+//! 2. **Fan-out scenario** — one deep dependency chain contending with
+//!    a stream of wide map-reduce flows; Agent.xpu with critical-path
+//!    priority (`SchedulerConfig::critical_path_priority`) against the
+//!    same engine in plain FIFO/ETC turn order.  Critical-path ordering
+//!    keeps the deep chain's serial tail off the end of the schedule,
+//!    so the overall DAG makespan strictly improves.
+
+use anyhow::Result;
+
+use crate::baselines::{CpuFcfsEngine, Scheme, SingleXpuEngine};
+use crate::config::{ModelGeometry, SchedulerConfig, SocConfig, llama32_3b};
+use crate::coordinator::AgentXpuEngine;
+use crate::engine::Engine;
+use crate::metrics::RunReport;
+use crate::util::bench::Table;
+use crate::util::json::Json;
+use crate::workload::{
+    DagShape, DagSpec, Flow, FlowBinding, NodeKind, Priority, Request, dag_flow_trace,
+    flatten_flows, merge_traces, profile,
+};
+
+fn geo_for_sweeps() -> ModelGeometry {
+    llama32_3b()
+}
+
+fn num_or_null(v: f64) -> Json {
+    if v.is_finite() { Json::Num(v) } else { Json::Null }
+}
+
+/// Build the mixed workflow-DAG workload: reactive ReAct-style tool
+/// agents + proactive map-reduce research flows + proactive monitors
+/// whose wake-ups run a tool fetch before each digest.
+pub fn dag_trace_mixed(duration_s: f64, seed: u64, geo: &ModelGeometry) -> Vec<Request> {
+    let agents = dag_flow_trace(
+        &DagSpec {
+            profile: profile("lmsys").unwrap(),
+            flow_rate_per_s: 0.05,
+            think_time_s: 8.0,
+            shape: DagShape::ToolAgent { rounds: 2 },
+            duration_s,
+            seed,
+            max_seq: geo.max_seq,
+        },
+        Priority::Reactive,
+        geo.vocab,
+        0,
+        0,
+    );
+    let mut next_id: u64 = agents.iter().map(|f| f.total_turns() as u64).sum();
+    let mut next_flow = agents.len() as u64;
+    let research = dag_flow_trace(
+        &DagSpec {
+            profile: profile("proactivebench").unwrap(),
+            flow_rate_per_s: 0.04,
+            think_time_s: 10.0,
+            shape: DagShape::MapReduce { fanout: 3 },
+            duration_s,
+            seed: seed + 1,
+            max_seq: geo.max_seq,
+        },
+        Priority::Proactive,
+        geo.vocab,
+        next_id,
+        next_flow,
+    );
+    next_id += research.iter().map(|f| f.total_turns() as u64).sum::<u64>();
+    next_flow += research.len() as u64;
+    let monitors = dag_flow_trace(
+        &DagSpec {
+            profile: profile("samsum").unwrap(),
+            flow_rate_per_s: 0.03,
+            think_time_s: 15.0,
+            shape: DagShape::MonitorTools { wakeups: 3 },
+            duration_s,
+            seed: seed + 2,
+            max_seq: geo.max_seq,
+        },
+        Priority::Proactive,
+        geo.vocab,
+        next_id,
+        next_flow,
+    );
+    let mut all = flatten_flows(agents);
+    all.extend(flatten_flows(research));
+    all.extend(flatten_flows(monitors));
+    merge_traces(vec![all])
+}
+
+/// Hand-built deep dependency chain: `rounds` LLM turns, each a large
+/// delta over the growing context, zero think-time — a serial tail
+/// whose critical path dominates the workload.
+fn deep_chain_flow(flow_id: u64, first_id: u64, arrival_us: f64, rounds: usize) -> Flow {
+    let (p0, out, delta) = (256usize, 8usize, 160usize);
+    let mut turns = vec![];
+    let mut ctx = 0usize;
+    for k in 0..rounds {
+        let (plen, ds) = if k == 0 { (p0, 0) } else { (ctx + delta, ctx) };
+        let mut prompt = vec![1i32; ds];
+        prompt.extend(vec![3; plen - ds]);
+        turns.push(Request {
+            id: first_id + k as u64,
+            priority: Priority::Proactive,
+            arrival_us,
+            prompt,
+            max_new_tokens: out,
+            profile: "deep-chain".into(),
+            flow: Some(FlowBinding::linear(flow_id, k, rounds, 0.0, ds)),
+        });
+        ctx = plen + out;
+    }
+    Flow {
+        id: flow_id,
+        priority: Priority::Proactive,
+        profile: "deep-chain".into(),
+        turns,
+    }
+}
+
+/// Hand-built wide map-reduce flow: a root digest fanning out `fanout`
+/// small summarize branches joined by a synthesis turn — lots of
+/// parallel slack, a short critical path.
+fn wide_flow(flow_id: u64, first_id: u64, arrival_us: f64, fanout: usize) -> Flow {
+    let (root_p, out, bdelta, jdelta) = (200usize, 8usize, 48usize, 32usize);
+    let ctx0 = root_p + out;
+    let mk = |idx: usize, plen: usize, ds: usize, deps: Vec<usize>| {
+        let mut prompt = vec![1i32; ds];
+        prompt.extend(vec![2; plen - ds]);
+        Request {
+            id: first_id + idx as u64,
+            priority: Priority::Proactive,
+            arrival_us,
+            prompt,
+            max_new_tokens: out,
+            profile: "mapreduce".into(),
+            flow: Some(FlowBinding {
+                flow_id,
+                turn_idx: idx,
+                total_turns: fanout + 2,
+                think_time_us: 0.0,
+                delta_start: ds,
+                deps,
+                node: NodeKind::Llm,
+                crit_path: 1, // annotated below
+            }),
+        }
+    };
+    let mut turns = vec![mk(0, root_p, 0, vec![])];
+    for i in 0..fanout {
+        turns.push(mk(1 + i, ctx0 + bdelta, ctx0, vec![0]));
+    }
+    let jds = (ctx0 + bdelta + out) + (fanout - 1) * (bdelta + out);
+    turns.push(mk(fanout + 1, jds + jdelta, jds, (1..=fanout).collect()));
+    let mut f = Flow {
+        id: flow_id,
+        priority: Priority::Proactive,
+        profile: "mapreduce".into(),
+        turns,
+    };
+    f.annotate_critical_paths();
+    f
+}
+
+/// The fan-out scenario: one 10-round deep chain at t=0 contending with
+/// wide map-reduce flows arriving throughout its lifetime.  FIFO/ETC
+/// turn order runs the short branch prefills first every round and
+/// pushes the deep chain's serial tail to the end of the schedule;
+/// critical-path priority resumes the deep chain first and lets the
+/// wide flows fill the bubbles.
+pub fn dag_fanout_trace() -> Vec<Request> {
+    let mut flows = vec![deep_chain_flow(1, 0, 0.0, 10)];
+    for i in 0..8u64 {
+        flows.push(wide_flow(
+            2 + i,
+            1_000 + 100 * i,
+            200_000.0 + i as f64 * 400_000.0,
+            4,
+        ));
+    }
+    flatten_flows(flows)
+}
+
+fn row_from(rep: &RunReport) -> (usize, usize, usize, f64, f64, f64, usize) {
+    let flows = rep.flows();
+    let unfinished = rep.reqs.iter().filter(|m| !m.finished()).count();
+    let tools = flows.iter().map(|f| f.tool_turns).sum();
+    let mk = rep.mean_flow_makespan_ms();
+    let cp = rep.mean_flow_critical_path_ms();
+    (
+        flows.len(),
+        unfinished,
+        tools,
+        mk,
+        cp,
+        rep.prefix_cache_hit_rate(),
+        rep.recomputed_prefill_tokens(),
+    )
+}
+
+/// The `fig workflows` harness (see module docs).
+pub fn fig_workflows(soc: &SocConfig, duration_s: f64, seed: u64) -> Result<Json> {
+    let geo = geo_for_sweeps();
+    let trace = dag_trace_mixed(duration_s, seed, &geo);
+    let mut rows = vec![];
+    let mut table = Table::new(&[
+        "engine", "flows", "tools", "DAG makespan (ms)", "crit-path (ms)",
+        "cp-efficiency", "hit-rate", "recomputed tok",
+    ]);
+    let mut engines: Vec<Box<dyn Engine>> = vec![
+        Box::new(AgentXpuEngine::synthetic(
+            geo.clone(),
+            soc.clone(),
+            SchedulerConfig::default(),
+        )),
+        Box::new(SingleXpuEngine::new(geo.clone(), soc.clone(), Scheme::PreemptRestart)),
+        Box::new(SingleXpuEngine::new(
+            geo.clone(),
+            soc.clone(),
+            Scheme::ContinuousBatching,
+        )),
+        Box::new(CpuFcfsEngine::new(geo.clone(), soc.clone(), 4)),
+    ];
+    for e in engines.iter_mut() {
+        let rep = e.run(trace.clone())?;
+        let (nflows, unfinished, tools, mk, cp, hit, recomputed) = row_from(&rep);
+        let eff = if mk > 0.0 { cp / mk } else { f64::NAN };
+        table.row(vec![
+            rep.engine.clone(),
+            format!("{nflows}"),
+            format!("{tools}"),
+            format!("{mk:.1}"),
+            format!("{cp:.1}"),
+            format!("{eff:.2}"),
+            format!("{hit:.2}"),
+            format!("{recomputed}"),
+        ]);
+        rows.push(
+            Json::obj()
+                .set("engine", rep.engine.as_str())
+                .set("flows", nflows)
+                .set("unfinished", unfinished)
+                .set("tool_turns", tools)
+                .set("mean_flow_makespan_ms", num_or_null(mk))
+                .set("mean_critical_path_ms", num_or_null(cp))
+                .set("cp_efficiency", num_or_null(eff))
+                .set("prefix_cache_hit_rate", num_or_null(hit))
+                .set("recomputed_prefill_tokens", recomputed),
+        );
+    }
+    println!("\n== fig-workflows: workflow DAGs across engine families ==");
+    println!("(cp-efficiency = critical-path lower bound / DAG makespan; 1.0 = no");
+    println!(" scheduling-induced serialization of parallelizable branches)");
+    table.print();
+
+    // Fan-out head-to-head: critical-path priority vs FIFO/ETC order.
+    let fanout = dag_fanout_trace();
+    let mut cp_engine = AgentXpuEngine::synthetic(
+        geo.clone(),
+        soc.clone(),
+        SchedulerConfig::default(),
+    );
+    let rep_cp = cp_engine.run(fanout.clone())?;
+    let mut fifo_engine = AgentXpuEngine::synthetic(
+        geo,
+        soc.clone(),
+        SchedulerConfig { critical_path_priority: false, ..Default::default() },
+    );
+    let rep_fifo = fifo_engine.run(fanout)?;
+    println!(
+        "\nfan-out scenario (1 deep chain + 8 wide map-reduce flows):\n\
+         critical-path order: makespan {:.1} ms, mean flow e2e {:.1} ms\n\
+         fifo/etc turn order: makespan {:.1} ms, mean flow e2e {:.1} ms",
+        rep_cp.makespan_us / 1e3,
+        rep_cp.mean_flow_e2e_ms(),
+        rep_fifo.makespan_us / 1e3,
+        rep_fifo.mean_flow_e2e_ms(),
+    );
+    let fanout_json = Json::obj()
+        .set("cp_makespan_ms", rep_cp.makespan_us / 1e3)
+        .set("fifo_makespan_ms", rep_fifo.makespan_us / 1e3)
+        .set("cp_mean_flow_e2e_ms", num_or_null(rep_cp.mean_flow_e2e_ms()))
+        .set("fifo_mean_flow_e2e_ms", num_or_null(rep_fifo.mean_flow_e2e_ms()));
+    Ok(Json::obj()
+        .set("figure", "workflows")
+        .set("rows", Json::Arr(rows))
+        .set("fanout", fanout_json))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::default_soc;
+
+    #[test]
+    fn dag_trace_mixed_has_all_shapes_and_unique_ids() {
+        let geo = llama32_3b();
+        let t = dag_trace_mixed(120.0, 7, &geo);
+        assert!(t.iter().any(|r| r.priority == Priority::Reactive && r.flow.is_some()));
+        assert!(t.iter().any(|r| r.priority == Priority::Proactive && r.flow.is_some()));
+        assert!(t.iter().any(|r| r.is_tool()), "tool nodes present");
+        let mut ids: Vec<u64> = t.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), t.len(), "request ids unique across DAG streams");
+        let mut fids: Vec<(u64, usize)> = t
+            .iter()
+            .filter_map(|r| r.flow.as_ref().map(|f| (f.flow_id, f.turn_idx)))
+            .collect();
+        fids.sort_unstable();
+        fids.dedup();
+        assert_eq!(fids.len(), t.len(), "(flow, node) pairs unique");
+    }
+
+    #[test]
+    fn fig_workflows_completes_everywhere_and_cp_beats_fifo() {
+        let j = fig_workflows(&default_soc(), 90.0, 7).unwrap();
+        let rows = j.get("rows").unwrap().as_arr().unwrap();
+        assert!(rows.len() >= 4, "all engine families ran");
+        for r in rows {
+            // acceptance: every engine family drains the DAG workload
+            assert_eq!(
+                r.get("unfinished").unwrap().as_usize().unwrap(),
+                0,
+                "{} lost workflow nodes",
+                r.get("engine").unwrap().as_str().unwrap()
+            );
+            assert!(r.get("tool_turns").unwrap().as_usize().unwrap() > 0);
+            // makespan is bounded below by the critical path
+            let mk = r.get("mean_flow_makespan_ms").unwrap().as_f64().unwrap();
+            let cp = r.get("mean_critical_path_ms").unwrap().as_f64().unwrap();
+            assert!(mk + 1e-6 >= cp, "makespan {mk} below critical path {cp}");
+        }
+        // acceptance: critical-path-aware ordering strictly improves the
+        // DAG makespan over FIFO turn order on the fan-out scenario
+        let f = j.get("fanout").unwrap();
+        let cp = f.get("cp_makespan_ms").unwrap().as_f64().unwrap();
+        let fifo = f.get("fifo_makespan_ms").unwrap().as_f64().unwrap();
+        assert!(
+            cp < fifo,
+            "critical-path order must strictly beat FIFO: {cp} vs {fifo}"
+        );
+    }
+}

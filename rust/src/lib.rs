@@ -31,13 +31,17 @@
 //!   co-scheduling schemes (a)/(b)/(c).
 //! - [`workload`] — agentic workload generators (Poisson proactive,
 //!   exponential-think-time reactive, dataset-analog trace profiles)
-//!   and multi-turn **flows**: ordered turn sequences sharing a session
-//!   id and a growing conversation prefix (paper §1, DESIGN.md §3).
+//!   and workflow **DAGs**: dependency graphs of LLM turns and CPU
+//!   tool-call nodes sharing a session id and a growing conversation
+//!   context, with fan-out/join; multi-turn flows are the linear case
+//!   (paper §1, DESIGN.md §3).
 //! - [`metrics`] — TTFT/TPOT/normalized latency, throughput, energy,
-//!   per-flow rollups (flow e2e, prefix-cache hit-rate).
+//!   per-flow rollups (DAG makespan vs critical-path lower bound,
+//!   prefix-cache hit-rate).
 //! - [`server`] — UDS JSON-lines frontend (paper §7) driving the shared
 //!   engine core against wall-clock time, with `session` tags that keep
-//!   KV alive across calls and a `cancel` verb for in-flight aborts.
+//!   KV alive across calls, a `deps` field for online workflow DAGs,
+//!   and a `cancel` verb for in-flight aborts.
 //! - [`trace`] — kernel-level execution traces for figures + debugging.
 
 pub mod baselines;

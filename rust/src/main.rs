@@ -1,8 +1,8 @@
 //! `agent-xpu` — launcher CLI.
 //!
 //! ```text
-//! agent-xpu fig <affinity|contention|batching|schemes|proactive|mixed|flows|ablation|all>
-//!           [--out results/] [--duration 120] [--seed 7]
+//! agent-xpu fig <affinity|contention|batching|schemes|proactive|mixed|flows|workflows|ablation|all>
+//!           [--out results/] [--duration 120] [--seed 7] [--smoke]
 //! agent-xpu run --rate 1.5 --interval 12 --duration 60 [--engine agent.xpu|llamacpp|scheme-a|b|c]
 //! agent-xpu serve --artifacts artifacts/small [--socket /tmp/agent-xpu.sock]
 //!           [--config runtime.json] [--b-max 8] [--session-capacity 32]
@@ -107,6 +107,13 @@ fn cmd_fig(args: &Args) -> Result<()> {
     }
     if which == "flows" || which == "all" {
         do_fig("fig_flows", figures::fig_flows(&soc, duration, seed)?)?;
+        ran = true;
+    }
+    if which == "workflows" || which == "all" {
+        // --smoke: a short CI-sized run that still exercises every
+        // engine family and the fan-out comparison
+        let d = if args.bool_or("smoke", false) { 30.0 } else { duration };
+        do_fig("fig_workflows", figures::fig_workflows(&soc, d, seed)?)?;
         ran = true;
     }
     if which == "ablation" || which == "all" {

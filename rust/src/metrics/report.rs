@@ -16,8 +16,16 @@ pub struct ReqMetrics {
     pub profile: ProfileTag,
     /// Flow/session membership (None for single-shot requests).
     pub flow_id: Option<FlowId>,
-    /// Turn index within the flow (0 for single-shot requests).
+    /// Node index within the flow DAG (0 for single-shot requests).
     pub turn_idx: usize,
+    /// Resolved DAG predecessors within the flow (empty for roots and
+    /// single-shot requests) — feeds the per-flow critical-path rollup.
+    pub deps: Vec<usize>,
+    /// Think-time on the edge into this node (µs; 0 for roots).
+    pub think_time_us: f64,
+    /// CPU tool-call node: no prefill/decode, TTFT point = completion.
+    /// Excluded from the per-class LLM latency aggregates.
+    pub tool: bool,
     pub arrival_us: f64,
     /// TTFT reference point: prefill completion / first token.
     pub first_token_us: Option<f64>,
@@ -84,28 +92,55 @@ pub struct RunReport {
     pub session_evictions: u64,
     /// Requests aborted via `cancel`.
     pub cancellations: u64,
+    /// Retired request metrics shed from the bounded wall-clock history
+    /// before `finish()` — `reqs` is truncated by exactly this many
+    /// (the incremental `ReportAccumulator` remains exact).  Always 0
+    /// for virtual-clock runs.
+    pub dropped_reqs: u64,
 }
 
-/// Rollup of one multi-turn flow.
+/// Rollup of one workflow DAG (a multi-turn flow is the linear case).
 #[derive(Debug, Clone)]
 pub struct FlowStats {
     pub flow_id: FlowId,
+    /// All nodes observed for the flow (LLM turns + tool calls).
     pub turns: usize,
+    /// CPU tool-call nodes among them.
+    pub tool_turns: usize,
     pub finished: bool,
-    /// First turn arrival → last turn completion (includes think-time).
+    /// DAG makespan: first node arrival → last node completion
+    /// (includes think-time).
     pub e2e_us: Option<f64>,
-    /// Mean per-turn TTFT (ms) over finished turns.
+    /// Critical-path lower bound on the makespan: the longest
+    /// dependency chain of observed per-node latencies + think-times.
+    /// `e2e / critical_path ≥ 1`; the gap is scheduling-induced
+    /// serialization of parallelizable branches.
+    pub critical_path_us: Option<f64>,
+    /// Mean per-turn TTFT (ms) over finished LLM turns.
     pub mean_turn_ttft_ms: f64,
     pub reused_tokens: usize,
     pub recomputed_tokens: usize,
 }
 
+/// Interpolated percentile over an ascending-sorted slice.
+///
+/// Linear interpolation between closest ranks (the R-7/NumPy default):
+/// `p` is clamped to [0, 1]; `p = 0` is the minimum, `p = 1` exactly
+/// the maximum (no out-of-bounds upper index), a single element is
+/// every percentile of itself, and an empty slice has none (NaN).
 pub fn percentile(sorted: &[f64], p: f64) -> f64 {
     if sorted.is_empty() {
         return f64::NAN;
     }
-    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
-    sorted[idx]
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let p = p.clamp(0.0, 1.0);
+    let rank = (sorted.len() - 1) as f64 * p;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize; // ≤ len-1 because p ≤ 1
+    let frac = rank - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
 }
 
 /// Aggregate statistics over a priority class.
@@ -122,9 +157,11 @@ pub struct Aggregate {
 }
 
 impl RunReport {
+    /// Per-class aggregates over LLM requests (CPU tool-call nodes are
+    /// not LLM work — their latency shows up in the flow rollups).
     pub fn class(&self, p: Priority) -> Aggregate {
         let sel: Vec<&ReqMetrics> =
-            self.reqs.iter().filter(|r| r.priority == p).collect();
+            self.reqs.iter().filter(|r| r.priority == p && !r.tool).collect();
         let fin: Vec<&ReqMetrics> = sel.iter().copied().filter(|r| r.finished()).collect();
         let mut norms: Vec<f64> =
             fin.iter().filter_map(|r| r.normalized_latency_ms()).collect();
@@ -166,13 +203,37 @@ impl RunReport {
                     turns.iter().filter_map(|m| m.done_us).fold(f64::NAN, f64::max);
                 let ttfts: Vec<f64> = turns
                     .iter()
+                    .filter(|m| !m.tool)
                     .filter_map(|m| m.ttft_us().map(|t| t / 1e3))
                     .collect();
+                // Critical-path lower bound over the observed DAG:
+                // lb(node) = max over deps lb(dep) + think + latency.
+                // Nodes are in topological order (deps point at lower
+                // indices), so one forward sweep suffices.
+                let critical_path_us = finished.then(|| {
+                    let mut lb: std::collections::HashMap<usize, f64> =
+                        std::collections::HashMap::new();
+                    let mut longest = 0.0f64;
+                    for m in &turns {
+                        let dur = m.done_us.unwrap_or(m.arrival_us) - m.arrival_us;
+                        let base = m
+                            .deps
+                            .iter()
+                            .filter_map(|d| lb.get(d).copied())
+                            .fold(0.0f64, f64::max);
+                        let v = base + m.think_time_us.max(0.0) + dur.max(0.0);
+                        lb.insert(m.turn_idx, v);
+                        longest = longest.max(v);
+                    }
+                    longest
+                });
                 FlowStats {
                     flow_id,
                     turns: turns.len(),
+                    tool_turns: turns.iter().filter(|m| m.tool).count(),
                     finished,
                     e2e_us: finished.then_some(last_done - first_arrival),
+                    critical_path_us,
                     mean_turn_ttft_ms: if ttfts.is_empty() {
                         f64::NAN
                     } else {
@@ -183,6 +244,30 @@ impl RunReport {
                 }
             })
             .collect()
+    }
+
+    /// Mean DAG makespan (ms) over finished flows — `NaN` without any.
+    pub fn mean_flow_makespan_ms(&self) -> f64 {
+        self.mean_flow_e2e_ms()
+    }
+
+    /// Mean critical-path lower bound (ms) over finished flows.
+    pub fn mean_flow_critical_path_ms(&self) -> f64 {
+        Self::mean_cp_ms(&self.flows())
+    }
+
+    /// Shared by the helper above and `to_json` (which already holds a
+    /// rollup) so the figure output can never diverge from the API.
+    fn mean_cp_ms(flows: &[FlowStats]) -> f64 {
+        let cps: Vec<f64> = flows
+            .iter()
+            .filter_map(|f| f.critical_path_us.map(|t| t / 1e3))
+            .collect();
+        if cps.is_empty() {
+            f64::NAN
+        } else {
+            cps.iter().sum::<f64>() / cps.len() as f64
+        }
     }
 
     /// Mean flow end-to-end latency (ms) over finished flows.
@@ -196,13 +281,14 @@ impl RunReport {
         }
     }
 
-    /// Fraction of continuation turns (turn_idx > 0) that admitted with
-    /// a usable session cache.  NaN when no continuation turns ran.
+    /// Fraction of continuation LLM turns (turn_idx > 0) that admitted
+    /// with a usable session cache.  NaN when no continuation turns ran
+    /// (tool nodes never prefill, so they are not eligible).
     pub fn prefix_cache_hit_rate(&self) -> f64 {
         let eligible: Vec<&ReqMetrics> = self
             .reqs
             .iter()
-            .filter(|m| m.flow_id.is_some() && m.turn_idx > 0)
+            .filter(|m| m.flow_id.is_some() && m.turn_idx > 0 && !m.tool)
             .collect();
         if eligible.is_empty() {
             return f64::NAN;
@@ -271,10 +357,13 @@ impl RunReport {
                 e2es.iter().sum::<f64>() / e2es.len() as f64
             }
         };
+        let mean_cp = Self::mean_cp_ms(&flows);
         let flows_json = Json::obj()
             .set("count", flows.len())
             .set("finished", flows.iter().filter(|f| f.finished).count())
+            .set("tool_turns", flows.iter().map(|f| f.tool_turns).sum::<usize>())
             .set("mean_e2e_ms", num_or_null(mean_e2e))
+            .set("mean_critical_path_ms", num_or_null(mean_cp))
             .set(
                 "mean_turn_ttft_ms",
                 num_or_null(if flows.is_empty() {
@@ -302,6 +391,7 @@ impl RunReport {
             .set("kv_evictions", self.kv_evictions as usize)
             .set("session_evictions", self.session_evictions as usize)
             .set("cancellations", self.cancellations as usize)
+            .set("dropped_reqs", self.dropped_reqs as usize)
     }
 }
 
@@ -384,6 +474,9 @@ mod tests {
             profile: "test".into(),
             flow_id: None,
             turn_idx: 0,
+            deps: vec![],
+            think_time_us: 0.0,
+            tool: false,
             arrival_us: arr,
             first_token_us: Some(arr + ttft),
             done_us: Some(arr + done),
@@ -407,6 +500,9 @@ mod tests {
         let mut m = req(id, Priority::Reactive, arr, 10_000.0, done - arr, il, 4);
         m.flow_id = Some(flow);
         m.turn_idx = turn;
+        if turn > 0 {
+            m.deps = vec![turn - 1];
+        }
         m.cached_prefix_len = cached;
         m.prefill_tokens = il - cached;
         m
@@ -426,7 +522,33 @@ mod tests {
             kv_evictions: 0,
             session_evictions: 0,
             cancellations: 0,
+            dropped_reqs: 0,
         }
+    }
+
+    #[test]
+    fn percentile_interpolates_between_ranks() {
+        let xs = vec![10.0, 20.0, 30.0, 40.0];
+        assert!((percentile(&xs, 0.0) - 10.0).abs() < 1e-9, "p0 = min");
+        assert!((percentile(&xs, 1.0) - 40.0).abs() < 1e-9, "p1 = max, in bounds");
+        assert!((percentile(&xs, 0.5) - 25.0).abs() < 1e-9, "median interpolates");
+        // p95 of 4 elements: rank 2.85 → 30 + 0.85 * 10
+        assert!((percentile(&xs, 0.95) - 38.5).abs() < 1e-9);
+        // out-of-range p is clamped, not an index panic
+        assert!((percentile(&xs, 1.5) - 40.0).abs() < 1e-9);
+        assert!((percentile(&xs, -0.5) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_edge_cases() {
+        assert!(percentile(&[], 0.5).is_nan(), "empty slice has no percentiles");
+        let one = vec![7.0];
+        for p in [0.0, 0.5, 0.99, 1.0] {
+            assert!((percentile(&one, p) - 7.0).abs() < 1e-9);
+        }
+        let two = vec![0.0, 100.0];
+        assert!((percentile(&two, 0.99) - 99.0).abs() < 1e-9);
+        assert!((percentile(&two, 1.0) - 100.0).abs() < 1e-9);
     }
 
     #[test]
@@ -487,7 +609,9 @@ mod tests {
         assert_eq!(j.get("engine").unwrap().as_str().unwrap(), "test");
         assert!(j.get("reactive").unwrap().get("mean_ttft_ms").is_ok());
         assert!(j.get("flows").unwrap().get("prefix_cache_hit_rate").is_ok());
+        assert!(j.get("flows").unwrap().get("mean_critical_path_ms").is_ok());
         assert!(j.get("kv_evictions").is_ok());
+        assert!(j.get("dropped_reqs").is_ok(), "truncation is flagged, never silent");
     }
 
     #[test]
@@ -533,6 +657,46 @@ mod tests {
         assert!((rep.prefix_cache_hit_rate() - 1.0).abs() < 1e-9);
         assert_eq!(rep.reused_prefix_tokens(), 50);
         assert_eq!(rep.recomputed_prefill_tokens(), 60 + 50 + 40 + 20);
+    }
+
+    #[test]
+    fn dag_rollup_computes_critical_path_and_tool_counts() {
+        let n0 = flow_req(1, 1, 0, 0.0, 100_000.0, 60, 0);
+        let mut n1 = flow_req(2, 1, 1, 110_000.0, 150_000.0, 80, 0);
+        n1.think_time_us = 10_000.0;
+        let mut n2 = flow_req(3, 1, 2, 110_000.0, 180_000.0, 8, 0);
+        n2.deps = vec![0];
+        n2.think_time_us = 10_000.0;
+        n2.tool = true;
+        let mut n3 = flow_req(4, 1, 3, 185_000.0, 220_000.0, 120, 0);
+        n3.deps = vec![1, 2];
+        n3.think_time_us = 5_000.0;
+        let rep = report(vec![n0, n1, n2, n3]);
+        let flows = rep.flows();
+        assert_eq!(flows.len(), 1);
+        let f = &flows[0];
+        assert_eq!((f.turns, f.tool_turns), (4, 1));
+        assert!(f.finished);
+        assert!((f.e2e_us.unwrap() - 220_000.0).abs() < 1e-6);
+        // longest chain: 0 (100k) →think 10k→ 2 (70k) →think 5k→ 3 (35k)
+        assert!((f.critical_path_us.unwrap() - 220_000.0).abs() < 1e-6);
+        assert!(f.e2e_us.unwrap() + 1e-6 >= f.critical_path_us.unwrap());
+        assert!((rep.mean_flow_critical_path_ms() - 220.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn tool_nodes_excluded_from_llm_aggregates_and_hit_rate() {
+        let mut tool = flow_req(2, 1, 1, 10.0, 20.0, 8, 0);
+        tool.tool = true;
+        let rep = report(vec![
+            flow_req(1, 1, 0, 0.0, 5.0, 60, 0),
+            tool,
+            flow_req(3, 1, 2, 30.0, 40.0, 80, 70),
+        ]);
+        let r = rep.class(Priority::Reactive);
+        assert_eq!(r.count, 2, "a tool call is not an LLM request");
+        // hit rate over LLM continuations only: one eligible, one hit
+        assert!((rep.prefix_cache_hit_rate() - 1.0).abs() < 1e-9);
     }
 
     #[test]

@@ -35,6 +35,14 @@
 //! prompt tokens the retained KV covered.  Retention is bounded by
 //! `SchedulerConfig::session_capacity` and shed LRU-first under memory
 //! pressure — the same policy the simulated coordinator applies.
+//!
+//! The optional `"deps":[<id>, ...]` field (requires `session`) makes a
+//! call a node of a workflow *DAG* (DESIGN.md §3): the engine holds it
+//! until every referenced generation of the same session has finished,
+//! so clients can fan out parallel subtasks and submit the join up
+//! front.  Unknown or forgotten ids are ignored; without `deps`, calls
+//! of a session form the implicit linear chain (each waits for the
+//! previous one).
 
 mod rt;
 mod uds;

@@ -17,7 +17,7 @@
 //! is bounded by `SchedulerConfig::session_capacity` and shed LRU-first
 //! by the memory governor, exactly as in simulation.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::mpsc::{Receiver, Sender, TryRecvError, channel};
 use std::sync::{Arc, Mutex};
 
@@ -27,7 +27,7 @@ use crate::config::{SchedulerConfig, SocConfig};
 use crate::coordinator::AgentXpuEngine;
 use crate::engine::{EngineClock, EngineCore, EngineEvent, ExecBridge};
 use crate::metrics::ReportAccumulator;
-use crate::workload::{FlowBinding, Priority, ReqId, Request};
+use crate::workload::{FlowBinding, NodeKind, Priority, ReqId, Request};
 
 /// Max session *tags* remembered by the server.  Tags arrive from
 /// clients, so the map must be bounded for a long-lived server; when
@@ -36,30 +36,52 @@ use crate::workload::{FlowBinding, Priority, ReqId, Request};
 /// LRU-bounded pool on its own).
 const SESSION_TAGS_MAX: usize = 1024;
 
+/// Generation ids remembered per tag for `deps` resolution (a DAG edge
+/// can only reference a recent call of the same session).
+const SESSION_DEPS_MAX: usize = 64;
+
+/// Per-tag session state: a stable flow id, the number of calls seen
+/// (the next node index), and a bounded map from generation id to node
+/// index so clients can express DAG dependencies between their calls.
+#[derive(Default)]
+struct SessionMeta {
+    flow_id: u64,
+    calls: usize,
+    /// generation id → node (turn) index within the flow.
+    turn_of: BTreeMap<u64, usize>,
+}
+
 /// Bounded session-tag registry: maps client tags to stable flow ids
-/// and counts the calls seen per tag (the flow turn index).  Ids are
+/// and counts the calls seen per tag (the flow node index).  Ids are
 /// monotonic (never reused), so a forgotten tag can never alias
 /// another session's retained cache.
 #[derive(Default)]
 struct SessionRegistry {
-    /// tag → (flow id, calls seen so far)
-    ids: HashMap<String, (u64, usize)>,
+    ids: HashMap<String, SessionMeta>,
     order: VecDeque<String>,
     next: u64,
 }
 
 impl SessionRegistry {
-    /// Resolve a tag to `(flow_id, turn_idx)` for its next call,
+    /// Resolve a tag to `(flow_id, turn_idx)` for the call `req_id`,
     /// registering the tag if new; evicts the oldest tag beyond
-    /// `SESSION_TAGS_MAX`.
-    fn resolve(&mut self, tag: &str) -> (u64, usize) {
+    /// `SESSION_TAGS_MAX` and the oldest remembered generation ids
+    /// beyond `SESSION_DEPS_MAX`.
+    fn resolve(&mut self, tag: &str, req_id: u64) -> (u64, usize) {
         if let Some(e) = self.ids.get_mut(tag) {
-            e.1 += 1;
-            return (e.0, e.1);
+            e.calls += 1;
+            let idx = e.calls;
+            e.turn_of.insert(req_id, idx);
+            while e.turn_of.len() > SESSION_DEPS_MAX {
+                let _ = e.turn_of.pop_first();
+            }
+            return (e.flow_id, idx);
         }
         let sid = self.next;
         self.next += 1;
-        self.ids.insert(tag.to_string(), (sid, 0));
+        let mut meta = SessionMeta { flow_id: sid, calls: 0, turn_of: BTreeMap::new() };
+        meta.turn_of.insert(req_id, 0);
+        self.ids.insert(tag.to_string(), meta);
         self.order.push_back(tag.to_string());
         while self.order.len() > SESSION_TAGS_MAX {
             if let Some(old) = self.order.pop_front() {
@@ -69,9 +91,23 @@ impl SessionRegistry {
         (sid, 0)
     }
 
+    /// Map generation ids to node indices within `tag`'s flow; unknown
+    /// (or forgotten) ids are dropped — the submission merely waits on
+    /// fewer predecessors.
+    fn resolve_deps(&self, tag: &str, deps: &[u64]) -> Vec<usize> {
+        let Some(e) = self.ids.get(tag) else { return vec![] };
+        let mut out: Vec<usize> = deps
+            .iter()
+            .filter_map(|id| e.turn_of.get(id).copied())
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
     #[cfg(test)]
     fn get(&self, tag: &str) -> Option<u64> {
-        self.ids.get(tag).map(|e| e.0)
+        self.ids.get(tag).map(|e| e.flow_id)
     }
 }
 
@@ -84,6 +120,10 @@ pub struct RtRequest {
     /// Session tag: calls sharing a tag reuse the retained KV of the
     /// previous call's conversation (`None` = single-shot).
     pub session: Option<String>,
+    /// DAG predecessors within the same session: generation ids this
+    /// call must wait for (fan-out/join workflows over the wire).
+    /// Empty = the implicit linear chain (wait for the previous call).
+    pub deps: Vec<u64>,
     /// Streamed token events land here.
     pub events: Sender<TokenEvent>,
 }
@@ -226,18 +266,33 @@ impl RtScheduler {
     ) -> Result<()> {
         match m {
             RtMsg::Submit(r) => {
-                // A session call is a turn of an open-ended flow: the
+                // A session call is a node of an open-ended flow: the
                 // engine's pool seeds its KV from the tag's previous
                 // call and retains it again afterwards.  delta_start=0
                 // marks the prompt self-contained (no trace stitching).
+                // `deps` turns calls into DAG nodes: the engine holds
+                // this one until every referenced generation finished.
                 let flow = r.session.as_ref().map(|tag| {
-                    let (flow_id, turn_idx) = registry.resolve(tag);
+                    let (flow_id, turn_idx) = registry.resolve(tag, r.id);
+                    let mut deps = registry.resolve_deps(tag, &r.deps);
+                    if !r.deps.is_empty() && deps.is_empty() {
+                        // Every referenced generation is unknown or
+                        // forgotten: run now ("waits on fewer
+                        // predecessors"), instead of an empty list
+                        // silently re-implying the linear chain.  A
+                        // self-index is the explicit no-predecessors
+                        // form (`FlowBinding::dep_indices`).
+                        deps = vec![turn_idx];
+                    }
                     FlowBinding {
                         flow_id,
                         turn_idx,
                         total_turns: usize::MAX,
                         think_time_us: 0.0,
                         delta_start: 0,
+                        deps,
+                        node: NodeKind::Llm,
+                        crit_path: 1, // open-ended: depth unknown
                     }
                 });
                 let _ = r.events.send(TokenEvent::Accepted { id: r.id });
@@ -307,6 +362,7 @@ mod tests {
             prompt: vec![1; plen],
             max_new_tokens: maxnew,
             session: None,
+            deps: vec![],
             events: etx,
         }))
         .unwrap();
@@ -327,6 +383,7 @@ mod tests {
             prompt,
             max_new_tokens: maxnew,
             session: Some(session.into()),
+            deps: vec![],
             events: etx,
         }))
         .unwrap();
@@ -401,22 +458,70 @@ mod tests {
     #[test]
     fn session_registry_is_bounded_and_ids_are_stable() {
         let mut reg = SessionRegistry::default();
-        let (a, t0) = reg.resolve("a");
+        let (a, t0) = reg.resolve("a", 1);
         assert_eq!(t0, 0);
-        let (a2, t1) = reg.resolve("a");
+        let (a2, t1) = reg.resolve("a", 2);
         assert_eq!((a2, t1), (a, 1), "same tag, same id, next turn");
-        let (b, _) = reg.resolve("b");
+        let (b, _) = reg.resolve("b", 3);
         assert_ne!(a, b);
+        // generation ids resolve to node indices for DAG deps
+        assert_eq!(reg.resolve_deps("a", &[1, 2]), vec![0, 1]);
+        assert_eq!(reg.resolve_deps("a", &[99]), Vec::<usize>::new(), "unknown ids drop");
         // overflow the registry: oldest tags are forgotten...
         for i in 0..SESSION_TAGS_MAX {
-            reg.resolve(&format!("t{i}"));
+            reg.resolve(&format!("t{i}"), 100 + i as u64);
         }
         assert!(reg.get("a").is_none(), "oldest tag evicted");
         // ...and ids are monotonic, so a re-registered tag can never
         // alias another session's retained cache
-        let (a3, t) = reg.resolve("a");
+        let (a3, t) = reg.resolve("a", 9999);
         assert!(a3 > b);
         assert_eq!(t, 0, "a forgotten tag starts cold");
+    }
+
+    #[test]
+    fn dag_deps_between_session_calls_complete_without_deadlock() {
+        let (tx, stats) = spawn_default();
+        let (etx0, erx0) = channel();
+        tx.send(RtMsg::Submit(RtRequest {
+            id: 1,
+            priority: Priority::Reactive,
+            prompt: vec![5; 120],
+            max_new_tokens: 12,
+            session: Some("wf".into()),
+            deps: vec![],
+            events: etx0,
+        }))
+        .unwrap();
+        // two fan-out calls over the root + a join over both, submitted
+        // immediately (the engine holds them until their deps finish)
+        let submit_dep = |id: u64, deps: Vec<u64>| {
+            let (etx, erx) = channel();
+            tx.send(RtMsg::Submit(RtRequest {
+                id,
+                priority: Priority::Reactive,
+                prompt: vec![6; 40],
+                max_new_tokens: 4,
+                session: Some("wf".into()),
+                deps,
+                events: etx,
+            }))
+            .unwrap();
+            erx
+        };
+        let erx2 = submit_dep(2, vec![1]);
+        let erx3 = submit_dep(3, vec![1]);
+        let erx4 = submit_dep(4, vec![2, 3]);
+        drop(tx);
+        for erx in [erx0, erx2, erx3, erx4] {
+            let events: Vec<TokenEvent> = erx.iter().collect();
+            assert!(
+                matches!(events.last().unwrap(), TokenEvent::Done { .. }),
+                "DAG call must finish, got {:?}",
+                events.last()
+            );
+        }
+        assert_eq!(stats.lock().unwrap().served, 4);
     }
 
     #[test]

@@ -195,6 +195,15 @@ fn submit_generate(
         .opt("session")
         .and_then(|s| s.as_str().ok())
         .map(|s| s.to_string());
+    // Optional DAG predecessors: generation ids of the same session
+    // this call must wait for (fan-out/join workflows, DESIGN.md §3).
+    let deps: Vec<u64> = match msg.opt("deps") {
+        Some(v) => v.as_usize_vec()?.into_iter().map(|d| d as u64).collect(),
+        None => vec![],
+    };
+    if !deps.is_empty() && session.is_none() {
+        bail!("deps require a session tag");
+    }
     let (etx, erx) = channel();
     tx.send(RtMsg::Submit(RtRequest {
         id,
@@ -202,6 +211,7 @@ fn submit_generate(
         prompt,
         max_new_tokens,
         session,
+        deps,
         events: etx,
     }))
     .map_err(|_| anyhow::anyhow!("scheduler is down"))?;
@@ -395,6 +405,75 @@ mod tests {
         // untagged calls never reuse
         let (toks, _, _) = client_generate(&path, &next, Priority::Reactive, 2).unwrap();
         assert_eq!(toks.len(), 2);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn uds_deps_field_submits_dag_calls() {
+        let path = start_server("deps");
+        let stream = UnixStream::connect(&path).unwrap();
+        let mut out = stream.try_clone().unwrap();
+        // root generation on session "wf"
+        writeln!(
+            out,
+            "{}",
+            Json::obj()
+                .set("type", "generate")
+                .set("prompt", vec![1i32; 64])
+                .set("max_new_tokens", 6usize)
+                .set("session", "wf")
+        )
+        .unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let acc = Json::parse(&line).unwrap();
+        assert_eq!(acc.get("type").unwrap().as_str().unwrap(), "accepted");
+        let root_id = acc.get("id").unwrap().as_usize().unwrap();
+        // two parallel dependents held behind the root
+        for _ in 0..2 {
+            writeln!(
+                out,
+                "{}",
+                Json::obj()
+                    .set("type", "generate")
+                    .set("prompt", vec![2i32; 32])
+                    .set("max_new_tokens", 3usize)
+                    .set("session", "wf")
+                    .set("deps", vec![root_id])
+            )
+            .unwrap();
+        }
+        // read interleaved frames until all three generations are done
+        let mut done = 0;
+        while done < 3 {
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            let msg = Json::parse(&line).unwrap();
+            match msg.get("type").unwrap().as_str().unwrap() {
+                "done" => done += 1,
+                "error" => panic!("unexpected error frame: {line}"),
+                _ => {}
+            }
+        }
+        // deps without a session tag are rejected
+        writeln!(
+            out,
+            "{}",
+            Json::obj()
+                .set("type", "generate")
+                .set("prompt", vec![3i32; 8])
+                .set("deps", vec![root_id])
+        )
+        .unwrap();
+        loop {
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            let msg = Json::parse(&line).unwrap();
+            if msg.get("type").unwrap().as_str().unwrap() == "error" {
+                break;
+            }
+        }
         let _ = std::fs::remove_file(path);
     }
 

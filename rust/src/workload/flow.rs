@@ -1,62 +1,158 @@
-//! Flow-level sessions (paper §1, §4): a *flow* is the unit of agentic
-//! work — an ordered sequence of LLM-call turns that share a session
-//! id, a growing conversation prefix, and one priority class.  Reactive
-//! flows are multi-turn chats (user think-time between turns);
-//! proactive flows are long-lived monitors that wake on events and
-//! digest them into the same running context.
+//! Flow-level sessions, generalized to **workflow DAGs** (paper §1, §4;
+//! DESIGN.md §3): a *flow* is the unit of agentic work — a dependency
+//! DAG of *nodes* sharing a session id, a growing conversation context,
+//! and one priority class.  A node is either an **LLM turn** (prefill +
+//! decode on the accelerators) or a **CPU tool call** (retrieval, code
+//! execution, file I/O — cost-modeled on the SoC's CPU roofline,
+//! contending for DDR like any kernel).  Edges are explicit
+//! dependencies; fan-out/join is allowed, e.g. a monitor digest that
+//! spawns three parallel retrieval/summarize subtasks and joins them
+//! into a final turn.
 //!
-//! A flow turn `k+1` never exists independently of turn `k`: its prompt
-//! is the conversation so far plus a fresh *delta* (the new user
-//! message / the new event batch), and it arrives one think-time after
-//! turn `k` completes.  The DES driver enforces both properties — it
-//! holds later turns until their predecessor finishes, stitches the
-//! *actual* generated conversation into the successor prompt, and (for
-//! engines with session-cache reuse enabled) seeds the turn's serving
-//! state from the retained KV so only the delta is prefilled
-//! (DESIGN.md §3).
+//! A node never starts before *all* its DAG predecessors complete plus
+//! its think-time.  The DES driver enforces this for every engine — it
+//! holds nodes until their predecessors finish, releases them one
+//! think-time later, and stitches the *actual* generated context (the
+//! first predecessor's conversation plus the other branches'
+//! contributions, in dependency order) over the generator's placeholder
+//! prefix.  Engines with session-cache reuse enabled additionally seed
+//! continuation turns from the retained KV so only the delta is
+//! prefilled (DESIGN.md §3).
+//!
+//! Linear multi-turn chains — the pre-DAG flow shape — are the special
+//! case `deps == [turn_idx - 1]`, which an empty `deps` vector implies,
+//! so chain traces and the online serving path are unchanged.
 
 use super::request::{Priority, ProfileTag, Request};
 
-/// Session identity shared by every turn of one flow.
+/// Session identity shared by every node of one flow.
 pub type FlowId = u64;
+
+/// What a workflow node executes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum NodeKind {
+    /// An LLM call: prefill the prompt, decode `max_new_tokens`.
+    Llm,
+    /// A CPU-side tool call (retrieval, code run, file I/O), modeled as
+    /// one kernel on the SoC's CPU roofline: `flops` of compute and
+    /// `bytes` of DDR traffic (contending with accelerator kernels).
+    Tool { flops: f64, bytes: f64 },
+}
+
+impl NodeKind {
+    pub fn is_tool(&self) -> bool {
+        matches!(self, NodeKind::Tool { .. })
+    }
+}
+
+impl Default for NodeKind {
+    fn default() -> Self {
+        NodeKind::Llm
+    }
+}
 
 /// Per-request flow membership, carried on [`Request::flow`].
 #[derive(Debug, Clone, PartialEq)]
 pub struct FlowBinding {
     pub flow_id: FlowId,
-    /// Position of this turn within the flow (0-based).
+    /// Position of this node within the flow (0-based; also its DAG
+    /// node index — dependencies always point at lower indices).
     pub turn_idx: usize,
-    /// Turns the flow was generated with (the driver trusts the actual
-    /// chain it observes, so a truncated trace still drains cleanly).
+    /// Nodes the flow was generated with (the driver trusts the actual
+    /// DAG it observes, so a truncated trace still drains cleanly).
     pub total_turns: usize,
-    /// Think-time gap (µs) between the previous turn's completion and
-    /// this turn's arrival — user reading/typing for reactive chats,
-    /// event inter-arrival for proactive monitors (paper §8.1).
+    /// Think-time gap (µs) between the completion of the *last* DAG
+    /// predecessor and this node's arrival — user reading/typing for
+    /// reactive chats, event inter-arrival for proactive monitors,
+    /// ~zero for tool invocations and fan-out spawns (paper §8.1).
     pub think_time_us: f64,
-    /// Offset into `prompt` where this turn's fresh tokens start; the
+    /// Offset into `prompt` where this node's fresh tokens start; the
     /// prefix `[..delta_start]` is the generator's *estimate* of the
-    /// conversation so far, which the driver replaces with the actual
-    /// one before admission.
+    /// merged predecessor context, which the driver replaces with the
+    /// actual one before admission.  0 = self-contained prompt (roots,
+    /// tool args, and the online serving path).
     pub delta_start: usize,
+    /// Explicit DAG predecessors (node indices `< turn_idx`).  Empty
+    /// means the implicit linear chain: `[turn_idx - 1]` for any node
+    /// after the first — see [`FlowBinding::dep_indices`].
+    pub deps: Vec<usize>,
+    /// LLM turn or CPU tool call.
+    pub node: NodeKind,
+    /// Length (in nodes) of the longest dependency chain from this node
+    /// to any sink of its flow, this node included — the scheduler's
+    /// critical-path priority key ([`Flow::annotate_critical_paths`]).
+    /// 1 for sinks and single-shot requests.
+    pub crit_path: usize,
 }
 
 impl FlowBinding {
-    /// Turns after the first reuse the session's conversation prefix.
+    /// A node of a plain linear chain (turn k depends on turn k-1) —
+    /// the pre-DAG flow shape and the online serving path.
+    pub fn linear(
+        flow_id: FlowId,
+        turn_idx: usize,
+        total_turns: usize,
+        think_time_us: f64,
+        delta_start: usize,
+    ) -> Self {
+        let crit_path = if total_turns == usize::MAX {
+            1 // open-ended serving session: remaining length unknown
+        } else {
+            total_turns.saturating_sub(turn_idx).max(1)
+        };
+        Self {
+            flow_id,
+            turn_idx,
+            total_turns,
+            think_time_us,
+            delta_start,
+            deps: vec![],
+            node: NodeKind::Llm,
+            crit_path,
+        }
+    }
+
+    /// Nodes after the first reuse the session's conversation context.
     pub fn is_continuation(&self) -> bool {
         self.turn_idx > 0
     }
+
+    pub fn is_tool(&self) -> bool {
+        self.node.is_tool()
+    }
+
+    /// Resolved DAG predecessors: the explicit `deps`, or the implicit
+    /// linear chain (`[turn_idx - 1]`) when none were given.  Indices
+    /// `>= turn_idx` would make the DAG cyclic and are dropped — so a
+    /// deliberately self-referencing `deps: vec![turn_idx]` is the
+    /// explicit "no predecessors" form (distinct from an empty list,
+    /// which means the linear chain).
+    pub fn dep_indices(&self) -> Vec<usize> {
+        if self.deps.is_empty() {
+            if self.turn_idx > 0 { vec![self.turn_idx - 1] } else { vec![] }
+        } else {
+            self.deps.iter().copied().filter(|&d| d < self.turn_idx).collect()
+        }
+    }
+
+    /// Critical-path priority key (≥ 1 even when unannotated).
+    pub fn crit_path_len(&self) -> usize {
+        self.crit_path.max(1)
+    }
 }
 
-/// An ordered multi-turn agentic flow: the workload-level object the
-/// generators emit and the engines consume (flattened into per-turn
-/// [`Request`]s whose `flow` bindings carry the session linkage).
+/// A multi-node agentic workflow: the workload-level object the
+/// generators emit and the engines consume (flattened into per-node
+/// [`Request`]s whose `flow` bindings carry the session linkage and the
+/// dependency edges).
 #[derive(Debug, Clone)]
 pub struct Flow {
     pub id: FlowId,
     pub priority: Priority,
     pub profile: ProfileTag,
-    /// Turns in order; every element carries a `FlowBinding` with this
-    /// flow's id and its own `turn_idx`.
+    /// Nodes indexed by `turn_idx`; every element carries a
+    /// `FlowBinding` with this flow's id and its own index, and
+    /// dependencies only point at lower indices (topological order).
     pub turns: Vec<Request>,
 }
 
@@ -65,23 +161,56 @@ impl Flow {
         self.turns.len()
     }
 
-    /// Arrival time of the opening turn (later turns are released by
-    /// the driver relative to their predecessor's completion).
+    /// LLM nodes (tool calls excluded).
+    pub fn llm_turns(&self) -> usize {
+        self.turns.iter().filter(|t| !t.is_tool()).count()
+    }
+
+    /// Arrival time of the opening node (later nodes are released by
+    /// the driver relative to their predecessors' completion).
     pub fn first_arrival_us(&self) -> f64 {
         self.turns.first().map(|t| t.arrival_us).unwrap_or(0.0)
     }
 
-    /// Total delta tokens across all turns — the prefill work a
+    /// Total delta tokens across all LLM nodes — the prefill work a
     /// session-cache-aware engine performs (a full-recompute engine
-    /// prefills the whole growing prefix every turn instead).
+    /// prefills the whole growing context every turn instead).
     pub fn delta_tokens(&self) -> usize {
         self.turns
             .iter()
+            .filter(|t| !t.is_tool())
             .map(|t| {
                 let ds = t.flow.as_ref().map(|f| f.delta_start).unwrap_or(0);
                 t.prompt_len().saturating_sub(ds)
             })
             .sum()
+    }
+
+    /// Stamp every node's `crit_path` with the length (in nodes) of the
+    /// longest dependency chain from that node to any sink.  Nodes are
+    /// in topological order (deps point at lower indices), so a single
+    /// reverse sweep suffices.
+    pub fn annotate_critical_paths(&mut self) {
+        let n = self.turns.len();
+        let mut cp = vec![1usize; n];
+        for i in (0..n).rev() {
+            let deps = self
+                .turns[i]
+                .flow
+                .as_ref()
+                .map(|f| f.dep_indices())
+                .unwrap_or_default();
+            for d in deps {
+                if d < i {
+                    cp[d] = cp[d].max(cp[i] + 1);
+                }
+            }
+        }
+        for (i, t) in self.turns.iter_mut().enumerate() {
+            if let Some(fb) = t.flow.as_mut() {
+                fb.crit_path = cp[i];
+            }
+        }
     }
 }
 
@@ -111,6 +240,9 @@ mod tests {
                 total_turns: total,
                 think_time_us: 1e6,
                 delta_start: ds,
+                deps: vec![],
+                node: NodeKind::Llm,
+                crit_path: 1,
             }),
         }
     }
@@ -124,6 +256,7 @@ mod tests {
             turns: vec![turn(3, 0, 2, 10, 0), turn(3, 1, 2, 20, 14)],
         };
         assert_eq!(f.total_turns(), 2);
+        assert_eq!(f.llm_turns(), 2);
         assert_eq!(f.first_arrival_us(), 0.0);
         // 10 (whole first prompt) + 6 (20 - delta_start 14)
         assert_eq!(f.delta_tokens(), 16);
@@ -149,5 +282,68 @@ mod tests {
         let t = flatten_flows(vec![a, b]);
         assert_eq!(t.len(), 2);
         assert_eq!(t[0].id, 200);
+    }
+
+    #[test]
+    fn empty_deps_imply_the_linear_chain() {
+        let fb = FlowBinding::linear(1, 0, 3, 0.0, 0);
+        assert!(fb.dep_indices().is_empty(), "roots have no predecessors");
+        assert_eq!(fb.crit_path, 3);
+        let fb = FlowBinding::linear(1, 2, 3, 5.0, 10);
+        assert_eq!(fb.dep_indices(), vec![1]);
+        assert_eq!(fb.crit_path, 1);
+        // open-ended serving sessions don't pretend to know their depth
+        let fb = FlowBinding::linear(1, 4, usize::MAX, 0.0, 0);
+        assert_eq!(fb.crit_path, 1);
+        assert_eq!(fb.dep_indices(), vec![3]);
+    }
+
+    #[test]
+    fn explicit_deps_express_fan_out_and_join() {
+        let mut join = FlowBinding::linear(1, 3, 4, 0.0, 50);
+        join.deps = vec![1, 2];
+        assert_eq!(join.dep_indices(), vec![1, 2]);
+        // forward/self references would be cyclic — dropped
+        join.deps = vec![1, 3, 7];
+        assert_eq!(join.dep_indices(), vec![1]);
+        // a pure self-reference is the explicit "no predecessors" form
+        // (the serving path uses it when every referenced generation
+        // was forgotten) — distinct from empty = implicit linear chain
+        join.deps = vec![3];
+        assert!(join.dep_indices().is_empty());
+    }
+
+    #[test]
+    fn tool_nodes_are_flagged() {
+        let mut fb = FlowBinding::linear(1, 1, 3, 0.0, 0);
+        assert!(!fb.is_tool());
+        fb.node = NodeKind::Tool { flops: 1e9, bytes: 1e8 };
+        assert!(fb.is_tool());
+    }
+
+    #[test]
+    fn critical_path_annotation_walks_the_dag() {
+        // diamond: 0 → {1, 2} → 3, plus a dangling short branch 0 → 4
+        let mut turns: Vec<Request> = (0..5).map(|i| turn(9, i, 5, 10, 0)).collect();
+        let set = |t: &mut Request, deps: Vec<usize>| {
+            t.flow.as_mut().unwrap().deps = deps;
+        };
+        set(&mut turns[1], vec![0]);
+        set(&mut turns[2], vec![0]);
+        set(&mut turns[3], vec![1, 2]);
+        set(&mut turns[4], vec![0]);
+        let mut f = Flow {
+            id: 9,
+            priority: Priority::Reactive,
+            profile: "dag".into(),
+            turns,
+        };
+        f.annotate_critical_paths();
+        let cp: Vec<usize> = f
+            .turns
+            .iter()
+            .map(|t| t.flow.as_ref().unwrap().crit_path)
+            .collect();
+        assert_eq!(cp, vec![3, 2, 2, 1, 1]);
     }
 }

@@ -3,7 +3,7 @@
 
 use crate::util::rng::Rng;
 
-use super::flow::{Flow, FlowBinding, FlowId};
+use super::flow::{Flow, FlowBinding, FlowId, NodeKind};
 use super::profiles::TraceProfile;
 use super::request::{Priority, ReqId, Request};
 
@@ -168,6 +168,9 @@ pub fn flow_trace(
                 total_turns: total,
                 think_time_us: think_times[k],
                 delta_start: if k == 0 { 0 } else { prior },
+                deps: vec![], // implicit linear chain
+                node: NodeKind::Llm,
+                crit_path: total - k,
             });
             prior = t.prompt_len() + t.max_new_tokens;
         }
@@ -177,6 +180,266 @@ pub fn flow_trace(
             profile: spec.profile.name.into(),
             turns,
         });
+        flow_id += 1;
+    }
+    flows
+}
+
+/// Workflow-DAG shapes (DESIGN.md §3): which agentic scenario a
+/// [`DagSpec`] stream generates.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DagShape {
+    /// ReAct-style tool agent: LLM turn → CPU tool call → LLM digest,
+    /// `rounds` times, closed by one user follow-up turn.
+    ToolAgent { rounds: usize },
+    /// Map-reduce research: a root digest fans out `fanout` parallel
+    /// (tool → summarize) branches, joined by a final synthesis turn.
+    MapReduce { fanout: usize },
+    /// Long-lived monitor: each of `wakeups` events is a tool fetch
+    /// feeding an LLM digest into the running context.
+    MonitorTools { wakeups: usize },
+}
+
+/// Parameters of one generated workflow-DAG stream.
+#[derive(Debug, Clone)]
+pub struct DagSpec {
+    pub profile: &'static TraceProfile,
+    /// Poisson rate of flow *starts* (flows/s).
+    pub flow_rate_per_s: f64,
+    /// Mean think-time (s) on user/event-facing edges, exponentially
+    /// distributed per gap; tool invocations and fan-out spawns release
+    /// immediately.
+    pub think_time_s: f64,
+    pub shape: DagShape,
+    pub duration_s: f64,
+    pub seed: u64,
+    /// Context budget (the model's max_seq).
+    pub max_seq: usize,
+}
+
+/// Incremental DAG construction mirroring the driver's stitching rules,
+/// so every placeholder prompt has exactly the length the stitched one
+/// will have: an LLM node's context is its prompt plus its reply
+/// budget; a tool node passes its first predecessor's context through;
+/// a join sees the first predecessor's context plus the other branches'
+/// contributions (delta + reply) in dependency order.
+struct DagBuilder<'a> {
+    r: &'a mut Rng,
+    vocab: usize,
+    max_seq: usize,
+    flow_id: FlowId,
+    next_id: ReqId,
+    priority: Priority,
+    profile: &'static str,
+    arrival_us: f64,
+    turns: Vec<Request>,
+    /// Estimated conversation context after each node.
+    ctx: Vec<Vec<i32>>,
+    /// Estimated branch contribution (delta + reply) of each node.
+    contrib: Vec<Vec<i32>>,
+}
+
+impl<'a> DagBuilder<'a> {
+    /// Append an LLM node; returns its index, or `None` when the
+    /// context budget is exhausted (the flow truncates cleanly).
+    fn llm(
+        &mut self,
+        deps: Vec<usize>,
+        delta_len: usize,
+        out: usize,
+        think_us: f64,
+    ) -> Option<usize> {
+        let merged: Vec<i32> = match deps.first() {
+            None => vec![],
+            Some(&d0) => {
+                let mut m = self.ctx[d0].clone();
+                for &d in &deps[1..] {
+                    m.extend_from_slice(&self.contrib[d]);
+                }
+                m
+            }
+        };
+        let budget = self.max_seq.saturating_sub(merged.len() + out);
+        if budget < 2 {
+            return None; // context budget exhausted
+        }
+        let dl = delta_len.clamp(1, budget - 1);
+        let mut prompt = merged.clone();
+        prompt.extend(prompt_tokens(self.r, dl, self.vocab));
+        let idx = self.turns.len();
+        self.turns.push(Request {
+            id: self.next_id,
+            priority: self.priority,
+            // placeholder for non-roots — the driver re-stamps on release
+            arrival_us: self.arrival_us,
+            prompt: prompt.clone(),
+            max_new_tokens: out,
+            profile: self.profile.into(),
+            flow: Some(FlowBinding {
+                flow_id: self.flow_id,
+                turn_idx: idx,
+                total_turns: 0, // fixed in finish()
+                think_time_us: think_us,
+                delta_start: merged.len(),
+                deps,
+                node: NodeKind::Llm,
+                crit_path: 1, // annotated in finish()
+            }),
+        });
+        self.next_id += 1;
+        let mut c = prompt;
+        c.extend(prompt_tokens(self.r, out, self.vocab));
+        let contrib = c[merged.len()..].to_vec();
+        self.ctx.push(c);
+        self.contrib.push(contrib);
+        Some(idx)
+    }
+
+    /// Append a CPU tool-call node depending on `dep`; returns its
+    /// index.  Cost is sampled per call: a few to tens of milliseconds
+    /// of CPU compute with real DDR traffic (retrieval, code execution,
+    /// file I/O — DESIGN.md §3).
+    fn tool(&mut self, dep: usize, think_us: f64) -> usize {
+        let args = self.r.usize(4, 17);
+        let flops = 1e9 * (2.0 + 30.0 * self.r.f64());
+        let bytes = 1e8 * (1.0 + 5.0 * self.r.f64());
+        let idx = self.turns.len();
+        self.turns.push(Request {
+            id: self.next_id,
+            priority: self.priority,
+            arrival_us: self.arrival_us,
+            prompt: prompt_tokens(self.r, args, self.vocab),
+            max_new_tokens: 0,
+            profile: self.profile.into(),
+            flow: Some(FlowBinding {
+                flow_id: self.flow_id,
+                turn_idx: idx,
+                total_turns: 0,
+                think_time_us: think_us,
+                delta_start: 0, // tool args are self-contained
+                deps: vec![dep],
+                node: NodeKind::Tool { flops, bytes },
+                crit_path: 1,
+            }),
+        });
+        self.next_id += 1;
+        self.ctx.push(self.ctx[dep].clone());
+        self.contrib.push(vec![]);
+        idx
+    }
+
+    fn finish(mut self) -> (Flow, ReqId) {
+        let total = self.turns.len();
+        for t in self.turns.iter_mut() {
+            if let Some(fb) = t.flow.as_mut() {
+                fb.total_turns = total;
+            }
+        }
+        let mut flow = Flow {
+            id: self.flow_id,
+            priority: self.priority,
+            profile: self.profile.into(),
+            turns: self.turns,
+        };
+        flow.annotate_critical_paths();
+        (flow, self.next_id)
+    }
+}
+
+/// Generate workflow-DAG flows of the given shape: Poisson flow starts,
+/// per-flow node graphs with explicit dependency edges, tool-call
+/// nodes, and fan-out/join (DESIGN.md §3).
+pub fn dag_flow_trace(
+    spec: &DagSpec,
+    priority: Priority,
+    vocab: usize,
+    first_id: ReqId,
+    first_flow: FlowId,
+) -> Vec<Flow> {
+    let mut r = Rng::new(spec.seed);
+    let mut flows = vec![];
+    let mut t_s = 0.0f64;
+    let mut id = first_id;
+    let mut flow_id = first_flow;
+    loop {
+        t_s += r.exponential(spec.flow_rate_per_s);
+        if t_s >= spec.duration_s {
+            break;
+        }
+        let (pl, ol) = spec.profile.sample_lengths(&mut r, spec.max_seq);
+        let pl = pl.clamp(8, spec.max_seq / 3);
+        let think = |r: &mut Rng| r.exponential(1.0 / spec.think_time_s) * 1e6;
+        let mut b = DagBuilder {
+            r: &mut r,
+            vocab,
+            max_seq: spec.max_seq,
+            flow_id,
+            next_id: id,
+            priority,
+            profile: spec.profile.name,
+            arrival_us: t_s * 1e6,
+            turns: vec![],
+            ctx: vec![],
+            contrib: vec![],
+        };
+        match spec.shape {
+            DagShape::ToolAgent { rounds } => {
+                let root = b.llm(vec![], pl, ol.clamp(4, 48), 0.0).expect("root fits");
+                let mut prev = root;
+                for _ in 0..rounds {
+                    let t = b.tool(prev, 0.0);
+                    let dl = b.r.usize(32, 129);
+                    let out = b.r.usize(8, 33);
+                    match b.llm(vec![t], dl, out, 0.0) {
+                        Some(l) => prev = l,
+                        None => break,
+                    }
+                }
+                // the user reads the result and follows up
+                let dl = b.r.usize(16, 65);
+                let out = b.r.usize(8, 33);
+                let tt = think(&mut *b.r);
+                let _ = b.llm(vec![prev], dl, out, tt);
+            }
+            DagShape::MapReduce { fanout } => {
+                let root = b.llm(vec![], pl, ol.clamp(4, 32), 0.0).expect("root fits");
+                let mut branches = vec![];
+                for _ in 0..fanout.max(1) {
+                    let t = b.tool(root, 0.0);
+                    let dl = b.r.usize(32, 97);
+                    let out = b.r.usize(8, 25);
+                    if let Some(l) = b.llm(vec![t], dl, out, 0.0) {
+                        branches.push(l);
+                    }
+                }
+                if branches.len() >= 2 {
+                    let dl = b.r.usize(16, 49);
+                    let out = b.r.usize(16, 49);
+                    let _ = b.llm(branches, dl, out, 0.0);
+                } else if let Some(&l) = branches.first() {
+                    let dl = b.r.usize(16, 49);
+                    let out = b.r.usize(16, 49);
+                    let _ = b.llm(vec![l], dl, out, 0.0);
+                }
+            }
+            DagShape::MonitorTools { wakeups } => {
+                let root = b.llm(vec![], pl, ol.clamp(4, 32), 0.0).expect("root fits");
+                let mut prev = root;
+                for _ in 0..wakeups {
+                    let tt = think(&mut *b.r);
+                    let t = b.tool(prev, tt);
+                    let dl = b.r.usize(24, 97);
+                    let out = b.r.usize(4, 25);
+                    match b.llm(vec![t], dl, out, 0.0) {
+                        Some(l) => prev = l,
+                        None => break,
+                    }
+                }
+            }
+        }
+        let (flow, next_id) = b.finish();
+        id = next_id;
+        flows.push(flow);
         flow_id += 1;
     }
     flows
@@ -298,6 +561,103 @@ mod tests {
                     .zip(&other)
                     .any(|(a, b)| a.first_arrival_us() != b.first_arrival_us())
         );
+    }
+
+    fn dag_spec(shape: DagShape, seed: u64) -> DagSpec {
+        DagSpec {
+            profile: profile("lmsys").unwrap(),
+            flow_rate_per_s: 0.05,
+            think_time_s: 6.0,
+            shape,
+            duration_s: 200.0,
+            seed,
+            max_seq: 2048,
+        }
+    }
+
+    #[test]
+    fn dag_traces_have_coherent_structure() {
+        for shape in [
+            DagShape::ToolAgent { rounds: 2 },
+            DagShape::MapReduce { fanout: 3 },
+            DagShape::MonitorTools { wakeups: 3 },
+        ] {
+            let flows = dag_flow_trace(&dag_spec(shape, 3), Priority::Proactive, 2048, 0, 50);
+            assert!(!flows.is_empty(), "{shape:?}");
+            let mut next_id = 0u64;
+            for f in &flows {
+                for (k, t) in f.turns.iter().enumerate() {
+                    let fb = t.flow.as_ref().unwrap();
+                    assert_eq!((fb.flow_id, fb.turn_idx, fb.total_turns), (f.id, k, f.total_turns()));
+                    assert_eq!(t.id, next_id);
+                    next_id += 1;
+                    assert!(t.prompt_len() + t.max_new_tokens <= 2048);
+                    // deps are a DAG in topological order
+                    for d in fb.dep_indices() {
+                        assert!(d < k, "{shape:?}: dep {d} >= node {k}");
+                    }
+                    if fb.is_tool() {
+                        assert_eq!(t.max_new_tokens, 0, "tools generate no tokens");
+                        assert_eq!(fb.delta_start, 0, "tool args are self-contained");
+                        assert_eq!(fb.dep_indices().len(), 1);
+                    }
+                    if k == 0 {
+                        assert!(!fb.is_tool(), "flows open with an LLM turn");
+                        assert_eq!(fb.delta_start, 0);
+                    } else if !fb.is_tool() {
+                        assert!(fb.delta_start > 0, "continuations carry a context estimate");
+                        assert!(fb.delta_start < t.prompt_len());
+                    }
+                    // critical path: annotated, and ≤ the dep's by at least 1
+                    assert!(fb.crit_path >= 1);
+                    for d in fb.dep_indices() {
+                        let dep_cp = f.turns[d].flow.as_ref().unwrap().crit_path;
+                        assert!(dep_cp >= fb.crit_path + 1, "{shape:?}: cp not monotone");
+                    }
+                }
+                assert!(f.turns.iter().any(|t| t.is_tool()), "{shape:?}: no tool node");
+            }
+            // seeded: identical regeneration
+            let again = dag_flow_trace(&dag_spec(shape, 3), Priority::Proactive, 2048, 0, 50);
+            assert_eq!(flows.len(), again.len());
+            assert!(flows.iter().zip(&again).all(|(a, b)| {
+                a.turns.len() == b.turns.len()
+                    && a.turns.iter().zip(&b.turns).all(|(x, y)| x.prompt == y.prompt)
+            }));
+        }
+    }
+
+    #[test]
+    fn map_reduce_joins_merge_branch_contributions() {
+        let flows = dag_flow_trace(
+            &dag_spec(DagShape::MapReduce { fanout: 3 }, 7),
+            Priority::Proactive,
+            2048,
+            0,
+            0,
+        );
+        let f = flows.iter().find(|f| f.total_turns() == 1 + 3 * 2 + 1).expect("full fan-out");
+        let join = f.turns.last().unwrap();
+        let jb = join.flow.as_ref().unwrap();
+        assert_eq!(jb.dep_indices().len(), 3, "join waits on every branch");
+        // the join's context estimate = first branch's conversation +
+        // the other branches' (delta + reply) contributions
+        let first_branch = &f.turns[jb.dep_indices()[0]];
+        let fb0 = first_branch.flow.as_ref().unwrap();
+        let mut expect = first_branch.prompt_len() + first_branch.max_new_tokens;
+        for &d in &jb.dep_indices()[1..] {
+            let b = &f.turns[d];
+            let bb = b.flow.as_ref().unwrap();
+            expect += b.prompt_len() - bb.delta_start + b.max_new_tokens;
+        }
+        assert_eq!(jb.delta_start, expect);
+        // the join placeholder literally extends the first branch's prompt
+        assert_eq!(
+            &join.prompt[..fb0.delta_start],
+            &first_branch.prompt[..fb0.delta_start]
+        );
+        // fan-out branches share the root as (transitive) ancestor
+        assert!(f.llm_turns() < f.total_turns(), "tool nodes present");
     }
 
     #[test]

@@ -7,21 +7,25 @@
 //! Poisson for proactive requests, exponential inter-arrival (user
 //! think-time) for reactive requests.  Everything is seeded.
 //!
-//! Two workload shapes are emitted:
+//! Three workload shapes are emitted:
 //! - single-shot streams (`proactive_trace`/`reactive_trace`) — one
 //!   isolated `Request` per agent call;
-//! - multi-turn **flows** (`flow_trace`) — ordered turn sequences
-//!   sharing a session id and a growing conversation prefix, the
-//!   paper's "long-lived, stateful LLM flows" (§1; DESIGN.md §3).
+//! - multi-turn **flows** (`flow_trace`) — linear turn chains sharing a
+//!   session id and a growing conversation prefix, the paper's
+//!   "long-lived, stateful LLM flows" (§1; DESIGN.md §3);
+//! - workflow **DAGs** (`dag_flow_trace`) — dependency graphs mixing
+//!   LLM turns with CPU tool-call nodes, with fan-out/join (tool
+//!   agents, map-reduce research, monitors with tool fetches).
 
 mod flow;
 mod gen;
 mod profiles;
 mod request;
 
-pub use flow::{Flow, FlowBinding, FlowId, flatten_flows};
+pub use flow::{Flow, FlowBinding, FlowId, NodeKind, flatten_flows};
 pub use gen::{
-    FlowSpec, WorkloadSpec, flow_trace, merge_traces, proactive_trace, reactive_trace,
+    DagShape, DagSpec, FlowSpec, WorkloadSpec, dag_flow_trace, flow_trace, merge_traces,
+    proactive_trace, reactive_trace,
 };
 pub use profiles::{TraceProfile, profile, profiles};
 pub use request::{Priority, ProfileTag, ReqId, Request};

@@ -66,6 +66,18 @@ impl Request {
     pub fn turn_idx(&self) -> usize {
         self.flow.as_ref().map(|f| f.turn_idx).unwrap_or(0)
     }
+
+    /// True for CPU tool-call workflow nodes (never prefilled/decoded;
+    /// the driver runs them as one kernel on the SoC's CPU).
+    pub fn is_tool(&self) -> bool {
+        self.flow.as_ref().map(|f| f.is_tool()).unwrap_or(false)
+    }
+
+    /// Resolved DAG predecessors within this request's flow (empty for
+    /// single-shot requests and flow roots).
+    pub fn dep_indices(&self) -> Vec<usize> {
+        self.flow.as_ref().map(|f| f.dep_indices()).unwrap_or_default()
+    }
 }
 
 #[cfg(test)]

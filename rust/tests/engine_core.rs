@@ -48,13 +48,13 @@ fn flow_turns(flow_id: u64, first_id: u64) -> Vec<Request> {
             prompt: prompt.clone(),
             max_new_tokens: out,
             profile: "flow".into(),
-            flow: Some(FlowBinding {
+            flow: Some(FlowBinding::linear(
                 flow_id,
-                turn_idx: k,
-                total_turns: 3,
-                think_time_us: if k == 0 { 0.0 } else { 10_000.0 },
-                delta_start: if k == 0 { 0 } else { prompt.len() - delta },
-            }),
+                k,
+                3,
+                if k == 0 { 0.0 } else { 10_000.0 },
+                if k == 0 { 0 } else { prompt.len() - delta },
+            )),
         });
     }
     turns
@@ -267,13 +267,7 @@ fn wall_clock_session_flows_reuse_kv_across_online_turns() {
         prompt: p1.clone(),
         max_new_tokens: 4,
         profile: "sess".into(),
-        flow: Some(FlowBinding {
-            flow_id: 7,
-            turn_idx: 0,
-            total_turns: usize::MAX,
-            think_time_us: 0.0,
-            delta_start: 0,
-        }),
+        flow: Some(FlowBinding::linear(7, 0, usize::MAX, 0.0, 0)),
     })
     .unwrap();
     let events = e.drain().unwrap();
@@ -296,13 +290,7 @@ fn wall_clock_session_flows_reuse_kv_across_online_turns() {
         prompt: p2,
         max_new_tokens: 3,
         profile: "sess".into(),
-        flow: Some(FlowBinding {
-            flow_id: 7,
-            turn_idx: 1,
-            total_turns: usize::MAX,
-            think_time_us: 0.0,
-            delta_start: 0,
-        }),
+        flow: Some(FlowBinding::linear(7, 1, usize::MAX, 0.0, 0)),
     })
     .unwrap();
     let events2 = e.drain().unwrap();
@@ -315,4 +303,119 @@ fn wall_clock_session_flows_reuse_kv_across_online_turns() {
         .unwrap();
     // retained KV covers the 60-token prompt + 3 of the 4 reply tokens
     assert_eq!(done2, 63, "online continuation must reuse the session KV");
+}
+
+/// Satellite audit (wall-clock held-turn release): a flow successor's
+/// `arrival_us` is re-stamped to predecessor completion + think-time.
+/// Under `EngineClock::Wall` both the completion stamp and the release
+/// must be *wall* µs — a virtual-SoC stamp would land in the past
+/// (virtual time is far smaller than wall time here) and skew serving
+/// TTFT — and the run must keep stepping through the think-time gap
+/// instead of stalling with the held turn never admitted.
+#[test]
+fn wall_clock_release_stamps_held_turns_in_wall_time() {
+    let think = 20_000.0; // 20 ms of user think-time, in wall µs
+    let mut e = agent();
+    e.start(EngineClock::wall()).unwrap();
+    let (p0, out, delta) = (80usize, 4usize, 30usize);
+    let mut prompt = vec![1i32; p0];
+    e.submit(Request {
+        id: 1,
+        priority: Priority::Reactive,
+        arrival_us: 0.0,
+        prompt: prompt.clone(),
+        max_new_tokens: out,
+        profile: "flow".into(),
+        flow: Some(FlowBinding::linear(5, 0, 2, 0.0, 0)),
+    })
+    .unwrap();
+    let ds = prompt.len() + out;
+    prompt = vec![2; ds]; // placeholder — the driver stitches
+    prompt.extend(vec![1; delta]);
+    e.submit(Request {
+        id: 2,
+        priority: Priority::Reactive,
+        arrival_us: 0.0,
+        prompt,
+        max_new_tokens: out,
+        profile: "flow".into(),
+        flow: Some(FlowBinding::linear(5, 1, 2, think, ds)),
+    })
+    .unwrap();
+    // drain must cross the wall think-time gap on its own (the
+    // regression: the driver stalled on future wall arrivals and
+    // finish() then failed with an unfinished held turn)
+    e.drain().unwrap();
+    let rep = e.finish().unwrap();
+    assert_eq!(rep.reqs.iter().filter(|m| m.finished()).count(), 2);
+    let t0 = rep.reqs.iter().find(|m| m.id == 1).unwrap();
+    let t1 = rep.reqs.iter().find(|m| m.id == 2).unwrap();
+    // released exactly one think-time after the predecessor, in wall µs
+    assert!(
+        t1.arrival_us >= t0.done_us.unwrap() + think - 1e-6,
+        "turn 1 released at {} before turn 0 done {} + think",
+        t1.arrival_us,
+        t0.done_us.unwrap()
+    );
+    // sanity ceiling: the release stamp is wall-domain (a virtual-µs
+    // stamp would be orders of magnitude smaller than the wall clock);
+    // generous bound since wall tests share noisy CI machines
+    assert!(
+        t1.arrival_us <= t0.done_us.unwrap() + think + 5e6,
+        "turn 1 release {} implausibly late",
+        t1.arrival_us
+    );
+    assert!(t1.first_token_us.unwrap() >= t1.arrival_us);
+}
+
+/// Fan-out/join DAG through the streaming core: branches submitted up
+/// front release together after the root; the join waits for both.
+#[test]
+fn dag_fan_out_join_through_the_core_api() {
+    use agent_xpu::workload::NodeKind;
+    let mut e = agent();
+    e.start(EngineClock::Virtual).unwrap();
+    let mk = |id: u64, idx: usize, plen: usize, ds: usize, deps: Vec<usize>| {
+        let mut prompt = vec![9i32; ds];
+        prompt.extend(vec![(3 + idx) as i32; plen - ds]);
+        Request {
+            id,
+            priority: Priority::Proactive,
+            arrival_us: 0.0,
+            prompt,
+            max_new_tokens: 4,
+            profile: "dag".into(),
+            flow: Some(FlowBinding {
+                flow_id: 9,
+                turn_idx: idx,
+                total_turns: 4,
+                think_time_us: 0.0,
+                delta_start: ds,
+                deps,
+                node: NodeKind::Llm,
+                crit_path: 1,
+            }),
+        }
+    };
+    // 0 → {1, 2} → 3 (context 40+4; deltas 10/12; join delta 8)
+    e.submit(mk(1, 0, 40, 0, vec![])).unwrap();
+    e.submit(mk(2, 1, 54, 44, vec![0])).unwrap();
+    e.submit(mk(3, 2, 56, 44, vec![0])).unwrap();
+    e.submit(mk(4, 3, 82, 74, vec![1, 2])).unwrap();
+    e.drain().unwrap();
+    let rep = e.finish().unwrap();
+    assert_eq!(rep.reqs.iter().filter(|m| m.finished()).count(), 4);
+    let get = |id: u64| rep.reqs.iter().find(|m| m.id == id).unwrap();
+    let (root, b1, b2, join) = (get(1), get(2), get(3), get(4));
+    for b in [b1, b2] {
+        assert!(b.arrival_us >= root.done_us.unwrap() - 1e-6);
+    }
+    let last = b1.done_us.unwrap().max(b2.done_us.unwrap());
+    assert!(join.arrival_us >= last - 1e-6, "join held until both branches done");
+    assert!(join.first_token_us.unwrap() > last);
+    // the flow rollup sees one finished DAG with a critical-path bound
+    let flows = rep.flows();
+    assert_eq!(flows.len(), 1);
+    assert!(flows[0].finished);
+    assert!(flows[0].e2e_us.unwrap() + 1e-6 >= flows[0].critical_path_us.unwrap());
 }

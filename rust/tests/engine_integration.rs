@@ -104,6 +104,7 @@ fn scheduled_execution_matches_sequential_generation() {
                 prompt: r.prompt.clone(),
                 max_new_tokens: r.max_new_tokens,
                 session: None,
+                deps: vec![],
                 events: etx,
             }))
             .unwrap();

@@ -38,13 +38,13 @@ fn three_turn_flow() -> Vec<Request> {
             prompt: prompt.clone(),
             max_new_tokens: out,
             profile: "chat".into(),
-            flow: Some(FlowBinding {
-                flow_id: 1,
-                turn_idx: k,
-                total_turns: 3,
-                think_time_us: if k == 0 { 0.0 } else { 40_000.0 },
-                delta_start: if k == 0 { 0 } else { prompt.len() - delta },
-            }),
+            flow: Some(FlowBinding::linear(
+                1,
+                k,
+                3,
+                if k == 0 { 0.0 } else { 40_000.0 },
+                if k == 0 { 0 } else { prompt.len() - delta },
+            )),
         });
     }
     turns
@@ -193,6 +193,64 @@ fn generated_flow_traces_uphold_lifecycle_invariants_on_every_engine() {
                 assert!(w[1].arrival_us >= w[0].done_us.unwrap());
             }
         }
+    }
+}
+
+#[test]
+fn map_reduce_dags_join_branches_and_reuse_the_trunk() {
+    use agent_xpu::workload::{DagShape, DagSpec, dag_flow_trace};
+    let g = geo();
+    let flows = dag_flow_trace(
+        &DagSpec {
+            profile: profile("lmsys").unwrap(),
+            flow_rate_per_s: 0.05,
+            think_time_s: 3.0,
+            shape: DagShape::MapReduce { fanout: 3 },
+            duration_s: 80.0,
+            seed: 5,
+            max_seq: g.max_seq,
+        },
+        Priority::Proactive,
+        g.vocab,
+        0,
+        0,
+    );
+    let trace = flatten_flows(flows);
+    assert!(!trace.is_empty());
+    let total = trace.len();
+    let mut agent =
+        AgentXpuEngine::synthetic(g, default_soc(), SchedulerConfig::default());
+    let rep = agent.run(trace).unwrap();
+    assert_eq!(rep.reqs.iter().filter(|m| m.finished()).count(), total);
+    // joins (≥ 2 predecessors) never start before every branch finished
+    let mut by = std::collections::HashMap::new();
+    for m in rep.reqs.iter().filter(|m| m.flow_id.is_some()) {
+        by.insert((m.flow_id.unwrap(), m.turn_idx), m);
+    }
+    let mut joins = 0;
+    for m in rep.reqs.iter().filter(|m| m.deps.len() >= 2) {
+        joins += 1;
+        for d in &m.deps {
+            let dep = by[&(m.flow_id.unwrap(), *d)];
+            assert!(
+                m.arrival_us >= dep.done_us.unwrap() - 1e-6,
+                "join {} released before branch {}",
+                m.turn_idx,
+                d
+            );
+        }
+    }
+    assert!(joins >= 1, "the trace must contain join turns");
+    // tool nodes executed on the CPU; the session cache still carried
+    // the conversation trunk across the tool hop into the branches
+    assert!(rep.reqs.iter().any(|m| m.tool && m.finished()));
+    assert!(rep.utilization("cpu") > 0.0);
+    assert!(rep.reused_prefix_tokens() > 0, "trunk KV reuse across the DAG");
+    // and the rollup's critical-path bound holds per flow
+    for f in rep.flows() {
+        assert!(f.finished);
+        assert!(f.tool_turns >= 1);
+        assert!(f.e2e_us.unwrap() + 1e-6 >= f.critical_path_us.unwrap());
     }
 }
 

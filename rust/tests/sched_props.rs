@@ -20,7 +20,9 @@ use agent_xpu::engine::{Engine, EngineClock, EngineEvent};
 use agent_xpu::heg::plan_chunks;
 use agent_xpu::metrics::RunReport;
 use agent_xpu::util::rng::Rng;
-use agent_xpu::workload::{Priority, Request};
+use agent_xpu::workload::{
+    DagShape, DagSpec, Priority, Request, dag_flow_trace, flatten_flows, profile,
+};
 
 fn geo() -> ModelGeometry {
     let mut g = llama32_3b();
@@ -221,6 +223,107 @@ fn incremental_submit_step_matches_batch_run_bit_for_bit() {
     }
 }
 
+/// Random workflow-DAG trace: one seeded DAG stream of a random shape
+/// (tool-call nodes, fan-out/join) plus single-shot background traffic.
+fn random_dag_trace(seed: u64) -> Vec<Request> {
+    let g = geo();
+    let mut r = Rng::new(seed);
+    let shapes = [
+        DagShape::ToolAgent { rounds: 2 },
+        DagShape::MapReduce { fanout: 3 },
+        DagShape::MonitorTools { wakeups: 2 },
+    ];
+    let shape = *r.choice(&shapes);
+    let priority =
+        if r.f64() < 0.5 { Priority::Reactive } else { Priority::Proactive };
+    let flows = dag_flow_trace(
+        &DagSpec {
+            profile: profile("lmsys").unwrap(),
+            flow_rate_per_s: 0.06,
+            think_time_s: 4.0,
+            shape,
+            duration_s: 60.0,
+            seed,
+            max_seq: g.max_seq,
+        },
+        priority,
+        g.vocab,
+        0,
+        0,
+    );
+    let mut trace = flatten_flows(flows);
+    trace.extend(random_trace(seed + 77).into_iter().map(|mut q| {
+        q.id += 100_000; // keep ids disjoint from the DAG stream
+        q
+    }));
+    trace
+}
+
+/// DESIGN.md §6 generalized flow-ordering invariant: no workflow node
+/// starts before *all* its DAG predecessors complete plus its
+/// think-time — property-checked on every engine family over random
+/// DAG workloads with tool-call nodes and fan-out/join turns.
+#[test]
+fn dag_ordering_invariant_holds_on_every_engine() {
+    for seed in [3u64, 41, 99, 256] {
+        let trace = random_dag_trace(seed);
+        let n = trace.len();
+        if trace.iter().all(|q| q.flow.is_none()) {
+            continue; // no DAG flow landed in this seed's window
+        }
+        let engines: Vec<Box<dyn Engine>> = vec![
+            Box::new(AgentXpuEngine::synthetic(
+                geo(),
+                default_soc(),
+                SchedulerConfig::default(),
+            )),
+            Box::new(CpuFcfsEngine::new(geo(), default_soc(), 4)),
+            Box::new(SingleXpuEngine::new(geo(), default_soc(), Scheme::PreemptRestart)),
+            Box::new(SingleXpuEngine::new(
+                geo(),
+                default_soc(),
+                Scheme::ContinuousBatching,
+            )),
+        ];
+        for mut e in engines {
+            let name = e.name();
+            let rep = e
+                .run(trace.clone())
+                .unwrap_or_else(|x| panic!("seed {seed} engine {name}: {x:#}"));
+            assert_eq!(
+                rep.reqs.iter().filter(|m| m.finished()).count(),
+                n,
+                "{name} seed {seed}: lost workflow nodes"
+            );
+            let mut by = std::collections::HashMap::new();
+            for m in rep.reqs.iter().filter(|m| m.flow_id.is_some()) {
+                by.insert((m.flow_id.unwrap(), m.turn_idx), m);
+            }
+            for m in rep.reqs.iter().filter(|m| m.flow_id.is_some()) {
+                assert!(m.first_token_us.unwrap() >= m.arrival_us - 1e-6);
+                for d in &m.deps {
+                    let dep = by[&(m.flow_id.unwrap(), *d)];
+                    assert!(
+                        m.arrival_us >= dep.done_us.unwrap() + m.think_time_us - 1e-6,
+                        "{name} seed {seed}: flow {:?} node {} started before \
+                         predecessor {} completed + think-time",
+                        m.flow_id,
+                        m.turn_idx,
+                        d
+                    );
+                }
+            }
+            // tool nodes ran (on the CPU) and completed like any node
+            if trace.iter().any(|q| q.is_tool()) {
+                assert!(
+                    rep.reqs.iter().any(|m| m.tool && m.finished()),
+                    "{name} seed {seed}: tool nodes vanished"
+                );
+            }
+        }
+    }
+}
+
 #[test]
 fn reactive_latency_dominates_proactive_under_load() {
     // aggregate over seeds: mixed loads where both classes appear
@@ -250,6 +353,57 @@ fn reactive_latency_dominates_proactive_under_load() {
         rt_sum <= pro_sum,
         "reactive norm-lat {rt_sum} must not exceed proactive {pro_sum} in aggregate"
     );
+}
+
+/// Satellite: the coordinator's inter-XPU backfill candidates now come
+/// from the driver's incrementally maintained waiting-proactive-prefill
+/// index instead of a per-step scan of every live request.  The engine
+/// `debug_assert`s index == scan at *every* scheduling decision (both
+/// the prefill pipeline and the backfill path), so driving seeded
+/// backfill-heavy traces through a debug test build proves the
+/// schedules stay bit-identical to the scan version; the double run
+/// pins determinism on top.
+#[test]
+fn backfill_index_matches_state_scan_on_backfill_heavy_traces() {
+    for seed in [1u64, 13, 64] {
+        let mut r = Rng::new(seed);
+        let mut trace: Vec<Request> = (0..12u64)
+            .map(|i| Request {
+                id: i,
+                priority: Priority::Proactive,
+                arrival_us: i as f64 * 5_000.0,
+                prompt: vec![1; r.usize(260, 800)],
+                max_new_tokens: r.usize(4, 10),
+                profile: "bf".into(),
+                flow: None,
+            })
+            .collect();
+        for i in 0..6u64 {
+            trace.push(Request {
+                id: 100 + i,
+                priority: Priority::Reactive,
+                arrival_us: i as f64 * 20_000.0,
+                prompt: vec![1; 200],
+                max_new_tokens: 6,
+                profile: "bf".into(),
+                flow: None,
+            });
+        }
+        let run = || {
+            let mut e = AgentXpuEngine::synthetic(
+                geo(),
+                default_soc(),
+                SchedulerConfig::default(),
+            );
+            e.run(trace.clone()).unwrap()
+        };
+        let (a, b) = (run(), run());
+        assert!(a.backfills >= 1, "seed {seed}: scenario must exercise backfill");
+        assert_eq!(a.makespan_us, b.makespan_us, "seed {seed}");
+        for (x, y) in a.reqs.iter().zip(&b.reqs) {
+            assert_eq!(x.done_us, y.done_us, "seed {seed} req {}", x.id);
+        }
+    }
 }
 
 #[test]
