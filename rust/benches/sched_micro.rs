@@ -7,7 +7,7 @@ use std::collections::HashMap;
 
 use agent_xpu::config::{SchedulerConfig, default_soc, llama32_3b};
 use agent_xpu::coordinator::{AgentXpuEngine, decode_lanes, dispatch_check, resume_order};
-use agent_xpu::engine::{Engine, EngineClock, ExecBridge, Phase};
+use agent_xpu::engine::{EngineClock, EngineCore, ExecBridge, Phase, registry};
 use agent_xpu::heg::{Annotator, ChunkSpec, plan_chunks};
 use agent_xpu::model::gemv_cost;
 use agent_xpu::soc::{LaunchSpec, SocSim, XpuModel};
@@ -68,6 +68,33 @@ fn main() {
     });
     println!("{}", s.report());
 
+    // resume_order at backlog scale: ETC is now precomputed once per
+    // candidate (a keyed vec) instead of re-derived inside the sort
+    // comparator — O(n) chunk walks, not O(n log n) — so even a deep
+    // proactive backlog ranks within the §8 5 µs decision budget.
+    let mut big_states = HashMap::new();
+    for i in 0..256u64 {
+        let req = Request {
+            id: i,
+            priority: Priority::Proactive,
+            arrival_us: i as f64,
+            prompt: vec![1; 100 + (i as usize * 53) % 1500],
+            max_new_tokens: 8,
+            profile: "bench".into(),
+            flow: None,
+        };
+        let mut st = bridge.init_state(req, 512);
+        st.enqueued_at_us = i as f64 * 17.0;
+        big_states.insert(i, st);
+    }
+    let mut big_cands: Vec<u64> = big_states.keys().copied().collect();
+    big_cands.sort_unstable();
+    let s = bench("resume_order over 256 candidates (ETC precomputed)", 100, 5_000, || {
+        resume_order(&big_states, &mut big_cands, &ann, 0, 1e6, 2e9, true);
+        black_box(&big_cands);
+    });
+    println!("{}", s.report());
+
     let s = bench("plan_chunks (2048-token prompt)", 1000, 100_000, || {
         black_box(plan_chunks(&geo, 2048, 512));
     });
@@ -119,6 +146,28 @@ fn main() {
             }
         }
         black_box(eng.step().unwrap());
+    });
+    println!("{}", s.report());
+
+    // Same decision point through the policy registry's boxed
+    // `PolicyEngine` — the one dynamic-dispatch hop (`dyn EngineCore`
+    // + the policy's hook calls) every harness and the server now pay.
+    // Must stay indistinguishable from the concrete-type step above
+    // (both inside the §8 5 µs budget).
+    let mut dyn_eng: Box<dyn EngineCore + Send> =
+        registry::build("agent-xpu", geo.clone(), soc.clone(), cfg.clone()).unwrap();
+    dyn_eng.start(EngineClock::Virtual).unwrap();
+    for r in mk_trace() {
+        dyn_eng.submit(r).unwrap();
+    }
+    let s = bench("PolicyEngine::step via dyn EngineCore (registry)", 500, 50_000, || {
+        if !dyn_eng.has_work() {
+            dyn_eng.start(EngineClock::Virtual).unwrap();
+            for r in mk_trace() {
+                dyn_eng.submit(r).unwrap();
+            }
+        }
+        black_box(dyn_eng.step().unwrap());
     });
     println!("{}", s.report());
 }

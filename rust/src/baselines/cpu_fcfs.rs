@@ -1,5 +1,5 @@
 //! The llama.cpp-like baseline (paper §8.1): a latency-optimized
-//! CPU-only engine with **no batching support** and **no priority
+//! CPU-only policy with **no batching support** and **no priority
 //! scheduling** — the agent frontend "simply notifies them about the
 //! arrival of each request and leaves the scheduling decision to their
 //! internal schedulers."
@@ -8,20 +8,31 @@
 //! the CPU cores (llama.cpp relies on OS multitasking), served
 //! round-robin at kernel granularity, FCFS admission, decode strictly
 //! b=1 per request.
-
-use anyhow::{Context, Result};
+//!
+//! Since the `SchedPolicy` redesign this file is only the per-step
+//! decision; the engine lifecycle lives in `PolicyEngine`
+//! (`CpuFcfsEngine` is the alias the harnesses name).
 
 use crate::config::{ModelGeometry, SocConfig};
 use crate::engine::{
-    Driver, EngineClock, EngineCore, EngineEvent, ExecBridge, KernelTag, Phase,
+    Action, ExecBridge, KernelTag, Phase, PolicyCtx, PolicyEngine, SchedPolicy,
 };
 use crate::heg::Annotator;
-use crate::metrics::RunReport;
 use crate::soc::XpuModel;
-use crate::workload::{ReqId, Request};
+use crate::workload::ReqId;
 
-pub struct CpuFcfsEngine {
-    soc: SocConfig,
+/// The llama.cpp-like engine behind the one generic [`PolicyEngine`].
+pub type CpuFcfsEngine = PolicyEngine<CpuFcfsPolicy>;
+
+impl PolicyEngine<CpuFcfsPolicy> {
+    pub fn new(geo: ModelGeometry, soc: SocConfig, concurrency: usize) -> Self {
+        let bridge = ExecBridge::synthetic(geo.clone());
+        PolicyEngine::with_policy(CpuFcfsPolicy::new(geo, &soc, concurrency), soc, bridge)
+    }
+}
+
+/// CPU-only FCFS round-robin (no batching, no priorities).
+pub struct CpuFcfsPolicy {
     ann: Annotator,
     geo: ModelGeometry,
     cpu: usize,
@@ -30,39 +41,38 @@ pub struct CpuFcfsEngine {
     pub concurrency: usize,
     /// Round-robin cursor.
     cursor: usize,
-    /// The open run, if `start` has been called (EngineCore lifecycle).
-    active: Option<Driver>,
-    /// The last `step` made no progress (run idle).
-    stalled: bool,
 }
 
-impl CpuFcfsEngine {
-    pub fn new(geo: ModelGeometry, soc: SocConfig, concurrency: usize) -> Self {
+impl CpuFcfsPolicy {
+    pub fn new(geo: ModelGeometry, soc: &SocConfig, concurrency: usize) -> Self {
         let xpus: Vec<XpuModel> = soc.xpus.iter().cloned().map(XpuModel::new).collect();
         let ann = Annotator::new(geo.clone(), xpus);
         let cpu = ann.xpu_index("cpu").expect("soc needs a cpu");
-        Self { soc, ann, geo, cpu, concurrency, cursor: 0, active: None, stalled: false }
+        Self { ann, geo, cpu, concurrency, cursor: 0 }
     }
 
-    fn schedule(&mut self, d: &mut Driver) {
-        if d.sim.busy(self.cpu) {
+    fn schedule(&mut self, ctx: &mut PolicyCtx<'_>) {
+        if ctx.busy(self.cpu) {
             return;
         }
         // Active set = the `concurrency` oldest unfinished requests
         // (FCFS admission; no priority awareness at all).
-        let mut active: Vec<ReqId> = d
-            .states
+        let mut active: Vec<ReqId> = ctx
+            .states()
             .values()
             .filter(|s| s.phase != Phase::Done)
             .map(|s| s.id())
             .collect();
-        active.sort_by(|a, b| {
-            d.states[a]
-                .req
-                .arrival_us
-                .total_cmp(&d.states[b].req.arrival_us)
-                .then(a.cmp(b))
-        });
+        {
+            let states = ctx.states();
+            active.sort_by(|a, b| {
+                states[a]
+                    .req
+                    .arrival_us
+                    .total_cmp(&states[b].req.arrival_us)
+                    .then(a.cmp(b))
+            });
+        }
         active.truncate(self.concurrency);
         if active.is_empty() {
             return;
@@ -71,23 +81,27 @@ impl CpuFcfsEngine {
         // OS-multitasking analogue.
         for k in 0..active.len() {
             let id = active[(self.cursor + k) % active.len()];
-            let st = &d.states[&id];
-            if st.running {
+            let (running, phase) = {
+                let st = ctx.state(id);
+                (st.running, st.phase)
+            };
+            if running {
                 continue;
             }
             self.cursor = (self.cursor + k + 1) % active.len().max(1);
-            match st.phase {
+            match phase {
                 Phase::Prefilling => {
-                    let chunk = *st.current_chunk().unwrap();
+                    let chunk = *ctx.state(id).current_chunk().unwrap();
                     let a = self.ann.prefill_kernel(&chunk);
                     let t = *a.timing_on(self.cpu);
-                    d.launch(self.cpu, t, false, KernelTag::Prefill { req: id });
+                    ctx.launch(self.cpu, t, false, KernelTag::Prefill { req: id });
                 }
                 Phase::Decoding => {
                     // no batching: a lone-lane decode iteration
-                    let a = self.ann.decode_iter(1, st.pos.max(1));
+                    let pos = ctx.state(id).pos.max(1);
+                    let a = self.ann.decode_iter(1, pos);
                     let t = *a.timing_on(self.cpu);
-                    d.launch(self.cpu, t, false, KernelTag::DecodeIter { lanes: vec![id] });
+                    ctx.launch(self.cpu, t, false, KernelTag::DecodeIter { lanes: vec![id] });
                 }
                 Phase::Done => continue,
             }
@@ -96,68 +110,22 @@ impl CpuFcfsEngine {
     }
 }
 
-impl EngineCore for CpuFcfsEngine {
-    fn name(&self) -> String {
+impl SchedPolicy for CpuFcfsPolicy {
+    fn label(&self) -> String {
         format!("llama.cpp-like(c={})", self.concurrency)
     }
 
-    fn start(&mut self, clock: EngineClock) -> Result<()> {
+    fn max_chunk(&self) -> usize {
+        self.geo.max_chunk()
+    }
+
+    fn on_start(&mut self) {
         self.cursor = 0;
-        self.active = Some(Driver::open(
-            &self.soc,
-            ExecBridge::synthetic(self.geo.clone()),
-            clock,
-        ));
-        self.stalled = false;
-        Ok(())
     }
 
-    fn submit(&mut self, req: Request) -> Result<()> {
-        self.active
-            .as_mut()
-            .context("llama.cpp-like: submit before start")?
-            .submit(req);
-        self.stalled = false;
-        Ok(())
-    }
-
-    fn cancel(&mut self, id: ReqId) -> Result<bool> {
-        let hit = self
-            .active
-            .as_mut()
-            .context("llama.cpp-like: cancel before start")?
-            .cancel_request(id);
-        if hit {
-            // wake a stalled run so the Cancelled event flushes
-            self.stalled = false;
-        }
-        Ok(hit)
-    }
-
-    fn step(&mut self) -> Result<Vec<EngineEvent>> {
-        let mut d = self
-            .active
-            .take()
-            .context("llama.cpp-like: step before start")?;
-        d.admit_ready(self.geo.max_chunk());
-        self.schedule(&mut d);
-        let progressed = d.step()?;
-        self.stalled = !progressed;
-        let events = d.take_events();
-        self.active = Some(d);
-        Ok(events)
-    }
-
-    fn has_work(&self) -> bool {
-        self.active.is_some() && !self.stalled
-    }
-
-    fn finish(&mut self) -> Result<RunReport> {
-        let d = self
-            .active
-            .take()
-            .context("llama.cpp-like: finish before start")?;
-        d.finish(self.name())
+    fn decide(&mut self, mut ctx: PolicyCtx<'_>) -> Vec<Action> {
+        self.schedule(&mut ctx);
+        ctx.take_actions()
     }
 }
 
@@ -165,7 +133,8 @@ impl EngineCore for CpuFcfsEngine {
 mod tests {
     use super::*;
     use crate::config::{default_soc, llama32_3b};
-    use crate::workload::Priority;
+    use crate::engine::Engine;
+    use crate::workload::{Priority, Request};
 
     fn geo() -> ModelGeometry {
         let mut g = llama32_3b();
@@ -197,6 +166,8 @@ mod tests {
         assert!(rep.utilization("cpu") > 0.0);
         assert_eq!(rep.utilization("npu"), 0.0);
         assert_eq!(rep.utilization("igpu"), 0.0);
+        // trace retention now covers baselines too (redesign satellite)
+        assert!(e.last_trace().is_some());
     }
 
     #[test]

@@ -8,11 +8,13 @@
 //!   context, (b) time-sharing with duplicated buffers, (c) standard
 //!   continuous batching at iteration granularity.
 //!
-//! All run on the same DES + numerics bridge as Agent.xpu, so every
-//! comparison isolates *scheduling policy*.
+//! Both are [`crate::engine::SchedPolicy`] implementations behind the
+//! one generic `PolicyEngine`, running on the same DES + numerics
+//! bridge as Agent.xpu — every comparison isolates *scheduling policy*
+//! and costs one policy file, not an engine fork.
 
 mod cpu_fcfs;
 mod single_xpu;
 
-pub use cpu_fcfs::CpuFcfsEngine;
-pub use single_xpu::{Scheme, SingleXpuEngine};
+pub use cpu_fcfs::{CpuFcfsEngine, CpuFcfsPolicy};
+pub use single_xpu::{Scheme, SingleXpuEngine, SingleXpuPolicy};

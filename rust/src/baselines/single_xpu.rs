@@ -14,17 +14,18 @@
 //!   (Orca-style): FCFS prefill runs un-preemptible, decodes batch
 //!   between prefills; a reactive request waits for the proactive
 //!   prefill ahead of it.
-
-use anyhow::{Context, Result};
+//!
+//! Since the `SchedPolicy` redesign this file is only the per-step
+//! decisions; the engine lifecycle lives in `PolicyEngine`
+//! (`SingleXpuEngine` is the alias the harnesses name).
 
 use crate::config::{ModelGeometry, SocConfig};
 use crate::engine::{
-    Driver, EngineClock, EngineCore, EngineEvent, ExecBridge, KernelTag, Phase,
+    Action, ExecBridge, KernelTag, Phase, PolicyCtx, PolicyEngine, SchedPolicy,
 };
 use crate::heg::Annotator;
-use crate::metrics::RunReport;
 use crate::soc::XpuModel;
-use crate::workload::{ReqId, Request};
+use crate::workload::ReqId;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Scheme {
@@ -43,54 +44,56 @@ impl Scheme {
     }
 }
 
-pub struct SingleXpuEngine {
-    soc: SocConfig,
+/// The single-XPU engine behind the one generic [`PolicyEngine`].
+pub type SingleXpuEngine = PolicyEngine<SingleXpuPolicy>;
+
+impl PolicyEngine<SingleXpuPolicy> {
+    pub fn new(geo: ModelGeometry, soc: SocConfig, scheme: Scheme) -> Self {
+        let bridge = ExecBridge::synthetic(geo.clone());
+        PolicyEngine::with_policy(SingleXpuPolicy::new(geo, &soc, scheme), soc, bridge)
+    }
+}
+
+/// One of the Fig. 4 single-accelerator schemes.
+pub struct SingleXpuPolicy {
     ann: Annotator,
     geo: ModelGeometry,
     pub scheme: Scheme,
     xpu: usize,
     b_max: usize,
     cursor: usize,
-    /// Kernel trace of the last `run` (Fig. 4 Gantt).
-    pub last_trace: Option<crate::trace::Trace>,
-    /// The open run, if `start` has been called (EngineCore lifecycle).
-    active: Option<Driver>,
-    /// The last `step` made no progress (run idle).
-    stalled: bool,
 }
 
-impl SingleXpuEngine {
-    pub fn new(geo: ModelGeometry, soc: SocConfig, scheme: Scheme) -> Self {
+impl SingleXpuPolicy {
+    pub fn new(geo: ModelGeometry, soc: &SocConfig, scheme: Scheme) -> Self {
         let xpus: Vec<XpuModel> = soc.xpus.iter().cloned().map(XpuModel::new).collect();
         let ann = Annotator::new(geo.clone(), xpus);
         let xpu = ann.xpu_index("igpu").expect("soc needs an igpu");
-        Self {
-            soc, ann, geo, scheme, xpu, b_max: 8, cursor: 0, last_trace: None,
-            active: None, stalled: false,
-        }
+        Self { ann, geo, scheme, xpu, b_max: 8, cursor: 0 }
     }
 
-    fn launch_prefill(&self, d: &mut Driver, id: ReqId, reactive: bool) {
-        let chunk = *d.states[&id].current_chunk().unwrap();
+    fn launch_prefill(&self, ctx: &mut PolicyCtx<'_>, id: ReqId, reactive: bool) {
+        let chunk = *ctx.state(id).current_chunk().unwrap();
         let a = self.ann.prefill_kernel(&chunk);
         let t = *a.timing_on(self.xpu);
-        d.launch(self.xpu, t, reactive, KernelTag::Prefill { req: id });
+        ctx.launch(self.xpu, t, reactive, KernelTag::Prefill { req: id });
     }
 
-    fn launch_decode(&self, d: &mut Driver, lanes: Vec<ReqId>, reactive: bool) {
-        let avg = (lanes.iter().map(|id| d.states[id].pos).sum::<usize>() / lanes.len())
-            .max(1);
+    fn launch_decode(&self, ctx: &mut PolicyCtx<'_>, lanes: Vec<ReqId>, reactive: bool) {
+        let avg = (lanes.iter().map(|id| ctx.state(*id).pos).sum::<usize>()
+            / lanes.len())
+        .max(1);
         let a = self.ann.decode_iter(lanes.len(), avg);
         let t = *a.timing_on(self.xpu);
-        d.launch(self.xpu, t, reactive, KernelTag::DecodeIter { lanes });
+        ctx.launch(self.xpu, t, reactive, KernelTag::DecodeIter { lanes });
     }
 
     /// Scheme (a): reactive runs exclusively; an arrival cancels the
     /// in-flight proactive kernel and wipes the victim's prefill context.
-    fn schedule_preempt_restart(&mut self, d: &mut Driver) {
+    fn schedule_preempt_restart(&mut self, ctx: &mut PolicyCtx<'_>) {
         let reactive_waiting: Vec<ReqId> = {
-            let mut v: Vec<ReqId> = d
-                .states
+            let mut v: Vec<ReqId> = ctx
+                .states()
                 .values()
                 .filter(|s| s.is_reactive() && s.phase != Phase::Done)
                 .map(|s| s.id())
@@ -100,64 +103,60 @@ impl SingleXpuEngine {
         };
         // Instant preemption: cancel proactive work the moment a
         // reactive request exists.
-        if !reactive_waiting.is_empty() && d.sim.busy(self.xpu) {
-            let victim_is_proactive = d
-                .states
+        if !reactive_waiting.is_empty() && ctx.busy(self.xpu) {
+            let victim_is_proactive = ctx
+                .states()
                 .values()
                 .filter(|s| s.running)
                 .all(|s| !s.is_reactive());
             if victim_is_proactive {
-                if let Some(tag) = d.cancel(self.xpu) {
-                    d.note_preemption(tag.reqs()[0]);
+                if let Some(tag) = ctx.abort(self.xpu) {
+                    ctx.note_preemption(tag.reqs()[0]);
                     for vid in tag.reqs() {
-                        let st = d.states.get_mut(&vid).unwrap();
                         // "without saving the prefill context": all
                         // prefill progress is recomputed
-                        if st.phase == Phase::Prefilling {
-                            let geo = self.geo.clone();
-                            st.restart_prefill(&geo);
-                        }
+                        ctx.restart_prefill(vid, &self.geo);
                     }
                 }
             }
         }
-        if d.sim.busy(self.xpu) {
+        if ctx.busy(self.xpu) {
             return;
         }
         // Reactive exclusively first, then proactive FCFS.
-        let pick_phasewise = |d: &Driver, ids: &[ReqId]| -> Option<(ReqId, Phase)> {
-            ids.first().map(|&id| (id, d.states[&id].phase))
-        };
         let runnable_reactive: Vec<ReqId> = reactive_waiting
             .iter()
             .copied()
-            .filter(|id| !d.states[id].running)
+            .filter(|id| !ctx.state(*id).running)
             .collect();
-        if let Some((id, phase)) = pick_phasewise(d, &runnable_reactive) {
-            match phase {
-                Phase::Prefilling => self.launch_prefill(d, id, true),
-                Phase::Decoding => self.launch_decode(d, vec![id], true),
+        if let Some(&id) = runnable_reactive.first() {
+            match ctx.state(id).phase {
+                Phase::Prefilling => self.launch_prefill(ctx, id, true),
+                Phase::Decoding => self.launch_decode(ctx, vec![id], true),
                 Phase::Done => {}
             }
             return;
         }
-        let mut proactive: Vec<ReqId> = d
-            .states
+        let mut proactive: Vec<ReqId> = ctx
+            .states()
             .values()
             .filter(|s| !s.is_reactive() && s.phase != Phase::Done && !s.running)
             .map(|s| s.id())
             .collect();
-        proactive.sort_by(|a, b| {
-            d.states[a]
-                .req
-                .arrival_us
-                .total_cmp(&d.states[b].req.arrival_us)
-                .then(a.cmp(b))
-        });
-        if let Some((id, phase)) = pick_phasewise(d, &proactive) {
-            match phase {
-                Phase::Prefilling => self.launch_prefill(d, id, false),
-                Phase::Decoding => self.launch_decode(d, vec![id], false),
+        {
+            let states = ctx.states();
+            proactive.sort_by(|a, b| {
+                states[a]
+                    .req
+                    .arrival_us
+                    .total_cmp(&states[b].req.arrival_us)
+                    .then(a.cmp(b))
+            });
+        }
+        if let Some(&id) = proactive.first() {
+            match ctx.state(id).phase {
+                Phase::Prefilling => self.launch_prefill(ctx, id, false),
+                Phase::Decoding => self.launch_decode(ctx, vec![id], false),
                 Phase::Done => {}
             }
         }
@@ -165,12 +164,12 @@ impl SingleXpuEngine {
 
     /// Scheme (b): round-robin kernels across all active tasks; decode
     /// runs per-task (duplicated buffers — no batching).
-    fn schedule_time_share(&mut self, d: &mut Driver) {
-        if d.sim.busy(self.xpu) {
+    fn schedule_time_share(&mut self, ctx: &mut PolicyCtx<'_>) {
+        if ctx.busy(self.xpu) {
             return;
         }
-        let mut active: Vec<ReqId> = d
-            .states
+        let mut active: Vec<ReqId> = ctx
+            .states()
             .values()
             .filter(|s| s.phase != Phase::Done && !s.running)
             .map(|s| s.id())
@@ -181,43 +180,48 @@ impl SingleXpuEngine {
         }
         let id = active[self.cursor % active.len()];
         self.cursor = self.cursor.wrapping_add(1);
-        let st = &d.states[&id];
-        let reactive = st.is_reactive();
-        match st.phase {
-            Phase::Prefilling => self.launch_prefill(d, id, reactive),
-            Phase::Decoding => self.launch_decode(d, vec![id], reactive),
+        let (phase, reactive) = {
+            let st = ctx.state(id);
+            (st.phase, st.is_reactive())
+        };
+        match phase {
+            Phase::Prefilling => self.launch_prefill(ctx, id, reactive),
+            Phase::Decoding => self.launch_decode(ctx, vec![id], reactive),
             Phase::Done => {}
         }
     }
 
     /// Scheme (c): continuous batching — FCFS prefill without
     /// preemption; decodes batch together between prefill iterations.
-    fn schedule_continuous_batching(&mut self, d: &mut Driver) {
-        if d.sim.busy(self.xpu) {
+    fn schedule_continuous_batching(&mut self, ctx: &mut PolicyCtx<'_>) {
+        if ctx.busy(self.xpu) {
             return;
         }
-        let mut prefilling: Vec<ReqId> = d
-            .states
+        let mut prefilling: Vec<ReqId> = ctx
+            .states()
             .values()
             .filter(|s| s.phase == Phase::Prefilling && !s.running)
             .map(|s| s.id())
             .collect();
-        prefilling.sort_by(|a, b| {
-            d.states[a]
-                .req
-                .arrival_us
-                .total_cmp(&d.states[b].req.arrival_us)
-                .then(a.cmp(b))
-        });
+        {
+            let states = ctx.states();
+            prefilling.sort_by(|a, b| {
+                states[a]
+                    .req
+                    .arrival_us
+                    .total_cmp(&states[b].req.arrival_us)
+                    .then(a.cmp(b))
+            });
+        }
         // Iteration-level FCFS: the oldest prefill monopolizes the XPU
         // until done (no priority; the Fig. 4(c) pathology).
         if let Some(&id) = prefilling.first() {
-            let reactive = d.states[&id].is_reactive();
-            self.launch_prefill(d, id, reactive);
+            let reactive = ctx.state(id).is_reactive();
+            self.launch_prefill(ctx, id, reactive);
             return;
         }
-        let mut lanes: Vec<ReqId> = d
-            .states
+        let mut lanes: Vec<ReqId> = ctx
+            .states()
             .values()
             .filter(|s| s.phase == Phase::Decoding && !s.running)
             .map(|s| s.id())
@@ -225,77 +229,36 @@ impl SingleXpuEngine {
         lanes.sort_unstable();
         lanes.truncate(self.b_max);
         if !lanes.is_empty() {
-            let reactive = lanes.iter().any(|id| d.states[id].is_reactive());
-            self.launch_decode(d, lanes, reactive);
+            let reactive = lanes.iter().any(|id| ctx.state(*id).is_reactive());
+            self.launch_decode(ctx, lanes, reactive);
         }
     }
 
-    fn schedule(&mut self, d: &mut Driver) {
+    fn schedule(&mut self, ctx: &mut PolicyCtx<'_>) {
         match self.scheme {
-            Scheme::PreemptRestart => self.schedule_preempt_restart(d),
-            Scheme::TimeShare => self.schedule_time_share(d),
-            Scheme::ContinuousBatching => self.schedule_continuous_batching(d),
+            Scheme::PreemptRestart => self.schedule_preempt_restart(ctx),
+            Scheme::TimeShare => self.schedule_time_share(ctx),
+            Scheme::ContinuousBatching => self.schedule_continuous_batching(ctx),
         }
     }
 }
 
-impl EngineCore for SingleXpuEngine {
-    fn name(&self) -> String {
+impl SchedPolicy for SingleXpuPolicy {
+    fn label(&self) -> String {
         self.scheme.label().to_string()
     }
 
-    fn start(&mut self, clock: EngineClock) -> Result<()> {
+    fn max_chunk(&self) -> usize {
+        self.geo.max_chunk()
+    }
+
+    fn on_start(&mut self) {
         self.cursor = 0;
-        self.active = Some(Driver::open(
-            &self.soc,
-            ExecBridge::synthetic(self.geo.clone()),
-            clock,
-        ));
-        self.stalled = false;
-        Ok(())
     }
 
-    fn submit(&mut self, req: Request) -> Result<()> {
-        self.active
-            .as_mut()
-            .context("single-xpu: submit before start")?
-            .submit(req);
-        self.stalled = false;
-        Ok(())
-    }
-
-    fn cancel(&mut self, id: ReqId) -> Result<bool> {
-        let hit = self
-            .active
-            .as_mut()
-            .context("single-xpu: cancel before start")?
-            .cancel_request(id);
-        if hit {
-            // wake a stalled run so the Cancelled event flushes
-            self.stalled = false;
-        }
-        Ok(hit)
-    }
-
-    fn step(&mut self) -> Result<Vec<EngineEvent>> {
-        let mut d = self.active.take().context("single-xpu: step before start")?;
-        d.admit_ready(self.geo.max_chunk());
-        self.schedule(&mut d);
-        let progressed = d.step()?;
-        self.stalled = !progressed;
-        let events = d.take_events();
-        self.active = Some(d);
-        Ok(events)
-    }
-
-    fn has_work(&self) -> bool {
-        self.active.is_some() && !self.stalled
-    }
-
-    fn finish(&mut self) -> Result<RunReport> {
-        let d = self.active.take().context("single-xpu: finish before start")?;
-        self.last_trace = Some(d.trace.clone());
-        d.finish(self.name())
+    fn decide(&mut self, mut ctx: PolicyCtx<'_>) -> Vec<Action> {
+        self.schedule(&mut ctx);
+        ctx.take_actions()
     }
 }
 
@@ -303,7 +266,8 @@ impl EngineCore for SingleXpuEngine {
 mod tests {
     use super::*;
     use crate::config::{default_soc, llama32_3b};
-    use crate::workload::Priority;
+    use crate::engine::Engine;
+    use crate::workload::{Priority, Request};
 
     fn geo() -> ModelGeometry {
         let mut g = llama32_3b();
@@ -345,6 +309,8 @@ mod tests {
             // single-XPU: NPU and CPU stay idle
             assert_eq!(rep.utilization("npu"), 0.0, "{scheme:?}");
             assert_eq!(rep.utilization("cpu"), 0.0, "{scheme:?}");
+            // every policy's trace is retained by the shared engine
+            assert!(e.last_trace().is_some(), "{scheme:?}");
         }
     }
 

@@ -1,0 +1,274 @@
+//! `deadline` — slack-aware earliest-deadline-first scheduling, the
+//! first policy written *against* the `SchedPolicy` API instead of as
+//! an engine fork (DESIGN.md §7).  It reuses the whole
+//! [`XpuCoordinator`] pipeline (disaggregation, preemption, margin
+//! chunks, backfill, memory governor) and overrides exactly two hooks:
+//!
+//! - **resume ordering** — paused proactive prefills resume in EDF
+//!   order by *slack*: `deadline − now − ETC(remaining prefill)`.  A
+//!   task about to blow its deadline outranks everything; slack decays
+//!   as wall/virtual time advances, so EDF ages waiting work into
+//!   priority and starvation prevention falls out of the order itself
+//!   (no explicit aging threshold).
+//! - **decode-batch formation** — lanes are ranked by deadline, and
+//!   proactive lanes may only join a batch carrying reactive lanes
+//!   while the tightest reactive deadline still has most of its budget
+//!   left.  Joining inflates *every* iteration of the batch (more
+//!   lanes, larger average context), so once a reactive request's
+//!   slack runs low the batch stays lean and its remaining tokens
+//!   stream at the fastest per-iteration rate.
+//!
+//! Deadlines are derived from the priority class (the paper's workload
+//! dichotomy, §1): reactive requests get a tight interactive budget,
+//! proactive requests a loose background one.  Before the policy
+//! redesign this scheduler would have cost a fifth copy of the engine
+//! lifecycle; now it is this file.
+
+use crate::config::{ModelGeometry, SchedulerConfig, SocConfig};
+use crate::engine::{
+    Action, ExecBridge, Phase, PolicyCtx, PolicyEngine, ReqState, ResumeCtx,
+    SchedPolicy, States,
+};
+use crate::workload::ReqId;
+
+use super::engine_impl::XpuCoordinator;
+use super::select::prefill_etc_us;
+
+/// Per-class deadline budgets (µs after arrival).  Reactive: an
+/// interactive-latency envelope; proactive: a background-throughput
+/// envelope two orders looser.
+const REACTIVE_BUDGET_US: f64 = 1_000_000.0;
+const PROACTIVE_BUDGET_US: f64 = 30_000_000.0;
+/// Proactive lanes may join a reactive decode batch only while the
+/// tightest reactive slack exceeds this (i.e. early in the reactive
+/// request's budget); after that the batch stays lean.
+const JOIN_GUARD_US: f64 = 900_000.0;
+
+/// The EDF engine behind the one generic [`PolicyEngine`].
+pub type DeadlineEngine = PolicyEngine<DeadlinePolicy>;
+
+impl PolicyEngine<DeadlinePolicy> {
+    /// Timing-only EDF engine at a given geometry.
+    pub fn synthetic(geo: ModelGeometry, soc: SocConfig, sched: SchedulerConfig) -> Self {
+        let bridge = ExecBridge::synthetic(geo.clone());
+        PolicyEngine::with_policy(DeadlinePolicy::new(geo, &soc, sched), soc, bridge)
+    }
+}
+
+/// Slack-aware EDF over per-request deadlines derived from priority
+/// class.
+pub struct DeadlinePolicy {
+    coord: XpuCoordinator,
+}
+
+impl DeadlinePolicy {
+    pub fn new(geo: ModelGeometry, soc: &SocConfig, sched: SchedulerConfig) -> Self {
+        Self { coord: XpuCoordinator::new(geo, soc, sched) }
+    }
+
+    /// The request's absolute deadline: arrival plus its class budget.
+    fn deadline_us(st: &ReqState) -> f64 {
+        st.req.arrival_us
+            + if st.is_reactive() { REACTIVE_BUDGET_US } else { PROACTIVE_BUDGET_US }
+    }
+}
+
+impl SchedPolicy for DeadlinePolicy {
+    fn label(&self) -> String {
+        "deadline".into()
+    }
+
+    fn max_chunk(&self) -> usize {
+        self.coord.max_chunk()
+    }
+
+    fn session_capacity(&self) -> usize {
+        self.coord.sched.session_capacity
+    }
+
+    fn decide(&mut self, mut ctx: PolicyCtx<'_>) -> Vec<Action> {
+        let this = &*self;
+        this.coord.schedule(&mut ctx, this);
+        ctx.take_actions()
+    }
+
+    /// EDF resumption: least slack first, where slack is the margin
+    /// between the deadline and the earliest possible prefill
+    /// completion (`now + ETC`).  Slack keys are precomputed per
+    /// candidate — same O(n) ETC discipline as the default order.
+    fn resume_order(&self, r: ResumeCtx<'_>, cands: &mut Vec<ReqId>) {
+        let mut keyed: Vec<(f64, ReqId)> = cands
+            .iter()
+            .map(|id| {
+                let st = &r.states[id];
+                let slack =
+                    Self::deadline_us(st) - r.now_us - prefill_etc_us(st, r.ann, r.xpu);
+                (slack, *id)
+            })
+            .collect();
+        keyed.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        cands.clear();
+        cands.extend(keyed.into_iter().map(|(_, id)| id));
+    }
+
+    /// Deadline-ordered lanes with a slack-aware join gate (see module
+    /// docs).
+    fn decode_batch(
+        &self,
+        states: &States,
+        b_max: usize,
+        allow_join: bool,
+        now_us: f64,
+    ) -> (Vec<ReqId>, bool) {
+        let mut reactive: Vec<(f64, ReqId)> = vec![];
+        let mut proactive: Vec<(f64, ReqId)> = vec![];
+        for st in states.values() {
+            if st.phase != Phase::Decoding || st.running {
+                continue;
+            }
+            let d = Self::deadline_us(st);
+            if st.is_reactive() {
+                reactive.push((d, st.id()));
+            } else {
+                proactive.push((d, st.id()));
+            }
+        }
+        reactive.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let any_reactive = !reactive.is_empty();
+        // The tightest reactive lane gates proactive joins: once its
+        // slack is inside the guard, the batch stays reactive-only.
+        let join_ok = reactive
+            .first()
+            .map(|(d, _)| d - now_us > JOIN_GUARD_US)
+            .unwrap_or(true);
+        let mut lanes: Vec<ReqId> = reactive.into_iter().map(|(_, id)| id).collect();
+        if (allow_join && join_ok) || lanes.is_empty() {
+            proactive.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            for (_, id) in proactive {
+                if lanes.len() >= b_max {
+                    break;
+                }
+                lanes.push(id);
+            }
+        }
+        lanes.truncate(b_max);
+        (lanes, any_reactive)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{default_soc, llama32_3b};
+    use crate::engine::{Engine, ExecBridge};
+    use crate::heg::Annotator;
+    use crate::soc::XpuModel;
+    use crate::workload::{Priority, Request};
+    use std::collections::HashMap;
+
+    fn geo() -> ModelGeometry {
+        let mut g = llama32_3b();
+        g.n_layers = 3;
+        g
+    }
+
+    fn req(id: u64, prio: Priority, arrival: f64, plen: usize, out: usize) -> Request {
+        Request {
+            id,
+            priority: prio,
+            arrival_us: arrival,
+            prompt: vec![1; plen],
+            max_new_tokens: out,
+            profile: "edf".into(),
+            flow: None,
+        }
+    }
+
+    fn mk_states(specs: &[(u64, Priority, Phase, f64)]) -> HashMap<ReqId, ReqState> {
+        let bridge = ExecBridge::synthetic(geo());
+        specs
+            .iter()
+            .map(|&(id, prio, phase, arrival)| {
+                let mut st = bridge.init_state(req(id, prio, arrival, 300, 8), 512);
+                st.phase = phase;
+                (id, st)
+            })
+            .collect()
+    }
+
+    fn policy() -> DeadlinePolicy {
+        DeadlinePolicy::new(geo(), &default_soc(), SchedulerConfig::default())
+    }
+
+    #[test]
+    fn resume_order_is_edf_by_slack() {
+        let states = mk_states(&[
+            (1, Priority::Proactive, Phase::Prefilling, 500_000.0),
+            (2, Priority::Proactive, Phase::Prefilling, 0.0),
+            (3, Priority::Proactive, Phase::Prefilling, 900_000.0),
+        ]);
+        let ann = Annotator::new(
+            geo(),
+            default_soc().xpus.iter().cloned().map(XpuModel::new).collect(),
+        );
+        let p = policy();
+        let mut cands = vec![1, 2, 3];
+        // identical prompts → identical ETC, so slack order == arrival
+        // (deadline) order: the earliest-arrived is closest to its
+        // deadline
+        p.resume_order(
+            ResumeCtx {
+                states: &states,
+                ann: &ann,
+                xpu: 0,
+                now_us: 1_000_000.0,
+                starvation_age_us: 1e12,
+                critical_path: true,
+            },
+            &mut cands,
+        );
+        assert_eq!(cands, vec![2, 1, 3], "least slack resumes first");
+    }
+
+    #[test]
+    fn decode_join_gate_closes_when_reactive_slack_runs_low() {
+        let states = mk_states(&[
+            (1, Priority::Reactive, Phase::Decoding, 0.0),
+            (2, Priority::Proactive, Phase::Decoding, 0.0),
+            (3, Priority::Proactive, Phase::Decoding, 0.0),
+        ]);
+        let p = policy();
+        // early in the reactive budget: proactive lanes may join
+        let (lanes, any_rt) = p.decode_batch(&states, 8, true, 10_000.0);
+        assert!(any_rt);
+        assert_eq!(lanes.len(), 3, "joins allowed while slack is ample");
+        assert_eq!(lanes[0], 1, "reactive (tightest deadline) leads");
+        // late in the budget: the batch stays reactive-only
+        let (lanes, any_rt) = p.decode_batch(&states, 8, true, 500_000.0);
+        assert!(any_rt);
+        assert_eq!(lanes, vec![1], "join gate closed under low slack");
+        // without reactive lanes the gate never applies
+        let pro_only = mk_states(&[
+            (2, Priority::Proactive, Phase::Decoding, 0.0),
+            (3, Priority::Proactive, Phase::Decoding, 0.0),
+        ]);
+        let (lanes, any_rt) = p.decode_batch(&pro_only, 8, true, 500_000.0);
+        assert!(!any_rt);
+        assert_eq!(lanes.len(), 2);
+    }
+
+    #[test]
+    fn deadline_engine_completes_mixed_loads() {
+        let mut e =
+            DeadlineEngine::synthetic(geo(), default_soc(), SchedulerConfig::default());
+        let mut trace: Vec<Request> = (0..6)
+            .map(|i| req(i, Priority::Proactive, i as f64 * 30_000.0, 300, 20))
+            .collect();
+        trace.push(req(100, Priority::Reactive, 50_000.0, 128, 8));
+        trace.push(req(101, Priority::Reactive, 700_000.0, 128, 8));
+        let rep = e.run(trace).unwrap();
+        assert_eq!(rep.engine, "deadline");
+        assert_eq!(rep.reqs.iter().filter(|m| m.finished()).count(), 8);
+        assert!(e.last_trace().is_some());
+    }
+}

@@ -1,66 +1,118 @@
-//! The Agent.xpu engine: the XPU-coordinator scheduling loop over the
-//! shared DES driver.  This is the paper's system contribution wired
-//! together — see module docs in `coordinator/mod.rs`.
+//! The Agent.xpu scheduling policy: the XPU-coordinator decision
+//! pipeline over the shared DES driver.  This is the paper's system
+//! contribution wired together — see module docs in
+//! `coordinator/mod.rs`.
+//!
+//! Since the `SchedPolicy` redesign (DESIGN.md §7) this file contains
+//! *no* engine lifecycle: [`PolicyEngine`] owns start/submit/step/
+//! cancel/finish, tracing, and event emission for every policy.  What
+//! lives here is
+//!
+//! - [`XpuCoordinator`] — the reusable §5/§6 decision pipeline
+//!   (hetero-disaggregation, kernel-level preemption, margin chunks,
+//!   slack-aware backfill, memory-aware dispatch, the deadlock guard).
+//!   It consults the policy's narrower hooks (`admission_order`,
+//!   `resume_order`, `decode_batch`, `eviction_victim`) at every
+//!   ranking point, so a policy that only wants a different *ordering*
+//!   — like `deadline` — overrides one hook and reuses the pipeline.
+//! - [`AgentXpuPolicy`] — the paper's policy: the pipeline with every
+//!   hook at its §6 default.
+//!
+//! `AgentXpuEngine` remains the engine type the harnesses and the
+//! server name — now an alias for `PolicyEngine<AgentXpuPolicy>`.
 
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
-
 use crate::config::{ModelGeometry, SchedulerConfig, SocConfig};
 use crate::engine::{
-    Driver, EngineClock, EngineCore, EngineEvent, ExecBridge, KernelTag, Phase,
+    Action, ExecBridge, KernelTag, Phase, PolicyCtx, PolicyEngine, ResumeCtx,
+    SchedPolicy, States,
 };
 use crate::heg::{Annotator, max_chunk_within_budget};
-use crate::metrics::RunReport;
 use crate::runtime::ModelExecutor;
 use crate::soc::XpuModel;
-use crate::workload::{ReqId, Request};
+use crate::workload::ReqId;
 
 use super::dispatch::{DispatchDecision, dispatch_check};
 use super::memory::MemoryGovernor;
-use super::select::{decode_lanes, resume_order};
 
-/// The Agent.xpu serving engine.
-pub struct AgentXpuEngine {
-    soc: SocConfig,
-    pub sched: SchedulerConfig,
-    ann: Annotator,
-    exec: Option<Arc<ModelExecutor>>,
-    geo: ModelGeometry,
-    max_chunk: usize,
-    npu: usize,
-    igpu: usize,
-    /// Which request last owned the NPU prefill pipeline (preemption
-    /// accounting).
-    npu_owner: Option<ReqId>,
-    /// Kernel trace of the last `run` (Fig. 4 Gantt, debugging).
-    pub last_trace: Option<crate::trace::Trace>,
-    /// DRAM-budget admission control (§6.5 memory management).
-    governor: MemoryGovernor,
-    /// The open run, if `start` has been called (EngineCore lifecycle).
-    active: Option<Driver>,
-    /// The last `step` made no progress (run idle).
-    stalled: bool,
-}
+/// The Agent.xpu serving engine: the coordinator policy behind the one
+/// generic [`PolicyEngine`].
+pub type AgentXpuEngine = PolicyEngine<AgentXpuPolicy>;
 
-impl AgentXpuEngine {
+impl PolicyEngine<AgentXpuPolicy> {
     /// Timing-only engine at a given geometry (figure sweeps).
     pub fn synthetic(geo: ModelGeometry, soc: SocConfig, sched: SchedulerConfig) -> Self {
-        Self::build(geo, soc, sched, None)
+        let bridge = ExecBridge::synthetic(geo.clone());
+        PolicyEngine::with_policy(AgentXpuPolicy::new(geo, &soc, sched), soc, bridge)
     }
 
     /// Real-compute engine over loaded artifacts.
     pub fn real(exec: Arc<ModelExecutor>, soc: SocConfig, sched: SchedulerConfig) -> Self {
         let geo = exec.geo().clone();
-        Self::build(geo, soc, sched, Some(exec))
+        let bridge = ExecBridge::real(exec);
+        PolicyEngine::with_policy(AgentXpuPolicy::new(geo, &soc, sched), soc, bridge)
     }
+}
 
-    fn build(
-        geo: ModelGeometry,
-        soc: SocConfig,
-        sched: SchedulerConfig,
-        exec: Option<Arc<ModelExecutor>>,
-    ) -> Self {
+/// Reference scan for the driver's waiting-proactive-prefill index
+/// (debug-assert parity checks only — release builds trust the index,
+/// and the index's id order matches this sorted scan exactly, so both
+/// feed `resume_order` identical candidate lists).
+fn scan_waiting_proactive(states: &States) -> Vec<ReqId> {
+    let mut v: Vec<ReqId> = states
+        .values()
+        .filter(|s| s.phase == Phase::Prefilling && !s.running && !s.is_reactive())
+        .map(|s| s.id())
+        .collect();
+    v.sort_unstable();
+    v
+}
+
+/// Reactive requests currently mid-system (prefilling or decoding).
+fn reactive_active(states: &States) -> bool {
+    states.values().any(|s| s.is_reactive() && s.phase != Phase::Done)
+}
+
+/// Preemption accounting (§6.2): whenever a reactive prefill kernel
+/// launches while a mid-prefill proactive task waits at its
+/// kernel-boundary checkpoint, that task is preempted — counted once
+/// per wait episode (the flag clears when the victim runs again).
+fn account_preemption(ctx: &mut PolicyCtx<'_>) {
+    let victims: Vec<ReqId> = ctx
+        .states()
+        .values()
+        .filter(|s| {
+            !s.is_reactive()
+                && s.phase == Phase::Prefilling
+                && !s.running
+                && !s.preempt_counted
+                && (s.chunk_idx > 0 || s.layer_idx > 0)
+        })
+        .map(|s| s.id())
+        .collect();
+    for v in victims {
+        ctx.mark_preempted(v);
+    }
+}
+
+/// The reusable XPU-coordinator decision pipeline (§5/§6): one
+/// `schedule` pass per engine step, ranking points delegated to the
+/// policy's hooks.  Stateless across steps — all run state lives in
+/// the driver, all knobs in [`SchedulerConfig`].
+pub struct XpuCoordinator {
+    pub sched: SchedulerConfig,
+    ann: Annotator,
+    geo: ModelGeometry,
+    max_chunk: usize,
+    npu: usize,
+    igpu: usize,
+    /// DRAM-budget admission control (§6.5 memory management).
+    governor: MemoryGovernor,
+}
+
+impl XpuCoordinator {
+    pub fn new(geo: ModelGeometry, soc: &SocConfig, sched: SchedulerConfig) -> Self {
         let xpus: Vec<XpuModel> = soc.xpus.iter().cloned().map(XpuModel::new).collect();
         let ann = Annotator::new(geo.clone(), xpus);
         let npu = ann.xpu_index("npu").expect("soc needs an npu");
@@ -70,70 +122,14 @@ impl AgentXpuEngine {
             &[&ann.xpus[npu], &ann.xpus[igpu]],
             sched.chunk_latency_budget_ms,
         );
-        let governor = MemoryGovernor::new(&geo, &soc);
-        Self {
-            soc, sched, ann, exec, geo, max_chunk, npu, igpu,
-            npu_owner: None, last_trace: None, governor,
-            active: None, stalled: false,
-        }
+        let governor = MemoryGovernor::new(&geo, soc);
+        Self { sched, ann, geo, max_chunk, npu, igpu, governor }
     }
 
-    /// §6.5 memory management: may `id`'s prefill start (allocate its
-    /// KV) right now?  Started requests always continue (their KV is
-    /// already resident).  Under pressure the governor sheds residency
-    /// cheapest-first: idle retained session caches go LRU-first (a
-    /// dropped session only costs one conversation-prefix recompute),
-    /// then a reactive request that still does not fit evicts the
-    /// least-progressed waiting proactive prefill (graceful
-    /// degradation — its context is recomputed later, like scheme (a)).
-    fn memory_admit(&mut self, d: &mut Driver, id: ReqId) -> bool {
-        let st = &d.states[&id];
-        // A claimed session cache counts as already-resident KV: the
-        // slot moved from the pool's books onto this request at
-        // admission, so "starting" it allocates nothing new.
-        let started = st.chunk_idx > 0 || st.layer_idx > 0 || st.cached_prefix_len > 0;
-        if started
-            || self
-                .governor
-                .can_start_with_sessions(&d.states, d.retained_sessions())
-        {
-            return true;
-        }
-        if !st.is_reactive() {
-            // Defer the proactive start until memory frees — without
-            // shedding sessions: evicting reactive chat state to admit
-            // background work would invert the priority order, and a
-            // deferred start gains nothing from the eviction anyway.
-            return false;
-        }
-        // First valve for reactive arrivals: drop idle sessions,
-        // least-recently-used first (cheapest residency to rebuild).
-        while let Some(fid) = d.sessions.as_mut().and_then(|p| p.evict_lru()) {
-            d.note_session_eviction(fid);
-            if self
-                .governor
-                .can_start_with_sessions(&d.states, d.retained_sessions())
-            {
-                return true;
-            }
-        }
-        if let Some(victim) = self.governor.eviction_victim(&d.states) {
-            let geo = self.geo.clone();
-            let now = d.now();
-            let vs = d.states.get_mut(&victim).unwrap();
-            vs.restart_prefill(&geo);
-            vs.enqueued_at_us = now;
-            d.note_kv_eviction(victim); // surfaces in RunReport::kv_evictions
-            return true;
-        }
-        true // nothing evictable: admit anyway (paper's moderate-density assumption)
-    }
-
-    fn bridge(&self) -> ExecBridge {
-        match &self.exec {
-            Some(e) => ExecBridge::real(e.clone()),
-            None => ExecBridge::synthetic(self.geo.clone()),
-        }
+    /// Chunk-size cap for `Driver::admit_ready` (elastic planning
+    /// within the §6.2 latency budget).
+    pub fn max_chunk(&self) -> usize {
+        self.max_chunk
     }
 
     /// The "prefill XPU" under disaggregation is the NPU; colocated mode
@@ -142,114 +138,124 @@ impl AgentXpuEngine {
         if self.sched.disaggregation { self.npu } else { self.igpu }
     }
 
-    /// Preemption accounting (§6.2): whenever a reactive prefill kernel
-    /// launches while a mid-prefill proactive task waits at its
-    /// kernel-boundary checkpoint, that task is preempted — counted once
-    /// per wait episode (the flag clears when the victim runs again).
-    fn account_preemption(d: &mut Driver, _reactive_id: ReqId) {
-        let now = d.now();
-        let victims: Vec<ReqId> = d
-            .states
-            .values()
-            .filter(|s| {
-                !s.is_reactive()
-                    && s.phase == Phase::Prefilling
-                    && !s.running
-                    && !s.preempt_counted
-                    && (s.chunk_idx > 0 || s.layer_idx > 0)
-            })
-            .map(|s| s.id())
-            .collect();
-        for v in victims {
-            let vs = d.states.get_mut(&v).unwrap();
-            vs.preempted += 1;
-            vs.preempt_counted = true;
-            vs.enqueued_at_us = now;
-            d.note_preemption(v);
+    /// §6.5 memory management: may `id`'s prefill start (allocate its
+    /// KV) right now?  Started requests always continue (their KV is
+    /// already resident).  Under pressure the governor sheds residency
+    /// cheapest-first: idle retained session caches go LRU-first (a
+    /// dropped session only costs one conversation-prefix recompute),
+    /// then a reactive request that still does not fit evicts the
+    /// policy's preferred waiting prefill victim (graceful degradation
+    /// — its context is recomputed later, like scheme (a)).
+    fn memory_admit<H: SchedPolicy + ?Sized>(
+        &self,
+        ctx: &mut PolicyCtx<'_>,
+        id: ReqId,
+        hooks: &H,
+    ) -> bool {
+        // A claimed session cache counts as already-resident KV: the
+        // slot moved from the pool's books onto this request at
+        // admission, so "starting" it allocates nothing new.
+        let (started, reactive) = {
+            let st = ctx.state(id);
+            (
+                st.chunk_idx > 0 || st.layer_idx > 0 || st.cached_prefix_len > 0,
+                st.is_reactive(),
+            )
+        };
+        if started
+            || self
+                .governor
+                .can_start_with_sessions(ctx.states(), ctx.retained_sessions())
+        {
+            return true;
         }
+        if !reactive {
+            // Defer the proactive start until memory frees — without
+            // shedding sessions: evicting reactive chat state to admit
+            // background work would invert the priority order, and a
+            // deferred start gains nothing from the eviction anyway.
+            return false;
+        }
+        // First valve for reactive arrivals: drop idle sessions,
+        // least-recently-used first (cheapest residency to rebuild).
+        while ctx.evict_lru_session().is_some() {
+            if self
+                .governor
+                .can_start_with_sessions(ctx.states(), ctx.retained_sessions())
+            {
+                return true;
+            }
+        }
+        if let Some(victim) = hooks.eviction_victim(&self.governor, ctx.states()) {
+            ctx.evict_prefill(victim, &self.geo); // RunReport::kv_evictions
+            return true;
+        }
+        true // nothing evictable: admit anyway (paper's moderate-density assumption)
     }
 
-    /// Reference scan for the driver's waiting-proactive-prefill index
-    /// (debug-assert parity checks only — release builds trust the
-    /// index, and the index's id order matches this sorted scan
-    /// exactly, so both feed `resume_order` identical candidate lists).
-    fn scan_waiting_proactive(d: &Driver) -> Vec<ReqId> {
-        let mut v: Vec<ReqId> = d
-            .states
-            .values()
-            .filter(|s| s.phase == Phase::Prefilling && !s.running && !s.is_reactive())
-            .map(|s| s.id())
-            .collect();
-        v.sort_unstable();
-        v
-    }
-
-    /// Reactive requests currently mid-system (prefilling or decoding).
-    fn reactive_active(d: &Driver) -> bool {
-        d.states
-            .values()
-            .any(|s| s.is_reactive() && s.phase != Phase::Done)
+    fn resume_ctx<'a>(&'a self, ctx: &'a PolicyCtx<'_>, xpu: usize) -> ResumeCtx<'a> {
+        ResumeCtx {
+            states: ctx.states(),
+            ann: &self.ann,
+            xpu,
+            now_us: ctx.now(),
+            starvation_age_us: self.sched.starvation_age_ms * 1e3,
+            critical_path: self.sched.critical_path_priority,
+        }
     }
 
     // -- NPU side: the prefill pipeline ---------------------------------
 
-    fn schedule_prefill_pipeline(&mut self, d: &mut Driver) {
+    fn schedule_prefill_pipeline<H: SchedPolicy + ?Sized>(
+        &self,
+        ctx: &mut PolicyCtx<'_>,
+        hooks: &H,
+    ) {
         let pxpu = self.prefill_xpu();
-        if d.sim.busy(pxpu) {
+        if ctx.busy(pxpu) {
             return;
         }
         // Reactive first (kernel-level preemption: we are at a kernel
         // boundary by construction — the pipeline is idle).
-        let mut reactive: Vec<ReqId> = d
-            .states
+        let mut reactive: Vec<ReqId> = ctx
+            .states()
             .values()
             .filter(|s| s.phase == Phase::Prefilling && !s.running && s.is_reactive())
             .map(|s| s.id())
             .collect();
-        reactive.sort_by(|a, b| {
-            d.states[a]
-                .req
-                .arrival_us
-                .total_cmp(&d.states[b].req.arrival_us)
-                .then(a.cmp(b))
-        });
-        let mut proactive: Vec<ReqId> = d.waiting_proactive_prefills();
+        hooks.admission_order(ctx.states(), &mut reactive);
+        let mut proactive: Vec<ReqId> = ctx.waiting_proactive_prefills();
         debug_assert_eq!(
             proactive,
-            Self::scan_waiting_proactive(d),
+            scan_waiting_proactive(ctx.states()),
             "waiting-proactive-prefill index diverged from a state scan"
         );
-        resume_order(
-            &d.states,
-            &mut proactive,
-            &self.ann,
-            pxpu,
-            d.now(),
-            self.sched.starvation_age_ms * 1e3,
-            self.sched.critical_path_priority,
-        );
+        hooks.resume_order(self.resume_ctx(ctx, pxpu), &mut proactive);
 
         let pick = if self.sched.preemption {
             reactive.first().copied().or_else(|| proactive.first().copied())
         } else {
             // no-preemption ablation: FCFS across classes
             let mut all = [reactive.as_slice(), proactive.as_slice()].concat();
+            let states = ctx.states();
             all.sort_by(|a, b| {
-                d.states[a]
+                states[a]
                     .req
                     .arrival_us
-                    .total_cmp(&d.states[b].req.arrival_us)
+                    .total_cmp(&states[b].req.arrival_us)
                     .then(a.cmp(b))
             });
             all.first().copied()
         };
         let Some(id) = pick else { return };
-        if !self.memory_admit(d, id) {
+        if !self.memory_admit(ctx, id, hooks) {
             return;
         }
 
-        let st = &d.states[&id];
-        let chunk = *st.current_chunk().expect("prefilling has a chunk");
+        let (chunk, reactive_k) = {
+            let st = ctx.state(id);
+            (*st.current_chunk().expect("prefilling has a chunk"), st.is_reactive())
+        };
         // Elastic binding: dynamic margin chunks prefer the iGPU (§5.2);
         // if the iGPU is busy they wait for it unless this XPU *is* the
         // iGPU already (colocated mode).
@@ -258,66 +264,70 @@ impl AgentXpuEngine {
         }
         let annotated = self.ann.prefill_kernel(&chunk);
         let timing = *annotated.timing_on(pxpu);
-        let reactive_k = st.is_reactive();
-        if dispatch_check(&d.sim, &self.sched, &timing, reactive_k)
+        if dispatch_check(ctx.sim(), &self.sched, &timing, reactive_k)
             == DispatchDecision::Defer
         {
             return;
         }
         if reactive_k {
-            Self::account_preemption(d, id);
+            account_preemption(ctx);
         }
-        self.npu_owner = Some(id);
-        d.launch(pxpu, timing, reactive_k, KernelTag::Prefill { req: id });
+        ctx.launch(pxpu, timing, reactive_k, KernelTag::Prefill { req: id });
     }
 
     // -- iGPU side: decode pipeline, margins, inter-XPU backfill --------
 
-    fn schedule_decode_pipeline(&mut self, d: &mut Driver) {
-        if d.sim.busy(self.igpu) {
+    fn schedule_decode_pipeline<H: SchedPolicy + ?Sized>(
+        &self,
+        ctx: &mut PolicyCtx<'_>,
+        hooks: &H,
+    ) {
+        if ctx.busy(self.igpu) {
             return;
         }
-        let reactive_present = Self::reactive_active(d);
+        let reactive_present = reactive_active(ctx.states());
 
         // (1) A reactive dynamic margin chunk gates that request's TTFT:
         // it outranks everything on the iGPU.
-        if self.sched.disaggregation {
-            if self.try_margin_chunk(d, true) {
-                return;
-            }
+        if self.sched.disaggregation && self.try_margin_chunk(ctx, true, hooks) {
+            return;
         }
 
         // (2) Proactive margin chunks outrank proactive-only decode:
         // finishing a prefill feeds the decode batch (the ETC rationale
         // of §6.2's resumption strategy) — but never delay a decode
         // batch that carries a reactive lane.
-        let rt_decoding = d
-            .states
+        let rt_decoding = ctx
+            .states()
             .values()
             .any(|s| s.phase == Phase::Decoding && !s.running && s.is_reactive());
-        if self.sched.disaggregation && !rt_decoding && self.try_margin_chunk(d, false) {
+        if self.sched.disaggregation
+            && !rt_decoding
+            && self.try_margin_chunk(ctx, false, hooks)
+        {
             return;
         }
 
         // (3) Decode iteration with adaptive batching + intra-XPU
         // backfill (proactive lanes join at the boundary when allowed).
         let allow_join = self.sched.backfill || !reactive_present;
-        let (lanes, any_rt) = decode_lanes(&d.states, self.sched.b_max, allow_join);
+        let (lanes, any_rt) =
+            hooks.decode_batch(ctx.states(), self.sched.b_max, allow_join, ctx.now());
         if !lanes.is_empty() {
-            let avg_ctx = (lanes.iter().map(|id| d.states[id].pos).sum::<usize>()
+            let avg_ctx = (lanes.iter().map(|id| ctx.state(*id).pos).sum::<usize>()
                 / lanes.len())
             .max(1);
             let annotated = self.ann.decode_iter(lanes.len(), avg_ctx);
             let timing = *annotated.timing_on(self.igpu);
-            if dispatch_check(&d.sim, &self.sched, &timing, any_rt)
+            if dispatch_check(ctx.sim(), &self.sched, &timing, any_rt)
                 == DispatchDecision::Launch
             {
                 let backfilled =
-                    any_rt && lanes.iter().any(|id| !d.states[id].is_reactive());
+                    any_rt && lanes.iter().any(|id| !ctx.state(*id).is_reactive());
                 if backfilled {
-                    d.backfills += 1;
+                    ctx.note_backfill();
                 }
-                d.launch(self.igpu, timing, any_rt, KernelTag::DecodeIter { lanes });
+                ctx.launch(self.igpu, timing, any_rt, KernelTag::DecodeIter { lanes });
                 return;
             }
             // decode deferred: fall through to cheaper candidates
@@ -329,7 +339,7 @@ impl AgentXpuEngine {
 
         // (4) Proactive dynamic margin chunks (the non-rt-decoding case
         // was already handled above).
-        if self.try_margin_chunk(d, false) {
+        if self.try_margin_chunk(ctx, false, hooks) {
             return;
         }
 
@@ -339,53 +349,48 @@ impl AgentXpuEngine {
         if !self.sched.backfill {
             return;
         }
-        if !d.sim.busy(self.prefill_xpu()) {
+        if !ctx.busy(self.prefill_xpu()) {
             return; // structural slack only
         }
         // Candidates come from the driver's incrementally maintained
         // waiting-proactive-prefill index — a full `states` scan per
         // step was the old hot path; the debug assert proves the index
         // always matches it, so schedules are bit-identical.
-        let mut cands: Vec<ReqId> = d.waiting_proactive_prefills();
+        let mut cands: Vec<ReqId> = ctx.waiting_proactive_prefills();
         debug_assert_eq!(
             cands,
-            Self::scan_waiting_proactive(d),
+            scan_waiting_proactive(ctx.states()),
             "waiting-proactive-prefill index diverged from a state scan"
         );
         if cands.is_empty() {
             return;
         }
-        // Order by the §6.2 resumption strategy (starvation age →
-        // continuation → critical path → ETC): the candidates share one
-        // kernel shape class on the iGPU, so this is the tiebreak that
-        // decides which proactive prefill claims the backfill bubble.
-        resume_order(
-            &d.states,
-            &mut cands,
-            &self.ann,
-            self.igpu,
-            d.now(),
-            self.sched.starvation_age_ms * 1e3,
-            self.sched.critical_path_priority,
-        );
+        // Ranked by the policy's resumption hook (§6.2 default:
+        // starvation age → continuation → critical path → ETC): the
+        // candidates share one kernel shape class on the iGPU, so this
+        // is the tiebreak that decides which proactive prefill claims
+        // the backfill bubble.
+        hooks.resume_order(self.resume_ctx(ctx, self.igpu), &mut cands);
         for id in cands {
-            let st = &d.states[&id];
-            let chunk = *st.current_chunk().unwrap();
+            let chunk = {
+                let st = ctx.state(id);
+                *st.current_chunk().unwrap()
+            };
             if chunk.dynamic {
                 continue; // handled by try_margin_chunk
             }
-            if !self.memory_admit(d, id) {
+            if !self.memory_admit(ctx, id, hooks) {
                 continue;
             }
             let annotated = self.ann.prefill_kernel(&chunk);
             let timing = *annotated.timing_on(self.igpu);
             // Backfill constraints (§6.3): duration within the reactive
             // window (chunking bounds this), memory threshold (Alg. 1).
-            if dispatch_check(&d.sim, &self.sched, &timing, false)
+            if dispatch_check(ctx.sim(), &self.sched, &timing, false)
                 == DispatchDecision::Launch
             {
-                d.backfills += 1;
-                d.launch(self.igpu, timing, false, KernelTag::Prefill { req: id });
+                ctx.note_backfill();
+                ctx.launch(self.igpu, timing, false, KernelTag::Prefill { req: id });
                 return;
             }
         }
@@ -393,9 +398,14 @@ impl AgentXpuEngine {
 
     /// Launch the next *dynamic* (margin) chunk of a reactive/proactive
     /// request on the iGPU.  Returns true if launched.
-    fn try_margin_chunk(&mut self, d: &mut Driver, reactive: bool) -> bool {
-        let mut cands: Vec<ReqId> = d
-            .states
+    fn try_margin_chunk<H: SchedPolicy + ?Sized>(
+        &self,
+        ctx: &mut PolicyCtx<'_>,
+        reactive: bool,
+        hooks: &H,
+    ) -> bool {
+        let mut cands: Vec<ReqId> = ctx
+            .states()
             .values()
             .filter(|s| {
                 s.phase == Phase::Prefilling
@@ -405,29 +415,26 @@ impl AgentXpuEngine {
             })
             .map(|s| s.id())
             .collect();
-        cands.sort_by(|a, b| {
-            d.states[a]
-                .req
-                .arrival_us
-                .total_cmp(&d.states[b].req.arrival_us)
-                .then(a.cmp(b))
-        });
+        hooks.admission_order(ctx.states(), &mut cands);
         let Some(&id) = cands.first() else { return false };
-        if !self.memory_admit(d, id) {
+        if !self.memory_admit(ctx, id, hooks) {
             return false;
         }
-        let chunk = *d.states[&id].current_chunk().unwrap();
+        let chunk = {
+            let st = ctx.state(id);
+            *st.current_chunk().unwrap()
+        };
         let annotated = self.ann.prefill_kernel(&chunk);
         let timing = *annotated.timing_on(self.igpu);
-        if dispatch_check(&d.sim, &self.sched, &timing, reactive)
+        if dispatch_check(ctx.sim(), &self.sched, &timing, reactive)
             == DispatchDecision::Defer
         {
             return false;
         }
         if reactive {
-            Self::account_preemption(d, id);
+            account_preemption(ctx);
         }
-        d.launch(self.igpu, timing, reactive, KernelTag::Prefill { req: id });
+        ctx.launch(self.igpu, timing, reactive, KernelTag::Prefill { req: id });
         true
     }
 
@@ -436,14 +443,14 @@ impl AgentXpuEngine {
     /// has nothing to wait for on an idle SoC — dispatch_check already
     /// allows this, so this only fires for margin-vs-busy-iGPU corner
     /// cases).
-    fn force_progress(&mut self, d: &mut Driver) {
-        if !d.sim.all_idle() {
+    fn force_progress(&self, ctx: &mut PolicyCtx<'_>) {
+        if !ctx.all_idle() {
             return;
         }
         // any runnable prefill (incl. dynamic margins on the NPU with
         // JIT) — reactive first, then aged proactive
-        let mut cands: Vec<ReqId> = d
-            .states
+        let mut cands: Vec<ReqId> = ctx
+            .states()
             .values()
             .filter(|s| s.phase == Phase::Prefilling && !s.running)
             .map(|s| s.id())
@@ -451,92 +458,66 @@ impl AgentXpuEngine {
         if cands.is_empty() {
             return;
         }
-        cands.sort_by(|a, b| {
-            let (sa, sb) = (&d.states[a], &d.states[b]);
-            sb.is_reactive()
-                .cmp(&sa.is_reactive())
-                .then(sa.req.arrival_us.total_cmp(&sb.req.arrival_us))
-                .then(a.cmp(b))
-        });
+        {
+            let states = ctx.states();
+            cands.sort_by(|a, b| {
+                let (sa, sb) = (&states[a], &states[b]);
+                sb.is_reactive()
+                    .cmp(&sa.is_reactive())
+                    .then(sa.req.arrival_us.total_cmp(&sb.req.arrival_us))
+                    .then(a.cmp(b))
+            });
+        }
         let id = cands[0];
-        let st = &d.states[&id];
-        let chunk = *st.current_chunk().unwrap();
+        let (chunk, reactive) = {
+            let st = ctx.state(id);
+            (*st.current_chunk().unwrap(), st.is_reactive())
+        };
         let annotated = self.ann.prefill_kernel(&chunk);
         // run on the iGPU if dynamic, NPU otherwise
         let xpu = if chunk.dynamic { self.igpu } else { self.prefill_xpu() };
         let timing = *annotated.timing_on(xpu);
-        let reactive = st.is_reactive();
-        d.launch(xpu, timing, reactive, KernelTag::Prefill { req: id });
+        ctx.launch(xpu, timing, reactive, KernelTag::Prefill { req: id });
     }
 
-    fn schedule(&mut self, d: &mut Driver) {
-        self.schedule_prefill_pipeline(d);
-        self.schedule_decode_pipeline(d);
-        self.force_progress(d);
+    /// One full coordinator pass: prefill pipeline, decode pipeline,
+    /// deadlock guard — consulting `hooks` at every ranking point.
+    pub fn schedule<H: SchedPolicy + ?Sized>(&self, ctx: &mut PolicyCtx<'_>, hooks: &H) {
+        self.schedule_prefill_pipeline(ctx, hooks);
+        self.schedule_decode_pipeline(ctx, hooks);
+        self.force_progress(ctx);
     }
 }
 
-impl EngineCore for AgentXpuEngine {
-    fn name(&self) -> String {
+/// The paper's scheduling policy: the [`XpuCoordinator`] pipeline with
+/// every narrower hook at its §6 default.
+pub struct AgentXpuPolicy {
+    pub coord: XpuCoordinator,
+}
+
+impl AgentXpuPolicy {
+    pub fn new(geo: ModelGeometry, soc: &SocConfig, sched: SchedulerConfig) -> Self {
+        Self { coord: XpuCoordinator::new(geo, soc, sched) }
+    }
+}
+
+impl SchedPolicy for AgentXpuPolicy {
+    fn label(&self) -> String {
         "agent.xpu".into()
     }
 
-    fn start(&mut self, clock: EngineClock) -> Result<()> {
-        self.npu_owner = None;
-        let mut d = Driver::open(&self.soc, self.bridge(), clock);
-        // Flow-level session retention (DESIGN.md §3): continuation
-        // turns prefill only their delta tokens.  Baselines run the
-        // same flow traces without this — full-prefix recompute —
-        // so the figures quantify the reuse win.
-        if self.sched.session_capacity > 0 {
-            d.enable_session_reuse(self.sched.session_capacity);
-        }
-        self.active = Some(d);
-        self.stalled = false;
-        Ok(())
+    fn max_chunk(&self) -> usize {
+        self.coord.max_chunk()
     }
 
-    fn submit(&mut self, req: Request) -> Result<()> {
-        self.active
-            .as_mut()
-            .context("agent.xpu: submit before start")?
-            .submit(req);
-        self.stalled = false;
-        Ok(())
+    fn session_capacity(&self) -> usize {
+        self.coord.sched.session_capacity
     }
 
-    fn cancel(&mut self, id: ReqId) -> Result<bool> {
-        let hit = self
-            .active
-            .as_mut()
-            .context("agent.xpu: cancel before start")?
-            .cancel_request(id);
-        if hit {
-            // wake a stalled run so the Cancelled event flushes
-            self.stalled = false;
-        }
-        Ok(hit)
-    }
-
-    fn step(&mut self) -> Result<Vec<EngineEvent>> {
-        let mut d = self.active.take().context("agent.xpu: step before start")?;
-        d.admit_ready(self.max_chunk);
-        self.schedule(&mut d);
-        let progressed = d.step()?;
-        self.stalled = !progressed;
-        let events = d.take_events();
-        self.active = Some(d);
-        Ok(events)
-    }
-
-    fn has_work(&self) -> bool {
-        self.active.is_some() && !self.stalled
-    }
-
-    fn finish(&mut self) -> Result<RunReport> {
-        let d = self.active.take().context("agent.xpu: finish before start")?;
-        self.last_trace = Some(d.trace.clone());
-        d.finish(self.name())
+    fn decide(&mut self, mut ctx: PolicyCtx<'_>) -> Vec<Action> {
+        let this = &*self;
+        this.coord.schedule(&mut ctx, this);
+        ctx.take_actions()
     }
 }
 
@@ -544,7 +525,8 @@ impl EngineCore for AgentXpuEngine {
 mod tests {
     use super::*;
     use crate::config::default_soc;
-    use crate::workload::Priority;
+    use crate::engine::Engine;
+    use crate::workload::{Priority, Request};
 
     fn geo() -> ModelGeometry {
         let mut g = crate::config::llama32_3b();
@@ -832,5 +814,17 @@ mod tests {
             assert_eq!(x.first_token_us, y.first_token_us);
             assert_eq!(x.done_us, y.done_us);
         }
+    }
+
+    /// The redesign's trace-retention satellite: `PolicyEngine` keeps
+    /// the kernel trace for every policy, available through the
+    /// `EngineCore::last_trace` accessor.
+    #[test]
+    fn finished_runs_retain_their_kernel_trace() {
+        let mut e = engine();
+        assert!(e.last_trace().is_none());
+        e.run(vec![req(1, Priority::Reactive, 0.0, 200, 4)]).unwrap();
+        let t = e.last_trace().expect("trace retained after finish");
+        t.assert_serialized();
     }
 }

@@ -17,12 +17,14 @@
 //!   from destructive co-execution;
 //! - **starvation prevention + dynamic load balancing** (§6.5).
 
+mod deadline;
 mod dispatch;
 mod engine_impl;
 mod memory;
 mod select;
 
+pub use deadline::{DeadlineEngine, DeadlinePolicy};
 pub use dispatch::{DispatchDecision, dispatch_check};
-pub use engine_impl::AgentXpuEngine;
+pub use engine_impl::{AgentXpuEngine, AgentXpuPolicy, XpuCoordinator};
 pub use memory::MemoryGovernor;
-pub use select::{decode_lanes, resume_order};
+pub use select::{decode_lanes, prefill_etc_us, resume_order};

@@ -7,6 +7,20 @@ use crate::engine::{Phase, ReqState};
 use crate::heg::Annotator;
 use crate::workload::ReqId;
 
+/// Exact estimated-time-to-completion of a request's remaining prefill
+/// on `xpu` (§6.2): sum each remaining chunk's per-layer kernel time
+/// over its remaining layers — the annotations make this a lookup.
+pub fn prefill_etc_us(st: &ReqState, ann: &Annotator, xpu: usize) -> f64 {
+    let n_layers = ann.geo.n_layers;
+    let mut total = 0.0;
+    for (ci, chunk) in st.plan.iter().enumerate().skip(st.chunk_idx) {
+        let per = ann.prefill_kernel(chunk).timings[xpu].nominal_us;
+        let layers = if ci == st.chunk_idx { n_layers - st.layer_idx } else { n_layers };
+        total += per * layers as f64;
+    }
+    total
+}
+
 /// Resumption strategy (§6.2): among paused proactive prefills, pick
 /// (1) starved tasks first — pending longer than `starvation_age_ms`,
 ///     oldest first — to prevent indefinite postponement (§6.5);
@@ -21,6 +35,11 @@ use crate::workload::ReqId;
 ///     (DESIGN.md §3 critical-path priority);
 /// (4) then the lowest estimated-time-to-completion (ETC), so tasks
 ///     enter the decode pipeline sooner and feed its throughput.
+///
+/// All sort keys — ETC included — are computed once per candidate
+/// before the sort; evaluating the exact chunk-sum ETC inside the
+/// comparator cost O(n log n) chunk walks per call against the §8 5 µs
+/// decision budget (tracked by `benches/sched_micro.rs`).
 pub fn resume_order(
     states: &HashMap<ReqId, ReqState>,
     candidates: &mut Vec<ReqId>,
@@ -30,49 +49,48 @@ pub fn resume_order(
     starvation_age_us: f64,
     critical_path: bool,
 ) {
-    let n_layers = ann.geo.n_layers;
-    // Exact ETC (§6.2): sum each remaining chunk's per-layer kernel time
-    // over its remaining layers — the annotations make this a lookup.
-    let etc = |id: &ReqId| -> f64 {
-        let st = &states[id];
-        let mut total = 0.0;
-        for (ci, chunk) in st.plan.iter().enumerate().skip(st.chunk_idx) {
-            let per = ann.prefill_kernel(chunk).timings[npu].nominal_us;
-            let layers = if ci == st.chunk_idx {
-                n_layers - st.layer_idx
-            } else {
-                n_layers
-            };
-            total += per * layers as f64;
-        }
-        total
-    };
-    candidates.sort_by(|a, b| {
-        let (sa, sb) = (&states[a], &states[b]);
-        let (age_a, age_b) = (now_us - sa.enqueued_at_us, now_us - sb.enqueued_at_us);
-        let (starved_a, starved_b) =
-            (age_a > starvation_age_us, age_b > starvation_age_us);
-        let cont = |s: &ReqState| {
-            s.req.flow.as_ref().map(|f| f.is_continuation()).unwrap_or(false)
-        };
-        let cp = |s: &ReqState| -> usize {
-            if critical_path {
-                s.req.flow.as_ref().map(|f| f.crit_path_len()).unwrap_or(1)
+    struct Key {
+        starved: bool,
+        age: f64,
+        cont: bool,
+        cp: usize,
+        etc: f64,
+    }
+    let mut keyed: Vec<(ReqId, Key)> = candidates
+        .iter()
+        .map(|id| {
+            let st = &states[id];
+            let age = now_us - st.enqueued_at_us;
+            let cont =
+                st.req.flow.as_ref().map(|f| f.is_continuation()).unwrap_or(false);
+            let cp = if critical_path {
+                st.req.flow.as_ref().map(|f| f.crit_path_len()).unwrap_or(1)
             } else {
                 1 // FIFO/ETC baseline: critical path never discriminates
-            }
-        };
-        match (starved_a, starved_b) {
-            (true, false) => std::cmp::Ordering::Less,
-            (false, true) => std::cmp::Ordering::Greater,
-            (true, true) => age_b.total_cmp(&age_a), // older first
-            (false, false) => cont(sb)
-                .cmp(&cont(sa)) // flow continuations first
-                .then(cp(sb).cmp(&cp(sa))) // longest remaining chain first
-                .then(etc(a).total_cmp(&etc(b)))
-                .then(a.cmp(b)),
-        }
+            };
+            let key = Key {
+                starved: age > starvation_age_us,
+                age,
+                cont,
+                cp,
+                etc: prefill_etc_us(st, ann, npu),
+            };
+            (*id, key)
+        })
+        .collect();
+    keyed.sort_by(|(ia, a), (ib, b)| match (a.starved, b.starved) {
+        (true, false) => std::cmp::Ordering::Less,
+        (false, true) => std::cmp::Ordering::Greater,
+        (true, true) => b.age.total_cmp(&a.age), // older first
+        (false, false) => b
+            .cont
+            .cmp(&a.cont) // flow continuations first
+            .then(b.cp.cmp(&a.cp)) // longest remaining chain first
+            .then(a.etc.total_cmp(&b.etc))
+            .then(ia.cmp(ib)),
     });
+    candidates.clear();
+    candidates.extend(keyed.into_iter().map(|(id, _)| id));
 }
 
 /// Decode batch formation (§6.3 intra-XPU backfill / adaptive batching):

@@ -24,7 +24,10 @@ fn synth_token(pos: usize, vocab: usize) -> i32 {
     ((pos.wrapping_mul(1_103_515_245).wrapping_add(12_345)) % vocab.max(1)) as i32
 }
 
-/// Executes kernel effects for one model.
+/// Executes kernel effects for one model.  Cloning is cheap (the real
+/// executor is shared behind an `Arc`) — `PolicyEngine` clones its
+/// bridge into each fresh run's `Driver`.
+#[derive(Clone)]
 pub struct ExecBridge {
     exec: Option<Arc<ModelExecutor>>,
     pub geo: ModelGeometry,

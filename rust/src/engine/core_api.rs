@@ -146,6 +146,14 @@ pub trait EngineCore {
     /// never completed (a policy bug, surfaced loudly).
     fn finish(&mut self) -> Result<RunReport>;
 
+    /// Kernel-level trace of the last *finished* run (Gantt figures,
+    /// serialization checks).  `PolicyEngine` retains one for every
+    /// policy — baselines included; engines that don't record traces
+    /// may return `None`.
+    fn last_trace(&self) -> Option<&crate::trace::Trace> {
+        None
+    }
+
     /// Step until idle, collecting every event.
     fn drain(&mut self) -> Result<Vec<EngineEvent>> {
         let mut out = vec![];

@@ -11,14 +11,21 @@
 //!   trait every engine implements; the batch `run(trace)` entry point
 //!   the figure harnesses use is a provided method over it.  `Engine`
 //!   is the same trait under its historical name.
+//! - [`SchedPolicy`] / [`PolicyEngine`] — the pluggable-policy split
+//!   (DESIGN.md §7): one generic engine owns the whole lifecycle, and
+//!   each comparison point is just a policy's per-step decision.  The
+//!   [`registry`] maps policy names to built engines.
 
 mod bridge;
 mod core_api;
 mod driver;
+mod policy;
+pub mod registry;
 mod reqstate;
 
 pub use bridge::ExecBridge;
 pub use core_api::EngineCore as Engine;
 pub use core_api::{EngineClock, EngineCore, EngineEvent};
 pub use driver::{Driver, KernelTag};
+pub use policy::{Action, PolicyCtx, PolicyEngine, ResumeCtx, SchedPolicy, States};
 pub use reqstate::{Phase, ReqState};

@@ -1,0 +1,417 @@
+//! One engine, pluggable policies (DESIGN.md §7).
+//!
+//! Every comparison point in this repo — Agent.xpu itself, the
+//! llama.cpp-like CPU baseline, the single-XPU schemes (a)/(b)/(c),
+//! and any future scheduler — differs *only* in its per-step
+//! scheduling decision.  This module owns everything else:
+//!
+//! - [`SchedPolicy`] — the scheduling decision surface.  A policy is
+//!   built from `(ModelGeometry, SocConfig, SchedulerConfig)`, makes
+//!   one [`SchedPolicy::decide`] pass per engine step over a
+//!   read-mostly view of the [`Driver`] ([`PolicyCtx`]), and may
+//!   override narrower hooks — admission ordering, proactive resume
+//!   ordering, decode-batch formation, eviction preference — whose
+//!   defaults are the shared `coordinator::select` / `memory` helpers.
+//! - [`PolicyEngine<P>`] — the one generic engine.  It owns the
+//!   [`Driver`], the whole [`EngineCore`] lifecycle
+//!   (`start`/`submit`/`step`/`cancel`/`finish`), session-reuse
+//!   opt-in, kernel-trace retention, and event emission.  No policy
+//!   reimplements any of that.
+//!
+//! The registry (`engine::registry`) maps policy names to boxed
+//! `PolicyEngine`s so harnesses, servers, and tests select engines by
+//! string instead of hardcoded constructor lists.
+//!
+//! ### Decision protocol
+//!
+//! `decide` receives a [`PolicyCtx`] and returns the [`Action`]s it
+//! took.  Mutations go through the ctx's sanctioned surface
+//! ([`PolicyCtx::launch`], [`PolicyCtx::abort`], the eviction and
+//! preemption-accounting helpers) and are applied *at call time*, so
+//! later decisions within the same pass observe earlier ones (e.g. a
+//! colocated prefill launch makes the iGPU busy for the decode
+//! branch).  The returned `Vec<Action>` is the decision record —
+//! [`PolicyCtx::take_actions`] at the end of `decide` yields it.
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use crate::config::{ModelGeometry, SocConfig};
+use crate::coordinator::MemoryGovernor;
+use crate::heg::Annotator;
+use crate::metrics::RunReport;
+use crate::soc::{KernelTiming, SocSim};
+use crate::trace::Trace;
+use crate::workload::{FlowId, ReqId, Request};
+
+use super::bridge::ExecBridge;
+use super::core_api::{EngineClock, EngineCore, EngineEvent};
+use super::driver::{Driver, KernelTag};
+use super::reqstate::{Phase, ReqState};
+
+/// The per-request state table every selection helper reads.
+pub type States = HashMap<ReqId, ReqState>;
+
+/// One scheduling decision taken during a [`SchedPolicy::decide`] pass.
+/// The list a pass returns is its decision record; effects were already
+/// applied through the [`PolicyCtx`] when each action was taken.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Action {
+    /// A kernel was launched on `xpu`.
+    Launch { xpu: usize, reactive: bool, tag: KernelTag },
+    /// The in-flight kernel on `xpu` was aborted (scheme-(a) style
+    /// instant preemption).
+    Abort { xpu: usize },
+}
+
+/// Read-mostly view of the open [`Driver`] handed to
+/// [`SchedPolicy::decide`]: state table, XPU busy/idle, clock, governor
+/// bookkeeping — plus the sanctioned mutation surface (launch/abort,
+/// session/prefill eviction, preemption accounting).  Every mutation is
+/// applied immediately and the kernel-level ones are recorded as
+/// [`Action`]s.
+pub struct PolicyCtx<'a> {
+    d: &'a mut Driver,
+    actions: Vec<Action>,
+}
+
+impl<'a> PolicyCtx<'a> {
+    pub fn new(d: &'a mut Driver) -> Self {
+        Self { d, actions: vec![] }
+    }
+
+    // -- read view ------------------------------------------------------
+
+    /// Every live serving state.
+    pub fn states(&self) -> &States {
+        &self.d.states
+    }
+
+    /// One request's serving state (panics on unknown ids — policies
+    /// only hold ids they just read from the state table).
+    pub fn state(&self, id: ReqId) -> &ReqState {
+        &self.d.states[&id]
+    }
+
+    /// The virtual SoC (busy/idle, pressure — for `dispatch_check`).
+    pub fn sim(&self) -> &SocSim {
+        &self.d.sim
+    }
+
+    /// Is a kernel in flight on `xpu`?
+    pub fn busy(&self, xpu: usize) -> bool {
+        self.d.sim.busy(xpu)
+    }
+
+    /// Is every XPU idle?
+    pub fn all_idle(&self) -> bool {
+        self.d.sim.all_idle()
+    }
+
+    /// Current time in the run's clock domain (virtual or wall µs).
+    pub fn now(&self) -> f64 {
+        self.d.now()
+    }
+
+    /// Waiting proactive prefills, in id order (the driver's
+    /// incrementally maintained index).
+    pub fn waiting_proactive_prefills(&self) -> Vec<ReqId> {
+        self.d.waiting_proactive_prefills()
+    }
+
+    /// Idle retained session caches (memory-governor accounting).
+    pub fn retained_sessions(&self) -> usize {
+        self.d.retained_sessions()
+    }
+
+    // -- sanctioned mutations -------------------------------------------
+
+    /// Launch a kernel; recorded as [`Action::Launch`].
+    pub fn launch(&mut self, xpu: usize, timing: KernelTiming, reactive: bool, tag: KernelTag) {
+        self.actions.push(Action::Launch { xpu, reactive, tag: tag.clone() });
+        self.d.launch(xpu, timing, reactive, tag);
+    }
+
+    /// Abort the kernel in flight on `xpu` (scheme-(a) instant
+    /// preemption); recorded as [`Action::Abort`].  Returns the aborted
+    /// tag (`None` when the slot held a driver-managed tool kernel —
+    /// re-queued, not lost).
+    pub fn abort(&mut self, xpu: usize) -> Option<KernelTag> {
+        let tag = self.d.cancel(xpu);
+        if tag.is_some() {
+            self.actions.push(Action::Abort { xpu });
+        }
+        tag
+    }
+
+    /// Preemption accounting: bump the run counter and stream the
+    /// event (the policy decides *who* was preempted and why).
+    pub fn note_preemption(&mut self, id: ReqId) {
+        self.d.note_preemption(id);
+    }
+
+    /// Backfill accounting (`RunReport::backfills`).
+    pub fn note_backfill(&mut self) {
+        self.d.backfills += 1;
+    }
+
+    /// §6.2 preemption accounting for one waiting victim: bump its
+    /// per-request counters, restart its aging clock, and stream the
+    /// event.
+    pub fn mark_preempted(&mut self, id: ReqId) {
+        let now = self.d.now();
+        let vs = self.d.states.get_mut(&id).expect("mark_preempted: unknown req");
+        vs.preempted += 1;
+        vs.preempt_counted = true;
+        vs.enqueued_at_us = now;
+        self.d.note_preemption(id);
+    }
+
+    /// Drop the least-recently-used idle retained session (memory
+    /// shedding, cheapest residency first).  Returns the evicted flow.
+    pub fn evict_lru_session(&mut self) -> Option<FlowId> {
+        let fid = self.d.sessions.as_mut().and_then(|p| p.evict_lru())?;
+        self.d.note_session_eviction(fid);
+        Some(fid)
+    }
+
+    /// Memory-governor graceful degradation: wipe a waiting prefill's
+    /// KV and progress (it recomputes from scratch) and surface the
+    /// eviction in the report.
+    pub fn evict_prefill(&mut self, victim: ReqId, geo: &ModelGeometry) {
+        let now = self.d.now();
+        let vs = self.d.states.get_mut(&victim).expect("evict_prefill: unknown req");
+        vs.restart_prefill(geo);
+        vs.enqueued_at_us = now;
+        self.d.note_kv_eviction(victim);
+    }
+
+    /// Scheme-(a) context wipe: an aborted mid-prefill victim loses all
+    /// prefill progress (no governor eviction — this is the *policy*
+    /// discarding context, not memory pressure).
+    pub fn restart_prefill(&mut self, id: ReqId, geo: &ModelGeometry) {
+        if let Some(st) = self.d.states.get_mut(&id) {
+            if st.phase == Phase::Prefilling {
+                st.restart_prefill(geo);
+            }
+        }
+    }
+
+    /// Close the pass, yielding the decision record.
+    pub fn take_actions(self) -> Vec<Action> {
+        self.actions
+    }
+}
+
+/// Arguments to the [`SchedPolicy::resume_order`] hook: everything the
+/// §6.2 resumption strategy (and any replacement) needs to rank paused
+/// proactive prefills.
+pub struct ResumeCtx<'a> {
+    pub states: &'a States,
+    pub ann: &'a Annotator,
+    /// The XPU the resumed kernel would run on (ETC is computed there).
+    pub xpu: usize,
+    pub now_us: f64,
+    pub starvation_age_us: f64,
+    pub critical_path: bool,
+}
+
+/// The scheduling decision surface.  A policy is constructed from
+/// `(ModelGeometry, SocConfig, SchedulerConfig)` by its own `new` (the
+/// registry does this), owns whatever per-run state it needs (cursors,
+/// annotators, governors), and plugs into [`PolicyEngine`] which owns
+/// everything else.
+///
+/// Policy-author guide (see DESIGN.md §7): implement `label`,
+/// `max_chunk`, and `decide`; override `session_capacity` to opt into
+/// cross-turn KV retention; reset per-run state in `on_start`.  The
+/// narrower hooks below default to the shared §6 helpers — a policy
+/// that only wants a different *ordering* (like `deadline`) overrides
+/// one hook and reuses the whole `XpuCoordinator` pipeline for its
+/// `decide`.
+pub trait SchedPolicy: Send {
+    /// Engine name as it appears in `RunReport::engine`.
+    fn label(&self) -> String;
+
+    /// Chunk-size cap handed to `Driver::admit_ready` (elastic chunk
+    /// planning; baselines use the geometry's largest variant).
+    fn max_chunk(&self) -> usize;
+
+    /// Max idle flow sessions whose KV stays resident between turns.
+    /// 0 (the default) disables cross-turn reuse — every turn
+    /// recomputes its full conversation prefix, which is exactly what
+    /// the baselines model.
+    fn session_capacity(&self) -> usize {
+        0
+    }
+
+    /// Reset per-run policy state (round-robin cursors, …).  Called by
+    /// `PolicyEngine::start` before the first step of a fresh run.
+    fn on_start(&mut self) {}
+
+    /// One scheduling pass at the current decision point: inspect the
+    /// ctx, launch/abort kernels through it, return the decision
+    /// record (`ctx.take_actions()`).
+    fn decide(&mut self, ctx: PolicyCtx<'_>) -> Vec<Action>;
+
+    // -- narrower hooks (defaults = the shared §6 helpers) --------------
+
+    /// Order same-class prefill candidates for admission to a pipeline
+    /// (first element launches).  Default: FCFS by arrival time, id
+    /// tiebreak.
+    fn admission_order(&self, states: &States, cands: &mut Vec<ReqId>) {
+        cands.sort_by(|a, b| {
+            states[a]
+                .req
+                .arrival_us
+                .total_cmp(&states[b].req.arrival_us)
+                .then(a.cmp(b))
+        });
+    }
+
+    /// Order paused proactive prefills for resumption.  Default: the
+    /// §6.2 strategy (starvation age → flow continuation →
+    /// critical path → ETC) from `coordinator::select`.
+    fn resume_order(&self, r: ResumeCtx<'_>, cands: &mut Vec<ReqId>) {
+        crate::coordinator::resume_order(
+            r.states,
+            cands,
+            r.ann,
+            r.xpu,
+            r.now_us,
+            r.starvation_age_us,
+            r.critical_path,
+        );
+    }
+
+    /// Form the next decode batch.  Default: §6.3 adaptive batching
+    /// (reactive lanes lead by wait time; proactive lanes backfill at
+    /// the boundary when allowed) from `coordinator::select`.
+    /// `now_us` is provided for deadline/slack-aware variants.
+    fn decode_batch(
+        &self,
+        states: &States,
+        b_max: usize,
+        allow_join: bool,
+        _now_us: f64,
+    ) -> (Vec<ReqId>, bool) {
+        crate::coordinator::decode_lanes(states, b_max, allow_join)
+    }
+
+    /// Under memory pressure, which waiting prefill loses its KV?
+    /// Default: the governor's least-progressed waiting proactive
+    /// prefill (§6.5 graceful degradation).
+    fn eviction_victim(&self, gov: &MemoryGovernor, states: &States) -> Option<ReqId> {
+        gov.eviction_victim(states)
+    }
+}
+
+/// The one generic engine: a [`Driver`] + the full [`EngineCore`]
+/// lifecycle around any [`SchedPolicy`].  All five pre-policy engine
+/// families (and every future policy) are `PolicyEngine<P>` instances —
+/// there is exactly one copy of the submit/step/cancel/drain/finish
+/// plumbing, and every policy (baselines included) gets identical
+/// kernel-trace retention for Gantt figures.
+pub struct PolicyEngine<P: SchedPolicy> {
+    policy: P,
+    soc: SocConfig,
+    bridge: ExecBridge,
+    /// Kernel trace of the last finished run (Fig. 4 Gantt, invariant
+    /// checks) — retained here for *every* policy.
+    last_trace: Option<Trace>,
+    /// The open run, if `start` has been called.
+    active: Option<Driver>,
+    /// The last `step` made no progress (run idle).
+    stalled: bool,
+}
+
+impl<P: SchedPolicy> PolicyEngine<P> {
+    /// Wrap a policy around a numerics bridge (synthetic for DES
+    /// sweeps, real for PJRT serving — any policy accepts either).
+    /// Named `with_policy` so per-policy aliases keep their historical
+    /// inherent constructors (`CpuFcfsEngine::new`, …).
+    pub fn with_policy(policy: P, soc: SocConfig, bridge: ExecBridge) -> Self {
+        Self { policy, soc, bridge, last_trace: None, active: None, stalled: false }
+    }
+
+    /// The wrapped policy (tests, introspection).
+    pub fn policy(&self) -> &P {
+        &self.policy
+    }
+}
+
+impl<P: SchedPolicy> EngineCore for PolicyEngine<P> {
+    fn name(&self) -> String {
+        self.policy.label()
+    }
+
+    fn start(&mut self, clock: EngineClock) -> Result<()> {
+        let mut d = Driver::open(&self.soc, self.bridge.clone(), clock);
+        // Flow-level session retention (DESIGN.md §3): continuation
+        // turns prefill only their delta tokens.  Policies that leave
+        // `session_capacity` at 0 run full-prefix recompute — the
+        // baselines — so the figures quantify the reuse win.
+        let cap = self.policy.session_capacity();
+        if cap > 0 {
+            d.enable_session_reuse(cap);
+        }
+        self.policy.on_start();
+        self.active = Some(d);
+        self.stalled = false;
+        Ok(())
+    }
+
+    fn submit(&mut self, req: Request) -> Result<()> {
+        self.active
+            .as_mut()
+            .with_context(|| format!("{}: submit before start", self.policy.label()))?
+            .submit(req);
+        self.stalled = false;
+        Ok(())
+    }
+
+    fn cancel(&mut self, id: ReqId) -> Result<bool> {
+        let hit = self
+            .active
+            .as_mut()
+            .with_context(|| format!("{}: cancel before start", self.policy.label()))?
+            .cancel_request(id);
+        if hit {
+            // wake a stalled run so the Cancelled event flushes
+            self.stalled = false;
+        }
+        Ok(hit)
+    }
+
+    fn step(&mut self) -> Result<Vec<EngineEvent>> {
+        let mut d = self
+            .active
+            .take()
+            .with_context(|| format!("{}: step before start", self.policy.label()))?;
+        d.admit_ready(self.policy.max_chunk());
+        let _decisions = self.policy.decide(PolicyCtx::new(&mut d));
+        let progressed = d.step()?;
+        self.stalled = !progressed;
+        let events = d.take_events();
+        self.active = Some(d);
+        Ok(events)
+    }
+
+    fn has_work(&self) -> bool {
+        self.active.is_some() && !self.stalled
+    }
+
+    fn finish(&mut self) -> Result<RunReport> {
+        let d = self
+            .active
+            .take()
+            .with_context(|| format!("{}: finish before start", self.policy.label()))?;
+        self.last_trace = Some(d.trace.clone());
+        d.finish(self.name())
+    }
+
+    fn last_trace(&self) -> Option<&Trace> {
+        self.last_trace.as_ref()
+    }
+}

@@ -1,0 +1,169 @@
+//! Named policy registry: every scheduling policy in the tree is
+//! registered under a stable string key, so figure harnesses, the
+//! `agent-xpu` CLI (`run --engine`, `serve --policy`), and the
+//! property-test suites select engines by name instead of hardcoded
+//! constructor lists — a new policy registered here is automatically
+//! covered by the §6 invariant suite and `fig schemes`.
+//!
+//! Canonical names (aliases in parentheses):
+//!
+//! | name | policy |
+//! |---|---|
+//! | `agent-xpu` (`agent.xpu`) | the paper's XPU coordinator (§6) |
+//! | `cpu-fcfs` (`llamacpp`, `llama.cpp`) | llama.cpp-like CPU baseline |
+//! | `scheme-a` (`preempt-restart`) | Fig. 4(a) instant preemption |
+//! | `scheme-b` (`time-share`) | Fig. 4(b) kernel time-sharing |
+//! | `scheme-c` (`continuous-batching`) | Fig. 4(c) continuous batching |
+//! | `deadline` (`edf`) | slack-aware EDF over per-class deadlines |
+
+use std::sync::Arc;
+
+use anyhow::{Result, bail};
+
+use crate::baselines::{CpuFcfsPolicy, Scheme, SingleXpuPolicy};
+use crate::config::{ModelGeometry, SchedulerConfig, SocConfig};
+use crate::coordinator::{AgentXpuPolicy, DeadlinePolicy};
+use crate::runtime::ModelExecutor;
+
+use super::bridge::ExecBridge;
+use super::core_api::EngineCore;
+use super::policy::PolicyEngine;
+
+/// The llama.cpp-like baseline's fixed concurrency bound (the value
+/// every figure harness has always used).
+pub const CPU_FCFS_CONCURRENCY: usize = 4;
+
+/// Canonical names of every registered policy, in comparison order
+/// (Agent.xpu first, then the paper's baselines, then extensions).
+pub fn names() -> &'static [&'static str] {
+    &["agent-xpu", "cpu-fcfs", "scheme-a", "scheme-b", "scheme-c", "deadline"]
+}
+
+/// Resolve a user-facing name or alias to its canonical key.
+pub fn canonical(name: &str) -> Result<&'static str> {
+    Ok(match name {
+        "agent-xpu" | "agent.xpu" | "agentxpu" => "agent-xpu",
+        "cpu-fcfs" | "llamacpp" | "llama.cpp" | "llama.cpp-like" => "cpu-fcfs",
+        "scheme-a" | "preempt-restart" => "scheme-a",
+        "scheme-b" | "time-share" => "scheme-b",
+        "scheme-c" | "continuous-batching" => "scheme-c",
+        "deadline" | "edf" => "deadline",
+        other => bail!(
+            "unknown policy {other:?} (registered: {})",
+            names().join(", ")
+        ),
+    })
+}
+
+/// Build a timing-only (synthetic-bridge) engine by policy name.
+pub fn build(
+    name: &str,
+    geo: ModelGeometry,
+    soc: SocConfig,
+    sched: SchedulerConfig,
+) -> Result<Box<dyn EngineCore + Send>> {
+    let bridge = ExecBridge::synthetic(geo.clone());
+    build_with_bridge(name, geo, soc, sched, bridge)
+}
+
+/// Build a real-compute engine by policy name: kernels execute through
+/// the loaded PJRT artifacts.  Every policy accepts the real bridge —
+/// the numerics are policy-independent.
+pub fn build_real(
+    name: &str,
+    exec: Arc<ModelExecutor>,
+    soc: SocConfig,
+    sched: SchedulerConfig,
+) -> Result<Box<dyn EngineCore + Send>> {
+    let geo = exec.geo().clone();
+    let bridge = ExecBridge::real(exec);
+    build_with_bridge(name, geo, soc, sched, bridge)
+}
+
+fn build_with_bridge(
+    name: &str,
+    geo: ModelGeometry,
+    soc: SocConfig,
+    sched: SchedulerConfig,
+    bridge: ExecBridge,
+) -> Result<Box<dyn EngineCore + Send>> {
+    Ok(match canonical(name)? {
+        "agent-xpu" => Box::new(PolicyEngine::with_policy(
+            AgentXpuPolicy::new(geo, &soc, sched),
+            soc,
+            bridge,
+        )),
+        "cpu-fcfs" => Box::new(PolicyEngine::with_policy(
+            CpuFcfsPolicy::new(geo, &soc, CPU_FCFS_CONCURRENCY),
+            soc,
+            bridge,
+        )),
+        "scheme-a" => Box::new(PolicyEngine::with_policy(
+            SingleXpuPolicy::new(geo, &soc, Scheme::PreemptRestart),
+            soc,
+            bridge,
+        )),
+        "scheme-b" => Box::new(PolicyEngine::with_policy(
+            SingleXpuPolicy::new(geo, &soc, Scheme::TimeShare),
+            soc,
+            bridge,
+        )),
+        "scheme-c" => Box::new(PolicyEngine::with_policy(
+            SingleXpuPolicy::new(geo, &soc, Scheme::ContinuousBatching),
+            soc,
+            bridge,
+        )),
+        "deadline" => Box::new(PolicyEngine::with_policy(
+            DeadlinePolicy::new(geo, &soc, sched),
+            soc,
+            bridge,
+        )),
+        _ => unreachable!("canonical() covers every registered name"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{default_soc, llama32_3b};
+    use crate::workload::{Priority, Request};
+
+    #[test]
+    fn every_registered_name_builds_and_runs() {
+        let mut geo = llama32_3b();
+        geo.n_layers = 2;
+        for name in names() {
+            let mut e = build(
+                name,
+                geo.clone(),
+                default_soc(),
+                SchedulerConfig::default(),
+            )
+            .unwrap();
+            let rep = e
+                .run(vec![Request {
+                    id: 1,
+                    priority: Priority::Reactive,
+                    arrival_us: 0.0,
+                    prompt: vec![1; 64],
+                    max_new_tokens: 2,
+                    profile: "reg".into(),
+                    flow: None,
+                }])
+                .unwrap();
+            assert_eq!(rep.reqs.iter().filter(|m| m.finished()).count(), 1, "{name}");
+            assert!(
+                e.last_trace().is_some(),
+                "{name}: every policy retains its kernel trace"
+            );
+        }
+    }
+
+    #[test]
+    fn aliases_resolve_and_unknown_names_fail() {
+        assert_eq!(canonical("agent.xpu").unwrap(), "agent-xpu");
+        assert_eq!(canonical("llamacpp").unwrap(), "cpu-fcfs");
+        assert_eq!(canonical("edf").unwrap(), "deadline");
+        assert!(canonical("no-such-policy").is_err());
+    }
+}

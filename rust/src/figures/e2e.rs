@@ -5,10 +5,10 @@
 
 use anyhow::Result;
 
-use crate::baselines::{CpuFcfsEngine, Scheme, SingleXpuEngine};
+use crate::baselines::CpuFcfsEngine;
 use crate::config::{ModelGeometry, SchedulerConfig, SocConfig, llama32_3b};
 use crate::coordinator::AgentXpuEngine;
-use crate::engine::Engine;
+use crate::engine::{EngineCore, registry};
 use crate::metrics::RunReport;
 use crate::util::bench::Table;
 use crate::util::json::Json;
@@ -72,9 +72,13 @@ fn report_row(rep: &RunReport) -> (f64, f64, f64, f64) {
     )
 }
 
-/// Fig. 4: one long proactive task + one reactive arrival under the
-/// four co-scheduling schemes.  Prints reactive latency, proactive
-/// completion, makespan, and an ASCII Gantt per scheme.
+/// Fig. 4: one long proactive task + one reactive arrival under
+/// *every registered policy* (the paper's four co-scheduling schemes
+/// plus whatever else the registry knows — `cpu-fcfs`, `deadline`, and
+/// any future entry run automatically).  Prints reactive latency,
+/// proactive completion, makespan, and an ASCII Gantt per policy.
+/// `fig schemes --smoke` in CI exercises this as the end-to-end check
+/// that every registry policy still builds, runs, and traces.
 pub fn fig_schemes(soc: &SocConfig) -> Result<Json> {
     let geo = geo_for_sweeps();
     let trace = || {
@@ -135,16 +139,16 @@ pub fn fig_schemes(soc: &SocConfig) -> Result<Json> {
         Ok(())
     };
 
-    for scheme in [Scheme::PreemptRestart, Scheme::TimeShare, Scheme::ContinuousBatching] {
-        let mut e = SingleXpuEngine::new(geo.clone(), soc.clone(), scheme);
+    // Every registered policy runs the same two-request scenario —
+    // the registry is the single list of comparison points.
+    for name in registry::names() {
+        let mut e =
+            registry::build(name, geo.clone(), soc.clone(), SchedulerConfig::default())?;
         let rep = e.run(trace())?;
-        let g = e.last_trace.as_ref().map(|t| t.gantt(&xpu_names, 72));
-        run_one(scheme.label(), rep, g)?;
+        let g = e.last_trace().map(|t| t.gantt(&xpu_names, 72));
+        let label = rep.engine.clone();
+        run_one(&label, rep, g)?;
     }
-    let mut d = AgentXpuEngine::synthetic(geo, soc.clone(), SchedulerConfig::default());
-    let rep = d.run(trace())?;
-    let g = d.last_trace.as_ref().map(|t| t.gantt(&xpu_names, 72));
-    run_one("scheme-d/agent.xpu", rep, g)?;
 
     println!("\n== fig-schemes: proactive-reactive co-scheduling (Fig. 4) ==");
     table.print();
@@ -352,19 +356,10 @@ pub fn fig_flows(soc: &SocConfig, duration_s: f64, seed: u64) -> Result<Json> {
         "engine", "flows", "flow e2e (ms)", "turn TTFT (ms)",
         "hit-rate", "reused tok", "recomputed tok",
     ]);
-    let mut engines: Vec<Box<dyn Engine>> = vec![
-        Box::new(AgentXpuEngine::synthetic(
-            geo.clone(),
-            soc.clone(),
-            SchedulerConfig::default(),
-        )),
-        Box::new(SingleXpuEngine::new(
-            geo.clone(),
-            soc.clone(),
-            Scheme::ContinuousBatching,
-        )),
-        Box::new(CpuFcfsEngine::new(geo.clone(), soc.clone(), 4)),
-    ];
+    let mut engines: Vec<Box<dyn EngineCore + Send>> = ["agent-xpu", "scheme-c", "cpu-fcfs"]
+        .iter()
+        .map(|n| registry::build(n, geo.clone(), soc.clone(), SchedulerConfig::default()))
+        .collect::<Result<_>>()?;
     for e in engines.iter_mut() {
         let rep = e.run(trace.clone())?;
         let flows = rep.flows();

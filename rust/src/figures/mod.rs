@@ -14,4 +14,6 @@ pub use e2e::{
     mixed_trace,
 };
 pub use micro::{fig_affinity, fig_batching, fig_contention};
-pub use workflows::{dag_fanout_trace, dag_trace_mixed, fig_workflows};
+pub use workflows::{
+    dag_fanout_trace, dag_trace_mixed, edf_contention_trace, fig_workflows,
+};

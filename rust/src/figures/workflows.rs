@@ -16,14 +16,20 @@
 //!    same engine in plain FIFO/ETC turn order.  Critical-path ordering
 //!    keeps the deep chain's serial tail off the end of the schedule,
 //!    so the overall DAG makespan strictly improves.
+//! 3. **Deadline ablation** — the registry's `deadline` policy
+//!    (slack-aware EDF, the first policy written against the
+//!    `SchedPolicy` API) against plain FIFO/ETC reactive handling on a
+//!    decode-contention workload: long proactive generations sharing
+//!    the iGPU decode pipeline with a stream of reactive chats.  EDF's
+//!    slack-gated batch formation keeps reactive decode batches lean
+//!    once a deadline approaches, so reactive p99 latency drops.
 
 use anyhow::Result;
 
-use crate::baselines::{CpuFcfsEngine, Scheme, SingleXpuEngine};
 use crate::config::{ModelGeometry, SchedulerConfig, SocConfig, llama32_3b};
-use crate::coordinator::AgentXpuEngine;
-use crate::engine::Engine;
-use crate::metrics::RunReport;
+use crate::coordinator::{AgentXpuEngine, DeadlineEngine};
+use crate::engine::{EngineCore, registry};
+use crate::metrics::{RunReport, percentile};
 use crate::util::bench::Table;
 use crate::util::json::Json;
 use crate::workload::{
@@ -172,6 +178,38 @@ fn wide_flow(flow_id: u64, first_id: u64, arrival_us: f64, fanout: usize) -> Flo
     f
 }
 
+/// Decode-contention scenario for the `deadline` ablation: six long
+/// proactive generations occupy the iGPU decode pipeline from t=0
+/// while reactive chats arrive every 250 ms.  Under plain FIFO/ETC
+/// handling every reactive decode iteration carries the proactive
+/// lanes (bigger batch, larger average context → slower iterations for
+/// the whole reactive tail); EDF's slack gate cuts the joins once a
+/// reactive deadline approaches, so the reactive p99 improves.
+pub fn edf_contention_trace() -> Vec<Request> {
+    let mk = |id: u64, priority, arrival_us: f64, plen: usize, out: usize| Request {
+        id,
+        priority,
+        arrival_us,
+        prompt: vec![1; plen],
+        max_new_tokens: out,
+        profile: if priority == Priority::Reactive { "chat" } else { "digest" }.into(),
+        flow: None,
+    };
+    let mut t: Vec<Request> = (0..6)
+        .map(|i| mk(i, Priority::Proactive, 0.0, 256, 160))
+        .collect();
+    for i in 0..16u64 {
+        t.push(mk(
+            100 + i,
+            Priority::Reactive,
+            100_000.0 + i as f64 * 250_000.0,
+            160,
+            40,
+        ));
+    }
+    t
+}
+
 /// The fan-out scenario: one 10-round deep chain at t=0 contending with
 /// wide map-reduce flows arriving throughout its lifetime.  FIFO/ETC
 /// turn order runs the short branch prefills first every round and
@@ -217,20 +255,15 @@ pub fn fig_workflows(soc: &SocConfig, duration_s: f64, seed: u64) -> Result<Json
         "engine", "flows", "tools", "DAG makespan (ms)", "crit-path (ms)",
         "cp-efficiency", "hit-rate", "recomputed tok",
     ]);
-    let mut engines: Vec<Box<dyn Engine>> = vec![
-        Box::new(AgentXpuEngine::synthetic(
-            geo.clone(),
-            soc.clone(),
-            SchedulerConfig::default(),
-        )),
-        Box::new(SingleXpuEngine::new(geo.clone(), soc.clone(), Scheme::PreemptRestart)),
-        Box::new(SingleXpuEngine::new(
-            geo.clone(),
-            soc.clone(),
-            Scheme::ContinuousBatching,
-        )),
-        Box::new(CpuFcfsEngine::new(geo.clone(), soc.clone(), 4)),
-    ];
+    // Engine families by registry name — the `deadline` policy ablates
+    // alongside the pre-existing four automatically.
+    let mut engines: Vec<Box<dyn EngineCore + Send>> =
+        ["agent-xpu", "scheme-a", "scheme-c", "cpu-fcfs", "deadline"]
+            .iter()
+            .map(|n| {
+                registry::build(n, geo.clone(), soc.clone(), SchedulerConfig::default())
+            })
+            .collect::<Result<_>>()?;
     for e in engines.iter_mut() {
         let rep = e.run(trace.clone())?;
         let (nflows, unfinished, tools, mk, cp, hit, recomputed) = row_from(&rep);
@@ -291,10 +324,50 @@ pub fn fig_workflows(soc: &SocConfig, duration_s: f64, seed: u64) -> Result<Json
         .set("fifo_makespan_ms", rep_fifo.makespan_us / 1e3)
         .set("cp_mean_flow_e2e_ms", num_or_null(rep_cp.mean_flow_e2e_ms()))
         .set("fifo_mean_flow_e2e_ms", num_or_null(rep_fifo.mean_flow_e2e_ms()));
+
+    // Deadline ablation: slack-aware EDF vs the default agent-xpu
+    // ordering (FCFS admission + ETC-ranked resumption + always-join
+    // batching — the "plain FIFO/ETC" axis; the trace has no flows, so
+    // critical-path priority is inert and the default config is the
+    // honest baseline) on the decode-contention scenario.
+    let contention = edf_contention_trace();
+    let mut edf = DeadlineEngine::synthetic(
+        geo_for_sweeps(),
+        soc.clone(),
+        SchedulerConfig::default(),
+    );
+    let rep_edf = edf.run(contention.clone())?;
+    let mut fifo = AgentXpuEngine::synthetic(
+        geo_for_sweeps(),
+        soc.clone(),
+        SchedulerConfig::default(),
+    );
+    let rep_plain = fifo.run(contention)?;
+    let p99 = |rep: &RunReport| {
+        let mut e2e: Vec<f64> = rep
+            .reqs
+            .iter()
+            .filter(|m| m.priority == Priority::Reactive)
+            .filter_map(|m| m.e2e_us())
+            .collect();
+        e2e.sort_by(|a, b| a.total_cmp(b));
+        percentile(&e2e, 0.99) / 1e3
+    };
+    let (edf_p99, plain_p99) = (p99(&rep_edf), p99(&rep_plain));
+    println!(
+        "\ndeadline ablation (6 long proactive decodes + reactive stream):\n\
+         deadline (EDF):          reactive p99 e2e {edf_p99:.1} ms\n\
+         agent-xpu fifo/etc:      reactive p99 e2e {plain_p99:.1} ms",
+    );
+    let deadline_json = Json::obj()
+        .set("edf_reactive_p99_ms", num_or_null(edf_p99))
+        .set("fifo_reactive_p99_ms", num_or_null(plain_p99));
+
     Ok(Json::obj()
         .set("figure", "workflows")
         .set("rows", Json::Arr(rows))
-        .set("fanout", fanout_json))
+        .set("fanout", fanout_json)
+        .set("deadline", deadline_json))
 }
 
 #[cfg(test)]
@@ -326,7 +399,13 @@ mod tests {
     fn fig_workflows_completes_everywhere_and_cp_beats_fifo() {
         let j = fig_workflows(&default_soc(), 90.0, 7).unwrap();
         let rows = j.get("rows").unwrap().as_arr().unwrap();
-        assert!(rows.len() >= 4, "all engine families ran");
+        assert!(rows.len() >= 5, "all engine families (incl. deadline) ran");
+        assert!(
+            rows.iter().any(|r| {
+                r.get("engine").unwrap().as_str().unwrap() == "deadline"
+            }),
+            "the registry's deadline policy is ablated alongside the rest"
+        );
         for r in rows {
             // acceptance: every engine family drains the DAG workload
             assert_eq!(
@@ -349,6 +428,15 @@ mod tests {
         assert!(
             cp < fifo,
             "critical-path order must strictly beat FIFO: {cp} vs {fifo}"
+        );
+        // acceptance: the deadline policy's slack-aware EDF beats plain
+        // FIFO/ETC reactive p99 latency on the contention scenario
+        let d = j.get("deadline").unwrap();
+        let edf = d.get("edf_reactive_p99_ms").unwrap().as_f64().unwrap();
+        let plain = d.get("fifo_reactive_p99_ms").unwrap().as_f64().unwrap();
+        assert!(
+            edf < plain,
+            "deadline EDF must beat plain FIFO/ETC reactive p99: {edf} vs {plain}"
         );
     }
 }

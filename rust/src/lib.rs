@@ -20,15 +20,21 @@
 //!   owns weights and KV caches, executes kernels.
 //! - [`heg`] — the heterogeneous execution graph (paper §5): elastic
 //!   chunked kernels, affinity constraints, predictive annotation.
-//! - [`coordinator`] — the online scheduler (paper §6): dual queues,
-//!   kernel-level preemption, slack-aware backfill, memory-aware
-//!   dispatch, the XPU coordinator loop.
+//! - [`coordinator`] — the online scheduler (paper §6) as a
+//!   *policy*: the reusable `XpuCoordinator` decision pipeline (dual
+//!   queues, kernel-level preemption, slack-aware backfill,
+//!   memory-aware dispatch) behind `AgentXpuPolicy`, plus the
+//!   `deadline` EDF policy built on the same hooks.
 //! - [`engine`] — the streaming `EngineCore` API (`submit`/`step`/
-//!   `cancel`/`drain`) over a clock-abstracted driver; the batch
-//!   `run(trace)` the figure harnesses use is a provided method, so
-//!   simulation and serving share one policy code path.
-//! - [`baselines`] — llama.cpp-like CPU FCFS engine and the Fig. 4
-//!   co-scheduling schemes (a)/(b)/(c).
+//!   `cancel`/`drain`) over a clock-abstracted driver; the
+//!   `SchedPolicy` trait + one generic `PolicyEngine<P>` that owns the
+//!   whole lifecycle for every policy; and the named policy
+//!   `registry` the CLI, figures, server, and tests select engines
+//!   from.  The batch `run(trace)` the figure harnesses use is a
+//!   provided method, so simulation and serving share one policy code
+//!   path.
+//! - [`baselines`] — llama.cpp-like CPU FCFS and the Fig. 4
+//!   co-scheduling schemes (a)/(b)/(c), each one policy file.
 //! - [`workload`] — agentic workload generators (Poisson proactive,
 //!   exponential-think-time reactive, dataset-analog trace profiles)
 //!   and workflow **DAGs**: dependency graphs of LLM turns and CPU

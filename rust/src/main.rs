@@ -3,22 +3,27 @@
 //! ```text
 //! agent-xpu fig <affinity|contention|batching|schemes|proactive|mixed|flows|workflows|ablation|all>
 //!           [--out results/] [--duration 120] [--seed 7] [--smoke]
-//! agent-xpu run --rate 1.5 --interval 12 --duration 60 [--engine agent.xpu|llamacpp|scheme-a|b|c]
+//! agent-xpu run --rate 1.5 --interval 12 --duration 60 [--engine <policy>]
 //! agent-xpu serve --artifacts artifacts/small [--socket /tmp/agent-xpu.sock]
 //!           [--config runtime.json] [--b-max 8] [--session-capacity 32]
+//!           [--policy agent-xpu|deadline|cpu-fcfs|scheme-a|b|c]
+//! agent-xpu policies
 //! agent-xpu inspect --artifacts artifacts/small
 //! agent-xpu soc-probe
 //! ```
+//!
+//! Engines are selected from the policy registry
+//! (`engine::registry`) — `agent-xpu policies` lists every registered
+//! name; `run --engine` and `serve --policy` accept names or aliases
+//! (`agent.xpu`, `llamacpp`, `edf`, …).
 
 use std::path::Path;
 use std::sync::Arc;
 
 use anyhow::{Context, Result, bail};
 
-use agent_xpu::baselines::{CpuFcfsEngine, Scheme, SingleXpuEngine};
 use agent_xpu::config::{RuntimeConfig, SchedulerConfig, default_soc, llama32_3b};
-use agent_xpu::coordinator::AgentXpuEngine;
-use agent_xpu::engine::{Engine, ExecBridge};
+use agent_xpu::engine::{EngineCore, ExecBridge, registry};
 use agent_xpu::figures;
 use agent_xpu::runtime::{ModelExecutor, Runtime};
 use agent_xpu::server::Server;
@@ -39,16 +44,27 @@ fn run() -> Result<()> {
         Some("fig") => cmd_fig(&args),
         Some("run") => cmd_run(&args),
         Some("serve") => cmd_serve(&args),
+        Some("policies") => cmd_policies(),
         Some("inspect") => cmd_inspect(&args),
         Some("soc-probe") => cmd_soc_probe(),
         _ => {
             eprintln!(
-                "usage: agent-xpu <fig|run|serve|inspect|soc-probe> [flags]\n\
+                "usage: agent-xpu <fig|run|serve|policies|inspect|soc-probe> [flags]\n\
                  see `rust/src/main.rs` docs for flags"
             );
             Ok(())
         }
     }
+}
+
+fn cmd_policies() -> Result<()> {
+    println!("registered scheduling policies (engine::registry):");
+    for name in registry::names() {
+        println!("  {name}");
+    }
+    println!("aliases: agent.xpu, llamacpp, preempt-restart, time-share,");
+    println!("         continuous-batching, edf");
+    Ok(())
 }
 
 fn write_result(out_dir: &str, name: &str, j: &Json) -> Result<()> {
@@ -139,18 +155,11 @@ fn cmd_run(args: &Args) -> Result<()> {
         "trace: {} requests over {duration}s (proactive {rate}/s, reactive interval {interval}s)",
         trace.len()
     );
-    let rep = match engine_name.as_str() {
-        "agent.xpu" => {
-            AgentXpuEngine::synthetic(geo, soc, SchedulerConfig::default()).run(trace)?
-        }
-        "llamacpp" => CpuFcfsEngine::new(geo, soc, 4).run(trace)?,
-        "scheme-a" => SingleXpuEngine::new(geo, soc, Scheme::PreemptRestart).run(trace)?,
-        "scheme-b" => SingleXpuEngine::new(geo, soc, Scheme::TimeShare).run(trace)?,
-        "scheme-c" => {
-            SingleXpuEngine::new(geo, soc, Scheme::ContinuousBatching).run(trace)?
-        }
-        other => bail!("unknown engine {other:?}"),
-    };
+    // Any registered policy (or alias) runs the same trace — the
+    // registry replaces the old hardcoded constructor list.
+    let mut engine =
+        registry::build(&engine_name, geo, soc, SchedulerConfig::default())?;
+    let rep = engine.run(trace)?;
     println!("{}", rep.to_json());
     let r = rep.class(Priority::Reactive);
     let p = rep.class(Priority::Proactive);
@@ -187,18 +196,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
     sched.b_max = args.usize_or("b-max", sched.b_max)?;
     sched.session_capacity =
         args.usize_or("session-capacity", sched.session_capacity)?;
+    // --policy: serve any registered scheduling policy (default
+    // agent-xpu) — the registry validates the name before artifacts
+    // load so typos fail fast.
+    let policy = args.str_or("policy", "agent-xpu");
+    let policy = registry::canonical(&policy)?;
     println!("loading artifacts from {artifacts} ...");
     let rt = Arc::new(Runtime::load(artifacts)?);
     println!(
-        "model {} ({:.1}M params), {} artifacts compiled; b_max {}, sessions {}",
+        "model {} ({:.1}M params), {} artifacts compiled; policy {}, b_max {}, sessions {}",
         rt.geo.name,
         rt.geo.n_params() as f64 / 1e6,
         rt.manifest.artifacts.len(),
+        policy,
         sched.b_max,
         sched.session_capacity,
     );
     let bridge = Arc::new(ExecBridge::real(Arc::new(ModelExecutor::new(rt))));
-    Server::new(bridge, socket, soc, sched).run()
+    Server::with_policy(bridge, socket, soc, sched, policy)?.run()
 }
 
 fn cmd_inspect(args: &Args) -> Result<()> {

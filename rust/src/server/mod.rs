@@ -1,7 +1,10 @@
 //! The serving frontend (paper §7): a JSON-lines protocol over Unix
-//! Domain Sockets, backed by the *same* engine core the DES figure
-//! harnesses run (`AgentXpuEngine` behind the clock-abstracted
-//! `EngineCore` API, DESIGN.md §7) executing against wall-clock time.
+//! Domain Sockets, backed by the *same* engine cores the DES figure
+//! harnesses run (any policy from `engine::registry` behind the
+//! clock-abstracted `EngineCore` API, DESIGN.md §7) executing against
+//! wall-clock time.  `agent-xpu serve --policy <name>` selects the
+//! scheduler — `agent-xpu` (default), `deadline`, or any baseline —
+//! without changing a byte of the wire protocol below.
 //!
 //! Wire protocol (one JSON object per line):
 //!
@@ -47,5 +50,5 @@
 mod rt;
 mod uds;
 
-pub use rt::{RtMsg, RtRequest, RtScheduler, TokenEvent, spawn};
+pub use rt::{RtMsg, RtRequest, RtScheduler, TokenEvent, spawn, spawn_with_policy};
 pub use uds::{GenerateResult, Server, client_generate, client_generate_session};

@@ -1,11 +1,14 @@
 //! Real-time serving loop: drives the *same* [`EngineCore`] the DES
-//! figure harnesses run — `AgentXpuEngine` with its dual queues,
+//! figure harnesses run — by default `agent-xpu` with its dual queues,
 //! kernel-level preemption, decode batching, backfill, and memory
 //! governor — against a wall clock ([`EngineClock::wall`]).
 //!
 //! There is no scheduling policy in this file.  The loop only moves
 //! bytes: channel messages in ([`RtMsg`]), engine events out
-//! ([`TokenEvent`]).  Scheduler knobs (`b_max`, `session_capacity`,
+//! ([`TokenEvent`]).  The policy is selected *by name* from the
+//! engine registry (`agent-xpu serve --policy`), so any registered
+//! scheduler — `deadline`, a baseline, a future policy — serves the
+//! same wire protocol.  Scheduler knobs (`b_max`, `session_capacity`,
 //! preemption/backfill switches, …) come from the caller's
 //! [`SchedulerConfig`] — the same configuration the simulated
 //! coordinator honors.
@@ -24,8 +27,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::Result;
 
 use crate::config::{SchedulerConfig, SocConfig};
-use crate::coordinator::AgentXpuEngine;
-use crate::engine::{EngineClock, EngineCore, EngineEvent, ExecBridge};
+use crate::engine::{EngineClock, EngineCore, EngineEvent, ExecBridge, registry};
 use crate::metrics::ReportAccumulator;
 use crate::workload::{FlowBinding, NodeKind, Priority, ReqId, Request};
 
@@ -163,18 +165,30 @@ pub struct RtScheduler {
 }
 
 impl RtScheduler {
-    /// Build the serving loop around the shared coordinator policy:
-    /// real-compute when the bridge carries a PJRT executor, timing
-    /// bridge otherwise.  `sched` is honored wholesale — `b_max`,
-    /// `session_capacity`, preemption/backfill/disaggregation switches.
+    /// Build the serving loop around the default coordinator policy
+    /// (`agent-xpu`): real-compute when the bridge carries a PJRT
+    /// executor, timing bridge otherwise.  `sched` is honored wholesale
+    /// — `b_max`, `session_capacity`, preemption/backfill/
+    /// disaggregation switches.
     pub fn new(bridge: Arc<ExecBridge>, soc: SocConfig, sched: SchedulerConfig) -> Self {
+        Self::new_with_policy(bridge, soc, sched, "agent-xpu")
+            .expect("the default policy is always registered")
+    }
+
+    /// Like [`RtScheduler::new`], but serving any policy registered in
+    /// `engine::registry` (the `serve --policy` path).  Fails on an
+    /// unknown policy name.
+    pub fn new_with_policy(
+        bridge: Arc<ExecBridge>,
+        soc: SocConfig,
+        sched: SchedulerConfig,
+        policy: &str,
+    ) -> Result<Self> {
         let core: Box<dyn EngineCore + Send> = match bridge.executor() {
-            Some(exec) => Box::new(AgentXpuEngine::real(exec, soc, sched)),
-            None => {
-                Box::new(AgentXpuEngine::synthetic(bridge.geo.clone(), soc, sched))
-            }
+            Some(exec) => registry::build_real(policy, exec, soc, sched)?,
+            None => registry::build(policy, bridge.geo.clone(), soc, sched)?,
         };
-        Self { core, stats: Arc::new(Mutex::new(ReportAccumulator::new())) }
+        Ok(Self { core, stats: Arc::new(Mutex::new(ReportAccumulator::new())) })
     }
 
     /// Running serving statistics (shared with the `stats` verb).
@@ -324,13 +338,24 @@ pub fn spawn(
     soc: SocConfig,
     sched: SchedulerConfig,
 ) -> (Sender<RtMsg>, Arc<Mutex<ReportAccumulator>>) {
+    spawn_with_policy(bridge, soc, sched, "agent-xpu")
+        .expect("the default policy is always registered")
+}
+
+/// Like [`spawn`], serving any registered policy by name.
+pub fn spawn_with_policy(
+    bridge: Arc<ExecBridge>,
+    soc: SocConfig,
+    sched: SchedulerConfig,
+    policy: &str,
+) -> Result<(Sender<RtMsg>, Arc<Mutex<ReportAccumulator>>)> {
     let (tx, rx) = channel();
-    let sched = RtScheduler::new(bridge, soc, sched);
+    let sched = RtScheduler::new_with_policy(bridge, soc, sched, policy)?;
     let stats = sched.stats();
     std::thread::spawn(move || {
         let _ = sched.serve(rx);
     });
-    (tx, stats)
+    Ok((tx, stats))
 }
 
 #[cfg(test)]
@@ -577,6 +602,39 @@ mod tests {
         drop(tx);
         let events: Vec<TokenEvent> = erx.iter().collect();
         assert!(matches!(events.last().unwrap(), TokenEvent::Done { .. }));
+    }
+
+    #[test]
+    fn any_registered_policy_serves_the_same_protocol() {
+        // the serve --policy path: a baseline and the EDF policy drive
+        // the identical wire loop
+        for policy in ["deadline", "cpu-fcfs"] {
+            let (tx, stats) = spawn_with_policy(
+                bridge(),
+                default_soc(),
+                SchedulerConfig::default(),
+                policy,
+            )
+            .unwrap();
+            let erx = submit(&tx, 1, Priority::Reactive, 80, 3);
+            drop(tx);
+            let events: Vec<TokenEvent> = erx.iter().collect();
+            assert!(
+                matches!(events.last().unwrap(), TokenEvent::Done { .. }),
+                "{policy}: {events:?}"
+            );
+            assert_eq!(stats.lock().unwrap().served, 1, "{policy}");
+        }
+        assert!(
+            spawn_with_policy(
+                bridge(),
+                default_soc(),
+                SchedulerConfig::default(),
+                "no-such-policy",
+            )
+            .is_err(),
+            "unknown policy names fail fast"
+        );
     }
 
     #[test]

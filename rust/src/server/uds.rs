@@ -37,6 +37,7 @@ impl Server {
     /// Stand the serving loop up on the caller's SoC + scheduler
     /// configuration — the same knobs (`b_max`, `session_capacity`,
     /// preemption/backfill, …) the simulated coordinator honors.
+    /// Serves the default `agent-xpu` policy.
     pub fn new(
         bridge: Arc<ExecBridge>,
         socket_path: impl AsRef<Path>,
@@ -50,6 +51,27 @@ impl Server {
             next_id: Arc::new(AtomicU64::new(1)),
             stats,
         }
+    }
+
+    /// Like [`Server::new`], serving any scheduling policy registered
+    /// in `engine::registry` (`agent-xpu serve --policy <name>`).  The
+    /// wire protocol is identical for every policy; unknown names fail
+    /// here, before a socket is bound.
+    pub fn with_policy(
+        bridge: Arc<ExecBridge>,
+        socket_path: impl AsRef<Path>,
+        soc: SocConfig,
+        sched: SchedulerConfig,
+        policy: &str,
+    ) -> Result<Self> {
+        let (sched_tx, stats) =
+            super::rt::spawn_with_policy(bridge, soc, sched, policy)?;
+        Ok(Self {
+            socket_path: socket_path.as_ref().to_path_buf(),
+            sched_tx,
+            next_id: Arc::new(AtomicU64::new(1)),
+            stats,
+        })
     }
 
     /// Bind and serve forever (one thread per connection).

@@ -3,10 +3,9 @@
 //! stage, and wall-clock runs — the surface the real-time server
 //! drives, exercised here deterministically on the virtual clock.
 
-use agent_xpu::baselines::{CpuFcfsEngine, Scheme, SingleXpuEngine};
 use agent_xpu::config::{ModelGeometry, SchedulerConfig, default_soc, llama32_3b};
 use agent_xpu::coordinator::AgentXpuEngine;
-use agent_xpu::engine::{Engine, EngineClock, EngineEvent};
+use agent_xpu::engine::{Engine, EngineClock, EngineEvent, registry};
 use agent_xpu::workload::{FlowBinding, Priority, Request};
 
 fn geo() -> ModelGeometry {
@@ -206,17 +205,11 @@ fn cancelling_a_held_flow_turn_kills_its_placeholder_successors() {
 }
 
 #[test]
-fn baselines_support_cancel_through_the_same_api() {
-    let mk: Vec<Box<dyn Fn() -> Box<dyn Engine>>> = vec![
-        Box::new(|| -> Box<dyn Engine> {
-            Box::new(CpuFcfsEngine::new(geo(), default_soc(), 4))
-        }),
-        Box::new(|| -> Box<dyn Engine> {
-            Box::new(SingleXpuEngine::new(geo(), default_soc(), Scheme::TimeShare))
-        }),
-    ];
-    for b in &mk {
-        let mut e = b();
+fn every_registered_policy_supports_cancel_through_the_same_api() {
+    for policy in registry::names() {
+        let mut e =
+            registry::build(policy, geo(), default_soc(), SchedulerConfig::default())
+                .unwrap();
         let name = e.name();
         e.start(EngineClock::Virtual).unwrap();
         e.submit(req(1, Priority::Proactive, 0.0, 200, 5)).unwrap();
