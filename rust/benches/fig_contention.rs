@@ -4,7 +4,7 @@
 use agent_xpu::config::default_soc;
 use agent_xpu::figures::fig_contention;
 use agent_xpu::model::gemv_cost;
-use agent_xpu::soc::{LaunchSpec, SocSim};
+use agent_xpu::soc::{KernelClass, LaunchSpec, SocSim};
 use agent_xpu::util::bench::{bench, black_box};
 
 fn main() {
@@ -16,8 +16,8 @@ fn main() {
         let mut sim = SocSim::new(&soc);
         let t0 = sim.xpus[0].timing(&gemv_cost(2048, 2048));
         let t1 = sim.xpus[1].timing(&gemv_cost(2048, 2048));
-        sim.launch(0, LaunchSpec { timing: t0, reactive: false });
-        sim.launch(1, LaunchSpec { timing: t1, reactive: false });
+        sim.launch(0, LaunchSpec { timing: t0, class: KernelClass::Proactive });
+        sim.launch(1, LaunchSpec { timing: t1, class: KernelClass::Proactive });
         while sim.next_event_in().is_some() {
             black_box(sim.advance_until(sim.now_us + 1e12));
         }

@@ -10,7 +10,7 @@ use agent_xpu::coordinator::{AgentXpuEngine, decode_lanes, dispatch_check, resum
 use agent_xpu::engine::{EngineClock, EngineCore, ExecBridge, Phase, registry};
 use agent_xpu::heg::{Annotator, ChunkSpec, plan_chunks};
 use agent_xpu::model::gemv_cost;
-use agent_xpu::soc::{LaunchSpec, SocSim, XpuModel};
+use agent_xpu::soc::{KernelClass, LaunchSpec, SocSim, XpuModel};
 use agent_xpu::util::bench::{bench, black_box};
 use agent_xpu::util::json::Json;
 use agent_xpu::workload::{Priority, Request};
@@ -27,7 +27,7 @@ fn main() {
     // Algorithm 1 decision latency under an active kernel
     let mut sim = SocSim::new(&soc);
     let t = sim.xpus[1].timing(&gemv_cost(4096, 4096));
-    sim.launch(1, LaunchSpec { timing: t, reactive: false });
+    sim.launch(1, LaunchSpec { timing: t, class: KernelClass::Proactive });
     let cand = ann
         .prefill_kernel(&ChunkSpec { variant: 256, valid: 256, pos: 0, dynamic: false });
     let ct = *cand.timing_on(0);
@@ -104,7 +104,7 @@ fn main() {
     let s = bench("DES launch+advance cycle", 1000, 100_000, || {
         let mut sim = SocSim::new(&soc);
         let t = sim.xpus[0].timing(&gemv_cost(512, 512));
-        sim.launch(0, LaunchSpec { timing: t, reactive: false });
+        sim.launch(0, LaunchSpec { timing: t, class: KernelClass::Proactive });
         black_box(sim.advance_until(sim.now_us + 1e9));
     });
     println!("{}", s.report());

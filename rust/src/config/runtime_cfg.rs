@@ -148,6 +148,25 @@ pub struct SchedulerConfig {
     /// chain first (DESIGN.md §3).  Ablation switch — `false` falls
     /// back to the plain FIFO/ETC turn order.
     pub critical_path_priority: bool,
+    /// iGPU duty governor (the paper's "controlled iGPU usage", §8.1):
+    /// cap on the iGPU's windowed *agentic* duty cycle that
+    /// opportunistic proactive placements (decode joins, whole
+    /// proactive decode batches, proactive margin chunks, inter-XPU
+    /// backfill) must stay under.  Reactive work is never gated and
+    /// starved proactive candidates bypass the cap (§6.5 aging), so the
+    /// governor defers, never starves.  `>= 1.0` (the default)
+    /// disables it — schedules are bit-for-bit the ungoverned ones.
+    ///
+    /// Designed for virtual-clock (DES) runs: the duty window lives on
+    /// the simulated SoC clock, which a wall-clock server only
+    /// advances while kernels execute — an engaged cap there relaxes
+    /// through the starvation valve (coarse, `starvation_age_ms`
+    /// granularity) rather than through window decay.
+    pub igpu_duty_cap: f64,
+    /// With a graphics workload present, additionally veto proactive
+    /// iGPU kernels that would run past the next frame's vsync due
+    /// instant.  Off by default (no schedule change).
+    pub yield_to_graphics: bool,
 }
 
 impl Default for SchedulerConfig {
@@ -164,6 +183,8 @@ impl Default for SchedulerConfig {
             kernel_timeout_ms: 10_000.0,
             session_capacity: 32,
             critical_path_priority: true,
+            igpu_duty_cap: 1.0,
+            yield_to_graphics: false,
         }
     }
 }
@@ -192,6 +213,8 @@ impl SchedulerConfig {
                 .map(|x| x.as_usize())
                 .unwrap_or(Ok(d.session_capacity))?,
             critical_path_priority: b("critical_path_priority", d.critical_path_priority)?,
+            igpu_duty_cap: f("igpu_duty_cap", d.igpu_duty_cap)?,
+            yield_to_graphics: b("yield_to_graphics", d.yield_to_graphics)?,
         })
     }
 
@@ -208,6 +231,8 @@ impl SchedulerConfig {
             .set("kernel_timeout_ms", self.kernel_timeout_ms)
             .set("session_capacity", self.session_capacity)
             .set("critical_path_priority", self.critical_path_priority)
+            .set("igpu_duty_cap", self.igpu_duty_cap)
+            .set("yield_to_graphics", self.yield_to_graphics)
     }
 }
 
@@ -348,6 +373,21 @@ mod tests {
         assert!((s.chunk_latency_budget_ms - 100.0).abs() < 1e-9);
         assert!(s.session_capacity > 0, "session retention on by default");
         assert!(s.critical_path_priority, "critical-path priority on by default");
+        assert!(s.igpu_duty_cap >= 1.0, "duty governor off by default");
+        assert!(!s.yield_to_graphics, "vsync yield off by default");
+    }
+
+    #[test]
+    fn duty_governor_knobs_roundtrip_and_default_off() {
+        let v = Json::parse(
+            r#"{"artifacts": "a", "scheduler": {"igpu_duty_cap": 0.4, "yield_to_graphics": true}}"#,
+        )
+        .unwrap();
+        let cfg = RuntimeConfig::from_json(&v).unwrap();
+        assert!((cfg.scheduler.igpu_duty_cap - 0.4).abs() < 1e-9);
+        assert!(cfg.scheduler.yield_to_graphics);
+        let back = SchedulerConfig::from_json(&cfg.scheduler.to_json()).unwrap();
+        assert_eq!(back, cfg.scheduler);
     }
 
     #[test]

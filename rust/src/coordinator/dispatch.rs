@@ -78,7 +78,7 @@ mod tests {
     use super::*;
     use crate::config::{SchedulerConfig, default_soc};
     use crate::model::{gemm_cost, gemv_cost};
-    use crate::soc::LaunchSpec;
+    use crate::soc::{KernelClass, LaunchSpec};
 
     fn setup() -> (SocSim, SchedulerConfig) {
         (SocSim::new(&default_soc()), SchedulerConfig::default())
@@ -97,7 +97,7 @@ mod tests {
         let (mut sim, cfg) = setup();
         let npu = sim.xpu_index("npu").unwrap();
         let gemm = sim.xpus[npu].timing(&gemm_cost(4096, 4096, 4096));
-        sim.launch(npu, LaunchSpec { timing: gemm, reactive: false });
+        sim.launch(npu, LaunchSpec { timing: gemm, class: KernelClass::Proactive });
         // another compute-bound kernel: P stays tiny → launch
         let igpu = sim.xpu_index("igpu").unwrap();
         let gemm2 = sim.xpus[igpu].timing(&gemm_cost(4096, 4096, 4096));
@@ -109,7 +109,7 @@ mod tests {
         let (mut sim, cfg) = setup();
         let igpu = sim.xpu_index("igpu").unwrap();
         let gemv = sim.xpus[igpu].timing(&gemv_cost(8192, 8192));
-        sim.launch(igpu, LaunchSpec { timing: gemv, reactive: false });
+        sim.launch(igpu, LaunchSpec { timing: gemv, class: KernelClass::Proactive });
         // iGPU GEMV demands ~70/89.6 = 0.78 > τ_high already
         let npu = sim.xpu_index("npu").unwrap();
         let gemv2 = sim.xpus[npu].timing(&gemv_cost(8192, 8192));
@@ -121,7 +121,7 @@ mod tests {
         // ... but when the system is *already* at the high tier, even
         // reactive waits for the slot
         let npu_gemv = sim.xpus[npu].timing(&gemv_cost(8192, 8192));
-        sim.launch(npu, LaunchSpec { timing: npu_gemv, reactive: false });
+        sim.launch(npu, LaunchSpec { timing: npu_gemv, class: KernelClass::Proactive });
         let cpu = sim.xpu_index("cpu").unwrap();
         let gemv3 = sim.xpus[cpu].timing(&gemv_cost(8192, 8192));
         assert_eq!(dispatch_check(&sim, &cfg, &gemv3, true), DispatchDecision::Defer);
@@ -135,7 +135,7 @@ mod tests {
         cfg.pressure_high = 2.0;
         let igpu = sim.xpu_index("igpu").unwrap();
         let gemv = sim.xpus[igpu].timing(&gemv_cost(8192, 8192));
-        sim.launch(igpu, LaunchSpec { timing: gemv, reactive: false });
+        sim.launch(igpu, LaunchSpec { timing: gemv, class: KernelClass::Proactive });
         let npu = sim.xpu_index("npu").unwrap();
         // memory-bound candidate vs memory-bound active → defer
         let gemv2 = sim.xpus[npu].timing(&gemv_cost(8192, 8192));
@@ -152,7 +152,7 @@ mod tests {
         cfg.pressure_high = 2.0;
         let igpu = sim.xpu_index("igpu").unwrap();
         let gemv = sim.xpus[igpu].timing(&gemv_cost(8192, 8192));
-        sim.launch(igpu, LaunchSpec { timing: gemv, reactive: false });
+        sim.launch(igpu, LaunchSpec { timing: gemv, class: KernelClass::Proactive });
         let npu = sim.xpu_index("npu").unwrap();
         let gemv2 = sim.xpus[npu].timing(&gemv_cost(8192, 8192));
         // reactive launches immediately in the medium band

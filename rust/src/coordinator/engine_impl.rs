@@ -25,8 +25,8 @@ use std::sync::Arc;
 
 use crate::config::{ModelGeometry, SchedulerConfig, SocConfig};
 use crate::engine::{
-    Action, ExecBridge, KernelTag, Phase, PolicyCtx, PolicyEngine, ResumeCtx,
-    SchedPolicy, States,
+    Action, ExecBridge, IgpuGateCtx, KernelTag, Phase, PolicyCtx, PolicyEngine,
+    ResumeCtx, SchedPolicy, States,
 };
 use crate::heg::{Annotator, max_chunk_within_budget};
 use crate::runtime::ModelExecutor;
@@ -204,6 +204,51 @@ impl XpuCoordinator {
         }
     }
 
+    /// Assemble the iGPU duty governor's question for a candidate
+    /// proactive kernel of `nominal_us` (see
+    /// [`SchedPolicy::igpu_proactive_grant`]).
+    fn igpu_gate_ctx(&self, ctx: &PolicyCtx<'_>, nominal_us: f64) -> IgpuGateCtx {
+        IgpuGateCtx {
+            duty_cap: self.sched.igpu_duty_cap,
+            yield_to_graphics: self.sched.yield_to_graphics,
+            duty: ctx.windowed_duty(self.igpu),
+            frame_pending: ctx.would_delay_next_frame(nominal_us),
+            now_us: ctx.now(),
+        }
+    }
+
+    /// §6.5 aging valve for the duty governor: a proactive candidate
+    /// that has made no progress for a full starvation age bypasses
+    /// the gate — a veto defers work, it can never starve it.  Keyed
+    /// off `last_progress_us`, not `enqueued_at_us`: a decode lane
+    /// served every iteration keeps a fresh progress stamp (so an old
+    /// enqueue time cannot permanently un-gate the governor), while a
+    /// genuinely vetoed candidate ages to the valve.
+    fn starved(&self, ctx: &PolicyCtx<'_>, id: ReqId) -> bool {
+        let st = ctx.state(id);
+        let since = st.enqueued_at_us.max(st.last_progress_us);
+        ctx.now() - since > self.sched.starvation_age_ms * 1e3
+    }
+
+    /// A governor veto is time-gated (window decay, frame cadence,
+    /// starvation aging), not evented: schedule the retry pass, or a
+    /// vetoed-and-otherwise-idle DES would end with unfinished work.
+    fn governor_retry(&self, ctx: &mut PolicyCtx<'_>) {
+        ctx.request_wakeup(ctx.now() + crate::soc::DUTY_WINDOW_US / 8.0);
+    }
+
+    /// Annotate one decode iteration over `lanes` (mean context).
+    fn decode_annotation(
+        &self,
+        ctx: &PolicyCtx<'_>,
+        lanes: &[ReqId],
+    ) -> crate::heg::Annotated {
+        let avg_ctx = (lanes.iter().map(|id| ctx.state(*id).pos).sum::<usize>()
+            / lanes.len())
+        .max(1);
+        self.ann.decode_iter(lanes.len(), avg_ctx)
+    }
+
     // -- NPU side: the prefill pipeline ---------------------------------
 
     fn schedule_prefill_pipeline<H: SchedPolicy + ?Sized>(
@@ -311,16 +356,27 @@ impl XpuCoordinator {
         // (3) Decode iteration with adaptive batching + intra-XPU
         // backfill (proactive lanes join at the boundary when allowed).
         let allow_join = self.sched.backfill || !reactive_present;
-        let (lanes, any_rt) =
+        let (mut lanes, mut any_rt) =
             hooks.decode_batch(ctx.states(), self.sched.b_max, allow_join, ctx.now());
         if !lanes.is_empty() {
-            let avg_ctx = (lanes.iter().map(|id| ctx.state(*id).pos).sum::<usize>()
-                / lanes.len())
-            .max(1);
-            let annotated = self.ann.decode_iter(lanes.len(), avg_ctx);
-            let timing = *annotated.timing_on(self.igpu);
-            if dispatch_check(ctx.sim(), &self.sched, &timing, any_rt)
-                == DispatchDecision::Launch
+            let mut timing = *self.decode_annotation(ctx, &lanes).timing_on(self.igpu);
+            // iGPU duty governor: proactive lanes — joins *and* whole
+            // proactive batches — need a grant (unless starved).  A veto
+            // drops the proactive lanes; reactive lanes always decode.
+            let gated = lanes.iter().any(|id| !ctx.state(*id).is_reactive())
+                && !lanes.iter().any(|id| self.starved(ctx, *id))
+                && !hooks.igpu_proactive_grant(&self.igpu_gate_ctx(ctx, timing.nominal_us));
+            if gated {
+                self.governor_retry(ctx);
+                lanes.retain(|id| ctx.state(*id).is_reactive());
+                any_rt = !lanes.is_empty();
+                if !lanes.is_empty() {
+                    timing = *self.decode_annotation(ctx, &lanes).timing_on(self.igpu);
+                }
+            }
+            if !lanes.is_empty()
+                && dispatch_check(ctx.sim(), &self.sched, &timing, any_rt)
+                    == DispatchDecision::Launch
             {
                 let backfilled =
                     any_rt && lanes.iter().any(|id| !ctx.state(*id).is_reactive());
@@ -384,6 +440,15 @@ impl XpuCoordinator {
             }
             let annotated = self.ann.prefill_kernel(&chunk);
             let timing = *annotated.timing_on(self.igpu);
+            // iGPU duty governor: inter-XPU backfill is the biggest
+            // opportunistic iGPU consumer — gate it first (§8.1
+            // controlled iGPU usage), starvation valve excepted.
+            if !self.starved(ctx, id)
+                && !hooks.igpu_proactive_grant(&self.igpu_gate_ctx(ctx, timing.nominal_us))
+            {
+                self.governor_retry(ctx);
+                continue;
+            }
             // Backfill constraints (§6.3): duration within the reactive
             // window (chunking bounds this), memory threshold (Alg. 1).
             if dispatch_check(ctx.sim(), &self.sched, &timing, false)
@@ -426,6 +491,15 @@ impl XpuCoordinator {
         };
         let annotated = self.ann.prefill_kernel(&chunk);
         let timing = *annotated.timing_on(self.igpu);
+        // iGPU duty governor: proactive margins are opportunistic iGPU
+        // placements like any other (reactive margins are never gated).
+        if !reactive
+            && !self.starved(ctx, id)
+            && !hooks.igpu_proactive_grant(&self.igpu_gate_ctx(ctx, timing.nominal_us))
+        {
+            self.governor_retry(ctx);
+            return false;
+        }
         if dispatch_check(ctx.sim(), &self.sched, &timing, reactive)
             == DispatchDecision::Defer
         {
@@ -814,6 +888,80 @@ mod tests {
             assert_eq!(x.first_token_us, y.first_token_us);
             assert_eq!(x.done_us, y.done_us);
         }
+    }
+
+    /// Tentpole: a display workload renders during an agentic run,
+    /// frames land in the report, and every request still completes.
+    #[test]
+    fn graphics_frames_render_during_a_run_and_attribute_energy() {
+        use crate::soc::{CLASS_IDLE, GraphicsConfig, KernelClass};
+        let mut e = engine();
+        e.set_graphics(Some(GraphicsConfig::default()));
+        let mut trace: Vec<Request> = (0..3)
+            .map(|i| req(i, Priority::Proactive, i as f64 * 30_000.0, 256, 10))
+            .collect();
+        trace.push(req(100, Priority::Reactive, 50_000.0, 128, 6));
+        let rep = e.run(trace).unwrap();
+        assert_eq!(rep.reqs.iter().filter(|m| m.finished()).count(), 4);
+        assert!(rep.frames_scheduled > 0, "the display rendered frames");
+        assert!(
+            rep.energy_by_class[KernelClass::Graphics.idx()] > 0.0,
+            "render energy attributed to the graphics class"
+        );
+        // attribution closes: classes + idle = total
+        let sum: f64 = rep.energy_by_class.iter().sum();
+        assert!((sum - rep.total_energy_j).abs() < 1e-6 * rep.total_energy_j.max(1.0));
+        assert!(rep.energy_by_class[CLASS_IDLE] >= 0.0);
+        // per-class J/token are defined and finite
+        assert!(rep.joules_per_token_class(Priority::Reactive).is_finite());
+        assert!(rep.joules_per_token_class(Priority::Proactive) > 0.0);
+    }
+
+    /// Acceptance criterion: with `igpu_duty_cap` engaged the governor
+    /// strictly reduces graphics jank vs the uncapped run, without
+    /// losing any agentic work (the starvation valve guarantees
+    /// liveness even at cap 0).
+    #[test]
+    fn duty_cap_strictly_reduces_frame_miss_rate() {
+        use crate::soc::GraphicsConfig;
+        // full paper-scale geometry: one decode iteration (~tens of ms
+        // on the iGPU) spans several 60 Hz vsync periods, so an
+        // ungoverned decode stream is maximally janky
+        let geo = crate::config::llama32_3b();
+        let mk_trace = || -> Vec<Request> {
+            (0..4).map(|i| req(i, Priority::Proactive, i as f64 * 10_000.0, 512, 40)).collect()
+        };
+        let run_with = |cap: f64| {
+            let mut sched = SchedulerConfig::default();
+            sched.igpu_duty_cap = cap;
+            let mut e = AgentXpuEngine::synthetic(geo.clone(), default_soc(), sched);
+            e.set_graphics(Some(GraphicsConfig::default()));
+            e.run(mk_trace()).unwrap()
+        };
+        let uncapped = run_with(1.0);
+        let capped = run_with(0.3);
+        assert_eq!(capped.reqs.iter().filter(|m| m.finished()).count(), 4);
+        assert!(uncapped.frames_missed > 0, "ungoverned decode must jank");
+        assert!(
+            capped.frame_miss_rate() < uncapped.frame_miss_rate(),
+            "cap engaged: miss rate {:.3} must beat uncapped {:.3}",
+            capped.frame_miss_rate(),
+            uncapped.frame_miss_rate()
+        );
+    }
+
+    /// A hard duty cap of 0 cannot starve proactive work: the §6.5
+    /// aging valve bypasses the governor once candidates go stale.
+    #[test]
+    fn zero_duty_cap_still_completes_via_the_starvation_valve() {
+        let mut sched = SchedulerConfig::default();
+        sched.igpu_duty_cap = 0.0;
+        sched.starvation_age_ms = 200.0; // age out quickly in test time
+        let mut e = AgentXpuEngine::synthetic(geo(), default_soc(), sched);
+        let trace: Vec<Request> =
+            (0..3).map(|i| req(i, Priority::Proactive, 0.0, 200, 8)).collect();
+        let rep = e.run(trace).unwrap();
+        assert_eq!(rep.reqs.iter().filter(|m| m.finished()).count(), 3);
     }
 
     /// The redesign's trace-retention satellite: `PolicyEngine` keeps

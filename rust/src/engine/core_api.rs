@@ -154,6 +154,13 @@ pub trait EngineCore {
         None
     }
 
+    /// Attach a synthetic graphics workload to subsequent runs (frames
+    /// render on the iGPU with compositor priority; jank lands in
+    /// `RunReport::frames_missed`).  Virtual-clock runs only; `None`
+    /// detaches.  Default: ignored — `PolicyEngine` implements it for
+    /// every policy.
+    fn set_graphics(&mut self, _cfg: Option<crate::soc::GraphicsConfig>) {}
+
     /// Step until idle, collecting every event.
     fn drain(&mut self) -> Result<Vec<EngineEvent>> {
         let mut out = vec![];

@@ -40,7 +40,9 @@ use crate::config::SocConfig;
 use crate::metrics::{ReqMetrics, RunReport};
 use crate::model::KernelCost;
 use crate::runtime::{KvCache, SessionCachePool};
-use crate::soc::{Completion, KernelTiming, LaunchSpec, RunId, SocSim};
+use crate::soc::{
+    Completion, GraphicsSim, KernelClass, KernelTiming, LaunchSpec, RunId, SocSim,
+};
 use crate::workload::{FlowBinding, FlowId, NodeKind, ReqId, Request};
 
 use super::bridge::ExecBridge;
@@ -155,6 +157,18 @@ pub struct Driver {
     /// The SoC's CPU index (tool nodes run here; `None` = the SoC
     /// models no CPU and tools complete instantly).
     cpu: Option<usize>,
+    /// The SoC's iGPU index (graphics frames render here).
+    igpu: Option<usize>,
+    /// Synthetic display workload (DES runs only) — frames launch with
+    /// compositor priority whenever the iGPU is free, before the
+    /// scheduling policy's decision pass.
+    graphics: Option<GraphicsSim>,
+    /// One-shot DES wake-up a time-gated policy decision requested
+    /// (duty-governor veto retry): the clock stops here even with no
+    /// kernel or arrival event pending, so a vetoed-and-otherwise-idle
+    /// run still advances to the veto's expiry instead of ending with
+    /// unfinished work.
+    wake_at_us: Option<f64>,
     /// Index of waiting proactive prefills (phase == Prefilling, not
     /// running, not reactive) — kept in sync at every lifecycle
     /// transition so schedulers don't rescan every live request per
@@ -190,6 +204,7 @@ impl Driver {
     pub fn open(soc: &SocConfig, bridge: ExecBridge, clock: EngineClock) -> Self {
         let sim = SocSim::new(soc);
         let cpu = sim.xpu_index("cpu");
+        let igpu = sim.xpu_index("igpu");
         Self {
             sim,
             bridge,
@@ -204,6 +219,9 @@ impl Driver {
             tool_wait: VecDeque::new(),
             tool_inflight: HashMap::new(),
             cpu,
+            igpu,
+            graphics: None,
+            wake_at_us: None,
             waiting_pro_prefill: BTreeSet::new(),
             events: vec![],
             retired: vec![],
@@ -262,6 +280,51 @@ impl Driver {
     /// flow id, and continuation turns admit with a delta-only plan.
     pub fn enable_session_reuse(&mut self, capacity: usize) {
         self.sessions = Some(SessionCachePool::new(capacity));
+    }
+
+    /// Attach a synthetic display workload (DES runs only; ignored
+    /// without an iGPU in the SoC).  Frames launch with compositor
+    /// priority before every policy pass; their jank accounting lands
+    /// in `RunReport::{frames_scheduled, frames_missed}`.
+    pub fn set_graphics(&mut self, g: GraphicsSim) {
+        if self.igpu.is_some() {
+            self.graphics = Some(g);
+        }
+    }
+
+    /// Would a kernel of `nominal_us` launched now run past the next
+    /// graphics frame's due instant?  False without a display workload.
+    /// (Frame timing lives on the virtual SoC clock.)
+    pub fn would_delay_next_frame(&self, nominal_us: f64) -> bool {
+        self.graphics
+            .as_ref()
+            .map(|g| g.would_delay_next_frame(self.sim.now_us, nominal_us))
+            .unwrap_or(false)
+    }
+
+    /// Launch the due graphics frame if the iGPU is free (compositor
+    /// priority: called before the policy's decision pass and at every
+    /// step).  A finished run launches nothing: the frame would never
+    /// render (the run ends at the last agentic completion), and a
+    /// phantom launch would pad `frames_scheduled` and the kernel
+    /// counts.
+    fn launch_graphics(&mut self) {
+        if self.all_done() {
+            return;
+        }
+        if let (Some(g), Some(igpu)) = (&mut self.graphics, self.igpu) {
+            g.try_launch(&mut self.sim, igpu);
+        }
+    }
+
+    /// Ask the next [`Driver::step`] to advance the clock to `at_us`
+    /// (earliest wins) even if no kernel completion or arrival falls
+    /// before it — how a time-gated veto (the iGPU duty governor)
+    /// schedules its own retry.  One-shot: consumed by the step that
+    /// reaches it; a persisting veto re-requests on its next pass.
+    pub fn request_wakeup(&mut self, at_us: f64) {
+        let at = at_us.max(self.sim.now_us);
+        self.wake_at_us = Some(self.wake_at_us.map_or(at, |w| w.min(at)));
     }
 
     /// Retained idle sessions (for the memory governor's accounting).
@@ -367,6 +430,7 @@ impl Driver {
             out.push(id);
         }
         self.launch_tools();
+        self.launch_graphics();
         out
     }
 
@@ -398,8 +462,8 @@ impl Driver {
                 is_dynamic: false,
             };
             let timing: KernelTiming = self.sim.xpus[cpu].timing(&cost);
-            let reactive = req.priority.is_reactive();
-            let run = self.sim.launch(cpu, LaunchSpec { timing, reactive });
+            let class = KernelClass::from_reactive(req.priority.is_reactive());
+            let run = self.sim.launch(cpu, LaunchSpec { timing, class });
             self.tool_inflight.insert(run, req);
         }
     }
@@ -415,7 +479,10 @@ impl Driver {
         for id in tag.reqs() {
             self.reindex(id);
         }
-        let run = self.sim.launch(xpu, LaunchSpec { timing, reactive });
+        let run = self.sim.launch(
+            xpu,
+            LaunchSpec { timing, class: KernelClass::from_reactive(reactive) },
+        );
         self.inflight.insert(run, tag);
     }
 
@@ -425,6 +492,13 @@ impl Driver {
     /// driver-managed tool kernel — it is re-queued, not lost).
     pub fn cancel(&mut self, xpu: usize) -> Option<KernelTag> {
         let run = self.sim.cancel(xpu)?;
+        if let Some(g) = &mut self.graphics {
+            // an aborted frame never reaches the display: one miss, and
+            // the next frame schedules as usual
+            if g.on_abort(run) {
+                return None;
+            }
+        }
         if let Some(req) = self.tool_inflight.remove(&run) {
             self.tool_wait.push_front(req);
             return None;
@@ -693,6 +767,13 @@ impl Driver {
     /// wall clock new submissions make it runnable again.
     pub fn step(&mut self) -> Result<bool> {
         self.launch_tools();
+        self.launch_graphics();
+        // A display renders frames forever, and a stale veto-retry
+        // wake-up points past the last completion — neither must keep a
+        // finished run alive or stretch its makespan.
+        if self.all_done() && (self.graphics.is_some() || self.wake_at_us.is_some()) {
+            return Ok(false);
+        }
         if self.clock.is_wall() {
             // Wall mode: virtual durations only *order* the in-flight
             // kernels; their effects execute now, stamped in wall time.
@@ -702,6 +783,13 @@ impl Driver {
                 for c in completions {
                     self.apply_completion(&c)?;
                 }
+                return Ok(true);
+            }
+            // A veto-retry wake-up under a wall clock: nap briefly and
+            // hand control back to the policy (wall time advances on
+            // its own; the §6.5 starvation valve bounds the retries).
+            if self.wake_at_us.take().is_some() {
+                std::thread::sleep(std::time::Duration::from_micros(500));
                 return Ok(true);
             }
             // Nothing in flight: runnable iff an arrival is pending.  A
@@ -723,12 +811,23 @@ impl Driver {
         }
         let next_fin = self.sim.next_event_in().map(|dt| self.now() + dt);
         let next_arr = self.next_arrival_us();
-        let target = match (next_fin, next_arr) {
-            (Some(f), Some(a)) => f.min(a),
-            (Some(f), None) => f,
-            (None, Some(a)) => a,
-            (None, None) => return Ok(false),
-        };
+        // A due-but-blocked frame is not an event (it launches after the
+        // blocking completion); only a *future* frame due stops the clock.
+        let next_frame = self
+            .graphics
+            .as_ref()
+            .and_then(|g| g.next_launch_due())
+            .filter(|&t| t > self.sim.now_us + 1e-9);
+        let wake = self.wake_at_us.filter(|&t| t > self.sim.now_us + 1e-9);
+        let target = [next_fin, next_arr, next_frame, wake]
+            .into_iter()
+            .flatten()
+            .min_by(|a, b| a.total_cmp(b));
+        let Some(target) = target else { return Ok(false) };
+        // consume a wake-up the clock is about to reach (or has passed)
+        if self.wake_at_us.map_or(false, |w| w <= target + 1e-9) {
+            self.wake_at_us = None;
+        }
         let completions = self.sim.advance_until(target);
         for c in completions {
             self.apply_completion(&c)?;
@@ -737,6 +836,17 @@ impl Driver {
     }
 
     fn apply_completion(&mut self, c: &Completion) -> Result<()> {
+        // Graphics frames are driver-managed: fold the jank accounting
+        // and record the render on the kernel trace.
+        if let Some(g) = &mut self.graphics {
+            if g.on_completion(c) {
+                if !self.clock.is_wall() {
+                    self.trace
+                        .record(c.xpu, c.started_us, c.finished_us, "frame".into(), false);
+                }
+                return Ok(());
+            }
+        }
         // Driver-managed tool kernels complete outside the engine's
         // prefill/decode lifecycle.
         if let Some(req) = self.tool_inflight.remove(&c.id) {
@@ -781,6 +891,7 @@ impl Driver {
             KernelTag::Prefill { req } => {
                 let mut st = self.states.remove(req).context("unknown req")?;
                 st.running = false;
+                st.last_progress_us = t;
                 let done = self.bridge.prefill_kernel_done(&mut st)?;
                 if done {
                     st.metrics.first_token_us = Some(t);
@@ -812,6 +923,7 @@ impl Driver {
                 }
                 for mut st in taken {
                     st.running = false;
+                    st.last_progress_us = t;
                     if st.cancelled {
                         // deferred lane cancellation: the iteration is
                         // over, the KV can go
@@ -1101,6 +1213,10 @@ impl Driver {
             xpus: self.sim.snapshot(),
             makespan_us,
             total_energy_j: self.sim.total_energy_j(),
+            energy_by_class: self.sim.energy_by_class(),
+            busy_by_class: self.sim.busy_by_class(),
+            frames_scheduled: self.graphics.as_ref().map(|g| g.frames_scheduled).unwrap_or(0),
+            frames_missed: self.graphics.as_ref().map(|g| g.frames_missed).unwrap_or(0),
             peak_power_w: self.sim.peak_power_w,
             mean_bw_gbps: self.sim.mean_bandwidth_gbps(),
             preemptions: self.preemptions,

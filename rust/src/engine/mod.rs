@@ -27,5 +27,7 @@ pub use bridge::ExecBridge;
 pub use core_api::EngineCore as Engine;
 pub use core_api::{EngineClock, EngineCore, EngineEvent};
 pub use driver::{Driver, KernelTag};
-pub use policy::{Action, PolicyCtx, PolicyEngine, ResumeCtx, SchedPolicy, States};
+pub use policy::{
+    Action, IgpuGateCtx, PolicyCtx, PolicyEngine, ResumeCtx, SchedPolicy, States,
+};
 pub use reqstate::{Phase, ReqState};

@@ -41,7 +41,7 @@ use crate::config::{ModelGeometry, SocConfig};
 use crate::coordinator::MemoryGovernor;
 use crate::heg::Annotator;
 use crate::metrics::RunReport;
-use crate::soc::{KernelTiming, SocSim};
+use crate::soc::{GraphicsConfig, GraphicsSim, KernelTiming, SocSim};
 use crate::trace::Trace;
 use crate::workload::{FlowId, ReqId, Request};
 
@@ -125,6 +125,27 @@ impl<'a> PolicyCtx<'a> {
         self.d.retained_sessions()
     }
 
+    /// Windowed *agentic* busy fraction of `xpu` (graphics frames
+    /// excluded) — the duty the iGPU governor caps.
+    pub fn windowed_duty(&self, xpu: usize) -> f64 {
+        self.d.sim.windowed_duty(xpu)
+    }
+
+    /// Would a kernel of `nominal_us` launched now run past the next
+    /// graphics frame's due instant?  Always false without a display
+    /// workload.
+    pub fn would_delay_next_frame(&self, nominal_us: f64) -> bool {
+        self.d.would_delay_next_frame(nominal_us)
+    }
+
+    /// Schedule a DES wake-up at `at_us` (earliest wins): a policy
+    /// whose decision is time-gated — a duty-governor veto waiting on
+    /// window decay or starvation aging — must request one, or an
+    /// otherwise-idle run would end before the gate reopens.
+    pub fn request_wakeup(&mut self, at_us: f64) {
+        self.d.request_wakeup(at_us);
+    }
+
     // -- sanctioned mutations -------------------------------------------
 
     /// Launch a kernel; recorded as [`Action::Launch`].
@@ -202,6 +223,22 @@ impl<'a> PolicyCtx<'a> {
     pub fn take_actions(self) -> Vec<Action> {
         self.actions
     }
+}
+
+/// Arguments to the [`SchedPolicy::igpu_proactive_grant`] hook — the
+/// iGPU duty governor's question: may a *proactive* kernel of this
+/// shape occupy the iGPU right now?
+pub struct IgpuGateCtx {
+    /// `SchedulerConfig::igpu_duty_cap` (≥ 1.0 = uncapped).
+    pub duty_cap: f64,
+    /// `SchedulerConfig::yield_to_graphics`.
+    pub yield_to_graphics: bool,
+    /// Windowed agentic busy fraction of the iGPU (graphics excluded).
+    pub duty: f64,
+    /// The candidate kernel would run past the next graphics frame's
+    /// due instant (always false without a display workload).
+    pub frame_pending: bool,
+    pub now_us: f64,
 }
 
 /// Arguments to the [`SchedPolicy::resume_order`] hook: everything the
@@ -305,6 +342,28 @@ pub trait SchedPolicy: Send {
     fn eviction_victim(&self, gov: &MemoryGovernor, states: &States) -> Option<ReqId> {
         gov.eviction_victim(states)
     }
+
+    /// iGPU duty governor (the paper's "controlled iGPU usage"): may a
+    /// *proactive* kernel of the given shape occupy the iGPU right
+    /// now?  The `XpuCoordinator` pipeline consults this before
+    /// proactive decode batches/joins, proactive margin chunks, and
+    /// inter-XPU backfill.  Reactive work and the force-progress
+    /// deadlock guard are never gated, and proactive candidates that
+    /// made no progress for a full starvation age (§6.5 aging, keyed
+    /// off the last kernel completion) bypass the governor before it
+    /// is even consulted — a veto defers, it cannot starve.
+    ///
+    /// Default: the `igpu_duty_cap` / `yield_to_graphics` knobs — veto
+    /// when the iGPU's windowed agentic duty sits at/above the cap, or
+    /// when the kernel would run past the next graphics frame's vsync
+    /// due instant.  Both knobs at their defaults (cap 1.0, yield off)
+    /// always grant, which keeps every registry policy's schedule
+    /// bit-for-bit unchanged.
+    fn igpu_proactive_grant(&self, g: &IgpuGateCtx) -> bool {
+        let duty_ok = g.duty_cap >= 1.0 || g.duty < g.duty_cap;
+        let frame_ok = !g.yield_to_graphics || !g.frame_pending;
+        duty_ok && frame_ok
+    }
 }
 
 /// The one generic engine: a [`Driver`] + the full [`EngineCore`]
@@ -320,6 +379,8 @@ pub struct PolicyEngine<P: SchedPolicy> {
     /// Kernel trace of the last finished run (Fig. 4 Gantt, invariant
     /// checks) — retained here for *every* policy.
     last_trace: Option<Trace>,
+    /// Synthetic display workload attached to future runs (DES only).
+    graphics: Option<GraphicsConfig>,
     /// The open run, if `start` has been called.
     active: Option<Driver>,
     /// The last `step` made no progress (run idle).
@@ -332,7 +393,15 @@ impl<P: SchedPolicy> PolicyEngine<P> {
     /// Named `with_policy` so per-policy aliases keep their historical
     /// inherent constructors (`CpuFcfsEngine::new`, …).
     pub fn with_policy(policy: P, soc: SocConfig, bridge: ExecBridge) -> Self {
-        Self { policy, soc, bridge, last_trace: None, active: None, stalled: false }
+        Self {
+            policy,
+            soc,
+            bridge,
+            last_trace: None,
+            graphics: None,
+            active: None,
+            stalled: false,
+        }
     }
 
     /// The wrapped policy (tests, introspection).
@@ -355,6 +424,14 @@ impl<P: SchedPolicy> EngineCore for PolicyEngine<P> {
         let cap = self.policy.session_capacity();
         if cap > 0 {
             d.enable_session_reuse(cap);
+        }
+        // Synthetic display workload (DES only: frame timing lives on
+        // the virtual SoC clock) — every policy contends with it the
+        // same way, so figure comparisons are apples-to-apples.
+        if !clock.is_wall() {
+            if let (Some(cfg), Some(igpu)) = (&self.graphics, self.soc.xpu("igpu")) {
+                d.set_graphics(GraphicsSim::new(cfg, igpu));
+            }
         }
         self.policy.on_start();
         self.active = Some(d);
@@ -413,5 +490,9 @@ impl<P: SchedPolicy> EngineCore for PolicyEngine<P> {
 
     fn last_trace(&self) -> Option<&Trace> {
         self.last_trace.as_ref()
+    }
+
+    fn set_graphics(&mut self, cfg: Option<GraphicsConfig>) {
+        self.graphics = cfg;
     }
 }

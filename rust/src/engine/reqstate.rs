@@ -67,6 +67,12 @@ pub struct ReqState {
     pub running: bool,
     /// When the request entered its current wait (for aging, §6.5).
     pub enqueued_at_us: f64,
+    /// When a kernel for this request last completed (admission time
+    /// before the first).  The iGPU duty governor's starvation valve
+    /// keys off this — a request being served every iteration is not
+    /// starved, however old its `enqueued_at_us` grows — while the
+    /// §6.2 wait-ordering keeps using `enqueued_at_us` untouched.
+    pub last_progress_us: f64,
     /// Times this request was preempted (introspection).
     pub preempted: u64,
     /// Preemption already counted for the current wait episode (cleared
@@ -106,6 +112,7 @@ impl ReqState {
         };
         Self {
             enqueued_at_us: req.arrival_us,
+            last_progress_us: req.arrival_us,
             req,
             plan,
             chunk_idx: 0,

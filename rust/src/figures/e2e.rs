@@ -209,8 +209,8 @@ pub fn fig_proactive(
                 Json::obj()
                     .set("workload", name)
                     .set("rate", rate)
-                    .set("agent_norm_ms", pa)
-                    .set("llamacpp_norm_ms", pl)
+                    .set("agent_norm_ms", Json::num_or_null(pa))
+                    .set("llamacpp_norm_ms", Json::num_or_null(pl))
                     .set("agent_tok_s", ta)
                     .set("llamacpp_tok_s", tl)
                     .set("agent_j_tok", ja)
@@ -272,10 +272,10 @@ pub fn fig_mixed(
                 Json::obj()
                     .set("reactive_interval_s", interval)
                     .set("proactive_rate", rate)
-                    .set("agent_reactive_norm_ms", ra_rt)
-                    .set("llamacpp_reactive_norm_ms", rl_rt)
-                    .set("agent_proactive_norm_ms", ra_pro)
-                    .set("llamacpp_proactive_norm_ms", rl_pro)
+                    .set("agent_reactive_norm_ms", Json::num_or_null(ra_rt))
+                    .set("llamacpp_reactive_norm_ms", Json::num_or_null(rl_rt))
+                    .set("agent_proactive_norm_ms", Json::num_or_null(ra_pro))
+                    .set("llamacpp_proactive_norm_ms", Json::num_or_null(rl_pro))
                     .set("agent_preemptions", ra.preemptions as usize)
                     .set("agent_backfills", ra.backfills as usize)
                     .set("agent_j_tok", ra.joules_per_token())
@@ -346,9 +346,7 @@ pub fn flow_trace_mixed(
 pub fn fig_flows(soc: &SocConfig, duration_s: f64, seed: u64) -> Result<Json> {
     // undefined means (no flows in a short trace) serialize as null,
     // never as a bare NaN the results file's consumers would choke on
-    fn num_or_null(v: f64) -> Json {
-        if v.is_finite() { Json::Num(v) } else { Json::Null }
-    }
+    let num_or_null = Json::num_or_null;
     let geo = geo_for_sweeps();
     let trace = flow_trace_mixed(0.06, 0.04, duration_s, seed, &geo);
     let mut rows = vec![];
@@ -434,7 +432,7 @@ pub fn fig_ablation(soc: &SocConfig, duration_s: f64, seed: u64) -> Result<Json>
         rows.push(
             Json::obj()
                 .set("variant", label)
-                .set("reactive_norm_ms", rt)
+                .set("reactive_norm_ms", Json::num_or_null(rt))
                 .set("proactive_tok_s", pt)
                 .set("preemptions", rep.preemptions as usize)
                 .set("backfills", rep.backfills as usize)

@@ -5,7 +5,7 @@
 
 use crate::config::{SocConfig, llama32_3b};
 use crate::model::{decode_iter_cost, gemm_cost, gemv_cost, mha_cost, prefill_layer_cost};
-use crate::soc::{LaunchSpec, SocSim, XpuModel};
+use crate::soc::{KernelClass, LaunchSpec, SocSim, XpuModel};
 use crate::util::bench::Table;
 use crate::util::json::Json;
 
@@ -86,8 +86,8 @@ pub fn fig_contention(soc: &SocConfig) -> Json {
             // co-execute: launch repeatedly within a window (paper
             // methodology) — here both start together; the arbiter
             // stretches memory phases exactly
-            sim.launch(npu, LaunchSpec { timing: ta, reactive: false });
-            sim.launch(igpu, LaunchSpec { timing: tb, reactive: false });
+            sim.launch(npu, LaunchSpec { timing: ta, class: KernelClass::Proactive });
+            sim.launch(igpu, LaunchSpec { timing: tb, class: KernelClass::Proactive });
             let mut done = vec![];
             while sim.next_event_in().is_some() {
                 done.extend(sim.advance_until(sim.now_us + 1e12));

@@ -6,6 +6,7 @@
 //! for recorded paper-vs-measured comparisons.
 
 mod e2e;
+mod energy;
 mod micro;
 mod workflows;
 
@@ -13,6 +14,7 @@ pub use e2e::{
     fig_ablation, fig_flows, fig_mixed, fig_proactive, fig_schemes, flow_trace_mixed,
     mixed_trace,
 };
+pub use energy::fig_energy;
 pub use micro::{fig_affinity, fig_batching, fig_contention};
 pub use workflows::{
     dag_fanout_trace, dag_trace_mixed, edf_contention_trace, fig_workflows,

@@ -42,7 +42,7 @@ fn geo_for_sweeps() -> ModelGeometry {
 }
 
 fn num_or_null(v: f64) -> Json {
-    if v.is_finite() { Json::Num(v) } else { Json::Null }
+    Json::num_or_null(v)
 }
 
 /// Build the mixed workflow-DAG workload: reactive ReAct-style tool

@@ -14,8 +14,10 @@
 //! - [`model`] — model geometry and the analytic kernel cost model
 //!   (FLOPs / bytes / footprint) that feeds predictive annotation.
 //! - [`soc`] — the hetero-SoC substrate: virtual NPU/iGPU/CPU rooflines,
-//!   the shared-DDR bandwidth arbiter, the power model, and the
-//!   discrete-event clock.
+//!   the shared-DDR bandwidth arbiter, the power model with per-class
+//!   energy attribution (reactive / proactive / graphics / idle), the
+//!   synthetic display workload with frame-deadline (jank) accounting,
+//!   and the discrete-event clock.
 //! - [`runtime`] — PJRT CPU client wrapper: loads `artifacts/*.hlo.txt`,
 //!   owns weights and KV caches, executes kernels.
 //! - [`heg`] — the heterogeneous execution graph (paper §5): elastic

@@ -1,7 +1,7 @@
 //! `agent-xpu` — launcher CLI.
 //!
 //! ```text
-//! agent-xpu fig <affinity|contention|batching|schemes|proactive|mixed|flows|workflows|ablation|all>
+//! agent-xpu fig <affinity|contention|batching|schemes|proactive|mixed|flows|workflows|energy|ablation|all>
 //!           [--out results/] [--duration 120] [--seed 7] [--smoke]
 //! agent-xpu run --rate 1.5 --interval 12 --duration 60 [--engine <policy>]
 //! agent-xpu serve --artifacts artifacts/small [--socket /tmp/agent-xpu.sock]
@@ -130,6 +130,13 @@ fn cmd_fig(args: &Args) -> Result<()> {
         // engine family and the fan-out comparison
         let d = if args.bool_or("smoke", false) { 30.0 } else { duration };
         do_fig("fig_workflows", figures::fig_workflows(&soc, d, seed)?)?;
+        ran = true;
+    }
+    if which == "energy" || which == "all" {
+        // --smoke: short run, still the full duty-cap × engine-family
+        // sweep against the 60 Hz display workload
+        let d = if args.bool_or("smoke", false) { 15.0 } else { duration };
+        do_fig("fig_energy", figures::fig_energy(&soc, d, seed)?)?;
         ran = true;
     }
     if which == "ablation" || which == "all" {

@@ -4,7 +4,7 @@
 //! latency, per-turn TTFT, prefix-cache hit-rate, reused vs recomputed
 //! prefill tokens — DESIGN.md §3).
 
-use crate::soc::XpuSnapshot;
+use crate::soc::{CLASS_IDLE, KernelClass, XpuSnapshot};
 use crate::util::json::Json;
 use crate::workload::{FlowId, Priority, ProfileTag, ReqId};
 
@@ -80,6 +80,21 @@ pub struct RunReport {
     pub xpus: Vec<XpuSnapshot>,
     pub makespan_us: f64,
     pub total_energy_j: f64,
+    /// Energy attribution by accounting class: [reactive, proactive,
+    /// graphics, idle] (J) — sums to `total_energy_j`.  Attribution is
+    /// kernel-granular: a decode batch carrying any reactive lane is
+    /// reactive-class.
+    pub energy_by_class: [f64; 4],
+    /// Busy time by kernel class [reactive, proactive, graphics] (µs),
+    /// summed over XPUs.
+    pub busy_by_class: [f64; 3],
+    /// Graphics frames scheduled during the run (rendered + dropped);
+    /// 0 without a display workload.
+    pub frames_scheduled: u64,
+    /// Frames that missed their vsync deadline (finished late, were
+    /// dropped unlaunched, or were aborted mid-render) — the jank the
+    /// paper's "controlled iGPU usage" minimizes.
+    pub frames_missed: u64,
     pub peak_power_w: f64,
     pub mean_bw_gbps: f64,
     /// Proactive-task preemption count (scheduler introspection).
@@ -313,10 +328,41 @@ impl RunReport {
     }
 
     /// Energy per generated token (J/token) — the paper's efficiency
-    /// metric (§8.1).
+    /// metric (§8.1).  0.0 when the run generated no tokens (a
+    /// tool-only or fully-cancelled run has no defined J/token; the
+    /// NaN this used to return leaked into figure JSON as an invalid
+    /// `NaN` token).
     pub fn joules_per_token(&self) -> f64 {
         let t = self.total_tokens();
-        if t == 0 { f64::NAN } else { self.total_energy_j / t as f64 }
+        if t == 0 { 0.0 } else { self.total_energy_j / t as f64 }
+    }
+
+    /// Per-class energy efficiency: the class's attributed kernel
+    /// energy over the tokens its finished LLM requests generated.
+    /// 0.0 when the class generated nothing.
+    pub fn joules_per_token_class(&self, p: Priority) -> f64 {
+        let class = KernelClass::from_reactive(p == Priority::Reactive);
+        let tokens: usize = self
+            .reqs
+            .iter()
+            .filter(|r| r.priority == p && r.finished())
+            .map(|r| r.output_tokens)
+            .sum();
+        if tokens == 0 {
+            0.0
+        } else {
+            self.energy_by_class[class.idx()] / tokens as f64
+        }
+    }
+
+    /// Fraction of scheduled graphics frames that missed their vsync
+    /// deadline (0.0 without a display workload).
+    pub fn frame_miss_rate(&self) -> f64 {
+        if self.frames_scheduled == 0 {
+            0.0
+        } else {
+            self.frames_missed as f64 / self.frames_scheduled as f64
+        }
     }
 
     /// Fraction of the makespan each XPU was busy.
@@ -331,9 +377,7 @@ impl RunReport {
     pub fn to_json(&self) -> Json {
         // Undefined aggregates (no flows ran, no finished requests in a
         // class, …) serialize as null — a bare NaN is not valid JSON.
-        fn num_or_null(v: f64) -> Json {
-            if v.is_finite() { Json::Num(v) } else { Json::Null }
-        }
+        let num_or_null = Json::num_or_null;
         let cls = |p: Priority| {
             let a = self.class(p);
             Json::obj()
@@ -376,6 +420,35 @@ impl RunReport {
             .set("prefix_cache_hit_rate", num_or_null(self.prefix_cache_hit_rate()))
             .set("reused_prefix_tokens", self.reused_prefix_tokens())
             .set("recomputed_prefill_tokens", self.recomputed_prefill_tokens());
+        let energy_json = Json::obj()
+            .set("reactive_j", self.energy_by_class[KernelClass::Reactive.idx()])
+            .set("proactive_j", self.energy_by_class[KernelClass::Proactive.idx()])
+            .set("graphics_j", self.energy_by_class[KernelClass::Graphics.idx()])
+            .set("idle_j", self.energy_by_class[CLASS_IDLE])
+            .set(
+                "reactive_j_per_token",
+                self.joules_per_token_class(Priority::Reactive),
+            )
+            .set(
+                "proactive_j_per_token",
+                self.joules_per_token_class(Priority::Proactive),
+            )
+            .set(
+                "reactive_busy_us",
+                self.busy_by_class[KernelClass::Reactive.idx()],
+            )
+            .set(
+                "proactive_busy_us",
+                self.busy_by_class[KernelClass::Proactive.idx()],
+            )
+            .set(
+                "graphics_busy_us",
+                self.busy_by_class[KernelClass::Graphics.idx()],
+            );
+        let graphics_json = Json::obj()
+            .set("frames_scheduled", self.frames_scheduled as usize)
+            .set("frames_missed", self.frames_missed as usize)
+            .set("frame_miss_rate", self.frame_miss_rate());
         Json::obj()
             .set("engine", self.engine.as_str())
             .set("makespan_s", self.makespan_us / 1e6)
@@ -383,6 +456,8 @@ impl RunReport {
             .set("proactive", cls(Priority::Proactive))
             .set("flows", flows_json)
             .set("total_energy_j", self.total_energy_j)
+            .set("energy_by_class", energy_json)
+            .set("graphics", graphics_json)
             .set("peak_power_w", self.peak_power_w)
             .set("joules_per_token", num_or_null(self.joules_per_token()))
             .set("mean_bw_gbps", self.mean_bw_gbps)
@@ -515,6 +590,10 @@ mod tests {
             xpus: vec![],
             makespan_us: 2e6,
             total_energy_j: 10.0,
+            energy_by_class: [4.0, 3.0, 2.0, 1.0],
+            busy_by_class: [1e6, 5e5, 2e5],
+            frames_scheduled: 0,
+            frames_missed: 0,
             peak_power_w: 20.0,
             mean_bw_gbps: 30.0,
             preemptions: 0,
@@ -588,6 +667,53 @@ mod tests {
     fn joules_per_token() {
         let rep = report(vec![req(1, Priority::Proactive, 0.0, 1.0, 2.0, 10, 5)]);
         assert!((rep.joules_per_token() - 2.0).abs() < 1e-9);
+        // 3.0 J of proactive-class energy over the same 5 tokens
+        assert!((rep.joules_per_token_class(Priority::Proactive) - 0.6).abs() < 1e-9);
+        // the reactive class generated nothing: guarded, not NaN
+        assert_eq!(rep.joules_per_token_class(Priority::Reactive), 0.0);
+    }
+
+    /// Satellite regression: a zero-token run (tool-only flow, or
+    /// everything cancelled) used to put `NaN` into figure JSON via
+    /// `joules_per_token`.
+    #[test]
+    fn zero_token_and_tool_only_runs_have_guarded_energy_metrics() {
+        // tool-only flow: one finished tool node, zero generated tokens
+        let mut tool = flow_req(1, 1, 0, 0.0, 5_000.0, 8, 0);
+        tool.tool = true;
+        tool.output_tokens = 0;
+        let rep = report(vec![tool]);
+        assert_eq!(rep.total_tokens(), 0);
+        assert_eq!(rep.joules_per_token(), 0.0, "guarded, not NaN");
+        assert_eq!(rep.joules_per_token_class(Priority::Reactive), 0.0);
+        assert_eq!(rep.frame_miss_rate(), 0.0, "no frames: rate 0, not NaN");
+        let text = rep.to_json().to_string();
+        assert!(!text.contains("NaN") && !text.contains("inf"), "{text}");
+        Json::parse(&text).expect("tool-only report parses");
+
+        // fully-empty run
+        let empty = report(vec![]);
+        assert_eq!(empty.joules_per_token(), 0.0);
+        Json::parse(&empty.to_json().to_string()).expect("empty report parses");
+    }
+
+    #[test]
+    fn report_json_carries_per_class_energy_and_graphics() {
+        let mut rep = report(vec![req(1, Priority::Reactive, 0.0, 1000.0, 2000.0, 10, 5)]);
+        rep.frames_scheduled = 10;
+        rep.frames_missed = 3;
+        let j = rep.to_json();
+        let e = j.get("energy_by_class").unwrap();
+        assert!((e.get("reactive_j").unwrap().as_f64().unwrap() - 4.0).abs() < 1e-9);
+        assert!((e.get("idle_j").unwrap().as_f64().unwrap() - 1.0).abs() < 1e-9);
+        // 4.0 reactive J over 5 reactive tokens
+        assert!(
+            (e.get("reactive_j_per_token").unwrap().as_f64().unwrap() - 0.8).abs() < 1e-9
+        );
+        let g = j.get("graphics").unwrap();
+        assert_eq!(g.get("frames_scheduled").unwrap().as_usize().unwrap(), 10);
+        assert!((g.get("frame_miss_rate").unwrap().as_f64().unwrap() - 0.3).abs() < 1e-9);
+        Json::parse(&j.to_string()).expect("round-trips");
     }
 
     #[test]

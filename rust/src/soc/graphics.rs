@@ -1,0 +1,305 @@
+//! Synthetic graphics workload: the display frames the paper's
+//! "controlled iGPU usage" claim protects (§1, §8.1).
+//!
+//! A [`GraphicsSim`] renders one frame per vsync period on the iGPU.
+//! Each frame is an ordinary SoC kernel — it occupies the iGPU slot and
+//! draws DDR bandwidth through the shared arbiter, so agentic kernels
+//! and frames stretch each other exactly like any co-executing pair.
+//! Interference shows up as *jank*: a frame misses when it finishes
+//! after its vsync deadline (the next frame's due instant plus one
+//! period), is dropped because its deadline passed before it could even
+//! launch (the iGPU was held by an agentic kernel), or is aborted
+//! mid-render by a preempting policy.
+//!
+//! The driver services frames with compositor priority: a due frame
+//! launches the moment the iGPU is free, *before* the scheduling policy
+//! gets its decision pass.  What the scheduler controls is how often
+//! the iGPU is free — the `igpu_duty_cap` / `yield_to_graphics` knobs
+//! (see `SchedPolicy::igpu_proactive_grant`).
+//!
+//! Virtual-clock (DES) runs only: frame timing lives on the simulated
+//! SoC clock.
+
+use crate::config::XpuConfig;
+
+use super::sim::{Completion, KernelClass, LaunchSpec, RunId, SocSim};
+use super::xpu::KernelTiming;
+
+const EPS: f64 = 1e-6;
+
+/// Shape of the synthetic display workload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraphicsConfig {
+    /// Refresh rate (frames per second).
+    pub fps: f64,
+    /// Compute per frame (FLOPs on the iGPU's GEMM roofline).
+    pub frame_flops: f64,
+    /// DDR traffic per frame (bytes) — contends like any kernel.
+    pub frame_bytes: f64,
+    /// Power draw while a frame renders (W).
+    pub render_power_w: f64,
+}
+
+impl Default for GraphicsConfig {
+    /// A light desktop compositor at 60 Hz: ~2-3 ms standalone per
+    /// 16.7 ms period (≈ 16 % iGPU duty, ~150 MB of DDR traffic per
+    /// frame) — plenty of headroom alone, janky the moment agentic
+    /// kernels squat on the iGPU across vsync.
+    fn default() -> Self {
+        Self {
+            fps: 60.0,
+            frame_flops: 2.0e10,
+            frame_bytes: 1.5e8,
+            render_power_w: 12.0,
+        }
+    }
+}
+
+impl GraphicsConfig {
+    pub fn period_us(&self) -> f64 {
+        1e6 / self.fps
+    }
+
+    /// Standalone roofline timing of one frame on the iGPU.  Unlike
+    /// agentic kernels this is *not* derated by `util_cap` — the cap
+    /// exists to preserve graphics throughput, not to tax it.
+    pub fn frame_timing(&self, igpu: &XpuConfig) -> KernelTiming {
+        let tc_us =
+            self.frame_flops / (igpu.peak_tflops * 1e12 * igpu.gemm_efficiency) * 1e6;
+        let tm_us = self.frame_bytes / (igpu.max_bw_gbps * 1e9) * 1e6;
+        let body = (tc_us + igpu.launch_overhead_us).max(tm_us);
+        let bw_gbps = if body > 0.0 {
+            (self.frame_bytes / (body * 1e-6) / 1e9).min(igpu.max_bw_gbps)
+        } else {
+            0.0
+        };
+        KernelTiming { tc_us, tm_us, nominal_us: body, bw_gbps, power_w: self.render_power_w }
+    }
+}
+
+/// Frame scheduler + jank accounting over one run.
+#[derive(Debug, Clone)]
+pub struct GraphicsSim {
+    timing: KernelTiming,
+    period_us: f64,
+    /// Due instant of the next frame not yet launched.
+    next_due_us: f64,
+    /// In-flight frame: (sim run id, vsync deadline).
+    inflight: Option<(RunId, f64)>,
+    /// Frames scheduled so far: launched + dropped.
+    pub frames_scheduled: u64,
+    /// Frames that missed their deadline (late, dropped, or aborted).
+    pub frames_missed: u64,
+}
+
+impl GraphicsSim {
+    pub fn new(cfg: &GraphicsConfig, igpu: &XpuConfig) -> Self {
+        Self {
+            timing: cfg.frame_timing(igpu),
+            period_us: cfg.period_us(),
+            next_due_us: 0.0,
+            inflight: None,
+            frames_scheduled: 0,
+            frames_missed: 0,
+        }
+    }
+
+    pub fn period_us(&self) -> f64 {
+        self.period_us
+    }
+
+    /// The next instant the DES must stop at to launch a frame
+    /// (`None` while one is in flight — the next event is then its
+    /// completion, which the SoC already tracks).
+    pub fn next_launch_due(&self) -> Option<f64> {
+        match self.inflight {
+            Some(_) => None,
+            None => Some(self.next_due_us),
+        }
+    }
+
+    /// Would a kernel of `nominal_us` launched at `now_us` run past the
+    /// next frame's due instant?  The `yield_to_graphics` gate's
+    /// question.
+    pub fn would_delay_next_frame(&self, now_us: f64, nominal_us: f64) -> bool {
+        now_us + nominal_us > self.next_due_us + EPS
+    }
+
+    /// Launch the due frame if the iGPU is free, dropping (and counting
+    /// as missed) any backlog whose deadline already passed unlaunched.
+    pub fn try_launch(&mut self, sim: &mut SocSim, igpu: usize) {
+        if self.inflight.is_some() {
+            return;
+        }
+        let now = sim.now_us;
+        // Frame k (due t_k) is hopeless once t_k + period passes without
+        // a launch: the compositor drops it — one miss, no render cost.
+        while self.next_due_us + self.period_us <= now + EPS {
+            self.frames_scheduled += 1;
+            self.frames_missed += 1;
+            self.next_due_us += self.period_us;
+        }
+        if now + EPS < self.next_due_us || sim.busy(igpu) {
+            return;
+        }
+        let run = sim.launch(
+            igpu,
+            LaunchSpec { timing: self.timing, class: KernelClass::Graphics },
+        );
+        self.frames_scheduled += 1;
+        self.inflight = Some((run, self.next_due_us + self.period_us));
+        self.next_due_us += self.period_us;
+    }
+
+    /// Fold a kernel completion; returns true when it was the in-flight
+    /// frame (and accounts the deadline miss if it finished late).
+    pub fn on_completion(&mut self, c: &Completion) -> bool {
+        match self.inflight {
+            Some((run, deadline)) if run == c.id => {
+                if c.finished_us > deadline + EPS {
+                    self.frames_missed += 1;
+                }
+                self.inflight = None;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// A policy aborted the in-flight frame (scheme-(a) style instant
+    /// preemption): it never reaches the display — a miss.  Returns
+    /// true when `run` was the frame.
+    pub fn on_abort(&mut self, run: RunId) -> bool {
+        match self.inflight {
+            Some((r, _)) if r == run => {
+                self.frames_missed += 1;
+                self.inflight = None;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Jank rate so far: missed / scheduled (0 before the first frame).
+    pub fn frame_miss_rate(&self) -> f64 {
+        if self.frames_scheduled == 0 {
+            0.0
+        } else {
+            self.frames_missed as f64 / self.frames_scheduled as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::default_soc;
+    use crate::model::gemv_cost;
+
+    fn setup() -> (SocSim, GraphicsSim, usize) {
+        let soc = default_soc();
+        let sim = SocSim::new(&soc);
+        let igpu = sim.xpu_index("igpu").unwrap();
+        let g = GraphicsSim::new(&GraphicsConfig::default(), soc.xpu("igpu").unwrap());
+        (sim, g, igpu)
+    }
+
+    /// Drive sim + graphics together until `t_end` (the driver's loop
+    /// in miniature).
+    fn drive_until(sim: &mut SocSim, g: &mut GraphicsSim, igpu: usize, t_end: f64) {
+        loop {
+            g.try_launch(sim, igpu);
+            let next_frame = g.next_launch_due().filter(|&t| t > sim.now_us + EPS);
+            let next_fin = sim.next_event_in().map(|dt| sim.now_us + dt);
+            let target = match (next_fin, next_frame) {
+                (Some(f), Some(fr)) => f.min(fr),
+                (Some(f), None) => f,
+                (None, Some(fr)) => fr,
+                (None, None) => t_end,
+            };
+            if target >= t_end {
+                sim.advance_until(t_end);
+                return;
+            }
+            sim.advance_until(target);
+            // fold any frame completion
+            while let Some((run, _)) = g.inflight {
+                if sim.xpu_of(run).is_some() {
+                    break; // still running
+                }
+                // completed exactly at now
+                g.on_completion(&Completion {
+                    id: run,
+                    xpu: igpu,
+                    started_us: 0.0,
+                    finished_us: sim.now_us,
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn frames_render_on_time_on_an_idle_soc() {
+        let (mut sim, mut g, igpu) = setup();
+        drive_until(&mut sim, &mut g, igpu, 500_000.0);
+        // ~30 frames at 60 Hz over 0.5 s, none missed
+        assert!(g.frames_scheduled >= 29, "{} frames", g.frames_scheduled);
+        assert_eq!(g.frames_missed, 0);
+        assert_eq!(g.frame_miss_rate(), 0.0);
+        // frames carry real energy, attributed to the graphics class
+        assert!(sim.energy_by_class()[KernelClass::Graphics.idx()] > 0.0);
+    }
+
+    #[test]
+    fn igpu_squatter_drops_frames() {
+        let (mut sim, mut g, igpu) = setup();
+        // a long agentic kernel holds the iGPU across several vsyncs
+        let mut t = sim.xpus[igpu].timing(&gemv_cost(8192, 8192));
+        t.tc_us = 80_000.0; // stretch it to ~5 frame periods
+        t.nominal_us = 80_000.0;
+        sim.launch(igpu, LaunchSpec { timing: t, class: KernelClass::Proactive });
+        drive_until(&mut sim, &mut g, igpu, 100_000.0);
+        assert!(
+            g.frames_missed >= 3,
+            "frames due under the squatter must miss ({} missed)",
+            g.frames_missed
+        );
+        assert!(g.frame_miss_rate() > 0.0);
+    }
+
+    #[test]
+    fn aborted_frame_counts_as_missed() {
+        let (mut sim, mut g, igpu) = setup();
+        g.try_launch(&mut sim, igpu);
+        let (run, _) = g.inflight.expect("frame launched at t=0");
+        sim.cancel(igpu);
+        assert!(g.on_abort(run));
+        assert_eq!(g.frames_missed, 1);
+        assert!(g.inflight.is_none());
+        assert!(g.next_launch_due().is_some(), "the next frame still schedules");
+    }
+
+    #[test]
+    fn frame_timing_ignores_util_cap() {
+        let soc = default_soc();
+        let igpu = soc.xpu("igpu").unwrap();
+        let cfg = GraphicsConfig::default();
+        let t = cfg.frame_timing(igpu);
+        assert!(t.nominal_us < cfg.period_us() * 0.5, "a lone frame fits easily");
+        // derate-free: compute time uses the full GEMM roofline
+        let full_rate = igpu.peak_tflops * 1e12 * igpu.gemm_efficiency;
+        let expect_tc = cfg.frame_flops / full_rate * 1e6;
+        assert!((t.tc_us - expect_tc).abs() < 1e-6);
+    }
+
+    #[test]
+    fn would_delay_detects_vsync_overlap() {
+        let (_sim, g, _igpu) = setup();
+        // next frame due at t=0: anything launched now overlaps
+        assert!(g.would_delay_next_frame(0.0, 1_000.0));
+        let mut g2 = g.clone();
+        g2.next_due_us = 16_667.0;
+        assert!(!g2.would_delay_next_frame(0.0, 10_000.0));
+        assert!(g2.would_delay_next_frame(0.0, 20_000.0));
+    }
+}

@@ -1,6 +1,9 @@
 //! The hetero-SoC substrate: virtual accelerators with roofline timing,
 //! a shared-DDR bandwidth arbiter with proportional contention, a power
-//! model, and the discrete-event simulator the engines schedule against.
+//! model with per-class energy attribution (reactive / proactive /
+//! graphics / idle), a synthetic display workload with frame-deadline
+//! (jank) accounting, and the discrete-event simulator the engines
+//! schedule against.
 //!
 //! DESIGN.md §1 explains the substitution: the paper's Intel Core Ultra
 //! NPU/iGPU are unavailable, so *timing* comes from these calibrated
@@ -8,8 +11,13 @@
 //! All experiment figures are reported in this virtual time, which makes
 //! the reproduction deterministic.
 
+mod graphics;
 mod sim;
 mod xpu;
 
-pub use sim::{Completion, LaunchSpec, RunId, SocSim, XpuSnapshot};
+pub use graphics::{GraphicsConfig, GraphicsSim};
+pub use sim::{
+    CLASS_IDLE, Completion, DUTY_WINDOW_US, KernelClass, LaunchSpec, RunId, SocSim,
+    XpuSnapshot,
+};
 pub use xpu::{KernelTiming, XpuModel};

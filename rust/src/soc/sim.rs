@@ -20,13 +20,48 @@ pub type RunId = u64;
 
 const EPS: f64 = 1e-6;
 
+/// Sliding window over which per-XPU agentic duty is measured (two
+/// half-overlapping buckets; see [`SocSim::windowed_duty`]).  100 ms —
+/// several frame periods of a 60 Hz display, a few decode iterations.
+/// Public so the duty governor can pace its veto-retry wake-ups
+/// against the decay rate.
+pub const DUTY_WINDOW_US: f64 = 100_000.0;
+
+/// Accounting class of a kernel: who the energy and busy time belong
+/// to.  The per-class totals (plus idle) are the paper's §8.1 energy
+/// attribution; index order is the layout of
+/// [`SocSim::energy_by_class`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelClass {
+    /// Real-time agentic work (user-facing chat turns).
+    Reactive = 0,
+    /// Best-effort agentic work (background tasks).
+    Proactive = 1,
+    /// Display frames of the synthetic graphics workload.
+    Graphics = 2,
+}
+
+/// Index of the idle row in [`SocSim::energy_by_class`].
+pub const CLASS_IDLE: usize = 3;
+
+impl KernelClass {
+    pub fn from_reactive(reactive: bool) -> Self {
+        if reactive { KernelClass::Reactive } else { KernelClass::Proactive }
+    }
+
+    pub fn idx(self) -> usize {
+        self as usize
+    }
+}
+
 /// What the engine hands the simulator at kernel launch.
 #[derive(Debug, Clone)]
 pub struct LaunchSpec {
     pub timing: KernelTiming,
-    /// Reactive (real-time) or proactive (best-effort) — recorded for
-    /// traces and pressure policies.
-    pub reactive: bool,
+    /// Accounting class (reactive / proactive / graphics) — drives the
+    /// per-class energy/busy attribution and the duty window, and is
+    /// recorded for traces and pressure policies.
+    pub class: KernelClass,
 }
 
 /// A finished kernel execution.
@@ -46,8 +81,9 @@ struct Run {
     bw_gbps: f64,
     power_w: f64,
     started_us: f64,
-    #[allow(dead_code)]
-    reactive: bool,
+    /// Accounting class — consumed by `integrate` for the per-class
+    /// energy/busy attribution and the agentic duty window.
+    class: KernelClass,
     /// tm > tc at launch (for selective pairing, §6.4).
     memory_bound: bool,
 }
@@ -70,7 +106,13 @@ pub struct XpuSnapshot {
     pub name: String,
     pub busy_us: f64,
     pub energy_j: f64,
+    /// Kernels that launched and were *not* aborted (completed, or
+    /// still in flight at snapshot time).
     pub kernels: u64,
+    /// Kernels aborted via [`SocSim::cancel`] — counted separately so
+    /// abort-heavy runs (scheme-(a) preemption) never over-report
+    /// completed work.
+    pub aborted: u64,
 }
 
 /// The simulated SoC.
@@ -83,6 +125,19 @@ pub struct SocSim {
     busy_us: Vec<f64>,
     energy_j: Vec<f64>,
     kernels: Vec<u64>,
+    aborted: Vec<u64>,
+    /// Energy by accounting class: [reactive, proactive, graphics,
+    /// idle] (J).  Sums to `total_energy_j` at all times.
+    class_energy_j: [f64; 4],
+    /// Busy time by kernel class: [reactive, proactive, graphics] (µs),
+    /// summed over XPUs.
+    class_busy_us: [f64; 3],
+    /// Agentic (non-graphics) busy µs per XPU in the previous full duty
+    /// window / the current partial one — the two-bucket sliding window
+    /// behind [`SocSim::windowed_duty`].
+    duty_prev: Vec<f64>,
+    duty_cur: Vec<f64>,
+    duty_cur_start: f64,
     /// Σ over time of (achieved DDR bandwidth · dt) for mean-BW reporting.
     bw_integral_gb: f64,
     pub peak_power_w: f64,
@@ -102,6 +157,12 @@ impl SocSim {
             busy_us: vec![0.0; n],
             energy_j: vec![0.0; n],
             kernels: vec![0; n],
+            aborted: vec![0; n],
+            class_energy_j: [0.0; 4],
+            class_busy_us: [0.0; 3],
+            duty_prev: vec![0.0; n],
+            duty_cur: vec![0.0; n],
+            duty_cur_start: 0.0,
             bw_integral_gb: 0.0,
             peak_power_w: 0.0,
         }
@@ -170,7 +231,7 @@ impl SocSim {
             bw_gbps: spec.timing.bw_gbps,
             power_w: spec.timing.power_w,
             started_us: self.now_us,
-            reactive: spec.reactive,
+            class: spec.class,
             memory_bound: spec.timing.tm_us > spec.timing.tc_us,
         });
         self.kernels[xpu] += 1;
@@ -178,9 +239,16 @@ impl SocSim {
     }
 
     /// Abort the kernel on `xpu` (scheme-(a) baseline: instant preemption
-    /// discards in-flight work).  Returns the aborted run id.
+    /// discards in-flight work).  Returns the aborted run id.  The
+    /// launch-time `kernels` count is rolled back and the abort counted
+    /// separately, so `XpuSnapshot::kernels` never over-reports
+    /// completed work on abort-heavy runs.
     pub fn cancel(&mut self, xpu: usize) -> Option<RunId> {
-        self.slots[xpu].take().map(|r| r.id)
+        self.slots[xpu].take().map(|r| {
+            self.kernels[xpu] -= 1;
+            self.aborted[xpu] += 1;
+            r.id
+        })
     }
 
     /// Which XPU `run` is executing on, if it is still in flight.
@@ -255,6 +323,7 @@ impl SocSim {
         if dt <= 0.0 {
             return;
         }
+        self.roll_duty_window();
         let mut power_now = 0.0;
         let mut achieved_bw = 0.0;
         for (i, slot) in self.slots.iter_mut().enumerate() {
@@ -267,17 +336,58 @@ impl SocSim {
                     r.tm_left = (r.tm_left - dt * s).max(0.0);
                     self.busy_us[i] += dt;
                     self.energy_j[i] += r.power_w * dt * 1e-6;
+                    self.class_energy_j[r.class.idx()] += r.power_w * dt * 1e-6;
+                    self.class_busy_us[r.class.idx()] += dt;
+                    if r.class != KernelClass::Graphics {
+                        self.duty_cur[i] += dt;
+                    }
                     power_now += r.power_w;
                 }
                 None => {
                     let idle = self.xpus[i].cfg.idle_power_w;
                     self.energy_j[i] += idle * dt * 1e-6;
+                    self.class_energy_j[CLASS_IDLE] += idle * dt * 1e-6;
                     power_now += idle;
                 }
             }
         }
         self.bw_integral_gb += achieved_bw * dt * 1e-6;
         self.peak_power_w = self.peak_power_w.max(power_now);
+    }
+
+    /// Advance the two-bucket duty window to cover `now_us`.
+    fn roll_duty_window(&mut self) {
+        while self.now_us - self.duty_cur_start >= DUTY_WINDOW_US {
+            std::mem::swap(&mut self.duty_prev, &mut self.duty_cur);
+            for v in self.duty_cur.iter_mut() {
+                *v = 0.0;
+            }
+            self.duty_cur_start += DUTY_WINDOW_US;
+        }
+    }
+
+    /// Windowed *agentic* duty of `xpu`: the fraction of the trailing
+    /// ~[`DUTY_WINDOW_US`] this XPU spent on reactive/proactive kernels
+    /// (graphics frames excluded — the duty cap exists to protect
+    /// them).  Two-bucket sliding-window estimate: the previous full
+    /// window decays linearly as the current one fills.
+    pub fn windowed_duty(&self, xpu: usize) -> f64 {
+        let elapsed = (self.now_us - self.duty_cur_start).clamp(0.0, DUTY_WINDOW_US);
+        let prev_weight = (DUTY_WINDOW_US - elapsed) / DUTY_WINDOW_US;
+        ((self.duty_prev[xpu] * prev_weight + self.duty_cur[xpu]) / DUTY_WINDOW_US)
+            .min(1.0)
+    }
+
+    /// Energy by accounting class: [reactive, proactive, graphics,
+    /// idle] (J).  Invariant: sums to [`SocSim::total_energy_j`].
+    pub fn energy_by_class(&self) -> [f64; 4] {
+        self.class_energy_j
+    }
+
+    /// Busy time by kernel class [reactive, proactive, graphics] (µs),
+    /// summed over XPUs.
+    pub fn busy_by_class(&self) -> [f64; 3] {
+        self.class_busy_us
     }
 
     /// Mean achieved DDR bandwidth since t=0 (GB/s).
@@ -303,6 +413,7 @@ impl SocSim {
                 busy_us: self.busy_us[i],
                 energy_j: self.energy_j[i],
                 kernels: self.kernels[i],
+                aborted: self.aborted[i],
             })
             .collect()
     }
@@ -335,7 +446,7 @@ mod tests {
         let mut s = sim();
         let npu = s.xpu_index("npu").unwrap();
         let t = s.xpus[npu].timing(&gemm_cost(1024, 1024, 1024));
-        s.launch(npu, LaunchSpec { timing: t, reactive: false });
+        s.launch(npu, LaunchSpec { timing: t, class: KernelClass::Proactive });
         let done = run_to_completion(&mut s);
         assert_eq!(done.len(), 1);
         assert!(
@@ -358,8 +469,8 @@ mod tests {
         let g = gemm_cost(2048, 2048, 2048);
         let tn = s.xpus[npu].timing(&g);
         let ti = s.xpus[igpu].timing(&g);
-        s.launch(npu, LaunchSpec { timing: tn, reactive: false });
-        s.launch(igpu, LaunchSpec { timing: ti, reactive: false });
+        s.launch(npu, LaunchSpec { timing: tn, class: KernelClass::Proactive });
+        s.launch(igpu, LaunchSpec { timing: ti, class: KernelClass::Proactive });
         let done = run_to_completion(&mut s);
         for c in &done {
             let nominal = if c.xpu == npu { tn.nominal_us } else { ti.nominal_us };
@@ -372,8 +483,8 @@ mod tests {
         let v = gemv_cost(8192, 8192);
         let tn = s.xpus[npu].timing(&v);
         let ti = s.xpus[igpu].timing(&v);
-        s.launch(npu, LaunchSpec { timing: tn, reactive: false });
-        s.launch(igpu, LaunchSpec { timing: ti, reactive: false });
+        s.launch(npu, LaunchSpec { timing: tn, class: KernelClass::Proactive });
+        s.launch(igpu, LaunchSpec { timing: ti, class: KernelClass::Proactive });
         let done = run_to_completion(&mut s);
         let mut stretched = 0;
         for c in &done {
@@ -392,7 +503,7 @@ mod tests {
         assert_eq!(s.memory_pressure(), 0.0);
         let igpu = s.xpu_index("igpu").unwrap();
         let t = s.xpus[igpu].timing(&gemv_cost(8192, 8192));
-        s.launch(igpu, LaunchSpec { timing: t, reactive: false });
+        s.launch(igpu, LaunchSpec { timing: t, class: KernelClass::Proactive });
         let p = s.memory_pressure();
         assert!(p > 0.5, "GEMV pressure {p}");
         run_to_completion(&mut s);
@@ -404,11 +515,117 @@ mod tests {
         let mut s = sim();
         let npu = s.xpu_index("npu").unwrap();
         let t = s.xpus[npu].timing(&gemm_cost(2048, 2048, 2048));
-        let id = s.launch(npu, LaunchSpec { timing: t, reactive: false });
+        let id = s.launch(npu, LaunchSpec { timing: t, class: KernelClass::Proactive });
         assert!(s.busy(npu));
         assert_eq!(s.cancel(npu), Some(id));
         assert!(!s.busy(npu));
         assert!(run_to_completion(&mut s).is_empty());
+    }
+
+    /// Regression (accounting bugfix): an aborted kernel must not be
+    /// reported as completed — abort-heavy scheme-(a) runs used to
+    /// over-report `XpuSnapshot::kernels`.
+    #[test]
+    fn cancel_mid_flight_counts_aborted_not_completed() {
+        let mut s = sim();
+        let npu = s.xpu_index("npu").unwrap();
+        let t = s.xpus[npu].timing(&gemm_cost(2048, 2048, 2048));
+        s.launch(npu, LaunchSpec { timing: t, class: KernelClass::Reactive });
+        // run part of the kernel, then abort it mid-flight
+        s.advance_until(t.nominal_us * 0.25);
+        assert!(s.cancel(npu).is_some());
+        // relaunch and complete a second kernel
+        let id2 = s.launch(npu, LaunchSpec { timing: t, class: KernelClass::Reactive });
+        let done = run_to_completion(&mut s);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, id2);
+        let n = &s.snapshot()[npu];
+        assert_eq!(n.kernels, 1, "only the completed kernel counts");
+        assert_eq!(n.aborted, 1, "the abort is counted separately");
+    }
+
+    /// Satellite: energy spent by a kernel before `cancel` stays on the
+    /// books (partial work drew real power), attributed to its class.
+    #[test]
+    fn partial_kernel_energy_survives_cancel() {
+        let mut s = sim();
+        let npu = s.xpu_index("npu").unwrap();
+        let t = s.xpus[npu].timing(&gemm_cost(2048, 2048, 2048));
+        s.launch(npu, LaunchSpec { timing: t, class: KernelClass::Proactive });
+        let dt = t.nominal_us * 0.5;
+        s.advance_until(dt);
+        s.cancel(npu);
+        let active = s.xpus[npu].cfg.active_power_w;
+        let expect_j = active * dt * 1e-6;
+        let got = s.energy_by_class()[KernelClass::Proactive.idx()];
+        assert!(
+            (got - expect_j).abs() / expect_j < 0.01,
+            "partial proactive energy {got} want ~{expect_j}"
+        );
+        assert!((s.busy_by_class()[KernelClass::Proactive.idx()] - dt).abs() < 1.0);
+    }
+
+    /// Satellite: per-class energy attribution (reactive / proactive /
+    /// graphics / idle) sums to `total_energy_j` even while co-executed
+    /// memory phases stretch under DDR contention.
+    #[test]
+    fn class_attribution_sums_to_total_under_contention() {
+        let mut s = sim();
+        let npu = s.xpu_index("npu").unwrap();
+        let igpu = s.xpu_index("igpu").unwrap();
+        // two GEMVs oversubscribe the DDR link (60 + 70 > 89.6 GB/s)
+        let tn = s.xpus[npu].timing(&gemv_cost(8192, 8192));
+        let ti = s.xpus[igpu].timing(&gemv_cost(8192, 8192));
+        s.launch(npu, LaunchSpec { timing: tn, class: KernelClass::Reactive });
+        s.launch(igpu, LaunchSpec { timing: ti, class: KernelClass::Graphics });
+        run_to_completion(&mut s);
+        // idle tail so every class row is non-zero
+        s.advance_until(s.now_us + 50_000.0);
+        let by_class = s.energy_by_class();
+        assert!(by_class[KernelClass::Reactive.idx()] > 0.0);
+        assert!(by_class[KernelClass::Graphics.idx()] > 0.0);
+        assert!(by_class[CLASS_IDLE] > 0.0);
+        let sum: f64 = by_class.iter().sum();
+        let total = s.total_energy_j();
+        assert!(
+            (sum - total).abs() < 1e-9 * total.max(1.0),
+            "class sum {sum} != total {total}"
+        );
+        let busy = s.busy_by_class();
+        assert!(busy[KernelClass::Reactive.idx()] > 0.0);
+        assert!(busy[KernelClass::Graphics.idx()] > 0.0);
+        assert_eq!(busy[KernelClass::Proactive.idx()], 0.0);
+    }
+
+    /// Satellite: with nothing running, all accrued energy is idle-class.
+    #[test]
+    fn idle_power_accrues_to_the_idle_class() {
+        let mut s = sim();
+        s.advance_until(100_000.0);
+        let by_class = s.energy_by_class();
+        let total = s.total_energy_j();
+        assert!(total > 0.0);
+        assert!((by_class[CLASS_IDLE] - total).abs() < 1e-12);
+        assert_eq!(by_class[KernelClass::Reactive.idx()], 0.0);
+        assert_eq!(s.busy_by_class(), [0.0; 3]);
+    }
+
+    /// The duty window tracks agentic occupancy and excludes graphics.
+    #[test]
+    fn windowed_duty_tracks_agentic_busy_only() {
+        let mut s = sim();
+        let igpu = s.xpu_index("igpu").unwrap();
+        let t = s.xpus[igpu].timing(&gemv_cost(8192, 8192));
+        s.launch(igpu, LaunchSpec { timing: t, class: KernelClass::Proactive });
+        s.advance_until(20_000.0_f64.min(t.nominal_us * 0.9));
+        assert!(s.windowed_duty(igpu) > 0.0, "agentic kernel fills the window");
+        run_to_completion(&mut s);
+
+        let mut g = sim();
+        let t = g.xpus[igpu].timing(&gemv_cost(8192, 8192));
+        g.launch(igpu, LaunchSpec { timing: t, class: KernelClass::Graphics });
+        g.advance_until(20_000.0_f64.min(t.nominal_us * 0.9));
+        assert_eq!(g.windowed_duty(igpu), 0.0, "graphics never charges the duty cap");
     }
 
     #[test]
@@ -429,8 +646,8 @@ mod tests {
             let igpu = s.xpu_index("igpu").unwrap();
             let t1 = s.xpus[npu].timing(&gemm_cost(1024, 1024, 1024));
             let t2 = s.xpus[igpu].timing(&gemv_cost(8192, 8192));
-            s.launch(npu, LaunchSpec { timing: t1, reactive: true });
-            s.launch(igpu, LaunchSpec { timing: t2, reactive: false });
+            s.launch(npu, LaunchSpec { timing: t1, class: KernelClass::Reactive });
+            s.launch(igpu, LaunchSpec { timing: t2, class: KernelClass::Proactive });
             run_to_completion(&mut s)
         };
         assert_eq!(mk(), mk());
@@ -441,7 +658,7 @@ mod tests {
         let mut s = sim();
         let npu = s.xpu_index("npu").unwrap();
         let t = s.xpus[npu].timing(&gemm_cost(1024, 1024, 1024));
-        s.launch(npu, LaunchSpec { timing: t, reactive: false });
+        s.launch(npu, LaunchSpec { timing: t, class: KernelClass::Proactive });
         run_to_completion(&mut s);
         let snap = s.snapshot();
         let n = &snap[npu];
@@ -458,7 +675,7 @@ mod tests {
         let mut s = sim();
         let igpu = s.xpu_index("igpu").unwrap();
         let t = s.xpus[igpu].timing(&gemv_cost(8192, 8192));
-        s.launch(igpu, LaunchSpec { timing: t, reactive: false });
+        s.launch(igpu, LaunchSpec { timing: t, class: KernelClass::Proactive });
         run_to_completion(&mut s);
         assert!(s.mean_bandwidth_gbps() > 10.0);
         assert!(s.current_bandwidth_gbps() == 0.0);
@@ -469,7 +686,7 @@ mod tests {
     fn double_launch_panics() {
         let mut s = sim();
         let t = s.xpus[0].timing(&gemm_cost(64, 64, 64));
-        s.launch(0, LaunchSpec { timing: t, reactive: false });
-        s.launch(0, LaunchSpec { timing: t, reactive: false });
+        s.launch(0, LaunchSpec { timing: t, class: KernelClass::Proactive });
+        s.launch(0, LaunchSpec { timing: t, class: KernelClass::Proactive });
     }
 }

@@ -36,6 +36,13 @@ impl Json {
         self
     }
 
+    /// A finite number, or `null` for an undefined (NaN/infinite)
+    /// aggregate — the canonical way figure harnesses serialize means
+    /// that may not exist (RFC 8259 has no NaN/Infinity tokens).
+    pub fn num_or_null(v: f64) -> Json {
+        if v.is_finite() { Json::Num(v) } else { Json::Null }
+    }
+
     // -- typed accessors ------------------------------------------------
 
     pub fn get(&self, key: &str) -> Result<&Json> {
@@ -373,7 +380,13 @@ impl fmt::Display for Json {
             Json::Null => write!(f, "null"),
             Json::Bool(b) => write!(f, "{b}"),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9e15 {
+                if !n.is_finite() {
+                    // RFC 8259 has no NaN/Infinity tokens; `{NaN}` used
+                    // to serialize as the invalid literal `NaN` and
+                    // poison figure output.  An undefined number
+                    // degrades to null (round-trips as `Json::Null`).
+                    write!(f, "null")
+                } else if n.fract() == 0.0 && n.abs() < 9e15 {
                     write!(f, "{}", *n as i64)
                 } else {
                     write!(f, "{n}")
@@ -489,6 +502,27 @@ mod tests {
     fn integers_serialize_without_fraction() {
         assert_eq!(Json::Num(3.0).to_string(), "3");
         assert_eq!(Json::Num(3.25).to_string(), "3.25");
+    }
+
+    /// Satellite regression: `Num(NaN)`/`Num(±inf)` used to emit the
+    /// invalid tokens `NaN`/`inf` — unparseable by any JSON consumer
+    /// (including this parser).  Non-finite serializes as null and
+    /// round-trips to `Json::Null`.
+    #[test]
+    fn non_finite_numbers_serialize_as_null_and_round_trip() {
+        for v in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let text = Json::Num(v).to_string();
+            assert_eq!(text, "null", "{v} must not leak into JSON");
+            assert_eq!(Json::parse(&text).unwrap(), Json::Null);
+        }
+        // nested: an object carrying an undefined aggregate stays valid
+        let obj = Json::obj().set("mean", f64::NAN).set("ok", 1.5);
+        let back = Json::parse(&obj.to_string()).unwrap();
+        assert_eq!(*back.get("mean").unwrap(), Json::Null);
+        assert_eq!(back.get("ok").unwrap().as_f64().unwrap(), 1.5);
+        // the explicit constructor for harnesses
+        assert_eq!(Json::num_or_null(f64::NAN), Json::Null);
+        assert_eq!(Json::num_or_null(2.0), Json::Num(2.0));
     }
 
     #[test]

@@ -58,6 +58,11 @@ fn fingerprint(rep: &RunReport) -> u64 {
     }
     mix(rep.makespan_us.to_bits());
     mix(rep.total_energy_j.to_bits());
+    for e in rep.energy_by_class {
+        mix(e.to_bits());
+    }
+    mix(rep.frames_scheduled);
+    mix(rep.frames_missed);
     mix(rep.preemptions);
     mix(rep.backfills);
     mix(rep.kv_evictions);
@@ -120,6 +125,15 @@ fn check_lifecycle(rep: &RunReport, trace: &[Request]) {
         );
     }
     assert!(rep.total_energy_j >= 0.0 && rep.total_energy_j.is_finite());
+    // the energy books close: per-class attribution (reactive /
+    // proactive / graphics / idle) sums to the total on every engine
+    let class_sum: f64 = rep.energy_by_class.iter().sum();
+    assert!(
+        (class_sum - rep.total_energy_j).abs() <= 1e-6 * rep.total_energy_j.max(1.0),
+        "energy attribution must close: {} vs {}",
+        class_sum,
+        rep.total_energy_j
+    );
 }
 
 #[test]
@@ -291,6 +305,48 @@ fn registry_engines_reproduce_family_constructors_bit_for_bit() {
                  family constructor"
             );
         }
+    }
+}
+
+/// The display workload is part of the DES: graphics-enabled runs are
+/// exactly as deterministic as bare ones, and the governor knobs at
+/// their defaults change nothing even while frames contend.
+#[test]
+fn graphics_runs_are_deterministic_and_account_frames() {
+    use agent_xpu::soc::GraphicsConfig;
+    for seed in [3, 9] {
+        let trace = random_trace(seed);
+        let run = || {
+            let mut e = AgentXpuEngine::synthetic(
+                geo(),
+                default_soc(),
+                SchedulerConfig::default(),
+            );
+            e.set_graphics(Some(GraphicsConfig::default()));
+            let rep = e.run(trace.clone()).unwrap();
+            check_lifecycle(&rep, &trace);
+            assert!(rep.frames_scheduled > 0, "seed {seed}: frames rendered");
+            (fingerprint(&rep), rep.frames_scheduled, rep.frames_missed)
+        };
+        assert_eq!(run(), run(), "seed {seed}");
+    }
+}
+
+/// The governor engaged (duty cap + vsync yield) on every random trace:
+/// nothing is lost — the starvation valve turns every veto into a
+/// deferral.
+#[test]
+fn engaged_duty_governor_never_loses_requests() {
+    use agent_xpu::soc::GraphicsConfig;
+    for seed in 0..10 {
+        let trace = random_trace(seed);
+        let mut sched = SchedulerConfig::default();
+        sched.igpu_duty_cap = 0.3;
+        sched.yield_to_graphics = true;
+        let mut e = AgentXpuEngine::synthetic(geo(), default_soc(), sched);
+        e.set_graphics(Some(GraphicsConfig::default()));
+        let rep = e.run(trace.clone()).unwrap();
+        check_lifecycle(&rep, &trace);
     }
 }
 
