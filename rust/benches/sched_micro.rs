@@ -1,21 +1,26 @@
 //! Scheduler micro-benchmarks (§6.5 "Synchronization Cost
 //! Minimization"): the coordinator's per-decision costs must be
-//! negligible next to kernel durations (ms).  Targets (DESIGN.md §8):
-//! dispatch decision < 5 µs, DES > 1M events/s equivalents.
-
-use std::collections::HashMap;
+//! negligible next to kernel durations (ms).  The measured trajectory
+//! lives in DESIGN.md §8; each case also lands as a strict-JSON row in
+//! `results/BENCH_micro.json` (see `BenchStats::to_json`) so runs can
+//! be diffed.  `bench macro` is the whole-run companion harness.
 
 use agent_xpu::config::{SchedulerConfig, default_soc, llama32_3b};
 use agent_xpu::coordinator::{AgentXpuEngine, decode_lanes, dispatch_check, resume_order};
-use agent_xpu::engine::{EngineClock, EngineCore, ExecBridge, Phase, registry};
+use agent_xpu::engine::{EngineClock, EngineCore, ExecBridge, Phase, States, registry};
 use agent_xpu::heg::{Annotator, ChunkSpec, plan_chunks};
 use agent_xpu::model::gemv_cost;
 use agent_xpu::soc::{KernelClass, LaunchSpec, SocSim, XpuModel};
-use agent_xpu::util::bench::{bench, black_box};
+use agent_xpu::util::bench::{BenchStats, bench, black_box};
 use agent_xpu::util::json::Json;
 use agent_xpu::workload::{Priority, Request};
 
 fn main() {
+    let mut rows: Vec<BenchStats> = vec![];
+    let mut case = |s: BenchStats| {
+        println!("{}", s.report());
+        rows.push(s);
+    };
     let soc = default_soc();
     let cfg = SchedulerConfig::default();
     let geo = llama32_3b();
@@ -31,14 +36,13 @@ fn main() {
     let cand = ann
         .prefill_kernel(&ChunkSpec { variant: 256, valid: 256, pos: 0, dynamic: false });
     let ct = *cand.timing_on(0);
-    let s = bench("dispatch_check (Algorithm 1)", 1000, 100_000, || {
+    case(bench("dispatch_check (Algorithm 1)", 1000, 100_000, || {
         black_box(dispatch_check(&sim, &cfg, &ct, false));
-    });
-    println!("{}", s.report());
+    }));
 
     // decode batch formation over a 64-request state table
     let bridge = ExecBridge::synthetic(geo.clone());
-    let mut states = HashMap::new();
+    let mut states = States::default();
     for i in 0..64u64 {
         let req = Request {
             id: i,
@@ -55,24 +59,23 @@ fn main() {
         }
         states.insert(i, st);
     }
-    let s = bench("decode_lanes over 64 requests", 1000, 50_000, || {
-        black_box(decode_lanes(&states, 8, true));
-    });
-    println!("{}", s.report());
+    let mut lanes: Vec<u64> = vec![];
+    case(bench("decode_lanes over 64 requests (reused lane buf)", 1000, 50_000, || {
+        black_box(decode_lanes(&states, 8, true, &mut lanes));
+    }));
 
     let mut cands: Vec<u64> =
         states.values().filter(|s| s.phase == Phase::Prefilling).map(|s| s.id()).collect();
-    let s = bench("resume_order over 32 candidates", 200, 10_000, || {
+    case(bench("resume_order over 32 candidates", 200, 10_000, || {
         resume_order(&states, &mut cands, &ann, 0, 1e6, 2e9, true);
         black_box(&cands);
-    });
-    println!("{}", s.report());
+    }));
 
     // resume_order at backlog scale: ETC is now precomputed once per
     // candidate (a keyed vec) instead of re-derived inside the sort
     // comparator — O(n) chunk walks, not O(n log n) — so even a deep
     // proactive backlog ranks within the §8 5 µs decision budget.
-    let mut big_states = HashMap::new();
+    let mut big_states = States::default();
     for i in 0..256u64 {
         let req = Request {
             id: i,
@@ -89,32 +92,28 @@ fn main() {
     }
     let mut big_cands: Vec<u64> = big_states.keys().copied().collect();
     big_cands.sort_unstable();
-    let s = bench("resume_order over 256 candidates (ETC precomputed)", 100, 5_000, || {
+    case(bench("resume_order over 256 candidates (ETC precomputed)", 100, 5_000, || {
         resume_order(&big_states, &mut big_cands, &ann, 0, 1e6, 2e9, true);
         black_box(&big_cands);
-    });
-    println!("{}", s.report());
+    }));
 
-    let s = bench("plan_chunks (2048-token prompt)", 1000, 100_000, || {
+    case(bench("plan_chunks (2048-token prompt)", 1000, 100_000, || {
         black_box(plan_chunks(&geo, 2048, 512));
-    });
-    println!("{}", s.report());
+    }));
 
     // DES throughput: one kernel launch+finish cycle
-    let s = bench("DES launch+advance cycle", 1000, 100_000, || {
+    case(bench("DES launch+advance cycle", 1000, 100_000, || {
         let mut sim = SocSim::new(&soc);
         let t = sim.xpus[0].timing(&gemv_cost(512, 512));
         sim.launch(0, LaunchSpec { timing: t, class: KernelClass::Proactive });
         black_box(sim.advance_until(sim.now_us + 1e9));
-    });
-    println!("{}", s.report());
+    }));
 
     // control-path JSON (UDS protocol)
     let msg = r#"{"type":"generate","priority":"reactive","prompt":[1,2,3,4,5,6,7,8],"max_new_tokens":16}"#;
-    let s = bench("UDS request JSON parse", 1000, 100_000, || {
+    case(bench("UDS request JSON parse", 1000, 100_000, || {
         black_box(Json::parse(msg).unwrap());
-    });
-    println!("{}", s.report());
+    }));
 
     // EngineCore::step() — one full decision point of the streaming
     // API (admissions + scheduling pass + event advance) on a live
@@ -138,7 +137,7 @@ fn main() {
     for r in mk_trace() {
         eng.submit(r).unwrap();
     }
-    let s = bench("EngineCore::step (agent.xpu, 32-req mix)", 500, 50_000, || {
+    case(bench("EngineCore::step (agent.xpu, 32-req mix)", 500, 50_000, || {
         if !eng.has_work() {
             eng.start(EngineClock::Virtual).unwrap();
             for r in mk_trace() {
@@ -146,8 +145,7 @@ fn main() {
             }
         }
         black_box(eng.step().unwrap());
-    });
-    println!("{}", s.report());
+    }));
 
     // Same decision point through the policy registry's boxed
     // `PolicyEngine` — the one dynamic-dispatch hop (`dyn EngineCore`
@@ -160,7 +158,7 @@ fn main() {
     for r in mk_trace() {
         dyn_eng.submit(r).unwrap();
     }
-    let s = bench("PolicyEngine::step via dyn EngineCore (registry)", 500, 50_000, || {
+    case(bench("PolicyEngine::step via dyn EngineCore (registry)", 500, 50_000, || {
         if !dyn_eng.has_work() {
             dyn_eng.start(EngineClock::Virtual).unwrap();
             for r in mk_trace() {
@@ -168,6 +166,26 @@ fn main() {
             }
         }
         black_box(dyn_eng.step().unwrap());
-    });
-    println!("{}", s.report());
+    }));
+
+    // Land every case as a strict-JSON row next to the macro bench's
+    // BENCH_sched.json so micro runs can be diffed over time
+    // (`--out <dir>`, default `results`).
+    let out = agent_xpu::util::cli::Args::from_env()
+        .map(|a| a.str_or("out", "results"))
+        .unwrap_or_else(|_| "results".to_string());
+    let doc = Json::obj()
+        .set("name", "BENCH_micro")
+        .set("rows", rows.iter().map(BenchStats::to_json).collect::<Vec<_>>());
+    if let Err(e) = std::fs::create_dir_all(&out)
+        .map_err(anyhow::Error::from)
+        .and_then(|()| {
+            let path = std::path::Path::new(&out).join("BENCH_micro.json");
+            std::fs::write(&path, doc.to_string())?;
+            println!("[written {path:?}]");
+            Ok(())
+        })
+    {
+        eprintln!("BENCH_micro.json not written: {e:#}");
+    }
 }

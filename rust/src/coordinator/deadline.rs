@@ -112,47 +112,57 @@ impl SchedPolicy for DeadlinePolicy {
     }
 
     /// Deadline-ordered lanes with a slack-aware join gate (see module
-    /// docs).
+    /// docs).  Deadline-keyed scratch is thread-local, mirroring the
+    /// default `coordinator::select::decode_lanes`.
     fn decode_batch(
         &self,
         states: &States,
         b_max: usize,
         allow_join: bool,
         now_us: f64,
-    ) -> (Vec<ReqId>, bool) {
-        let mut reactive: Vec<(f64, ReqId)> = vec![];
-        let mut proactive: Vec<(f64, ReqId)> = vec![];
-        for st in states.values() {
-            if st.phase != Phase::Decoding || st.running {
-                continue;
-            }
-            let d = Self::deadline_us(st);
-            if st.is_reactive() {
-                reactive.push((d, st.id()));
-            } else {
-                proactive.push((d, st.id()));
-            }
+        lanes: &mut Vec<ReqId>,
+    ) -> bool {
+        use std::cell::RefCell;
+        thread_local! {
+            static EDF_KEYS: RefCell<(Vec<(f64, ReqId)>, Vec<(f64, ReqId)>)> =
+                const { RefCell::new((Vec::new(), Vec::new())) };
         }
-        reactive.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
-        let any_reactive = !reactive.is_empty();
-        // The tightest reactive lane gates proactive joins: once its
-        // slack is inside the guard, the batch stays reactive-only.
-        let join_ok = reactive
-            .first()
-            .map(|(d, _)| d - now_us > JOIN_GUARD_US)
-            .unwrap_or(true);
-        let mut lanes: Vec<ReqId> = reactive.into_iter().map(|(_, id)| id).collect();
-        if (allow_join && join_ok) || lanes.is_empty() {
-            proactive.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
-            for (_, id) in proactive {
-                if lanes.len() >= b_max {
-                    break;
+        lanes.clear();
+        EDF_KEYS.with_borrow_mut(|(reactive, proactive)| {
+            reactive.clear();
+            proactive.clear();
+            for st in states.values() {
+                if st.phase != Phase::Decoding || st.running {
+                    continue;
                 }
-                lanes.push(id);
+                let d = Self::deadline_us(st);
+                if st.is_reactive() {
+                    reactive.push((d, st.id()));
+                } else {
+                    proactive.push((d, st.id()));
+                }
             }
-        }
-        lanes.truncate(b_max);
-        (lanes, any_reactive)
+            reactive.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            let any_reactive = !reactive.is_empty();
+            // The tightest reactive lane gates proactive joins: once its
+            // slack is inside the guard, the batch stays reactive-only.
+            let join_ok = reactive
+                .first()
+                .map(|(d, _)| d - now_us > JOIN_GUARD_US)
+                .unwrap_or(true);
+            lanes.extend(reactive.iter().map(|(_, id)| *id));
+            if (allow_join && join_ok) || lanes.is_empty() {
+                proactive.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+                for &(_, id) in proactive.iter() {
+                    if lanes.len() >= b_max {
+                        break;
+                    }
+                    lanes.push(id);
+                }
+            }
+            lanes.truncate(b_max);
+            any_reactive
+        })
     }
 }
 
@@ -164,7 +174,6 @@ mod tests {
     use crate::heg::Annotator;
     use crate::soc::XpuModel;
     use crate::workload::{Priority, Request};
-    use std::collections::HashMap;
 
     fn geo() -> ModelGeometry {
         let mut g = llama32_3b();
@@ -184,7 +193,7 @@ mod tests {
         }
     }
 
-    fn mk_states(specs: &[(u64, Priority, Phase, f64)]) -> HashMap<ReqId, ReqState> {
+    fn mk_states(specs: &[(u64, Priority, Phase, f64)]) -> States {
         let bridge = ExecBridge::synthetic(geo());
         specs
             .iter()
@@ -238,13 +247,14 @@ mod tests {
             (3, Priority::Proactive, Phase::Decoding, 0.0),
         ]);
         let p = policy();
+        let mut lanes = vec![];
         // early in the reactive budget: proactive lanes may join
-        let (lanes, any_rt) = p.decode_batch(&states, 8, true, 10_000.0);
+        let any_rt = p.decode_batch(&states, 8, true, 10_000.0, &mut lanes);
         assert!(any_rt);
         assert_eq!(lanes.len(), 3, "joins allowed while slack is ample");
         assert_eq!(lanes[0], 1, "reactive (tightest deadline) leads");
         // late in the budget: the batch stays reactive-only
-        let (lanes, any_rt) = p.decode_batch(&states, 8, true, 500_000.0);
+        let any_rt = p.decode_batch(&states, 8, true, 500_000.0, &mut lanes);
         assert!(any_rt);
         assert_eq!(lanes, vec![1], "join gate closed under low slack");
         // without reactive lanes the gate never applies
@@ -252,7 +262,7 @@ mod tests {
             (2, Priority::Proactive, Phase::Decoding, 0.0),
             (3, Priority::Proactive, Phase::Decoding, 0.0),
         ]);
-        let (lanes, any_rt) = p.decode_batch(&pro_only, 8, true, 500_000.0);
+        let any_rt = p.decode_batch(&pro_only, 8, true, 500_000.0, &mut lanes);
         assert!(!any_rt);
         assert_eq!(lanes.len(), 2);
     }

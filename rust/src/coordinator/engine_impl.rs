@@ -55,10 +55,16 @@ impl PolicyEngine<AgentXpuPolicy> {
     }
 }
 
-/// Reference scan for the driver's waiting-proactive-prefill index
-/// (debug-assert parity checks only — release builds trust the index,
-/// and the index's id order matches this sorted scan exactly, so both
-/// feed `resume_order` identical candidate lists).
+// -- Reference scans ----------------------------------------------------
+//
+// Full-`states` scans the driver's incrementally maintained phase
+// index replaced.  They survive only inside `debug_assert_eq!` parity
+// checks: every index read below is asserted bit-identical to the scan
+// it displaced (same membership, same sorted id order), so release
+// builds trust the index and debug builds prove the schedules are
+// unchanged.
+
+/// Reference scan for the waiting-proactive-prefill index.
 fn scan_waiting_proactive(states: &States) -> Vec<ReqId> {
     let mut v: Vec<ReqId> = states
         .values()
@@ -69,18 +75,60 @@ fn scan_waiting_proactive(states: &States) -> Vec<ReqId> {
     v
 }
 
-/// Reactive requests currently mid-system (prefilling or decoding).
+/// Reference scan for the waiting-reactive-prefill index.
+fn scan_waiting_reactive(states: &States) -> Vec<ReqId> {
+    let mut v: Vec<ReqId> = states
+        .values()
+        .filter(|s| s.phase == Phase::Prefilling && !s.running && s.is_reactive())
+        .map(|s| s.id())
+        .collect();
+    v.sort_unstable();
+    v
+}
+
+/// Reference scan for the waiting-prefill union (deadlock guard).
+fn scan_waiting_prefills(states: &States) -> Vec<ReqId> {
+    let mut v: Vec<ReqId> = states
+        .values()
+        .filter(|s| s.phase == Phase::Prefilling && !s.running)
+        .map(|s| s.id())
+        .collect();
+    v.sort_unstable();
+    v
+}
+
+/// Reference scan for the dynamic-margin-chunk index, per class.
+fn scan_dynamic_chunks(states: &States, reactive: bool) -> Vec<ReqId> {
+    let mut v: Vec<ReqId> = states
+        .values()
+        .filter(|s| {
+            s.phase == Phase::Prefilling
+                && !s.running
+                && s.is_reactive() == reactive
+                && s.current_chunk().map(|c| c.dynamic).unwrap_or(false)
+        })
+        .map(|s| s.id())
+        .collect();
+    v.sort_unstable();
+    v
+}
+
+/// Reference scan for the idle-decoder indexes.
+fn scan_idle_decoder(states: &States, reactive_only: bool) -> bool {
+    states.values().any(|s| {
+        s.phase == Phase::Decoding && !s.running && (!reactive_only || s.is_reactive())
+    })
+}
+
+/// Reference scan for the live-reactive index: reactive requests
+/// currently mid-system (prefilling or decoding).
 fn reactive_active(states: &States) -> bool {
     states.values().any(|s| s.is_reactive() && s.phase != Phase::Done)
 }
 
-/// Preemption accounting (§6.2): whenever a reactive prefill kernel
-/// launches while a mid-prefill proactive task waits at its
-/// kernel-boundary checkpoint, that task is preempted — counted once
-/// per wait episode (the flag clears when the victim runs again).
-fn account_preemption(ctx: &mut PolicyCtx<'_>) {
-    let victims: Vec<ReqId> = ctx
-        .states()
+/// Reference scan for preemption victims, sorted like the index walk.
+fn scan_preemption_victims(states: &States) -> Vec<ReqId> {
+    let mut v: Vec<ReqId> = states
         .values()
         .filter(|s| {
             !s.is_reactive()
@@ -91,9 +139,33 @@ fn account_preemption(ctx: &mut PolicyCtx<'_>) {
         })
         .map(|s| s.id())
         .collect();
-    for v in victims {
-        ctx.mark_preempted(v);
+    v.sort_unstable();
+    v
+}
+
+/// Preemption accounting (§6.2): whenever a reactive prefill kernel
+/// launches while a mid-prefill proactive task waits at its
+/// kernel-boundary checkpoint, that task is preempted — counted once
+/// per wait episode (the flag clears when the victim runs again).
+/// Victims come from the waiting-proactive index narrowed by the
+/// progress/counted flags, in ascending id order (the counters this
+/// feeds are order-independent).
+fn account_preemption(ctx: &mut PolicyCtx<'_>) {
+    let mut victims = ctx.take_id_buf();
+    ctx.waiting_proactive_prefills_into(&mut victims);
+    victims.retain(|id| {
+        let s = ctx.state(*id);
+        !s.preempt_counted && (s.chunk_idx > 0 || s.layer_idx > 0)
+    });
+    debug_assert_eq!(
+        victims,
+        scan_preemption_victims(ctx.states()),
+        "preemption-victim set diverged from a state scan"
+    );
+    for k in 0..victims.len() {
+        ctx.mark_preempted(victims[k]);
     }
+    ctx.put_id_buf(victims);
 }
 
 /// The reusable XPU-coordinator decision pipeline (§5/§6): one
@@ -261,15 +333,20 @@ impl XpuCoordinator {
             return;
         }
         // Reactive first (kernel-level preemption: we are at a kernel
-        // boundary by construction — the pipeline is idle).
-        let mut reactive: Vec<ReqId> = ctx
-            .states()
-            .values()
-            .filter(|s| s.phase == Phase::Prefilling && !s.running && s.is_reactive())
-            .map(|s| s.id())
-            .collect();
+        // boundary by construction — the pipeline is idle).  Both
+        // candidate lists come from the driver's phase index through
+        // pooled scratch buffers — no per-step `states` scan and no
+        // allocation on the steady-state path.
+        let mut reactive = ctx.take_id_buf();
+        ctx.waiting_reactive_prefills_into(&mut reactive);
+        debug_assert_eq!(
+            reactive,
+            scan_waiting_reactive(ctx.states()),
+            "waiting-reactive-prefill index diverged from a state scan"
+        );
         hooks.admission_order(ctx.states(), &mut reactive);
-        let mut proactive: Vec<ReqId> = ctx.waiting_proactive_prefills();
+        let mut proactive = ctx.take_id_buf();
+        ctx.waiting_proactive_prefills_into(&mut proactive);
         debug_assert_eq!(
             proactive,
             scan_waiting_proactive(ctx.states()),
@@ -292,6 +369,8 @@ impl XpuCoordinator {
             });
             all.first().copied()
         };
+        ctx.put_id_buf(reactive);
+        ctx.put_id_buf(proactive);
         let Some(id) = pick else { return };
         if !self.memory_admit(ctx, id, hooks) {
             return;
@@ -330,7 +409,12 @@ impl XpuCoordinator {
         if ctx.busy(self.igpu) {
             return;
         }
-        let reactive_present = reactive_active(ctx.states());
+        let reactive_present = ctx.reactive_live();
+        debug_assert_eq!(
+            reactive_present,
+            reactive_active(ctx.states()),
+            "live-reactive index diverged from a state scan"
+        );
 
         // (1) A reactive dynamic margin chunk gates that request's TTFT:
         // it outranks everything on the iGPU.
@@ -342,10 +426,12 @@ impl XpuCoordinator {
         // finishing a prefill feeds the decode batch (the ETC rationale
         // of §6.2's resumption strategy) — but never delay a decode
         // batch that carries a reactive lane.
-        let rt_decoding = ctx
-            .states()
-            .values()
-            .any(|s| s.phase == Phase::Decoding && !s.running && s.is_reactive());
+        let rt_decoding = ctx.has_idle_reactive_decoder();
+        debug_assert_eq!(
+            rt_decoding,
+            scan_idle_decoder(ctx.states(), true),
+            "idle-reactive-decoder index diverged from a state scan"
+        );
         if self.sched.disaggregation
             && !rt_decoding
             && self.try_margin_chunk(ctx, false, hooks)
@@ -355,38 +441,59 @@ impl XpuCoordinator {
 
         // (3) Decode iteration with adaptive batching + intra-XPU
         // backfill (proactive lanes join at the boundary when allowed).
+        // The idle-decoder index short-circuits the section — and the
+        // policy's O(states) lane scan — when nothing can decode; the
+        // lane buffer itself is pooled and, on launch, moves into the
+        // kernel tag instead of being copied.
         let allow_join = self.sched.backfill || !reactive_present;
-        let (mut lanes, mut any_rt) =
-            hooks.decode_batch(ctx.states(), self.sched.b_max, allow_join, ctx.now());
-        if !lanes.is_empty() {
-            let mut timing = *self.decode_annotation(ctx, &lanes).timing_on(self.igpu);
-            // iGPU duty governor: proactive lanes — joins *and* whole
-            // proactive batches — need a grant (unless starved).  A veto
-            // drops the proactive lanes; reactive lanes always decode.
-            let gated = lanes.iter().any(|id| !ctx.state(*id).is_reactive())
-                && !lanes.iter().any(|id| self.starved(ctx, *id))
-                && !hooks.igpu_proactive_grant(&self.igpu_gate_ctx(ctx, timing.nominal_us));
-            if gated {
-                self.governor_retry(ctx);
-                lanes.retain(|id| ctx.state(*id).is_reactive());
-                any_rt = !lanes.is_empty();
-                if !lanes.is_empty() {
-                    timing = *self.decode_annotation(ctx, &lanes).timing_on(self.igpu);
+        debug_assert_eq!(
+            ctx.has_idle_decoder(),
+            scan_idle_decoder(ctx.states(), false),
+            "idle-decoder index diverged from a state scan"
+        );
+        if ctx.has_idle_decoder() {
+            let mut lanes = ctx.take_id_buf();
+            let mut any_rt = hooks.decode_batch(
+                ctx.states(),
+                self.sched.b_max,
+                allow_join,
+                ctx.now(),
+                &mut lanes,
+            );
+            if !lanes.is_empty() {
+                let mut timing =
+                    *self.decode_annotation(ctx, &lanes).timing_on(self.igpu);
+                // iGPU duty governor: proactive lanes — joins *and* whole
+                // proactive batches — need a grant (unless starved).  A veto
+                // drops the proactive lanes; reactive lanes always decode.
+                let gated = lanes.iter().any(|id| !ctx.state(*id).is_reactive())
+                    && !lanes.iter().any(|id| self.starved(ctx, *id))
+                    && !hooks
+                        .igpu_proactive_grant(&self.igpu_gate_ctx(ctx, timing.nominal_us));
+                if gated {
+                    self.governor_retry(ctx);
+                    lanes.retain(|id| ctx.state(*id).is_reactive());
+                    any_rt = !lanes.is_empty();
+                    if !lanes.is_empty() {
+                        timing =
+                            *self.decode_annotation(ctx, &lanes).timing_on(self.igpu);
+                    }
                 }
-            }
-            if !lanes.is_empty()
-                && dispatch_check(ctx.sim(), &self.sched, &timing, any_rt)
-                    == DispatchDecision::Launch
-            {
-                let backfilled =
-                    any_rt && lanes.iter().any(|id| !ctx.state(*id).is_reactive());
-                if backfilled {
-                    ctx.note_backfill();
+                if !lanes.is_empty()
+                    && dispatch_check(ctx.sim(), &self.sched, &timing, any_rt)
+                        == DispatchDecision::Launch
+                {
+                    let backfilled =
+                        any_rt && lanes.iter().any(|id| !ctx.state(*id).is_reactive());
+                    if backfilled {
+                        ctx.note_backfill();
+                    }
+                    ctx.launch(self.igpu, timing, any_rt, KernelTag::DecodeIter { lanes });
+                    return;
                 }
-                ctx.launch(self.igpu, timing, any_rt, KernelTag::DecodeIter { lanes });
-                return;
+                // decode deferred: fall through to cheaper candidates
             }
-            // decode deferred: fall through to cheaper candidates
+            ctx.put_id_buf(lanes);
         }
 
         if !self.sched.disaggregation {
@@ -409,16 +516,19 @@ impl XpuCoordinator {
             return; // structural slack only
         }
         // Candidates come from the driver's incrementally maintained
-        // waiting-proactive-prefill index — a full `states` scan per
-        // step was the old hot path; the debug assert proves the index
-        // always matches it, so schedules are bit-identical.
-        let mut cands: Vec<ReqId> = ctx.waiting_proactive_prefills();
+        // waiting-proactive-prefill index through a pooled buffer — a
+        // full `states` scan (and a fresh Vec) per step was the old hot
+        // path; the debug assert proves the index always matches it, so
+        // schedules are bit-identical.
+        let mut cands = ctx.take_id_buf();
+        ctx.waiting_proactive_prefills_into(&mut cands);
         debug_assert_eq!(
             cands,
             scan_waiting_proactive(ctx.states()),
             "waiting-proactive-prefill index diverged from a state scan"
         );
         if cands.is_empty() {
+            ctx.put_id_buf(cands);
             return;
         }
         // Ranked by the policy's resumption hook (§6.2 default:
@@ -427,7 +537,8 @@ impl XpuCoordinator {
         // is the tiebreak that decides which proactive prefill claims
         // the backfill bubble.
         hooks.resume_order(self.resume_ctx(ctx, self.igpu), &mut cands);
-        for id in cands {
+        for k in 0..cands.len() {
+            let id = cands[k];
             let chunk = {
                 let st = ctx.state(id);
                 *st.current_chunk().unwrap()
@@ -456,9 +567,11 @@ impl XpuCoordinator {
             {
                 ctx.note_backfill();
                 ctx.launch(self.igpu, timing, false, KernelTag::Prefill { req: id });
+                ctx.put_id_buf(cands);
                 return;
             }
         }
+        ctx.put_id_buf(cands);
     }
 
     /// Launch the next *dynamic* (margin) chunk of a reactive/proactive
@@ -469,19 +582,17 @@ impl XpuCoordinator {
         reactive: bool,
         hooks: &H,
     ) -> bool {
-        let mut cands: Vec<ReqId> = ctx
-            .states()
-            .values()
-            .filter(|s| {
-                s.phase == Phase::Prefilling
-                    && !s.running
-                    && s.is_reactive() == reactive
-                    && s.current_chunk().map(|c| c.dynamic).unwrap_or(false)
-            })
-            .map(|s| s.id())
-            .collect();
+        let mut cands = ctx.take_id_buf();
+        ctx.dynamic_chunk_candidates_into(reactive, &mut cands);
+        debug_assert_eq!(
+            cands,
+            scan_dynamic_chunks(ctx.states(), reactive),
+            "dynamic-chunk index diverged from a state scan"
+        );
         hooks.admission_order(ctx.states(), &mut cands);
-        let Some(&id) = cands.first() else { return false };
+        let pick = cands.first().copied();
+        ctx.put_id_buf(cands);
+        let Some(id) = pick else { return false };
         if !self.memory_admit(ctx, id, hooks) {
             return false;
         }
@@ -523,13 +634,15 @@ impl XpuCoordinator {
         }
         // any runnable prefill (incl. dynamic margins on the NPU with
         // JIT) — reactive first, then aged proactive
-        let mut cands: Vec<ReqId> = ctx
-            .states()
-            .values()
-            .filter(|s| s.phase == Phase::Prefilling && !s.running)
-            .map(|s| s.id())
-            .collect();
+        let mut cands = ctx.take_id_buf();
+        ctx.waiting_prefills_into(&mut cands);
+        debug_assert_eq!(
+            cands,
+            scan_waiting_prefills(ctx.states()),
+            "waiting-prefill union index diverged from a state scan"
+        );
         if cands.is_empty() {
+            ctx.put_id_buf(cands);
             return;
         }
         {
@@ -543,6 +656,7 @@ impl XpuCoordinator {
             });
         }
         let id = cands[0];
+        ctx.put_id_buf(cands);
         let (chunk, reactive) = {
             let st = ctx.state(id);
             (*st.current_chunk().unwrap(), st.is_reactive())

@@ -17,10 +17,8 @@
 //! this governor is the admission-control half that keeps that
 //! assumption true.
 
-use std::collections::HashMap;
-
 use crate::config::{ModelGeometry, SocConfig};
-use crate::engine::{Phase, ReqState};
+use crate::engine::{Phase, ReqState, States};
 use crate::workload::ReqId;
 
 /// Tracks model + KV residency against the DRAM budget.
@@ -67,7 +65,7 @@ impl MemoryGovernor {
     /// `retained_sessions` idle session caches (one KV slot each).
     pub fn footprint_with_sessions(
         &self,
-        states: &HashMap<ReqId, ReqState>,
+        states: &States,
         retained_sessions: usize,
     ) -> u64 {
         let held = states.values().filter(|s| Self::holds_memory(s)).count() as u64;
@@ -75,12 +73,12 @@ impl MemoryGovernor {
     }
 
     /// Current resident footprint (bytes), ignoring retained sessions.
-    pub fn footprint(&self, states: &HashMap<ReqId, ReqState>) -> u64 {
+    pub fn footprint(&self, states: &States) -> u64 {
         self.footprint_with_sessions(states, 0)
     }
 
     /// Would starting one more request fit the budget?
-    pub fn can_start(&self, states: &HashMap<ReqId, ReqState>) -> bool {
+    pub fn can_start(&self, states: &States) -> bool {
         self.can_start_with_sessions(states, 0)
     }
 
@@ -88,7 +86,7 @@ impl MemoryGovernor {
     /// session caches against the budget.
     pub fn can_start_with_sessions(
         &self,
-        states: &HashMap<ReqId, ReqState>,
+        states: &States,
         retained_sessions: usize,
     ) -> bool {
         self.footprint_with_sessions(states, retained_sessions) + self.kv_bytes_per_req
@@ -99,7 +97,7 @@ impl MemoryGovernor {
     /// *least-progressed* started proactive prefill that is not
     /// currently running (its context is recomputable; decode-phase
     /// tasks are never evicted — their work is nearly done).
-    pub fn eviction_victim(&self, states: &HashMap<ReqId, ReqState>) -> Option<ReqId> {
+    pub fn eviction_victim(&self, states: &States) -> Option<ReqId> {
         states
             .values()
             .filter(|s| {
@@ -149,7 +147,7 @@ mod tests {
     #[test]
     fn footprint_counts_only_started_requests() {
         let g = gov();
-        let mut states = HashMap::new();
+        let mut states = States::default();
         states.insert(1, mk_state(1, Priority::Proactive, 0)); // not started
         assert_eq!(g.footprint(&states), g.weights_bytes);
         states.insert(2, mk_state(2, Priority::Proactive, 2)); // mid-prefill
@@ -165,7 +163,7 @@ mod tests {
         let mut g = gov();
         // budget: weights + exactly 2 KV slots
         g.budget_bytes = g.weights_bytes + 2 * g.kv_bytes_per_req;
-        let mut states = HashMap::new();
+        let mut states = States::default();
         assert!(g.can_start(&states));
         states.insert(1, mk_state(1, Priority::Proactive, 1));
         assert!(g.can_start(&states));
@@ -176,7 +174,7 @@ mod tests {
     #[test]
     fn eviction_picks_least_progressed_waiting_proactive() {
         let g = gov();
-        let mut states = HashMap::new();
+        let mut states = States::default();
         states.insert(1, mk_state(1, Priority::Proactive, 3));
         states.insert(2, mk_state(2, Priority::Proactive, 1));
         let mut rt = mk_state(9, Priority::Reactive, 2);
@@ -216,7 +214,7 @@ mod tests {
         );
         assert_eq!(st.cached_prefix_len, 200);
         let g = gov();
-        let mut states = HashMap::new();
+        let mut states = States::default();
         states.insert(1, st);
         assert_eq!(g.footprint(&states), g.weights_bytes + g.kv_bytes_per_req);
         // ... and an eviction releases it again
@@ -233,7 +231,7 @@ mod tests {
     fn retained_sessions_are_charged_one_kv_slot_each() {
         let mut g = gov();
         g.budget_bytes = g.weights_bytes + 3 * g.kv_bytes_per_req;
-        let mut states = HashMap::new();
+        let mut states = States::default();
         states.insert(1, mk_state(1, Priority::Proactive, 1)); // one in-flight KV
         assert_eq!(
             g.footprint_with_sessions(&states, 2),

@@ -1,9 +1,13 @@
 //! Candidate selection: proactive resumption ordering (§6.2) and decode
 //! batch formation / intra-XPU backfill (§6.3).
+//!
+//! Both helpers run on every engine step, so their working vectors are
+//! thread-local scratch reused across calls — the steady-state decision
+//! loop allocates nothing here once the buffers are warm.
 
-use std::collections::HashMap;
+use std::cell::RefCell;
 
-use crate::engine::{Phase, ReqState};
+use crate::engine::{Phase, ReqState, States};
 use crate::heg::Annotator;
 use crate::workload::ReqId;
 
@@ -19,6 +23,24 @@ pub fn prefill_etc_us(st: &ReqState, ann: &Annotator, xpu: usize) -> f64 {
         total += per * layers as f64;
     }
     total
+}
+
+/// Pre-computed sort key for one resumption candidate.
+#[derive(Clone, Copy)]
+struct ResumeKey {
+    starved: bool,
+    age: f64,
+    cont: bool,
+    cp: usize,
+    etc: f64,
+}
+
+thread_local! {
+    /// Keyed-candidate scratch for [`resume_order`].
+    static RESUME_KEYS: RefCell<Vec<(ReqId, ResumeKey)>> = const { RefCell::new(Vec::new()) };
+    /// (reactive, proactive) enqueue-keyed scratch for [`decode_lanes`].
+    static LANE_KEYS: RefCell<(Vec<(f64, ReqId)>, Vec<(f64, ReqId)>)> =
+        const { RefCell::new((Vec::new(), Vec::new())) };
 }
 
 /// Resumption strategy (§6.2): among paused proactive prefills, pick
@@ -41,7 +63,7 @@ pub fn prefill_etc_us(st: &ReqState, ann: &Annotator, xpu: usize) -> f64 {
 /// comparator cost O(n log n) chunk walks per call against the §8 5 µs
 /// decision budget (tracked by `benches/sched_micro.rs`).
 pub fn resume_order(
-    states: &HashMap<ReqId, ReqState>,
+    states: &States,
     candidates: &mut Vec<ReqId>,
     ann: &Annotator,
     npu: usize,
@@ -49,16 +71,9 @@ pub fn resume_order(
     starvation_age_us: f64,
     critical_path: bool,
 ) {
-    struct Key {
-        starved: bool,
-        age: f64,
-        cont: bool,
-        cp: usize,
-        etc: f64,
-    }
-    let mut keyed: Vec<(ReqId, Key)> = candidates
-        .iter()
-        .map(|id| {
+    RESUME_KEYS.with_borrow_mut(|keyed| {
+        keyed.clear();
+        keyed.extend(candidates.iter().map(|id| {
             let st = &states[id];
             let age = now_us - st.enqueued_at_us;
             let cont =
@@ -68,7 +83,7 @@ pub fn resume_order(
             } else {
                 1 // FIFO/ETC baseline: critical path never discriminates
             };
-            let key = Key {
+            let key = ResumeKey {
                 starved: age > starvation_age_us,
                 age,
                 cont,
@@ -76,59 +91,64 @@ pub fn resume_order(
                 etc: prefill_etc_us(st, ann, npu),
             };
             (*id, key)
-        })
-        .collect();
-    keyed.sort_by(|(ia, a), (ib, b)| match (a.starved, b.starved) {
-        (true, false) => std::cmp::Ordering::Less,
-        (false, true) => std::cmp::Ordering::Greater,
-        (true, true) => b.age.total_cmp(&a.age), // older first
-        (false, false) => b
-            .cont
-            .cmp(&a.cont) // flow continuations first
-            .then(b.cp.cmp(&a.cp)) // longest remaining chain first
-            .then(a.etc.total_cmp(&b.etc))
-            .then(ia.cmp(ib)),
+        }));
+        keyed.sort_by(|(ia, a), (ib, b)| match (a.starved, b.starved) {
+            (true, false) => std::cmp::Ordering::Less,
+            (false, true) => std::cmp::Ordering::Greater,
+            (true, true) => b.age.total_cmp(&a.age), // older first
+            (false, false) => b
+                .cont
+                .cmp(&a.cont) // flow continuations first
+                .then(b.cp.cmp(&a.cp)) // longest remaining chain first
+                .then(a.etc.total_cmp(&b.etc))
+                .then(ia.cmp(ib)),
+        });
+        candidates.clear();
+        candidates.extend(keyed.iter().map(|(id, _)| *id));
     });
-    candidates.clear();
-    candidates.extend(keyed.into_iter().map(|(id, _)| id));
 }
 
 /// Decode batch formation (§6.3 intra-XPU backfill / adaptive batching):
 /// reactive lanes always join; proactive lanes backfill at the iteration
-/// boundary up to `b_max` when allowed.  Returns (lanes, any_reactive).
+/// boundary up to `b_max` when allowed.  Fills `lanes` (cleared first)
+/// and returns whether any lane is reactive.
 pub fn decode_lanes(
-    states: &HashMap<ReqId, ReqState>,
+    states: &States,
     b_max: usize,
     allow_proactive_join: bool,
-) -> (Vec<ReqId>, bool) {
-    let mut reactive: Vec<(f64, ReqId)> = vec![];
-    let mut proactive: Vec<(f64, ReqId)> = vec![];
-    for st in states.values() {
-        if st.phase != Phase::Decoding || st.running {
-            continue;
-        }
-        if st.is_reactive() {
-            reactive.push((st.enqueued_at_us, st.id()));
-        } else {
-            proactive.push((st.enqueued_at_us, st.id()));
-        }
-    }
-    // longest-waiting reactive lanes lead (enqueue order, not ReqId —
-    // ids say nothing about who has been decoding-ready longest)
-    reactive.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
-    let any_reactive = !reactive.is_empty();
-    let mut lanes: Vec<ReqId> = reactive.into_iter().map(|(_, id)| id).collect();
-    if allow_proactive_join || lanes.is_empty() {
-        proactive.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
-        for (_, id) in proactive {
-            if lanes.len() >= b_max {
-                break;
+    lanes: &mut Vec<ReqId>,
+) -> bool {
+    lanes.clear();
+    LANE_KEYS.with_borrow_mut(|(reactive, proactive)| {
+        reactive.clear();
+        proactive.clear();
+        for st in states.values() {
+            if st.phase != Phase::Decoding || st.running {
+                continue;
             }
-            lanes.push(id);
+            if st.is_reactive() {
+                reactive.push((st.enqueued_at_us, st.id()));
+            } else {
+                proactive.push((st.enqueued_at_us, st.id()));
+            }
         }
-    }
-    lanes.truncate(b_max);
-    (lanes, any_reactive)
+        // longest-waiting reactive lanes lead (enqueue order, not ReqId —
+        // ids say nothing about who has been decoding-ready longest)
+        reactive.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let any_reactive = !reactive.is_empty();
+        lanes.extend(reactive.iter().map(|(_, id)| *id));
+        if allow_proactive_join || lanes.is_empty() {
+            proactive.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            for &(_, id) in proactive.iter() {
+                if lanes.len() >= b_max {
+                    break;
+                }
+                lanes.push(id);
+            }
+        }
+        lanes.truncate(b_max);
+        any_reactive
+    })
 }
 
 #[cfg(test)]
@@ -139,7 +159,7 @@ mod tests {
     use crate::soc::XpuModel;
     use crate::workload::{Priority, Request};
 
-    fn mk_states(specs: &[(u64, Priority, Phase, f64)]) -> HashMap<ReqId, ReqState> {
+    fn mk_states(specs: &[(u64, Priority, Phase, f64)]) -> States {
         let mut geo = llama32_3b();
         geo.n_layers = 4;
         let bridge = ExecBridge::synthetic(geo);
@@ -161,6 +181,12 @@ mod tests {
                 (id, st)
             })
             .collect()
+    }
+
+    fn lanes_of(states: &States, b_max: usize, join: bool) -> (Vec<ReqId>, bool) {
+        let mut lanes = vec![];
+        let any_rt = decode_lanes(states, b_max, join, &mut lanes);
+        (lanes, any_rt)
     }
 
     fn ann() -> Annotator {
@@ -258,7 +284,7 @@ mod tests {
             (3, Priority::Proactive, Phase::Decoding, 5.0),
             (4, Priority::Proactive, Phase::Prefilling, 0.0),
         ]);
-        let (lanes, any_rt) = decode_lanes(&states, 8, true);
+        let (lanes, any_rt) = lanes_of(&states, 8, true);
         assert!(any_rt);
         assert_eq!(lanes[0], 2, "reactive lane leads");
         // proactive join ordered by wait time
@@ -275,18 +301,18 @@ mod tests {
             (9, Priority::Reactive, Phase::Decoding, 100.0),
             (5, Priority::Reactive, Phase::Decoding, 300.0),
         ]);
-        let (lanes, any_rt) = decode_lanes(&states, 8, true);
+        let (lanes, any_rt) = lanes_of(&states, 8, true);
         assert!(any_rt);
         assert_eq!(lanes, vec![9, 5, 2], "enqueue order, oldest first");
         // b_max truncation drops the *newest* reactive lanes
-        let (lanes, _) = decode_lanes(&states, 2, true);
+        let (lanes, _) = lanes_of(&states, 2, true);
         assert_eq!(lanes, vec![9, 5]);
         // ties fall back to id for determinism
         let tied = mk_states(&[
             (4, Priority::Reactive, Phase::Decoding, 7.0),
             (1, Priority::Reactive, Phase::Decoding, 7.0),
         ]);
-        let (lanes, _) = decode_lanes(&tied, 8, true);
+        let (lanes, _) = lanes_of(&tied, 8, true);
         assert_eq!(lanes, vec![1, 4]);
     }
 
@@ -296,7 +322,7 @@ mod tests {
             (1, Priority::Proactive, Phase::Decoding, 10.0),
             (2, Priority::Reactive, Phase::Decoding, 50.0),
         ]);
-        let (lanes, any_rt) = decode_lanes(&states, 8, false);
+        let (lanes, any_rt) = lanes_of(&states, 8, false);
         assert!(any_rt);
         assert_eq!(lanes, vec![2]);
         // ... but proactive-only batches still form
@@ -304,7 +330,7 @@ mod tests {
             (1, Priority::Proactive, Phase::Decoding, 10.0),
             (3, Priority::Proactive, Phase::Decoding, 5.0),
         ]);
-        let (lanes, any_rt) = decode_lanes(&states, 8, false);
+        let (lanes, any_rt) = lanes_of(&states, 8, false);
         assert!(!any_rt);
         assert_eq!(lanes.len(), 2);
     }
@@ -315,7 +341,7 @@ mod tests {
             .map(|i| (i as u64, Priority::Proactive, Phase::Decoding, i as f64))
             .collect();
         let states = mk_states(&specs);
-        let (lanes, _) = decode_lanes(&states, 4, true);
+        let (lanes, _) = lanes_of(&states, 4, true);
         assert_eq!(lanes.len(), 4);
     }
 
@@ -326,7 +352,7 @@ mod tests {
             (2, Priority::Proactive, Phase::Decoding, 2.0),
         ]);
         states.get_mut(&1).unwrap().running = true;
-        let (lanes, _) = decode_lanes(&states, 8, true);
+        let (lanes, _) = lanes_of(&states, 8, true);
         assert_eq!(lanes, vec![2]);
     }
 }

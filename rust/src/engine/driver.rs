@@ -36,6 +36,8 @@ use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
 
 use anyhow::{Context, Result, bail};
 
+use crate::util::{FxHashMap, FxHashSet};
+
 use crate::config::SocConfig;
 use crate::metrics::{ReqMetrics, RunReport};
 use crate::model::KernelCost;
@@ -131,16 +133,74 @@ impl FlowProgress {
     }
 }
 
+/// Incremental phase index over the live serving states: every set a
+/// scheduler polls per decision pass — waiting prefills, unbatched
+/// decoders, dynamic-chunk candidates, live reactive work — split by
+/// priority class and kept in sync at every lifecycle transition
+/// instead of re-derived by an O(all-requests) scan.  `BTreeSet`s so
+/// iteration is id-ordered (deterministic schedules).  Debug builds
+/// property-check each consumer against a fresh scan of `states`
+/// (see `coordinator::engine_impl`).
+#[derive(Default)]
+pub(crate) struct PhaseIndex {
+    /// Waiting prefills (phase == Prefilling, not running), per class.
+    pub wait_prefill_rt: BTreeSet<ReqId>,
+    pub wait_prefill_pro: BTreeSet<ReqId>,
+    /// Unbatched decoders (phase == Decoding, not running), per class.
+    pub idle_decode_rt: BTreeSet<ReqId>,
+    pub idle_decode_pro: BTreeSet<ReqId>,
+    /// Waiting prefills whose *current* chunk is dynamic-shaped
+    /// (margin-backfill candidates), per class.
+    pub dyn_chunk_rt: BTreeSet<ReqId>,
+    pub dyn_chunk_pro: BTreeSet<ReqId>,
+    /// Reactive requests that are not Done (replaces the
+    /// `.values().any(is_reactive)` liveness scan).
+    pub live_rt: BTreeSet<ReqId>,
+}
+
+impl PhaseIndex {
+    fn put(set: &mut BTreeSet<ReqId>, id: ReqId, member: bool) {
+        if member {
+            set.insert(id);
+        } else {
+            set.remove(&id);
+        }
+    }
+
+    /// Re-derive `id`'s membership in every set from its current state
+    /// (idempotent; absent state = out of all sets).
+    fn update(&mut self, id: ReqId, s: Option<&ReqState>) {
+        let (rt, wait_pre, idle_dec, dynamic, live_rt) = match s {
+            Some(s) => {
+                let rt = s.is_reactive();
+                let wait_pre = s.phase == Phase::Prefilling && !s.running;
+                let idle_dec = s.phase == Phase::Decoding && !s.running;
+                let dynamic =
+                    wait_pre && s.current_chunk().map(|c| c.dynamic).unwrap_or(false);
+                (rt, wait_pre, idle_dec, dynamic, rt && s.phase != Phase::Done)
+            }
+            None => (false, false, false, false, false),
+        };
+        Self::put(&mut self.wait_prefill_rt, id, wait_pre && rt);
+        Self::put(&mut self.wait_prefill_pro, id, wait_pre && !rt);
+        Self::put(&mut self.idle_decode_rt, id, idle_dec && rt);
+        Self::put(&mut self.idle_decode_pro, id, idle_dec && !rt);
+        Self::put(&mut self.dyn_chunk_rt, id, dynamic && rt);
+        Self::put(&mut self.dyn_chunk_pro, id, dynamic && !rt);
+        Self::put(&mut self.live_rt, id, live_rt);
+    }
+}
+
 /// Shared DES driver state.
 pub struct Driver {
     pub sim: SocSim,
     pub bridge: ExecBridge,
     clock: EngineClock,
-    pub states: HashMap<ReqId, ReqState>,
+    pub states: FxHashMap<ReqId, ReqState>,
     pending: VecDeque<Request>,
     /// Workflow nodes waiting on DAG predecessors, per flow (sorted by
     /// (turn_idx, id) for determinism).
-    held: HashMap<FlowId, Vec<Request>>,
+    held: FxHashMap<FlowId, Vec<Request>>,
     /// Per-flow DAG progress — the completed-node set doubles as the
     /// watermark that lets a wall-clock continuation submitted *after*
     /// its predecessors finished skip the hold queue.  Ordered so the
@@ -149,11 +209,11 @@ pub struct Driver {
     /// Cross-turn KV retention — `None` (full recompute every turn)
     /// unless the engine opted in via [`Driver::enable_session_reuse`].
     pub sessions: Option<SessionCachePool>,
-    inflight: HashMap<RunId, KernelTag>,
+    inflight: FxHashMap<RunId, KernelTag>,
     /// Ready CPU tool-call nodes waiting for the CPU to free.
     tool_wait: VecDeque<Request>,
     /// Tool kernels in flight on the CPU.
-    tool_inflight: HashMap<RunId, Request>,
+    tool_inflight: FxHashMap<RunId, Request>,
     /// The SoC's CPU index (tool nodes run here; `None` = the SoC
     /// models no CPU and tools complete instantly).
     cpu: Option<usize>,
@@ -169,17 +229,21 @@ pub struct Driver {
     /// run still advances to the veto's expiry instead of ending with
     /// unfinished work.
     wake_at_us: Option<f64>,
-    /// Index of waiting proactive prefills (phase == Prefilling, not
-    /// running, not reactive) — kept in sync at every lifecycle
-    /// transition so schedulers don't rescan every live request per
-    /// step (see `coordinator::engine_impl` inter-XPU backfill).
-    waiting_pro_prefill: BTreeSet<ReqId>,
+    /// The phase index — see [`PhaseIndex`].
+    idx: PhaseIndex,
+    /// Reusable id buffers loaned to decision passes via
+    /// [`Driver::take_id_buf`] so the per-step candidate/lane vectors
+    /// stop allocating once the pool is warm.
+    scratch_ids: Vec<Vec<ReqId>>,
     /// Streaming events since the last [`Driver::take_events`].
     events: Vec<EngineEvent>,
     /// Metrics of retired requests (cancelled, or completed under a
     /// wall clock) whose live state has been dropped.
     retired: Vec<ReqMetrics>,
     retired_cap: usize,
+    /// Bound on the per-flow DAG-progress table (see
+    /// [`Driver::shed_flow_state`]).
+    flow_cap: usize,
     /// Retired metrics shed from the bounded wall-clock history — the
     /// final RunReport flags this truncation instead of silently
     /// reporting fewer requests than were served.
@@ -209,23 +273,25 @@ impl Driver {
             sim,
             bridge,
             clock,
-            states: HashMap::new(),
+            states: FxHashMap::default(),
             total_requests: 0,
             pending: VecDeque::new(),
-            held: HashMap::new(),
+            held: FxHashMap::default(),
             flows: BTreeMap::new(),
             sessions: None,
-            inflight: HashMap::new(),
+            inflight: FxHashMap::default(),
             tool_wait: VecDeque::new(),
-            tool_inflight: HashMap::new(),
+            tool_inflight: FxHashMap::default(),
             cpu,
             igpu,
             graphics: None,
             wake_at_us: None,
-            waiting_pro_prefill: BTreeSet::new(),
+            idx: PhaseIndex::default(),
+            scratch_ids: vec![],
             events: vec![],
             retired: vec![],
             retired_cap: WALL_RETIRED_MAX,
+            flow_cap: FLOW_DONE_MAX,
             dropped_reqs: 0,
             preemptions: 0,
             backfills: 0,
@@ -368,22 +434,84 @@ impl Driver {
     /// scan of `states` (property-checked in debug builds by the
     /// coordinator's backfill path).
     pub fn waiting_proactive_prefills(&self) -> Vec<ReqId> {
-        self.waiting_pro_prefill.iter().copied().collect()
+        self.idx.wait_prefill_pro.iter().copied().collect()
     }
 
-    /// Re-derive `id`'s membership in the waiting-proactive-prefill
-    /// index from its current state (idempotent; absent state = out).
-    fn reindex(&mut self, id: ReqId) {
-        let waiting = self
-            .states
-            .get(&id)
-            .map(|s| s.phase == Phase::Prefilling && !s.running && !s.is_reactive())
-            .unwrap_or(false);
-        if waiting {
-            self.waiting_pro_prefill.insert(id);
+    /// Fill `out` with the waiting proactive prefills, in id order,
+    /// without allocating (clears `out` first).
+    pub fn waiting_proactive_prefills_into(&self, out: &mut Vec<ReqId>) {
+        out.clear();
+        out.extend(self.idx.wait_prefill_pro.iter().copied());
+    }
+
+    /// Fill `out` with the waiting *reactive* prefills, in id order.
+    pub fn waiting_reactive_prefills_into(&self, out: &mut Vec<ReqId>) {
+        out.clear();
+        out.extend(self.idx.wait_prefill_rt.iter().copied());
+    }
+
+    /// Fill `out` with every waiting prefill of both classes, in id
+    /// order.
+    pub fn waiting_prefills_into(&self, out: &mut Vec<ReqId>) {
+        out.clear();
+        out.extend(self.idx.wait_prefill_rt.iter().copied());
+        out.extend(self.idx.wait_prefill_pro.iter().copied());
+        out.sort_unstable();
+    }
+
+    /// Fill `out` with the waiting prefills of `reactive` class whose
+    /// current chunk is dynamic-shaped (margin-backfill candidates),
+    /// in id order.
+    pub fn dynamic_chunk_candidates_into(&self, reactive: bool, out: &mut Vec<ReqId>) {
+        out.clear();
+        let set = if reactive {
+            &self.idx.dyn_chunk_rt
         } else {
-            self.waiting_pro_prefill.remove(&id);
+            &self.idx.dyn_chunk_pro
+        };
+        out.extend(set.iter().copied());
+    }
+
+    /// Any reactive request not yet Done?  (Index-backed replacement
+    /// for `states.values().any(is_reactive)`.)
+    pub fn reactive_live(&self) -> bool {
+        !self.idx.live_rt.is_empty()
+    }
+
+    /// Any reactive decoder waiting at a kernel boundary?
+    pub fn has_idle_reactive_decoder(&self) -> bool {
+        !self.idx.idle_decode_rt.is_empty()
+    }
+
+    /// Any decoder of either class waiting at a kernel boundary?
+    pub fn has_idle_decoder(&self) -> bool {
+        !self.idx.idle_decode_rt.is_empty() || !self.idx.idle_decode_pro.is_empty()
+    }
+
+    /// Borrow a cleared id buffer from the scratch pool (return it
+    /// with [`Driver::put_id_buf`] so its capacity is reused).
+    pub(crate) fn take_id_buf(&mut self) -> Vec<ReqId> {
+        self.scratch_ids
+            .pop()
+            .map(|mut v| {
+                v.clear();
+                v
+            })
+            .unwrap_or_default()
+    }
+
+    /// Return a loaned id buffer to the scratch pool.
+    pub(crate) fn put_id_buf(&mut self, buf: Vec<ReqId>) {
+        if self.scratch_ids.len() < 8 {
+            self.scratch_ids.push(buf);
         }
+    }
+
+    /// Re-derive `id`'s membership in the phase index from its current
+    /// state (idempotent; absent state = out of every set).  Must be
+    /// called after any transition of phase / running / current chunk.
+    pub(crate) fn reindex(&mut self, id: ReqId) {
+        self.idx.update(id, self.states.get(&id));
     }
 
     fn insert_pending(&mut self, req: Request) {
@@ -468,16 +596,23 @@ impl Driver {
         }
     }
 
+    fn mark_running(&mut self, id: ReqId) {
+        let st = self.states.get_mut(&id).expect("launch for unknown req");
+        assert!(!st.running, "request {id} already has a kernel in flight");
+        st.running = true;
+        st.preempt_counted = false;
+        self.reindex(id);
+    }
+
     /// Launch a kernel; marks all tagged requests as running.
     pub fn launch(&mut self, xpu: usize, timing: KernelTiming, reactive: bool, tag: KernelTag) {
-        for id in tag.reqs() {
-            let st = self.states.get_mut(&id).expect("launch for unknown req");
-            assert!(!st.running, "request {id} already has a kernel in flight");
-            st.running = true;
-            st.preempt_counted = false;
-        }
-        for id in tag.reqs() {
-            self.reindex(id);
+        match &tag {
+            KernelTag::Prefill { req } => self.mark_running(*req),
+            KernelTag::DecodeIter { lanes } => {
+                for i in 0..lanes.len() {
+                    self.mark_running(lanes[i]);
+                }
+            }
         }
         let run = self.sim.launch(
             xpu,
@@ -504,15 +639,22 @@ impl Driver {
             return None;
         }
         let tag = self.inflight.remove(&run).expect("cancelled unknown run");
-        for id in tag.reqs() {
-            if let Some(st) = self.states.get_mut(&id) {
-                st.running = false;
+        match &tag {
+            KernelTag::Prefill { req } => self.mark_stopped(*req),
+            KernelTag::DecodeIter { lanes } => {
+                for i in 0..lanes.len() {
+                    self.mark_stopped(lanes[i]);
+                }
             }
         }
-        for id in tag.reqs() {
-            self.reindex(id);
-        }
         Some(tag)
+    }
+
+    fn mark_stopped(&mut self, id: ReqId) {
+        if let Some(st) = self.states.get_mut(&id) {
+            st.running = false;
+        }
+        self.reindex(id);
     }
 
     /// Preemption accounting hook: bump the counter and stream the
@@ -752,12 +894,41 @@ impl Driver {
         }
     }
 
-    /// Drop the oldest flows' DAG progress beyond `FLOW_DONE_MAX`
-    /// (serving-path flow ids are monotonic; a shed flow's next call
-    /// merely starts cold).
+    /// Bound the per-flow DAG-progress table (defaults to
+    /// `FLOW_DONE_MAX`; mainly for tests and memory-tight servers).
+    pub fn limit_flow_state(&mut self, cap: usize) {
+        self.flow_cap = cap.max(1);
+    }
+
+    /// Drop old flows' DAG progress beyond the cap — but never a flow
+    /// that still has live nodes anywhere in the driver (held behind
+    /// predecessors, pending, in the tool queues, or serving), since
+    /// shedding its done-set would strand those nodes forever.  Dead
+    /// flows shed oldest-first down to half the cap (amortized O(1);
+    /// serving-path flow ids are monotonic, and a shed flow's next
+    /// call merely starts cold).  The table may stay above the cap
+    /// while everything in it is live.
     fn shed_flow_state(&mut self) {
-        while self.flows.len() > FLOW_DONE_MAX {
-            let _ = self.flows.pop_first();
+        if self.flows.len() <= self.flow_cap {
+            return;
+        }
+        let mut live: FxHashSet<FlowId> = FxHashSet::default();
+        live.extend(self.held.keys().copied());
+        live.extend(self.pending.iter().filter_map(|r| r.flow_id()));
+        live.extend(self.tool_wait.iter().filter_map(|r| r.flow_id()));
+        live.extend(self.tool_inflight.values().filter_map(|r| r.flow_id()));
+        live.extend(self.states.values().filter_map(|s| s.req.flow_id()));
+        let target = (self.flow_cap / 2).max(1);
+        let excess = self.flows.len().saturating_sub(target);
+        let victims: Vec<FlowId> = self
+            .flows
+            .keys()
+            .filter(|f| !live.contains(*f))
+            .take(excess)
+            .copied()
+            .collect();
+        for f in victims {
+            self.flows.remove(&f);
         }
     }
 
@@ -785,11 +956,16 @@ impl Driver {
                 }
                 return Ok(true);
             }
-            // A veto-retry wake-up under a wall clock: nap briefly and
-            // hand control back to the policy (wall time advances on
-            // its own; the §6.5 starvation valve bounds the retries).
-            if self.wake_at_us.take().is_some() {
-                std::thread::sleep(std::time::Duration::from_micros(500));
+            // A veto-retry wake-up under a wall clock: nap until the
+            // requested instant (bounded like the arrival nap below)
+            // and hand control back to the policy (wall time advances
+            // on its own; the §6.5 starvation valve bounds retries).
+            if let Some(w) = self.wake_at_us.take() {
+                let now = self.now();
+                if w > now + 1e-9 {
+                    let us = (w - now).clamp(1.0, 1_000.0);
+                    std::thread::sleep(std::time::Duration::from_micros(us as u64));
+                }
                 return Ok(true);
             }
             // Nothing in flight: runnable iff an arrival is pending.  A
@@ -922,17 +1098,19 @@ impl Driver {
                     self.bridge.decode_iter_done(&mut refs)?;
                 }
                 for mut st in taken {
+                    let id = st.id();
                     st.running = false;
                     st.last_progress_us = t;
                     if st.cancelled {
                         // deferred lane cancellation: the iteration is
                         // over, the KV can go
                         self.retire_cancelled_state(st);
+                        self.reindex(id);
                         continue;
                     }
                     if let Some(&tok) = st.tokens.last() {
                         self.events.push(EngineEvent::TokenEmitted {
-                            id: st.id(),
+                            id,
                             token: tok,
                             n: st.tokens.len(),
                             at_us: t,
@@ -941,7 +1119,8 @@ impl Driver {
                     if st.phase == Phase::Done {
                         self.complete(st, t);
                     } else {
-                        self.states.insert(st.id(), st);
+                        self.states.insert(id, st);
+                        self.reindex(id);
                     }
                 }
             }
@@ -950,9 +1129,10 @@ impl Driver {
     }
 
     /// Request completion: stamp metrics, run flow bookkeeping, stream
-    /// `TurnDone`, and either keep the state for the final report
-    /// (virtual clock) or retire it so a long-lived server's working
-    /// set stays bounded (wall clock).
+    /// `TurnDone`, and retire the state — its metrics move to the
+    /// retired list (bounded under a wall clock, exact under a virtual
+    /// one) and the `ReqState` with its KV drops here, so the hot
+    /// `states` map holds only live work in both clock domains.
     fn complete(&mut self, mut st: ReqState, t: f64) {
         let id = st.id();
         st.metrics.done_us = Some(t);
@@ -966,11 +1146,7 @@ impl Driver {
             tokens: st.tokens.clone(),
             cached_prefix: st.cached_prefix_len,
         });
-        if self.clock.is_wall() {
-            self.retire_metrics(st.metrics.clone());
-        } else {
-            self.states.insert(id, st);
-        }
+        self.retire_metrics(st.metrics);
         self.reindex(id);
     }
 
@@ -1751,5 +1927,90 @@ mod tests {
         assert_eq!(rep.reqs.len() + rep.dropped_reqs as usize, 8);
         // the incremental accumulator still saw every completion
         assert_eq!(acc.served, 8);
+    }
+
+    #[test]
+    fn wall_wakeup_nap_is_proportional_to_the_requested_instant() {
+        let mut geo = crate::config::llama32_3b();
+        geo.n_layers = 2;
+        let soc = default_soc();
+        let mut d = Driver::open(&soc, ExecBridge::synthetic(geo), EngineClock::wall());
+        d.submit(req(1, 0.0, 8, 1)); // keeps the run alive (all_done is false)
+        d.admit_ready(512); // drain pending so step() reaches the wake branch
+        d.request_wakeup(d.now() + 5.0);
+        let t0 = std::time::Instant::now();
+        assert!(d.step().unwrap());
+        let waited = t0.elapsed();
+        assert!(
+            waited < std::time::Duration::from_micros(450),
+            "a 5 µs wake-up must not nap a fixed 500 µs (waited {waited:?})"
+        );
+    }
+
+    #[test]
+    fn flow_shedding_spares_flows_with_live_nodes() {
+        // A held multi-turn flow with the lowest flow id (the first
+        // victim under oldest-first shedding) must survive a flood of
+        // completed one-shot flows that pushes the progress table far
+        // over its cap — shedding its done-set would strand the held
+        // turns forever.
+        let mut trace = flow_turns(1, 10, 5_000.0);
+        for k in 0..40u64 {
+            trace.push(Request {
+                id: 100 + k,
+                priority: Priority::Proactive,
+                arrival_us: 0.0,
+                prompt: vec![3; 20],
+                max_new_tokens: 1,
+                profile: "flood".into(),
+                flow: Some(crate::workload::FlowBinding::linear(100 + k, 0, 1, 0.0, 0)),
+            });
+        }
+        let (mut d, ann) = mk_driver(trace);
+        d.limit_flow_state(2);
+        drive_fcfs(&mut d, &ann);
+        let rep = d.finish("fcfs-test".into()).unwrap();
+        for t in 0..3u64 {
+            assert!(
+                rep.reqs.iter().find(|m| m.id == 10 + t).unwrap().finished(),
+                "held turn {t} of the live flow completed"
+            );
+        }
+        assert_eq!(rep.reqs.iter().filter(|m| m.finished()).count(), 43);
+    }
+
+    #[test]
+    fn wall_shedding_accounts_for_every_request_at_scale() {
+        // 100k requests through a wall-clock driver with a tight
+        // retained-history window: the final report plus the dropped
+        // count must account for every request exactly, and the
+        // streaming accumulator must have seen every completion.
+        const N: u64 = 100_000;
+        let mut geo = crate::config::llama32_3b();
+        geo.n_layers = 2;
+        let soc = default_soc();
+        let ann = Annotator::new(
+            geo.clone(),
+            soc.xpus.iter().cloned().map(XpuModel::new).collect(),
+        );
+        let mut d = Driver::open(&soc, ExecBridge::synthetic(geo), EngineClock::wall());
+        d.limit_retained_history(64);
+        let mut acc = crate::metrics::ReportAccumulator::new();
+        let mut next = 0u64;
+        while next < N {
+            let hi = (next + 256).min(N);
+            for i in next..hi {
+                d.submit(req(i, 0.0, 8, 1));
+            }
+            next = hi;
+            drive_fcfs(&mut d, &ann);
+            for e in &d.take_events() {
+                acc.absorb(e);
+            }
+        }
+        let rep = d.finish("fcfs-test".into()).unwrap();
+        assert!(rep.dropped_reqs > 0);
+        assert_eq!(rep.reqs.len() + rep.dropped_reqs as usize, N as usize);
+        assert_eq!(acc.served, N as usize);
     }
 }

@@ -33,8 +33,6 @@
 //! branch).  The returned `Vec<Action>` is the decision record —
 //! [`PolicyCtx::take_actions`] at the end of `decide` yields it.
 
-use std::collections::HashMap;
-
 use anyhow::{Context, Result};
 
 use crate::config::{ModelGeometry, SocConfig};
@@ -50,8 +48,13 @@ use super::core_api::{EngineClock, EngineCore, EngineEvent};
 use super::driver::{Driver, KernelTag};
 use super::reqstate::{Phase, ReqState};
 
-/// The per-request state table every selection helper reads.
-pub type States = HashMap<ReqId, ReqState>;
+/// The per-request state table every selection helper reads.  Backed
+/// by the deterministic fx hasher (`util::fxhash`): keys are small
+/// sequential ids and the table is probed on every decision pass, so
+/// SipHash is pure overhead here.  No schedule depends on iteration
+/// order (every selection point sorts by a total key — pinned by the
+/// registry fingerprint gates).
+pub type States = crate::util::FxHashMap<ReqId, ReqState>;
 
 /// One scheduling decision taken during a [`SchedPolicy::decide`] pass.
 /// The list a pass returns is its decision record; effects were already
@@ -79,6 +82,14 @@ pub struct PolicyCtx<'a> {
 impl<'a> PolicyCtx<'a> {
     pub fn new(d: &'a mut Driver) -> Self {
         Self { d, actions: vec![] }
+    }
+
+    /// Build a ctx around a recycled action buffer (cleared here) so
+    /// the steady-state decision loop stops allocating a fresh record
+    /// per step — `PolicyEngine::step` threads the buffer through.
+    pub fn with_scratch(d: &'a mut Driver, mut scratch: Vec<Action>) -> Self {
+        scratch.clear();
+        Self { d, actions: scratch }
     }
 
     // -- read view ------------------------------------------------------
@@ -118,6 +129,55 @@ impl<'a> PolicyCtx<'a> {
     /// incrementally maintained index).
     pub fn waiting_proactive_prefills(&self) -> Vec<ReqId> {
         self.d.waiting_proactive_prefills()
+    }
+
+    /// Fill `out` with the waiting proactive prefills, in id order,
+    /// without allocating.
+    pub fn waiting_proactive_prefills_into(&self, out: &mut Vec<ReqId>) {
+        self.d.waiting_proactive_prefills_into(out);
+    }
+
+    /// Fill `out` with the waiting *reactive* prefills, in id order.
+    pub fn waiting_reactive_prefills_into(&self, out: &mut Vec<ReqId>) {
+        self.d.waiting_reactive_prefills_into(out);
+    }
+
+    /// Fill `out` with every waiting prefill of both classes, in id
+    /// order.
+    pub fn waiting_prefills_into(&self, out: &mut Vec<ReqId>) {
+        self.d.waiting_prefills_into(out);
+    }
+
+    /// Fill `out` with the waiting prefills of `reactive` class whose
+    /// current chunk is dynamic-shaped (margin-backfill candidates).
+    pub fn dynamic_chunk_candidates_into(&self, reactive: bool, out: &mut Vec<ReqId>) {
+        self.d.dynamic_chunk_candidates_into(reactive, out);
+    }
+
+    /// Any reactive request not yet Done?  (Index-backed.)
+    pub fn reactive_live(&self) -> bool {
+        self.d.reactive_live()
+    }
+
+    /// Any reactive decoder waiting at a kernel boundary?
+    pub fn has_idle_reactive_decoder(&self) -> bool {
+        self.d.has_idle_reactive_decoder()
+    }
+
+    /// Any decoder of either class waiting at a kernel boundary?
+    pub fn has_idle_decoder(&self) -> bool {
+        self.d.has_idle_decoder()
+    }
+
+    /// Borrow a cleared id buffer from the driver's scratch pool
+    /// (return it with [`PolicyCtx::put_id_buf`]).
+    pub fn take_id_buf(&mut self) -> Vec<ReqId> {
+        self.d.take_id_buf()
+    }
+
+    /// Return a loaned id buffer to the scratch pool.
+    pub fn put_id_buf(&mut self, buf: Vec<ReqId>) {
+        self.d.put_id_buf(buf);
     }
 
     /// Idle retained session caches (memory-governor accounting).
@@ -205,6 +265,8 @@ impl<'a> PolicyCtx<'a> {
         let vs = self.d.states.get_mut(&victim).expect("evict_prefill: unknown req");
         vs.restart_prefill(geo);
         vs.enqueued_at_us = now;
+        // the rebuilt plan can change the current chunk's shape
+        self.d.reindex(victim);
         self.d.note_kv_eviction(victim);
     }
 
@@ -215,6 +277,7 @@ impl<'a> PolicyCtx<'a> {
         if let Some(st) = self.d.states.get_mut(&id) {
             if st.phase == Phase::Prefilling {
                 st.restart_prefill(geo);
+                self.d.reindex(id);
             }
         }
     }
@@ -322,18 +385,22 @@ pub trait SchedPolicy: Send {
         );
     }
 
-    /// Form the next decode batch.  Default: §6.3 adaptive batching
-    /// (reactive lanes lead by wait time; proactive lanes backfill at
-    /// the boundary when allowed) from `coordinator::select`.
-    /// `now_us` is provided for deadline/slack-aware variants.
+    /// Form the next decode batch into `lanes` (cleared first; an
+    /// out-param so the per-step lane vector comes from the scratch
+    /// pool instead of a fresh allocation).  Returns whether any lane
+    /// is reactive.  Default: §6.3 adaptive batching (reactive lanes
+    /// lead by wait time; proactive lanes backfill at the boundary
+    /// when allowed) from `coordinator::select`.  `now_us` is provided
+    /// for deadline/slack-aware variants.
     fn decode_batch(
         &self,
         states: &States,
         b_max: usize,
         allow_join: bool,
         _now_us: f64,
-    ) -> (Vec<ReqId>, bool) {
-        crate::coordinator::decode_lanes(states, b_max, allow_join)
+        lanes: &mut Vec<ReqId>,
+    ) -> bool {
+        crate::coordinator::decode_lanes(states, b_max, allow_join, lanes)
     }
 
     /// Under memory pressure, which waiting prefill loses its KV?
@@ -385,6 +452,9 @@ pub struct PolicyEngine<P: SchedPolicy> {
     active: Option<Driver>,
     /// The last `step` made no progress (run idle).
     stalled: bool,
+    /// Recycled decision-record buffer threaded through each step's
+    /// [`PolicyCtx`] so steady-state passes allocate nothing.
+    actions_scratch: Vec<Action>,
 }
 
 impl<P: SchedPolicy> PolicyEngine<P> {
@@ -401,6 +471,7 @@ impl<P: SchedPolicy> PolicyEngine<P> {
             graphics: None,
             active: None,
             stalled: false,
+            actions_scratch: vec![],
         }
     }
 
@@ -467,7 +538,10 @@ impl<P: SchedPolicy> EngineCore for PolicyEngine<P> {
             .take()
             .with_context(|| format!("{}: step before start", self.policy.label()))?;
         d.admit_ready(self.policy.max_chunk());
-        let _decisions = self.policy.decide(PolicyCtx::new(&mut d));
+        let scratch = std::mem::take(&mut self.actions_scratch);
+        let mut decisions = self.policy.decide(PolicyCtx::with_scratch(&mut d, scratch));
+        decisions.clear();
+        self.actions_scratch = decisions;
         let progressed = d.step()?;
         self.stalled = !progressed;
         let events = d.take_events();

@@ -58,6 +58,7 @@ pub mod coordinator;
 pub mod engine;
 pub mod figures;
 pub mod heg;
+pub mod macrobench;
 pub mod metrics;
 pub mod model;
 pub mod runtime;

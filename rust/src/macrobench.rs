@@ -1,0 +1,223 @@
+//! `agent-xpu bench macro` — the end-to-end scheduler throughput
+//! harness behind the DESIGN.md §8 perf trajectory.
+//!
+//! Where `benches/sched_micro.rs` times isolated decision primitives
+//! (dispatch_check, lane formation, resume ranking), this harness
+//! drives **whole DES runs** through every registry policy at trace
+//! sizes from 10k to 1M synthetic requests and reports what the paper's
+//! §6.5 synchronization-cost argument actually needs: sustained
+//! requests/s through the full submit → step → finish lifecycle, and
+//! the per-step latency distribution (one `step()` is one dispatch
+//! decision point — admissions, the policy pass, and the DES event
+//! advance).
+//!
+//! Output is a strict-JSON `BENCH_sched.json` (non-finite values
+//! serialize as `null` via [`Json::num_or_null`]) with one row per
+//! (policy, trace size), so CI can parse-check it and gate the p99
+//! step latency against the §8 dispatch budget.  Everything is seeded:
+//! the same seed reproduces the same trace and therefore the same
+//! schedule on every policy (per-step *timings* are measurements, the
+//! schedules themselves are deterministic).
+
+use anyhow::Result;
+
+use crate::config::{ModelGeometry, SchedulerConfig, SocConfig, default_soc, llama32_3b};
+use crate::engine::{EngineClock, registry};
+use crate::util::bench::{fmt_ns, percentile};
+use crate::util::json::Json;
+use crate::workload::{Priority, Request};
+
+/// §8 budget the CI smoke gates on: p99 of one full `step()` — the
+/// engine's dispatch decision point — must stay under this.
+pub const P99_DISPATCH_BUDGET_US: f64 = 5.0;
+
+/// Trace sizes for the full trajectory run (the smoke run stops at the
+/// first one).
+pub const TRACE_SIZES: [usize; 3] = [10_000, 100_000, 1_000_000];
+
+/// Splitmix-style LCG so the trace needs no external RNG crate.
+struct Lcg(u64);
+
+impl Lcg {
+    fn new(seed: u64) -> Self {
+        Self(seed.wrapping_mul(0x9e37_79b9_7f4a_7c15).wrapping_add(1))
+    }
+
+    fn next(&mut self) -> u64 {
+        self.0 = self
+            .0
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        self.0 >> 33
+    }
+
+    /// Uniform in `[lo, hi]`.
+    fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.next() % (hi - lo + 1)
+    }
+}
+
+/// The bench geometry: paper model shapes with a shallow layer stack so
+/// a 1M-request DES stays a per-request handful of kernel events (the
+/// scheduler work we are measuring is per *decision*, not per layer).
+pub fn bench_geometry() -> ModelGeometry {
+    let mut g = llama32_3b();
+    g.n_layers = 2;
+    g
+}
+
+/// Seeded synthetic open-loop trace: ~25 % reactive arrivals mixed into
+/// a proactive background stream, short prompts/outputs (the §6.5
+/// regime where scheduling overhead, not kernel time, is the risk),
+/// arrival gaps that keep the virtual SoC below saturation so the live
+/// working set stays bounded and steady-state costs dominate.
+pub fn synthetic_trace(n: usize, seed: u64) -> Vec<Request> {
+    let mut rng = Lcg::new(seed);
+    let mut arrival = 0.0f64;
+    (0..n as u64)
+        .map(|i| {
+            arrival += rng.range(2_000, 10_000) as f64; // 2–10 ms gaps
+            let reactive = rng.range(0, 3) == 0;
+            Request {
+                id: i,
+                priority: if reactive { Priority::Reactive } else { Priority::Proactive },
+                arrival_us: arrival,
+                prompt: vec![1; rng.range(16, 48) as usize],
+                max_new_tokens: rng.range(1, 2) as usize,
+                profile: "macrobench".into(),
+                flow: None,
+            }
+        })
+        .collect()
+}
+
+/// One timed DES run: build the named policy, submit the whole trace,
+/// step to completion timing every step, and report throughput + the
+/// per-step latency distribution as a JSON row.
+fn run_one(policy: &str, trace: Vec<Request>, soc: &SocConfig) -> Result<Json> {
+    let n_reqs = trace.len();
+    let mut eng = registry::build(
+        policy,
+        bench_geometry(),
+        soc.clone(),
+        SchedulerConfig::default(),
+    )?;
+    eng.start(EngineClock::Virtual)?;
+    for r in trace {
+        eng.submit(r)?;
+    }
+    // Per-step samples are pre-sized: the sampling itself must not
+    // allocate mid-run and pollute the tail percentiles.
+    let mut step_ns: Vec<f64> = Vec::with_capacity(n_reqs * 12);
+    let t0 = std::time::Instant::now();
+    while eng.has_work() {
+        let t = std::time::Instant::now();
+        eng.step()?;
+        step_ns.push(t.elapsed().as_nanos() as f64);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let rep = eng.finish()?;
+    let finished =
+        rep.reqs.iter().filter(|m| m.finished()).count() + rep.dropped_reqs as usize;
+
+    let steps = step_ns.len();
+    step_ns.sort_by(|a, b| a.total_cmp(b));
+    let p99_ns = percentile(&step_ns, 0.99);
+    let mean_ns = if steps == 0 {
+        f64::NAN
+    } else {
+        step_ns.iter().sum::<f64>() / steps as f64
+    };
+    println!(
+        "{policy:<10} n={n_reqs:>9}  steps={steps:>9}  wall={wall_s:>7.3}s  \
+         {:>12.0} reqs/s  step mean {} p99 {}",
+        n_reqs as f64 / wall_s,
+        fmt_ns(mean_ns),
+        fmt_ns(p99_ns),
+    );
+    Ok(Json::obj()
+        .set("policy", policy)
+        .set("n_reqs", n_reqs)
+        .set("finished", finished)
+        .set("steps", steps)
+        .set("wall_s", Json::num_or_null(wall_s))
+        .set("reqs_per_s", Json::num_or_null(n_reqs as f64 / wall_s))
+        .set("steps_per_s", Json::num_or_null(steps as f64 / wall_s))
+        .set(
+            "step_ns",
+            Json::obj()
+                .set("mean", Json::num_or_null(mean_ns))
+                .set("p50", Json::num_or_null(percentile(&step_ns, 0.50)))
+                .set("p99", Json::num_or_null(p99_ns))
+                .set("max", Json::num_or_null(step_ns.last().copied().unwrap_or(f64::NAN)))),
+    )
+}
+
+/// The whole macro bench: every registry policy at each trace size
+/// (`smoke` = smallest size only, the CI tier-1 gate).  Returns the
+/// `BENCH_sched` JSON document.
+pub fn bench_sched(seed: u64, smoke: bool) -> Result<Json> {
+    let soc = default_soc();
+    let sizes: &[usize] = if smoke { &TRACE_SIZES[..1] } else { &TRACE_SIZES[..] };
+    let mut rows: Vec<Json> = vec![];
+    for &n in sizes {
+        for &policy in registry::names() {
+            rows.push(run_one(policy, synthetic_trace(n, seed), &soc)?);
+        }
+    }
+    Ok(Json::obj()
+        .set("name", "BENCH_sched")
+        .set("seed", seed as i64)
+        .set("smoke", smoke)
+        .set("budget_p99_dispatch_us", P99_DISPATCH_BUDGET_US)
+        .set("sizes", sizes.to_vec())
+        .set("rows", rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_seeded_and_shaped() {
+        let a = synthetic_trace(500, 11);
+        let b = synthetic_trace(500, 11);
+        assert_eq!(a.len(), 500);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.arrival_us, y.arrival_us);
+            assert_eq!(x.prompt.len(), y.prompt.len());
+            assert_eq!(x.priority, y.priority);
+        }
+        let c = synthetic_trace(500, 12);
+        assert!(
+            a.iter().zip(&c).any(|(x, y)| x.arrival_us != y.arrival_us),
+            "different seeds must differ"
+        );
+        // arrivals strictly increase (open-loop stream)
+        assert!(a.windows(2).all(|w| w[0].arrival_us < w[1].arrival_us));
+        // both classes present
+        assert!(a.iter().any(|r| r.priority == Priority::Reactive));
+        assert!(a.iter().any(|r| r.priority == Priority::Proactive));
+    }
+
+    /// A miniature end-to-end pass over every registry policy: the
+    /// emitted document parses back strictly, every row completes its
+    /// whole trace, and the row shape CI gates on is present.
+    #[test]
+    fn bench_rows_complete_and_serialize() {
+        let soc = default_soc();
+        for &policy in registry::names() {
+            let row = run_one(policy, synthetic_trace(60, 7), &soc).unwrap();
+            let j = Json::parse(&row.to_string()).unwrap();
+            assert_eq!(j.get("policy").unwrap().as_str().unwrap(), policy);
+            assert_eq!(
+                j.get("finished").unwrap().as_usize().unwrap(),
+                60,
+                "{policy}: every request must finish"
+            );
+            assert!(j.get("steps").unwrap().as_usize().unwrap() > 0);
+            assert!(j.get("step_ns").unwrap().get("p99").unwrap().as_f64().is_ok());
+        }
+    }
+}

@@ -3,6 +3,7 @@
 //! ```text
 //! agent-xpu fig <affinity|contention|batching|schemes|proactive|mixed|flows|workflows|energy|ablation|all>
 //!           [--out results/] [--duration 120] [--seed 7] [--smoke]
+//! agent-xpu bench macro [--smoke] [--seed 42] [--out results/]
 //! agent-xpu run --rate 1.5 --interval 12 --duration 60 [--engine <policy>]
 //! agent-xpu serve --artifacts artifacts/small [--socket /tmp/agent-xpu.sock]
 //!           [--config runtime.json] [--b-max 8] [--session-capacity 32]
@@ -42,6 +43,7 @@ fn run() -> Result<()> {
     let args = Args::from_env()?;
     match args.positional.first().map(|s| s.as_str()) {
         Some("fig") => cmd_fig(&args),
+        Some("bench") => cmd_bench(&args),
         Some("run") => cmd_run(&args),
         Some("serve") => cmd_serve(&args),
         Some("policies") => cmd_policies(),
@@ -49,7 +51,7 @@ fn run() -> Result<()> {
         Some("soc-probe") => cmd_soc_probe(),
         _ => {
             eprintln!(
-                "usage: agent-xpu <fig|run|serve|policies|inspect|soc-probe> [flags]\n\
+                "usage: agent-xpu <fig|bench|run|serve|policies|inspect|soc-probe> [flags]\n\
                  see `rust/src/main.rs` docs for flags"
             );
             Ok(())
@@ -147,6 +149,25 @@ fn cmd_fig(args: &Args) -> Result<()> {
         bail!("unknown figure {which:?}");
     }
     Ok(())
+}
+
+/// `agent-xpu bench macro [--smoke] [--seed 42] [--out results]` — the
+/// DESIGN.md §8 perf-trajectory harness: full DES runs through every
+/// registry policy at 10k/100k/1M synthetic requests (`--smoke`: 10k
+/// only, the CI tier-1 gate), written as strict-JSON
+/// `results/BENCH_sched.json`.
+fn cmd_bench(args: &Args) -> Result<()> {
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("macro");
+    let out = args.str_or("out", "results");
+    let seed = args.usize_or("seed", 42)? as u64;
+    let smoke = args.bool_or("smoke", false);
+    match which {
+        "macro" => {
+            let j = agent_xpu::macrobench::bench_sched(seed, smoke)?;
+            write_result(&out, "BENCH_sched", &j)
+        }
+        _ => bail!("unknown bench {which:?} (expected `macro`)"),
+    }
 }
 
 fn cmd_run(args: &Args) -> Result<()> {

@@ -5,6 +5,8 @@
 
 use std::time::Instant;
 
+use crate::util::json::Json;
+
 /// Summary statistics over per-iteration wall-clock samples.
 #[derive(Debug, Clone)]
 pub struct BenchStats {
@@ -17,6 +19,19 @@ pub struct BenchStats {
 }
 
 impl BenchStats {
+    /// Strict-JSON row (non-finite values become `null` via
+    /// [`Json::num_or_null`]) so micro and macro benches share one
+    /// `BENCH_*.json` shape.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("iters", self.iters)
+            .set("mean_ns", Json::num_or_null(self.mean_ns))
+            .set("p50_ns", Json::num_or_null(self.p50_ns))
+            .set("p99_ns", Json::num_or_null(self.p99_ns))
+            .set("min_ns", Json::num_or_null(self.min_ns))
+    }
+
     pub fn report(&self) -> String {
         format!(
             "{:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p99 {:>12}",
@@ -41,7 +56,8 @@ pub fn fmt_ns(ns: f64) -> String {
     }
 }
 
-fn percentile(sorted: &[f64], p: f64) -> f64 {
+/// Nearest-rank percentile over an ascending-sorted sample slice.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
     if sorted.is_empty() {
         return f64::NAN;
     }
@@ -134,6 +150,31 @@ mod tests {
         assert_eq!(s.iters, 50);
         assert!(s.min_ns <= s.p50_ns && s.p50_ns <= s.p99_ns);
         assert!(s.mean_ns > 0.0);
+    }
+
+    #[test]
+    fn to_json_round_trips_and_nan_becomes_null() {
+        let s = BenchStats {
+            name: "case".into(),
+            iters: 10,
+            mean_ns: 1.5,
+            p50_ns: 1.0,
+            p99_ns: f64::NAN,
+            min_ns: 0.5,
+        };
+        let txt = s.to_json().to_string();
+        let j = Json::parse(&txt).unwrap();
+        assert_eq!(j.get("name").unwrap().as_str().unwrap(), "case");
+        assert_eq!(j.get("iters").unwrap().as_usize().unwrap(), 10);
+        assert_eq!(j.get("p99_ns").unwrap(), &Json::Null);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let s = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&s, 0.0), 1.0);
+        assert_eq!(percentile(&s, 1.0), 4.0);
+        assert!(percentile(&[], 0.5).is_nan());
     }
 
     #[test]

@@ -11,8 +11,13 @@
 //! - [`cli`] — minimal flag parser for the `agent-xpu` binary.
 //! - [`bench`] — the measurement harness used by `cargo bench`
 //!   (`harness = false`) targets: warmup, iterations, mean/p50/p99.
+//! - [`fxhash`] — deterministic multiply-rotate hasher for the hot
+//!   scheduler maps (integer keys, no adversarial input).
 
 pub mod bench;
 pub mod cli;
+pub mod fxhash;
 pub mod json;
 pub mod rng;
+
+pub use fxhash::{FxHashMap, FxHashSet};
