@@ -9,5 +9,5 @@ mod runtime_cfg;
 pub use manifest::{ArgSpec, ArtifactMeta, KernelKind, Manifest, ModelGeometry};
 pub use presets::llama32_3b;
 pub use runtime_cfg::{
-    RuntimeConfig, SchedulerConfig, SocConfig, XpuConfig, default_soc,
+    OverloadConfig, RuntimeConfig, SchedulerConfig, SocConfig, XpuConfig, default_soc,
 };

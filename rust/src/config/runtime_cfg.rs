@@ -236,6 +236,80 @@ impl SchedulerConfig {
     }
 }
 
+/// Overload-protection knobs for the serving frontend (DESIGN.md §7):
+/// admission control, priority-aware load shedding, and the write-ahead
+/// journal's group-commit policy.  All defaults keep the pre-overload
+/// behaviour observable: bounded queues large enough that light traffic
+/// never rejects, and TTFT-based shedding disabled until an SLO is set.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OverloadConfig {
+    /// Max requests queued ahead of the engine (admission bound).  A
+    /// full queue rejects proactive arrivals with a `retry_after`
+    /// frame; reactive arrivals displace the newest queued proactive
+    /// request first.  0 = unbounded (the legacy behaviour).
+    pub max_queue_depth: usize,
+    /// Max distinct live flows (session tags + untagged singles) the
+    /// server admits concurrently.  0 = unbounded.
+    pub max_live_flows: usize,
+    /// Reactive TTFT service-level objective (ms).  0 disables the
+    /// TTFT leg of the overload detector — shedding then reacts to
+    /// queue depth only.
+    pub reactive_ttft_slo_ms: f64,
+    /// Measured reactive p99 TTFT above `slo × slo_multiple` drives
+    /// the detector to its strongest response (park running proactive
+    /// decodes).
+    pub slo_multiple: f64,
+    /// Hint clients receive on `retry_after` / `done.shed` frames (ms).
+    pub retry_after_ms: f64,
+    /// Journal group-commit: fsync after this many appended records
+    /// (1 = every record durable before its ack; higher batches the
+    /// barrier).  0 is treated as 1.
+    pub fsync_every: usize,
+}
+
+impl Default for OverloadConfig {
+    fn default() -> Self {
+        Self {
+            max_queue_depth: 256,
+            max_live_flows: 1024,
+            reactive_ttft_slo_ms: 0.0,
+            slo_multiple: 4.0,
+            retry_after_ms: 250.0,
+            fsync_every: 8,
+        }
+    }
+}
+
+impl OverloadConfig {
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let d = Self::default();
+        let u = |k: &str, dv: usize| -> Result<usize> {
+            v.opt(k).map(|x| x.as_usize()).unwrap_or(Ok(dv))
+        };
+        let f = |k: &str, dv: f64| -> Result<f64> {
+            v.opt(k).map(|x| x.as_f64()).unwrap_or(Ok(dv))
+        };
+        Ok(Self {
+            max_queue_depth: u("max_queue_depth", d.max_queue_depth)?,
+            max_live_flows: u("max_live_flows", d.max_live_flows)?,
+            reactive_ttft_slo_ms: f("reactive_ttft_slo_ms", d.reactive_ttft_slo_ms)?,
+            slo_multiple: f("slo_multiple", d.slo_multiple)?,
+            retry_after_ms: f("retry_after_ms", d.retry_after_ms)?,
+            fsync_every: u("fsync_every", d.fsync_every)?,
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("max_queue_depth", self.max_queue_depth)
+            .set("max_live_flows", self.max_live_flows)
+            .set("reactive_ttft_slo_ms", self.reactive_ttft_slo_ms)
+            .set("slo_multiple", self.slo_multiple)
+            .set("retry_after_ms", self.retry_after_ms)
+            .set("fsync_every", self.fsync_every)
+    }
+}
+
 /// Top-level runtime configuration.
 #[derive(Debug, Clone)]
 pub struct RuntimeConfig {
@@ -243,6 +317,8 @@ pub struct RuntimeConfig {
     pub artifacts: String,
     pub soc: SocConfig,
     pub scheduler: SchedulerConfig,
+    /// Overload protection for the serving frontend.
+    pub overload: OverloadConfig,
     /// Execute kernels for real on PJRT (`true`) or timing-only DES
     /// (`false`) — big sweeps use timing-only.
     pub real_compute: bool,
@@ -254,6 +330,7 @@ impl RuntimeConfig {
             artifacts: artifacts.into(),
             soc: default_soc(),
             scheduler: SchedulerConfig::default(),
+            overload: OverloadConfig::default(),
             real_compute: true,
         }
     }
@@ -275,6 +352,10 @@ impl RuntimeConfig {
                 Some(s) => SchedulerConfig::from_json(s)?,
                 None => SchedulerConfig::default(),
             },
+            overload: match v.opt("overload") {
+                Some(s) => OverloadConfig::from_json(s)?,
+                None => OverloadConfig::default(),
+            },
             real_compute: v
                 .opt("real_compute")
                 .map(|x| x.as_bool())
@@ -287,6 +368,7 @@ impl RuntimeConfig {
             .set("artifacts", self.artifacts.as_str())
             .set("soc", self.soc.to_json())
             .set("scheduler", self.scheduler.to_json())
+            .set("overload", self.overload.to_json())
             .set("real_compute", self.real_compute)
     }
 }
@@ -403,6 +485,25 @@ mod tests {
         assert!(!back.real_compute);
         assert_eq!(back.soc, cfg.soc);
         assert_eq!(back.scheduler, cfg.scheduler);
+    }
+
+    #[test]
+    fn overload_knobs_roundtrip_and_default_sane() {
+        let d = OverloadConfig::default();
+        assert!(d.max_queue_depth > 0 && d.max_live_flows > 0);
+        assert_eq!(d.reactive_ttft_slo_ms, 0.0, "TTFT shedding off by default");
+        let v = Json::parse(
+            r#"{"artifacts": "a", "overload": {"max_queue_depth": 4,
+                "reactive_ttft_slo_ms": 50.0, "fsync_every": 1}}"#,
+        )
+        .unwrap();
+        let cfg = RuntimeConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.overload.max_queue_depth, 4);
+        assert!((cfg.overload.reactive_ttft_slo_ms - 50.0).abs() < 1e-9);
+        assert_eq!(cfg.overload.fsync_every, 1);
+        assert_eq!(cfg.overload.max_live_flows, d.max_live_flows, "default preserved");
+        let back = OverloadConfig::from_json(&cfg.overload.to_json()).unwrap();
+        assert_eq!(back, cfg.overload);
     }
 
     #[test]

@@ -101,6 +101,68 @@ impl EngineEvent {
     }
 }
 
+/// What the overload detector measured at one decision point — the
+/// serving loop computes this and asks the engine (and through it the
+/// policy) how hard to shed (DESIGN.md §7).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OverloadSignal {
+    /// Requests queued ahead of the engine (admission queue).
+    pub queue_depth: usize,
+    /// Configured admission bound (0 = unbounded).
+    pub max_queue_depth: usize,
+    /// Measured reactive p99 TTFT over the recent window (ms); NaN
+    /// before the first reactive completion.
+    pub reactive_ttft_p99_ms: f64,
+    /// Configured reactive TTFT SLO (ms); 0 disables the TTFT leg.
+    pub reactive_ttft_slo_ms: f64,
+}
+
+/// How aggressively to degrade proactive work right now, weakest to
+/// strongest.  Each level implies the ones below it: parking running
+/// proactive decodes also pauses proactive admissions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ShedLevel {
+    /// No overload: admit and run everything.
+    None,
+    /// Stop admitting *new* proactive requests (reject with
+    /// `retry_after`); queued and running proactive work proceeds.
+    PauseProactive,
+    /// Additionally cancel queued (not yet running) proactive
+    /// requests, newest first — least invested work dies first.
+    CancelQueuedProactive,
+    /// Additionally preempt-and-park running proactive decodes so
+    /// every XPU cycle serves reactive work; parked requests resume
+    /// when the overload clears.
+    ParkRunningProactive,
+}
+
+/// The default overload → shed-level mapping every policy inherits:
+/// thresholds on queue occupancy and on measured reactive p99 TTFT as
+/// a multiple of its SLO (either leg alone can escalate; a disabled
+/// leg contributes nothing).
+pub fn default_shed_level(s: &OverloadSignal) -> ShedLevel {
+    let depth_frac = if s.max_queue_depth == 0 {
+        0.0
+    } else {
+        s.queue_depth as f64 / s.max_queue_depth as f64
+    };
+    let ttft_frac = if s.reactive_ttft_slo_ms <= 0.0 || !s.reactive_ttft_p99_ms.is_finite()
+    {
+        0.0
+    } else {
+        s.reactive_ttft_p99_ms / s.reactive_ttft_slo_ms
+    };
+    if depth_frac >= 1.0 || ttft_frac >= 4.0 {
+        ShedLevel::ParkRunningProactive
+    } else if depth_frac >= 0.75 || ttft_frac >= 2.0 {
+        ShedLevel::CancelQueuedProactive
+    } else if depth_frac >= 0.5 || ttft_frac > 1.0 {
+        ShedLevel::PauseProactive
+    } else {
+        ShedLevel::None
+    }
+}
+
 /// The streaming engine core: every engine (Agent.xpu and the
 /// baselines) is a scheduling policy behind this one surface.
 ///
@@ -154,6 +216,14 @@ pub trait EngineCore {
         None
     }
 
+    /// How hard should the serving loop degrade proactive work given
+    /// what the overload detector measured?  `PolicyEngine` delegates
+    /// to [`SchedPolicy::shed_level`](crate::engine::SchedPolicy::shed_level),
+    /// so every registry policy inherits (or overrides) the response.
+    fn overload_response(&self, s: &OverloadSignal) -> ShedLevel {
+        default_shed_level(s)
+    }
+
     /// Attach a synthetic graphics workload to subsequent runs (frames
     /// render on the iGPU with compositor priority; jank lands in
     /// `RunReport::frames_missed`).  Virtual-clock runs only; `None`
@@ -182,5 +252,64 @@ pub trait EngineCore {
             let _ = self.step()?;
         }
         self.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sig(depth: usize, cap: usize, p99: f64, slo: f64) -> OverloadSignal {
+        OverloadSignal {
+            queue_depth: depth,
+            max_queue_depth: cap,
+            reactive_ttft_p99_ms: p99,
+            reactive_ttft_slo_ms: slo,
+        }
+    }
+
+    #[test]
+    fn shed_levels_escalate_with_queue_occupancy() {
+        assert_eq!(default_shed_level(&sig(0, 100, f64::NAN, 0.0)), ShedLevel::None);
+        assert_eq!(
+            default_shed_level(&sig(50, 100, f64::NAN, 0.0)),
+            ShedLevel::PauseProactive
+        );
+        assert_eq!(
+            default_shed_level(&sig(75, 100, f64::NAN, 0.0)),
+            ShedLevel::CancelQueuedProactive
+        );
+        assert_eq!(
+            default_shed_level(&sig(100, 100, f64::NAN, 0.0)),
+            ShedLevel::ParkRunningProactive
+        );
+    }
+
+    #[test]
+    fn shed_levels_escalate_with_ttft_slo_violation() {
+        assert_eq!(default_shed_level(&sig(0, 0, 99.0, 100.0)), ShedLevel::None);
+        assert_eq!(
+            default_shed_level(&sig(0, 0, 150.0, 100.0)),
+            ShedLevel::PauseProactive
+        );
+        assert_eq!(
+            default_shed_level(&sig(0, 0, 250.0, 100.0)),
+            ShedLevel::CancelQueuedProactive
+        );
+        assert_eq!(
+            default_shed_level(&sig(0, 0, 500.0, 100.0)),
+            ShedLevel::ParkRunningProactive
+        );
+    }
+
+    #[test]
+    fn disabled_legs_never_shed() {
+        // unbounded queue + no SLO: any depth / latency is "fine"
+        assert_eq!(default_shed_level(&sig(10_000, 0, 1e9, 0.0)), ShedLevel::None);
+        // NaN p99 (no reactive completions yet) contributes nothing
+        assert_eq!(default_shed_level(&sig(0, 100, f64::NAN, 10.0)), ShedLevel::None);
+        // levels are ordered so detectors can compare strength
+        assert!(ShedLevel::ParkRunningProactive > ShedLevel::PauseProactive);
+        assert!(ShedLevel::PauseProactive > ShedLevel::None);
     }
 }

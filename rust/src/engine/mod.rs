@@ -25,7 +25,9 @@ mod reqstate;
 
 pub use bridge::ExecBridge;
 pub use core_api::EngineCore as Engine;
-pub use core_api::{EngineClock, EngineCore, EngineEvent};
+pub use core_api::{
+    EngineClock, EngineCore, EngineEvent, OverloadSignal, ShedLevel, default_shed_level,
+};
 pub use driver::{Driver, KernelTag};
 pub use policy::{
     Action, IgpuGateCtx, PolicyCtx, PolicyEngine, ResumeCtx, SchedPolicy, States,

@@ -44,7 +44,9 @@ use crate::trace::Trace;
 use crate::workload::{FlowId, ReqId, Request};
 
 use super::bridge::ExecBridge;
-use super::core_api::{EngineClock, EngineCore, EngineEvent};
+use super::core_api::{
+    EngineClock, EngineCore, EngineEvent, OverloadSignal, ShedLevel, default_shed_level,
+};
 use super::driver::{Driver, KernelTag};
 use super::reqstate::{Phase, ReqState};
 
@@ -431,6 +433,17 @@ pub trait SchedPolicy: Send {
         let frame_ok = !g.yield_to_graphics || !g.frame_pending;
         duty_ok && frame_ok
     }
+
+    /// Overload → shed-level mapping (priority-aware load shedding,
+    /// DESIGN.md §7): given what the serving loop's overload detector
+    /// measured, how hard should *proactive* work degrade right now?
+    /// The default is the shared threshold ladder
+    /// ([`default_shed_level`]) — every registry policy inherits it,
+    /// and a policy with its own notion of overload (e.g. a
+    /// deadline-driven one) overrides just this hook.
+    fn shed_level(&self, s: &OverloadSignal) -> ShedLevel {
+        default_shed_level(s)
+    }
 }
 
 /// The one generic engine: a [`Driver`] + the full [`EngineCore`]
@@ -564,6 +577,10 @@ impl<P: SchedPolicy> EngineCore for PolicyEngine<P> {
 
     fn last_trace(&self) -> Option<&Trace> {
         self.last_trace.as_ref()
+    }
+
+    fn overload_response(&self, s: &OverloadSignal) -> ShedLevel {
+        self.policy.shed_level(s)
     }
 
     fn set_graphics(&mut self, cfg: Option<GraphicsConfig>) {

@@ -8,6 +8,7 @@
 mod e2e;
 mod energy;
 mod micro;
+mod overload;
 mod workflows;
 
 pub use e2e::{
@@ -16,6 +17,7 @@ pub use e2e::{
 };
 pub use energy::fig_energy;
 pub use micro::{fig_affinity, fig_batching, fig_contention};
+pub use overload::fig_overload;
 pub use workflows::{
     dag_fanout_trace, dag_trace_mixed, edf_contention_trace, fig_workflows,
 };

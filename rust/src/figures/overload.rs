@@ -1,0 +1,310 @@
+//! Overload figure (DESIGN.md §7): graceful degradation under
+//! admission control + priority-aware shedding versus the cliff-edge
+//! un-governed baseline.
+//!
+//! For every registry policy the harness first *calibrates*: a
+//! light-load run measures the policy's own reactive p99 TTFT, and the
+//! SLO is set to a multiple of that (clamped, so a baseline whose
+//! light-load tail is already seconds long cannot award itself an
+//! unfalsifiable budget).  It then ramps the proactive arrival rate
+//! past capacity and serves each point twice over the identical trace:
+//!
+//! - **governed** — through [`run_governed`]: bounded queue,
+//!   reactive-displaces-proactive admission, and the policy's
+//!   [`SchedPolicy::shed_level`] escalation
+//!   (pause → cancel queued → park running);
+//! - **un-governed** — the plain `EngineCore::run` batch driver, every
+//!   arrival admitted, nothing shed.
+//!
+//! Reactive p99 TTFT is measured over the steady-state tail (arrivals
+//! after the warmup fraction): the governor needs a few detector
+//! passes to engage, and serving benchmarks exclude ramp-up for the
+//! same reason.  The acceptance claim: at the deepest overload the
+//! governed engine keeps reactive p99 within the SLO multiple while
+//! proactive throughput degrades first; the un-governed run blows
+//! through it.
+//!
+//! [`SchedPolicy::shed_level`]: crate::engine::SchedPolicy::shed_level
+
+use anyhow::Result;
+
+use crate::config::{OverloadConfig, SchedulerConfig, SocConfig, llama32_3b};
+use crate::engine::{EngineCore, registry};
+use crate::metrics::{RunReport, percentile};
+use crate::server::{GovernedOutcome, run_governed};
+use crate::util::bench::Table;
+use crate::util::json::Json;
+use crate::workload::Priority;
+
+use super::mixed_trace;
+
+/// Proactive arrivals/s at ramp multiplier 1.
+const BASE_PROACTIVE_RATE: f64 = 1.0;
+
+/// Reactive arrival spacing (s): dense enough for a meaningful p99.
+const REACTIVE_INTERVAL_S: f64 = 0.5;
+
+/// Fraction of the trace treated as warmup when measuring p99: the
+/// detector needs queue depth or a finished slow reactive turn before
+/// it can escalate, so arrivals during ramp-up see pre-governance
+/// collisions in every policy without a preemptive scheduler.
+const WARMUP_FRAC: f64 = 0.5;
+
+/// SLO calibration: `clamp(CAL_MULT × light-load p99, floor, ceil)`.
+const CAL_MULT: f64 = 4.0;
+const SLO_FLOOR_MS: f64 = 50.0;
+const SLO_CEIL_MS: f64 = 1000.0;
+
+/// Governed queue bound for the ramp.
+const QUEUE_DEPTH: usize = 32;
+
+/// Reactive p99 TTFT (ms) over finished reactive arrivals at or after
+/// `from_us`; NaN when no such request finished.
+fn reactive_p99_ttft_ms(rep: &RunReport, from_us: f64) -> f64 {
+    let mut ttfts: Vec<f64> = rep
+        .reqs
+        .iter()
+        .filter(|r| r.priority == Priority::Reactive && r.arrival_us >= from_us)
+        .filter_map(|r| r.first_token_us.map(|ft| (ft - r.arrival_us) / 1e3))
+        .collect();
+    if ttfts.is_empty() {
+        return f64::NAN;
+    }
+    ttfts.sort_by(f64::total_cmp);
+    percentile(&ttfts, 0.99)
+}
+
+fn overload_row(
+    policy: &str,
+    mult: f64,
+    governed: bool,
+    rep: &RunReport,
+    p99_ms: f64,
+    slo_ms: f64,
+    threshold_ms: f64,
+    out: Option<&GovernedOutcome>,
+) -> Json {
+    let pro = rep.class(Priority::Proactive);
+    Json::obj()
+        .set("policy", policy)
+        .set("engine", rep.engine.as_str())
+        .set("mult", mult)
+        .set("proactive_rate_per_s", BASE_PROACTIVE_RATE * mult)
+        .set("governed", governed)
+        .set("reactive_p99_ttft_ms", Json::num_or_null(p99_ms))
+        .set("slo_ms", slo_ms)
+        .set("threshold_ms", threshold_ms)
+        .set("within_slo_multiple", p99_ms.is_finite() && p99_ms <= threshold_ms)
+        .set("proactive_tok_s", pro.tokens_per_s)
+        .set("rejected_reactive", out.map(|o| o.rejected_reactive).unwrap_or(0))
+        .set("rejected_proactive", out.map(|o| o.rejected_proactive).unwrap_or(0))
+        .set("displaced", out.map(|o| o.displaced).unwrap_or(0))
+        .set("shed", out.map(|o| o.shed).unwrap_or(0))
+        .set("parked", out.map(|o| o.parked).unwrap_or(0))
+}
+
+fn fig_overload_for(
+    policies: &[&str],
+    soc: &SocConfig,
+    duration_s: f64,
+    seed: u64,
+    mults: &[f64],
+) -> Result<Json> {
+    let geo = llama32_3b();
+    let warmup_us = WARMUP_FRAC * duration_s * 1e6;
+    let mut rows = vec![];
+    let mut table = Table::new(&[
+        "policy", "mult", "mode", "rt p99 ttft ms", "slo×4 ms", "pro tok/s",
+        "rej", "shed", "parked",
+    ]);
+    for policy in policies {
+        // Calibration: the policy's own light-load reactive tail sets
+        // its SLO (clamped: a sloppy baseline cannot self-award an
+        // unfalsifiable budget, and a tight one keeps a testable floor)
+        let light = mixed_trace(0.25, 1.0, duration_s, seed, &geo);
+        let light_rep = registry::build(
+            policy,
+            geo.clone(),
+            soc.clone(),
+            SchedulerConfig::default(),
+        )?
+        .run(light)?;
+        let light_p99 = reactive_p99_ttft_ms(&light_rep, warmup_us);
+        let slo_ms = if light_p99.is_finite() {
+            (CAL_MULT * light_p99).clamp(SLO_FLOOR_MS, SLO_CEIL_MS)
+        } else {
+            SLO_CEIL_MS
+        };
+        let cfg = OverloadConfig {
+            max_queue_depth: QUEUE_DEPTH,
+            max_live_flows: 0,
+            reactive_ttft_slo_ms: slo_ms,
+            slo_multiple: 4.0,
+            retry_after_ms: 250.0,
+            fsync_every: 1,
+        };
+        let threshold_ms = slo_ms * cfg.slo_multiple;
+        for &mult in mults {
+            let trace = mixed_trace(
+                BASE_PROACTIVE_RATE * mult,
+                REACTIVE_INTERVAL_S,
+                duration_s,
+                seed.wrapping_add(mult as u64),
+                &geo,
+            );
+            // un-governed: every arrival admitted, nothing shed
+            let rep_un = registry::build(
+                policy,
+                geo.clone(),
+                soc.clone(),
+                SchedulerConfig::default(),
+            )?
+            .run(trace.clone())?;
+            let p99_un = reactive_p99_ttft_ms(&rep_un, warmup_us);
+            rows.push(overload_row(
+                policy, mult, false, &rep_un, p99_un, slo_ms, threshold_ms, None,
+            ));
+            table.row(vec![
+                (*policy).into(),
+                format!("{mult:.0}x"),
+                "raw".into(),
+                format!("{p99_un:.1}"),
+                format!("{threshold_ms:.0}"),
+                format!("{:.1}", rep_un.class(Priority::Proactive).tokens_per_s),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ]);
+            // governed: same trace through the admission gate + the
+            // policy's shed-level escalation
+            let mut eng = registry::build(
+                policy,
+                geo.clone(),
+                soc.clone(),
+                SchedulerConfig::default(),
+            )?;
+            let out = run_governed(eng.as_mut(), trace, &cfg)?;
+            let p99_gov = reactive_p99_ttft_ms(&out.report, warmup_us);
+            table.row(vec![
+                (*policy).into(),
+                format!("{mult:.0}x"),
+                "gov".into(),
+                format!("{p99_gov:.1}"),
+                format!("{threshold_ms:.0}"),
+                format!("{:.1}", out.report.class(Priority::Proactive).tokens_per_s),
+                format!("{}", out.rejected_reactive + out.rejected_proactive),
+                format!("{}", out.shed),
+                format!("{}", out.parked),
+            ]);
+            let rep = out.report.clone();
+            rows.push(overload_row(
+                policy,
+                mult,
+                true,
+                &rep,
+                p99_gov,
+                slo_ms,
+                threshold_ms,
+                Some(&out),
+            ));
+        }
+    }
+    println!("\n== fig-overload: admission control & load shedding (DESIGN.md §7) ==");
+    println!(
+        "(ramp past saturation; gov = bounded queue + priority shedding, raw = admit all)"
+    );
+    table.print();
+    Ok(Json::obj().set("figure", "overload").set("rows", Json::Arr(rows)))
+}
+
+/// The overload ramp over every registry policy.  Short durations
+/// (`--smoke`) use a two-point ramp; full runs sweep five multipliers.
+pub fn fig_overload(soc: &SocConfig, duration_s: f64, seed: u64) -> Result<Json> {
+    let mults: &[f64] = if duration_s < 15.0 {
+        &[1.0, 8.0]
+    } else {
+        &[1.0, 2.0, 4.0, 8.0, 16.0]
+    };
+    fig_overload_for(registry::names(), soc, duration_s, seed, mults)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::default_soc;
+
+    /// The acceptance criterion end-to-end on the cliff-edge baseline:
+    /// at the deepest overload point the governed cpu-fcfs engine keeps
+    /// reactive p99 TTFT within the calibrated SLO multiple (shedding
+    /// proactive work to do it) while the un-governed run blows past
+    /// it; the governed agent-xpu engine stays within budget too.  The
+    /// JSON must be NaN-free and parse back.
+    #[test]
+    fn governed_ramp_degrades_gracefully_where_ungoverned_cliffs() {
+        let j =
+            fig_overload_for(&["cpu-fcfs", "agent-xpu"], &default_soc(), 10.0, 7, &[8.0])
+                .unwrap();
+        let text = j.to_string();
+        assert!(!text.contains("NaN"), "invalid JSON token leaked: {text}");
+        let back = Json::parse(&text).expect("figure output must parse");
+        let rows = back.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 4, "2 policies x 1 mult x (raw, gov)");
+        let row = |policy: &str, governed: bool| -> &Json {
+            rows.iter()
+                .find(|r| {
+                    r.get("policy").unwrap().as_str().unwrap() == policy
+                        && r.get("governed").unwrap().as_bool().unwrap() == governed
+                })
+                .unwrap_or_else(|| panic!("row {policy}/governed={governed}"))
+        };
+        let p99 = |policy: &str, governed: bool| -> f64 {
+            row(policy, governed)
+                .get("reactive_p99_ttft_ms")
+                .unwrap()
+                .as_f64()
+                .expect("steady-state reactive requests must finish")
+        };
+        let threshold = row("cpu-fcfs", false)
+            .get("threshold_ms")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        // the un-governed FCFS baseline cliffs: reactive arrivals sit
+        // behind an unbounded proactive backlog
+        assert!(
+            p99("cpu-fcfs", false) > threshold,
+            "un-governed cpu-fcfs must blow past {threshold}ms, got {}",
+            p99("cpu-fcfs", false)
+        );
+        // governed, the same policy sheds proactive work first and the
+        // reactive tail stays within the SLO multiple
+        assert!(
+            p99("cpu-fcfs", true) <= threshold,
+            "governed cpu-fcfs must stay within {threshold}ms, got {}",
+            p99("cpu-fcfs", true)
+        );
+        let gov = row("cpu-fcfs", true);
+        let shed_total = gov.get("shed").unwrap().as_usize().unwrap()
+            + gov.get("parked").unwrap().as_usize().unwrap()
+            + gov.get("rejected_proactive").unwrap().as_usize().unwrap()
+            + gov.get("displaced").unwrap().as_usize().unwrap();
+        assert!(shed_total > 0, "graceful degradation requires actual shedding");
+        // proactive throughput is what degrades: governed serves fewer
+        // proactive tokens than the un-governed run at the same load
+        let pro = |governed: bool| {
+            row("cpu-fcfs", governed).get("proactive_tok_s").unwrap().as_f64().unwrap()
+        };
+        assert!(pro(true) <= pro(false), "proactive throughput must degrade first");
+        // governance holds for the preemptive flagship engine too
+        let agent_threshold = row("agent-xpu", true)
+            .get("threshold_ms")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert!(
+            p99("agent-xpu", true) <= agent_threshold,
+            "governed agent-xpu must stay within {agent_threshold}ms, got {}",
+            p99("agent-xpu", true)
+        );
+    }
+}

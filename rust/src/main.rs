@@ -1,13 +1,15 @@
 //! `agent-xpu` — launcher CLI.
 //!
 //! ```text
-//! agent-xpu fig <affinity|contention|batching|schemes|proactive|mixed|flows|workflows|energy|ablation|all>
+//! agent-xpu fig <affinity|contention|batching|schemes|proactive|mixed|flows|workflows|energy|overload|ablation|all>
 //!           [--out results/] [--duration 120] [--seed 7] [--smoke]
 //! agent-xpu bench macro [--smoke] [--seed 42] [--out results/]
 //! agent-xpu run --rate 1.5 --interval 12 --duration 60 [--engine <policy>]
 //! agent-xpu serve --artifacts artifacts/small [--socket /tmp/agent-xpu.sock]
 //!           [--config runtime.json] [--b-max 8] [--session-capacity 32]
 //!           [--policy agent-xpu|deadline|cpu-fcfs|scheme-a|b|c]
+//!           [--synthetic] [--journal path.waj]
+//!           [--max-queue-depth 256] [--max-live-flows 1024]
 //! agent-xpu policies
 //! agent-xpu inspect --artifacts artifacts/small
 //! agent-xpu soc-probe
@@ -18,12 +20,14 @@
 //! name; `run --engine` and `serve --policy` accept names or aliases
 //! (`agent.xpu`, `llamacpp`, `edf`, …).
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use anyhow::{Context, Result, bail};
 
-use agent_xpu::config::{RuntimeConfig, SchedulerConfig, default_soc, llama32_3b};
+use agent_xpu::config::{
+    OverloadConfig, RuntimeConfig, SchedulerConfig, default_soc, llama32_3b,
+};
 use agent_xpu::engine::{EngineCore, ExecBridge, registry};
 use agent_xpu::figures;
 use agent_xpu::runtime::{ModelExecutor, Runtime};
@@ -141,6 +145,14 @@ fn cmd_fig(args: &Args) -> Result<()> {
         do_fig("fig_energy", figures::fig_energy(&soc, d, seed)?)?;
         ran = true;
     }
+    if which == "overload" || which == "all" {
+        // --smoke: two-point ramp (1x, 8x saturation) instead of the
+        // full five-multiplier sweep; still governed vs un-governed on
+        // every registry policy
+        let d = if args.bool_or("smoke", false) { 12.0 } else { duration.min(30.0) };
+        do_fig("fig_overload", figures::fig_overload(&soc, d, seed)?)?;
+        ran = true;
+    }
     if which == "ablation" || which == "all" {
         do_fig("fig_ablation", figures::fig_ablation(&soc, duration, seed)?)?;
         ran = true;
@@ -207,9 +219,15 @@ fn cmd_run(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let artifacts = args
-        .get("artifacts")
-        .context("--artifacts <dir> required (run `make artifacts` first)")?;
+    let synthetic = args.bool_or("synthetic", false);
+    let artifacts = if synthetic {
+        None
+    } else {
+        Some(args.get("artifacts").context(
+            "--artifacts <dir> required (run `make artifacts` first), \
+             or pass --synthetic to serve the calibrated cost model",
+        )?)
+    };
     let socket = args.str_or("socket", "/tmp/agent-xpu.sock");
     // Runtime config drives the serving loop: the server honors the
     // same SoC + scheduler knobs the simulated coordinator does, with
@@ -229,19 +247,43 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // load so typos fail fast.
     let policy = args.str_or("policy", "agent-xpu");
     let policy = registry::canonical(&policy)?;
-    println!("loading artifacts from {artifacts} ...");
-    let rt = Arc::new(Runtime::load(artifacts)?);
-    println!(
-        "model {} ({:.1}M params), {} artifacts compiled; policy {}, b_max {}, sessions {}",
-        rt.geo.name,
-        rt.geo.n_params() as f64 / 1e6,
-        rt.manifest.artifacts.len(),
-        policy,
-        sched.b_max,
-        sched.session_capacity,
-    );
-    let bridge = Arc::new(ExecBridge::real(Arc::new(ModelExecutor::new(rt))));
-    Server::with_policy(bridge, socket, soc, sched, policy)?.run()
+    // Overload / recovery knobs (DESIGN.md §7): bounded admission and
+    // the optional write-ahead journal replayed on restart.
+    let mut overload = OverloadConfig::default();
+    overload.max_queue_depth =
+        args.usize_or("max-queue-depth", overload.max_queue_depth)?;
+    overload.max_live_flows =
+        args.usize_or("max-live-flows", overload.max_live_flows)?;
+    overload.reactive_ttft_slo_ms =
+        args.f64_or("ttft-slo-ms", overload.reactive_ttft_slo_ms)?;
+    let journal = args.get("journal").map(PathBuf::from);
+    if let Some(p) = &journal {
+        println!("write-ahead journal: {}", p.display());
+    }
+    let bridge = if let Some(artifacts) = artifacts {
+        println!("loading artifacts from {artifacts} ...");
+        let rt = Arc::new(Runtime::load(artifacts)?);
+        println!(
+            "model {} ({:.1}M params), {} artifacts compiled; policy {}, b_max {}, sessions {}",
+            rt.geo.name,
+            rt.geo.n_params() as f64 / 1e6,
+            rt.manifest.artifacts.len(),
+            policy,
+            sched.b_max,
+            sched.session_capacity,
+        );
+        Arc::new(ExecBridge::real(Arc::new(ModelExecutor::new(rt))))
+    } else {
+        // --synthetic: the calibrated cost model stands in for real
+        // kernels — same scheduler, protocol, and journal machinery,
+        // no artifacts needed (CI's crash-recovery smoke runs this).
+        println!(
+            "synthetic executor (calibrated cost model); policy {}, b_max {}, sessions {}",
+            policy, sched.b_max, sched.session_capacity,
+        );
+        Arc::new(ExecBridge::synthetic(llama32_3b()))
+    };
+    Server::with_options(bridge, socket, soc, sched, policy, overload, journal)?.run()
 }
 
 fn cmd_inspect(args: &Args) -> Result<()> {

@@ -488,6 +488,23 @@ pub struct ReportAccumulator {
     pub reused_prefix_tokens: usize,
     /// Proactive prefills preempted at kernel boundaries.
     pub preemptions: usize,
+    /// Arrivals refused at admission (`retry_after` frames): queue
+    /// full, live-flow cap hit, or proactive intake paused.
+    pub rejected: usize,
+    /// Queued proactive requests displaced by a reactive arrival at a
+    /// full admission queue.
+    pub displaced: usize,
+    /// Queued proactive requests cancelled by the load shedder
+    /// (terminal `done.shed` frames, displacements included).
+    pub shed: usize,
+    /// Running proactive requests preempted-and-parked by the load
+    /// shedder (they resume when the overload clears).
+    pub parked: usize,
+    /// Parked requests resumed after the overload cleared.
+    pub resumed: usize,
+    /// Requests resubmitted from the write-ahead journal at startup
+    /// (crash recovery).
+    pub recovered: usize,
     ttft_sum_ms: f64,
     ttft_n: usize,
 }
@@ -531,6 +548,12 @@ impl ReportAccumulator {
             .set("tokens", self.tokens)
             .set("reused_prefix_tokens", self.reused_prefix_tokens)
             .set("preemptions", self.preemptions)
+            .set("rejected", self.rejected)
+            .set("displaced", self.displaced)
+            .set("shed", self.shed)
+            .set("parked", self.parked)
+            .set("resumed", self.resumed)
+            .set("recovered", self.recovered)
             .set(
                 "mean_ttft_ms",
                 if ttft.is_finite() { Json::Num(ttft) } else { Json::Null },

@@ -1,0 +1,522 @@
+//! Write-ahead journal for the serving loop (DESIGN.md §7): every
+//! admitted turn is durable *before* its `accepted` frame, so a server
+//! killed mid-flow restarts with no lost and no duplicated turns.
+//!
+//! On-disk format — append-only, length-prefixed, checksummed records:
+//!
+//! ```text
+//! [u32 len LE][u32 crc32(payload) LE][payload: one JSON object]
+//! ```
+//!
+//! Record kinds (the `t` field):
+//!
+//! - `submit` — an admitted generation (id, priority, prompt,
+//!   max_new_tokens, session tag, deps).  Written before the client's
+//!   `accepted` frame.
+//! - `done` / `cancelled` / `shed` — terminal outcomes; a submit with
+//!   no terminal is *pending* and is resubmitted on restart.
+//! - `bind` — a session tag's registry state (flow id, call count,
+//!   generation-id → turn-index map), written after each tagged submit
+//!   so cross-turn KV bookkeeping survives a restart even after its
+//!   completed submits compact away.
+//!
+//! Durability is group-commit: `append` fsyncs every
+//! `fsync_every` records, and the serving loop calls [`Journal::sync`]
+//! once per intake batch before acking any of it.  Replay
+//! ([`Journal::open`]) tolerates a torn tail — a crash mid-append
+//! truncates to the last whole, checksum-valid record; every record
+//! before it replays.  Opening also compacts: terminally-resolved
+//! submits are dropped and the file is rewritten as the latest binds
+//! plus the pending submits (temp file + atomic rename).
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result, bail};
+
+use crate::util::json::Json;
+use crate::workload::Priority;
+
+/// Cap on a single record's payload; a longer length prefix means the
+/// tail is garbage (torn or corrupt), not a real record.
+const MAX_RECORD_LEN: u32 = 16 * 1024 * 1024;
+
+/// CRC-32 (IEEE 802.3, reflected) — bitwise, no lookup table; journal
+/// volumes are far too small for this to matter.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+/// One journaled submission — everything needed to resubmit the turn
+/// after a restart (the KV is gone, so it re-prefills cache-cold).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubmitRec {
+    pub id: u64,
+    pub priority: Priority,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub session: Option<String>,
+    pub deps: Vec<u64>,
+}
+
+/// One session tag's registry state (`server::rt::SessionRegistry`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BindRec {
+    pub tag: String,
+    pub flow_id: u64,
+    pub calls: usize,
+    /// generation id → turn index within the flow.
+    pub turn_of: Vec<(u64, usize)>,
+}
+
+/// One journal record.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Record {
+    Submit(SubmitRec),
+    Done { id: u64 },
+    Cancelled { id: u64 },
+    Shed { id: u64 },
+    Bind(BindRec),
+}
+
+impl Record {
+    fn to_json(&self) -> Json {
+        match self {
+            Record::Submit(s) => {
+                let mut j = Json::obj()
+                    .set("t", "submit")
+                    .set("id", s.id as usize)
+                    .set("priority", s.priority.label())
+                    .set("prompt", s.prompt.clone())
+                    .set("max_new_tokens", s.max_new_tokens)
+                    .set(
+                        "deps",
+                        s.deps.iter().map(|d| *d as usize).collect::<Vec<usize>>(),
+                    );
+                if let Some(tag) = &s.session {
+                    j = j.set("session", tag.as_str());
+                }
+                j
+            }
+            Record::Done { id } => Json::obj().set("t", "done").set("id", *id as usize),
+            Record::Cancelled { id } => {
+                Json::obj().set("t", "cancelled").set("id", *id as usize)
+            }
+            Record::Shed { id } => Json::obj().set("t", "shed").set("id", *id as usize),
+            Record::Bind(b) => Json::obj()
+                .set("t", "bind")
+                .set("tag", b.tag.as_str())
+                .set("flow_id", b.flow_id as usize)
+                .set("calls", b.calls)
+                .set(
+                    "turn_of",
+                    Json::Arr(
+                        b.turn_of
+                            .iter()
+                            .map(|(id, idx)| {
+                                Json::Arr(vec![
+                                    Json::Num(*id as f64),
+                                    Json::Num(*idx as f64),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+        }
+    }
+
+    fn from_json(v: &Json) -> Result<Record> {
+        Ok(match v.get("t")?.as_str()? {
+            "submit" => Record::Submit(SubmitRec {
+                id: v.get("id")?.as_usize()? as u64,
+                priority: match v.get("priority")?.as_str()? {
+                    "proactive" => Priority::Proactive,
+                    _ => Priority::Reactive,
+                },
+                prompt: v.get("prompt")?.as_i32_vec()?,
+                max_new_tokens: v.get("max_new_tokens")?.as_usize()?,
+                session: v
+                    .opt("session")
+                    .and_then(|s| s.as_str().ok())
+                    .map(|s| s.to_string()),
+                deps: v
+                    .get("deps")?
+                    .as_usize_vec()?
+                    .into_iter()
+                    .map(|d| d as u64)
+                    .collect(),
+            }),
+            "done" => Record::Done { id: v.get("id")?.as_usize()? as u64 },
+            "cancelled" => Record::Cancelled { id: v.get("id")?.as_usize()? as u64 },
+            "shed" => Record::Shed { id: v.get("id")?.as_usize()? as u64 },
+            "bind" => Record::Bind(BindRec {
+                tag: v.get("tag")?.as_str()?.to_string(),
+                flow_id: v.get("flow_id")?.as_usize()? as u64,
+                calls: v.get("calls")?.as_usize()?,
+                turn_of: v
+                    .get("turn_of")?
+                    .as_arr()?
+                    .iter()
+                    .map(|pair| {
+                        let p = pair.as_arr()?;
+                        if p.len() != 2 {
+                            bail!("turn_of pair must have 2 elements");
+                        }
+                        Ok((p[0].as_usize()? as u64, p[1].as_usize()?))
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+            }),
+            other => bail!("unknown journal record type {other:?}"),
+        })
+    }
+}
+
+/// Frame one record: `[len][crc][payload]`.
+pub fn encode_record(rec: &Record) -> Vec<u8> {
+    let payload = rec.to_json().to_string().into_bytes();
+    let mut out = Vec::with_capacity(payload.len() + 8);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc32(&payload).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Decode every whole, checksum-valid record from the head of `bytes`.
+/// Returns the records and whether a torn/corrupt tail was dropped
+/// (the decode stops there — everything after an invalid record is
+/// unreachable by construction).
+pub fn decode_records(bytes: &[u8]) -> (Vec<Record>, bool) {
+    let mut out = vec![];
+    let mut i = 0usize;
+    while bytes.len() - i >= 8 {
+        let len = u32::from_le_bytes([bytes[i], bytes[i + 1], bytes[i + 2], bytes[i + 3]]);
+        let crc =
+            u32::from_le_bytes([bytes[i + 4], bytes[i + 5], bytes[i + 6], bytes[i + 7]]);
+        if len > MAX_RECORD_LEN {
+            return (out, true);
+        }
+        let start = i + 8;
+        let end = start + len as usize;
+        if end > bytes.len() {
+            return (out, true); // torn final record
+        }
+        let payload = &bytes[start..end];
+        if crc32(payload) != crc {
+            return (out, true); // corrupt record: stop at the last good one
+        }
+        let rec = match std::str::from_utf8(payload)
+            .ok()
+            .and_then(|s| Json::parse(s).ok())
+            .and_then(|j| Record::from_json(&j).ok())
+        {
+            Some(r) => r,
+            None => return (out, true),
+        };
+        out.push(rec);
+        i = end;
+    }
+    (out, i < bytes.len())
+}
+
+/// The state a journal replays to: what a restarted server must
+/// resubmit and how to rebuild its session registry.
+#[derive(Debug, Default, Clone)]
+pub struct Replay {
+    /// Admitted submissions with no terminal record, in submit order.
+    pub pending: Vec<SubmitRec>,
+    /// Latest bind per session tag, in first-bind order.
+    pub bindings: Vec<BindRec>,
+    /// Highest generation id ever journaled (0 = none); the server's
+    /// id counter restarts *above* this so ids never repeat.
+    pub max_req_id: u64,
+    /// One past the highest bound flow id (registry `next` floor).
+    pub next_flow_id: u64,
+    /// A torn or corrupt tail was dropped during decode.
+    pub truncated: bool,
+}
+
+/// Pure fold: records → replay state.  Exposed so the crash property
+/// test can replay arbitrary journal prefixes without touching disk.
+pub fn replay_records(records: &[Record], truncated: bool) -> Replay {
+    let mut pending: BTreeMap<u64, SubmitRec> = BTreeMap::new();
+    let mut bind_order: Vec<String> = vec![];
+    let mut binds: BTreeMap<String, BindRec> = BTreeMap::new();
+    let mut max_req_id = 0u64;
+    let mut next_flow_id = 0u64;
+    for rec in records {
+        match rec {
+            Record::Submit(s) => {
+                max_req_id = max_req_id.max(s.id);
+                pending.insert(s.id, s.clone());
+            }
+            Record::Done { id } | Record::Cancelled { id } | Record::Shed { id } => {
+                max_req_id = max_req_id.max(*id);
+                pending.remove(id);
+            }
+            Record::Bind(b) => {
+                next_flow_id = next_flow_id.max(b.flow_id + 1);
+                if !binds.contains_key(&b.tag) {
+                    bind_order.push(b.tag.clone());
+                }
+                binds.insert(b.tag.clone(), b.clone());
+            }
+        }
+    }
+    Replay {
+        // BTreeMap iteration is id order == submit order (ids ascend)
+        pending: pending.into_values().collect(),
+        bindings: bind_order
+            .into_iter()
+            .filter_map(|t| binds.remove(&t))
+            .collect(),
+        max_req_id,
+        next_flow_id,
+        truncated,
+    }
+}
+
+/// An open, append-mode write-ahead journal.
+pub struct Journal {
+    file: File,
+    path: PathBuf,
+    fsync_every: usize,
+    unsynced: usize,
+}
+
+impl Journal {
+    /// Open (or create) the journal at `path`: replay what is there,
+    /// compact it (latest binds + pending submits only, torn tail
+    /// dropped), and return the journal ready for appends plus the
+    /// replayed state.
+    pub fn open(path: impl AsRef<Path>, fsync_every: usize) -> Result<(Journal, Replay)> {
+        let path = path.as_ref().to_path_buf();
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => vec![],
+            Err(e) => return Err(e).with_context(|| format!("reading journal {path:?}")),
+        };
+        let (records, truncated) = decode_records(&bytes);
+        let replay = replay_records(&records, truncated);
+        // Compact: rewrite as binds + pending (drops resolved submits
+        // and the torn tail) via temp + rename, so a crash during
+        // compaction leaves either the old or the new file whole.
+        let kept = replay.bindings.len() + replay.pending.len();
+        if truncated || records.len() != kept {
+            let tmp = path.with_extension("journal.tmp");
+            {
+                let mut f = File::create(&tmp)
+                    .with_context(|| format!("creating {tmp:?}"))?;
+                for b in &replay.bindings {
+                    f.write_all(&encode_record(&Record::Bind(b.clone())))?;
+                }
+                for s in &replay.pending {
+                    f.write_all(&encode_record(&Record::Submit(s.clone())))?;
+                }
+                f.sync_all()?;
+            }
+            std::fs::rename(&tmp, &path)
+                .with_context(|| format!("replacing journal {path:?}"))?;
+        }
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("opening journal {path:?}"))?;
+        Ok((
+            Journal { file, path, fsync_every: fsync_every.max(1), unsynced: 0 },
+            replay,
+        ))
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one record; fsyncs when the group-commit quota fills.
+    pub fn append(&mut self, rec: &Record) -> Result<()> {
+        self.file.write_all(&encode_record(rec))?;
+        self.unsynced += 1;
+        if self.unsynced >= self.fsync_every {
+            self.sync()?;
+        }
+        Ok(())
+    }
+
+    /// Force the group-commit barrier: everything appended so far is
+    /// durable when this returns.
+    pub fn sync(&mut self) -> Result<()> {
+        if self.unsynced > 0 {
+            self.file.sync_all()?;
+            self.unsynced = 0;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sub(id: u64, session: Option<&str>) -> SubmitRec {
+        SubmitRec {
+            id,
+            priority: if id % 2 == 0 { Priority::Proactive } else { Priority::Reactive },
+            prompt: vec![1, 2, 3, id as i32],
+            max_new_tokens: 4 + id as usize,
+            session: session.map(|s| s.to_string()),
+            deps: if id > 2 { vec![id - 1] } else { vec![] },
+        }
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir()
+            .join(format!("agent-xpu-journal-{name}-{}.wal", std::process::id()))
+    }
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // IEEE 802.3 check value for "123456789"
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn records_roundtrip_through_the_frame() {
+        let recs = vec![
+            Record::Submit(sub(1, Some("chat"))),
+            Record::Bind(BindRec {
+                tag: "chat".into(),
+                flow_id: 7,
+                calls: 2,
+                turn_of: vec![(1, 0), (4, 1)],
+            }),
+            Record::Done { id: 1 },
+            Record::Submit(sub(2, None)),
+            Record::Cancelled { id: 2 },
+            Record::Shed { id: 3 },
+        ];
+        let mut bytes = vec![];
+        for r in &recs {
+            bytes.extend(encode_record(r));
+        }
+        let (back, truncated) = decode_records(&bytes);
+        assert!(!truncated);
+        assert_eq!(back, recs);
+    }
+
+    #[test]
+    fn torn_tail_is_dropped_not_fatal() {
+        let mut bytes = encode_record(&Record::Submit(sub(1, None)));
+        let whole = bytes.len();
+        bytes.extend(encode_record(&Record::Done { id: 1 }));
+        // crash mid-append: cut the second record anywhere
+        for cut in whole..bytes.len() {
+            let (recs, truncated) = decode_records(&bytes[..cut]);
+            assert_eq!(recs.len(), 1, "cut at {cut}");
+            assert!(truncated == (cut != whole), "cut at {cut}");
+        }
+        // corrupt (bit-flipped) payload is also a clean stop
+        let mut flipped = bytes.clone();
+        let n = flipped.len();
+        flipped[n - 1] ^= 0x40;
+        let (recs, truncated) = decode_records(&flipped);
+        assert_eq!(recs.len(), 1);
+        assert!(truncated);
+    }
+
+    #[test]
+    fn replay_resolves_terminals_and_keeps_latest_bind() {
+        let recs = vec![
+            Record::Submit(sub(1, Some("s"))),
+            Record::Bind(BindRec {
+                tag: "s".into(),
+                flow_id: 0,
+                calls: 1,
+                turn_of: vec![(1, 0)],
+            }),
+            Record::Submit(sub(2, None)),
+            Record::Done { id: 1 },
+            Record::Submit(sub(3, Some("s"))),
+            Record::Bind(BindRec {
+                tag: "s".into(),
+                flow_id: 0,
+                calls: 2,
+                turn_of: vec![(1, 0), (3, 1)],
+            }),
+            Record::Shed { id: 2 },
+        ];
+        let r = replay_records(&recs, false);
+        assert_eq!(r.pending.len(), 1);
+        assert_eq!(r.pending[0].id, 3);
+        assert_eq!(r.bindings.len(), 1);
+        assert_eq!(r.bindings[0].calls, 2, "latest bind wins");
+        assert_eq!(r.max_req_id, 3);
+        assert_eq!(r.next_flow_id, 1);
+    }
+
+    #[test]
+    fn open_compacts_and_preserves_pending() {
+        let path = tmp("compact");
+        let _ = std::fs::remove_file(&path);
+        {
+            let (mut j, r) = Journal::open(&path, 1).unwrap();
+            assert_eq!(r.pending.len(), 0);
+            j.append(&Record::Submit(sub(1, Some("s")))).unwrap();
+            j.append(&Record::Bind(BindRec {
+                tag: "s".into(),
+                flow_id: 3,
+                calls: 1,
+                turn_of: vec![(1, 0)],
+            }))
+            .unwrap();
+            j.append(&Record::Done { id: 1 }).unwrap();
+            j.append(&Record::Submit(sub(2, None))).unwrap();
+            j.sync().unwrap();
+        }
+        let before = std::fs::metadata(&path).unwrap().len();
+        let (_, r) = Journal::open(&path, 8).unwrap();
+        assert_eq!(r.pending.len(), 1, "done submit compacted away");
+        assert_eq!(r.pending[0].id, 2);
+        assert_eq!(r.bindings.len(), 1);
+        assert_eq!(r.max_req_id, 2);
+        assert_eq!(r.next_flow_id, 4);
+        let after = std::fs::metadata(&path).unwrap().len();
+        assert!(after < before, "compaction must shrink the file");
+        // reopening the compacted file replays identically
+        let (_, r2) = Journal::open(&path, 8).unwrap();
+        assert_eq!(r2.pending.len(), 1);
+        assert_eq!(r2.bindings.len(), 1);
+        // max_req_id shrinks to what compaction retained — callers
+        // must not rely on it spanning compacted-away ids...
+        assert_eq!(r2.max_req_id, 2, "id 2 still pending, still the max");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn open_tolerates_a_torn_file_on_disk() {
+        let path = tmp("torn");
+        let _ = std::fs::remove_file(&path);
+        let mut bytes = encode_record(&Record::Submit(sub(1, None)));
+        bytes.extend(&encode_record(&Record::Submit(sub(2, None)))[..9]);
+        std::fs::write(&path, &bytes).unwrap();
+        let (_, r) = Journal::open(&path, 1).unwrap();
+        assert!(r.truncated);
+        assert_eq!(r.pending.len(), 1);
+        assert_eq!(r.pending[0].id, 1);
+        // the compacted file is whole again
+        let (_, r2) = Journal::open(&path, 1).unwrap();
+        assert!(!r2.truncated);
+        assert_eq!(r2.pending.len(), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+}

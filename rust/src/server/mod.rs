@@ -19,8 +19,19 @@
 //! ← {"type":"done.cancelled","id":2}
 //! → {"type":"stats"}
 //! ← {"type":"stats","served":3,"cancelled":1,"tokens":24,"reused_prefix_tokens":35,
-//!    "preemptions":0,"mean_ttft_ms":1.9}
+//!    "preemptions":0,"rejected":0,"displaced":0,"shed":0,"parked":0,"resumed":0,
+//!    "recovered":0,"mean_ttft_ms":1.9}
 //! ```
+//!
+//! Overload frames (DESIGN.md §7): a submission refused at admission
+//! (bounded queue full, live-flow budget exhausted, or proactive
+//! intake paused by the shedder) ends immediately with
+//! `{"type":"retry_after","id":N,"code":"overloaded","retry_after_ms":X}`;
+//! a queued proactive generation shed — or displaced by a reactive
+//! arrival at a full queue — ends with
+//! `{"type":"done.shed","id":N,"retry_after_ms":X}`.  `error` frames
+//! carry a structured `code` (`bad_request`, `unknown_id`,
+//! `unknown_verb`) beside the human-readable `message`.
 //!
 //! Connections are full-duplex: `generate` frames stream from a writer
 //! thread while the reader keeps accepting lines, so `cancel` (and
@@ -29,7 +40,7 @@
 //! kernel is aborted), or decoding (the lane retires at the iteration
 //! boundary) — frees its KV, and ends the stream with a terminal
 //! `done.cancelled` frame.  A connection may only cancel ids it issued
-//! itself; foreign ids get an `error` frame.
+//! itself; foreign ids get an `error` frame with code `unknown_id`.
 //!
 //! The optional `"session":"<tag>"` field on `generate` keeps the KV
 //! cache alive across calls (flow-level sessions, DESIGN.md §3): a
@@ -46,9 +57,21 @@
 //! front.  Unknown or forgotten ids are ignored; without `deps`, calls
 //! of a session form the implicit linear chain (each waits for the
 //! previous one).
+//!
+//! Overload safety and crash recovery live in [`overload`] (the
+//! admission gate + shed-level machinery shared by the wall-clock
+//! server and the `fig overload` harness) and [`journal`] (the
+//! write-ahead journal replayed on restart).  The serving invariant:
+//! **no admitted turn is silently dropped** — it completes, cancels,
+//! sheds with a frame, or survives restart.
 
+pub mod journal;
+mod overload;
 mod rt;
 mod uds;
 
-pub use rt::{RtMsg, RtRequest, RtScheduler, TokenEvent, spawn, spawn_with_policy};
+pub use overload::{AdmissionDecision, GovernedOutcome, OverloadGate, run_governed};
+pub use rt::{
+    RtMsg, RtRequest, RtScheduler, TokenEvent, spawn, spawn_full, spawn_with_policy,
+};
 pub use uds::{GenerateResult, Server, client_generate, client_generate_session};

@@ -1,0 +1,508 @@
+//! Overload protection (DESIGN.md §7): admission control and
+//! priority-aware load shedding for any [`EngineCore`].
+//!
+//! [`OverloadGate`] is the clock-agnostic bookkeeping both serving
+//! paths share — the wall-clock UDS loop (`server::rt`) and the
+//! virtual-clock harness ([`run_governed`], `fig overload`).  It
+//! tracks the engine-live population split by priority and progress,
+//! maps client flows (session tags or untagged singles) to a bounded
+//! live-flow budget, keeps a sliding window of measured reactive TTFTs,
+//! and answers two questions:
+//!
+//! - **admission** ([`OverloadGate::try_admit`]): admit, reject with
+//!   `retry_after`, or — for a reactive arrival at a full queue —
+//!   displace the newest queued proactive request instead;
+//! - **detection** ([`OverloadGate::signal`]): the
+//!   [`OverloadSignal`] handed to
+//!   [`EngineCore::overload_response`], which every registry policy
+//!   answers through its [`SchedPolicy::shed_level`] hook
+//!   (pause proactive admissions → cancel queued proactive →
+//!   preempt-and-park running proactive decodes).
+//!
+//! [`SchedPolicy::shed_level`]: crate::engine::SchedPolicy::shed_level
+
+use std::collections::{BTreeSet, HashMap, VecDeque};
+
+use anyhow::Result;
+
+use crate::config::OverloadConfig;
+use crate::engine::{EngineClock, EngineCore, EngineEvent, OverloadSignal, ShedLevel};
+use crate::metrics::{RunReport, percentile};
+use crate::workload::{Priority, ReqId, Request};
+
+/// Reactive-TTFT observation window (µs): samples older than this no
+/// longer drive the detector, so a cleared overload decays instead of
+/// pinning the shed level forever.
+const TTFT_WINDOW_US: f64 = 10e6;
+
+/// Bound on retained TTFT samples (the p99 stays O(1) per pass).
+const TTFT_SAMPLES_MAX: usize = 256;
+
+/// Ids at/above this mark are parked-and-reinjected copies in the
+/// virtual-clock harness; a copy parked *again* under sustained
+/// overload is shed instead of cycling forever.
+const PARK_ID_BASE: ReqId = 20_000_000;
+
+/// The admission verdict for one arrival.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionDecision {
+    /// Admit the request.
+    Admit,
+    /// Queue full, but the arrival is reactive and this queued
+    /// proactive request can make room: cancel it (it gets a
+    /// `done.shed` frame), then admit the arrival.
+    Displace(ReqId),
+    /// Refuse the arrival (`retry_after` frame): queue full with no
+    /// displaceable proactive work, live-flow budget exhausted, or
+    /// proactive intake paused by the shedder.
+    Reject,
+}
+
+/// Clock-agnostic admission + shedding bookkeeping.  Timestamps are
+/// caller-supplied µs in whichever clock domain the engine runs.
+pub struct OverloadGate {
+    cfg: OverloadConfig,
+    /// Engine-live requests (admitted, no terminal event yet).
+    live: HashMap<ReqId, Priority>,
+    /// Live proactive requests with no token emitted yet ("queued":
+    /// cancelling one loses no generated work).
+    waiting_proactive: BTreeSet<ReqId>,
+    /// Live proactive requests past their first token ("running":
+    /// shedding one is a preempt-and-park).
+    running_proactive: BTreeSet<ReqId>,
+    /// Request → live-flow key (session tag, or a per-id synthetic).
+    flow_of: HashMap<ReqId, String>,
+    /// Live-flow key → member count.
+    flow_refs: HashMap<String, usize>,
+    /// (at_us, ttft_ms) samples of completed reactive turns.
+    ttft: VecDeque<(f64, f64)>,
+    paused: bool,
+}
+
+impl OverloadGate {
+    pub fn new(cfg: OverloadConfig) -> Self {
+        Self {
+            cfg,
+            live: HashMap::new(),
+            waiting_proactive: BTreeSet::new(),
+            running_proactive: BTreeSet::new(),
+            flow_of: HashMap::new(),
+            flow_refs: HashMap::new(),
+            ttft: VecDeque::new(),
+            paused: false,
+        }
+    }
+
+    pub fn cfg(&self) -> &OverloadConfig {
+        &self.cfg
+    }
+
+    /// Engine-live request count — the detector's queue depth.
+    pub fn live(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Distinct live flows.
+    pub fn flows_live(&self) -> usize {
+        self.flow_refs.len()
+    }
+
+    /// Proactive intake paused by the shedder?
+    pub fn paused(&self) -> bool {
+        self.paused
+    }
+
+    /// Shedder verdict → pause flag (level ≥ `PauseProactive`).
+    pub fn set_paused(&mut self, paused: bool) {
+        self.paused = paused;
+    }
+
+    fn flow_key(id: ReqId, session: Option<&str>) -> String {
+        match session {
+            Some(tag) => format!("tag:{tag}"),
+            None => format!("#{id}"),
+        }
+    }
+
+    /// Admission verdict for an arrival; pure — the caller applies it
+    /// (cancel the displaced victim, then [`OverloadGate::admit`]).
+    pub fn try_admit(&self, priority: Priority, session: Option<&str>) -> AdmissionDecision {
+        // live-flow budget: only *new* flows consume it — a live
+        // session's next turn always has a seat
+        if self.cfg.max_live_flows > 0 {
+            let new_flow = match session {
+                Some(tag) => !self.flow_refs.contains_key(&format!("tag:{tag}")),
+                None => true,
+            };
+            if new_flow && self.flow_refs.len() >= self.cfg.max_live_flows {
+                return AdmissionDecision::Reject;
+            }
+        }
+        if self.paused && priority == Priority::Proactive {
+            return AdmissionDecision::Reject;
+        }
+        if self.cfg.max_queue_depth > 0 && self.live.len() >= self.cfg.max_queue_depth {
+            if priority == Priority::Reactive {
+                // newest queued proactive request dies first: it has
+                // the least invested work
+                if let Some(v) = self.waiting_proactive.last() {
+                    return AdmissionDecision::Displace(*v);
+                }
+            }
+            return AdmissionDecision::Reject;
+        }
+        AdmissionDecision::Admit
+    }
+
+    /// Record an admitted request.
+    pub fn admit(&mut self, id: ReqId, priority: Priority, session: Option<&str>) {
+        self.live.insert(id, priority);
+        if priority == Priority::Proactive {
+            self.waiting_proactive.insert(id);
+        }
+        let key = Self::flow_key(id, session);
+        *self.flow_refs.entry(key.clone()).or_insert(0) += 1;
+        self.flow_of.insert(id, key);
+    }
+
+    /// Take a queued-proactive victim out of the shed pool (its
+    /// terminal event finishes the retirement).  Newest first.
+    pub fn take_newest_waiting_proactive(&mut self) -> Option<ReqId> {
+        self.waiting_proactive.pop_last()
+    }
+
+    /// Take a running-proactive park victim out of the pool.  Newest
+    /// first — the least generated work is thrown away.
+    pub fn take_newest_running_proactive(&mut self) -> Option<ReqId> {
+        self.running_proactive.pop_last()
+    }
+
+    /// Remove a specific queued-proactive id (displacement victim).
+    pub fn forget_waiting(&mut self, id: ReqId) {
+        self.waiting_proactive.remove(&id);
+    }
+
+    fn retire(&mut self, id: ReqId) {
+        self.live.remove(&id);
+        self.waiting_proactive.remove(&id);
+        self.running_proactive.remove(&id);
+        if let Some(key) = self.flow_of.remove(&id) {
+            if let Some(n) = self.flow_refs.get_mut(&key) {
+                *n -= 1;
+                if *n == 0 {
+                    self.flow_refs.remove(&key);
+                }
+            }
+        }
+    }
+
+    /// Fold one engine event into the gate's bookkeeping.
+    pub fn on_event(&mut self, ev: &EngineEvent) {
+        match ev {
+            EngineEvent::TokenEmitted { id, .. } => {
+                if self.waiting_proactive.remove(id) {
+                    self.running_proactive.insert(*id);
+                }
+            }
+            EngineEvent::TurnDone { id, at_us, arrival_us, first_token_us, .. } => {
+                if self.live.get(id) == Some(&Priority::Reactive) {
+                    self.note_reactive_ttft(*at_us, (first_token_us - arrival_us) / 1e3);
+                }
+                self.retire(*id);
+            }
+            EngineEvent::Cancelled { id, .. } => self.retire(*id),
+            EngineEvent::Admitted { .. }
+            | EngineEvent::Preempted { .. }
+            | EngineEvent::KvEvicted { .. }
+            | EngineEvent::SessionEvicted { .. } => {}
+        }
+    }
+
+    /// Record one measured reactive TTFT (ms) at `at_us`.
+    pub fn note_reactive_ttft(&mut self, at_us: f64, ttft_ms: f64) {
+        self.ttft.push_back((at_us, ttft_ms));
+        while self.ttft.len() > TTFT_SAMPLES_MAX {
+            self.ttft.pop_front();
+        }
+    }
+
+    /// What the detector measures right now.
+    pub fn signal(&mut self, now_us: f64) -> OverloadSignal {
+        while self.ttft.front().map(|(t, _)| *t < now_us - TTFT_WINDOW_US).unwrap_or(false)
+        {
+            self.ttft.pop_front();
+        }
+        let p99 = if self.ttft.is_empty() {
+            f64::NAN
+        } else {
+            let mut xs: Vec<f64> = self.ttft.iter().map(|(_, v)| *v).collect();
+            xs.sort_by(f64::total_cmp);
+            percentile(&xs, 0.99)
+        };
+        OverloadSignal {
+            queue_depth: self.live.len(),
+            max_queue_depth: self.cfg.max_queue_depth,
+            reactive_ttft_p99_ms: p99,
+            reactive_ttft_slo_ms: self.cfg.reactive_ttft_slo_ms,
+        }
+    }
+}
+
+/// What one governed virtual-clock run did (the `fig overload`
+/// harness): the engine's report plus the gate's shed ledger.
+#[derive(Debug)]
+pub struct GovernedOutcome {
+    pub report: RunReport,
+    pub submitted_reactive: usize,
+    pub submitted_proactive: usize,
+    pub rejected_reactive: usize,
+    pub rejected_proactive: usize,
+    /// Queued proactive requests displaced by reactive arrivals.
+    pub displaced: usize,
+    /// Queued proactive requests cancelled by the shedder
+    /// (displacements included).
+    pub shed: usize,
+    /// Running proactive decodes preempted-and-parked (reinjected
+    /// `retry_after` later; parked again under sustained overload =
+    /// shed).
+    pub parked: usize,
+}
+
+/// Drive a virtual-clock engine through `trace` with admission control
+/// and priority-aware load shedding in the loop — the governed
+/// counterpart of the un-governed `EngineCore::run(trace)` baseline.
+///
+/// Arrivals are submitted as virtual time passes them, each through
+/// [`OverloadGate::try_admit`]; every pass recomputes the
+/// [`OverloadSignal`] and applies the policy's shed level gradually
+/// (at most one queued cancel + one park per pass, so degradation is a
+/// slope, not a cliff).  Parked decodes are reinjected
+/// `retry_after_ms` later as fresh submissions (cache-cold, new id) —
+/// parked once more under sustained overload they are shed for good.
+pub fn run_governed(
+    core: &mut dyn EngineCore,
+    mut trace: Vec<Request>,
+    cfg: &OverloadConfig,
+) -> Result<GovernedOutcome> {
+    trace.sort_by(|a, b| a.arrival_us.total_cmp(&b.arrival_us).then(a.id.cmp(&b.id)));
+    let mut pending: VecDeque<Request> = trace.into();
+    let mut reinject: VecDeque<Request> = VecDeque::new();
+    let mut gate = OverloadGate::new(cfg.clone());
+    // proactive single-shot originals retained for park-and-reinject
+    let mut originals: HashMap<ReqId, Request> = HashMap::new();
+    let (mut submitted_reactive, mut submitted_proactive) = (0usize, 0usize);
+    let (mut rejected_reactive, mut rejected_proactive) = (0usize, 0usize);
+    let (mut displaced, mut shed, mut parked) = (0usize, 0usize, 0usize);
+    let mut next_park_id = PARK_ID_BASE;
+    let mut now = 0.0f64;
+
+    core.start(EngineClock::Virtual)?;
+    loop {
+        // Admit every arrival virtual time has passed, oldest first
+        // across the trace and the reinjection queue.
+        loop {
+            let from_trace = pending.front().map(|r| r.arrival_us);
+            let from_park = reinject.front().map(|r| r.arrival_us);
+            let due = match (from_trace, from_park) {
+                (Some(a), Some(b)) => {
+                    if a.min(b) > now {
+                        break;
+                    }
+                    a <= b
+                }
+                (Some(a), None) if a <= now => true,
+                (None, Some(b)) if b <= now => false,
+                _ => break,
+            };
+            let req =
+                if due { pending.pop_front().unwrap() } else { reinject.pop_front().unwrap() };
+            match gate.try_admit(req.priority, None) {
+                AdmissionDecision::Admit => {}
+                AdmissionDecision::Displace(victim) => {
+                    gate.forget_waiting(victim);
+                    originals.remove(&victim);
+                    core.cancel(victim)?;
+                    displaced += 1;
+                    shed += 1;
+                }
+                AdmissionDecision::Reject => {
+                    match req.priority {
+                        Priority::Reactive => rejected_reactive += 1,
+                        Priority::Proactive => rejected_proactive += 1,
+                    }
+                    continue;
+                }
+            }
+            match req.priority {
+                Priority::Reactive => submitted_reactive += 1,
+                Priority::Proactive => submitted_proactive += 1,
+            }
+            gate.admit(req.id, req.priority, None);
+            if req.priority == Priority::Proactive && req.flow.is_none() {
+                originals.insert(req.id, req.clone());
+            }
+            core.submit(req)?;
+        }
+
+        if !core.has_work() {
+            let next = match (
+                pending.front().map(|r| r.arrival_us),
+                reinject.front().map(|r| r.arrival_us),
+            ) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (Some(a), None) => Some(a),
+                (None, Some(b)) => Some(b),
+                (None, None) => None,
+            };
+            match next {
+                Some(t) => {
+                    now = now.max(t);
+                    continue;
+                }
+                None => break,
+            }
+        }
+
+        for ev in core.step()? {
+            now = now.max(event_at_us(&ev));
+            gate.on_event(&ev);
+        }
+
+        // One detector pass: pause / cancel one queued / park one
+        // running — gradual by construction.
+        let sig = gate.signal(now);
+        let level = core.overload_response(&sig);
+        gate.set_paused(level >= ShedLevel::PauseProactive);
+        if level >= ShedLevel::CancelQueuedProactive {
+            if let Some(v) = gate.take_newest_waiting_proactive() {
+                originals.remove(&v);
+                core.cancel(v)?;
+                shed += 1;
+            }
+        }
+        if level >= ShedLevel::ParkRunningProactive {
+            if let Some(v) = gate.take_newest_running_proactive() {
+                core.cancel(v)?;
+                match originals.remove(&v) {
+                    Some(orig) if v < PARK_ID_BASE => {
+                        parked += 1;
+                        let mut copy = orig;
+                        copy.id = next_park_id;
+                        next_park_id += 1;
+                        copy.arrival_us = now + cfg.retry_after_ms * 1e3;
+                        reinject.push_back(copy);
+                    }
+                    // a re-parked copy (or a flow turn) is shed for
+                    // good: sustained overload must terminate
+                    _ => shed += 1,
+                }
+            }
+        }
+    }
+    Ok(GovernedOutcome {
+        report: core.finish()?,
+        submitted_reactive,
+        submitted_proactive,
+        rejected_reactive,
+        rejected_proactive,
+        displaced,
+        shed,
+        parked,
+    })
+}
+
+fn event_at_us(ev: &EngineEvent) -> f64 {
+    match ev {
+        EngineEvent::Admitted { at_us, .. }
+        | EngineEvent::TokenEmitted { at_us, .. }
+        | EngineEvent::TurnDone { at_us, .. }
+        | EngineEvent::Preempted { at_us, .. }
+        | EngineEvent::KvEvicted { at_us, .. }
+        | EngineEvent::SessionEvicted { at_us, .. }
+        | EngineEvent::Cancelled { at_us, .. } => *at_us,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(depth: usize, flows: usize) -> OverloadConfig {
+        OverloadConfig {
+            max_queue_depth: depth,
+            max_live_flows: flows,
+            reactive_ttft_slo_ms: 0.0,
+            slo_multiple: 4.0,
+            retry_after_ms: 100.0,
+            fsync_every: 1,
+        }
+    }
+
+    #[test]
+    fn queue_full_rejects_proactive_and_displaces_for_reactive() {
+        let mut g = OverloadGate::new(cfg(2, 0));
+        assert_eq!(g.try_admit(Priority::Proactive, None), AdmissionDecision::Admit);
+        g.admit(1, Priority::Proactive, None);
+        g.admit(2, Priority::Proactive, None);
+        assert_eq!(g.try_admit(Priority::Proactive, None), AdmissionDecision::Reject);
+        // reactive displaces the NEWEST queued proactive
+        assert_eq!(
+            g.try_admit(Priority::Reactive, None),
+            AdmissionDecision::Displace(2)
+        );
+        // both proactive running (tokens out): nothing to displace
+        g.on_event(&EngineEvent::TokenEmitted { id: 1, token: 0, n: 1, at_us: 1.0 });
+        g.on_event(&EngineEvent::TokenEmitted { id: 2, token: 0, n: 1, at_us: 1.0 });
+        assert_eq!(g.try_admit(Priority::Reactive, None), AdmissionDecision::Reject);
+    }
+
+    #[test]
+    fn live_flow_budget_counts_sessions_once() {
+        let mut g = OverloadGate::new(cfg(0, 2));
+        g.admit(1, Priority::Reactive, Some("a"));
+        g.admit(2, Priority::Reactive, Some("b"));
+        // a live session's next turn is not a new flow
+        assert_eq!(g.try_admit(Priority::Reactive, Some("a")), AdmissionDecision::Admit);
+        // but a third flow is over budget
+        assert_eq!(g.try_admit(Priority::Reactive, Some("c")), AdmissionDecision::Reject);
+        assert_eq!(g.try_admit(Priority::Reactive, None), AdmissionDecision::Reject);
+        // flows retire with their last member
+        g.on_event(&EngineEvent::Cancelled { id: 2, at_us: 1.0 });
+        assert_eq!(g.flows_live(), 1);
+        assert_eq!(g.try_admit(Priority::Reactive, Some("c")), AdmissionDecision::Admit);
+    }
+
+    #[test]
+    fn paused_gate_rejects_only_proactive() {
+        let mut g = OverloadGate::new(cfg(8, 0));
+        g.set_paused(true);
+        assert_eq!(g.try_admit(Priority::Proactive, None), AdmissionDecision::Reject);
+        assert_eq!(g.try_admit(Priority::Reactive, None), AdmissionDecision::Admit);
+    }
+
+    #[test]
+    fn ttft_window_decays_so_shedding_can_clear() {
+        let mut g = OverloadGate::new(OverloadConfig {
+            reactive_ttft_slo_ms: 100.0,
+            ..cfg(0, 0)
+        });
+        g.note_reactive_ttft(1.0, 500.0);
+        let s = g.signal(2.0);
+        assert!((s.reactive_ttft_p99_ms - 500.0).abs() < 1e-6);
+        // 10 s later the sample has aged out: p99 undefined again
+        let s = g.signal(2.0 + TTFT_WINDOW_US + 1.0);
+        assert!(s.reactive_ttft_p99_ms.is_nan());
+    }
+
+    #[test]
+    fn park_pool_tracks_first_token_progress() {
+        let mut g = OverloadGate::new(cfg(0, 0));
+        g.admit(1, Priority::Proactive, None);
+        g.admit(2, Priority::Proactive, None);
+        assert_eq!(g.take_newest_running_proactive(), None);
+        g.on_event(&EngineEvent::TokenEmitted { id: 1, token: 7, n: 1, at_us: 1.0 });
+        assert_eq!(g.take_newest_running_proactive(), Some(1));
+        assert_eq!(g.take_newest_waiting_proactive(), Some(2));
+        assert_eq!(g.take_newest_waiting_proactive(), None);
+    }
+}

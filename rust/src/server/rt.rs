@@ -19,17 +19,55 @@
 //! retained prefix (`done.cached_prefix` reports the reuse).  Retention
 //! is bounded by `SchedulerConfig::session_capacity` and shed LRU-first
 //! by the memory governor, exactly as in simulation.
+//!
+//! Overload safety (DESIGN.md §7): the intake channel is bounded by
+//! [`OverloadConfig::max_queue_depth`], every submission passes the
+//! [`OverloadGate`] (full queue → [`TokenEvent::Rejected`], or a
+//! reactive arrival displaces the newest queued proactive request),
+//! and each step re-evaluates the policy's
+//! [`EngineCore::overload_response`]: pause proactive intake, cancel
+//! queued proactive work ([`TokenEvent::Shed`]), or preempt-and-park
+//! running proactive decodes — parked turns resume automatically (same
+//! generation id, already-streamed tokens suppressed) once the
+//! pressure clears.
+//!
+//! Crash recovery: with a journal attached, every admitted turn is
+//! durable *before* its `accepted` frame goes out, terminals
+//! (done / cancelled / shed) are appended as they happen, and session
+//! bindings ride along.  A restarted server replays the journal:
+//! live turns resubmit (cache-cold re-prefill), session flow ids and
+//! turn indices survive, and the generation-id counter restarts above
+//! everything ever journaled.  The invariant: **no admitted turn is
+//! silently dropped** — it completes, cancels, sheds with a frame, or
+//! survives restart.
 
-use std::collections::{BTreeMap, HashMap, VecDeque};
-use std::sync::mpsc::{Receiver, Sender, TryRecvError, channel};
-use std::sync::{Arc, Mutex};
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
+use std::path::PathBuf;
+use std::sync::mpsc::{Receiver, Sender, SyncSender, TryRecvError, sync_channel};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::config::{SchedulerConfig, SocConfig};
-use crate::engine::{EngineClock, EngineCore, EngineEvent, ExecBridge, registry};
+use crate::config::{OverloadConfig, SchedulerConfig, SocConfig};
+use crate::engine::{
+    EngineClock, EngineCore, EngineEvent, ExecBridge, ShedLevel, registry,
+};
 use crate::metrics::ReportAccumulator;
+use crate::server::journal::{BindRec, Journal, Record, SubmitRec};
+use crate::server::overload::{AdmissionDecision, OverloadGate};
 use crate::workload::{FlowBinding, NodeKind, Priority, ReqId, Request};
+
+/// Poison-safe lock: a panic while holding the stats (or writer) mutex
+/// must not take the whole server down with it — the protected data is
+/// a counter block (or an output stream), never left mid-invariant.
+pub(crate) fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Intake-channel bound when admission control is disabled
+/// (`max_queue_depth = 0`): the channel still must not be unbounded.
+const INTAKE_FALLBACK_BOUND: usize = 1024;
 
 /// Max session *tags* remembered by the server.  Tags arrive from
 /// clients, so the map must be bounded for a long-lived server; when
@@ -107,6 +145,39 @@ impl SessionRegistry {
         out
     }
 
+    /// The already-assigned `(flow_id, turn_idx)` of a journaled call
+    /// (replay must not re-`resolve`, which would mint a new turn).
+    fn lookup(&self, tag: &str, req_id: u64) -> Option<(u64, usize)> {
+        self.ids
+            .get(tag)
+            .and_then(|e| e.turn_of.get(&req_id).map(|idx| (e.flow_id, *idx)))
+    }
+
+    /// Reinstall a journaled binding (replay path).  Ids stay
+    /// monotonic: the mint counter restarts above every restored flow.
+    fn restore(&mut self, b: &BindRec) {
+        let mut meta =
+            SessionMeta { flow_id: b.flow_id, calls: b.calls, turn_of: BTreeMap::new() };
+        for (id, idx) in &b.turn_of {
+            meta.turn_of.insert(*id, *idx);
+        }
+        if !self.ids.contains_key(&b.tag) {
+            self.order.push_back(b.tag.clone());
+        }
+        self.ids.insert(b.tag.clone(), meta);
+        self.next = self.next.max(b.flow_id + 1);
+    }
+
+    /// The tag's current binding as a journal record.
+    fn snapshot(&self, tag: &str) -> Option<BindRec> {
+        self.ids.get(tag).map(|e| BindRec {
+            tag: tag.to_string(),
+            flow_id: e.flow_id,
+            calls: e.calls,
+            turn_of: e.turn_of.iter().map(|(id, idx)| (*id, *idx)).collect(),
+        })
+    }
+
     #[cfg(test)]
     fn get(&self, tag: &str) -> Option<u64> {
         self.ids.get(tag).map(|e| e.flow_id)
@@ -153,7 +224,41 @@ pub enum TokenEvent {
     },
     /// Terminal frame of a cancelled generation.
     Cancelled { id: ReqId },
+    /// Terminal: refused at admission (queue full with nothing to
+    /// displace, live-flow budget exhausted, or proactive intake
+    /// paused).  Retry after the hint.
+    Rejected { id: ReqId, retry_after_ms: f64 },
+    /// Terminal: this queued proactive generation was shed (or
+    /// displaced by a reactive arrival) to protect reactive latency.
+    /// Resubmit after the hint.
+    Shed { id: ReqId, retry_after_ms: f64 },
     Error { id: ReqId, message: String },
+}
+
+/// Streaming state of one live subscription.
+struct Sub {
+    tx: Sender<TokenEvent>,
+    /// Re-emitted tokens to swallow after a park/resume cycle (the
+    /// client already streamed them).
+    skip: usize,
+    /// Tokens the client has actually received.
+    emitted: usize,
+}
+
+/// Everything needed to resubmit a parked proactive generation.
+#[derive(Clone)]
+struct ProactiveCtx {
+    prompt: Vec<i32>,
+    max_new_tokens: usize,
+    session: Option<String>,
+    flow: Option<FlowBinding>,
+}
+
+/// A preempted-and-parked proactive generation awaiting resume.
+struct ParkedReq {
+    tx: Option<Sender<TokenEvent>>,
+    ctx: ProactiveCtx,
+    emitted: usize,
 }
 
 /// The real-time serving loop.  Owns the engine core (and through it
@@ -162,6 +267,22 @@ pub enum TokenEvent {
 pub struct RtScheduler {
     core: Box<dyn EngineCore + Send>,
     stats: Arc<Mutex<ReportAccumulator>>,
+    gate: OverloadGate,
+    journal: Option<Journal>,
+    registry: SessionRegistry,
+    subs: HashMap<ReqId, Sub>,
+    /// Proactive submissions kept resubmittable for park/resume.
+    ctx: HashMap<ReqId, ProactiveCtx>,
+    /// Parked generations, resumed oldest-id first.
+    parked: BTreeMap<ReqId, ParkedReq>,
+    /// Victims whose upcoming `Cancelled` event is a shed, not a
+    /// client cancel.
+    shedding: HashSet<ReqId>,
+    /// Accepted frames held back until the journal batch is durable.
+    pending_acks: Vec<ReqId>,
+    /// Journal-recovered turns to resubmit at serve start.
+    recovered: Vec<(SubmitRec, Option<FlowBinding>)>,
+    served: u64,
 }
 
 impl RtScheduler {
@@ -184,11 +305,102 @@ impl RtScheduler {
         sched: SchedulerConfig,
         policy: &str,
     ) -> Result<Self> {
+        Self::new_full(bridge, soc, sched, policy, OverloadConfig::default(), None)
+            .map(|(s, _)| s)
+    }
+
+    /// Full-control constructor: overload knobs plus an optional
+    /// write-ahead journal.  Opening an existing journal replays it —
+    /// live turns resubmit at serve start, session bindings reinstall,
+    /// and the returned floor is one past the highest generation id
+    /// ever journaled (the UDS layer starts its counter there so ids
+    /// never repeat across restarts).
+    pub fn new_full(
+        bridge: Arc<ExecBridge>,
+        soc: SocConfig,
+        sched: SchedulerConfig,
+        policy: &str,
+        overload: OverloadConfig,
+        journal: Option<PathBuf>,
+    ) -> Result<(Self, u64)> {
         let core: Box<dyn EngineCore + Send> = match bridge.executor() {
             Some(exec) => registry::build_real(policy, exec, soc, sched)?,
             None => registry::build(policy, bridge.geo.clone(), soc, sched)?,
         };
-        Ok(Self { core, stats: Arc::new(Mutex::new(ReportAccumulator::new())) })
+        let mut registry = SessionRegistry::default();
+        let mut recovered = vec![];
+        let mut next_id_floor = 1u64;
+        let mut stats = ReportAccumulator::new();
+        let journal = match journal {
+            None => None,
+            Some(path) => {
+                let (j, replay) = Journal::open(&path, overload.fsync_every.max(1))?;
+                for b in &replay.bindings {
+                    registry.restore(b);
+                }
+                // Resubmission plan for the surviving turns: bindings
+                // come from the journal (never re-minted), and deps are
+                // narrowed to turns that also survived — everything
+                // else already completed before the crash, so waiting
+                // on it would deadlock.  Empty survivors chain linearly
+                // within their tag; a turn with no surviving
+                // predecessor gets the explicit no-predecessors form
+                // (its own index).
+                let pending_ids: HashSet<u64> =
+                    replay.pending.iter().map(|s| s.id).collect();
+                let mut last_turn: HashMap<String, usize> = HashMap::new();
+                for s in &replay.pending {
+                    let flow = s.session.as_ref().map(|tag| {
+                        let (flow_id, turn_idx) = registry
+                            .lookup(tag, s.id)
+                            .unwrap_or_else(|| registry.resolve(tag, s.id));
+                        let mut deps: Vec<usize> = s
+                            .deps
+                            .iter()
+                            .filter(|d| pending_ids.contains(d))
+                            .filter_map(|d| registry.lookup(tag, *d).map(|(_, i)| i))
+                            .collect();
+                        deps.sort_unstable();
+                        deps.dedup();
+                        if deps.is_empty() {
+                            deps = vec![*last_turn.get(tag.as_str()).unwrap_or(&turn_idx)];
+                        }
+                        last_turn.insert(tag.clone(), turn_idx);
+                        FlowBinding {
+                            flow_id,
+                            turn_idx,
+                            total_turns: usize::MAX,
+                            think_time_us: 0.0,
+                            delta_start: 0,
+                            deps,
+                            node: NodeKind::Llm,
+                            crit_path: 1,
+                        }
+                    });
+                    recovered.push((s.clone(), flow));
+                }
+                stats.recovered = recovered.len();
+                next_id_floor = replay.max_req_id + 1;
+                Some(j)
+            }
+        };
+        Ok((
+            Self {
+                core,
+                stats: Arc::new(Mutex::new(stats)),
+                gate: OverloadGate::new(overload),
+                journal,
+                registry,
+                subs: HashMap::new(),
+                ctx: HashMap::new(),
+                parked: BTreeMap::new(),
+                shedding: HashSet::new(),
+                pending_acks: vec![],
+                recovered,
+                served: 0,
+            },
+            next_id_floor,
+        ))
     }
 
     /// Running serving statistics (shared with the `stats` verb).
@@ -200,22 +412,26 @@ impl RtScheduler {
     /// Returns the number of completed (non-cancelled) generations.
     pub fn serve(mut self, rx: Receiver<RtMsg>) -> Result<u64> {
         self.core.start(EngineClock::wall())?;
-        let mut registry = SessionRegistry::default();
-        let mut subs: HashMap<ReqId, Sender<TokenEvent>> = HashMap::new();
-        let mut served = 0u64;
+        let t0 = Instant::now();
+        // Journal-recovered turns first: they were admitted (and
+        // acked) before the crash, so they re-enter ahead of any new
+        // arrival, cache-cold but with their ids and flows intact.
+        for (s, flow) in std::mem::take(&mut self.recovered) {
+            self.submit_recovered(s, flow)?;
+        }
         let mut open = true;
         loop {
             // Intake — block only when there is nothing else to do.
             if open {
-                if !self.core.has_work() {
+                if !self.core.has_work() && self.parked.is_empty() {
                     match rx.recv() {
-                        Ok(m) => self.handle_msg(m, &mut registry, &mut subs)?,
+                        Ok(m) => self.handle_msg(m)?,
                         Err(_) => open = false,
                     }
                 }
                 loop {
                     match rx.try_recv() {
-                        Ok(m) => self.handle_msg(m, &mut registry, &mut subs)?,
+                        Ok(m) => self.handle_msg(m)?,
                         Err(TryRecvError::Empty) => break,
                         Err(TryRecvError::Disconnected) => {
                             open = false;
@@ -223,121 +439,358 @@ impl RtScheduler {
                         }
                     }
                 }
+                // Group commit: one fsync covers the whole intake
+                // batch, then the held-back accepted frames go out —
+                // an acked turn is always durable.
+                self.flush_acks()?;
             }
             if !self.core.has_work() {
+                if !self.parked.is_empty() {
+                    // an idle engine is by definition not overloaded
+                    self.resume_one()?;
+                    continue;
+                }
                 if !open {
-                    return Ok(served);
+                    return Ok(self.served);
                 }
                 continue;
             }
-            // One decision point of the shared coordinator policy.
-            for ev in self.core.step()? {
-                self.stats.lock().unwrap().absorb(&ev);
-                match ev {
-                    EngineEvent::TokenEmitted { id, token, n, .. } => {
-                        if let Some(tx) = subs.get(&id) {
-                            let _ = tx.send(TokenEvent::Token { id, token, n });
-                        }
-                    }
-                    EngineEvent::TurnDone {
-                        id,
-                        at_us,
-                        arrival_us,
-                        first_token_us,
-                        tokens,
-                        cached_prefix,
-                    } => {
-                        served += 1;
-                        if let Some(tx) = subs.remove(&id) {
-                            let _ = tx.send(TokenEvent::Done {
-                                id,
-                                ttft_ms: (first_token_us - arrival_us) / 1e3,
-                                total_ms: (at_us - arrival_us) / 1e3,
-                                tokens,
-                                cached_prefix,
-                            });
-                        }
-                    }
-                    EngineEvent::Cancelled { id, .. } => {
-                        if let Some(tx) = subs.remove(&id) {
-                            let _ = tx.send(TokenEvent::Cancelled { id });
-                        }
-                    }
-                    EngineEvent::Admitted { .. }
-                    | EngineEvent::Preempted { .. }
-                    | EngineEvent::KvEvicted { .. }
-                    | EngineEvent::SessionEvicted { .. } => {}
-                }
-            }
+            self.step_once(&t0)?;
         }
     }
 
-    fn handle_msg(
-        &mut self,
-        m: RtMsg,
-        registry: &mut SessionRegistry,
-        subs: &mut HashMap<ReqId, Sender<TokenEvent>>,
-    ) -> Result<()> {
+    fn journal_append(&mut self, rec: Record) -> Result<()> {
+        if let Some(j) = self.journal.as_mut() {
+            j.append(&rec)?;
+        }
+        Ok(())
+    }
+
+    fn flush_acks(&mut self) -> Result<()> {
+        if self.pending_acks.is_empty() {
+            return Ok(());
+        }
+        if let Some(j) = self.journal.as_mut() {
+            j.sync()?;
+        }
+        for id in std::mem::take(&mut self.pending_acks) {
+            if let Some(sub) = self.subs.get(&id) {
+                let _ = sub.tx.send(TokenEvent::Accepted { id });
+            }
+        }
+        Ok(())
+    }
+
+    fn handle_msg(&mut self, m: RtMsg) -> Result<()> {
         match m {
             RtMsg::Submit(r) => {
-                // A session call is a node of an open-ended flow: the
-                // engine's pool seeds its KV from the tag's previous
-                // call and retains it again afterwards.  delta_start=0
-                // marks the prompt self-contained (no trace stitching).
-                // `deps` turns calls into DAG nodes: the engine holds
-                // this one until every referenced generation finished.
-                let flow = r.session.as_ref().map(|tag| {
-                    let (flow_id, turn_idx) = registry.resolve(tag, r.id);
-                    let mut deps = registry.resolve_deps(tag, &r.deps);
-                    if !r.deps.is_empty() && deps.is_empty() {
-                        // Every referenced generation is unknown or
-                        // forgotten: run now ("waits on fewer
-                        // predecessors"), instead of an empty list
-                        // silently re-implying the linear chain.  A
-                        // self-index is the explicit no-predecessors
-                        // form (`FlowBinding::dep_indices`).
-                        deps = vec![turn_idx];
+                match self.gate.try_admit(r.priority, r.session.as_deref()) {
+                    AdmissionDecision::Admit => {}
+                    AdmissionDecision::Displace(victim) => {
+                        self.gate.forget_waiting(victim);
+                        self.shed_victim(victim)?;
+                        relock(&self.stats).displaced += 1;
                     }
-                    FlowBinding {
-                        flow_id,
-                        turn_idx,
-                        total_turns: usize::MAX,
-                        think_time_us: 0.0,
-                        delta_start: 0,
-                        deps,
-                        node: NodeKind::Llm,
-                        crit_path: 1, // open-ended: depth unknown
+                    AdmissionDecision::Reject => {
+                        relock(&self.stats).rejected += 1;
+                        let _ = r.events.send(TokenEvent::Rejected {
+                            id: r.id,
+                            retry_after_ms: self.gate.cfg().retry_after_ms,
+                        });
+                        return Ok(());
                     }
-                });
-                let _ = r.events.send(TokenEvent::Accepted { id: r.id });
-                subs.insert(r.id, r.events);
-                self.core.submit(Request {
-                    id: r.id,
-                    priority: r.priority,
-                    arrival_us: 0.0, // re-stamped to wall now on submit
-                    prompt: r.prompt,
-                    max_new_tokens: r.max_new_tokens,
-                    profile: "uds".into(),
-                    flow,
-                })?;
+                }
+                self.admit(r)?;
             }
             RtMsg::Cancel(id) => {
-                // Unknown / already-finished ids are a harmless no-op;
-                // a hit streams a terminal Cancelled on the next step.
+                if let Some(p) = self.parked.remove(&id) {
+                    // parked turns are live (journaled, resumable)
+                    // until explicitly cancelled
+                    self.journal_append(Record::Cancelled { id })?;
+                    if let Some(tx) = p.tx {
+                        let _ = tx.send(TokenEvent::Cancelled { id });
+                    }
+                    relock(&self.stats).cancelled += 1;
+                } else if self.core.cancel(id)? {
+                    // the engine streams the terminal Cancelled on the
+                    // next step; unknown ids are a harmless no-op
+                    self.journal_append(Record::Cancelled { id })?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Admit one submission: journal it (+ its session binding),
+    /// register it with the gate, hold its accepted frame for the
+    /// group commit, and hand it to the engine.
+    fn admit(&mut self, r: RtRequest) -> Result<()> {
+        // A session call is a node of an open-ended flow: the engine's
+        // pool seeds its KV from the tag's previous call and retains it
+        // again afterwards.  delta_start=0 marks the prompt
+        // self-contained (no trace stitching).  `deps` turns calls into
+        // DAG nodes: the engine holds this one until every referenced
+        // generation finished.
+        let flow = r.session.as_ref().map(|tag| {
+            let (flow_id, turn_idx) = self.registry.resolve(tag, r.id);
+            let mut deps = self.registry.resolve_deps(tag, &r.deps);
+            if !r.deps.is_empty() && deps.is_empty() {
+                // Every referenced generation is unknown or forgotten:
+                // run now ("waits on fewer predecessors"), instead of
+                // an empty list silently re-implying the linear chain.
+                // A self-index is the explicit no-predecessors form
+                // (`FlowBinding::dep_indices`).
+                deps = vec![turn_idx];
+            }
+            FlowBinding {
+                flow_id,
+                turn_idx,
+                total_turns: usize::MAX,
+                think_time_us: 0.0,
+                delta_start: 0,
+                deps,
+                node: NodeKind::Llm,
+                crit_path: 1, // open-ended: depth unknown
+            }
+        });
+        if self.journal.is_some() {
+            self.journal_append(Record::Submit(SubmitRec {
+                id: r.id,
+                priority: r.priority,
+                prompt: r.prompt.clone(),
+                max_new_tokens: r.max_new_tokens,
+                session: r.session.clone(),
+                deps: r.deps.clone(),
+            }))?;
+            if let Some(b) = r.session.as_ref().and_then(|t| self.registry.snapshot(t)) {
+                self.journal_append(Record::Bind(b))?;
+            }
+        }
+        self.gate.admit(r.id, r.priority, r.session.as_deref());
+        if r.priority == Priority::Proactive {
+            self.ctx.insert(
+                r.id,
+                ProactiveCtx {
+                    prompt: r.prompt.clone(),
+                    max_new_tokens: r.max_new_tokens,
+                    session: r.session.clone(),
+                    flow: flow.clone(),
+                },
+            );
+        }
+        self.subs.insert(r.id, Sub { tx: r.events, skip: 0, emitted: 0 });
+        self.pending_acks.push(r.id);
+        self.core.submit(Request {
+            id: r.id,
+            priority: r.priority,
+            arrival_us: 0.0, // re-stamped to wall now on submit
+            prompt: r.prompt,
+            max_new_tokens: r.max_new_tokens,
+            profile: "uds".into(),
+            flow,
+        })?;
+        Ok(())
+    }
+
+    /// Resubmit one journal-recovered turn.  No subscriber exists (the
+    /// pre-crash connection died with the process) and the journal
+    /// already holds its records, so this neither frames nor appends.
+    fn submit_recovered(&mut self, s: SubmitRec, flow: Option<FlowBinding>) -> Result<()> {
+        self.gate.admit(s.id, s.priority, s.session.as_deref());
+        if s.priority == Priority::Proactive {
+            self.ctx.insert(
+                s.id,
+                ProactiveCtx {
+                    prompt: s.prompt.clone(),
+                    max_new_tokens: s.max_new_tokens,
+                    session: s.session.clone(),
+                    flow: flow.clone(),
+                },
+            );
+        }
+        self.core.submit(Request {
+            id: s.id,
+            priority: s.priority,
+            arrival_us: 0.0,
+            prompt: s.prompt,
+            max_new_tokens: s.max_new_tokens,
+            profile: "uds".into(),
+            flow,
+        })?;
+        Ok(())
+    }
+
+    /// Shed one queued proactive victim: journal the shed, cancel it
+    /// in the engine; its `Cancelled` event becomes a terminal
+    /// [`TokenEvent::Shed`] frame.
+    fn shed_victim(&mut self, id: ReqId) -> Result<()> {
+        self.ctx.remove(&id);
+        self.journal_append(Record::Shed { id })?;
+        self.shedding.insert(id);
+        relock(&self.stats).shed += 1;
+        if !self.core.cancel(id)? {
+            // beat us to a terminal: nothing to shed after all
+            self.shedding.remove(&id);
+        }
+        Ok(())
+    }
+
+    /// Preempt-and-park one running proactive decode.  The turn stays
+    /// logically live (its journal records stand); once pressure
+    /// clears it resumes under the *same* generation id, re-prefilling
+    /// cache-cold, with already-streamed tokens suppressed so the
+    /// client stream never duplicates.  Flow turns are shed instead of
+    /// parked (their node bookkeeping cannot be replayed mid-flow).
+    fn park(&mut self, id: ReqId) -> Result<()> {
+        match self.ctx.remove(&id) {
+            Some(ctx) if ctx.flow.is_none() => {
+                let sub = self.subs.remove(&id);
+                let emitted = sub.as_ref().map(|s| s.emitted).unwrap_or(0);
+                self.parked
+                    .insert(id, ParkedReq { tx: sub.map(|s| s.tx), ctx, emitted });
+                relock(&self.stats).parked += 1;
                 let _ = self.core.cancel(id)?;
             }
+            Some(_) | None => {
+                self.shedding.insert(id);
+                self.journal_append(Record::Shed { id })?;
+                relock(&self.stats).shed += 1;
+                if !self.core.cancel(id)? {
+                    self.shedding.remove(&id);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Resume the oldest parked generation (overload has cleared).
+    fn resume_one(&mut self) -> Result<()> {
+        let Some((id, p)) = self.parked.pop_first() else {
+            return Ok(());
+        };
+        self.gate.admit(id, Priority::Proactive, p.ctx.session.as_deref());
+        if let Some(tx) = p.tx {
+            self.subs.insert(id, Sub { tx, skip: p.emitted, emitted: p.emitted });
+        }
+        self.ctx.insert(id, p.ctx.clone());
+        relock(&self.stats).resumed += 1;
+        self.core.submit(Request {
+            id,
+            priority: Priority::Proactive,
+            arrival_us: 0.0,
+            prompt: p.ctx.prompt,
+            max_new_tokens: p.ctx.max_new_tokens,
+            profile: "uds".into(),
+            flow: p.ctx.flow,
+        })?;
+        Ok(())
+    }
+
+    /// Room to resume a parked decode: below half the queue bound.
+    fn room_to_resume(&self) -> bool {
+        let cap = self.gate.cfg().max_queue_depth;
+        cap == 0 || self.gate.live() < (cap + 1) / 2
+    }
+
+    /// One decision point of the shared coordinator policy, followed
+    /// by one detector pass (pause / shed one / park one — gradual by
+    /// construction).
+    fn step_once(&mut self, t0: &Instant) -> Result<()> {
+        for ev in self.core.step()? {
+            self.gate.on_event(&ev);
+            // Cancelled events are counted where their frame is sent:
+            // a shed or park is not a client cancel.
+            if !matches!(ev, EngineEvent::Cancelled { .. }) {
+                relock(&self.stats).absorb(&ev);
+            }
+            match ev {
+                EngineEvent::TokenEmitted { id, token, n, .. } => {
+                    if let Some(sub) = self.subs.get_mut(&id) {
+                        if sub.skip > 0 {
+                            // replayed after a park/resume: the client
+                            // already has this position
+                            sub.skip -= 1;
+                        } else {
+                            sub.emitted += 1;
+                            let _ = sub.tx.send(TokenEvent::Token { id, token, n });
+                        }
+                    }
+                }
+                EngineEvent::TurnDone {
+                    id,
+                    at_us,
+                    arrival_us,
+                    first_token_us,
+                    tokens,
+                    cached_prefix,
+                } => {
+                    self.served += 1;
+                    self.ctx.remove(&id);
+                    self.journal_append(Record::Done { id })?;
+                    if let Some(sub) = self.subs.remove(&id) {
+                        let _ = sub.tx.send(TokenEvent::Done {
+                            id,
+                            ttft_ms: (first_token_us - arrival_us) / 1e3,
+                            total_ms: (at_us - arrival_us) / 1e3,
+                            tokens,
+                            cached_prefix,
+                        });
+                    }
+                }
+                EngineEvent::Cancelled { id, .. } => {
+                    if self.shedding.remove(&id) {
+                        self.ctx.remove(&id);
+                        if let Some(sub) = self.subs.remove(&id) {
+                            let _ = sub.tx.send(TokenEvent::Shed {
+                                id,
+                                retry_after_ms: self.gate.cfg().retry_after_ms,
+                            });
+                        }
+                    } else if self.parked.contains_key(&id) {
+                        // the preemption half of a park: not terminal
+                    } else {
+                        relock(&self.stats).cancelled += 1;
+                        self.ctx.remove(&id);
+                        if let Some(sub) = self.subs.remove(&id) {
+                            let _ = sub.tx.send(TokenEvent::Cancelled { id });
+                        }
+                    }
+                }
+                EngineEvent::Admitted { .. }
+                | EngineEvent::Preempted { .. }
+                | EngineEvent::KvEvicted { .. }
+                | EngineEvent::SessionEvicted { .. } => {}
+            }
+        }
+        let now_us = t0.elapsed().as_secs_f64() * 1e6;
+        let sig = self.gate.signal(now_us);
+        let level = self.core.overload_response(&sig);
+        self.gate.set_paused(level >= ShedLevel::PauseProactive);
+        if level >= ShedLevel::CancelQueuedProactive {
+            if let Some(v) = self.gate.take_newest_waiting_proactive() {
+                self.shed_victim(v)?;
+            }
+        }
+        if level >= ShedLevel::ParkRunningProactive {
+            if let Some(v) = self.gate.take_newest_running_proactive() {
+                self.park(v)?;
+            }
+        }
+        if level == ShedLevel::None && !self.parked.is_empty() && self.room_to_resume() {
+            self.resume_one()?;
         }
         Ok(())
     }
 }
 
 /// Convenience used by tests and the UDS layer: run a serving loop on
-/// its own thread, returning the message sender and the live stats.
+/// its own thread, returning the (bounded) message sender and the live
+/// stats.
 pub fn spawn(
     bridge: Arc<ExecBridge>,
     soc: SocConfig,
     sched: SchedulerConfig,
-) -> (Sender<RtMsg>, Arc<Mutex<ReportAccumulator>>) {
+) -> (SyncSender<RtMsg>, Arc<Mutex<ReportAccumulator>>) {
     spawn_with_policy(bridge, soc, sched, "agent-xpu")
         .expect("the default policy is always registered")
 }
@@ -348,20 +801,42 @@ pub fn spawn_with_policy(
     soc: SocConfig,
     sched: SchedulerConfig,
     policy: &str,
-) -> Result<(Sender<RtMsg>, Arc<Mutex<ReportAccumulator>>)> {
-    let (tx, rx) = channel();
-    let sched = RtScheduler::new_with_policy(bridge, soc, sched, policy)?;
+) -> Result<(SyncSender<RtMsg>, Arc<Mutex<ReportAccumulator>>)> {
+    spawn_full(bridge, soc, sched, policy, OverloadConfig::default(), None)
+        .map(|(tx, stats, _)| (tx, stats))
+}
+
+/// Like [`spawn_with_policy`] plus overload knobs and an optional
+/// journal.  Also returns the generation-id floor recovered from the
+/// journal (1 when none): callers must mint ids at or above it.
+pub fn spawn_full(
+    bridge: Arc<ExecBridge>,
+    soc: SocConfig,
+    sched: SchedulerConfig,
+    policy: &str,
+    overload: OverloadConfig,
+    journal: Option<PathBuf>,
+) -> Result<(SyncSender<RtMsg>, Arc<Mutex<ReportAccumulator>>, u64)> {
+    let bound = if overload.max_queue_depth > 0 {
+        overload.max_queue_depth
+    } else {
+        INTAKE_FALLBACK_BOUND
+    };
+    let (tx, rx) = sync_channel(bound);
+    let (sched, floor) = RtScheduler::new_full(bridge, soc, sched, policy, overload, journal)?;
     let stats = sched.stats();
     std::thread::spawn(move || {
         let _ = sched.serve(rx);
     });
-    Ok((tx, stats))
+    Ok((tx, stats, floor))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::{default_soc, llama32_3b};
+    use crate::server::journal::Journal;
+    use std::sync::mpsc::channel;
 
     fn bridge() -> Arc<ExecBridge> {
         let mut geo = llama32_3b();
@@ -369,12 +844,12 @@ mod tests {
         Arc::new(ExecBridge::synthetic(geo))
     }
 
-    fn spawn_default() -> (Sender<RtMsg>, Arc<Mutex<ReportAccumulator>>) {
+    fn spawn_default() -> (SyncSender<RtMsg>, Arc<Mutex<ReportAccumulator>>) {
         spawn(bridge(), default_soc(), SchedulerConfig::default())
     }
 
     fn submit(
-        tx: &Sender<RtMsg>,
+        tx: &SyncSender<RtMsg>,
         id: u64,
         priority: Priority,
         plen: usize,
@@ -395,7 +870,7 @@ mod tests {
     }
 
     fn submit_session(
-        tx: &Sender<RtMsg>,
+        tx: &SyncSender<RtMsg>,
         id: u64,
         session: &str,
         prompt: Vec<i32>,
@@ -474,7 +949,7 @@ mod tests {
         let (_, cached3) = done_of(&erx3.iter().collect::<Vec<_>>());
         assert_eq!(cached3, 0);
         // stats accumulated incrementally from the event stream
-        let s = stats.lock().unwrap();
+        let s = relock(&stats);
         assert_eq!(s.served, 3);
         assert_eq!(s.tokens, 4 + 3 + 2);
         assert_eq!(s.reused_prefix_tokens, 43);
@@ -502,6 +977,25 @@ mod tests {
         let (a3, t) = reg.resolve("a", 9999);
         assert!(a3 > b);
         assert_eq!(t, 0, "a forgotten tag starts cold");
+    }
+
+    #[test]
+    fn session_registry_restores_journal_bindings() {
+        let mut reg = SessionRegistry::default();
+        reg.restore(&BindRec {
+            tag: "chat".into(),
+            flow_id: 7,
+            calls: 2,
+            turn_of: vec![(10, 0), (11, 1), (12, 2)],
+        });
+        assert_eq!(reg.lookup("chat", 11), Some((7, 1)));
+        // the mint counter restarted above the restored flow
+        let (next_id, t) = reg.resolve("fresh", 13);
+        assert!(next_id > 7);
+        assert_eq!(t, 0);
+        // the restored tag continues its call count, not restarts it
+        let (fid, t) = reg.resolve("chat", 14);
+        assert_eq!((fid, t), (7, 3));
     }
 
     #[test]
@@ -546,7 +1040,7 @@ mod tests {
                 events.last()
             );
         }
-        assert_eq!(stats.lock().unwrap().served, 4);
+        assert_eq!(relock(&stats).served, 4);
     }
 
     #[test]
@@ -591,7 +1085,7 @@ mod tests {
             "terminal frame must be Cancelled, got {:?}",
             events.last()
         );
-        assert_eq!(stats.lock().unwrap().cancelled, 1);
+        assert_eq!(relock(&stats).cancelled, 1);
     }
 
     #[test]
@@ -623,7 +1117,7 @@ mod tests {
                 matches!(events.last().unwrap(), TokenEvent::Done { .. }),
                 "{policy}: {events:?}"
             );
-            assert_eq!(stats.lock().unwrap().served, 1, "{policy}");
+            assert_eq!(relock(&stats).served, 1, "{policy}");
         }
         assert!(
             spawn_with_policy(
@@ -654,5 +1148,116 @@ mod tests {
         drop(tx);
         let (_, cached) = done_of(&erx2.iter().collect::<Vec<_>>());
         assert_eq!(cached, 0, "capacity 0 must disable retention");
+    }
+
+    #[test]
+    fn full_queue_rejects_with_retry_after() {
+        let overload = OverloadConfig { max_queue_depth: 1, ..OverloadConfig::default() };
+        let (tx, stats, floor) = spawn_full(
+            bridge(),
+            default_soc(),
+            SchedulerConfig::default(),
+            "agent-xpu",
+            overload,
+            None,
+        )
+        .unwrap();
+        assert_eq!(floor, 1, "no journal: ids start at 1");
+        // fill the single slot with a REACTIVE generation that cannot
+        // finish before the second submission is processed — reactive
+        // work is never shed, so the queue stays provably full
+        let erx1 = submit(&tx, 1, Priority::Reactive, 64, 200_000);
+        assert!(matches!(
+            erx1.recv().unwrap(),
+            TokenEvent::Accepted { id: 1 }
+        ));
+        // depth is now 1 = max: the next proactive arrival is refused
+        let erx2 = submit(&tx, 2, Priority::Proactive, 64, 4);
+        match erx2.recv().unwrap() {
+            TokenEvent::Rejected { id: 2, retry_after_ms } => {
+                assert!(retry_after_ms > 0.0, "retry hint must be positive");
+            }
+            e => panic!("expected Rejected, got {e:?}"),
+        }
+        tx.send(RtMsg::Cancel(1)).unwrap();
+        drop(tx);
+        let ev1: Vec<TokenEvent> = erx1.iter().collect();
+        assert!(matches!(ev1.last().unwrap(), TokenEvent::Cancelled { id: 1 }));
+        assert_eq!(relock(&stats).rejected, 1);
+    }
+
+    #[test]
+    fn journal_recovery_resumes_pending_turns() {
+        let dir = std::env::temp_dir().join(format!(
+            "agent-xpu-rt-recovery-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("serve.journal");
+        let _ = std::fs::remove_file(&path);
+        // a "crashed" server: one admitted session turn, never finished
+        {
+            let (mut j, _) = Journal::open(&path, 1).unwrap();
+            j.append(&Record::Submit(SubmitRec {
+                id: 7,
+                priority: Priority::Reactive,
+                prompt: vec![5; 40],
+                max_new_tokens: 3,
+                session: Some("chat".into()),
+                deps: vec![],
+            }))
+            .unwrap();
+            j.append(&Record::Bind(BindRec {
+                tag: "chat".into(),
+                flow_id: 2,
+                calls: 0,
+                turn_of: vec![(7, 0)],
+            }))
+            .unwrap();
+            j.sync().unwrap();
+        }
+        let (tx, stats, floor) = spawn_full(
+            bridge(),
+            default_soc(),
+            SchedulerConfig::default(),
+            "agent-xpu",
+            OverloadConfig::default(),
+            Some(path.clone()),
+        )
+        .unwrap();
+        assert_eq!(floor, 8, "ids restart above everything journaled");
+        drop(tx);
+        // the recovered turn replays to completion with no client
+        let deadline = Instant::now() + std::time::Duration::from_secs(30);
+        loop {
+            {
+                let s = relock(&stats);
+                if s.recovered == 1 && s.served == 1 {
+                    break;
+                }
+                assert!(
+                    Instant::now() < deadline,
+                    "recovered turn never finished: {s:?}"
+                );
+            }
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn poisoned_stats_mutex_does_not_take_down_the_server() {
+        // regression: a panicking reader used to poison the lock and
+        // wedge every subsequent stats access
+        let stats = Arc::new(Mutex::new(ReportAccumulator::new()));
+        let s2 = stats.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = s2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(stats.lock().is_err(), "the mutex must actually be poisoned");
+        relock(&stats).served += 1;
+        assert_eq!(relock(&stats).served, 1, "relock reads through poison");
     }
 }

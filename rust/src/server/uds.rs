@@ -5,32 +5,42 @@
 //! writer thread while the reader keeps accepting lines, so a client
 //! can `cancel` an in-flight generation (or pipeline several
 //! generations) on the same connection.
+//!
+//! Error frames carry a machine-readable `code` alongside the human
+//! `message`: `bad_request` (malformed JSON or invalid fields),
+//! `unknown_id` (cancelling a generation this connection does not
+//! own), `unknown_verb`.  Overload is not an error frame: a refused
+//! admission is a terminal `retry_after` frame
+//! (`{"type":"retry_after","id":…,"code":"overloaded",
+//! "retry_after_ms":…}`), and a proactive generation shed mid-queue
+//! ends with `{"type":"done.shed","id":…,"retry_after_ms":…}`.
 
 use std::collections::HashSet;
 use std::io::{BufRead, BufReader, Write};
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{Sender, channel};
+use std::sync::mpsc::{Receiver, SyncSender, TrySendError, channel};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result, bail};
 
-use crate::config::{SchedulerConfig, SocConfig};
+use crate::config::{OverloadConfig, SchedulerConfig, SocConfig};
 use crate::engine::ExecBridge;
 use crate::metrics::ReportAccumulator;
 use crate::util::json::Json;
 use crate::workload::Priority;
 
-use super::rt::{RtMsg, RtRequest, TokenEvent, spawn};
+use super::rt::{RtMsg, RtRequest, TokenEvent, relock, spawn_full};
 
 /// The UDS server: accepts connections, parses request lines, streams
 /// responses.
 pub struct Server {
     socket_path: PathBuf,
-    sched_tx: Sender<RtMsg>,
+    sched_tx: SyncSender<RtMsg>,
     next_id: Arc<AtomicU64>,
     stats: Arc<Mutex<ReportAccumulator>>,
+    retry_after_ms: f64,
 }
 
 impl Server {
@@ -44,13 +54,8 @@ impl Server {
         soc: SocConfig,
         sched: SchedulerConfig,
     ) -> Self {
-        let (sched_tx, stats) = spawn(bridge, soc, sched);
-        Self {
-            socket_path: socket_path.as_ref().to_path_buf(),
-            sched_tx,
-            next_id: Arc::new(AtomicU64::new(1)),
-            stats,
-        }
+        Self::with_policy(bridge, socket_path, soc, sched, "agent-xpu")
+            .expect("the default policy is always registered")
     }
 
     /// Like [`Server::new`], serving any scheduling policy registered
@@ -64,13 +69,40 @@ impl Server {
         sched: SchedulerConfig,
         policy: &str,
     ) -> Result<Self> {
-        let (sched_tx, stats) =
-            super::rt::spawn_with_policy(bridge, soc, sched, policy)?;
+        Self::with_options(
+            bridge,
+            socket_path,
+            soc,
+            sched,
+            policy,
+            OverloadConfig::default(),
+            None,
+        )
+    }
+
+    /// Full-control constructor: overload knobs (queue depth, live-flow
+    /// budget, TTFT SLO, retry hint) and an optional write-ahead
+    /// journal.  With a journal, a restarted server replays it before
+    /// accepting connections — live turns resume and the generation-id
+    /// counter restarts above everything ever issued.
+    pub fn with_options(
+        bridge: Arc<ExecBridge>,
+        socket_path: impl AsRef<Path>,
+        soc: SocConfig,
+        sched: SchedulerConfig,
+        policy: &str,
+        overload: OverloadConfig,
+        journal: Option<PathBuf>,
+    ) -> Result<Self> {
+        let retry_after_ms = overload.retry_after_ms;
+        let (sched_tx, stats, id_floor) =
+            spawn_full(bridge, soc, sched, policy, overload, journal)?;
         Ok(Self {
             socket_path: socket_path.as_ref().to_path_buf(),
             sched_tx,
-            next_id: Arc::new(AtomicU64::new(1)),
+            next_id: Arc::new(AtomicU64::new(id_floor.max(1))),
             stats,
+            retry_after_ms,
         })
     }
 
@@ -85,8 +117,9 @@ impl Server {
             let tx = self.sched_tx.clone();
             let next_id = self.next_id.clone();
             let stats = self.stats.clone();
+            let retry_after_ms = self.retry_after_ms;
             std::thread::spawn(move || {
-                if let Err(e) = handle_conn(stream, tx, next_id, stats) {
+                if let Err(e) = handle_conn(stream, tx, next_id, stats, retry_after_ms) {
                     eprintln!("connection error: {e:#}");
                 }
             });
@@ -95,11 +128,20 @@ impl Server {
     }
 }
 
+/// A structured error frame (`code` is machine-readable).
+fn err_frame(code: &str, message: String) -> Json {
+    Json::obj()
+        .set("type", "error")
+        .set("code", code)
+        .set("message", message)
+}
+
 fn handle_conn(
     stream: UnixStream,
-    tx: Sender<RtMsg>,
+    tx: SyncSender<RtMsg>,
     next_id: Arc<AtomicU64>,
     stats: Arc<Mutex<ReportAccumulator>>,
+    retry_after_ms: f64,
 ) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     // frames from concurrent generations interleave line-atomically
@@ -109,7 +151,7 @@ fn handle_conn(
     // any connection could abort any other's work)
     let mut my_ids: HashSet<u64> = HashSet::new();
     let say = |j: Json| -> Result<()> {
-        writeln!(out.lock().unwrap(), "{j}")?;
+        writeln!(relock(&out), "{j}")?;
         Ok(())
     };
     let mut line = String::new();
@@ -125,7 +167,7 @@ fn handle_conn(
             Ok(m) => m,
             Err(e) => {
                 // malformed-request resilience (§6.5 error handling)
-                say(Json::obj().set("type", "error").set("message", format!("{e:#}")))?;
+                say(err_frame("bad_request", format!("{e:#}")))?;
                 continue;
             }
         };
@@ -133,7 +175,7 @@ fn handle_conn(
             Some("generate") => {
                 let id = next_id.fetch_add(1, Ordering::SeqCst);
                 match submit_generate(&tx, &msg, id) {
-                    Ok(erx) => {
+                    Ok(Some(erx)) => {
                         my_ids.insert(id);
                         // stream from a writer thread so this reader
                         // stays free for cancel / further generates
@@ -144,9 +186,11 @@ fn handle_conn(
                                     ev,
                                     TokenEvent::Done { .. }
                                         | TokenEvent::Cancelled { .. }
+                                        | TokenEvent::Rejected { .. }
+                                        | TokenEvent::Shed { .. }
                                         | TokenEvent::Error { .. }
                                 );
-                                let mut o = out.lock().unwrap();
+                                let mut o = relock(&out);
                                 if writeln!(o, "{}", event_json(&ev)).is_err() {
                                     break;
                                 }
@@ -156,10 +200,18 @@ fn handle_conn(
                             }
                         });
                     }
-                    Err(e) => {
+                    Ok(None) => {
+                        // the bounded intake channel itself is full:
+                        // shed at the door, before the scheduler
+                        relock(&stats).rejected += 1;
                         say(Json::obj()
-                            .set("type", "error")
-                            .set("message", format!("{e:#}")))?;
+                            .set("type", "retry_after")
+                            .set("id", id as usize)
+                            .set("code", "overloaded")
+                            .set("retry_after_ms", retry_after_ms))?;
+                    }
+                    Err(e) => {
+                        say(err_frame("bad_request", format!("{e:#}")))?;
                     }
                 }
             }
@@ -171,34 +223,34 @@ fn handle_conn(
                     say(Json::obj().set("type", "cancel.ack").set("id", id))?;
                 }
                 Ok(id) => {
-                    say(Json::obj()
-                        .set("type", "error")
-                        .set("message", format!("no generation {id} on this connection")))?;
+                    say(err_frame(
+                        "unknown_id",
+                        format!("no generation {id} on this connection"),
+                    ))?;
                 }
                 Err(e) => {
-                    say(Json::obj()
-                        .set("type", "error")
-                        .set("message", format!("cancel needs an id: {e:#}")))?;
+                    say(err_frame("bad_request", format!("cancel needs an id: {e:#}")))?;
                 }
             },
             Some("stats") => {
-                let j = stats.lock().unwrap().to_json().set("type", "stats");
+                let j = relock(&stats).to_json().set("type", "stats");
                 say(j)?;
             }
             other => {
-                say(Json::obj()
-                    .set("type", "error")
-                    .set("message", format!("unknown type {other:?}")))?;
+                say(err_frame("unknown_verb", format!("unknown type {other:?}")))?;
             }
         }
     }
 }
 
+/// Parse + validate one generate request and hand it to the scheduler.
+/// `Ok(None)` means the bounded intake queue is full — the caller owes
+/// the client a `retry_after` frame.
 fn submit_generate(
-    tx: &Sender<RtMsg>,
+    tx: &SyncSender<RtMsg>,
     msg: &Json,
     id: u64,
-) -> Result<std::sync::mpsc::Receiver<TokenEvent>> {
+) -> Result<Option<Receiver<TokenEvent>>> {
     let prompt = msg.get("prompt")?.as_i32_vec()?;
     if prompt.is_empty() {
         bail!("empty prompt");
@@ -227,7 +279,7 @@ fn submit_generate(
         bail!("deps require a session tag");
     }
     let (etx, erx) = channel();
-    tx.send(RtMsg::Submit(RtRequest {
+    match tx.try_send(RtMsg::Submit(RtRequest {
         id,
         priority,
         prompt,
@@ -235,9 +287,11 @@ fn submit_generate(
         session,
         deps,
         events: etx,
-    }))
-    .map_err(|_| anyhow::anyhow!("scheduler is down"))?;
-    Ok(erx)
+    })) {
+        Ok(()) => Ok(Some(erx)),
+        Err(TrySendError::Full(_)) => Ok(None),
+        Err(TrySendError::Disconnected(_)) => bail!("scheduler is down"),
+    }
 }
 
 fn event_json(ev: &TokenEvent) -> Json {
@@ -260,9 +314,19 @@ fn event_json(ev: &TokenEvent) -> Json {
         TokenEvent::Cancelled { id } => Json::obj()
             .set("type", "done.cancelled")
             .set("id", *id as usize),
+        TokenEvent::Rejected { id, retry_after_ms } => Json::obj()
+            .set("type", "retry_after")
+            .set("id", *id as usize)
+            .set("code", "overloaded")
+            .set("retry_after_ms", *retry_after_ms),
+        TokenEvent::Shed { id, retry_after_ms } => Json::obj()
+            .set("type", "done.shed")
+            .set("id", *id as usize)
+            .set("retry_after_ms", *retry_after_ms),
         TokenEvent::Error { id, message } => Json::obj()
             .set("type", "error")
             .set("id", *id as usize)
+            .set("code", "internal")
             .set("message", message.as_str()),
     }
 }
@@ -292,6 +356,11 @@ pub fn client_generate(
 /// Like [`client_generate`], with an optional session tag: calls that
 /// share a tag keep the conversation KV alive server-side, so a prompt
 /// extending the previous call's conversation prefills only its delta.
+///
+/// Overload surfaces as errors naming the structured `code`: a
+/// `retry_after` frame fails with `overloaded (retry after …ms)`, a
+/// `done.shed` frame with `shed`, and an `error` frame carries its
+/// server-assigned code.
 pub fn client_generate_session(
     socket_path: impl AsRef<Path>,
     session: Option<&str>,
@@ -328,7 +397,25 @@ pub fn client_generate_session(
                 });
             }
             "done.cancelled" => bail!("generation cancelled"),
-            "error" => bail!("server error: {}", msg.get("message")?.as_str()?),
+            "done.shed" => bail!(
+                "shed: generation dropped under overload (retry after {}ms)",
+                msg.opt("retry_after_ms")
+                    .and_then(|v| v.as_f64().ok())
+                    .unwrap_or(0.0)
+            ),
+            "retry_after" => bail!(
+                "overloaded (retry after {}ms)",
+                msg.opt("retry_after_ms")
+                    .and_then(|v| v.as_f64().ok())
+                    .unwrap_or(0.0)
+            ),
+            "error" => {
+                let code = msg
+                    .opt("code")
+                    .and_then(|c| c.as_str().ok().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "internal".to_string());
+                bail!("server error [{code}]: {}", msg.get("message")?.as_str()?)
+            }
             _ => {}
         }
     }
@@ -386,6 +473,11 @@ mod tests {
         reader.read_line(&mut line).unwrap();
         let msg = Json::parse(&line).unwrap();
         assert_eq!(msg.get("type").unwrap().as_str().unwrap(), "error");
+        assert_eq!(
+            msg.get("code").unwrap().as_str().unwrap(),
+            "bad_request",
+            "error frames carry a structured code"
+        );
         // the same connection still works
         writeln!(out, "{}", Json::obj().set("type", "stats")).unwrap();
         line.clear();
@@ -394,6 +486,33 @@ mod tests {
             Json::parse(&line).unwrap().get("type").unwrap().as_str().unwrap(),
             "stats"
         );
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn uds_error_codes_distinguish_failure_classes() {
+        let path = start_server("codes");
+        let stream = UnixStream::connect(&path).unwrap();
+        let mut out = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        let mut code_of = |frame: Json| -> String {
+            writeln!(out, "{frame}").unwrap();
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            let msg = Json::parse(&line).unwrap();
+            assert_eq!(msg.get("type").unwrap().as_str().unwrap(), "error");
+            msg.get("code").unwrap().as_str().unwrap().to_string()
+        };
+        assert_eq!(
+            code_of(Json::obj().set("type", "generate").set("prompt", Vec::<i32>::new())),
+            "bad_request"
+        );
+        assert_eq!(
+            code_of(Json::obj().set("type", "cancel").set("id", 123456usize)),
+            "unknown_id"
+        );
+        assert_eq!(code_of(Json::obj().set("type", "frobnicate")), "unknown_verb");
         let _ = std::fs::remove_file(path);
     }
 
@@ -555,6 +674,10 @@ mod tests {
         assert_eq!(msg.get("type").unwrap().as_str().unwrap(), "stats");
         assert!(msg.get("served").unwrap().as_usize().unwrap() >= 1);
         assert!(msg.get("tokens").unwrap().as_usize().unwrap() >= 3);
+        // the overload/recovery counters are part of the frame
+        for key in ["rejected", "displaced", "shed", "parked", "resumed", "recovered"] {
+            assert_eq!(msg.get(key).unwrap().as_usize().unwrap(), 0, "{key}");
+        }
         let _ = std::fs::remove_file(path);
     }
 
@@ -563,6 +686,70 @@ mod tests {
         let path = start_server("empty");
         let err = client_generate(&path, &[], Priority::Reactive, 3);
         assert!(err.is_err());
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn uds_overloaded_server_sends_retry_after() {
+        let mut geo = llama32_3b();
+        geo.n_layers = 2;
+        let bridge = Arc::new(ExecBridge::synthetic(geo));
+        let path = tmp_socket("overload");
+        let overload = OverloadConfig { max_queue_depth: 1, ..OverloadConfig::default() };
+        let server = Server::with_options(
+            bridge,
+            &path,
+            default_soc(),
+            SchedulerConfig::default(),
+            "agent-xpu",
+            overload,
+            None,
+        )
+        .unwrap();
+        let p = path.clone();
+        std::thread::spawn(move || {
+            let _ = server.run();
+        });
+        for _ in 0..200 {
+            if p.exists() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        // occupy the single slot with an endless REACTIVE generation
+        // (reactive work is never shed, so the queue stays full)
+        let stream = UnixStream::connect(&path).unwrap();
+        let mut out = stream.try_clone().unwrap();
+        writeln!(
+            out,
+            "{}",
+            Json::obj()
+                .set("type", "generate")
+                .set("prompt", vec![1i32; 64])
+                .set("max_new_tokens", 200_000usize)
+        )
+        .unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let acc = Json::parse(&line).unwrap();
+        assert_eq!(acc.get("type").unwrap().as_str().unwrap(), "accepted");
+        let id = acc.get("id").unwrap().as_usize().unwrap();
+        // a second proactive call is refused with a machine-readable
+        // retry hint (the client helper surfaces it as an error)
+        let err = client_generate_session(
+            &path,
+            None,
+            &[2, 2, 2],
+            Priority::Proactive,
+            4,
+        )
+        .unwrap_err();
+        assert!(
+            format!("{err:#}").contains("overloaded"),
+            "expected an overloaded retry-after, got: {err:#}"
+        );
+        writeln!(out, "{}", Json::obj().set("type", "cancel").set("id", id)).unwrap();
         let _ = std::fs::remove_file(path);
     }
 }
