@@ -16,7 +16,8 @@ fn main() {
         llama32_3b(),
         soc.xpus.iter().cloned().map(XpuModel::new).collect(),
     );
-    let chunk = ChunkSpec { variant: 256, valid: 256, pos: 512, dynamic: false };
+    let chunk =
+        ChunkSpec { variant: 256, valid: 256, pos: 512, dynamic: false, co_run: false };
     let s = bench("annotate prefill kernel (all XPUs)", 100, 5000, || {
         black_box(ann.prefill_kernel(&chunk));
     });

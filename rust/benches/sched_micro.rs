@@ -8,7 +8,7 @@
 use agent_xpu::config::{SchedulerConfig, default_soc, llama32_3b};
 use agent_xpu::coordinator::{AgentXpuEngine, decode_lanes, dispatch_check, resume_order};
 use agent_xpu::engine::{EngineClock, EngineCore, ExecBridge, Phase, States, registry};
-use agent_xpu::heg::{Annotator, ChunkSpec, plan_chunks};
+use agent_xpu::heg::{Annotator, ChunkSpec, ElasticPlan, plan_chunks};
 use agent_xpu::model::gemv_cost;
 use agent_xpu::soc::{KernelClass, LaunchSpec, SocSim, XpuModel};
 use agent_xpu::util::bench::{BenchStats, bench, black_box};
@@ -33,8 +33,13 @@ fn main() {
     let mut sim = SocSim::new(&soc);
     let t = sim.xpus[1].timing(&gemv_cost(4096, 4096));
     sim.launch(1, LaunchSpec { timing: t, class: KernelClass::Proactive });
-    let cand = ann
-        .prefill_kernel(&ChunkSpec { variant: 256, valid: 256, pos: 0, dynamic: false });
+    let cand = ann.prefill_kernel(&ChunkSpec {
+        variant: 256,
+        valid: 256,
+        pos: 0,
+        dynamic: false,
+        co_run: false,
+    });
     let ct = *cand.timing_on(0);
     case(bench("dispatch_check (Algorithm 1)", 1000, 100_000, || {
         black_box(dispatch_check(&sim, &cfg, &ct, false));
@@ -99,6 +104,16 @@ fn main() {
 
     case(bench("plan_chunks (2048-token prompt)", 1000, 100_000, || {
         black_box(plan_chunks(&geo, 2048, 512));
+    }));
+
+    // ElasticPlan::replan — the mid-flight re-tiling step the rebind
+    // hook pays on every fold/split decision; must stay in the same
+    // nanosecond class as plan_chunks (it is a plan rebuild + cursor
+    // reset, no allocation beyond the chunk vec).
+    let mut ep = ElasticPlan::plan(&geo, 512, 128, 0);
+    case(bench("ElasticPlan::replan (512-token plan)", 1000, 100_000, || {
+        ep.replan(&geo, 0, 128);
+        black_box(&ep);
     }));
 
     // DES throughput: one kernel launch+finish cycle

@@ -8,6 +8,43 @@ use anyhow::{Context, Result, bail};
 
 use crate::util::json::Json;
 
+/// Why a [`ModelGeometry::chunk_sizes`] list was rejected at config
+/// load.  Structured (not a bare `anyhow!`) so callers and tests can
+/// match on the exact failure instead of a message substring — and so
+/// the failure happens at the config boundary rather than as a silent
+/// `best = 1` in `max_chunk_within_budget` followed by a panic deep
+/// inside `plan_chunks_from`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum GeometryError {
+    /// No precompiled chunk variants at all.
+    EmptyChunkSizes,
+    /// Adjacent pair out of ascending order.
+    UnsortedChunkSizes { prev: usize, next: usize },
+    /// The same variant listed twice.
+    DuplicateChunkSize { size: usize },
+    /// A zero-token variant can never cover anything.
+    ZeroChunkSize,
+}
+
+impl std::fmt::Display for GeometryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GeometryError::EmptyChunkSizes => {
+                write!(f, "chunk_sizes is empty: at least one precompiled variant is required")
+            }
+            GeometryError::UnsortedChunkSizes { prev, next } => {
+                write!(f, "chunk_sizes not ascending: {next} follows {prev}")
+            }
+            GeometryError::DuplicateChunkSize { size } => {
+                write!(f, "chunk_sizes lists variant {size} twice")
+            }
+            GeometryError::ZeroChunkSize => write!(f, "chunk_sizes contains 0"),
+        }
+    }
+}
+
+impl std::error::Error for GeometryError {}
+
 /// Model geometry, mirroring `python/compile/configs.py::ModelConfig`.
 #[derive(Debug, Clone)]
 pub struct ModelGeometry {
@@ -31,7 +68,7 @@ pub struct ModelGeometry {
 
 impl ModelGeometry {
     pub fn from_json(v: &Json) -> Result<Self> {
-        Ok(Self {
+        let g = Self {
             name: v.get("name")?.as_str()?.to_string(),
             vocab: v.get("vocab")?.as_usize()?,
             d_model: v.get("d_model")?.as_usize()?,
@@ -45,7 +82,31 @@ impl ModelGeometry {
             batch_sizes: v.get("batch_sizes")?.as_usize_vec()?,
             rope_theta: v.get("rope_theta")?.as_f64()?,
             weight_bytes: v.opt("weight_bytes").map(|x| x.as_f64()).unwrap_or(Ok(4.0))?,
-        })
+        };
+        g.validate()
+            .with_context(|| format!("invalid geometry for model {:?}", g.name))?;
+        Ok(g)
+    }
+
+    /// Reject chunk-size lists the planner cannot work with: empty,
+    /// unsorted, duplicated, or containing 0.  Called by `from_json`
+    /// so every config-loaded geometry is planner-safe by construction.
+    pub fn validate(&self) -> std::result::Result<(), GeometryError> {
+        if self.chunk_sizes.is_empty() {
+            return Err(GeometryError::EmptyChunkSizes);
+        }
+        for w in self.chunk_sizes.windows(2) {
+            if w[1] < w[0] {
+                return Err(GeometryError::UnsortedChunkSizes { prev: w[0], next: w[1] });
+            }
+            if w[1] == w[0] {
+                return Err(GeometryError::DuplicateChunkSize { size: w[0] });
+            }
+        }
+        if self.chunk_sizes[0] == 0 {
+            return Err(GeometryError::ZeroChunkSize);
+        }
+        Ok(())
     }
 
     /// Elements in one layer's KV cache (one of K or V): `s * kh * hd`.
@@ -249,6 +310,38 @@ mod tests {
     fn kernel_kind_parses() {
         assert_eq!(KernelKind::parse("layer_prefill").unwrap(), KernelKind::LayerPrefill);
         assert!(KernelKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn chunk_sizes_validated_at_load() {
+        let mk = |sizes: &str| {
+            let j = Json::parse(&format!(
+                r#"{{"name":"x","vocab":16,"d_model":8,"n_layers":1,
+                    "n_q_heads":2,"n_kv_heads":1,"head_dim":4,"d_ffn":16,
+                    "max_seq":8,"chunk_sizes":{sizes},"batch_sizes":[1],
+                    "rope_theta":10000.0}}"#
+            ))
+            .unwrap();
+            ModelGeometry::from_json(&j)
+        };
+        assert!(mk("[2,4]").is_ok());
+        for (sizes, want) in [
+            ("[]", GeometryError::EmptyChunkSizes),
+            ("[4,2]", GeometryError::UnsortedChunkSizes { prev: 4, next: 2 }),
+            ("[2,2,4]", GeometryError::DuplicateChunkSize { size: 2 }),
+            ("[0,2]", GeometryError::ZeroChunkSize),
+        ] {
+            let err = mk(sizes).unwrap_err();
+            assert_eq!(
+                err.downcast_ref::<GeometryError>(),
+                Some(&want),
+                "chunk_sizes {sizes}"
+            );
+        }
+        // the structured error also validates directly
+        let mut g = tiny_geo();
+        g.chunk_sizes.clear();
+        assert_eq!(g.validate(), Err(GeometryError::EmptyChunkSizes));
     }
 
     #[test]

@@ -6,7 +6,7 @@ mod manifest;
 mod presets;
 mod runtime_cfg;
 
-pub use manifest::{ArgSpec, ArtifactMeta, KernelKind, Manifest, ModelGeometry};
+pub use manifest::{ArgSpec, ArtifactMeta, GeometryError, KernelKind, Manifest, ModelGeometry};
 pub use presets::llama32_3b;
 pub use runtime_cfg::{
     OverloadConfig, RuntimeConfig, SchedulerConfig, SocConfig, XpuConfig, default_soc,

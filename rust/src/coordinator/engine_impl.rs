@@ -26,11 +26,11 @@ use std::sync::Arc;
 use crate::config::{ModelGeometry, SchedulerConfig, SocConfig};
 use crate::engine::{
     Action, ExecBridge, IgpuGateCtx, KernelTag, Phase, PolicyCtx, PolicyEngine,
-    ResumeCtx, SchedPolicy, States,
+    RebindCtx, RebindDecision, ResumeCtx, SchedPolicy, States,
 };
-use crate::heg::{Annotator, max_chunk_within_budget};
+use crate::heg::{Annotator, ChunkSpec, max_chunk_within_budget};
 use crate::runtime::ModelExecutor;
-use crate::soc::XpuModel;
+use crate::soc::{CO_RUN_DDR_PENALTY_IGPU, CO_RUN_DDR_PENALTY_NPU, KernelClass, XpuModel};
 use crate::workload::ReqId;
 
 use super::dispatch::{DispatchDecision, dispatch_check};
@@ -135,7 +135,26 @@ fn scan_preemption_victims(states: &States) -> Vec<ReqId> {
                 && s.phase == Phase::Prefilling
                 && !s.running
                 && !s.preempt_counted
-                && (s.chunk_idx > 0 || s.layer_idx > 0)
+                && s.prefill_started()
+        })
+        .map(|s| s.id())
+        .collect();
+    v.sort_unstable();
+    v
+}
+
+/// Reference scan for the split-eligible proactive index: proactive
+/// prefills waiting at a *fresh* (layer 0) static chunk big enough to
+/// cut in two (§5.2 elastic splitting).
+fn scan_split_candidates(states: &States) -> Vec<ReqId> {
+    let mut v: Vec<ReqId> = states
+        .values()
+        .filter(|s| {
+            !s.is_reactive()
+                && s.phase == Phase::Prefilling
+                && !s.running
+                && s.layer_idx() == 0
+                && s.current_chunk().map(|c| !c.dynamic && c.valid >= 2).unwrap_or(false)
         })
         .map(|s| s.id())
         .collect();
@@ -155,7 +174,7 @@ fn account_preemption(ctx: &mut PolicyCtx<'_>) {
     ctx.waiting_proactive_prefills_into(&mut victims);
     victims.retain(|id| {
         let s = ctx.state(*id);
-        !s.preempt_counted && (s.chunk_idx > 0 || s.layer_idx > 0)
+        !s.preempt_counted && s.prefill_started()
     });
     debug_assert_eq!(
         victims,
@@ -229,10 +248,7 @@ impl XpuCoordinator {
         // admission, so "starting" it allocates nothing new.
         let (started, reactive) = {
             let st = ctx.state(id);
-            (
-                st.chunk_idx > 0 || st.layer_idx > 0 || st.cached_prefix_len > 0,
-                st.is_reactive(),
-            )
+            (st.prefill_started() || st.cached_prefix_len > 0, st.is_reactive())
         };
         if started
             || self
@@ -321,6 +337,144 @@ impl XpuCoordinator {
         self.ann.decode_iter(lanes.len(), avg_ctx)
     }
 
+    /// Co-run DDR-penalty factor for launching `chunk` on `xpu` (§5.3
+    /// asymmetric contention model): `1.0` for plan-time chunks — the
+    /// launch path stays bit-identical to the pre-elastic engine — and
+    /// the per-XPU penalty for the parts of a mid-flight split, whose
+    /// memory phases contend with the sibling part's traffic.
+    fn co_run_factor(&self, chunk: &ChunkSpec, xpu: usize) -> f64 {
+        if !chunk.co_run {
+            1.0
+        } else if xpu == self.npu {
+            CO_RUN_DDR_PENALTY_NPU
+        } else {
+            CO_RUN_DDR_PENALTY_IGPU
+        }
+    }
+
+    /// Elastic fold (§5.2): a *proactive* dynamic margin waiting on a
+    /// duty-squeezed iGPU may re-bind to the idle prefill NPU — padded
+    /// up to the next compiled static variant — instead of holding the
+    /// whole request until the governor's window decays.  Consults the
+    /// policy's [`SchedPolicy::rebind`] hook; returns true if the
+    /// folded chunk launched.
+    fn try_fold_margin<H: SchedPolicy + ?Sized>(
+        &self,
+        ctx: &mut PolicyCtx<'_>,
+        id: ReqId,
+        chunk: &ChunkSpec,
+        hooks: &H,
+    ) -> bool {
+        let Some(variant) = self.geo.chunk_for(chunk.valid) else { return false };
+        let igpu_t = *self.ann.prefill_kernel(chunk).timing_on(self.igpu);
+        let squeezed = !self.starved(ctx, id)
+            && !hooks.igpu_proactive_grant(&self.igpu_gate_ctx(ctx, igpu_t.nominal_us));
+        let folded_spec = ChunkSpec { variant, dynamic: false, ..*chunk };
+        let npu_t = *self.ann.prefill_kernel(&folded_spec).timing_on(self.npu);
+        let r = RebindCtx {
+            margin: true,
+            igpu_squeezed: squeezed,
+            npu_pinned_reactive: false,
+            npu_margin_us: npu_t.nominal_us,
+            igpu_margin_us: igpu_t.nominal_us,
+            whole_igpu_us: igpu_t.nominal_us,
+            npu_wait_us: 0.0,
+            split_ratio: 0.0,
+            split_us: f64::INFINITY,
+            now_us: ctx.now(),
+        };
+        if hooks.rebind(&r) != RebindDecision::FoldToNpu {
+            return false;
+        }
+        let Some(folded) = ctx.fold_margin(id, &self.geo) else { return false };
+        let timing = *self.ann.prefill_kernel(&folded).timing_on(self.npu);
+        if dispatch_check(ctx.sim(), &self.sched, &timing, false)
+            == DispatchDecision::Defer
+        {
+            // Folded but deferred: the chunk is static now, so the
+            // normal prefill pipeline launches it on a later pass.
+            return false;
+        }
+        ctx.launch_with_factor(
+            self.npu,
+            timing,
+            false,
+            KernelTag::Prefill { req: id },
+            self.co_run_factor(&folded, self.npu),
+        );
+        true
+    }
+
+    /// Elastic split (§5.2): before committing a whole static chunk to
+    /// the slower iGPU as inter-XPU backfill, ask the policy whether to
+    /// cut it — co-run a slice here *now*, leaving the rest as a static
+    /// NPU chunk for when the reactive prefill drains.  The proposed
+    /// ratio sizes the iGPU slice to roughly half the NPU's pinned
+    /// window, so the slice (with its co-run DDR penalty) finishes
+    /// comfortably inside it.  Returns true if this candidate was
+    /// consumed (split launched, or split applied but deferred).
+    fn try_split_backfill<H: SchedPolicy + ?Sized>(
+        &self,
+        ctx: &mut PolicyCtx<'_>,
+        id: ReqId,
+        chunk: &ChunkSpec,
+        whole_igpu_us: f64,
+        hooks: &H,
+    ) -> bool {
+        if chunk.co_run || chunk.valid < 2 || ctx.state(id).layer_idx() != 0 {
+            return false; // only an unstarted, never-split static head can split
+        }
+        let npu_pinned_reactive =
+            ctx.sim().running_class(self.npu) == Some(KernelClass::Reactive);
+        let npu_wait_us = ctx.sim().remaining_on(self.npu).unwrap_or(0.0);
+        let ratio = (0.5 * npu_wait_us / whole_igpu_us).clamp(0.25, 0.5);
+        // Predict the slice's co-run duration exactly as the simulator
+        // will model it (mirrors `ElasticPlan::split`'s token count).
+        let k = ((chunk.valid as f64 * ratio).round() as usize).clamp(1, chunk.valid - 1);
+        let slice = ChunkSpec {
+            variant: k,
+            valid: k,
+            pos: chunk.pos,
+            dynamic: true,
+            co_run: true,
+        };
+        let split_us =
+            self.ann.prefill_kernel(&slice).co_run_us(self.igpu, CO_RUN_DDR_PENALTY_IGPU);
+        let r = RebindCtx {
+            margin: false,
+            igpu_squeezed: false,
+            npu_pinned_reactive,
+            npu_margin_us: 0.0,
+            igpu_margin_us: 0.0,
+            whole_igpu_us,
+            npu_wait_us,
+            split_ratio: ratio,
+            split_us,
+            now_us: ctx.now(),
+        };
+        let RebindDecision::Split { ratio } = hooks.rebind(&r) else { return false };
+        let Some((_npu_part, igpu_part)) = ctx.split_head(id, &self.geo, ratio) else {
+            return false;
+        };
+        let timing = *self.ann.prefill_kernel(&igpu_part).timing_on(self.igpu);
+        if dispatch_check(ctx.sim(), &self.sched, &timing, false)
+            == DispatchDecision::Defer
+        {
+            // Split applied but deferred: the dynamic co-run part is now
+            // the current chunk, so the margin path picks it up later.
+            return true;
+        }
+        ctx.note_backfill();
+        ctx.launch_with_factor(
+            self.igpu,
+            timing,
+            false,
+            KernelTag::Prefill { req: id },
+            self.co_run_factor(&igpu_part, self.igpu),
+        );
+        true
+    }
+
     // -- NPU side: the prefill pipeline ---------------------------------
 
     fn schedule_prefill_pipeline<H: SchedPolicy + ?Sized>(
@@ -382,8 +536,13 @@ impl XpuCoordinator {
         };
         // Elastic binding: dynamic margin chunks prefer the iGPU (§5.2);
         // if the iGPU is busy they wait for it unless this XPU *is* the
-        // iGPU already (colocated mode).
+        // iGPU already (colocated mode).  A proactive margin may instead
+        // fold back to this (idle) NPU when the policy's rebind hook
+        // says the iGPU is squeezed.
         if chunk.dynamic && self.sched.disaggregation {
+            if !reactive_k && self.try_fold_margin(ctx, id, &chunk, hooks) {
+                return;
+            }
             return; // the iGPU side will pick it up
         }
         let annotated = self.ann.prefill_kernel(&chunk);
@@ -396,7 +555,13 @@ impl XpuCoordinator {
         if reactive_k {
             account_preemption(ctx);
         }
-        ctx.launch(pxpu, timing, reactive_k, KernelTag::Prefill { req: id });
+        ctx.launch_with_factor(
+            pxpu,
+            timing,
+            reactive_k,
+            KernelTag::Prefill { req: id },
+            self.co_run_factor(&chunk, pxpu),
+        );
     }
 
     // -- iGPU side: decode pipeline, margins, inter-XPU backfill --------
@@ -537,6 +702,17 @@ impl XpuCoordinator {
         // is the tiebreak that decides which proactive prefill claims
         // the backfill bubble.
         hooks.resume_order(self.resume_ctx(ctx, self.igpu), &mut cands);
+        #[cfg(debug_assertions)]
+        {
+            let mut sc = ctx.take_id_buf();
+            ctx.split_candidates_into(&mut sc);
+            debug_assert_eq!(
+                sc,
+                scan_split_candidates(ctx.states()),
+                "split-candidate index diverged from a state scan"
+            );
+            ctx.put_id_buf(sc);
+        }
         for k in 0..cands.len() {
             let id = cands[k];
             let chunk = {
@@ -560,13 +736,24 @@ impl XpuCoordinator {
                 self.governor_retry(ctx);
                 continue;
             }
+            // Elastic split (§5.2) consult precedes whole-chunk backfill.
+            if self.try_split_backfill(ctx, id, &chunk, timing.nominal_us, hooks) {
+                ctx.put_id_buf(cands);
+                return;
+            }
             // Backfill constraints (§6.3): duration within the reactive
             // window (chunking bounds this), memory threshold (Alg. 1).
             if dispatch_check(ctx.sim(), &self.sched, &timing, false)
                 == DispatchDecision::Launch
             {
                 ctx.note_backfill();
-                ctx.launch(self.igpu, timing, false, KernelTag::Prefill { req: id });
+                ctx.launch_with_factor(
+                    self.igpu,
+                    timing,
+                    false,
+                    KernelTag::Prefill { req: id },
+                    self.co_run_factor(&chunk, self.igpu),
+                );
                 ctx.put_id_buf(cands);
                 return;
             }
@@ -619,7 +806,13 @@ impl XpuCoordinator {
         if reactive {
             account_preemption(ctx);
         }
-        ctx.launch(self.igpu, timing, reactive, KernelTag::Prefill { req: id });
+        ctx.launch_with_factor(
+            self.igpu,
+            timing,
+            reactive,
+            KernelTag::Prefill { req: id },
+            self.co_run_factor(&chunk, self.igpu),
+        );
         true
     }
 
@@ -665,7 +858,13 @@ impl XpuCoordinator {
         // run on the iGPU if dynamic, NPU otherwise
         let xpu = if chunk.dynamic { self.igpu } else { self.prefill_xpu() };
         let timing = *annotated.timing_on(xpu);
-        ctx.launch(xpu, timing, reactive, KernelTag::Prefill { req: id });
+        ctx.launch_with_factor(
+            xpu,
+            timing,
+            reactive,
+            KernelTag::Prefill { req: id },
+            self.co_run_factor(&chunk, xpu),
+        );
     }
 
     /// One full coordinator pass: prefill pipeline, decode pipeline,
@@ -706,6 +905,25 @@ impl SchedPolicy for AgentXpuPolicy {
         let this = &*self;
         this.coord.schedule(&mut ctx, this);
         ctx.take_actions()
+    }
+
+    /// §5.2 elastic re-binding, agent.xpu defaults: fold a margin to
+    /// the NPU the moment the duty governor squeezes it off the iGPU
+    /// (waiting out a governor window idles the prefill pipeline for
+    /// nothing); split a head chunk only when the NPU is pinned by
+    /// reactive prefill *and* the annotated co-run model predicts the
+    /// iGPU slice beats both whole-chunk backfill and plain waiting.
+    fn rebind(&self, r: &RebindCtx) -> RebindDecision {
+        if r.margin {
+            if r.igpu_squeezed {
+                return RebindDecision::FoldToNpu;
+            }
+            return RebindDecision::Never;
+        }
+        if r.npu_pinned_reactive && r.split_us < r.whole_igpu_us.min(r.npu_wait_us) {
+            return RebindDecision::Split { ratio: r.split_ratio };
+        }
+        RebindDecision::Never
     }
 }
 

@@ -51,10 +51,7 @@ impl MemoryGovernor {
     fn holds_memory(st: &ReqState) -> bool {
         match st.phase {
             Phase::Prefilling => {
-                st.running
-                    || st.chunk_idx > 0
-                    || st.layer_idx > 0
-                    || st.cached_prefix_len > 0
+                st.running || st.prefill_started() || st.cached_prefix_len > 0
             }
             Phase::Decoding => true,
             Phase::Done => false,
@@ -106,7 +103,7 @@ impl MemoryGovernor {
                     && !s.running
                     && Self::holds_memory(s)
             })
-            .min_by_key(|s| (s.chunk_idx, s.layer_idx, s.id()))
+            .min_by_key(|s| (s.plan.cursor(), s.id()))
             .map(|s| s.id())
     }
 }
@@ -134,7 +131,7 @@ mod tests {
             },
             512,
         );
-        st.layer_idx = progress;
+        st.plan.set_progress(0, progress);
         st
     }
 

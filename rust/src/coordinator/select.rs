@@ -17,9 +17,9 @@ use crate::workload::ReqId;
 pub fn prefill_etc_us(st: &ReqState, ann: &Annotator, xpu: usize) -> f64 {
     let n_layers = ann.geo.n_layers;
     let mut total = 0.0;
-    for (ci, chunk) in st.plan.iter().enumerate().skip(st.chunk_idx) {
+    for (i, chunk) in st.plan.pending().iter().enumerate() {
         let per = ann.prefill_kernel(chunk).timings[xpu].nominal_us;
-        let layers = if ci == st.chunk_idx { n_layers - st.layer_idx } else { n_layers };
+        let layers = if i == 0 { n_layers - st.layer_idx() } else { n_layers };
         total += per * layers as f64;
     }
     total
@@ -219,7 +219,7 @@ mod tests {
             (2, Priority::Proactive, Phase::Prefilling, 0.0),
         ]);
         // give task 2 more progress → lower ETC
-        states.get_mut(&2).unwrap().chunk_idx = 1;
+        states.get_mut(&2).unwrap().plan.set_progress(1, 0);
         let mut c = vec![1, 2];
         resume_order(&states, &mut c, &ann(), 0, 1000.0, 1e12, true);
         assert_eq!(c, vec![2, 1], "lower ETC first");
@@ -266,7 +266,7 @@ mod tests {
         resume_order(&states, &mut c, &ann(), 0, 1000.0, 1e12, false);
         assert_eq!(c, vec![1, 2], "ties break by id without cp priority");
         // give request 2 more progress → lower ETC wins when cp is off
-        states.get_mut(&2).unwrap().chunk_idx = 1;
+        states.get_mut(&2).unwrap().plan.set_progress(1, 0);
         let mut c = vec![1, 2];
         resume_order(&states, &mut c, &ann(), 0, 1000.0, 1e12, false);
         assert_eq!(c, vec![2, 1], "ETC decides without cp priority");

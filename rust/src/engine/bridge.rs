@@ -12,7 +12,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::config::ModelGeometry;
-use crate::heg::plan_chunks_from;
+use crate::heg::ElasticPlan;
 use crate::runtime::{KvCache, ModelExecutor, SessionSeed};
 use crate::workload::Request;
 
@@ -83,14 +83,14 @@ impl ExecBridge {
             (false, Some(s)) => (None, s.reuse.min(cap)),
             (false, None) => (None, 0),
         };
-        let plan = plan_chunks_from(&self.geo, plen, max_chunk, cached);
+        let plan = ElasticPlan::plan(&self.geo, plen, max_chunk, cached);
         ReqState::new(req, plan, cache, max_chunk, cached)
     }
 
-    /// Effect of the prefill kernel at (st.chunk_idx, st.layer_idx);
-    /// advances the progress cursor and, at the end of the last chunk,
-    /// emits the first token (TTFT point).  Returns `true` when prefill
-    /// completed.
+    /// Effect of the prefill kernel at the plan's (chunk, layer)
+    /// cursor; advances it through the elastic plan and, at the end of
+    /// the last chunk, emits the first token (TTFT point).  Returns
+    /// `true` when prefill completed.
     pub fn prefill_kernel_done(&self, st: &mut ReqState) -> Result<bool> {
         debug_assert_eq!(st.phase, Phase::Prefilling);
         let chunk = *st.current_chunk().expect("prefill kernel beyond plan");
@@ -98,7 +98,7 @@ impl ExecBridge {
 
         if let Some(exec) = &self.exec {
             let cache = st.cache.as_mut().expect("real mode has cache");
-            if st.layer_idx == 0 {
+            if st.layer_idx() == 0 {
                 let toks =
                     &st.req.prompt[chunk.pos..chunk.pos + chunk.valid];
                 st.x = Some(exec.embed(toks, chunk.variant)?);
@@ -106,7 +106,7 @@ impl ExecBridge {
             let x = st.x.take().expect("activation buffer");
             let y = exec.layer_prefill(
                 chunk.variant,
-                st.layer_idx,
+                st.layer_idx(),
                 &x,
                 cache,
                 chunk.pos,
@@ -114,19 +114,16 @@ impl ExecBridge {
             st.x = Some(y);
         }
 
-        st.layer_idx += 1;
-        if st.layer_idx < n_layers {
+        if !st.plan.advance_layer(n_layers) {
             return Ok(false);
         }
-        // chunk finished
-        st.layer_idx = 0;
-        st.chunk_idx += 1;
+        // chunk finished — commit its KV/position side effects
         st.pos = chunk.pos + chunk.valid;
         st.metrics.prefill_tokens += chunk.valid;
         if let Some(cache) = st.cache.as_mut() {
             cache.pos = st.pos;
         }
-        if st.chunk_idx < st.plan.len() {
+        if !st.plan.done() {
             return Ok(false);
         }
         // prefill complete → first token
@@ -236,9 +233,9 @@ mod tests {
         // plan: 32 + margin 8 → 2 chunks × 2 layers = 4 kernels
         assert_eq!(st.plan.len(), 2);
         assert!(!b.prefill_kernel_done(&mut st).unwrap());
-        assert_eq!((st.chunk_idx, st.layer_idx), (0, 1));
+        assert_eq!(st.plan.cursor(), (0, 1));
         assert!(!b.prefill_kernel_done(&mut st).unwrap());
-        assert_eq!((st.chunk_idx, st.layer_idx), (1, 0));
+        assert_eq!(st.plan.cursor(), (1, 0));
         assert_eq!(st.pos, 32);
         assert!(!b.prefill_kernel_done(&mut st).unwrap());
         assert!(b.prefill_kernel_done(&mut st).unwrap());
@@ -255,9 +252,8 @@ mod tests {
         let mut st = b.init_state_with_session(req(40, 3), 32, Some(seed));
         assert_eq!(st.cached_prefix_len, 24);
         assert_eq!(st.pos, 24);
-        let delta: usize = st.plan.iter().map(|c| c.valid).sum();
-        assert_eq!(delta, 16, "only 40 - 24 tokens planned");
-        assert_eq!(st.plan[0].pos, 24);
+        assert_eq!(st.plan.pending_tokens(), 16, "only 40 - 24 tokens planned");
+        assert_eq!(st.plan.chunks()[0].pos, 24);
         // run the (shorter) prefill to completion
         let kernels = st.remaining_prefill_kernels(b.geo.n_layers);
         for k in 0..kernels {
@@ -277,7 +273,7 @@ mod tests {
         let seed = crate::runtime::SessionSeed { cache: None, reuse: 999 };
         let st = b.init_state_with_session(req(16, 2), 32, Some(seed));
         assert_eq!(st.cached_prefix_len, 15);
-        assert_eq!(st.plan.iter().map(|c| c.valid).sum::<usize>(), 1);
+        assert_eq!(st.plan.pending_tokens(), 1);
     }
 
     #[test]
@@ -289,6 +285,21 @@ mod tests {
         }
         assert_eq!(st.metrics.prefill_tokens, 40);
         assert_eq!(st.metrics.cached_prefix_len, 0);
+    }
+
+    #[test]
+    fn split_plan_prefills_to_completion() {
+        let b = synth_bridge();
+        let mut st = b.init_state(req(40, 3), 32);
+        let (npu, igpu) = st.plan.split(&b.geo, 0, 0.5).expect("head splittable");
+        assert_eq!(igpu.valid + npu.valid, 32);
+        assert_eq!(st.plan.len(), 3);
+        while st.phase == Phase::Prefilling {
+            b.prefill_kernel_done(&mut st).unwrap();
+        }
+        assert_eq!(st.metrics.prefill_tokens, 40, "every token prefilled once");
+        assert_eq!(st.pos, 40);
+        assert_eq!(st.tokens.len(), 1);
     }
 
     #[test]

@@ -72,6 +72,11 @@ pub enum EngineEvent {
     /// A proactive task waiting at its kernel-boundary checkpoint was
     /// displaced by a reactive launch (§6.2).
     Preempted { id: ReqId, at_us: f64 },
+    /// The request's elastic plan was re-bound mid-flight (§5.2): its
+    /// margin chunk folded to a padded static variant
+    /// (`split_tokens == 0`), or its head chunk split across NPU+iGPU
+    /// with `split_tokens` routed to the co-run iGPU part.
+    Rebound { id: ReqId, at_us: f64, split_tokens: usize },
     /// The memory governor wiped this in-flight prefill's KV (§6.5);
     /// the request recomputes from scratch.
     KvEvicted { id: ReqId, at_us: f64 },
@@ -89,6 +94,7 @@ impl EngineEvent {
             | EngineEvent::TokenEmitted { id, .. }
             | EngineEvent::TurnDone { id, .. }
             | EngineEvent::Preempted { id, .. }
+            | EngineEvent::Rebound { id, .. }
             | EngineEvent::KvEvicted { id, .. }
             | EngineEvent::Cancelled { id, .. } => Some(*id),
             EngineEvent::SessionEvicted { .. } => None,

@@ -55,7 +55,7 @@ use crate::trace::Trace;
 /// Semantic meaning of an in-flight kernel.
 #[derive(Debug, Clone, PartialEq)]
 pub enum KernelTag {
-    /// The next prefill kernel (st.chunk_idx, st.layer_idx) of `req`.
+    /// The next prefill kernel (the plan's chunk/layer cursor) of `req`.
     Prefill { req: ReqId },
     /// One batched decode iteration over `lanes`.
     DecodeIter { lanes: Vec<ReqId> },
@@ -153,6 +153,10 @@ pub(crate) struct PhaseIndex {
     /// (margin-backfill candidates), per class.
     pub dyn_chunk_rt: BTreeSet<ReqId>,
     pub dyn_chunk_pro: BTreeSet<ReqId>,
+    /// Waiting *proactive* prefills whose current chunk could still be
+    /// split across XPUs (static-shaped, ≥ 2 valid tokens, cursor at a
+    /// chunk boundary) — the rebind hook's split candidates.
+    pub split_pro: BTreeSet<ReqId>,
     /// Reactive requests that are not Done (replaces the
     /// `.values().any(is_reactive)` liveness scan).
     pub live_rt: BTreeSet<ReqId>,
@@ -170,16 +174,21 @@ impl PhaseIndex {
     /// Re-derive `id`'s membership in every set from its current state
     /// (idempotent; absent state = out of all sets).
     fn update(&mut self, id: ReqId, s: Option<&ReqState>) {
-        let (rt, wait_pre, idle_dec, dynamic, live_rt) = match s {
+        let (rt, wait_pre, idle_dec, dynamic, splittable, live_rt) = match s {
             Some(s) => {
                 let rt = s.is_reactive();
                 let wait_pre = s.phase == Phase::Prefilling && !s.running;
                 let idle_dec = s.phase == Phase::Decoding && !s.running;
                 let dynamic =
                     wait_pre && s.current_chunk().map(|c| c.dynamic).unwrap_or(false);
-                (rt, wait_pre, idle_dec, dynamic, rt && s.phase != Phase::Done)
+                let splittable = wait_pre
+                    && s.layer_idx() == 0
+                    && s.current_chunk()
+                        .map(|c| !c.dynamic && c.valid >= 2)
+                        .unwrap_or(false);
+                (rt, wait_pre, idle_dec, dynamic, splittable, rt && s.phase != Phase::Done)
             }
-            None => (false, false, false, false, false),
+            None => (false, false, false, false, false, false),
         };
         Self::put(&mut self.wait_prefill_rt, id, wait_pre && rt);
         Self::put(&mut self.wait_prefill_pro, id, wait_pre && !rt);
@@ -187,6 +196,7 @@ impl PhaseIndex {
         Self::put(&mut self.idle_decode_pro, id, idle_dec && !rt);
         Self::put(&mut self.dyn_chunk_rt, id, dynamic && rt);
         Self::put(&mut self.dyn_chunk_pro, id, dynamic && !rt);
+        Self::put(&mut self.split_pro, id, splittable && !rt);
         Self::put(&mut self.live_rt, id, live_rt);
     }
 }
@@ -256,6 +266,12 @@ pub struct Driver {
     pub session_evictions: u64,
     /// Requests aborted via [`Driver::cancel_request`].
     pub cancellations: u64,
+    /// Elastic rebinds (folds + splits) applied to waiting plans.
+    pub rebinds: u64,
+    /// Mid-flight chunk splits (a subset of `rebinds`).
+    pub splits: u64,
+    /// Tokens routed to the co-run iGPU side by those splits.
+    pub split_tokens: u64,
     /// Kernel-level execution trace (always recorded; events are tiny).
     pub trace: Trace,
     total_requests: usize,
@@ -298,6 +314,9 @@ impl Driver {
             kv_evictions: 0,
             session_evictions: 0,
             cancellations: 0,
+            rebinds: 0,
+            splits: 0,
+            split_tokens: 0,
             trace: Trace::default(),
             finished: 0,
         }
@@ -472,6 +491,14 @@ impl Driver {
         out.extend(set.iter().copied());
     }
 
+    /// Fill `out` with the waiting proactive prefills whose current
+    /// chunk could still be split across XPUs (static-shaped, ≥ 2 valid
+    /// tokens, cursor at a chunk boundary), in id order.
+    pub fn split_candidates_into(&self, out: &mut Vec<ReqId>) {
+        out.clear();
+        out.extend(self.idx.split_pro.iter().copied());
+    }
+
     /// Any reactive request not yet Done?  (Index-backed replacement
     /// for `states.values().any(is_reactive)`.)
     pub fn reactive_live(&self) -> bool {
@@ -606,6 +633,21 @@ impl Driver {
 
     /// Launch a kernel; marks all tagged requests as running.
     pub fn launch(&mut self, xpu: usize, timing: KernelTiming, reactive: bool, tag: KernelTag) {
+        self.launch_with_factor(xpu, timing, reactive, tag, 1.0);
+    }
+
+    /// [`Driver::launch`] with a co-run DDR-penalty factor on the
+    /// kernel's memory phase (§5.3 asymmetric slowdown).  Factor 1.0 is
+    /// bit-identical to a plain launch; split chunks pass the per-XPU
+    /// `CO_RUN_DDR_PENALTY_*` constant instead.
+    pub fn launch_with_factor(
+        &mut self,
+        xpu: usize,
+        timing: KernelTiming,
+        reactive: bool,
+        tag: KernelTag,
+        co_run_mem_factor: f64,
+    ) {
         match &tag {
             KernelTag::Prefill { req } => self.mark_running(*req),
             KernelTag::DecodeIter { lanes } => {
@@ -614,9 +656,10 @@ impl Driver {
                 }
             }
         }
-        let run = self.sim.launch(
+        let run = self.sim.launch_with_factor(
             xpu,
             LaunchSpec { timing, class: KernelClass::from_reactive(reactive) },
+            co_run_mem_factor,
         );
         self.inflight.insert(run, tag);
     }
@@ -675,6 +718,25 @@ impl Driver {
         self.session_evictions += 1;
         self.events
             .push(EngineEvent::SessionEvicted { flow_id, at_us: self.now() });
+    }
+
+    /// Elastic-binding accounting: a waiting plan was re-bound (its
+    /// dynamic margin chunk folded to a padded static variant so the
+    /// NPU can take it).
+    pub fn note_rebind(&mut self, id: ReqId) {
+        self.rebinds += 1;
+        self.events
+            .push(EngineEvent::Rebound { id, at_us: self.now(), split_tokens: 0 });
+    }
+
+    /// Elastic-binding accounting: a head chunk was split across XPUs;
+    /// `tokens` of it moved to the co-run iGPU part.
+    pub fn note_split(&mut self, id: ReqId, tokens: usize) {
+        self.rebinds += 1;
+        self.splits += 1;
+        self.split_tokens += tokens as u64;
+        self.events
+            .push(EngineEvent::Rebound { id, at_us: self.now(), split_tokens: tokens });
     }
 
     /// Abort a request wherever it is: still queued, held behind DAG
@@ -1400,6 +1462,9 @@ impl Driver {
             kv_evictions: self.kv_evictions,
             session_evictions: self.session_evictions,
             cancellations: self.cancellations,
+            rebinds: self.rebinds,
+            splits: self.splits,
+            split_tokens: self.split_tokens,
             dropped_reqs: self.dropped_reqs,
         })
     }

@@ -30,6 +30,7 @@ pub use core_api::{
 };
 pub use driver::{Driver, KernelTag};
 pub use policy::{
-    Action, IgpuGateCtx, PolicyCtx, PolicyEngine, ResumeCtx, SchedPolicy, States,
+    Action, IgpuGateCtx, PolicyCtx, PolicyEngine, RebindCtx, RebindDecision, ResumeCtx,
+    SchedPolicy, States,
 };
 pub use reqstate::{Phase, ReqState};

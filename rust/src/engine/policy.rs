@@ -37,7 +37,7 @@ use anyhow::{Context, Result};
 
 use crate::config::{ModelGeometry, SocConfig};
 use crate::coordinator::MemoryGovernor;
-use crate::heg::Annotator;
+use crate::heg::{Annotator, ChunkSpec};
 use crate::metrics::RunReport;
 use crate::soc::{GraphicsConfig, GraphicsSim, KernelTiming, SocSim};
 use crate::trace::Trace;
@@ -156,6 +156,13 @@ impl<'a> PolicyCtx<'a> {
         self.d.dynamic_chunk_candidates_into(reactive, out);
     }
 
+    /// Fill `out` with the waiting proactive prefills whose current
+    /// chunk could still be split across XPUs (static-shaped, ≥ 2
+    /// valid tokens, cursor at a chunk boundary), in id order.
+    pub fn split_candidates_into(&self, out: &mut Vec<ReqId>) {
+        self.d.split_candidates_into(out);
+    }
+
     /// Any reactive request not yet Done?  (Index-backed.)
     pub fn reactive_live(&self) -> bool {
         self.d.reactive_live()
@@ -212,8 +219,22 @@ impl<'a> PolicyCtx<'a> {
 
     /// Launch a kernel; recorded as [`Action::Launch`].
     pub fn launch(&mut self, xpu: usize, timing: KernelTiming, reactive: bool, tag: KernelTag) {
+        self.launch_with_factor(xpu, timing, reactive, tag, 1.0);
+    }
+
+    /// [`PolicyCtx::launch`] with a co-run DDR-penalty factor on the
+    /// kernel's memory phase (split chunks pay the §5.3 asymmetric
+    /// slowdown); factor 1.0 is bit-identical to a plain launch.
+    pub fn launch_with_factor(
+        &mut self,
+        xpu: usize,
+        timing: KernelTiming,
+        reactive: bool,
+        tag: KernelTag,
+        co_run_mem_factor: f64,
+    ) {
         self.actions.push(Action::Launch { xpu, reactive, tag: tag.clone() });
-        self.d.launch(xpu, timing, reactive, tag);
+        self.d.launch_with_factor(xpu, timing, reactive, tag, co_run_mem_factor);
     }
 
     /// Abort the kernel in flight on `xpu` (scheme-(a) instant
@@ -284,6 +305,41 @@ impl<'a> PolicyCtx<'a> {
         }
     }
 
+    /// Elastic rebind (§5.2): fold `id`'s *current* dynamic margin
+    /// chunk to its next compiled static variant so the NPU can take it
+    /// immediately.  Returns the folded chunk, or `None` when the plan
+    /// is not at an unstarted dynamic chunk.  Counted in
+    /// `RunReport::rebinds` and streamed as [`EngineEvent::Rebound`]
+    /// with `split_tokens == 0`.
+    pub fn fold_margin(&mut self, id: ReqId, geo: &ModelGeometry) -> Option<ChunkSpec> {
+        let st = self.d.states.get_mut(&id)?;
+        let folded = st.plan.fold_margin(geo)?;
+        self.d.reindex(id); // the current chunk changed shape
+        self.d.note_rebind(id);
+        Some(folded)
+    }
+
+    /// Elastic rebind (§5.2): split `id`'s current head chunk in two —
+    /// a dynamic co-run iGPU part (ratio of the valid tokens, first in
+    /// plan order) and a padded static co-run NPU part.  Returns
+    /// `(npu_part, igpu_part)`, or `None` when the chunk is ineligible
+    /// (started, dynamic, or < 2 valid tokens).  Counted in
+    /// `RunReport::{rebinds, splits, split_tokens}` and streamed as
+    /// [`EngineEvent::Rebound`].
+    pub fn split_head(
+        &mut self,
+        id: ReqId,
+        geo: &ModelGeometry,
+        ratio: f64,
+    ) -> Option<(ChunkSpec, ChunkSpec)> {
+        let st = self.d.states.get_mut(&id)?;
+        let at = st.plan.chunk_idx();
+        let parts = st.plan.split(geo, at, ratio)?;
+        self.d.reindex(id); // the current chunk is now the iGPU part
+        self.d.note_split(id, parts.1.valid);
+        Some(parts)
+    }
+
     /// Close the pass, yielding the decision record.
     pub fn take_actions(self) -> Vec<Action> {
         self.actions
@@ -304,6 +360,62 @@ pub struct IgpuGateCtx {
     /// due instant (always false without a display workload).
     pub frame_pending: bool,
     pub now_us: f64,
+}
+
+/// Arguments to the [`SchedPolicy::rebind`] hook — the runtime-elastic
+/// operator-binding question (§5.2): may this waiting chunk plan be
+/// re-partitioned right now?  The coordinator asks it at two points,
+/// distinguished by `margin`:
+///
+/// - `margin == true` (*fold* question): a proactive dynamic margin
+///   chunk is waiting for the iGPU while the NPU prefill pipeline sits
+///   idle — should it fold to its padded static variant and run on the
+///   NPU instead?
+/// - `margin == false` (*split* question): a proactive static head
+///   chunk is eyeing an iGPU backfill bubble while the NPU is busy —
+///   should it split, co-running part of itself on the iGPU now and
+///   leaving the rest as a static NPU chunk?
+///
+/// All timings are the annotator's co-run-aware predictions; the hook
+/// is pure (mutations happen through [`PolicyCtx::fold_margin`] /
+/// [`PolicyCtx::split_head`] after the decision).
+pub struct RebindCtx {
+    /// Fold question (dynamic margin chunk) vs split question (static
+    /// head chunk).
+    pub margin: bool,
+    /// The iGPU duty governor would veto this candidate right now.
+    pub igpu_squeezed: bool,
+    /// The NPU's in-flight kernel is *reactive* (the split scenario:
+    /// reactive prefill pins the prefill pipeline).
+    pub npu_pinned_reactive: bool,
+    /// Fold: predicted duration of the folded static chunk on the NPU.
+    pub npu_margin_us: f64,
+    /// Fold: predicted duration of the dynamic margin on the iGPU.
+    pub igpu_margin_us: f64,
+    /// Split: predicted duration of the *whole* chunk on the iGPU.
+    pub whole_igpu_us: f64,
+    /// Split: remaining wall time of the NPU's in-flight kernel.
+    pub npu_wait_us: f64,
+    /// Split: the ratio [`PolicyCtx::split_head`] would be called with.
+    pub split_ratio: f64,
+    /// Split: predicted co-run duration of the iGPU part at that ratio
+    /// (DDR-penalty-aware, via `Annotated::co_run_us`).
+    pub split_us: f64,
+    pub now_us: f64,
+}
+
+/// What the [`SchedPolicy::rebind`] hook decided.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RebindDecision {
+    /// Leave the plan exactly as planned at admission (every baseline's
+    /// answer — keeps their schedules bit-for-bit unchanged).
+    Never,
+    /// Fold the dynamic margin to its padded static variant and launch
+    /// it on the NPU now.
+    FoldToNpu,
+    /// Split the head chunk: co-run `ratio` of its valid tokens on the
+    /// iGPU now, leave the rest as a static NPU chunk.
+    Split { ratio: f64 },
 }
 
 /// Arguments to the [`SchedPolicy::resume_order`] hook: everything the
@@ -432,6 +544,20 @@ pub trait SchedPolicy: Send {
         let duty_ok = g.duty_cap >= 1.0 || g.duty < g.duty_cap;
         let frame_ok = !g.yield_to_graphics || !g.frame_pending;
         duty_ok && frame_ok
+    }
+
+    /// Runtime-elastic operator re-binding (§5.2): may the coordinator
+    /// re-partition a waiting chunk plan mid-flight — fold a dynamic
+    /// margin to the NPU, or split a static head chunk across NPU+iGPU
+    /// with the co-run DDR penalty priced in?  Consulted at the two
+    /// points described on [`RebindCtx`].
+    ///
+    /// Default: [`RebindDecision::Never`] — plans stay exactly as
+    /// planned at admission, which keeps every baseline policy's
+    /// schedule (and the registry fingerprint gates) bit-for-bit
+    /// unchanged.  Only `agent-xpu` overrides this.
+    fn rebind(&self, _r: &RebindCtx) -> RebindDecision {
+        RebindDecision::Never
     }
 
     /// Overload → shed-level mapping (priority-aware load shedding,

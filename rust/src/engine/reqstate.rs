@@ -17,7 +17,7 @@
 //! prefix already resident from the session's previous turn, so the
 //! chunk plan covers only the delta tokens (DESIGN.md §3).
 
-use crate::heg::ChunkSpec;
+use crate::heg::{ChunkSpec, ElasticPlan};
 use crate::metrics::ReqMetrics;
 use crate::runtime::{HostTensor, KvCache};
 use crate::workload::{Priority, ReqId, Request};
@@ -36,14 +36,12 @@ pub enum Phase {
 #[derive(Debug)]
 pub struct ReqState {
     pub req: Request,
-    /// Elastic chunk plan (paper §5.2) — the remaining_kernels list is
-    /// implicit: kernels (chunk_idx.., layer_idx..) × n_layers.  Covers
-    /// only `[cached_prefix_len..prompt_len)` when a session cache was
+    /// Live elastic chunk plan (paper §5.2): owns both the remaining
+    /// chunks and the (chunk, layer) execution cursor, and stays
+    /// re-partitionable mid-flight (split/fold/replan).  Covers only
+    /// `[cached_prefix_len..prompt_len)` when a session cache was
     /// reused.
-    pub plan: Vec<ChunkSpec>,
-    /// Next prefill kernel to execute.
-    pub chunk_idx: usize,
-    pub layer_idx: usize,
+    pub plan: ElasticPlan,
     /// KV cache (None in timing-only mode).  Seeded from the session
     /// pool for continuation turns in real-compute mode.
     pub cache: Option<KvCache>,
@@ -87,7 +85,7 @@ pub struct ReqState {
 impl ReqState {
     pub fn new(
         req: Request,
-        plan: Vec<ChunkSpec>,
+        plan: ElasticPlan,
         cache: Option<KvCache>,
         max_chunk: usize,
         cached_prefix_len: usize,
@@ -115,8 +113,6 @@ impl ReqState {
             last_progress_us: req.arrival_us,
             req,
             plan,
-            chunk_idx: 0,
-            layer_idx: 0,
             cache,
             x: None,
             last_token: None,
@@ -146,7 +142,23 @@ impl ReqState {
     }
 
     pub fn current_chunk(&self) -> Option<&ChunkSpec> {
-        self.plan.get(self.chunk_idx)
+        self.plan.current()
+    }
+
+    /// The plan's (chunk, layer) cursor: next prefill kernel to execute.
+    pub fn chunk_idx(&self) -> usize {
+        self.plan.chunk_idx()
+    }
+
+    pub fn layer_idx(&self) -> usize {
+        self.plan.layer_idx()
+    }
+
+    /// Any prefill kernel of this request has completed (progress worth
+    /// protecting: memory accounting, preemption counting, eviction
+    /// victim ordering all key off this).
+    pub fn prefill_started(&self) -> bool {
+        self.plan.started()
     }
 
     /// Remaining prefill kernels (the paper's remaining_kernels length).
@@ -154,23 +166,21 @@ impl ReqState {
         if self.phase != Phase::Prefilling {
             return 0;
         }
-        let whole_chunks = self.plan.len() - self.chunk_idx - 1;
-        whole_chunks * n_layers + (n_layers - self.layer_idx)
+        self.plan.remaining_kernels(n_layers)
     }
 
     /// Reset all prefill progress (scheme-(a) baseline: preemption
     /// without saving context forces recomputation).  Any reused
     /// session prefix is lost with the KV, so the plan is rebuilt over
-    /// the full prompt.
+    /// the full prompt; a split or folded plan is also rebuilt (the
+    /// recomputed coverage starts from scratch on the default binding).
     pub fn restart_prefill(&mut self, geo: &crate::config::ModelGeometry) {
         assert_eq!(self.phase, Phase::Prefilling, "can only restart prefill");
         if self.cached_prefix_len > 0 {
             self.cached_prefix_len = 0;
             self.metrics.cached_prefix_len = 0; // the reuse never materialized
-            self.plan = crate::heg::plan_chunks(geo, self.req.prompt_len(), self.max_chunk);
         }
-        self.chunk_idx = 0;
-        self.layer_idx = 0;
+        self.plan.replan(geo, 0, self.max_chunk);
         self.pos = 0;
         self.x = None;
         if self.cache.is_some() {
@@ -198,10 +208,15 @@ mod tests {
             profile: "test".into(),
             flow: None,
         };
-        let plan = vec![
-            ChunkSpec { variant: 16, valid: 16, pos: 0, dynamic: false },
-            ChunkSpec { variant: 16, valid: 5, pos: 16, dynamic: true },
-        ];
+        let plan = ElasticPlan::new(
+            vec![
+                ChunkSpec { variant: 16, valid: 16, pos: 0, dynamic: false, co_run: false },
+                ChunkSpec { variant: 16, valid: 5, pos: 16, dynamic: true, co_run: false },
+            ],
+            // the literal chunks tile 21 tokens; callers with shorter
+            // prompts only exercise decode-side accounting
+            21,
+        );
         ReqState::new(req, plan, None, 64, 0)
     }
 
@@ -209,10 +224,9 @@ mod tests {
     fn remaining_kernels_counts_down() {
         let mut st = mk(1, Priority::Proactive, 21);
         assert_eq!(st.remaining_prefill_kernels(4), 8);
-        st.layer_idx = 3;
+        st.plan.set_progress(0, 3);
         assert_eq!(st.remaining_prefill_kernels(4), 5);
-        st.chunk_idx = 1;
-        st.layer_idx = 0;
+        st.plan.set_progress(1, 0);
         assert_eq!(st.remaining_prefill_kernels(4), 4);
         st.phase = Phase::Decoding;
         assert_eq!(st.remaining_prefill_kernels(4), 0);
@@ -222,11 +236,10 @@ mod tests {
     fn restart_prefill_resets_progress() {
         let geo = crate::config::llama32_3b();
         let mut st = mk(1, Priority::Proactive, 21);
-        st.chunk_idx = 1;
-        st.layer_idx = 2;
+        st.plan.set_progress(1, 2);
         st.pos = 16;
         st.restart_prefill(&geo);
-        assert_eq!((st.chunk_idx, st.layer_idx, st.pos), (0, 0, 0));
+        assert_eq!((st.chunk_idx(), st.layer_idx(), st.pos), (0, 0, 0));
     }
 
     #[test]
@@ -242,7 +255,7 @@ mod tests {
             flow: None,
         };
         // continuation turn: 200 of 300 tokens already cached
-        let plan = crate::heg::plan_chunks_from(&geo, 300, 128, 200);
+        let plan = ElasticPlan::plan(&geo, 300, 128, 200);
         let mut st = ReqState::new(req, plan, None, 128, 200);
         assert_eq!(st.pos, 200);
         assert_eq!(st.metrics.cached_prefix_len, 200);
@@ -251,9 +264,8 @@ mod tests {
         assert_eq!(st.metrics.cached_prefix_len, 0);
         assert_eq!(st.pos, 0);
         // the new plan covers the whole prompt from position 0
-        assert_eq!(st.plan.first().unwrap().pos, 0);
-        let total: usize = st.plan.iter().map(|c| c.valid).sum();
-        assert_eq!(total, 300);
+        assert_eq!(st.plan.chunks().first().unwrap().pos, 0);
+        assert_eq!(st.plan.pending_tokens(), 300);
     }
 
     #[test]

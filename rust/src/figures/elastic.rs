@@ -1,0 +1,178 @@
+//! Elastic-binding ablation (§5.2): runtime re-planning — folding
+//! margins back to the NPU and splitting head chunks across NPU+iGPU
+//! mid-flight — against the best *static* chunk-to-XPU binding the
+//! paper's scheme (a)/(b)/(c) baselines represent.
+//!
+//! Two scenarios, same seeded mixed agentic trace:
+//!
+//! - `mixed`: no display workload; splits fire when reactive prefill
+//!   pins the NPU and the co-run model predicts an iGPU slice wins.
+//! - `graphics`: a 60 Hz display renders on the iGPU and the elastic
+//!   engine yields to vsync (`yield_to_graphics`) — margin folds to
+//!   the NPU keep the prefill pipeline moving through the vetoes.
+//!   The knob is inert for the static baselines, which never consult
+//!   the duty governor (they hold whatever binding they started with).
+//!
+//! Reported per run: reactive p99/mean TTFT, makespan, the elastic
+//! counters (`rebinds`/`splits`/`split_tokens`), backfills, and frame
+//! deadline statistics.  The pinned acceptance claim: the elastic
+//! engine beats the best static scheme on reactive p99 TTFT and on
+//! makespan in *both* scenarios, and actually re-binds somewhere.
+
+use anyhow::Result;
+
+use crate::config::{SchedulerConfig, SocConfig, llama32_3b};
+use crate::engine::{EngineCore, registry};
+use crate::metrics::{RunReport, percentile};
+use crate::soc::GraphicsConfig;
+use crate::util::bench::Table;
+use crate::util::json::Json;
+use crate::workload::Priority;
+
+use super::mixed_trace;
+
+/// The elastic engine vs the static-binding schemes of Fig. 4.
+const ENGINES: [&str; 4] = ["agent-xpu", "scheme-a", "scheme-b", "scheme-c"];
+
+/// Reactive p99 TTFT (ms) over finished reactive requests — the SLO
+/// tail the elastic re-binding protects.  NaN when none finished.
+fn reactive_p99_ttft_ms(rep: &RunReport) -> f64 {
+    let mut ttfts: Vec<f64> = rep
+        .reqs
+        .iter()
+        .filter(|m| m.priority == Priority::Reactive && !m.tool)
+        .filter_map(|m| m.ttft_us().map(|t| t / 1e3))
+        .collect();
+    ttfts.sort_by(|a, b| a.total_cmp(b));
+    percentile(&ttfts, 0.99)
+}
+
+fn elastic_row(rep: &RunReport, engine: &str, scenario: &str) -> Json {
+    let r = rep.class(Priority::Reactive);
+    let p = rep.class(Priority::Proactive);
+    Json::obj()
+        .set("engine", engine)
+        .set("label", rep.engine.as_str())
+        .set("scenario", scenario)
+        .set("reactive_p99_ttft_ms", Json::num_or_null(reactive_p99_ttft_ms(rep)))
+        .set("reactive_mean_ttft_ms", Json::num_or_null(r.mean_ttft_ms))
+        .set("proactive_tok_s", p.tokens_per_s)
+        .set("makespan_s", rep.makespan_us / 1e6)
+        .set("rebinds", rep.rebinds as usize)
+        .set("splits", rep.splits as usize)
+        .set("split_tokens", rep.split_tokens as usize)
+        .set("backfills", rep.backfills as usize)
+        .set("preemptions", rep.preemptions as usize)
+        .set("frames_scheduled", rep.frames_scheduled as usize)
+        .set("frames_missed", rep.frames_missed as usize)
+        .set("frame_miss_rate", rep.frame_miss_rate())
+}
+
+/// The elastic-vs-static ablation: every engine serves the same mixed
+/// trace twice — bare, then against a 60 Hz display with the elastic
+/// engine yielding to vsync.
+pub fn fig_elastic(soc: &SocConfig, duration_s: f64, seed: u64) -> Result<Json> {
+    let geo = llama32_3b();
+    // loaded enough that binding choices show up in the tail: a steady
+    // proactive stream plus a chatty reactive one
+    let trace = mixed_trace(1.0, 2.0, duration_s, seed, &geo);
+
+    let mut rows = vec![];
+    let mut table = Table::new(&[
+        "engine", "scenario", "rt p99 TTFT (ms)", "makespan (s)",
+        "rebinds", "splits", "split-tok", "missed",
+    ]);
+    for (scenario, gfx) in [("mixed", None), ("graphics", Some(GraphicsConfig::default()))]
+    {
+        for engine in ENGINES {
+            let mut sched = SchedulerConfig::default();
+            // under a display, the elastic engine yields the iGPU to
+            // vsync and re-binds squeezed margins to the NPU; static
+            // baselines never consult the governor, so the knob is
+            // inert for them
+            sched.yield_to_graphics = gfx.is_some();
+            let mut e = registry::build(engine, geo.clone(), soc.clone(), sched)?;
+            e.set_graphics(gfx.clone());
+            let rep = e.run(trace.clone())?;
+            table.row(vec![
+                rep.engine.clone(),
+                scenario.into(),
+                format!("{:.1}", reactive_p99_ttft_ms(&rep)),
+                format!("{:.2}", rep.makespan_us / 1e6),
+                format!("{}", rep.rebinds),
+                format!("{}", rep.splits),
+                format!("{}", rep.split_tokens),
+                format!("{}", rep.frames_missed),
+            ]);
+            rows.push(elastic_row(&rep, engine, scenario));
+        }
+    }
+    println!("\n== fig-elastic: runtime-elastic binding vs static schemes (§5.2) ==");
+    println!("(splits co-run a head-chunk slice on the iGPU; folds re-bind margins to the NPU)");
+    table.print();
+    Ok(Json::obj().set("figure", "elastic").set("rows", Json::Arr(rows)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::default_soc;
+
+    /// The acceptance criterion end-to-end: strictly parseable NaN-free
+    /// JSON; the elastic engine at or below the best static scheme on
+    /// reactive p99 TTFT and makespan in both scenarios; and the
+    /// elastic machinery actually engaged (some rebind happened) while
+    /// the static schemes never re-bind.
+    #[test]
+    fn elastic_figure_beats_best_static_binding() {
+        let j = fig_elastic(&default_soc(), 12.0, 7).unwrap();
+        let text = j.to_string();
+        assert!(!text.contains("NaN"), "invalid JSON token leaked: {text}");
+        let back = Json::parse(&text).expect("figure output must parse");
+        let rows = back.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2 * ENGINES.len());
+        let get = |engine: &str, scenario: &str, k: &str| -> f64 {
+            rows.iter()
+                .find(|r| {
+                    r.get("engine").unwrap().as_str().unwrap() == engine
+                        && r.get("scenario").unwrap().as_str().unwrap() == scenario
+                })
+                .unwrap_or_else(|| panic!("row {engine}/{scenario}"))
+                .get(k)
+                .unwrap()
+                .as_f64()
+                .unwrap()
+        };
+        for scenario in ["mixed", "graphics"] {
+            let best_static = |k: &str| {
+                ["scheme-a", "scheme-b", "scheme-c"]
+                    .iter()
+                    .map(|s| get(s, scenario, k))
+                    .fold(f64::INFINITY, f64::min)
+            };
+            // the paper's Fig. 4 ordering, held under elastic binding:
+            // at-or-below the best static scheme's reactive tail (same
+            // 5% slack as the schemes figure) and its makespan
+            let p99 = get("agent-xpu", scenario, "reactive_p99_ttft_ms");
+            assert!(
+                p99 <= best_static("reactive_p99_ttft_ms") * 1.05,
+                "{scenario}: elastic p99 TTFT {p99} vs static {}",
+                best_static("reactive_p99_ttft_ms")
+            );
+            let mk = get("agent-xpu", scenario, "makespan_s");
+            assert!(
+                mk <= best_static("makespan_s"),
+                "{scenario}: elastic makespan {mk} vs static {}",
+                best_static("makespan_s")
+            );
+            // static bindings never re-bind, by construction
+            for s in ["scheme-a", "scheme-b", "scheme-c"] {
+                assert_eq!(get(s, scenario, "rebinds"), 0.0, "{s} must stay static");
+            }
+        }
+        // the elastic machinery engaged somewhere across the scenarios
+        let total_rebinds = get("agent-xpu", "mixed", "rebinds")
+            + get("agent-xpu", "graphics", "rebinds");
+        assert!(total_rebinds > 0.0, "no rebind ever fired — elastic path inert");
+    }
+}

@@ -6,6 +6,7 @@
 //! for recorded paper-vs-measured comparisons.
 
 mod e2e;
+mod elastic;
 mod energy;
 mod micro;
 mod overload;
@@ -15,6 +16,7 @@ pub use e2e::{
     fig_ablation, fig_flows, fig_mixed, fig_proactive, fig_schemes, flow_trace_mixed,
     mixed_trace,
 };
+pub use elastic::fig_elastic;
 pub use energy::fig_energy;
 pub use micro::{fig_affinity, fig_batching, fig_contention};
 pub use overload::fig_overload;

@@ -25,6 +25,17 @@ impl Annotated {
     pub fn timing_on(&self, xpu: usize) -> &KernelTiming {
         &self.timings[xpu]
     }
+
+    /// Predicted duration on `xpu` while co-running against the other
+    /// XPU's kernel: the memory phase is stretched by the asymmetric
+    /// DDR contention penalty from the mobile-SoC characterization
+    /// study (PAPERS.md) — a split is *not* free bandwidth.  Exact for
+    /// the simulator's progress model: `max(tc + launch, tm)` becomes
+    /// `max(tc + launch, tm × penalty) = max(nominal, tm × penalty)`.
+    pub fn co_run_us(&self, xpu: usize, ddr_penalty: f64) -> f64 {
+        let t = &self.timings[xpu];
+        t.nominal_us.max(t.tm_us * ddr_penalty)
+    }
 }
 
 /// Annotation factory bound to one geometry + SoC.
@@ -99,7 +110,13 @@ mod tests {
         // §5.2 hetero-disaggregation: static chunked prefill is NPU-affine.
         let a = annot();
         let npu = a.xpu_index("npu").unwrap();
-        let k = a.prefill_kernel(&ChunkSpec { variant: 128, valid: 128, pos: 0, dynamic: false });
+        let k = a.prefill_kernel(&ChunkSpec {
+            variant: 128,
+            valid: 128,
+            pos: 0,
+            dynamic: false,
+            co_run: false,
+        });
         assert_eq!(k.fastest, npu);
         assert_eq!(k.most_efficient, npu);
     }
@@ -108,7 +125,13 @@ mod tests {
     fn dynamic_margin_prefers_igpu() {
         let a = annot();
         let igpu = a.xpu_index("igpu").unwrap();
-        let k = a.prefill_kernel(&ChunkSpec { variant: 64, valid: 44, pos: 256, dynamic: true });
+        let k = a.prefill_kernel(&ChunkSpec {
+            variant: 64,
+            valid: 44,
+            pos: 256,
+            dynamic: true,
+            co_run: false,
+        });
         assert_eq!(k.fastest, igpu, "NPU JIT penalty must push margins to iGPU");
     }
 
@@ -125,6 +148,33 @@ mod tests {
             k.timings[igpu].nominal_us,
             k.timings[npu].nominal_us
         );
+    }
+
+    #[test]
+    fn co_run_timing_pays_the_ddr_penalty() {
+        let a = annot();
+        let igpu = a.xpu_index("igpu").unwrap();
+        // long-context decode is memory-bound: the co-run penalty
+        // stretches it by the full factor
+        let k = a.decode_iter(1, 2048);
+        let t = k.timing_on(igpu).clone();
+        assert!(t.tm_us >= t.nominal_us - 1e-9, "expected memory-bound");
+        assert!((k.co_run_us(igpu, 1.2) - t.tm_us * 1.2).abs() < 1e-9);
+        // a unity factor is the standalone timing
+        assert!((k.co_run_us(igpu, 1.0) - t.nominal_us).abs() < 1e-9);
+        // a compute-bound kernel hides a small penalty entirely
+        let npu = a.xpu_index("npu").unwrap();
+        let p = a.prefill_kernel(&ChunkSpec {
+            variant: 256,
+            valid: 256,
+            pos: 0,
+            dynamic: false,
+            co_run: false,
+        });
+        let tn = p.timing_on(npu);
+        if tn.tc_us > tn.tm_us * 1.3 {
+            assert!((p.co_run_us(npu, 1.2) - tn.nominal_us).abs() < 1e-9);
+        }
     }
 
     #[test]

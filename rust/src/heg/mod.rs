@@ -1,14 +1,21 @@
 //! Heterogeneous Execution Graph (paper §5).
 //!
 //! The HEG is the hetero-centric compute abstraction: the model's op
-//! groups become *elastic chunked kernels* whose XPU binding is decided
-//! at dispatch time, pruned by affinity constraints (static chunks are
-//! NPU-compilable; dynamic margin/attention kernels prefer the iGPU),
-//! and annotated with predictive cost/timing/power so the online
-//! scheduler can reason about them (§5.3).
+//! groups become *elastic chunked kernels* held in a live
+//! [`ElasticPlan`] that stays re-partitionable mid-flight — the XPU
+//! binding is not frozen at dispatch time.  Affinity constraints prune
+//! the choices (static chunks are NPU-compilable; dynamic
+//! margin/attention kernels prefer the iGPU), and when contention
+//! squeezes one side the scheduler's rebind hook can *fold* a margin
+//! chunk back to a padded static NPU variant or *split* a pending
+//! static chunk across NPU+iGPU along the tensor-partition dimension,
+//! costed with the asymmetric co-run DDR penalty (§5.3 predictive
+//! annotation + the PAPERS.md mobile-SoC characterization).
 
 mod annotate;
 mod plan;
 
 pub use annotate::{Annotated, Annotator};
-pub use plan::{ChunkSpec, max_chunk_within_budget, plan_chunks, plan_chunks_from};
+pub use plan::{
+    ChunkSpec, ElasticPlan, max_chunk_within_budget, plan_chunks, plan_chunks_from,
+};

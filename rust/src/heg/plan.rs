@@ -21,6 +21,11 @@ pub struct ChunkSpec {
     pub pos: usize,
     /// Margin chunks are dynamic-shape (iGPU-affine, §5.2).
     pub dynamic: bool,
+    /// Produced by a mid-flight [`ElasticPlan::split`]: this chunk runs
+    /// while its sibling occupies the other XPU, so its memory phase
+    /// pays the asymmetric co-run DDR penalty (PAPERS.md
+    /// characterization study).
+    pub co_run: bool,
 }
 
 /// Pick the largest chunk size whose worst-position per-layer kernel
@@ -30,7 +35,14 @@ pub fn max_chunk_within_budget(
     xpus: &[&XpuModel],
     budget_ms: f64,
 ) -> usize {
-    let mut best = *geo.chunk_sizes.iter().min().unwrap_or(&1);
+    // `ModelGeometry::validate` guarantees a non-empty, sorted, deduped
+    // list at config load, so an empty list here is a programmer error —
+    // fail loudly instead of silently degrading to 1-token chunks.
+    let mut best = *geo
+        .chunk_sizes
+        .iter()
+        .min()
+        .expect("geometry has no chunk_sizes (ModelGeometry::validate not run?)");
     for &c in &geo.chunk_sizes {
         let worst = prefill_layer_cost(geo, c, c, geo.max_seq.saturating_sub(c), false);
         let fits = xpus
@@ -67,7 +79,11 @@ pub fn plan_chunks_from(
         "prompt {prompt_len} exceeds max_seq {}",
         geo.max_seq
     );
-    let smallest = *geo.chunk_sizes.iter().min().unwrap();
+    let smallest = *geo
+        .chunk_sizes
+        .iter()
+        .min()
+        .expect("geometry has no chunk_sizes (ModelGeometry::validate not run?)");
     let mut plan = vec![];
     let mut pos = start;
     // Greedy descending: consume the largest budget-feasible chunk that
@@ -86,7 +102,13 @@ pub fn plan_chunks_from(
             .max();
         match fit {
             Some(c) => {
-                plan.push(ChunkSpec { variant: c, valid: c, pos, dynamic: false });
+                plan.push(ChunkSpec {
+                    variant: c,
+                    valid: c,
+                    pos,
+                    dynamic: false,
+                    co_run: false,
+                });
                 pos += c;
             }
             None => {
@@ -97,12 +119,244 @@ pub fn plan_chunks_from(
                     valid: left,
                     pos,
                     dynamic: true,
+                    co_run: false,
                 });
                 pos += left;
             }
         }
     }
     plan
+}
+
+/// A live, re-partitionable prefill plan (the HEG's *elastic* operator
+/// binding, paper §4/§5.2).
+///
+/// Where the old pipeline froze a `Vec<ChunkSpec>` at admission and let
+/// the request state carry raw `chunk_idx`/`layer_idx` cursors, an
+/// `ElasticPlan` owns both the remaining chunks and the execution
+/// cursor, and supports mid-flight *re-binding*:
+///
+/// - [`replan`](Self::replan) — rebuild the remaining coverage from an
+///   arbitrary position with a new chunk budget (restart-after-evict,
+///   delta-prefill after session stitch).
+/// - [`split`](Self::split) — cut one pending static chunk along the
+///   tensor-partition dimension into an iGPU-affine dynamic part and an
+///   NPU-affine static remainder, both flagged `co_run` so the SoC
+///   model charges the asymmetric DDR co-run penalty.
+/// - [`fold_margin`](Self::fold_margin) — re-bind the pending dynamic
+///   margin chunk to a padded static variant so it can run on the NPU
+///   when the duty governor or graphics contention squeezes the iGPU.
+///
+/// Every mutation preserves the coverage invariant checked by
+/// [`assert_coverage`](Self::assert_coverage): pending chunks tile
+/// `[cursor position .. prompt_len)` exactly once, contiguously and in
+/// order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ElasticPlan {
+    chunks: Vec<ChunkSpec>,
+    chunk_idx: usize,
+    layer_idx: usize,
+    prompt_len: usize,
+}
+
+impl ElasticPlan {
+    /// Wrap an existing chunk vector (must tile `[start..prompt_len)`).
+    pub fn new(chunks: Vec<ChunkSpec>, prompt_len: usize) -> Self {
+        let p = Self { chunks, chunk_idx: 0, layer_idx: 0, prompt_len };
+        p.assert_coverage();
+        p
+    }
+
+    /// Plan the tokens `[start..prompt_len)` (delta-prefill when
+    /// `start > 0`) — the elastic counterpart of [`plan_chunks_from`].
+    pub fn plan(geo: &ModelGeometry, prompt_len: usize, max_chunk: usize, start: usize) -> Self {
+        Self::new(plan_chunks_from(geo, prompt_len, max_chunk, start), prompt_len)
+    }
+
+    /// All chunks, consumed and pending.
+    pub fn chunks(&self) -> &[ChunkSpec] {
+        &self.chunks
+    }
+
+    /// Chunks not yet fully executed (the current one first).
+    pub fn pending(&self) -> &[ChunkSpec] {
+        &self.chunks[self.chunk_idx.min(self.chunks.len())..]
+    }
+
+    pub fn chunk_idx(&self) -> usize {
+        self.chunk_idx
+    }
+
+    pub fn layer_idx(&self) -> usize {
+        self.layer_idx
+    }
+
+    /// The execution cursor as an ordered pair (progress comparisons:
+    /// eviction victims, preemption accounting).
+    pub fn cursor(&self) -> (usize, usize) {
+        (self.chunk_idx, self.layer_idx)
+    }
+
+    /// The chunk the next prefill kernel executes (None when done).
+    pub fn current(&self) -> Option<&ChunkSpec> {
+        self.chunks.get(self.chunk_idx)
+    }
+
+    pub fn len(&self) -> usize {
+        self.chunks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.chunks.is_empty()
+    }
+
+    pub fn prompt_len(&self) -> usize {
+        self.prompt_len
+    }
+
+    /// Has any prefill kernel of this plan completed?
+    pub fn started(&self) -> bool {
+        self.chunk_idx > 0 || self.layer_idx > 0
+    }
+
+    /// All chunks fully executed.
+    pub fn done(&self) -> bool {
+        self.chunk_idx >= self.chunks.len()
+    }
+
+    /// Prefill kernels left ((chunks × layers) remaining).
+    pub fn remaining_kernels(&self, n_layers: usize) -> usize {
+        if self.done() {
+            return 0;
+        }
+        (self.chunks.len() - self.chunk_idx - 1) * n_layers + (n_layers - self.layer_idx)
+    }
+
+    /// Tokens not yet prefilled (Σ valid over pending chunks).
+    pub fn pending_tokens(&self) -> usize {
+        self.pending().iter().map(|c| c.valid).sum()
+    }
+
+    /// Advance the cursor past one completed (chunk, layer) kernel.
+    /// Returns true when that finished the current *chunk* (the caller
+    /// then commits pos/KV side effects before checking [`done`](Self::done)).
+    pub fn advance_layer(&mut self, n_layers: usize) -> bool {
+        debug_assert!(!self.done(), "advance_layer beyond plan");
+        self.layer_idx += 1;
+        if self.layer_idx < n_layers {
+            return false;
+        }
+        self.layer_idx = 0;
+        self.chunk_idx += 1;
+        true
+    }
+
+    /// Place the cursor directly (tests and recovery paths).
+    pub fn set_progress(&mut self, chunk_idx: usize, layer_idx: usize) {
+        assert!(chunk_idx <= self.chunks.len(), "cursor beyond plan");
+        self.chunk_idx = chunk_idx;
+        self.layer_idx = layer_idx;
+    }
+
+    /// Reset the cursor to the start (restart-after-evict keeps the
+    /// same coverage; use [`replan`](Self::replan) to rebuild it).
+    pub fn rewind(&mut self) {
+        self.chunk_idx = 0;
+        self.layer_idx = 0;
+    }
+
+    /// Rebuild the remaining coverage: plan `[from_pos..prompt_len)`
+    /// afresh under `max_chunk` and reset the cursor.  This is the
+    /// restart / delta-prefill transition — any split or folded chunks
+    /// are discarded with the old tail.
+    pub fn replan(&mut self, geo: &ModelGeometry, from_pos: usize, max_chunk: usize) {
+        self.chunks = plan_chunks_from(geo, self.prompt_len, max_chunk, from_pos);
+        self.chunk_idx = 0;
+        self.layer_idx = 0;
+        self.assert_coverage();
+    }
+
+    /// Split pending chunk `idx` along the tensor-partition dimension:
+    /// the first `ratio` of its tokens become an iGPU-affine dynamic
+    /// part, the rest an NPU-affine static remainder (padded to the
+    /// smallest compiled variant that fits).  Both are flagged
+    /// `co_run`, so their memory phases pay the asymmetric DDR
+    /// contention penalty.  The iGPU part is placed *first* in plan
+    /// order (it dispatches immediately while the NPU is pinned).
+    ///
+    /// Returns `(npu_part, igpu_part)`, or None when the chunk is not
+    /// splittable: already started, dynamic, or too small to cut.
+    pub fn split(
+        &mut self,
+        geo: &ModelGeometry,
+        idx: usize,
+        ratio: f64,
+    ) -> Option<(ChunkSpec, ChunkSpec)> {
+        if idx < self.chunk_idx || idx >= self.chunks.len() {
+            return None;
+        }
+        // the head chunk is only splittable before its first layer ran
+        if idx == self.chunk_idx && self.layer_idx > 0 {
+            return None;
+        }
+        let c = self.chunks[idx];
+        if c.dynamic || c.valid < 2 {
+            return None;
+        }
+        let k = ((c.valid as f64 * ratio).round() as usize).clamp(1, c.valid - 1);
+        let rest = c.valid - k;
+        let igpu_part =
+            ChunkSpec { variant: k, valid: k, pos: c.pos, dynamic: true, co_run: true };
+        let npu_part = ChunkSpec {
+            variant: geo.chunk_for(rest).unwrap_or(rest),
+            valid: rest,
+            pos: c.pos + k,
+            dynamic: false,
+            co_run: true,
+        };
+        self.chunks.splice(idx..=idx, [igpu_part, npu_part]);
+        self.assert_coverage();
+        Some((npu_part, igpu_part))
+    }
+
+    /// Re-bind the pending dynamic margin chunk to a padded static
+    /// variant so the NPU can run it (duty governor / graphics squeeze
+    /// on the iGPU).  Returns the rebound spec, or None when the
+    /// current chunk is not an unstarted dynamic margin or no compiled
+    /// variant fits it.
+    pub fn fold_margin(&mut self, geo: &ModelGeometry) -> Option<ChunkSpec> {
+        if self.layer_idx > 0 {
+            return None;
+        }
+        let c = *self.current()?;
+        if !c.dynamic {
+            return None;
+        }
+        let variant = geo.chunk_for(c.valid)?;
+        let folded = ChunkSpec { variant, dynamic: false, ..c };
+        self.chunks[self.chunk_idx] = folded;
+        self.assert_coverage();
+        Some(folded)
+    }
+
+    /// The coverage invariant (debug builds): chunks tile a contiguous
+    /// token range ending at `prompt_len`, each valid ≤ variant.
+    pub fn assert_coverage(&self) {
+        #[cfg(debug_assertions)]
+        {
+            let mut pos = None;
+            for c in &self.chunks {
+                assert!(c.valid >= 1 && c.valid <= c.variant, "chunk valid/variant corrupt");
+                if let Some(p) = pos {
+                    assert_eq!(c.pos, p, "chunk coverage not contiguous");
+                }
+                pos = Some(c.pos + c.valid);
+            }
+            if let Some(end) = pos {
+                assert_eq!(end, self.prompt_len, "plan does not end at prompt_len");
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -245,5 +499,109 @@ mod tests {
     fn oversized_prompt_panics() {
         let g = geo();
         plan_chunks(&g, 513, 128);
+    }
+
+    #[test]
+    fn elastic_cursor_walks_chunks_and_layers() {
+        let g = geo();
+        let mut p = ElasticPlan::plan(&g, 300, 128, 0);
+        assert_eq!(p.len(), 4);
+        assert!(!p.started() && !p.done());
+        assert_eq!(p.pending_tokens(), 300);
+        assert_eq!(p.remaining_kernels(g.n_layers), 4 * g.n_layers);
+        // one full chunk of layers
+        for l in 0..g.n_layers {
+            let finished = p.advance_layer(g.n_layers);
+            assert_eq!(finished, l == g.n_layers - 1);
+        }
+        assert_eq!(p.cursor(), (1, 0));
+        assert!(p.started());
+        assert_eq!(p.pending_tokens(), 300 - 128);
+        while !p.done() {
+            p.advance_layer(g.n_layers);
+        }
+        assert_eq!(p.remaining_kernels(g.n_layers), 0);
+        assert_eq!(p.pending_tokens(), 0);
+        assert!(p.current().is_none());
+    }
+
+    #[test]
+    fn split_partitions_head_chunk_between_xpus() {
+        let g = geo();
+        let mut p = ElasticPlan::plan(&g, 300, 128, 0);
+        let (npu, igpu) = p.split(&g, 0, 0.25).expect("head chunk splittable");
+        // 128 tokens → 32 iGPU-affine + 96 NPU-affine (padded to 128)
+        assert_eq!(igpu.valid, 32);
+        assert!(igpu.dynamic && igpu.co_run);
+        assert_eq!(igpu.pos, 0);
+        assert_eq!(npu.valid, 96);
+        assert!(!npu.dynamic && npu.co_run);
+        assert_eq!(npu.pos, 32);
+        assert_eq!(npu.variant, 128, "padded to smallest compiled fit");
+        // the iGPU part dispatches first
+        assert_eq!(p.current(), Some(&igpu));
+        assert_eq!(p.chunks()[1], npu);
+        assert_eq!(p.pending_tokens(), 300, "coverage preserved");
+        assert_eq!(p.len(), 5);
+    }
+
+    #[test]
+    fn split_refuses_started_dynamic_or_tiny_chunks() {
+        let g = geo();
+        let mut p = ElasticPlan::plan(&g, 300, 128, 0);
+        p.advance_layer(g.n_layers); // head chunk mid-flight
+        assert!(p.split(&g, 0, 0.5).is_none(), "started head chunk");
+        assert!(p.split(&g, 3, 0.5).is_none(), "dynamic margin");
+        assert!(p.split(&g, 9, 0.5).is_none(), "out of range");
+        let mut q = ElasticPlan::new(
+            vec![ChunkSpec { variant: 16, valid: 1, pos: 0, dynamic: false, co_run: false }],
+            1,
+        );
+        assert!(q.split(&g, 0, 0.5).is_none(), "single token");
+    }
+
+    #[test]
+    fn split_ratio_is_clamped_to_a_real_cut() {
+        let g = geo();
+        for ratio in [0.0, 0.001, 0.999, 1.0] {
+            let mut p = ElasticPlan::plan(&g, 128, 128, 0);
+            let (npu, igpu) = p.split(&g, 0, ratio).unwrap();
+            assert!(igpu.valid >= 1 && npu.valid >= 1, "ratio {ratio}");
+            assert_eq!(igpu.valid + npu.valid, 128);
+        }
+    }
+
+    #[test]
+    fn fold_margin_rebinds_to_padded_static() {
+        let g = geo();
+        let mut p = ElasticPlan::plan(&g, 300, 128, 0);
+        assert!(p.fold_margin(&g).is_none(), "head chunk is static");
+        while p.current().map(|c| !c.dynamic).unwrap_or(false) {
+            for _ in 0..g.n_layers {
+                p.advance_layer(g.n_layers);
+            }
+        }
+        let folded = p.fold_margin(&g).expect("margin foldable");
+        assert!(!folded.dynamic);
+        assert_eq!(folded.valid, 12);
+        assert_eq!(folded.variant, 16, "padded to smallest compiled fit");
+        assert_eq!(p.pending_tokens(), 12);
+        assert!(p.fold_margin(&g).is_none(), "already static now");
+    }
+
+    #[test]
+    fn replan_rebuilds_remaining_coverage() {
+        let g = geo();
+        let mut p = ElasticPlan::plan(&g, 300, 128, 0);
+        p.split(&g, 0, 0.5).unwrap();
+        // restart from scratch discards splits
+        p.replan(&g, 0, 128);
+        assert_eq!(p.chunks(), &plan_chunks(&g, 300, 128)[..]);
+        assert_eq!(p.cursor(), (0, 0));
+        // delta replan from a cached prefix with a tighter budget
+        p.replan(&g, 180, 32);
+        assert_eq!(p.pending_tokens(), 120);
+        assert_eq!(p.chunks()[0].pos, 180);
+        assert!(p.chunks().iter().all(|c| c.variant <= 32));
     }
 }

@@ -1,7 +1,7 @@
 //! `agent-xpu` — launcher CLI.
 //!
 //! ```text
-//! agent-xpu fig <affinity|contention|batching|schemes|proactive|mixed|flows|workflows|energy|overload|ablation|all>
+//! agent-xpu fig <affinity|contention|batching|schemes|proactive|mixed|flows|workflows|elastic|energy|overload|ablation|all>
 //!           [--out results/] [--duration 120] [--seed 7] [--smoke]
 //! agent-xpu bench macro [--smoke] [--seed 42] [--out results/]
 //! agent-xpu run --rate 1.5 --interval 12 --duration 60 [--engine <policy>]
@@ -136,6 +136,14 @@ fn cmd_fig(args: &Args) -> Result<()> {
         // engine family and the fan-out comparison
         let d = if args.bool_or("smoke", false) { 30.0 } else { duration };
         do_fig("fig_workflows", figures::fig_workflows(&soc, d, seed)?)?;
+        ran = true;
+    }
+    if which == "elastic" || which == "all" {
+        // --smoke: short run, still both scenarios (bare mixed trace +
+        // 60 Hz display) across the elastic engine and every static
+        // scheme
+        let d = if args.bool_or("smoke", false) { 12.0 } else { duration.min(40.0) };
+        do_fig("fig_elastic", figures::fig_elastic(&soc, d, seed)?)?;
         ran = true;
     }
     if which == "energy" || which == "all" {

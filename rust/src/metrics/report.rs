@@ -107,6 +107,13 @@ pub struct RunReport {
     pub session_evictions: u64,
     /// Requests aborted via `cancel`.
     pub cancellations: u64,
+    /// Elastic re-binding events (§5.2): folds + splits — every time a
+    /// planned chunk changed shape or XPU binding mid-flight.
+    pub rebinds: u64,
+    /// Head chunks split across NPU+iGPU (subset of `rebinds`).
+    pub splits: u64,
+    /// Prompt tokens moved to co-run iGPU slices by those splits.
+    pub split_tokens: u64,
     /// Retired request metrics shed from the bounded wall-clock history
     /// before `finish()` — `reqs` is truncated by exactly this many
     /// (the incremental `ReportAccumulator` remains exact).  Always 0
@@ -466,6 +473,9 @@ impl RunReport {
             .set("kv_evictions", self.kv_evictions as usize)
             .set("session_evictions", self.session_evictions as usize)
             .set("cancellations", self.cancellations as usize)
+            .set("rebinds", self.rebinds as usize)
+            .set("splits", self.splits as usize)
+            .set("split_tokens", self.split_tokens as usize)
             .set("dropped_reqs", self.dropped_reqs as usize)
     }
 }
@@ -505,6 +515,12 @@ pub struct ReportAccumulator {
     /// Requests resubmitted from the write-ahead journal at startup
     /// (crash recovery).
     pub recovered: usize,
+    /// Elastic re-binding events (folds + splits, §5.2).
+    pub rebinds: usize,
+    /// Head chunks split across NPU+iGPU (subset of `rebinds`).
+    pub splits: usize,
+    /// Prompt tokens moved to co-run iGPU slices by those splits.
+    pub split_tokens: usize,
     ttft_sum_ms: f64,
     ttft_n: usize,
 }
@@ -527,6 +543,13 @@ impl ReportAccumulator {
             }
             Cancelled { .. } => self.cancelled += 1,
             Preempted { .. } => self.preemptions += 1,
+            Rebound { split_tokens, .. } => {
+                self.rebinds += 1;
+                if *split_tokens > 0 {
+                    self.splits += 1;
+                    self.split_tokens += split_tokens;
+                }
+            }
             Admitted { .. } | KvEvicted { .. } | SessionEvicted { .. } => {}
         }
     }
@@ -554,6 +577,9 @@ impl ReportAccumulator {
             .set("parked", self.parked)
             .set("resumed", self.resumed)
             .set("recovered", self.recovered)
+            .set("rebinds", self.rebinds)
+            .set("splits", self.splits)
+            .set("split_tokens", self.split_tokens)
             .set(
                 "mean_ttft_ms",
                 if ttft.is_finite() { Json::Num(ttft) } else { Json::Null },
@@ -624,6 +650,9 @@ mod tests {
             kv_evictions: 0,
             session_evictions: 0,
             cancellations: 0,
+            rebinds: 0,
+            splits: 0,
+            split_tokens: 0,
             dropped_reqs: 0,
         }
     }

@@ -213,6 +213,7 @@ impl OverloadGate {
             EngineEvent::Cancelled { id, .. } => self.retire(*id),
             EngineEvent::Admitted { .. }
             | EngineEvent::Preempted { .. }
+            | EngineEvent::Rebound { .. }
             | EngineEvent::KvEvicted { .. }
             | EngineEvent::SessionEvicted { .. } => {}
         }
@@ -417,6 +418,7 @@ fn event_at_us(ev: &EngineEvent) -> f64 {
         | EngineEvent::TokenEmitted { at_us, .. }
         | EngineEvent::TurnDone { at_us, .. }
         | EngineEvent::Preempted { at_us, .. }
+        | EngineEvent::Rebound { at_us, .. }
         | EngineEvent::KvEvicted { at_us, .. }
         | EngineEvent::SessionEvicted { at_us, .. }
         | EngineEvent::Cancelled { at_us, .. } => *at_us,

@@ -758,6 +758,7 @@ impl RtScheduler {
                 }
                 EngineEvent::Admitted { .. }
                 | EngineEvent::Preempted { .. }
+                | EngineEvent::Rebound { .. }
                 | EngineEvent::KvEvicted { .. }
                 | EngineEvent::SessionEvicted { .. } => {}
             }

@@ -17,7 +17,7 @@ mod xpu;
 
 pub use graphics::{GraphicsConfig, GraphicsSim};
 pub use sim::{
-    CLASS_IDLE, Completion, DUTY_WINDOW_US, KernelClass, LaunchSpec, RunId, SocSim,
-    XpuSnapshot,
+    CLASS_IDLE, CO_RUN_DDR_PENALTY_IGPU, CO_RUN_DDR_PENALTY_NPU, Completion, DUTY_WINDOW_US,
+    KernelClass, LaunchSpec, RunId, SocSim, XpuSnapshot,
 };
 pub use xpu::{KernelTiming, XpuModel};

@@ -12,6 +12,15 @@
 //! The scale factor only changes at launch/finish events, so piecewise
 //! integration between events is exact and the simulation is fully
 //! deterministic.
+//!
+//! On top of proportional sharing, a kernel may carry a *co-run
+//! interference factor* ≥ 1 ([`SocSim::launch_with_factor`]): its
+//! memory phase progresses at `s / factor`.  This models the
+//! asymmetric DDR inefficiency measured when NPU and iGPU execute
+//! tensor-partitioned halves of the *same* operator (the PAPERS.md
+//! mobile-SoC characterization study): the partitioned halves fight
+//! over the same pages and arbitration slots, so a mid-flight split is
+//! *not* free bandwidth even when the link is unsaturated.
 
 use super::xpu::{KernelTiming, XpuModel};
 use crate::config::SocConfig;
@@ -43,6 +52,15 @@ pub enum KernelClass {
 
 /// Index of the idle row in [`SocSim::energy_by_class`].
 pub const CLASS_IDLE: usize = 3;
+
+/// Memory-phase stretch the *NPU* half of a tensor-partitioned co-run
+/// pays (PAPERS.md characterization: the NPU's DMA engine loses more
+/// to page conflicts than the iGPU's cache-backed accesses — the
+/// penalty is asymmetric, and worse on the NPU side).
+pub const CO_RUN_DDR_PENALTY_NPU: f64 = 1.16;
+
+/// Memory-phase stretch the *iGPU* half of a co-run pays.
+pub const CO_RUN_DDR_PENALTY_IGPU: f64 = 1.07;
 
 impl KernelClass {
     pub fn from_reactive(reactive: bool) -> Self {
@@ -86,6 +104,11 @@ struct Run {
     class: KernelClass,
     /// tm > tc at launch (for selective pairing, §6.4).
     memory_bound: bool,
+    /// Co-run DDR interference: the memory phase progresses at
+    /// `s / factor`.  1.0 (the plain [`SocSim::launch`] path) is
+    /// arithmetically exact — non-co-run schedules are bit-for-bit
+    /// unchanged.
+    co_run_mem_factor: f64,
 }
 
 impl Run {
@@ -95,7 +118,11 @@ impl Run {
 
     /// Remaining wall time under memory scale `s`.
     fn remaining(&self, s: f64) -> f64 {
-        let tm = if s > 0.0 { self.tm_left / s } else { f64::INFINITY };
+        let tm = if s > 0.0 {
+            self.tm_left * self.co_run_mem_factor / s
+        } else {
+            f64::INFINITY
+        };
         self.tc_left.max(tm)
     }
 }
@@ -220,7 +247,16 @@ impl SocSim {
     /// Launch a kernel on `xpu` (panics if busy — the scheduler owns the
     /// invariant; see coordinator::dispatch).
     pub fn launch(&mut self, xpu: usize, spec: LaunchSpec) -> RunId {
+        self.launch_with_factor(xpu, spec, 1.0)
+    }
+
+    /// Launch with a co-run DDR interference factor ≥ 1: the kernel's
+    /// memory phase progresses at `scale / factor`.  Used for the
+    /// halves of a tensor-partitioned split; `launch` is the
+    /// factor-1.0 case (bit-identical arithmetic).
+    pub fn launch_with_factor(&mut self, xpu: usize, spec: LaunchSpec, factor: f64) -> RunId {
         assert!(!self.busy(xpu), "XPU {xpu} already busy");
+        assert!(factor >= 1.0, "co-run factor {factor} < 1");
         let id = self.next_id;
         self.next_id += 1;
         let launch_us = self.xpus[xpu].cfg.launch_overhead_us;
@@ -233,6 +269,7 @@ impl SocSim {
             started_us: self.now_us,
             class: spec.class,
             memory_bound: spec.timing.tm_us > spec.timing.tc_us,
+            co_run_mem_factor: factor,
         });
         self.kernels[xpu] += 1;
         id
@@ -249,6 +286,18 @@ impl SocSim {
             self.aborted[xpu] += 1;
             r.id
         })
+    }
+
+    /// Accounting class of the kernel in flight on `xpu`, if any (the
+    /// rebind hook asks whether the NPU is pinned by *reactive* work).
+    pub fn running_class(&self, xpu: usize) -> Option<KernelClass> {
+        self.slots[xpu].as_ref().map(|r| r.class)
+    }
+
+    /// Remaining wall time (µs) of the kernel in flight on `xpu` under
+    /// the current contention scale.
+    pub fn remaining_on(&self, xpu: usize) -> Option<f64> {
+        self.slots[xpu].as_ref().map(|r| r.remaining(self.scale()))
     }
 
     /// Which XPU `run` is executing on, if it is still in flight.
@@ -333,7 +382,7 @@ impl SocSim {
                     if r.tm_left > EPS {
                         achieved_bw += r.bw_gbps * s;
                     }
-                    r.tm_left = (r.tm_left - dt * s).max(0.0);
+                    r.tm_left = (r.tm_left - dt * s / r.co_run_mem_factor).max(0.0);
                     self.busy_us[i] += dt;
                     self.energy_j[i] += r.power_w * dt * 1e-6;
                     self.class_energy_j[r.class.idx()] += r.power_w * dt * 1e-6;
@@ -679,6 +728,62 @@ mod tests {
         run_to_completion(&mut s);
         assert!(s.mean_bandwidth_gbps() > 10.0);
         assert!(s.current_bandwidth_gbps() == 0.0);
+    }
+
+    /// The co-run interference factor stretches a memory-bound kernel's
+    /// memory phase by exactly the factor, even with the link
+    /// unsaturated — a split is not free bandwidth.
+    #[test]
+    fn co_run_factor_stretches_memory_phase() {
+        let mut s = sim();
+        let igpu = s.xpu_index("igpu").unwrap();
+        let t = s.xpus[igpu].timing(&gemv_cost(8192, 8192));
+        assert!(t.tm_us > t.tc_us, "want a memory-bound kernel");
+        s.launch_with_factor(
+            igpu,
+            LaunchSpec { timing: t, class: KernelClass::Proactive },
+            CO_RUN_DDR_PENALTY_IGPU,
+        );
+        let done = run_to_completion(&mut s);
+        assert_eq!(done.len(), 1);
+        let want = t.tm_us * CO_RUN_DDR_PENALTY_IGPU;
+        assert!(
+            (done[0].finished_us - want).abs() < 1.0,
+            "got {} want {want}",
+            done[0].finished_us
+        );
+    }
+
+    /// `launch` is `launch_with_factor(.., 1.0)` — bit-for-bit, so
+    /// non-co-run schedules are provably unchanged by the factor path.
+    #[test]
+    fn unit_co_run_factor_is_bit_identical_to_plain_launch() {
+        let run = |unit_factor: bool| {
+            let mut s = sim();
+            let npu = s.xpu_index("npu").unwrap();
+            let igpu = s.xpu_index("igpu").unwrap();
+            let tn = s.xpus[npu].timing(&gemv_cost(8192, 8192));
+            let ti = s.xpus[igpu].timing(&gemv_cost(8192, 8192));
+            if unit_factor {
+                s.launch_with_factor(
+                    npu,
+                    LaunchSpec { timing: tn, class: KernelClass::Reactive },
+                    1.0,
+                );
+            } else {
+                s.launch(npu, LaunchSpec { timing: tn, class: KernelClass::Reactive });
+            }
+            s.launch(igpu, LaunchSpec { timing: ti, class: KernelClass::Proactive });
+            run_to_completion(&mut s)
+        };
+        assert_eq!(run(true), run(false));
+    }
+
+    /// The asymmetric penalties: NPU side worse than iGPU side, both > 1.
+    #[test]
+    fn co_run_penalties_are_asymmetric() {
+        assert!(CO_RUN_DDR_PENALTY_NPU > CO_RUN_DDR_PENALTY_IGPU);
+        assert!(CO_RUN_DDR_PENALTY_IGPU > 1.0);
     }
 
     #[test]

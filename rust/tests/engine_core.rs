@@ -104,6 +104,7 @@ fn event_stream_orders_each_request_lifecycle() {
                 | EngineEvent::Preempted { at_us, .. }
                 | EngineEvent::KvEvicted { at_us, .. }
                 | EngineEvent::SessionEvicted { at_us, .. }
+                | EngineEvent::Rebound { at_us, .. }
                 | EngineEvent::Cancelled { at_us, .. } => *at_us,
             })
             .collect();

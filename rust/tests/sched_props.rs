@@ -19,7 +19,7 @@ use agent_xpu::baselines::{CpuFcfsEngine, Scheme, SingleXpuEngine};
 use agent_xpu::config::{ModelGeometry, SchedulerConfig, default_soc, llama32_3b};
 use agent_xpu::coordinator::AgentXpuEngine;
 use agent_xpu::engine::{Engine, EngineClock, EngineCore, EngineEvent, registry};
-use agent_xpu::heg::plan_chunks;
+use agent_xpu::heg::{ElasticPlan, plan_chunks};
 use agent_xpu::metrics::RunReport;
 use agent_xpu::util::rng::Rng;
 use agent_xpu::workload::{
@@ -67,6 +67,9 @@ fn fingerprint(rep: &RunReport) -> u64 {
     mix(rep.backfills);
     mix(rep.kv_evictions);
     mix(rep.session_evictions);
+    mix(rep.rebinds);
+    mix(rep.splits);
+    mix(rep.split_tokens);
     for m in &rep.reqs {
         mix(m.id);
         mix(m.first_token_us.map(|v| v.to_bits()).unwrap_or(1));
@@ -580,6 +583,107 @@ fn chunk_plans_cover_every_prompt_exactly() {
                 assert_eq!(i, plan.len() - 1, "only the margin may be dynamic");
             }
             pos += c.valid;
+        }
+    }
+}
+
+/// The elastic-binding invariant (DESIGN.md §5): no sequence of
+/// mid-flight re-bindings — advancing, rewinding, replanning from an
+/// arbitrary position, splitting a pending chunk across XPUs, folding
+/// the margin — may ever lose, duplicate, or reorder a prompt token.
+/// Pending chunks must always tile `[cursor .. prompt_len)` exactly.
+#[test]
+fn elastic_plans_keep_coverage_exact_under_random_rebinding() {
+    let g = llama32_3b();
+    let mut r = Rng::new(4242);
+    for _ in 0..300 {
+        let len = r.usize(1, g.max_seq + 1);
+        let cap = *r.choice(&g.chunk_sizes);
+        let mut p = ElasticPlan::plan(&g, len, cap, 0);
+        for _ in 0..40 {
+            match r.usize(0, 5) {
+                0 => {
+                    if !p.done() {
+                        p.advance_layer(g.n_layers);
+                    }
+                }
+                1 => p.rewind(),
+                2 => {
+                    let from = r.usize(0, len);
+                    let cap2 = *r.choice(&g.chunk_sizes);
+                    p.replan(&g, from, cap2);
+                }
+                3 => {
+                    if !p.done() {
+                        let idx = r.usize(p.chunk_idx(), p.len());
+                        let ratio = 0.1 + 0.8 * r.f64();
+                        // None (started / dynamic / too small) is fine —
+                        // the plan must simply be unchanged then
+                        let _ = p.split(&g, idx, ratio);
+                    }
+                }
+                _ => {
+                    let _ = p.fold_margin(&g);
+                }
+            }
+            // coverage: contiguous positions, each token planned once,
+            // the tiling ending exactly at prompt_len
+            let chunks = p.chunks();
+            assert!(!chunks.is_empty() || p.pending_tokens() == 0);
+            let mut pos = chunks.first().map(|c| c.pos);
+            for c in chunks {
+                assert!(c.valid >= 1 && c.valid <= c.variant, "len {len}: corrupt chunk");
+                assert_eq!(Some(c.pos), pos, "len {len}: coverage not contiguous");
+                pos = Some(c.pos + c.valid);
+            }
+            if let Some(end) = pos {
+                assert_eq!(end, len, "plan must end at prompt_len");
+            }
+            // Σ valid over pending chunks == tokens left of the cursor
+            match p.current() {
+                Some(cur) => assert_eq!(p.pending_tokens(), len - cur.pos),
+                None => {
+                    assert!(p.done());
+                    assert_eq!(p.pending_tokens(), 0);
+                }
+            }
+        }
+    }
+}
+
+/// Elastic re-binding under memory pressure: tiny DRAM forces
+/// preemption and eviction-restart on random traces, so folds, splits,
+/// replans, and restarts all interleave.  Every registry policy must
+/// keep the lifecycle invariants (no token lost or duplicated), and
+/// only the elastic engine may ever re-bind — the hook's `Never`
+/// default keeps every other policy bit-static.
+#[test]
+fn elastic_rebinding_preserves_lifecycle_for_every_policy_under_pressure() {
+    let g = geo();
+    let mut soc = default_soc();
+    let weights_gb = g.n_params() as f64 * g.weight_bytes / 1e9;
+    let kv_gb = (2 * g.n_layers * g.cache_elems() * 4) as f64 / 1e9;
+    soc.dram_gb = weights_gb + 2.2 * kv_gb;
+    for seed in [3u64, 11, 29] {
+        let trace = random_trace(2000 + seed);
+        for &name in registry::names() {
+            let mut e =
+                registry::build(name, g.clone(), soc.clone(), SchedulerConfig::default())
+                    .expect("registered name builds");
+            let rep = e
+                .run(trace.clone())
+                .unwrap_or_else(|x| panic!("{name} seed {seed}: {x:#}"));
+            check_lifecycle(&rep, &trace);
+            // counter consistency: a split is a rebind that moved tokens
+            assert!(rep.splits <= rep.rebinds, "{name}: splits exceed rebinds");
+            assert_eq!(
+                rep.splits == 0,
+                rep.split_tokens == 0,
+                "{name}: split/token counters disagree"
+            );
+            if name != "agent-xpu" {
+                assert_eq!(rep.rebinds, 0, "{name} must never re-bind");
+            }
         }
     }
 }
