@@ -107,6 +107,25 @@ impl EngineEvent {
     }
 }
 
+/// A cheap load snapshot of a running engine — what a fleet router
+/// reads before placing a turn (DESIGN.md §9).  All fields are
+/// instantaneous: outstanding work, the engine's clock position, the
+/// windowed busy fraction of each LLM XPU, and cumulative energy.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EngineLoad {
+    /// Submitted requests without a terminal event yet (queued, held
+    /// flow turns, and in-flight work).
+    pub unfinished: usize,
+    /// Engine time (µs in the run's clock domain); 0 before `start`.
+    pub now_us: f64,
+    /// Windowed NPU duty cycle in [0, 1] (0 without an NPU).
+    pub npu_duty: f64,
+    /// Windowed iGPU duty cycle in [0, 1] (0 without an iGPU).
+    pub igpu_duty: f64,
+    /// Cumulative energy drawn this run (J).
+    pub energy_j: f64,
+}
+
 /// What the overload detector measured at one decision point — the
 /// serving loop computes this and asks the engine (and through it the
 /// policy) how hard to shed (DESIGN.md §7).
@@ -213,6 +232,14 @@ pub trait EngineCore {
     /// Close the run and produce its report.  Fails if admitted work
     /// never completed (a policy bug, surfaced loudly).
     fn finish(&mut self) -> Result<RunReport>;
+
+    /// Instantaneous load snapshot of the open run (queue depth, XPU
+    /// duty, energy) — what a fleet router reads before placing a turn.
+    /// Default: an empty snapshot, for engines with nothing to report;
+    /// `PolicyEngine` implements it for every registry policy.
+    fn load(&self) -> EngineLoad {
+        EngineLoad::default()
+    }
 
     /// Kernel-level trace of the last *finished* run (Gantt figures,
     /// serialization checks).  `PolicyEngine` retains one for every

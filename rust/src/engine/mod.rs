@@ -26,7 +26,8 @@ mod reqstate;
 pub use bridge::ExecBridge;
 pub use core_api::EngineCore as Engine;
 pub use core_api::{
-    EngineClock, EngineCore, EngineEvent, OverloadSignal, ShedLevel, default_shed_level,
+    EngineClock, EngineCore, EngineEvent, EngineLoad, OverloadSignal, ShedLevel,
+    default_shed_level,
 };
 pub use driver::{Driver, KernelTag};
 pub use policy::{

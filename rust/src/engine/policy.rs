@@ -45,7 +45,8 @@ use crate::workload::{FlowId, ReqId, Request};
 
 use super::bridge::ExecBridge;
 use super::core_api::{
-    EngineClock, EngineCore, EngineEvent, OverloadSignal, ShedLevel, default_shed_level,
+    EngineClock, EngineCore, EngineEvent, EngineLoad, OverloadSignal, ShedLevel,
+    default_shed_level,
 };
 use super::driver::{Driver, KernelTag};
 use super::reqstate::{Phase, ReqState};
@@ -707,6 +708,27 @@ impl<P: SchedPolicy> EngineCore for PolicyEngine<P> {
 
     fn overload_response(&self, s: &OverloadSignal) -> ShedLevel {
         self.policy.shed_level(s)
+    }
+
+    fn load(&self) -> EngineLoad {
+        match &self.active {
+            Some(d) => EngineLoad {
+                unfinished: d.unfinished(),
+                now_us: d.now(),
+                npu_duty: d
+                    .sim
+                    .xpu_index("npu")
+                    .map(|i| d.sim.windowed_duty(i))
+                    .unwrap_or(0.0),
+                igpu_duty: d
+                    .sim
+                    .xpu_index("igpu")
+                    .map(|i| d.sim.windowed_duty(i))
+                    .unwrap_or(0.0),
+                energy_j: d.sim.total_energy_j(),
+            },
+            None => EngineLoad::default(),
+        }
     }
 
     fn set_graphics(&mut self, cfg: Option<GraphicsConfig>) {

@@ -1,0 +1,236 @@
+//! Fleet figure (DESIGN.md §9): router × device-count sweep over the
+//! multi-user fleet layer.
+//!
+//! Two seeded scenarios stress the two routing trade-offs:
+//!
+//! - **uniform** — many users, mild popularity skew, moderate load
+//!   (~35% per-device duty).  Here session affinity dominates:
+//!   `sticky-session` keeps every continuation on the device holding
+//!   the flow's KV (warm delta prefill), while `random` re-routes
+//!   turns blindly and pays full-conversation cache-cold prefills —
+//!   sticky wins cache hit-rate and the reactive TTFT tail.
+//! - **skewed** — one user per device, zipf-2.0 popularity, chat-only.
+//!   The hot user alone demands ~4× one device's decode capacity, so
+//!   pinning their flows (`sticky-session`) saturates a single device
+//!   while the rest idle; `least-loaded` spreads turns by queue depth
+//!   and duty, paying migration prefills to win makespan.
+//!
+//! `energy-budget` runs with a per-device joule budget calibrated from
+//! the sticky baseline of the same (scenario, n) cell (a fraction of
+//! its hottest device), so budget steering actually engages.  The
+//! trace for a cell is identical across routers — only placement
+//! differs.
+
+use anyhow::Result;
+
+use crate::config::{SocConfig, llama32_3b};
+use crate::fleet::{Fleet, FleetConfig, FleetReport, route};
+use crate::util::bench::Table;
+use crate::util::json::Json;
+use crate::workload::{FleetSpec, fleet_user_flows};
+
+/// Device counts swept by the full figure / the CI smoke run.
+const FULL_COUNTS: &[usize] = &[4, 16, 64];
+const SMOKE_COUNTS: &[usize] = &[2, 4];
+
+const SCENARIOS: &[&str] = &["uniform", "skewed"];
+
+/// Uniform scenario: simulated users per device, popularity skew, and
+/// per-user flow-start rates (flows/s).  At ~0.4 turns/s per device
+/// against ~0.75 turns/s of batched decode capacity the fleet runs
+/// warm but unsaturated, so TTFT differences isolate cache warmth.
+const UNIFORM_USERS_PER_DEVICE: usize = 3;
+const UNIFORM_ZIPF: f64 = 0.4;
+const UNIFORM_CHAT_RATE: f64 = 0.025;
+const UNIFORM_MONITOR_RATE: f64 = 0.015;
+
+/// Skewed scenario: one user per device at zipf 2.0, chat-only.  The
+/// fleet-wide flow-start rate is split across users by the zipf
+/// weights, which lands the hot user at ~1 flow/s (~4× one device's
+/// decode capacity) regardless of fleet size.
+const SKEW_ZIPF: f64 = 2.0;
+const SKEW_FLEET_CHAT_RATE: f64 = 1.5;
+
+/// Energy-budget calibration: budget = frac × the sticky baseline's
+/// hottest-device energy for the same (scenario, n) cell.
+const ENERGY_BUDGET_FRAC: f64 = 0.75;
+
+fn scenario_spec(
+    scenario: &str,
+    n_devices: usize,
+    duration_s: f64,
+    seed: u64,
+    max_seq: usize,
+) -> FleetSpec {
+    match scenario {
+        "uniform" => FleetSpec {
+            users: UNIFORM_USERS_PER_DEVICE * n_devices,
+            zipf_exponent: UNIFORM_ZIPF,
+            chat_rate_per_s: UNIFORM_CHAT_RATE,
+            monitor_rate_per_s: UNIFORM_MONITOR_RATE,
+            duration_s,
+            seed: seed ^ 0x00f1_ee71,
+            max_seq,
+        },
+        "skewed" => FleetSpec {
+            users: n_devices,
+            zipf_exponent: SKEW_ZIPF,
+            chat_rate_per_s: SKEW_FLEET_CHAT_RATE / n_devices as f64,
+            monitor_rate_per_s: 0.0,
+            duration_s,
+            seed: seed ^ 0x00f1_ee72,
+            max_seq,
+        },
+        other => panic!("unknown fleet scenario {other:?}"),
+    }
+}
+
+/// Stand up one fleet and drive it over the scenario's trace.
+fn run_fleet(
+    scenario: &str,
+    router: &str,
+    n: usize,
+    soc: &SocConfig,
+    duration_s: f64,
+    seed: u64,
+    energy_budget_j: f64,
+) -> Result<FleetReport> {
+    let geo = llama32_3b();
+    let spec = scenario_spec(scenario, n, duration_s, seed, geo.max_seq);
+    let inputs = fleet_user_flows(&spec, geo.vocab);
+    let mut cfg = FleetConfig::new(n, router, geo, soc.clone());
+    cfg.seed = seed;
+    cfg.energy_budget_j = energy_budget_j;
+    Fleet::new(cfg)?.run(inputs)
+}
+
+fn cell(v: f64) -> String {
+    if v.is_finite() { format!("{v:.2}") } else { "-".into() }
+}
+
+fn fig_fleet_for(
+    routers: &[&str],
+    soc: &SocConfig,
+    duration_s: f64,
+    seed: u64,
+    counts: &[usize],
+) -> Result<Json> {
+    let mut rows = vec![];
+    let mut table = Table::new(&[
+        "scenario", "router", "n", "makespan s", "rt p99 ttft ms", "pro tok/s",
+        "cache hit", "energy imbal", "migr", "rej",
+    ]);
+    for &scenario in SCENARIOS {
+        for &n in counts {
+            // `route::names` lists sticky-session first; its run
+            // calibrates the energy-budget cell (0 = unlimited when
+            // the caller sweeps a sticky-less subset).
+            let mut budget = 0.0;
+            for &router in routers {
+                let b = if router == "energy-budget" { budget } else { 0.0 };
+                let rep = run_fleet(scenario, router, n, soc, duration_s, seed, b)?;
+                if router == "sticky-session" {
+                    let hottest = rep
+                        .devices
+                        .iter()
+                        .map(|d| d.total_energy_j)
+                        .fold(0.0, f64::max);
+                    budget = ENERGY_BUDGET_FRAC * hottest;
+                }
+                table.row(vec![
+                    scenario.to_string(),
+                    router.to_string(),
+                    n.to_string(),
+                    cell(rep.makespan_us() / 1e6),
+                    cell(rep.reactive_p99_ttft_ms()),
+                    cell(rep.proactive_tokens_per_s()),
+                    cell(rep.cache_hit_rate()),
+                    cell(rep.energy_imbalance()),
+                    rep.counters.migrations.to_string(),
+                    rep.counters.rejections.to_string(),
+                ]);
+                rows.push(
+                    rep.to_json()
+                        .set("scenario", scenario)
+                        .set("duration_s", duration_s)
+                        .set("energy_budget_j", b),
+                );
+            }
+        }
+    }
+    table.print();
+    Ok(Json::obj().set("figure", "fleet").set("rows", Json::Arr(rows)))
+}
+
+/// `fig fleet [--smoke]` — every registered router across both
+/// scenarios; device counts 4/16/64 (full) or 2/4 (smoke).
+pub fn fig_fleet(soc: &SocConfig, duration_s: f64, seed: u64) -> Result<Json> {
+    let counts = if duration_s < 15.0 { SMOKE_COUNTS } else { FULL_COUNTS };
+    fig_fleet_for(route::names(), soc, duration_s, seed, counts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::default_soc;
+    use crate::workload::Priority;
+
+    fn mean_reactive_ttft_ms(rep: &FleetReport) -> f64 {
+        let ttfts: Vec<f64> = rep
+            .devices
+            .iter()
+            .flat_map(|d| d.reqs.iter())
+            .filter(|m| m.priority == Priority::Reactive && !m.tool)
+            .filter_map(|m| m.first_token_us.map(|t| (t - m.arrival_us) / 1e3))
+            .collect();
+        ttfts.iter().sum::<f64>() / ttfts.len() as f64
+    }
+
+    /// The headline affinity claim: on the uniform scenario sticky
+    /// keeps every continuation warm while random pays cache-cold
+    /// full-conversation prefills on ~(n-1)/n of them.
+    #[test]
+    fn sticky_beats_random_on_cache_hits_and_reactive_ttft() {
+        let soc = default_soc();
+        let sticky = run_fleet("uniform", "sticky-session", 4, &soc, 24.0, 7, 0.0).unwrap();
+        let random = run_fleet("uniform", "random", 4, &soc, 24.0, 7, 0.0).unwrap();
+        let (sh, rh) = (sticky.cache_hit_rate(), random.cache_hit_rate());
+        assert!(sh > rh, "sticky hit-rate {sh} vs random {rh}");
+        assert_eq!(sticky.counters.migrations, 0, "sticky never migrates unforced");
+        assert!(random.counters.migrations > 0, "random must migrate");
+        let (sp, rp) = (sticky.reactive_p99_ttft_ms(), random.reactive_p99_ttft_ms());
+        assert!(sp.is_finite() && rp.is_finite());
+        assert!(sp <= rp, "sticky p99 ttft {sp} ms vs random {rp} ms");
+        let (sm, rm) = (mean_reactive_ttft_ms(&sticky), mean_reactive_ttft_ms(&random));
+        assert!(sm < rm, "sticky mean ttft {sm} ms vs random {rm} ms");
+    }
+
+    /// The load-spreading claim: under skewed arrivals the hot user
+    /// saturates sticky's one device, so least-loaded's migration
+    /// prefills buy back far more queueing delay than they cost.
+    #[test]
+    fn least_loaded_no_worse_than_sticky_on_skewed_makespan() {
+        let soc = default_soc();
+        let sticky = run_fleet("skewed", "sticky-session", 4, &soc, 12.0, 11, 0.0).unwrap();
+        let ll = run_fleet("skewed", "least-loaded", 4, &soc, 12.0, 11, 0.0).unwrap();
+        assert!(
+            ll.makespan_us() <= sticky.makespan_us(),
+            "least-loaded makespan {} us vs sticky {} us",
+            ll.makespan_us(),
+            sticky.makespan_us()
+        );
+        assert!(ll.counters.migrations > 0, "spreading requires migrations");
+    }
+
+    /// The figure itself runs NaN-free strict JSON end-to-end for every
+    /// registered router at smoke scale.
+    #[test]
+    fn fig_fleet_smoke_is_strict_json() {
+        let j = fig_fleet_for(route::names(), &default_soc(), 8.0, 7, &[2]).unwrap();
+        let text = j.to_string();
+        assert!(!text.contains("NaN"), "invalid JSON token leaked: {text}");
+        let back = Json::parse(&text).unwrap();
+        let rows = back.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), SCENARIOS.len() * route::names().len());
+    }
+}

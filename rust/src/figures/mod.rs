@@ -8,6 +8,7 @@
 mod e2e;
 mod elastic;
 mod energy;
+mod fleet;
 mod micro;
 mod overload;
 mod workflows;
@@ -18,6 +19,7 @@ pub use e2e::{
 };
 pub use elastic::fig_elastic;
 pub use energy::fig_energy;
+pub use fleet::fig_fleet;
 pub use micro::{fig_affinity, fig_batching, fig_contention};
 pub use overload::fig_overload;
 pub use workflows::{

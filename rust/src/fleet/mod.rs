@@ -1,0 +1,762 @@
+//! The fleet layer (DESIGN.md §9): N simulated SoC devices behind a
+//! pluggable session router — the first layer of the codebase above a
+//! single SoC.
+//!
+//! A [`Fleet`] owns one [`PolicyEngine`] per device (each with its own
+//! `SocSim`, memory governor, session pool, and optional graphics
+//! workload) plus one per-device [`OverloadGate`], and steps devices in
+//! shared-virtual-clock event order: the laggard busy device always
+//! steps next, so cross-device causality (a turn completing on device A
+//! routing its successor to device B) is respected without a global
+//! event queue.
+//!
+//! Routing is a [`RoutePolicy`] decision; everything stateful stays in
+//! the fleet:
+//!
+//! - **Session affinity / migration.**  When turn `j` of a flow is
+//!   submitted to a device, turn `j+1` is *pre-held* on the same device
+//!   (a held DAG node behind `j`), so the driver's one-turn lookahead
+//!   keeps the flow's `SessionCachePool` entry retained across the
+//!   think-time gap — a sticky continuation prefills warm.  At `j`'s
+//!   completion the router re-decides: staying pre-holds `j+2`; moving
+//!   cancels the pre-held copy (the old device drops the session) and
+//!   re-roots the chain on the new device, which prefills the whole
+//!   conversation cache-cold — the migration penalty is emergent, not
+//!   modelled.
+//! - **Overload re-placement.**  A turn a device's gate refuses bounces
+//!   back to the router (`on_overload`) and tries other devices; only
+//!   when *every* device refuses is it parked and retried
+//!   `retry_after_ms` later ([`RouteError::Rejected`]) — no admitted
+//!   turn is ever silently dropped, the fleet-wide extension of the
+//!   PR 7 serving invariant.
+//! - **Conservation.**  Per-device ledgers (`submitted == done +
+//!   cancelled`) and per-flow turn counts are checked when the fleet
+//!   drains; violations are loud errors, not skewed metrics.
+//!
+//! [`PolicyEngine`]: crate::engine::PolicyEngine
+//! [`OverloadGate`]: crate::server::OverloadGate
+//! [`RoutePolicy`]: route::RoutePolicy
+//! [`RouteError::Rejected`]: route::RouteError
+
+pub mod report;
+pub mod route;
+
+use anyhow::{Context, Result, bail, ensure};
+
+use crate::config::{ModelGeometry, OverloadConfig, SchedulerConfig, SocConfig};
+use crate::engine::{EngineClock, EngineCore, EngineEvent, ShedLevel, registry};
+use crate::server::{AdmissionDecision, OverloadGate};
+use crate::soc::GraphicsConfig;
+use crate::util::{FxHashMap, FxHashSet};
+use crate::workload::{FlowBinding, FlowId, Priority, ReqId, UserFlow};
+
+pub use report::{DeviceLedger, FleetCounters, FleetReport};
+pub use route::{DeviceId, DeviceLoad, RouteCtx, RouteError, RoutePolicy};
+
+/// Everything needed to stand up a fleet.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    pub n_devices: usize,
+    /// Router registry name ([`route::names`]).
+    pub router: String,
+    /// Per-device scheduling policy ([`registry::names`]); only
+    /// `agent-xpu` retains sessions, so session-affinity routing is
+    /// meaningful there.
+    pub policy: String,
+    pub geo: ModelGeometry,
+    pub soc: SocConfig,
+    pub sched: SchedulerConfig,
+    /// Per-device admission gate config (`retry_after_ms` also paces
+    /// fleet-level retry parking).
+    pub overload: OverloadConfig,
+    /// Per-device joule budget surfaced to routers (0 = unlimited).
+    pub energy_budget_j: f64,
+    /// Seeds the seeded routers (`random`).
+    pub seed: u64,
+    /// Optional per-device display workload.
+    pub graphics: Option<GraphicsConfig>,
+    /// Call `RoutePolicy::rebalance` every this many turn completions
+    /// (0 = never).
+    pub rebalance_every: usize,
+}
+
+impl FleetConfig {
+    pub fn new(n_devices: usize, router: &str, geo: ModelGeometry, soc: SocConfig) -> Self {
+        Self {
+            n_devices,
+            router: router.to_string(),
+            policy: "agent-xpu".to_string(),
+            geo,
+            soc,
+            sched: SchedulerConfig::default(),
+            overload: OverloadConfig::default(),
+            energy_budget_j: 0.0,
+            seed: 0,
+            graphics: None,
+            rebalance_every: 0,
+        }
+    }
+}
+
+/// One device of the fleet: engine + admission gate + ledger.
+struct Device {
+    engine: Box<dyn EngineCore + Send>,
+    gate: OverloadGate,
+    ledger: DeviceLedger,
+    /// Device virtual time, refreshed after every step (cheaper than
+    /// calling `engine.load()` once per device per loop iteration).
+    now_us: f64,
+}
+
+/// Fleet-side runtime state of one input flow.
+struct FlowRt {
+    user: u64,
+    flow_id: FlowId,
+    priority: Priority,
+    turns: Vec<crate::workload::Request>,
+    /// Device holding the flow's session KV (None before rooting).
+    bound: Option<DeviceId>,
+    /// Flow id of the current device-local chain (the original id for
+    /// the first chain, a fresh one after each migration).
+    local_flow: FlowId,
+    /// Original turn index the current local chain re-rooted at.
+    local_base: usize,
+    /// The local chain on `bound` had a node cancelled — the next
+    /// placement must re-root even on the same device.
+    chain_broken: bool,
+    /// Next original turn index not yet submitted anywhere.
+    next_submit: usize,
+    done_turns: usize,
+    dead: bool,
+    /// Forced placement for the next turn (a `rebalance` directive).
+    forced: Option<DeviceId>,
+}
+
+impl FlowRt {
+    fn single_shot(&self) -> bool {
+        self.turns.len() == 1 && self.turns[0].flow.is_none()
+    }
+}
+
+/// A turn every device refused, parked for re-placement.
+struct Parked {
+    fi: usize,
+    turn: usize,
+    arrival_us: f64,
+    at_us: f64,
+}
+
+/// N per-device engines behind one router — see the module docs.
+pub struct Fleet {
+    cfg: FleetConfig,
+    devices: Vec<Device>,
+    router: Box<dyn RoutePolicy + Send>,
+    flows: Vec<FlowRt>,
+    flow_index: FxHashMap<FlowId, usize>,
+    /// Request id → (flow index, original turn index).
+    req_map: FxHashMap<ReqId, (usize, usize)>,
+    /// Ids the fleet cancelled deliberately (migration): their
+    /// `Cancelled` events are bookkeeping, not flow deaths.
+    expected_cancels: FxHashSet<ReqId>,
+    next_local_flow: FlowId,
+    parked: Vec<Parked>,
+    completions: u64,
+    counters: FleetCounters,
+    started: bool,
+    /// Per-`step_device` wall-clock samples (ns) when timing is on —
+    /// feeds the macrobench fleet-overhead gate.
+    timing: Option<Vec<f64>>,
+}
+
+impl Fleet {
+    pub fn new(cfg: FleetConfig) -> Result<Self> {
+        ensure!(cfg.n_devices > 0, "a fleet needs at least one device");
+        let router = route::build(&cfg.router, cfg.seed)?;
+        let mut devices = Vec::with_capacity(cfg.n_devices);
+        for i in 0..cfg.n_devices {
+            let mut engine =
+                registry::build(&cfg.policy, cfg.geo.clone(), cfg.soc.clone(), cfg.sched.clone())
+                    .with_context(|| format!("building device {i}"))?;
+            engine.set_graphics(cfg.graphics.clone());
+            devices.push(Device {
+                engine,
+                gate: OverloadGate::new(cfg.overload.clone()),
+                ledger: DeviceLedger::default(),
+                now_us: 0.0,
+            });
+        }
+        Ok(Self {
+            cfg,
+            devices,
+            router,
+            flows: vec![],
+            flow_index: FxHashMap::default(),
+            req_map: FxHashMap::default(),
+            expected_cancels: FxHashSet::default(),
+            next_local_flow: 0,
+            parked: vec![],
+            completions: 0,
+            counters: FleetCounters::default(),
+            started: false,
+            timing: None,
+        })
+    }
+
+    /// Record per-step wall-clock samples (macrobench overhead gate).
+    pub fn enable_step_timing(&mut self) {
+        self.timing = Some(vec![]);
+    }
+
+    /// Samples recorded by [`Self::enable_step_timing`] (ns per
+    /// `step_device`, including event routing).
+    pub fn step_samples(&self) -> Option<&[f64]> {
+        self.timing.as_deref()
+    }
+
+    /// Drive the whole fleet over a multi-user trace and drain it.
+    pub fn run(&mut self, inputs: Vec<UserFlow>) -> Result<FleetReport> {
+        ensure!(!self.started, "Fleet::run is single-shot; build a fresh fleet");
+        self.started = true;
+        self.ingest(inputs)?;
+        for d in &mut self.devices {
+            d.engine.start(EngineClock::Virtual)?;
+        }
+
+        // Roots sorted descending by (arrival, flow id): pop() yields
+        // the earliest — deterministic regardless of input order.
+        let mut roots: Vec<usize> = (0..self.flows.len()).collect();
+        roots.sort_by(|&a, &b| {
+            self.flows[b].turns[0]
+                .arrival_us
+                .total_cmp(&self.flows[a].turns[0].arrival_us)
+                .then(self.flows[b].flow_id.cmp(&self.flows[a].flow_id))
+        });
+
+        loop {
+            // The laggard busy device defines the horizon: any arrival
+            // at or before it must be placed before that device steps,
+            // or routing would read stale loads / place into the past.
+            let lag = self
+                .devices
+                .iter()
+                .enumerate()
+                .filter(|(_, d)| d.engine.has_work())
+                .map(|(i, d)| (i, d.now_us))
+                .min_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+            let horizon = lag.map_or(f64::INFINITY, |(_, t)| t);
+            let next_root = roots.last().map(|&fi| self.flows[fi].turns[0].arrival_us);
+            let next_park = self.parked.first().map(|p| p.at_us);
+            let root_due = next_root.is_some_and(|t| t <= horizon);
+            let park_due = next_park.is_some_and(|t| t <= horizon);
+
+            if root_due && next_root.unwrap() <= next_park.unwrap_or(f64::INFINITY) {
+                let fi = roots.pop().unwrap();
+                let arrival = self.flows[fi].turns[0].arrival_us;
+                self.place_turn(fi, 0, arrival, None)?;
+            } else if park_due {
+                let idle = lag.is_none();
+                if idle {
+                    // Nothing is running: the overload that parked this
+                    // turn has drained, but the shed detector only
+                    // updates on steps — clear its stale pause.
+                    for d in &mut self.devices {
+                        d.gate.set_paused(false);
+                    }
+                }
+                let p = self.parked.remove(0);
+                self.counters.retries += 1;
+                if !self.flows[p.fi].dead
+                    && !self.place_turn(p.fi, p.turn, p.arrival_us, None)?
+                    && idle
+                {
+                    bail!("fleet livelock: turn re-rejected on an idle fleet");
+                }
+            } else if let Some((di, _)) = lag {
+                self.step_device(di)?;
+            } else {
+                break;
+            }
+        }
+
+        // Drain checks: every flow fully served or loudly accounted.
+        for f in &self.flows {
+            if !f.dead && f.done_turns != f.turns.len() {
+                bail!(
+                    "flow {} lost turns: {}/{} done with no shed record — conservation violated",
+                    f.flow_id,
+                    f.done_turns,
+                    f.turns.len()
+                );
+            }
+        }
+        let mut reports = Vec::with_capacity(self.devices.len());
+        let mut ledgers = Vec::with_capacity(self.devices.len());
+        for (i, d) in self.devices.iter_mut().enumerate() {
+            let l = d.ledger;
+            if l.submitted != l.done + l.cancelled {
+                bail!(
+                    "device {i} ledger violated: submitted {} != done {} + cancelled {}",
+                    l.submitted,
+                    l.done,
+                    l.cancelled
+                );
+            }
+            reports.push(d.engine.finish().with_context(|| format!("finishing device {i}"))?);
+            ledgers.push(l);
+        }
+        Ok(FleetReport {
+            router: self.router.name().to_string(),
+            policy: self.cfg.policy.clone(),
+            devices: reports,
+            ledgers,
+            counters: self.counters,
+        })
+    }
+
+    /// Validate inputs and build the per-flow runtime state.  The fleet
+    /// routes linear LLM chains (and bare single-shot requests);
+    /// workflow DAGs with tool nodes stay single-device for now.
+    fn ingest(&mut self, inputs: Vec<UserFlow>) -> Result<()> {
+        let mut max_flow: FlowId = 0;
+        for uf in &inputs {
+            ensure!(!uf.flow.turns.is_empty(), "flow {} has no turns", uf.flow.id);
+            for (t, req) in uf.flow.turns.iter().enumerate() {
+                match &req.flow {
+                    None => ensure!(
+                        uf.flow.turns.len() == 1,
+                        "flow {}: unbound turn inside a multi-turn flow",
+                        uf.flow.id
+                    ),
+                    Some(b) => ensure!(
+                        !b.is_tool() && b.deps.is_empty() && b.turn_idx == t,
+                        "fleet routes linear LLM chains only (flow {} node {})",
+                        uf.flow.id,
+                        t
+                    ),
+                }
+            }
+            max_flow = max_flow.max(uf.flow.id);
+        }
+        self.next_local_flow = max_flow + 1_000_000;
+        self.counters.flows = inputs.len() as u64;
+        for uf in inputs {
+            let fi = self.flows.len();
+            ensure!(
+                self.flow_index.insert(uf.flow.id, fi).is_none(),
+                "duplicate flow id {}",
+                uf.flow.id
+            );
+            self.flows.push(FlowRt {
+                user: uf.user,
+                flow_id: uf.flow.id,
+                priority: uf.flow.priority,
+                turns: uf.flow.turns,
+                bound: None,
+                local_flow: uf.flow.id,
+                local_base: 0,
+                chain_broken: false,
+                next_submit: 0,
+                done_turns: 0,
+                dead: false,
+                forced: None,
+            });
+        }
+        Ok(())
+    }
+
+    /// Fresh per-device load snapshot for one routing decision.
+    fn loads(&self) -> Vec<DeviceLoad> {
+        self.devices
+            .iter()
+            .map(|d| {
+                let l = d.engine.load();
+                DeviceLoad {
+                    queue_depth: d.gate.live(),
+                    unfinished: l.unfinished,
+                    npu_duty: l.npu_duty,
+                    igpu_duty: l.igpu_duty,
+                    energy_j: l.energy_j,
+                    energy_budget_j: self.cfg.energy_budget_j,
+                    now_us: l.now_us,
+                }
+            })
+            .collect()
+    }
+
+    /// Route + admit + submit one turn.  Returns `false` when every
+    /// device refused ([`RouteError::Rejected`]) and the turn was
+    /// parked for a retry `retry_after_ms` later — never dropped.
+    fn place_turn(
+        &mut self,
+        fi: usize,
+        turn: usize,
+        arrival_us: f64,
+        preferred: Option<DeviceId>,
+    ) -> Result<bool> {
+        match self.route_and_admit(fi, turn, preferred)? {
+            Ok(dev) => {
+                self.admit_and_submit(fi, turn, dev, arrival_us)?;
+                Ok(true)
+            }
+            Err(RouteError::Rejected { retry_after_ms }) => {
+                self.counters.rejections += 1;
+                self.park(Parked {
+                    fi,
+                    turn,
+                    arrival_us,
+                    at_us: arrival_us + retry_after_ms.max(1.0) * 1e3,
+                });
+                Ok(false)
+            }
+        }
+    }
+
+    /// Walk the router across devices until one admits: the chosen
+    /// device first, then `on_overload` alternates; a reactive turn may
+    /// displace a queued proactive request as the last resort (mirrors
+    /// the single-device `run_governed` path).  `Err(RouteError)` is
+    /// the typed every-device-refused outcome — the outer `Result` is
+    /// for real failures only.
+    fn route_and_admit(
+        &mut self,
+        fi: usize,
+        turn: usize,
+        preferred: Option<DeviceId>,
+    ) -> Result<std::result::Result<DeviceId, RouteError>> {
+        let n = self.devices.len();
+        let loads = self.loads();
+        let (user, flow_id, priority, bound, single) = {
+            let f = &self.flows[fi];
+            (f.user, f.flow_id, f.turns[turn].priority, f.bound, f.single_shot())
+        };
+        let ctx = RouteCtx {
+            user,
+            flow: flow_id,
+            turn_idx: turn,
+            priority,
+            bound: if turn == 0 { None } else { bound },
+            loads: &loads,
+        };
+        let tag = (!single).then(|| format!("flow:{flow_id}"));
+
+        let mut tried: Vec<DeviceId> = vec![];
+        let mut displace: Option<(DeviceId, ReqId)> = None;
+        let mut cand = match preferred {
+            Some(d) => d,
+            None => self.router.route(&ctx),
+        };
+        let placed = loop {
+            ensure!(cand < n, "router {} placed device {cand} of {n}", self.router.name());
+            match self.devices[cand].gate.try_admit(priority, tag.as_deref()) {
+                AdmissionDecision::Admit => break Some(cand),
+                AdmissionDecision::Displace(v) => {
+                    displace.get_or_insert((cand, v));
+                    tried.push(cand);
+                }
+                AdmissionDecision::Reject => tried.push(cand),
+            }
+            match self.router.on_overload(&ctx, &tried) {
+                Some(d) if !tried.contains(&d) => cand = d,
+                _ => break None,
+            }
+        };
+
+        if let Some(dev) = placed {
+            if !tried.is_empty() {
+                self.counters.overload_reroutes += 1;
+            }
+            return Ok(Ok(dev));
+        }
+        if priority == Priority::Reactive {
+            if let Some((dev, victim)) = displace {
+                self.counters.displaced += 1;
+                self.devices[dev].gate.forget_waiting(victim);
+                if let Some(&(vfi, _)) = self.req_map.get(&victim) {
+                    self.mark_flow_dead(vfi);
+                }
+                self.devices[dev].engine.cancel(victim)?;
+                return Ok(Ok(dev));
+            }
+        }
+        Ok(Err(RouteError::Rejected { retry_after_ms: self.cfg.overload.retry_after_ms }))
+    }
+
+    /// Insert into the park list, kept sorted by (retry time, flow).
+    fn park(&mut self, p: Parked) {
+        let pos = self
+            .parked
+            .partition_point(|q| (q.at_us, q.fi, q.turn) < (p.at_us, p.fi, p.turn));
+        self.parked.insert(pos, p);
+    }
+
+    /// Submit turn `turn` of flow `fi` to `dev` (the gate already said
+    /// yes) and pre-hold the following turn on the same device.
+    fn admit_and_submit(
+        &mut self,
+        fi: usize,
+        turn: usize,
+        dev: DeviceId,
+        arrival_us: f64,
+    ) -> Result<()> {
+        let (single, prev_bound, chain_broken, flow_id, n_turns) = {
+            let f = &self.flows[fi];
+            (f.single_shot(), f.bound, f.chain_broken, f.flow_id, f.turns.len())
+        };
+        let as_root = turn == 0 || Some(dev) != prev_bound || chain_broken;
+        let local_flow = if !as_root {
+            self.flows[fi].local_flow
+        } else if turn == 0 {
+            flow_id
+        } else {
+            let v = self.next_local_flow;
+            self.next_local_flow += 1;
+            v
+        };
+        if turn > 0 && prev_bound.is_some() && Some(dev) != prev_bound {
+            self.counters.migrations += 1;
+        }
+
+        let f = &mut self.flows[fi];
+        if as_root {
+            f.local_flow = local_flow;
+            f.local_base = turn;
+        }
+        let mut req = f.turns[turn].clone();
+        req.arrival_us = arrival_us;
+        if !single {
+            let ob = f.turns[turn].flow.as_ref().unwrap();
+            let local_total = n_turns - f.local_base;
+            req.flow = Some(if as_root {
+                // Re-rooted chain: self-contained prompt, no local
+                // predecessor — the new device prefills it cache-cold.
+                FlowBinding::linear(local_flow, 0, local_total, 0.0, 0)
+            } else {
+                FlowBinding::linear(
+                    local_flow,
+                    turn - f.local_base,
+                    local_total,
+                    ob.think_time_us,
+                    ob.delta_start,
+                )
+            });
+        }
+        f.bound = Some(dev);
+        f.chain_broken = false;
+        f.next_submit = turn + 1;
+        let (id, priority) = (req.id, req.priority);
+        let tag = (!single).then(|| format!("flow:{flow_id}"));
+
+        self.devices[dev].engine.submit(req)?;
+        self.devices[dev].ledger.submitted += 1;
+        self.devices[dev].gate.admit(id, priority, tag.as_deref());
+        self.req_map.insert(id, (fi, turn));
+        self.try_pre_hold(fi, dev)?;
+        Ok(())
+    }
+
+    /// Submit the flow's next turn to `dev` as a *held* DAG node behind
+    /// its (not yet finished) predecessor, so the driver retains the
+    /// session across the think-time gap and the continuation prefills
+    /// warm.  Skipped when the gate has no seat — the turn is then
+    /// placed normally at its predecessor's completion (and the session
+    /// may go cold: correct under-pressure semantics).
+    fn try_pre_hold(&mut self, fi: usize, dev: DeviceId) -> Result<()> {
+        let (turn, flow_id, eligible) = {
+            let f = &self.flows[fi];
+            let turn = f.next_submit;
+            let eligible = !f.dead
+                && !f.single_shot()
+                && turn < f.turns.len()
+                && Some(dev) == f.bound
+                && !f.chain_broken;
+            (turn, f.flow_id, eligible)
+        };
+        if !eligible {
+            return Ok(());
+        }
+        let priority = self.flows[fi].turns[turn].priority;
+        let tag = format!("flow:{flow_id}");
+        if self.devices[dev].gate.try_admit(priority, Some(&tag)) != AdmissionDecision::Admit {
+            return Ok(());
+        }
+        let f = &mut self.flows[fi];
+        let ob = f.turns[turn].flow.as_ref().unwrap();
+        let binding = FlowBinding::linear(
+            f.local_flow,
+            turn - f.local_base,
+            f.turns.len() - f.local_base,
+            ob.think_time_us,
+            ob.delta_start,
+        );
+        let mut req = f.turns[turn].clone();
+        // arrival is a placeholder: the driver stamps the real one
+        // (predecessor completion + think time) at release
+        req.flow = Some(binding);
+        f.next_submit = turn + 1;
+        let id = req.id;
+        self.devices[dev].engine.submit(req)?;
+        self.devices[dev].ledger.submitted += 1;
+        self.devices[dev].gate.admit(id, priority, Some(&tag));
+        self.req_map.insert(id, (fi, turn));
+        Ok(())
+    }
+
+    /// Step one device and fold its events into fleet state.
+    fn step_device(&mut self, di: usize) -> Result<()> {
+        let t0 = self.timing.as_ref().map(|_| std::time::Instant::now());
+        let events = self.devices[di].engine.step()?;
+        for ev in &events {
+            self.devices[di].gate.on_event(ev);
+        }
+        for ev in events {
+            match ev {
+                EngineEvent::TurnDone { id, at_us, cached_prefix, .. } => {
+                    self.on_turn_done(di, id, at_us, cached_prefix)?;
+                }
+                EngineEvent::Cancelled { id, .. } => {
+                    self.devices[di].ledger.cancelled += 1;
+                    if !self.expected_cancels.remove(&id) {
+                        // Not one of ours: a displacement shed or a
+                        // propagated flow kill — the whole flow is gone.
+                        if let Some(&(fi, _)) = self.req_map.get(&id) {
+                            self.mark_flow_dead(fi);
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        // Shed ladder, mirrored from the single-device serving loop:
+        // pause proactive intake, then shed newest queued proactive.
+        let now = self.devices[di].engine.load().now_us;
+        self.devices[di].now_us = now;
+        let sig = self.devices[di].gate.signal(now);
+        let level = self.devices[di].engine.overload_response(&sig);
+        self.devices[di].gate.set_paused(level >= ShedLevel::PauseProactive);
+        if level >= ShedLevel::CancelQueuedProactive {
+            if let Some(v) = self.devices[di].gate.take_newest_waiting_proactive() {
+                if let Some(&(vfi, _)) = self.req_map.get(&v) {
+                    self.mark_flow_dead(vfi);
+                }
+                self.devices[di].engine.cancel(v)?;
+            }
+        }
+        if let Some(t0) = t0 {
+            let ns = t0.elapsed().as_nanos() as f64;
+            if let Some(samples) = self.timing.as_mut() {
+                samples.push(ns);
+            }
+        }
+        Ok(())
+    }
+
+    /// One logical turn finished on `di`: account it, then decide where
+    /// the flow's next turn runs (stay warm vs migrate cache-cold).
+    fn on_turn_done(
+        &mut self,
+        di: usize,
+        id: ReqId,
+        at_us: f64,
+        cached_prefix: usize,
+    ) -> Result<()> {
+        self.devices[di].ledger.done += 1;
+        let Some(&(fi, turn)) = self.req_map.get(&id) else {
+            bail!("TurnDone for unmapped request {id} on device {di}");
+        };
+        {
+            let f = &mut self.flows[fi];
+            f.done_turns += 1;
+            if !f.dead && f.done_turns == f.turns.len() {
+                self.counters.flows_finished += 1;
+            }
+        }
+        if turn > 0 {
+            self.counters.continuation_turns += 1;
+            if cached_prefix > 0 {
+                self.counters.continuation_warm += 1;
+            }
+        }
+        self.completions += 1;
+        if self.cfg.rebalance_every > 0 && self.completions % self.cfg.rebalance_every as u64 == 0 {
+            let loads = self.loads();
+            let dirs = self.router.rebalance(&loads);
+            self.counters.rebalance_directives += dirs.len() as u64;
+            for (flow, dev) in dirs {
+                if let Some(&fi2) = self.flow_index.get(&flow) {
+                    if !self.flows[fi2].dead && dev < self.devices.len() {
+                        self.flows[fi2].forced = Some(dev);
+                    }
+                }
+            }
+        }
+
+        let (dead, n_turns, next_submit, bound, forced) = {
+            let f = &mut self.flows[fi];
+            (f.dead, f.turns.len(), f.next_submit, f.bound, f.forced.take())
+        };
+        let next = turn + 1;
+        if dead || next >= n_turns {
+            return Ok(());
+        }
+        let think =
+            self.flows[fi].turns[next].flow.as_ref().map_or(0.0, |b| b.think_time_us);
+        let arrival = at_us + think;
+        if next_submit == next + 1 {
+            // `next` is pre-held on `bound` (the driver just released
+            // it): ask the router whether the flow stays or migrates.
+            let loads = self.loads();
+            let ctx = RouteCtx {
+                user: self.flows[fi].user,
+                flow: self.flows[fi].flow_id,
+                turn_idx: next,
+                priority: self.flows[fi].turns[next].priority,
+                bound,
+                loads: &loads,
+            };
+            let target = forced.unwrap_or_else(|| self.router.route(&ctx));
+            drop(loads);
+            ensure!(
+                target < self.devices.len(),
+                "router {} placed device {target} of {}",
+                self.router.name(),
+                self.devices.len()
+            );
+            if Some(target) == bound {
+                self.try_pre_hold(fi, target)?;
+            } else {
+                // Migration: cancel the pre-held copy (the old device
+                // drops the flow's session) and re-root elsewhere.
+                let old = bound.expect("pre-held turn implies a bound device");
+                let held_id = self.flows[fi].turns[next].id;
+                self.expected_cancels.insert(held_id);
+                if self.devices[old].engine.cancel(held_id)? {
+                    self.flows[fi].chain_broken = true;
+                    self.flows[fi].next_submit = next;
+                    self.place_turn(fi, next, arrival, Some(target))?;
+                } else {
+                    // The copy already retired inside this very step —
+                    // its own TurnDone later in the batch drives on.
+                    self.expected_cancels.remove(&held_id);
+                }
+            }
+        } else if next_submit == next {
+            // Never pre-held (the gate was full at submit time).
+            self.place_turn(fi, next, arrival, None)?;
+        } else {
+            bail!("flow {} lookahead invariant broken at turn {next}", self.flows[fi].flow_id);
+        }
+        Ok(())
+    }
+
+    /// The flow is gone (displacement shed or propagated cancel): stop
+    /// submitting its turns and account the never-submitted tail.
+    fn mark_flow_dead(&mut self, fi: usize) {
+        let f = &mut self.flows[fi];
+        if f.dead {
+            return;
+        }
+        f.dead = true;
+        self.counters.flows_dead += 1;
+        self.counters.shed_turns += (f.turns.len() - f.next_submit) as u64;
+    }
+}

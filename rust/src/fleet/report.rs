@@ -1,0 +1,175 @@
+//! Fleet-level metrics: per-device [`RunReport`]s plus the cross-device
+//! rollups the routing comparison keys on (DESIGN.md §9).
+
+use crate::metrics::RunReport;
+use crate::util::bench::percentile;
+use crate::util::json::Json;
+use crate::workload::Priority;
+
+/// Per-device request ledger the fleet maintains from its own event
+/// stream — the conservation invariant is `submitted == done +
+/// cancelled` on every device once the fleet drains.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DeviceLedger {
+    /// Requests the fleet submitted to this device's engine.
+    pub submitted: u64,
+    /// `TurnDone` events observed from this device.
+    pub done: u64,
+    /// `Cancelled` events observed from this device (deliberate
+    /// migration cancels + displacement sheds + flow propagation).
+    pub cancelled: u64,
+}
+
+/// Fleet-level counters accumulated while routing.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FleetCounters {
+    /// Flows fed to the fleet.
+    pub flows: u64,
+    /// Flows whose every turn finished.
+    pub flows_finished: u64,
+    /// Flows killed mid-run (displacement shed or propagated cancel).
+    pub flows_dead: u64,
+    /// Continuation turns placed on a device other than the one holding
+    /// the flow's session KV — each one prefills cache-cold.
+    pub migrations: u64,
+    /// Placements that succeeded only via a router `on_overload` hop.
+    pub overload_reroutes: u64,
+    /// Turns every device refused — parked and re-placed
+    /// `retry_after_ms` later ([`RouteError::Rejected`]).
+    ///
+    /// [`RouteError::Rejected`]: super::route::RouteError
+    pub rejections: u64,
+    /// Parked-turn placement re-attempts.
+    pub retries: u64,
+    /// Queued proactive requests displaced to seat reactive arrivals.
+    pub displaced: u64,
+    /// Turns of dead flows that were never submitted anywhere.
+    pub shed_turns: u64,
+    /// Logical continuation turns (original `turn_idx > 0`) finished.
+    pub continuation_turns: u64,
+    /// Of those, turns admitted with a warm session prefix.
+    pub continuation_warm: u64,
+    /// Forced-placement directives issued by `rebalance()`.
+    pub rebalance_directives: u64,
+}
+
+/// Everything a fleet run produced: one [`RunReport`] + ledger per
+/// device, the routing counters, and derived rollups.
+#[derive(Debug)]
+pub struct FleetReport {
+    pub router: String,
+    pub policy: String,
+    pub devices: Vec<RunReport>,
+    pub ledgers: Vec<DeviceLedger>,
+    pub counters: FleetCounters,
+}
+
+impl FleetReport {
+    /// Fleet makespan: the last completion on any device (µs).
+    pub fn makespan_us(&self) -> f64 {
+        self.devices.iter().map(|d| d.makespan_us).fold(0.0, f64::max)
+    }
+
+    /// Sum of per-device `total_energy_j`.
+    pub fn total_energy_j(&self) -> f64 {
+        self.devices.iter().map(|d| d.total_energy_j).sum()
+    }
+
+    /// Energy imbalance: max device energy over mean device energy
+    /// (1.0 = perfectly balanced; NaN only for an empty fleet).
+    pub fn energy_imbalance(&self) -> f64 {
+        let n = self.devices.len() as f64;
+        let mean = self.total_energy_j() / n;
+        let max = self.devices.iter().map(|d| d.total_energy_j).fold(0.0, f64::max);
+        if mean > 0.0 { max / mean } else { 1.0 }
+    }
+
+    /// Reactive p99 TTFT across every device (ms; NaN when no reactive
+    /// LLM turn finished).
+    pub fn reactive_p99_ttft_ms(&self) -> f64 {
+        let mut ttfts: Vec<f64> = self
+            .devices
+            .iter()
+            .flat_map(|d| d.reqs.iter())
+            .filter(|m| m.priority == Priority::Reactive && !m.tool)
+            .filter_map(|m| m.first_token_us.map(|t| (t - m.arrival_us) / 1e3))
+            .collect();
+        if ttfts.is_empty() {
+            return f64::NAN;
+        }
+        ttfts.sort_by(f64::total_cmp);
+        percentile(&ttfts, 0.99)
+    }
+
+    /// Proactive output tokens per second of fleet makespan.
+    pub fn proactive_tokens_per_s(&self) -> f64 {
+        let toks: usize = self
+            .devices
+            .iter()
+            .flat_map(|d| d.reqs.iter())
+            .filter(|m| m.priority == Priority::Proactive && m.done_us.is_some())
+            .map(|m| m.output_tokens)
+            .sum();
+        let span_s = self.makespan_us() / 1e6;
+        if span_s > 0.0 { toks as f64 / span_s } else { f64::NAN }
+    }
+
+    /// Fleet-level session-cache hit rate over *logical* continuation
+    /// turns.  Per-device `RunReport::prefix_cache_hit_rate` cannot see
+    /// migrations — a migrated continuation re-roots as a device-local
+    /// flow and would be miscounted as ineligible — so the fleet counts
+    /// warmth from its own event stream instead.
+    pub fn cache_hit_rate(&self) -> f64 {
+        if self.counters.continuation_turns == 0 {
+            return f64::NAN;
+        }
+        self.counters.continuation_warm as f64 / self.counters.continuation_turns as f64
+    }
+
+    /// Requests finished across the fleet.
+    pub fn finished(&self) -> u64 {
+        self.ledgers.iter().map(|l| l.done).sum()
+    }
+
+    /// Strict-JSON serialisation (figure harnesses; `NaN` → `null`).
+    pub fn to_json(&self) -> Json {
+        let c = &self.counters;
+        let devices: Vec<Json> = self
+            .devices
+            .iter()
+            .zip(&self.ledgers)
+            .map(|(d, l)| {
+                Json::obj()
+                    .set("submitted", l.submitted as f64)
+                    .set("done", l.done as f64)
+                    .set("cancelled", l.cancelled as f64)
+                    .set("makespan_us", Json::num_or_null(d.makespan_us))
+                    .set("total_energy_j", Json::num_or_null(d.total_energy_j))
+                    .set("finished", d.reqs.iter().filter(|m| m.done_us.is_some()).count())
+            })
+            .collect();
+        Json::obj()
+            .set("router", self.router.as_str())
+            .set("policy", self.policy.as_str())
+            .set("n_devices", self.devices.len())
+            .set("makespan_us", Json::num_or_null(self.makespan_us()))
+            .set("total_energy_j", Json::num_or_null(self.total_energy_j()))
+            .set("energy_imbalance", Json::num_or_null(self.energy_imbalance()))
+            .set("reactive_p99_ttft_ms", Json::num_or_null(self.reactive_p99_ttft_ms()))
+            .set("proactive_tok_s", Json::num_or_null(self.proactive_tokens_per_s()))
+            .set("cache_hit_rate", Json::num_or_null(self.cache_hit_rate()))
+            .set("flows", c.flows as f64)
+            .set("flows_finished", c.flows_finished as f64)
+            .set("flows_dead", c.flows_dead as f64)
+            .set("migrations", c.migrations as f64)
+            .set("overload_reroutes", c.overload_reroutes as f64)
+            .set("rejections", c.rejections as f64)
+            .set("retries", c.retries as f64)
+            .set("displaced", c.displaced as f64)
+            .set("shed_turns", c.shed_turns as f64)
+            .set("continuation_turns", c.continuation_turns as f64)
+            .set("continuation_warm", c.continuation_warm as f64)
+            .set("rebalance_directives", c.rebalance_directives as f64)
+            .set("devices", Json::Arr(devices))
+    }
+}

@@ -1,0 +1,398 @@
+//! Pluggable session routing (DESIGN.md §9): which device of the fleet
+//! serves the next turn of a user's flow.
+//!
+//! A [`RoutePolicy`] mirrors the `SchedPolicy` split one layer up: the
+//! [`Fleet`](super::Fleet) owns the event loop, per-device engines, and
+//! conservation bookkeeping; a router is only the placement decision.
+//! Like scheduling policies, routers live in a string-keyed registry so
+//! harnesses and the CLI select them by name — a new router registered
+//! here is automatically covered by `fig fleet` and the fleet property
+//! suite.
+//!
+//! Canonical names:
+//!
+//! | name | placement rule |
+//! |---|---|
+//! | `sticky-session` | user-hash roots, continuations stay on the KV-holding device |
+//! | `least-loaded` | roots to the min (queue depth + XPU duty) device, sticky continuations |
+//! | `energy-budget` | proactive work steered off devices near their joule budget |
+//! | `random` | seeded uniform placement of every turn (migration-heavy baseline) |
+
+use anyhow::{Result, bail};
+
+use crate::util::rng::Rng;
+use crate::workload::{FlowId, Priority};
+
+/// Index of a device within its fleet.
+pub type DeviceId = usize;
+
+/// Why the fleet could not place a turn anywhere right now.  The
+/// rejected turn is *not* dropped: the fleet parks it and re-places it
+/// `retry_after_ms` later (the fleet-wide extension of the PR 7 serving
+/// invariant — no admitted turn is silently lost).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RouteError {
+    /// Every device's `OverloadGate` refused the turn.
+    Rejected { retry_after_ms: f64 },
+}
+
+/// Per-device load snapshot a router reads at each decision point.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DeviceLoad {
+    /// Requests admitted by the device's gate without a terminal event
+    /// yet (the admission queue depth the gate bounds).
+    pub queue_depth: usize,
+    /// Engine-level outstanding work (queued + held turns + in-flight).
+    pub unfinished: usize,
+    /// Windowed NPU duty cycle in [0, 1].
+    pub npu_duty: f64,
+    /// Windowed iGPU duty cycle in [0, 1].
+    pub igpu_duty: f64,
+    /// Cumulative energy drawn by the device this run (J).
+    pub energy_j: f64,
+    /// Per-device joule budget (0 = unlimited).
+    pub energy_budget_j: f64,
+    /// Device virtual time (µs).
+    pub now_us: f64,
+}
+
+impl DeviceLoad {
+    /// Scalar congestion score: queue depth dominates, windowed XPU
+    /// duty breaks ties between shallow queues.
+    pub fn congestion(&self) -> f64 {
+        self.queue_depth as f64 + 2.0 * (self.npu_duty + self.igpu_duty)
+    }
+
+    /// Joules left under the budget (`f64::INFINITY` when unlimited).
+    pub fn energy_headroom_j(&self) -> f64 {
+        if self.energy_budget_j <= 0.0 {
+            f64::INFINITY
+        } else {
+            self.energy_budget_j - self.energy_j
+        }
+    }
+}
+
+/// Everything a router sees at one placement decision.
+#[derive(Debug)]
+pub struct RouteCtx<'a> {
+    /// The user the flow belongs to (routers may hash it for affinity).
+    pub user: u64,
+    /// Fleet-level flow id.
+    pub flow: FlowId,
+    /// Original turn index within the flow (0 = flow root).
+    pub turn_idx: usize,
+    pub priority: Priority,
+    /// Device currently holding the flow's session KV (`None` for
+    /// roots).  Placing elsewhere migrates the flow: the new device
+    /// prefills the whole conversation cache-cold.
+    pub bound: Option<DeviceId>,
+    /// One load snapshot per device, indexed by [`DeviceId`].
+    pub loads: &'a [DeviceLoad],
+}
+
+/// A fleet routing policy: pure placement decisions over [`RouteCtx`]
+/// snapshots.  The fleet owns admission (per-device `OverloadGate`s)
+/// and all conservation bookkeeping — a router can place badly but
+/// cannot lose work.
+pub trait RoutePolicy {
+    /// Registry name of this router.
+    fn name(&self) -> &'static str;
+
+    /// Place one turn.  Called for every flow root and at every turn
+    /// completion for the flow's next turn (`ctx.bound` names the
+    /// device whose `SessionCachePool` holds the flow's KV; returning a
+    /// different device migrates the flow cache-cold).
+    fn route(&mut self, ctx: &RouteCtx) -> DeviceId;
+
+    /// The chosen device's gate rejected the turn — pick an alternate
+    /// (`tried` lists every device already refused this attempt).
+    /// Returning `None`, or only already-tried devices, surfaces
+    /// [`RouteError::Rejected`] to the fleet.  Default: the first
+    /// untried device by id.
+    fn on_overload(&mut self, ctx: &RouteCtx, tried: &[DeviceId]) -> Option<DeviceId> {
+        (0..ctx.loads.len()).find(|d| !tried.contains(d))
+    }
+
+    /// Periodic load audit: the fleet calls this every
+    /// `FleetConfig::rebalance_every` turn completions with fresh
+    /// loads.  Returned `(flow, device)` directives force the *next*
+    /// turn of each named flow onto the given device (a deliberate
+    /// migration).  Default: never rebalance.
+    fn rebalance(&mut self, _loads: &[DeviceLoad]) -> Vec<(FlowId, DeviceId)> {
+        vec![]
+    }
+}
+
+/// Stable 64-bit user → device hash (splitmix64 finalizer) — the same
+/// user always roots on the same device for a given fleet size.
+fn user_hash(user: u64) -> u64 {
+    let mut x = user.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Argmin over device loads with a deterministic lowest-id tie-break.
+fn argmin_by<F: Fn(&DeviceLoad) -> f64>(loads: &[DeviceLoad], key: F) -> DeviceId {
+    let mut best = 0;
+    let mut best_k = f64::INFINITY;
+    for (i, l) in loads.iter().enumerate() {
+        let k = key(l);
+        if k < best_k {
+            best = i;
+            best_k = k;
+        }
+    }
+    best
+}
+
+/// Session affinity: a user's flows root on `hash(user) % N`, and every
+/// continuation stays on the device holding the flow's KV — maximum
+/// cache warmth, no load awareness (a hot user's device saturates).
+pub struct StickySession;
+
+impl RoutePolicy for StickySession {
+    fn name(&self) -> &'static str {
+        "sticky-session"
+    }
+
+    fn route(&mut self, ctx: &RouteCtx) -> DeviceId {
+        ctx.bound
+            .unwrap_or_else(|| (user_hash(ctx.user) % ctx.loads.len() as u64) as usize)
+    }
+}
+
+/// Load-aware rooting: flow roots go to the least-congested device
+/// (queue depth + windowed XPU duty); continuations stay sticky so the
+/// balance win does not cost cache warmth.
+pub struct LeastLoaded;
+
+impl RoutePolicy for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+
+    fn route(&mut self, ctx: &RouteCtx) -> DeviceId {
+        match ctx.bound {
+            Some(d) => d,
+            None => argmin_by(ctx.loads, DeviceLoad::congestion),
+        }
+    }
+
+    fn on_overload(&mut self, ctx: &RouteCtx, tried: &[DeviceId]) -> Option<DeviceId> {
+        // least-congested untried device, not merely the first by id
+        (0..ctx.loads.len())
+            .filter(|d| !tried.contains(d))
+            .min_by(|&a, &b| {
+                ctx.loads[a]
+                    .congestion()
+                    .total_cmp(&ctx.loads[b].congestion())
+                    .then(a.cmp(&b))
+            })
+    }
+}
+
+/// Joule-budget steering: proactive work avoids devices near their
+/// per-device energy budget — roots go to the device with the most
+/// joule headroom, and a proactive continuation whose bound device has
+/// crossed `ENERGY_STEER_FRAC` of its budget migrates away (cache-cold
+/// by design: spending a full recompute beats busting the budget).
+/// Reactive flows route like `least-loaded` roots + sticky
+/// continuations: latency work is never displaced for energy.
+pub struct EnergyBudget;
+
+/// Budget fraction past which proactive continuations migrate off.
+pub const ENERGY_STEER_FRAC: f64 = 0.9;
+
+impl RoutePolicy for EnergyBudget {
+    fn name(&self) -> &'static str {
+        "energy-budget"
+    }
+
+    fn route(&mut self, ctx: &RouteCtx) -> DeviceId {
+        let most_headroom = || {
+            argmin_by(ctx.loads, |l| {
+                // min over (-headroom), i.e. max headroom; congestion
+                // breaks ties between unlimited-budget devices
+                let h = l.energy_headroom_j();
+                if h.is_infinite() { l.energy_j + l.congestion() } else { -h }
+            })
+        };
+        match (ctx.priority, ctx.bound) {
+            (Priority::Reactive, Some(d)) => d,
+            (Priority::Reactive, None) => argmin_by(ctx.loads, DeviceLoad::congestion),
+            (Priority::Proactive, Some(d)) => {
+                let l = &ctx.loads[d];
+                let near_budget = l.energy_budget_j > 0.0
+                    && l.energy_j >= ENERGY_STEER_FRAC * l.energy_budget_j;
+                if near_budget { most_headroom() } else { d }
+            }
+            (Priority::Proactive, None) => most_headroom(),
+        }
+    }
+}
+
+/// Seeded uniform placement of *every* turn — the migration-heavy
+/// baseline the acceptance claims compare against: continuations
+/// usually land off the KV-holding device and prefill cache-cold.
+pub struct RandomRoute {
+    rng: Rng,
+}
+
+impl RoutePolicy for RandomRoute {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn route(&mut self, ctx: &RouteCtx) -> DeviceId {
+        self.rng.usize(0, ctx.loads.len())
+    }
+
+    fn on_overload(&mut self, ctx: &RouteCtx, tried: &[DeviceId]) -> Option<DeviceId> {
+        let open: Vec<DeviceId> =
+            (0..ctx.loads.len()).filter(|d| !tried.contains(d)).collect();
+        if open.is_empty() { None } else { Some(*self.rng.choice(&open)) }
+    }
+}
+
+/// Canonical names of every registered router, in comparison order.
+pub fn names() -> &'static [&'static str] {
+    &["sticky-session", "least-loaded", "energy-budget", "random"]
+}
+
+/// Resolve a user-facing name or alias to its canonical key.
+pub fn canonical(name: &str) -> Result<&'static str> {
+    Ok(match name {
+        "sticky-session" | "sticky" | "session-affinity" => "sticky-session",
+        "least-loaded" | "least-load" | "balance" => "least-loaded",
+        "energy-budget" | "energy" => "energy-budget",
+        "random" | "uniform" => "random",
+        other => bail!(
+            "unknown router {other:?} (registered: {})",
+            names().join(", ")
+        ),
+    })
+}
+
+/// Build a router by name.  `seed` feeds the seeded baselines (only
+/// `random` draws from it); deterministic routers ignore it.
+pub fn build(name: &str, seed: u64) -> Result<Box<dyn RoutePolicy + Send>> {
+    Ok(match canonical(name)? {
+        "sticky-session" => Box::new(StickySession),
+        "least-loaded" => Box::new(LeastLoaded),
+        "energy-budget" => Box::new(EnergyBudget),
+        // the xor keeps the router's RNG stream distinct from workload
+        // generators seeded from the same root seed
+        "random" => Box::new(RandomRoute { rng: Rng::new(seed ^ 0x5157_0000_7e77) }),
+        _ => unreachable!("canonical() covers every registered name"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loads(n: usize) -> Vec<DeviceLoad> {
+        (0..n)
+            .map(|i| DeviceLoad {
+                queue_depth: i,
+                unfinished: i,
+                npu_duty: 0.1 * i as f64,
+                igpu_duty: 0.0,
+                energy_j: i as f64,
+                energy_budget_j: 0.0,
+                now_us: 0.0,
+            })
+            .collect()
+    }
+
+    fn ctx<'a>(
+        user: u64,
+        bound: Option<DeviceId>,
+        priority: Priority,
+        loads: &'a [DeviceLoad],
+    ) -> RouteCtx<'a> {
+        RouteCtx { user, flow: 1, turn_idx: bound.map(|_| 1).unwrap_or(0), priority, bound, loads }
+    }
+
+    #[test]
+    fn every_registered_name_round_trips_through_build() {
+        for &name in names() {
+            let mut r = build(name, 7).unwrap();
+            assert_eq!(r.name(), name, "build({name}) yields the canonical router");
+            let ls = loads(4);
+            let d = r.route(&ctx(3, None, Priority::Reactive, &ls));
+            assert!(d < 4, "{name}: route stays in range");
+        }
+        assert!(build("no-such-router", 7).is_err());
+        assert_eq!(canonical("sticky").unwrap(), "sticky-session");
+        assert_eq!(canonical("balance").unwrap(), "least-loaded");
+        assert_eq!(canonical("uniform").unwrap(), "random");
+    }
+
+    #[test]
+    fn sticky_keeps_bound_device_and_hashes_users_stably() {
+        let ls = loads(8);
+        let mut r = StickySession;
+        let root = r.route(&ctx(42, None, Priority::Reactive, &ls));
+        assert_eq!(root, r.route(&ctx(42, None, Priority::Reactive, &ls)));
+        for bound in 0..8 {
+            assert_eq!(
+                r.route(&ctx(42, Some(bound), Priority::Reactive, &ls)),
+                bound,
+                "continuations never leave the KV device"
+            );
+        }
+        // different users spread across devices (not all on one)
+        let placed: std::collections::HashSet<usize> = (0..64)
+            .map(|u| r.route(&ctx(u, None, Priority::Reactive, &ls)))
+            .collect();
+        assert!(placed.len() > 1, "user hash must spread across the fleet");
+    }
+
+    #[test]
+    fn least_loaded_roots_to_min_congestion() {
+        let ls = loads(4); // device 0 is least congested by construction
+        let mut r = LeastLoaded;
+        assert_eq!(r.route(&ctx(9, None, Priority::Reactive, &ls)), 0);
+        assert_eq!(
+            r.route(&ctx(9, Some(3), Priority::Reactive, &ls)),
+            3,
+            "continuations stay sticky"
+        );
+        // overload fallback prefers the least-congested untried device
+        assert_eq!(r.on_overload(&ctx(9, None, Priority::Reactive, &ls), &[0]), Some(1));
+    }
+
+    #[test]
+    fn energy_budget_steers_proactive_off_hot_devices() {
+        let mut ls = loads(3);
+        for (i, l) in ls.iter_mut().enumerate() {
+            l.energy_budget_j = 10.0;
+            l.energy_j = [9.5, 2.0, 5.0][i];
+        }
+        let mut r = EnergyBudget;
+        // bound device 0 is past 90% of budget: migrate to max headroom
+        assert_eq!(r.route(&ctx(1, Some(0), Priority::Proactive, &ls)), 1);
+        // bound device 2 is under the steer threshold: stay
+        assert_eq!(r.route(&ctx(1, Some(2), Priority::Proactive, &ls)), 2);
+        // proactive roots go to the most headroom
+        assert_eq!(r.route(&ctx(1, None, Priority::Proactive, &ls)), 1);
+        // reactive work is never energy-steered
+        assert_eq!(r.route(&ctx(1, Some(0), Priority::Reactive, &ls)), 0);
+    }
+
+    #[test]
+    fn random_is_seeded_and_covers_devices() {
+        let ls = loads(4);
+        let seq = |seed| -> Vec<usize> {
+            let mut r = build("random", seed).unwrap();
+            (0..32).map(|u| r.route(&ctx(u, Some(0), Priority::Reactive, &ls))).collect()
+        };
+        assert_eq!(seq(7), seq(7), "same seed, same placements");
+        assert_ne!(seq(7), seq(8), "different seeds diverge");
+        let placed: std::collections::HashSet<usize> = seq(7).into_iter().collect();
+        assert!(placed.len() > 1, "uniform placement spreads");
+    }
+}

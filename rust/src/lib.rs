@@ -43,6 +43,10 @@
 //!   tool-call nodes sharing a session id and a growing conversation
 //!   context, with fan-out/join; multi-turn flows are the linear case
 //!   (paper §1, DESIGN.md §3).
+//! - [`fleet`] — the layer above a single SoC: N per-device engines
+//!   behind a pluggable `RoutePolicy` (sticky-session / least-loaded /
+//!   energy-budget / random), stepped in shared-virtual-clock event
+//!   order, with overload re-placement and conservation ledgers.
 //! - [`metrics`] — TTFT/TPOT/normalized latency, throughput, energy,
 //!   per-flow rollups (DAG makespan vs critical-path lower bound,
 //!   prefix-cache hit-rate).
@@ -57,6 +61,7 @@ pub mod config;
 pub mod coordinator;
 pub mod engine;
 pub mod figures;
+pub mod fleet;
 pub mod heg;
 pub mod macrobench;
 pub mod metrics;

@@ -19,13 +19,14 @@
 //! schedule on every policy (per-step *timings* are measurements, the
 //! schedules themselves are deterministic).
 
-use anyhow::Result;
+use anyhow::{Result, ensure};
 
 use crate::config::{ModelGeometry, SchedulerConfig, SocConfig, default_soc, llama32_3b};
 use crate::engine::{EngineClock, registry};
+use crate::fleet::{Fleet, FleetConfig};
 use crate::util::bench::{fmt_ns, percentile};
 use crate::util::json::Json;
-use crate::workload::{Priority, Request};
+use crate::workload::{Flow, Priority, Request, UserFlow};
 
 /// §8 budget the CI smoke gates on: p99 of one full `step()` — the
 /// engine's dispatch decision point — must stay under this.
@@ -34,6 +35,11 @@ pub const P99_DISPATCH_BUDGET_US: f64 = 5.0;
 /// Trace sizes for the full trajectory run (the smoke run stops at the
 /// first one).
 pub const TRACE_SIZES: [usize; 3] = [10_000, 100_000, 1_000_000];
+
+/// DESIGN.md §9 budget: the fleet layer must be a near-free wrapper —
+/// the per-step p99 of a 1-device fleet minus the bare engine's over
+/// the identical trace stays under this.
+pub const FLEET_OVERHEAD_BUDGET_NS: f64 = 1_000.0;
 
 /// Splitmix-style LCG so the trace needs no external RNG crate.
 struct Lcg(u64);
@@ -153,9 +159,87 @@ fn run_one(policy: &str, trace: Vec<Request>, soc: &SocConfig) -> Result<Json> {
     )
 }
 
+/// Per-step p99 (ns) of the bare `agent-xpu` engine over `trace`.
+fn bare_step_p99_ns(trace: Vec<Request>, soc: &SocConfig) -> Result<f64> {
+    let n = trace.len();
+    let mut eng = registry::build(
+        "agent-xpu",
+        bench_geometry(),
+        soc.clone(),
+        SchedulerConfig::default(),
+    )?;
+    eng.start(EngineClock::Virtual)?;
+    for r in trace {
+        eng.submit(r)?;
+    }
+    let mut step_ns: Vec<f64> = Vec::with_capacity(n * 12);
+    while eng.has_work() {
+        let t = std::time::Instant::now();
+        eng.step()?;
+        step_ns.push(t.elapsed().as_nanos() as f64);
+    }
+    eng.finish()?;
+    step_ns.sort_by(|a, b| a.total_cmp(b));
+    Ok(percentile(&step_ns, 0.99))
+}
+
+/// The fleet-wrapper overhead row (DESIGN.md §9): the same synthetic
+/// trace through the bare `agent-xpu` engine and through a 1-device
+/// fleet (sticky router, unbounded gate — routing cost, not shedding),
+/// reporting both per-step p99s and the delta CI gates against
+/// [`FLEET_OVERHEAD_BUDGET_NS`].
+pub fn fleet_overhead(seed: u64, n: usize) -> Result<Json> {
+    let soc = default_soc();
+    let bare_p99 = bare_step_p99_ns(synthetic_trace(n, seed), &soc)?;
+
+    // Identical trace, wrapped as one single-shot flow per request so
+    // every step goes through routing, gate, and ledger bookkeeping.
+    let inputs: Vec<UserFlow> = synthetic_trace(n, seed)
+        .into_iter()
+        .map(|r| UserFlow {
+            user: r.id % 64,
+            flow: Flow {
+                id: r.id,
+                priority: r.priority,
+                profile: r.profile.clone(),
+                turns: vec![r],
+            },
+        })
+        .collect();
+    let mut cfg = FleetConfig::new(1, "sticky-session", bench_geometry(), soc);
+    cfg.seed = seed;
+    cfg.overload.max_queue_depth = 0;
+    cfg.overload.max_live_flows = 0;
+    let mut fleet = Fleet::new(cfg)?;
+    fleet.enable_step_timing();
+    let rep = fleet.run(inputs)?;
+    ensure!(
+        rep.finished() == n as u64,
+        "fleet overhead run lost requests: {} of {n}",
+        rep.finished()
+    );
+    let mut fleet_ns: Vec<f64> = fleet.step_samples().unwrap_or(&[]).to_vec();
+    fleet_ns.sort_by(|a, b| a.total_cmp(b));
+    let fleet_p99 = percentile(&fleet_ns, 0.99);
+    let overhead = fleet_p99 - bare_p99;
+    println!(
+        "fleet-overhead n={n:>9}  bare p99 {}  fleet p99 {}  overhead {}",
+        fmt_ns(bare_p99),
+        fmt_ns(fleet_p99),
+        fmt_ns(overhead),
+    );
+    Ok(Json::obj()
+        .set("n_reqs", n)
+        .set("bare_p99_ns", Json::num_or_null(bare_p99))
+        .set("fleet_p99_ns", Json::num_or_null(fleet_p99))
+        .set("overhead_p99_ns", Json::num_or_null(overhead))
+        .set("budget_ns", FLEET_OVERHEAD_BUDGET_NS))
+}
+
 /// The whole macro bench: every registry policy at each trace size
-/// (`smoke` = smallest size only, the CI tier-1 gate).  Returns the
-/// `BENCH_sched` JSON document.
+/// (`smoke` = smallest size only, the CI tier-1 gate) plus the
+/// fleet-wrapper overhead row.  Returns the `BENCH_sched` JSON
+/// document.
 pub fn bench_sched(seed: u64, smoke: bool) -> Result<Json> {
     let soc = default_soc();
     let sizes: &[usize] = if smoke { &TRACE_SIZES[..1] } else { &TRACE_SIZES[..] };
@@ -170,8 +254,10 @@ pub fn bench_sched(seed: u64, smoke: bool) -> Result<Json> {
         .set("seed", seed as i64)
         .set("smoke", smoke)
         .set("budget_p99_dispatch_us", P99_DISPATCH_BUDGET_US)
+        .set("budget_fleet_overhead_ns", FLEET_OVERHEAD_BUDGET_NS)
         .set("sizes", sizes.to_vec())
-        .set("rows", rows))
+        .set("rows", rows)
+        .set("fleet_overhead", fleet_overhead(seed, TRACE_SIZES[0])?))
 }
 
 #[cfg(test)]
@@ -219,5 +305,18 @@ mod tests {
             assert!(j.get("steps").unwrap().as_usize().unwrap() > 0);
             assert!(j.get("step_ns").unwrap().get("p99").unwrap().as_f64().is_ok());
         }
+    }
+
+    /// The fleet-overhead row completes its whole trace through the
+    /// 1-device fleet and serializes the fields CI gates on (the
+    /// budget comparison itself runs at bench scale, not here).
+    #[test]
+    fn fleet_overhead_row_completes_and_serializes() {
+        let row = fleet_overhead(7, 80).unwrap();
+        let j = Json::parse(&row.to_string()).unwrap();
+        assert_eq!(j.get("n_reqs").unwrap().as_usize().unwrap(), 80);
+        assert!(j.get("bare_p99_ns").unwrap().as_f64().is_ok());
+        assert!(j.get("fleet_p99_ns").unwrap().as_f64().is_ok());
+        assert!(j.get("overhead_p99_ns").unwrap().as_f64().is_ok());
     }
 }

@@ -1,7 +1,7 @@
 //! `agent-xpu` — launcher CLI.
 //!
 //! ```text
-//! agent-xpu fig <affinity|contention|batching|schemes|proactive|mixed|flows|workflows|elastic|energy|overload|ablation|all>
+//! agent-xpu fig <affinity|contention|batching|schemes|proactive|mixed|flows|workflows|elastic|energy|overload|fleet|ablation|all>
 //!           [--out results/] [--duration 120] [--seed 7] [--smoke]
 //! agent-xpu bench macro [--smoke] [--seed 42] [--out results/]
 //! agent-xpu run --rate 1.5 --interval 12 --duration 60 [--engine <policy>]
@@ -11,6 +11,7 @@
 //!           [--synthetic] [--journal path.waj]
 //!           [--max-queue-depth 256] [--max-live-flows 1024]
 //! agent-xpu policies
+//! agent-xpu routers
 //! agent-xpu inspect --artifacts artifacts/small
 //! agent-xpu soc-probe
 //! ```
@@ -51,11 +52,12 @@ fn run() -> Result<()> {
         Some("run") => cmd_run(&args),
         Some("serve") => cmd_serve(&args),
         Some("policies") => cmd_policies(),
+        Some("routers") => cmd_routers(),
         Some("inspect") => cmd_inspect(&args),
         Some("soc-probe") => cmd_soc_probe(),
         _ => {
             eprintln!(
-                "usage: agent-xpu <fig|bench|run|serve|policies|inspect|soc-probe> [flags]\n\
+                "usage: agent-xpu <fig|bench|run|serve|policies|routers|inspect|soc-probe> [flags]\n\
                  see `rust/src/main.rs` docs for flags"
             );
             Ok(())
@@ -70,6 +72,21 @@ fn cmd_policies() -> Result<()> {
     }
     println!("aliases: agent.xpu, llamacpp, preempt-restart, time-share,");
     println!("         continuous-batching, edf");
+    Ok(())
+}
+
+/// `agent-xpu routers` — the fleet-layer session routers, listed
+/// alongside the per-device scheduling policies they compose with
+/// (`FleetConfig { router, policy }`).
+fn cmd_routers() -> Result<()> {
+    println!("registered fleet routers (fleet::route):");
+    for name in agent_xpu::fleet::route::names() {
+        println!("  {name}");
+    }
+    println!("per-device scheduling policies (engine::registry):");
+    for name in registry::names() {
+        println!("  {name}");
+    }
     Ok(())
 }
 
@@ -159,6 +176,13 @@ fn cmd_fig(args: &Args) -> Result<()> {
         // every registry policy
         let d = if args.bool_or("smoke", false) { 12.0 } else { duration.min(30.0) };
         do_fig("fig_overload", figures::fig_overload(&soc, d, seed)?)?;
+        ran = true;
+    }
+    if which == "fleet" || which == "all" {
+        // --smoke: 2/4-device sweep at a short duration; still every
+        // registered router across both arrival scenarios
+        let d = if args.bool_or("smoke", false) { 10.0 } else { duration };
+        do_fig("fig_fleet", figures::fig_fleet(&soc, d, seed)?)?;
         ran = true;
     }
     if which == "ablation" || which == "all" {

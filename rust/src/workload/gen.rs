@@ -4,7 +4,7 @@
 use crate::util::rng::Rng;
 
 use super::flow::{Flow, FlowBinding, FlowId, NodeKind};
-use super::profiles::TraceProfile;
+use super::profiles::{TraceProfile, profile};
 use super::request::{Priority, ReqId, Request};
 
 /// Parameters of one generated workload stream.
@@ -450,6 +450,93 @@ pub fn merge_traces(mut streams: Vec<Vec<Request>>) -> Vec<Request> {
     let mut all: Vec<Request> = streams.drain(..).flatten().collect();
     all.sort_by(|a, b| a.arrival_us.total_cmp(&b.arrival_us));
     all
+}
+
+/// One user's multi-turn flow — the fleet router's unit of input
+/// (DESIGN.md §9): routing decisions key on `user`, session affinity
+/// keys on `flow.id`.
+#[derive(Debug, Clone)]
+pub struct UserFlow {
+    pub user: u64,
+    pub flow: Flow,
+}
+
+/// Parameters of a multi-user fleet trace: `users` users with
+/// Zipf-skewed activity (user `u` opens flows at a rate ∝
+/// `(u+1)^-zipf_exponent`, normalised so the *mean* per-user rate is
+/// the configured one).  Each user mixes reactive chat flows (LMSys
+/// lengths, ~8 s think) with proactive monitor flows (ProactiveBench
+/// lengths, ~20 s event gaps) — the same mix as `fig workflows`, but
+/// attributed to users so a router can observe the skew.
+#[derive(Debug, Clone)]
+pub struct FleetSpec {
+    pub users: usize,
+    /// Zipf exponent of the user-activity skew; 0 = uniform users.
+    pub zipf_exponent: f64,
+    /// Mean chat-flow starts per user per second.
+    pub chat_rate_per_s: f64,
+    /// Mean monitor-flow starts per user per second.
+    pub monitor_rate_per_s: f64,
+    pub duration_s: f64,
+    pub seed: u64,
+    /// Context budget (the model's max_seq).
+    pub max_seq: usize,
+}
+
+/// Generate the fleet trace: per-user chat + monitor flows, returned
+/// sorted by root arrival (then flow id).  Ids are globally unique
+/// across users and streams.
+pub fn fleet_user_flows(spec: &FleetSpec, vocab: usize) -> Vec<UserFlow> {
+    assert!(spec.users > 0, "fleet trace needs at least one user");
+    let chat = profile("lmsys").expect("lmsys profile");
+    let monitor = profile("proactivebench").expect("proactivebench profile");
+    // Zipf-ish weights, normalised to mean 1 so total fleet load is
+    // independent of the skew exponent.
+    let raw: Vec<f64> =
+        (0..spec.users).map(|u| 1.0 / ((u + 1) as f64).powf(spec.zipf_exponent)).collect();
+    let mean = raw.iter().sum::<f64>() / spec.users as f64;
+    let mut out: Vec<UserFlow> = vec![];
+    let mut next_id: ReqId = 0;
+    let mut next_flow: FlowId = 0;
+    for (u, w) in raw.iter().enumerate() {
+        let weight = w / mean;
+        // Distinct deterministic seed per (user, stream).
+        let mix = |salt: u64| {
+            spec.seed ^ (u as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15).wrapping_add(salt)
+        };
+        for (prof, rate, think_s, turns, prio, salt) in [
+            (chat, spec.chat_rate_per_s, 8.0, (2, 5), Priority::Reactive, 1),
+            (monitor, spec.monitor_rate_per_s, 20.0, (2, 4), Priority::Proactive, 2),
+        ] {
+            let flows = flow_trace(
+                &FlowSpec {
+                    profile: prof,
+                    flow_rate_per_s: rate * weight,
+                    think_time_s: think_s,
+                    turns,
+                    duration_s: spec.duration_s,
+                    seed: mix(salt),
+                    max_seq: spec.max_seq,
+                },
+                prio,
+                vocab,
+                next_id,
+                next_flow,
+            );
+            for f in flows {
+                next_id += f.total_turns() as ReqId;
+                next_flow += 1;
+                out.push(UserFlow { user: u as u64, flow: f });
+            }
+        }
+    }
+    out.sort_by(|a, b| {
+        a.flow
+            .first_arrival_us()
+            .total_cmp(&b.flow.first_arrival_us())
+            .then(a.flow.id.cmp(&b.flow.id))
+    });
+    out
 }
 
 #[cfg(test)]

@@ -24,8 +24,8 @@ mod request;
 
 pub use flow::{Flow, FlowBinding, FlowId, NodeKind, flatten_flows};
 pub use gen::{
-    DagShape, DagSpec, FlowSpec, WorkloadSpec, dag_flow_trace, flow_trace, merge_traces,
-    proactive_trace, reactive_trace,
+    DagShape, DagSpec, FleetSpec, FlowSpec, UserFlow, WorkloadSpec, dag_flow_trace,
+    fleet_user_flows, flow_trace, merge_traces, proactive_trace, reactive_trace,
 };
 pub use profiles::{TraceProfile, profile, profiles};
 pub use request::{Priority, ProfileTag, ReqId, Request};

@@ -1,0 +1,198 @@
+//! Property tests over the fleet layer (DESIGN.md §9): every
+//! registered router, on seeded multi-user traces, upholds the fleet
+//! invariants:
+//!
+//!  - determinism: identical (trace, seed, router) → bit-identical
+//!    schedules across every device;
+//!  - energy rollup: the per-device `total_energy_j` values serialized
+//!    into the report sum to the fleet rollup;
+//!  - conservation: per device `submitted == done + cancelled`, and
+//!    every flow ends finished or dead-with-shed-accounting — even
+//!    under a deliberately tiny admission gate that forces the
+//!    rejection → re-route → park → retry path ([`RouteError`]).
+//!
+//! [`RouteError`]: agent_xpu::fleet::RouteError
+
+use agent_xpu::config::{default_soc, llama32_3b};
+use agent_xpu::fleet::{Fleet, FleetConfig, FleetReport, route};
+use agent_xpu::util::json::Json;
+use agent_xpu::workload::{FleetSpec, UserFlow, fleet_user_flows};
+
+/// A small mixed-class multi-user trace (reactive chats + proactive
+/// monitors across `users` zipf-weighted users).
+fn trace(users: usize, duration_s: f64, seed: u64) -> Vec<UserFlow> {
+    let geo = llama32_3b();
+    fleet_user_flows(
+        &FleetSpec {
+            users,
+            zipf_exponent: 0.8,
+            chat_rate_per_s: 0.15,
+            monitor_rate_per_s: 0.08,
+            duration_s,
+            seed,
+            max_seq: geo.max_seq,
+        },
+        geo.vocab,
+    )
+}
+
+fn run(router: &str, n_devices: usize, inputs: Vec<UserFlow>, seed: u64) -> FleetReport {
+    let mut cfg = FleetConfig::new(n_devices, router, llama32_3b(), default_soc());
+    cfg.seed = seed;
+    Fleet::new(cfg).unwrap().run(inputs).unwrap()
+}
+
+/// FNV-style fingerprint of everything schedule-shaped in a fleet
+/// report: per-device request lifecycles at full f64 precision plus
+/// the routing counters.  Equal fingerprints ⇒ identical schedules.
+fn fingerprint(rep: &FleetReport) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut mix = |v: u64| {
+        h ^= v;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    for (di, d) in rep.devices.iter().enumerate() {
+        mix(di as u64);
+        mix(d.reqs.len() as u64);
+        for m in &d.reqs {
+            mix(m.id);
+            mix(m.arrival_us.to_bits());
+            mix(m.first_token_us.map_or(0, f64::to_bits));
+            mix(m.done_us.map_or(0, f64::to_bits));
+            mix(m.output_tokens as u64);
+        }
+        mix(d.total_energy_j.to_bits());
+    }
+    let c = &rep.counters;
+    for v in [
+        c.flows,
+        c.flows_finished,
+        c.flows_dead,
+        c.migrations,
+        c.overload_reroutes,
+        c.rejections,
+        c.retries,
+        c.displaced,
+        c.shed_turns,
+        c.continuation_turns,
+        c.continuation_warm,
+    ] {
+        mix(v);
+    }
+    h
+}
+
+#[test]
+fn every_router_is_seed_deterministic() {
+    for &router in route::names() {
+        let a = run(router, 3, trace(5, 8.0, 21), 21);
+        let b = run(router, 3, trace(5, 8.0, 21), 21);
+        assert_eq!(
+            fingerprint(&a),
+            fingerprint(&b),
+            "router {router} must be deterministic under a fixed seed"
+        );
+        let c = run(router, 3, trace(5, 8.0, 22), 22);
+        assert!(
+            fingerprint(&a) != fingerprint(&c) || a.finished() == 0,
+            "router {router}: a different seed should change the schedule"
+        );
+    }
+}
+
+#[test]
+fn device_energy_sums_to_fleet_rollup() {
+    for &router in route::names() {
+        let rep = run(router, 3, trace(5, 8.0, 33), 33);
+        let j = Json::parse(&rep.to_json().to_string()).unwrap();
+        let total = j.get("total_energy_j").unwrap().as_f64().unwrap();
+        let sum: f64 = j
+            .get("devices")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|d| d.get("total_energy_j").unwrap().as_f64().unwrap())
+            .sum();
+        assert!(
+            (total - sum).abs() <= 1e-9 * total.max(1.0),
+            "router {router}: rollup {total} J != device sum {sum} J"
+        );
+        assert!(total > 0.0, "router {router}: a served trace burns energy");
+    }
+}
+
+#[test]
+fn conservation_holds_per_device_and_per_flow() {
+    for &router in route::names() {
+        let rep = run(router, 3, trace(5, 8.0, 44), 44);
+        for (di, l) in rep.ledgers.iter().enumerate() {
+            assert_eq!(
+                l.submitted,
+                l.done + l.cancelled,
+                "router {router} device {di}: ledger imbalance"
+            );
+        }
+        let c = &rep.counters;
+        assert_eq!(
+            c.flows,
+            c.flows_finished + c.flows_dead,
+            "router {router}: every flow finishes or is accounted dead"
+        );
+        assert!(c.flows_finished > 0, "router {router}: the trace must make progress");
+    }
+}
+
+/// The overload regression (DESIGN.md §9): a deliberately tiny gate
+/// forces every-device rejections, so turns take the re-route → park →
+/// retry path — and still nothing admitted is silently dropped.
+#[test]
+fn no_admitted_turn_dropped_under_forced_overload() {
+    for &router in route::names() {
+        let geo = llama32_3b();
+        let inputs = fleet_user_flows(
+            &FleetSpec {
+                users: 4,
+                zipf_exponent: 0.5,
+                chat_rate_per_s: 0.8,
+                monitor_rate_per_s: 0.4,
+                duration_s: 6.0,
+                seed: 55,
+                max_seq: geo.max_seq,
+            },
+            geo.vocab,
+        );
+        let total_turns: u64 = inputs.iter().map(|uf| uf.flow.turns.len() as u64).sum();
+        let mut cfg = FleetConfig::new(2, router, geo, default_soc());
+        cfg.seed = 55;
+        cfg.overload.max_queue_depth = 2;
+        cfg.overload.retry_after_ms = 50.0;
+        let rep = Fleet::new(cfg).unwrap().run(inputs).unwrap();
+
+        let c = &rep.counters;
+        assert!(
+            c.rejections > 0,
+            "router {router}: the tiny gate must actually reject (got {c:?})"
+        );
+        assert_eq!(c.retries, c.rejections, "every parked turn is retried, once per park");
+        // Turn accounting: a turn completes at most once; every turn is
+        // covered by a completion, a cancel (migration bookkeeping or a
+        // dead flow's in-flight kill), or a dead flow's shed record —
+        // migration double-counts (cancel + done) only inflate the
+        // left side, never hide a loss.
+        let done: u64 = rep.ledgers.iter().map(|l| l.done).sum();
+        let cancelled: u64 = rep.ledgers.iter().map(|l| l.cancelled).sum();
+        assert!(done <= total_turns, "router {router}: a turn must finish at most once");
+        assert!(
+            done + cancelled + c.shed_turns >= total_turns,
+            "router {router}: turn accounting must cover the whole trace \
+             (done {done} + cancelled {cancelled} + shed {} < {total_turns})",
+            c.shed_turns
+        );
+        if c.flows_dead == 0 {
+            assert_eq!(done, total_turns, "router {router}: no deaths ⇒ every turn finishes");
+        }
+        assert_eq!(c.flows, c.flows_finished + c.flows_dead, "router {router}");
+        assert!(c.flows_finished > 0, "router {router}: overload must not starve everyone");
+    }
+}
