@@ -131,6 +131,7 @@ impl SchedPolicy for DeadlinePolicy {
         EDF_KEYS.with_borrow_mut(|(reactive, proactive)| {
             reactive.clear();
             proactive.clear();
+            // lint:allow(no-unordered-iteration) keys collected then sorted by the (deadline, id) total key below
             for st in states.values() {
                 if st.phase != Phase::Decoding || st.running {
                     continue;

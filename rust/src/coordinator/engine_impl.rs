@@ -67,7 +67,7 @@ impl PolicyEngine<AgentXpuPolicy> {
 /// Reference scan for the waiting-proactive-prefill index.
 fn scan_waiting_proactive(states: &States) -> Vec<ReqId> {
     let mut v: Vec<ReqId> = states
-        .values()
+        .values() // lint:allow(no-unordered-iteration) collected then sorted by id below
         .filter(|s| s.phase == Phase::Prefilling && !s.running && !s.is_reactive())
         .map(|s| s.id())
         .collect();
@@ -78,7 +78,7 @@ fn scan_waiting_proactive(states: &States) -> Vec<ReqId> {
 /// Reference scan for the waiting-reactive-prefill index.
 fn scan_waiting_reactive(states: &States) -> Vec<ReqId> {
     let mut v: Vec<ReqId> = states
-        .values()
+        .values() // lint:allow(no-unordered-iteration) collected then sorted by id below
         .filter(|s| s.phase == Phase::Prefilling && !s.running && s.is_reactive())
         .map(|s| s.id())
         .collect();
@@ -89,7 +89,7 @@ fn scan_waiting_reactive(states: &States) -> Vec<ReqId> {
 /// Reference scan for the waiting-prefill union (deadlock guard).
 fn scan_waiting_prefills(states: &States) -> Vec<ReqId> {
     let mut v: Vec<ReqId> = states
-        .values()
+        .values() // lint:allow(no-unordered-iteration) collected then sorted by id below
         .filter(|s| s.phase == Phase::Prefilling && !s.running)
         .map(|s| s.id())
         .collect();
@@ -100,7 +100,7 @@ fn scan_waiting_prefills(states: &States) -> Vec<ReqId> {
 /// Reference scan for the dynamic-margin-chunk index, per class.
 fn scan_dynamic_chunks(states: &States, reactive: bool) -> Vec<ReqId> {
     let mut v: Vec<ReqId> = states
-        .values()
+        .values() // lint:allow(no-unordered-iteration) collected then sorted by id below
         .filter(|s| {
             s.phase == Phase::Prefilling
                 && !s.running
@@ -129,7 +129,7 @@ fn reactive_active(states: &States) -> bool {
 /// Reference scan for preemption victims, sorted like the index walk.
 fn scan_preemption_victims(states: &States) -> Vec<ReqId> {
     let mut v: Vec<ReqId> = states
-        .values()
+        .values() // lint:allow(no-unordered-iteration) collected then sorted by id below
         .filter(|s| {
             !s.is_reactive()
                 && s.phase == Phase::Prefilling
@@ -148,7 +148,7 @@ fn scan_preemption_victims(states: &States) -> Vec<ReqId> {
 /// cut in two (§5.2 elastic splitting).
 fn scan_split_candidates(states: &States) -> Vec<ReqId> {
     let mut v: Vec<ReqId> = states
-        .values()
+        .values() // lint:allow(no-unordered-iteration) collected then sorted by id below
         .filter(|s| {
             !s.is_reactive()
                 && s.phase == Phase::Prefilling

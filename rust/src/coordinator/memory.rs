@@ -96,7 +96,7 @@ impl MemoryGovernor {
     /// tasks are never evicted — their work is nearly done).
     pub fn eviction_victim(&self, states: &States) -> Option<ReqId> {
         states
-            .values()
+            .values() // lint:allow(no-unordered-iteration) min_by_key over the (cursor, id) total key — order-free
             .filter(|s| {
                 !s.is_reactive()
                     && s.phase == Phase::Prefilling

@@ -122,6 +122,7 @@ pub fn decode_lanes(
     LANE_KEYS.with_borrow_mut(|(reactive, proactive)| {
         reactive.clear();
         proactive.clear();
+        // lint:allow(no-unordered-iteration) lane keys collected then sorted by the (enqueue time, id) total key below
         for st in states.values() {
             if st.phase != Phase::Decoding || st.running {
                 continue;

@@ -42,6 +42,7 @@ pub enum EngineClock {
 impl EngineClock {
     /// A wall clock whose epoch is now.
     pub fn wall() -> Self {
+        // lint:allow(no-wall-clock) the one sanctioned wall-clock epoch — only the server constructs it; DES runs never do
         EngineClock::Wall { t0: Instant::now() }
     }
 

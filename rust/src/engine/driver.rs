@@ -350,6 +350,7 @@ impl Driver {
             None => false,
         };
         if held {
+            // lint:allow(panic-free-hot-path) held is only true when req.flow is Some
             let fid = req.flow_id().expect("held node has a flow");
             let key = (req.turn_idx(), req.id);
             let chain = self.held.entry(fid).or_default();
@@ -559,6 +560,7 @@ impl Driver {
             .map(|r| r.arrival_us <= self.now() + 1e-9)
             .unwrap_or(false)
         {
+            // lint:allow(panic-free-hot-path) the while condition proves front() is Some
             let req = self.pending.pop_front().unwrap();
             let id = req.id;
             if req.is_tool() {
@@ -624,6 +626,7 @@ impl Driver {
     }
 
     fn mark_running(&mut self, id: ReqId) {
+        // lint:allow(panic-free-hot-path) launches come from the phase index, which only holds admitted ids
         let st = self.states.get_mut(&id).expect("launch for unknown req");
         assert!(!st.running, "request {id} already has a kernel in flight");
         st.running = true;
@@ -681,6 +684,7 @@ impl Driver {
             self.tool_wait.push_front(req);
             return None;
         }
+        // lint:allow(panic-free-hot-path) every launched run is in exactly one inflight table; tool_inflight was checked above
         let tag = self.inflight.remove(&run).expect("cancelled unknown run");
         match &tag {
             KernelTag::Prefill { req } => self.mark_stopped(*req),
@@ -750,6 +754,7 @@ impl Driver {
     pub fn cancel_request(&mut self, id: ReqId) -> bool {
         // not yet admitted
         if let Some(i) = self.pending.iter().position(|r| r.id == id) {
+            // lint:allow(panic-free-hot-path) i came from position() on this deque
             let req = self.pending.remove(i).unwrap();
             let fid = req.flow_id();
             self.retire_cancelled_request(req);
@@ -760,6 +765,7 @@ impl Driver {
         }
         // ready tool node waiting for the CPU
         if let Some(i) = self.tool_wait.iter().position(|r| r.id == id) {
+            // lint:allow(panic-free-hot-path) i came from position() on this deque
             let req = self.tool_wait.remove(i).unwrap();
             let fid = req.flow_id();
             self.retire_cancelled_request(req);
@@ -771,13 +777,14 @@ impl Driver {
         // tool kernel in flight on the CPU: abort it
         if let Some(run) = self
             .tool_inflight
-            .iter()
+            .iter() // lint:allow(no-unordered-iteration) req ids are unique — at most one entry matches
             .find(|(_, r)| r.id == id)
             .map(|(run, _)| *run)
         {
             if let Some(xpu) = self.sim.xpu_of(run) {
                 self.sim.cancel(xpu);
             }
+            // lint:allow(panic-free-hot-path) run was just found in this map
             let req = self.tool_inflight.remove(&run).unwrap();
             let fid = req.flow_id();
             self.retire_cancelled_request(req);
@@ -789,12 +796,13 @@ impl Driver {
         // held behind DAG predecessors
         if let Some(fid) = self
             .held
-            .iter()
+            .iter() // lint:allow(no-unordered-iteration) req ids are unique — at most one chain matches
             .find(|(_, c)| c.iter().any(|r| r.id == id))
             .map(|(fid, _)| *fid)
         {
+            // lint:allow(panic-free-hot-path) fid and the id were just found in held
             let chain = self.held.get_mut(&fid).unwrap();
-            let i = chain.iter().position(|r| r.id == id).unwrap();
+            let i = chain.iter().position(|r| r.id == id).unwrap(); // lint:allow(panic-free-hot-path) the find above proves membership
             let node = chain.remove(i);
             if chain.is_empty() {
                 self.held.remove(&fid);
@@ -817,6 +825,7 @@ impl Driver {
             return false;
         }
         if running {
+            // lint:allow(no-unordered-iteration) a request has at most one prefill kernel in flight
             let prefill_run = self.inflight.iter().find_map(|(run, tag)| match tag {
                 KernelTag::Prefill { req } if *req == id => Some(*run),
                 _ => None,
@@ -832,6 +841,7 @@ impl Driver {
                     // mid decode batch: the iteration finishes, the
                     // lane retires at the boundary
                     let turn = self.states[&id].req.turn_idx();
+                    // lint:allow(panic-free-hot-path) id was found in states at the top of this fn
                     self.states.get_mut(&id).unwrap().cancelled = true;
                     if let Some(fid) = fid {
                         self.mark_node_dead(fid, turn);
@@ -841,6 +851,7 @@ impl Driver {
                 }
             }
         }
+        // lint:allow(panic-free-hot-path) id was found in states at the top of this fn
         let st = self.states.remove(&id).unwrap();
         self.reindex(id);
         self.retire_cancelled_state(st);
@@ -882,6 +893,7 @@ impl Driver {
                 })
             };
             let Some(i) = victim else { break };
+            // lint:allow(panic-free-hot-path) victim was found inside held[fid] just above
             let chain = self.held.get_mut(&fid).unwrap();
             let node = chain.remove(i);
             if chain.is_empty() {
@@ -975,10 +987,12 @@ impl Driver {
             return;
         }
         let mut live: FxHashSet<FlowId> = FxHashSet::default();
-        live.extend(self.held.keys().copied());
+        live.extend(self.held.keys().copied()); // lint:allow(no-unordered-iteration) feeds a membership-only set
         live.extend(self.pending.iter().filter_map(|r| r.flow_id()));
         live.extend(self.tool_wait.iter().filter_map(|r| r.flow_id()));
+        // lint:allow(no-unordered-iteration) feeds a membership-only set
         live.extend(self.tool_inflight.values().filter_map(|r| r.flow_id()));
+        // lint:allow(no-unordered-iteration) feeds a membership-only set
         live.extend(self.states.values().filter_map(|s| s.req.flow_id()));
         let target = (self.flow_cap / 2).max(1);
         let excess = self.flows.len().saturating_sub(target);
@@ -1365,6 +1379,7 @@ impl Driver {
         }
         let now = self.now();
         for mut nxt in ready {
+            // lint:allow(panic-free-hot-path) only flow-bound nodes are ever held
             let fb = nxt.flow.clone().expect("held node has a binding");
             if fb.delta_start > 0 {
                 self.stitch(&mut nxt, &fb);
@@ -1423,7 +1438,7 @@ impl Driver {
     pub fn idle_in_phase(&self, phase: Phase) -> Vec<ReqId> {
         let mut v: Vec<ReqId> = self
             .states
-            .values()
+            .values() // lint:allow(no-unordered-iteration) collected then sorted by id below
             .filter(|s| s.phase == phase && !s.running)
             .map(|s| s.id())
             .collect();
@@ -1443,7 +1458,7 @@ impl Driver {
             engine,
             reqs: {
                 let mut v: Vec<_> =
-                    self.states.into_values().map(|s| s.metrics).collect();
+                    self.states.into_values().map(|s| s.metrics).collect(); // lint:allow(no-unordered-iteration) sorted by id below
                 v.extend(self.retired);
                 v.sort_by_key(|m| m.id);
                 v

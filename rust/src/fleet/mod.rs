@@ -603,6 +603,7 @@ impl Fleet {
 
     /// Step one device and fold its events into fleet state.
     fn step_device(&mut self, di: usize) -> Result<()> {
+        // lint:allow(no-wall-clock) opt-in overhead instrumentation — never feeds scheduling decisions
         let t0 = self.timing.as_ref().map(|_| std::time::Instant::now());
         let events = self.devices[di].engine.step()?;
         for ev in &events {

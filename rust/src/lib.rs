@@ -55,6 +55,10 @@
 //!   KV alive across calls, a `deps` field for online workflow DAGs,
 //!   and a `cancel` verb for in-flight aborts.
 //! - [`trace`] — kernel-level execution traces for figures + debugging.
+//! - [`lint`] — the repo-native architectural lint pass (`agent-xpu
+//!   lint`, DESIGN.md §10): statically enforces the determinism,
+//!   lock-hygiene, panic-freedom, SAFETY-comment, JSON-hygiene, and
+//!   registry-coverage invariants the fingerprint gates assume.
 
 pub mod baselines;
 pub mod config;
@@ -63,6 +67,7 @@ pub mod engine;
 pub mod figures;
 pub mod fleet;
 pub mod heg;
+pub mod lint;
 pub mod macrobench;
 pub mod metrics;
 pub mod model;

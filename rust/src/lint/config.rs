@@ -1,0 +1,161 @@
+//! Lint configuration: which modules are deterministic-core, where
+//! each module-scoped rule applies, and where the policy registries
+//! live.  The checked-in `rust/lint.json` is the source of truth the
+//! CLI loads; [`LintConfig::default_config`] mirrors it so library
+//! callers (tests, fixtures) can build scoped variants directly.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct LintConfig {
+    /// Default scan roots, relative to the crate dir.
+    pub paths: Vec<String>,
+    /// Path fragments excluded from the walk (the fixture corpus holds
+    /// deliberate violations).
+    pub exclude: Vec<String>,
+    /// The deterministic core: modules whose schedules the fingerprint
+    /// gates pin bit-for-bit.  `no-wall-clock` and
+    /// `no-unordered-iteration` apply here.
+    pub deterministic_core: Vec<String>,
+    /// Core paths where wall-clock reads are nonetheless sanctioned
+    /// (none today — prefer a per-site `lint:allow` with a reason).
+    pub wall_clock_allowed: Vec<String>,
+    /// Type names treated as unordered maps/sets by
+    /// `no-unordered-iteration`.
+    pub map_types: Vec<String>,
+    /// Files under the `panic-free-hot-path` rule (the per-step
+    /// decision path).
+    pub panic_free: Vec<String>,
+    /// Figure/report serializer paths under the `json-hygiene` rule.
+    pub json_hygiene: Vec<String>,
+    /// Registry files for `registry-coverage`.
+    pub sched_registry: String,
+    pub route_registry: String,
+}
+
+impl LintConfig {
+    /// Mirrors the checked-in `lint.json`.
+    pub fn default_config() -> Self {
+        LintConfig {
+            paths: vec!["src".into(), "tests".into()],
+            exclude: vec!["tests/lint_fixtures".into()],
+            deterministic_core: vec![
+                "src/engine/".into(),
+                "src/coordinator/".into(),
+                "src/heg/".into(),
+                "src/soc/".into(),
+                "src/fleet/".into(),
+                "src/workload/".into(),
+                "src/baselines/".into(),
+            ],
+            wall_clock_allowed: vec![],
+            map_types: vec![
+                "HashMap".into(),
+                "HashSet".into(),
+                "FxHashMap".into(),
+                "FxHashSet".into(),
+                "States".into(),
+            ],
+            panic_free: vec![
+                "src/coordinator/dispatch.rs".into(),
+                "src/coordinator/select.rs".into(),
+                "src/engine/driver.rs".into(),
+            ],
+            json_hygiene: vec!["src/figures/".into(), "src/metrics/".into()],
+            sched_registry: "src/engine/registry.rs".into(),
+            route_registry: "src/fleet/route.rs".into(),
+        }
+    }
+
+    /// Load `<root>/lint.json` if present, else the built-in default.
+    pub fn load_or_default(root: &Path) -> Result<Self> {
+        let path = root.join("lint.json");
+        if !path.exists() {
+            return Ok(Self::default_config());
+        }
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        Self::from_json(&j)
+    }
+
+    /// Build from a parsed `lint.json`; missing keys fall back to the
+    /// built-in default.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut cfg = Self::default_config();
+        read_strs(j, "paths", &mut cfg.paths)?;
+        read_strs(j, "exclude", &mut cfg.exclude)?;
+        read_strs(j, "deterministic_core", &mut cfg.deterministic_core)?;
+        read_strs(j, "wall_clock_allowed", &mut cfg.wall_clock_allowed)?;
+        read_strs(j, "map_types", &mut cfg.map_types)?;
+        read_strs(j, "panic_free", &mut cfg.panic_free)?;
+        read_strs(j, "json_hygiene", &mut cfg.json_hygiene)?;
+        if let Some(v) = j.opt("sched_registry") {
+            cfg.sched_registry = v.as_str()?.to_string();
+        }
+        if let Some(v) = j.opt("route_registry") {
+            cfg.route_registry = v.as_str()?.to_string();
+        }
+        Ok(cfg)
+    }
+
+    pub fn in_core(&self, rel: &str) -> bool {
+        path_in(rel, &self.deterministic_core)
+    }
+
+    pub fn is_map_type(&self, name: &str) -> bool {
+        self.map_types.iter().any(|m| m == name)
+    }
+}
+
+/// Prefix match on `/`-normalized relative paths.
+pub fn path_in(rel: &str, prefixes: &[String]) -> bool {
+    prefixes.iter().any(|p| rel.starts_with(p.as_str()))
+}
+
+fn read_strs(j: &Json, key: &str, out: &mut Vec<String>) -> Result<()> {
+    if let Some(v) = j.opt(key) {
+        let mut items = Vec::new();
+        for e in v.as_arr()? {
+            items.push(e.as_str()?.to_string());
+        }
+        *out = items;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_scopes_the_core() {
+        let cfg = LintConfig::default_config();
+        assert!(cfg.in_core("src/engine/driver.rs"));
+        assert!(cfg.in_core("src/fleet/route.rs"));
+        assert!(!cfg.in_core("src/server/rt.rs"));
+        assert!(!cfg.in_core("src/util/bench.rs"));
+        assert!(cfg.is_map_type("States"));
+        assert!(!cfg.is_map_type("BTreeMap"));
+    }
+
+    #[test]
+    fn json_overrides_apply_and_missing_keys_default() {
+        let j = Json::parse(
+            r#"{"deterministic_core": ["src/x/"], "sched_registry": "src/r.rs"}"#,
+        )
+        .unwrap();
+        let cfg = LintConfig::from_json(&j).unwrap();
+        assert!(cfg.in_core("src/x/mod.rs"));
+        assert!(!cfg.in_core("src/engine/driver.rs"));
+        assert_eq!(cfg.sched_registry, "src/r.rs");
+        // untouched keys keep the built-in default
+        assert_eq!(cfg.route_registry, "src/fleet/route.rs");
+        assert!(cfg.exclude.iter().any(|e| e.contains("lint_fixtures")));
+    }
+}

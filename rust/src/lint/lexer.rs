@@ -1,0 +1,369 @@
+//! Token-level Rust scanner for the architectural lint pass.
+//!
+//! In the crate's own-your-tools style (`util/json.rs`,
+//! `util/fxhash.rs`): a small, dependency-free lexer that is exact
+//! about the things the rules need — comments (kept out of the token
+//! stream but retained per line, for `SAFETY:` and `lint:allow`
+//! detection), string/char/lifetime disambiguation, nested block
+//! comments, raw strings — and deliberately shallow about everything
+//! else.  It is not a parser; the rule layer pattern-matches short
+//! token sequences and tracks brace/bracket depth where needed.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Coarse token class — enough to tell identifiers from punctuation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    Num,
+    /// String, byte-string, or char literal.  The text is a fixed
+    /// sentinel so literal contents can never spoof an identifier
+    /// match in a rule.
+    Str,
+    Lifetime,
+    Punct,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub line: u32,
+    pub kind: Kind,
+    pub text: String,
+}
+
+/// Lexed view of one source file.
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    /// Comment text per *starting* line (concatenated if several).
+    pub comment_text: BTreeMap<u32, String>,
+    /// Every line any comment touches (block comments span many).
+    pub comment_lines: BTreeSet<u32>,
+    /// Every line holding at least one code token.
+    pub code_lines: BTreeSet<u32>,
+}
+
+impl Lexed {
+    pub fn comment_on(&self, line: u32) -> Option<&str> {
+        self.comment_text.get(&line).map(|s| s.as_str())
+    }
+}
+
+const STR_SENTINEL: &str = "\u{ab}str\u{bb}";
+
+pub fn lex(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let mut out = Lexed {
+        toks: Vec::new(),
+        comment_text: BTreeMap::new(),
+        comment_lines: BTreeSet::new(),
+        code_lines: BTreeSet::new(),
+    };
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < b.len() {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_ascii_whitespace() {
+            i += 1;
+            continue;
+        }
+        // line comment (incl. doc comments)
+        if c == b'/' && i + 1 < b.len() && b[i + 1] == b'/' {
+            let start = i;
+            while i < b.len() && b[i] != b'\n' {
+                i += 1;
+            }
+            record_comment(&mut out, line, &src[start..i]);
+            continue;
+        }
+        // block comment, nested
+        if c == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+            let start = i;
+            let start_line = line;
+            let mut depth = 1;
+            i += 2;
+            while i < b.len() && depth > 0 {
+                if b[i] == b'\n' {
+                    line += 1;
+                    out.comment_lines.insert(line);
+                    i += 1;
+                } else if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            record_comment(&mut out, start_line, &src[start..i]);
+            continue;
+        }
+        // string-ish prefixes: "…", b"…", r"…", r#"…"#, br#"…"#, b'…'
+        if c == b'"' {
+            i = lex_string(b, i, &mut line);
+            push(&mut out, line, Kind::Str, STR_SENTINEL);
+            continue;
+        }
+        if c == b'b' && i + 1 < b.len() && b[i + 1] == b'"' {
+            i = lex_string(b, i + 1, &mut line);
+            push(&mut out, line, Kind::Str, STR_SENTINEL);
+            continue;
+        }
+        if c == b'b' && i + 1 < b.len() && b[i + 1] == b'\'' {
+            i = lex_char(b, i + 1, &mut line);
+            push(&mut out, line, Kind::Str, STR_SENTINEL);
+            continue;
+        }
+        if (c == b'r' || c == b'b') && is_raw_string_start(b, i) {
+            i = lex_raw_string(b, i, &mut line);
+            push(&mut out, line, Kind::Str, STR_SENTINEL);
+            continue;
+        }
+        // raw identifier r#name (not a raw string: next is not a quote)
+        if c == b'r'
+            && i + 2 < b.len()
+            && b[i + 1] == b'#'
+            && (b[i + 2].is_ascii_alphabetic() || b[i + 2] == b'_')
+        {
+            let s = i + 2;
+            let mut j = s;
+            while j < b.len() && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+                j += 1;
+            }
+            push(&mut out, line, Kind::Ident, &src[s..j]);
+            i = j;
+            continue;
+        }
+        // lifetime or char literal
+        if c == b'\'' {
+            let next_ident = i + 1 < b.len()
+                && (b[i + 1].is_ascii_alphabetic() || b[i + 1] == b'_');
+            let char_lit = next_ident && i + 2 < b.len() && b[i + 2] == b'\'';
+            if next_ident && !char_lit {
+                let s = i;
+                let mut j = i + 1;
+                while j < b.len() && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+                    j += 1;
+                }
+                push(&mut out, line, Kind::Lifetime, &src[s..j]);
+                i = j;
+                continue;
+            }
+            i = lex_char(b, i, &mut line);
+            push(&mut out, line, Kind::Str, STR_SENTINEL);
+            continue;
+        }
+        if c.is_ascii_alphabetic() || c == b'_' {
+            let s = i;
+            while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                i += 1;
+            }
+            push(&mut out, line, Kind::Ident, &src[s..i]);
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let s = i;
+            while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                i += 1;
+            }
+            // fraction: `1.5` but not the range `1..n`
+            if i + 1 < b.len() && b[i] == b'.' && b[i + 1].is_ascii_digit() {
+                i += 1;
+                while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                    i += 1;
+                }
+            }
+            // signed exponent: `1e-3`, `2.5E+7`
+            if i > s
+                && i < b.len()
+                && (b[i] == b'+' || b[i] == b'-')
+                && (b[i - 1] == b'e' || b[i - 1] == b'E')
+            {
+                i += 1;
+                while i < b.len() && b[i].is_ascii_digit() {
+                    i += 1;
+                }
+            }
+            push(&mut out, line, Kind::Num, &src[s..i]);
+            continue;
+        }
+        if c >= 0x80 {
+            // non-ASCII outside strings/comments: skip the whole char
+            i += utf8_width(c);
+            continue;
+        }
+        let text = [c];
+        push(&mut out, line, Kind::Punct, std::str::from_utf8(&text).unwrap_or("?"));
+        i += 1;
+    }
+    out
+}
+
+fn push(out: &mut Lexed, line: u32, kind: Kind, text: &str) {
+    out.code_lines.insert(line);
+    out.toks.push(Tok { line, kind, text: text.to_string() });
+}
+
+fn record_comment(out: &mut Lexed, line: u32, text: &str) {
+    out.comment_lines.insert(line);
+    let e = out.comment_text.entry(line).or_default();
+    if !e.is_empty() {
+        e.push(' ');
+    }
+    e.push_str(text);
+}
+
+/// `i` points at the opening quote; returns the index past the close.
+fn lex_string(b: &[u8], i: usize, line: &mut u32) -> usize {
+    let mut j = i + 1;
+    while j < b.len() {
+        match b[j] {
+            b'\\' => j += 2,
+            b'"' => return j + 1,
+            b'\n' => {
+                *line += 1;
+                j += 1;
+            }
+            _ => j += 1,
+        }
+    }
+    j
+}
+
+/// `i` points at the opening single quote.
+fn lex_char(b: &[u8], i: usize, line: &mut u32) -> usize {
+    let mut j = i + 1;
+    while j < b.len() {
+        match b[j] {
+            b'\\' => j += 2,
+            b'\'' => return j + 1,
+            b'\n' => {
+                *line += 1;
+                j += 1;
+            }
+            _ => j += 1,
+        }
+    }
+    j
+}
+
+/// Is `b[i..]` the start of `r"`, `r#…#"`, `br"`, or `br#…#"`?
+fn is_raw_string_start(b: &[u8], i: usize) -> bool {
+    let mut j = i + 1;
+    if b[i] == b'b' {
+        if j >= b.len() || b[j] != b'r' {
+            return false;
+        }
+        j += 1;
+    }
+    while j < b.len() && b[j] == b'#' {
+        j += 1;
+    }
+    j < b.len() && b[j] == b'"' && (j > i + 1 || b[i] == b'r')
+}
+
+/// `i` points at the `r`/`b` prefix; returns the index past the close.
+fn lex_raw_string(b: &[u8], i: usize, line: &mut u32) -> usize {
+    let mut j = i + 1;
+    if b[i] == b'b' {
+        j += 1; // past the 'r'
+    }
+    let mut hashes = 0usize;
+    while j < b.len() && b[j] == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    j += 1; // past the opening quote
+    while j < b.len() {
+        if b[j] == b'\n' {
+            *line += 1;
+            j += 1;
+            continue;
+        }
+        if b[j] == b'"' {
+            let mut k = j + 1;
+            let mut seen = 0usize;
+            while k < b.len() && b[k] == b'#' && seen < hashes {
+                seen += 1;
+                k += 1;
+            }
+            if seen == hashes {
+                return k;
+            }
+        }
+        j += 1;
+    }
+    j
+}
+
+fn utf8_width(c: u8) -> usize {
+    match c {
+        0x00..=0x7F => 1,
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex(src).toks.into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn comments_stay_out_of_the_stream() {
+        let lx = lex("let x = 1; // trailing\n/* block\nspans */ fn f() {}\n");
+        assert!(lx.toks.iter().all(|t| !t.text.contains("trailing")));
+        assert!(lx.comment_on(1).unwrap().contains("trailing"));
+        assert!(lx.comment_on(2).unwrap().contains("spans"));
+        assert!(lx.comment_lines.contains(&3));
+        // `fn` lands on line 3, after the block comment closes
+        let f = lx.toks.iter().find(|t| t.text == "fn").unwrap();
+        assert_eq!(f.line, 3);
+    }
+
+    #[test]
+    fn strings_cannot_spoof_identifiers() {
+        let ts = texts("let s = \"Instant::now() .lock().unwrap()\";");
+        assert!(!ts.contains(&"Instant".to_string()));
+        assert!(!ts.contains(&"unwrap".to_string()));
+    }
+
+    #[test]
+    fn raw_strings_and_escapes() {
+        let ts = texts(r##"let s = r#"quote " inside"#; let t = "a\"b"; done"##);
+        assert_eq!(ts.iter().filter(|t| t.as_str() == "let").count(), 2);
+        assert!(ts.contains(&"done".to_string()));
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let lx = lex("fn f<'a>(x: &'a str) { let c = 'x'; let nl = '\\n'; }");
+        let kinds: Vec<Kind> = lx.toks.iter().map(|t| t.kind).collect();
+        assert_eq!(kinds.iter().filter(|k| **k == Kind::Lifetime).count(), 2);
+        assert_eq!(kinds.iter().filter(|k| **k == Kind::Str).count(), 2);
+    }
+
+    #[test]
+    fn numbers_do_not_swallow_ranges() {
+        let ts = texts("for i in 0..n { let x = 1.5e-3; }");
+        assert!(ts.contains(&"0".to_string()));
+        assert!(ts.contains(&"n".to_string()));
+        assert!(ts.contains(&"1.5e-3".to_string()));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let ts = texts("/* outer /* inner */ still comment */ real");
+        assert_eq!(ts, vec!["real".to_string()]);
+    }
+}

@@ -1,0 +1,257 @@
+//! `agent-xpu lint` — the repo-native architectural lint pass
+//! (DESIGN.md §10).
+//!
+//! Statically enforces the invariants every correctness claim in this
+//! reproduction rests on: the deterministic core never reads wall
+//! clocks or iterates unordered maps order-sensitively, locks are
+//! poison-safe, the scheduler hot path cannot panic, `unsafe` carries
+//! `// SAFETY:` justifications, serializers cannot leak non-finite
+//! JSON, and every `SchedPolicy`/`RoutePolicy` impl is wired into its
+//! registry so the property-test loops cover it.
+//!
+//! Zero new dependencies, in the crate's own-your-tools style
+//! (`util/json.rs`, `util/fxhash.rs`): a token-level scanner
+//! ([`lexer`]), a rule engine over short token patterns ([`rules`]),
+//! and a checked-in module-scope config ([`config`], `rust/lint.json`).
+//! Per-site escapes are `lint:allow` comments — the marker, the rule
+//! name in parentheses, then a reason — on the offending line or the
+//! line above.  The reason is mandatory and the report records every
+//! use, so the allowlist cannot grow silently.
+
+pub mod config;
+pub mod lexer;
+pub mod rules;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+pub use config::LintConfig;
+pub use rules::{AllowRec, Diag, RULES};
+
+/// An allow that suppressed at least one diagnostic.
+#[derive(Debug, Clone)]
+pub struct UsedAllow {
+    pub file: String,
+    pub line: u32,
+    pub rule: String,
+    pub reason: String,
+}
+
+pub struct LintReport {
+    pub files_scanned: usize,
+    /// Un-allowlisted violations, sorted by (file, line).
+    pub violations: Vec<Diag>,
+    /// Allows that suppressed a diagnostic.
+    pub allowed: Vec<UsedAllow>,
+    /// Allow comments that matched nothing (stale escapes — reported,
+    /// not fatal).
+    pub unused_allows: Vec<AllowRec>,
+}
+
+impl LintReport {
+    pub fn clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Strict-JSON report for the CI gate (RFC 8259 — `Json` cannot
+    /// emit NaN/Infinity).
+    pub fn to_json(&self) -> Json {
+        let viol: Vec<Json> = self
+            .violations
+            .iter()
+            .map(|v| {
+                Json::obj()
+                    .set("file", v.file.as_str())
+                    .set("line", v.line as i64)
+                    .set("rule", v.rule)
+                    .set("message", v.msg.as_str())
+            })
+            .collect();
+        let allowed: Vec<Json> = self
+            .allowed
+            .iter()
+            .map(|a| {
+                Json::obj()
+                    .set("file", a.file.as_str())
+                    .set("line", a.line as i64)
+                    .set("rule", a.rule.as_str())
+                    .set("reason", a.reason.as_str())
+            })
+            .collect();
+        let unused: Vec<Json> = self
+            .unused_allows
+            .iter()
+            .map(|a| {
+                Json::obj()
+                    .set("file", a.file.as_str())
+                    .set("line", a.line as i64)
+                    .set("rule", a.rule.as_str())
+            })
+            .collect();
+        let rules: Vec<Json> = RULES.iter().map(|r| Json::Str(r.to_string())).collect();
+        Json::obj()
+            .set("files_scanned", self.files_scanned as i64)
+            .set("rules", Json::Arr(rules))
+            .set("violation_count", self.violations.len() as i64)
+            .set("violations", Json::Arr(viol))
+            .set("allow_count", self.allowed.len() as i64)
+            .set("allowed", Json::Arr(allowed))
+            .set("unused_allow_count", self.unused_allows.len() as i64)
+            .set("unused_allows", Json::Arr(unused))
+    }
+}
+
+/// Scan one source string as if it lived at `rel` — the unit the
+/// fixture tests drive directly.
+pub fn scan_source(rel: &str, src: &str, cfg: &LintConfig) -> rules::FileScan {
+    rules::scan_file(rel, src, cfg)
+}
+
+/// Walk `paths` under `root`, run every rule, resolve the cross-file
+/// registry-coverage rule, and apply the allowlist.
+pub fn run(root: &Path, paths: &[String], cfg: &LintConfig) -> Result<LintReport> {
+    let mut files: Vec<String> = Vec::new();
+    for p in paths {
+        collect_rs(root, p, cfg, &mut files)?;
+    }
+    files.sort();
+    files.dedup();
+
+    let mut diags: Vec<Diag> = Vec::new();
+    let mut allows: Vec<AllowRec> = Vec::new();
+    let mut impls: Vec<rules::ImplRec> = Vec::new();
+    for rel in &files {
+        let src = std::fs::read_to_string(root.join(rel))
+            .with_context(|| format!("reading {rel}"))?;
+        let mut scan = rules::scan_file(rel, &src, cfg);
+        diags.append(&mut scan.diags);
+        allows.append(&mut scan.allows);
+        impls.append(&mut scan.impls);
+    }
+
+    // registry-coverage: every policy/router impl must be named in its
+    // registry file, or the property-test loops silently skip it.
+    let sched = registry_idents(root, &cfg.sched_registry)?;
+    let route = registry_idents(root, &cfg.route_registry)?;
+    for imp in &impls {
+        let (set, reg) = if imp.trait_name == "SchedPolicy" {
+            (&sched, cfg.sched_registry.as_str())
+        } else {
+            (&route, cfg.route_registry.as_str())
+        };
+        if !set.contains(&imp.type_name) {
+            diags.push(Diag {
+                file: imp.file.clone(),
+                line: imp.line,
+                rule: "registry-coverage",
+                msg: format!(
+                    "`{}` implements `{}` but is not named in {reg} — register it \
+                     so the registry-driven test loops cover it",
+                    imp.type_name, imp.trait_name
+                ),
+            });
+        }
+    }
+
+    // allowlist resolution: an allow covers its own line and the line
+    // below (comment-above style), for its named rule only.
+    let mut used = vec![false; allows.len()];
+    let mut violations: Vec<Diag> = Vec::new();
+    let mut allowed: Vec<UsedAllow> = Vec::new();
+    for d in diags {
+        let hit = allows.iter().position(|a| {
+            a.file == d.file
+                && a.rule == d.rule
+                && (a.line == d.line || a.line + 1 == d.line)
+        });
+        match hit {
+            Some(ix) => {
+                if !used[ix] {
+                    used[ix] = true;
+                    allowed.push(UsedAllow {
+                        file: allows[ix].file.clone(),
+                        line: allows[ix].line,
+                        rule: allows[ix].rule.clone(),
+                        reason: allows[ix].reason.clone(),
+                    });
+                }
+            }
+            None => violations.push(d),
+        }
+    }
+    let unused_allows: Vec<AllowRec> = allows
+        .iter()
+        .enumerate()
+        .filter(|(ix, _)| !used[*ix])
+        .map(|(_, a)| a.clone())
+        .collect();
+    violations.sort_by(|a, b| {
+        a.file.cmp(&b.file).then(a.line.cmp(&b.line)).then(a.rule.cmp(b.rule))
+    });
+    Ok(LintReport { files_scanned: files.len(), violations, allowed, unused_allows })
+}
+
+/// Run with the checked-in config (`<root>/lint.json`) over its
+/// default paths.
+pub fn run_default(root: &Path) -> Result<LintReport> {
+    let cfg = LintConfig::load_or_default(root)?;
+    let paths = cfg.paths.clone();
+    run(root, &paths, &cfg)
+}
+
+fn registry_idents(
+    root: &Path,
+    rel: &str,
+) -> Result<std::collections::BTreeSet<String>> {
+    let src = std::fs::read_to_string(root.join(rel))
+        .with_context(|| format!("reading registry {rel}"))?;
+    Ok(rules::ident_set(&src))
+}
+
+/// Recursively collect `.rs` files under `root/sub` as `/`-normalized
+/// root-relative paths, honoring the exclude list.
+fn collect_rs(
+    root: &Path,
+    sub: &str,
+    cfg: &LintConfig,
+    out: &mut Vec<String>,
+) -> Result<()> {
+    let full = root.join(sub);
+    if full.is_file() {
+        if sub.ends_with(".rs") && !excluded(sub, cfg) {
+            out.push(sub.to_string());
+        }
+        return Ok(());
+    }
+    if !full.is_dir() {
+        anyhow::bail!("lint path {sub:?} is neither a file nor a directory");
+    }
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(&full)
+        .with_context(|| format!("walking {}", full.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for path in entries {
+        let name = match path.file_name().and_then(|n| n.to_str()) {
+            Some(n) => n,
+            None => continue,
+        };
+        let rel = format!("{sub}/{name}");
+        if excluded(&rel, cfg) {
+            continue;
+        }
+        if path.is_dir() {
+            collect_rs(root, &rel, cfg, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(rel);
+        }
+    }
+    Ok(())
+}
+
+fn excluded(rel: &str, cfg: &LintConfig) -> bool {
+    cfg.exclude.iter().any(|e| rel.starts_with(e.as_str()) || rel.contains(e.as_str()))
+}

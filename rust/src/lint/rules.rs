@@ -1,0 +1,752 @@
+//! The rule catalog: seven architectural invariants checked over the
+//! token stream of one file, plus the cross-file registry-coverage
+//! records the runner resolves at the end.  See DESIGN.md §10 for the
+//! catalog rationale and the how-to-add-a-rule walkthrough.
+
+use std::collections::BTreeSet;
+
+use super::config::{LintConfig, path_in};
+use super::lexer::{Kind, Lexed, Tok, lex};
+
+/// Every rule name the allowlist accepts.  `lint-allow` is the meta
+/// rule for malformed allow comments and is not allowlistable itself.
+pub const RULES: &[&str] = &[
+    "no-wall-clock",
+    "no-unordered-iteration",
+    "lock-hygiene",
+    "panic-free-hot-path",
+    "safety-comments",
+    "json-hygiene",
+    "registry-coverage",
+];
+
+#[derive(Debug, Clone)]
+pub struct Diag {
+    pub file: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+/// A parsed per-site allow comment: the `lint:allow` marker, a rule
+/// name in parentheses, and a mandatory reason.
+#[derive(Debug, Clone)]
+pub struct AllowRec {
+    pub file: String,
+    pub line: u32,
+    pub rule: String,
+    pub reason: String,
+}
+
+/// An `impl SchedPolicy for X` / `impl RoutePolicy for X` site, checked
+/// against the registries once every file has been scanned.
+#[derive(Debug, Clone)]
+pub struct ImplRec {
+    pub file: String,
+    pub line: u32,
+    pub trait_name: String,
+    pub type_name: String,
+}
+
+pub struct FileScan {
+    pub diags: Vec<Diag>,
+    pub allows: Vec<AllowRec>,
+    pub impls: Vec<ImplRec>,
+}
+
+/// Run every per-file rule over `src` (at `/`-normalized path `rel`).
+pub fn scan_file(rel: &str, src: &str, cfg: &LintConfig) -> FileScan {
+    let lx = lex(src);
+    let regions = test_regions(&lx.toks);
+    let mut scan = FileScan { diags: Vec::new(), allows: Vec::new(), impls: Vec::new() };
+    parse_allows(rel, &lx, &mut scan);
+    rule_wall_clock(rel, &lx, &regions, cfg, &mut scan.diags);
+    rule_unordered_iteration(rel, &lx, &regions, cfg, &mut scan.diags);
+    rule_lock_hygiene(rel, &lx, &mut scan.diags);
+    rule_panic_free(rel, &lx, &regions, cfg, &mut scan.diags);
+    rule_safety_comments(rel, &lx, &mut scan.diags);
+    rule_json_hygiene(rel, &lx, &regions, cfg, &mut scan.diags);
+    collect_impls(rel, &lx, &regions, &mut scan.impls);
+    scan
+}
+
+/// Collect the identifier set of a registry file (for coverage checks).
+pub fn ident_set(src: &str) -> BTreeSet<String> {
+    lex(src)
+        .toks
+        .into_iter()
+        .filter(|t| t.kind == Kind::Ident)
+        .map(|t| t.text)
+        .collect()
+}
+
+// -- shared token helpers --------------------------------------------------
+
+fn is(t: &[Tok], i: usize, s: &str) -> bool {
+    t.get(i).map_or(false, |x| x.text == s)
+}
+
+fn ident_at(t: &[Tok], i: usize) -> Option<&str> {
+    match t.get(i) {
+        Some(x) if x.kind == Kind::Ident => Some(x.text.as_str()),
+        _ => None,
+    }
+}
+
+fn in_test(regions: &[(usize, usize)], i: usize) -> bool {
+    regions.iter().any(|&(a, b)| i >= a && i <= b)
+}
+
+/// `i` points at `(`; returns the index just past its matching `)`.
+fn skip_parens(t: &[Tok], i: usize) -> usize {
+    let mut depth = 0i32;
+    let mut j = i;
+    while j < t.len() {
+        match t[j].text.as_str() {
+            "(" => depth += 1,
+            ")" => {
+                depth -= 1;
+                if depth == 0 {
+                    return j + 1;
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    j
+}
+
+/// Token-index spans of `#[cfg(test)] mod …` bodies and `#[test] fn …`
+/// bodies — code the determinism/panic rules exempt.
+fn test_regions(t: &[Tok]) -> Vec<(usize, usize)> {
+    let mut regions = Vec::new();
+    let mut i = 0usize;
+    while i < t.len() {
+        if !(is(t, i, "#") && is(t, i + 1, "[")) {
+            i += 1;
+            continue;
+        }
+        // span of this attribute
+        let mut j = i + 2;
+        let mut depth = 1i32;
+        let mut has_test = false;
+        let mut has_not = false;
+        while j < t.len() && depth > 0 {
+            match t[j].text.as_str() {
+                "[" => depth += 1,
+                "]" => depth -= 1,
+                "test" if t[j].kind == Kind::Ident => has_test = true,
+                "not" if t[j].kind == Kind::Ident => has_not = true,
+                _ => {}
+            }
+            j += 1;
+        }
+        if !has_test || has_not {
+            i = j;
+            continue;
+        }
+        // skip further attributes, then modifiers, to the item keyword
+        let mut k = j;
+        while is(t, k, "#") && is(t, k + 1, "[") {
+            let mut d = 1i32;
+            k += 2;
+            while k < t.len() && d > 0 {
+                match t[k].text.as_str() {
+                    "[" => d += 1,
+                    "]" => d -= 1,
+                    _ => {}
+                }
+                k += 1;
+            }
+        }
+        let mut steps = 0;
+        while k < t.len() && steps < 8 {
+            match t[k].text.as_str() {
+                "mod" | "fn" => break,
+                "pub" | "async" | "unsafe" | "const" | "extern" | "(" | ")" | "crate"
+                | "super" | "in" => {
+                    k += 1;
+                    steps += 1;
+                }
+                _ => break,
+            }
+        }
+        if !(is(t, k, "mod") || is(t, k, "fn")) {
+            i = j;
+            continue;
+        }
+        // body: first `{` before any `;` (a `mod x;` has no body here)
+        let mut e = k;
+        while e < t.len() && t[e].text != "{" && t[e].text != ";" {
+            e += 1;
+        }
+        if e < t.len() && t[e].text == "{" {
+            let mut d = 0i32;
+            let mut m = e;
+            while m < t.len() {
+                match t[m].text.as_str() {
+                    "{" => d += 1,
+                    "}" => {
+                        d -= 1;
+                        if d == 0 {
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                m += 1;
+            }
+            regions.push((k, m));
+        }
+        i = j;
+    }
+    regions
+}
+
+// -- lint:allow parsing ----------------------------------------------------
+
+const ALLOW_MARK: &str = "lint:allow(";
+
+fn parse_allows(rel: &str, lx: &Lexed, scan: &mut FileScan) {
+    for (&line, text) in &lx.comment_text {
+        let starts: Vec<usize> = text.match_indices(ALLOW_MARK).map(|(p, _)| p).collect();
+        for (n, &start) in starts.iter().enumerate() {
+            let after = &text[start + ALLOW_MARK.len()..];
+            let close = match after.find(')') {
+                Some(c) => c,
+                None => {
+                    scan.diags.push(Diag {
+                        file: rel.to_string(),
+                        line,
+                        rule: "lint-allow",
+                        msg: "malformed allow comment: missing `)`".to_string(),
+                    });
+                    continue;
+                }
+            };
+            let rule = after[..close].trim().to_string();
+            let mut tail = &after[close + 1..];
+            if let Some(&next) = starts.get(n + 1) {
+                let rel_next = next - (start + ALLOW_MARK.len());
+                if rel_next > close {
+                    tail = &after[close + 1..rel_next];
+                }
+            }
+            let reason = tail.trim().trim_end_matches("*/").trim().to_string();
+            if !RULES.contains(&rule.as_str()) {
+                scan.diags.push(Diag {
+                    file: rel.to_string(),
+                    line,
+                    rule: "lint-allow",
+                    msg: format!("allow names unknown rule {rule:?}"),
+                });
+                continue;
+            }
+            if reason.is_empty() {
+                scan.diags.push(Diag {
+                    file: rel.to_string(),
+                    line,
+                    rule: "lint-allow",
+                    msg: format!("allow for {rule:?} must carry a reason"),
+                });
+                continue;
+            }
+            scan.allows.push(AllowRec { file: rel.to_string(), line, rule, reason });
+        }
+    }
+}
+
+// -- no-wall-clock ---------------------------------------------------------
+
+fn rule_wall_clock(
+    rel: &str,
+    lx: &Lexed,
+    regions: &[(usize, usize)],
+    cfg: &LintConfig,
+    out: &mut Vec<Diag>,
+) {
+    if !cfg.in_core(rel) || path_in(rel, &cfg.wall_clock_allowed) {
+        return;
+    }
+    let t = &lx.toks;
+    for i in 0..t.len() {
+        let name = match ident_at(t, i) {
+            Some(n @ ("Instant" | "SystemTime")) => n,
+            _ => continue,
+        };
+        if !(is(t, i + 1, ":") && is(t, i + 2, ":") && is(t, i + 3, "now")) {
+            continue;
+        }
+        if in_test(regions, i) {
+            continue;
+        }
+        out.push(Diag {
+            file: rel.to_string(),
+            line: t[i].line,
+            rule: "no-wall-clock",
+            msg: format!(
+                "`{name}::now()` in the deterministic core — schedules must read \
+                 the engine clock, never the wall"
+            ),
+        });
+    }
+}
+
+// -- no-unordered-iteration ------------------------------------------------
+
+/// Iterator adapters that preserve the (un)orderedness question.
+const TRANSPARENT: &[&str] =
+    &["filter", "map", "filter_map", "copied", "cloned", "flat_map", "flatten", "inspect"];
+/// Terminals whose result is independent of iteration order.
+const ORDER_FREE: &[&str] = &["any", "all", "count", "sum", "product", "min", "max"];
+/// Map/set iteration entry points.
+const ITER_METHODS: &[&str] = &[
+    "keys",
+    "values",
+    "values_mut",
+    "into_keys",
+    "into_values",
+    "iter",
+    "iter_mut",
+    "into_iter",
+    "drain",
+];
+
+/// Names declared with an unordered map/set type anywhere in this file
+/// (struct fields, fn params, let bindings — `name: …MapType…`).
+fn map_typed_names(t: &[Tok], cfg: &LintConfig) -> BTreeSet<String> {
+    let mut names = BTreeSet::new();
+    for i in 1..t.len() {
+        if t[i].text != ":" || is(t, i + 1, ":") || t[i - 1].text == ":" {
+            continue;
+        }
+        let name = match ident_at(t, i - 1) {
+            Some(n) => n,
+            None => continue,
+        };
+        let mut angle = 0i32;
+        let mut j = i + 1;
+        let mut steps = 0;
+        while j < t.len() && steps < 60 {
+            let s = t[j].text.as_str();
+            match s {
+                "<" => angle += 1,
+                ">" => {
+                    if angle == 0 {
+                        break;
+                    }
+                    angle -= 1;
+                }
+                "," | ";" | "=" | "{" | "}" | ")" if angle == 0 => break,
+                _ => {
+                    if t[j].kind == Kind::Ident && cfg.is_map_type(s) {
+                        names.insert(name.to_string());
+                        break;
+                    }
+                }
+            }
+            j += 1;
+            steps += 1;
+        }
+    }
+    names
+}
+
+fn rule_unordered_iteration(
+    rel: &str,
+    lx: &Lexed,
+    regions: &[(usize, usize)],
+    cfg: &LintConfig,
+    out: &mut Vec<Diag>,
+) {
+    if !cfg.in_core(rel) {
+        return;
+    }
+    let t = &lx.toks;
+    let names = map_typed_names(t, cfg);
+    // method-call iteration: `recv.values()…`
+    for i in 1..t.len() {
+        if t[i].text != "." {
+            continue;
+        }
+        let method = match ident_at(t, i + 1) {
+            Some(m) if ITER_METHODS.contains(&m) => m,
+            _ => continue,
+        };
+        if !is(t, i + 2, "(") {
+            continue;
+        }
+        let recv = match ident_at(t, i - 1) {
+            Some(r) if names.contains(r) => r,
+            _ => continue,
+        };
+        if in_test(regions, i) {
+            continue;
+        }
+        if chain_is_order_free(t, skip_parens(t, i + 2)) {
+            continue;
+        }
+        out.push(Diag {
+            file: rel.to_string(),
+            line: t[i + 1].line,
+            rule: "no-unordered-iteration",
+            msg: format!(
+                "`{recv}.{method}()` iterates an unordered map in the deterministic \
+                 core — sort by a total key or reduce order-insensitively"
+            ),
+        });
+    }
+    // for-loop iteration: `for x in &recv {`
+    for i in 0..t.len() {
+        if ident_at(t, i) != Some("for") || is(t, i + 1, "<") {
+            continue;
+        }
+        if (i.saturating_sub(12)..i).any(|b| t[b].text == "impl") {
+            continue; // `impl Trait for Type`
+        }
+        if in_test(regions, i) {
+            continue;
+        }
+        // find `in` at depth 0 (the pattern may contain parens/tuples)
+        let mut j = i + 1;
+        let mut depth = 0i32;
+        let mut found_in = false;
+        while j < t.len() && j < i + 40 {
+            match t[j].text.as_str() {
+                "(" | "[" => depth += 1,
+                ")" | "]" => depth -= 1,
+                "in" if depth == 0 && t[j].kind == Kind::Ident => {
+                    found_in = true;
+                    break;
+                }
+                "{" | ";" => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        if !found_in {
+            continue;
+        }
+        // the iterated expression, up to its `{`; call chains are
+        // handled by the method pass above
+        let mut last_ident: Option<&str> = None;
+        let mut has_call = false;
+        let mut k = j + 1;
+        while k < t.len() && k < j + 40 {
+            match t[k].text.as_str() {
+                "{" | ";" => break,
+                "(" => has_call = true,
+                _ => {
+                    if t[k].kind == Kind::Ident {
+                        last_ident = Some(t[k].text.as_str());
+                    }
+                }
+            }
+            k += 1;
+        }
+        if has_call {
+            continue;
+        }
+        if let Some(name) = last_ident {
+            if names.contains(name) {
+                out.push(Diag {
+                    file: rel.to_string(),
+                    line: t[i].line,
+                    rule: "no-unordered-iteration",
+                    msg: format!(
+                        "`for … in {name}` iterates an unordered map in the \
+                         deterministic core — sort by a total key first"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Follow a method chain from token `k` (just past a `)`); true when it
+/// reduces through order-preserving adapters to an order-free terminal.
+fn chain_is_order_free(t: &[Tok], mut k: usize) -> bool {
+    loop {
+        if !is(t, k, ".") {
+            return false;
+        }
+        let name = match ident_at(t, k + 1) {
+            Some(n) => n,
+            None => return false,
+        };
+        if !is(t, k + 2, "(") {
+            return false;
+        }
+        if ORDER_FREE.contains(&name) {
+            return true;
+        }
+        if !TRANSPARENT.contains(&name) {
+            return false;
+        }
+        k = skip_parens(t, k + 2);
+    }
+}
+
+// -- lock-hygiene ----------------------------------------------------------
+
+fn rule_lock_hygiene(rel: &str, lx: &Lexed, out: &mut Vec<Diag>) {
+    let t = &lx.toks;
+    for i in 0..t.len() {
+        if t[i].text == "."
+            && is(t, i + 1, "lock")
+            && is(t, i + 2, "(")
+            && is(t, i + 3, ")")
+            && is(t, i + 4, ".")
+            && is(t, i + 5, "unwrap")
+            && is(t, i + 6, "(")
+            && is(t, i + 7, ")")
+        {
+            out.push(Diag {
+                file: rel.to_string(),
+                line: t[i + 5].line,
+                rule: "lock-hygiene",
+                msg: "`.lock().unwrap()` dies on a poisoned mutex — use \
+                      `server::rt::relock`"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+// -- panic-free-hot-path ---------------------------------------------------
+
+fn rule_panic_free(
+    rel: &str,
+    lx: &Lexed,
+    regions: &[(usize, usize)],
+    cfg: &LintConfig,
+    out: &mut Vec<Diag>,
+) {
+    if !path_in(rel, &cfg.panic_free) {
+        return;
+    }
+    let t = &lx.toks;
+    for i in 0..t.len() {
+        if in_test(regions, i) {
+            continue;
+        }
+        let (line, what) = if t[i].text == "."
+            && is(t, i + 1, "unwrap")
+            && is(t, i + 2, "(")
+            && is(t, i + 3, ")")
+        {
+            (t[i + 1].line, "`.unwrap()`")
+        } else if t[i].text == "." && is(t, i + 1, "expect") && is(t, i + 2, "(") {
+            (t[i + 1].line, "`.expect()`")
+        } else if ident_at(t, i) == Some("panic") && is(t, i + 1, "!") {
+            (t[i].line, "`panic!`")
+        } else if ident_at(t, i) == Some("todo") && is(t, i + 1, "!") {
+            (t[i].line, "`todo!`")
+        } else {
+            continue;
+        };
+        out.push(Diag {
+            file: rel.to_string(),
+            line,
+            rule: "panic-free-hot-path",
+            msg: format!(
+                "{what} on the scheduler hot path — return an error or encode the \
+                 invariant, and allowlist only with the invariant spelled out"
+            ),
+        });
+    }
+}
+
+// -- safety-comments -------------------------------------------------------
+
+fn rule_safety_comments(rel: &str, lx: &Lexed, out: &mut Vec<Diag>) {
+    let t = &lx.toks;
+    // lines that an upward scan may step over: `unsafe impl` headers
+    // (a shared SAFETY comment may cover a Send+Sync pair) and
+    // attribute lines.
+    let mut skippable: BTreeSet<u32> = BTreeSet::new();
+    for i in 0..t.len() {
+        if ident_at(t, i) == Some("unsafe") && is(t, i + 1, "impl") {
+            skippable.insert(t[i].line);
+        }
+        if t[i].text == "#" && is(t, i + 1, "[") {
+            let end = skip_brackets(t, i + 1);
+            let last_line = t.get(end.saturating_sub(1)).map_or(t[i].line, |x| x.line);
+            for l in t[i].line..=last_line {
+                skippable.insert(l);
+            }
+        }
+    }
+    for i in 0..t.len() {
+        if ident_at(t, i) != Some("unsafe") {
+            continue;
+        }
+        let target = if is(t, i + 1, "{") {
+            "block"
+        } else if is(t, i + 1, "impl") {
+            "impl"
+        } else {
+            continue;
+        };
+        if has_safety_comment(lx, &skippable, t[i].line) {
+            continue;
+        }
+        out.push(Diag {
+            file: rel.to_string(),
+            line: t[i].line,
+            rule: "safety-comments",
+            msg: format!("`unsafe {target}` without a `// SAFETY:` justification"),
+        });
+    }
+}
+
+/// `i` points at `[`; returns the index just past its matching `]`.
+fn skip_brackets(t: &[Tok], i: usize) -> usize {
+    let mut depth = 0i32;
+    let mut j = i;
+    while j < t.len() {
+        match t[j].text.as_str() {
+            "[" => depth += 1,
+            "]" => {
+                depth -= 1;
+                if depth == 0 {
+                    return j + 1;
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    j
+}
+
+fn has_safety_comment(lx: &Lexed, skippable: &BTreeSet<u32>, line: u32) -> bool {
+    // trailing comment on the unsafe line itself
+    if lx.comment_on(line).is_some_and(|c| c.contains("SAFETY:")) {
+        return true;
+    }
+    let mut l = line.saturating_sub(1);
+    while l >= 1 {
+        let is_comment = lx.comment_lines.contains(&l) && !lx.code_lines.contains(&l);
+        if is_comment {
+            if lx.comment_on(l).is_some_and(|c| c.contains("SAFETY:")) {
+                return true;
+            }
+        } else if !skippable.contains(&l) {
+            return false;
+        }
+        l -= 1;
+    }
+    false
+}
+
+// -- json-hygiene ----------------------------------------------------------
+
+fn rule_json_hygiene(
+    rel: &str,
+    lx: &Lexed,
+    regions: &[(usize, usize)],
+    cfg: &LintConfig,
+    out: &mut Vec<Diag>,
+) {
+    if !path_in(rel, &cfg.json_hygiene) {
+        return;
+    }
+    let t = &lx.toks;
+    for i in 0..t.len() {
+        if ident_at(t, i) == Some("Json")
+            && is(t, i + 1, ":")
+            && is(t, i + 2, ":")
+            && is(t, i + 3, "Num")
+            && is(t, i + 4, "(")
+            && !in_test(regions, i)
+        {
+            out.push(Diag {
+                file: rel.to_string(),
+                line: t[i].line,
+                rule: "json-hygiene",
+                msg: "raw `Json::Num(…)` in a serializer — route floats through \
+                      `Json::num_or_null` so NaN/Infinity degrade to null"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+// -- registry-coverage (collection half) -----------------------------------
+
+fn collect_impls(rel: &str, lx: &Lexed, regions: &[(usize, usize)], out: &mut Vec<ImplRec>) {
+    let t = &lx.toks;
+    for i in 0..t.len() {
+        if ident_at(t, i) != Some("impl") || in_test(regions, i) {
+            continue;
+        }
+        let mut j = i + 1;
+        if is(t, j, "<") {
+            let mut angle = 0i32;
+            while j < t.len() {
+                match t[j].text.as_str() {
+                    "<" => angle += 1,
+                    ">" => {
+                        angle -= 1;
+                        if angle == 0 {
+                            j += 1;
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+        }
+        // trait path up to `for`
+        let mut trait_last: Option<&str> = None;
+        let mut found_for = false;
+        let mut steps = 0;
+        while j < t.len() && steps < 16 {
+            match t[j].text.as_str() {
+                "for" if t[j].kind == Kind::Ident => {
+                    found_for = true;
+                    j += 1;
+                    break;
+                }
+                "{" | "where" | "<" => break,
+                _ => {
+                    if t[j].kind == Kind::Ident {
+                        trait_last = Some(t[j].text.as_str());
+                    }
+                }
+            }
+            j += 1;
+            steps += 1;
+        }
+        let trait_name = match trait_last {
+            Some(tr @ ("SchedPolicy" | "RoutePolicy")) if found_for => tr,
+            _ => continue,
+        };
+        // implementing type: last path segment before `{`/`<`/`where`
+        let mut ty: Option<&str> = None;
+        let mut steps = 0;
+        while j < t.len() && steps < 12 {
+            match t[j].text.as_str() {
+                "{" | "where" | "<" => break,
+                _ => {
+                    if t[j].kind == Kind::Ident && t[j].text != "dyn" {
+                        ty = Some(t[j].text.as_str());
+                    }
+                }
+            }
+            j += 1;
+            steps += 1;
+        }
+        if let Some(ty) = ty {
+            out.push(ImplRec {
+                file: rel.to_string(),
+                line: t[i].line,
+                trait_name: trait_name.to_string(),
+                type_name: ty.to_string(),
+            });
+        }
+    }
+}

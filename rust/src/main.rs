@@ -12,6 +12,7 @@
 //!           [--max-queue-depth 256] [--max-live-flows 1024]
 //! agent-xpu policies
 //! agent-xpu routers
+//! agent-xpu lint [--json] [paths…]
 //! agent-xpu inspect --artifacts artifacts/small
 //! agent-xpu soc-probe
 //! ```
@@ -53,11 +54,12 @@ fn run() -> Result<()> {
         Some("serve") => cmd_serve(&args),
         Some("policies") => cmd_policies(),
         Some("routers") => cmd_routers(),
+        Some("lint") => cmd_lint(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("soc-probe") => cmd_soc_probe(),
         _ => {
             eprintln!(
-                "usage: agent-xpu <fig|bench|run|serve|policies|routers|inspect|soc-probe> [flags]\n\
+                "usage: agent-xpu <fig|bench|run|serve|policies|routers|lint|inspect|soc-probe> [flags]\n\
                  see `rust/src/main.rs` docs for flags"
             );
             Ok(())
@@ -86,6 +88,59 @@ fn cmd_routers() -> Result<()> {
     println!("per-device scheduling policies (engine::registry):");
     for name in registry::names() {
         println!("  {name}");
+    }
+    Ok(())
+}
+
+/// `agent-xpu lint [--json] [paths…]` — the architectural lint pass
+/// (DESIGN.md §10).  Walks `src` and `tests` (or the given paths,
+/// relative to the crate dir) under the checked-in `lint.json` config
+/// and exits nonzero on any un-allowlisted violation.  `--json` emits
+/// the strict RFC 8259 report CI parses; human-readable
+/// `file:line rule message` diagnostics go to stderr in that mode.
+fn cmd_lint(args: &Args) -> Result<()> {
+    use agent_xpu::lint;
+    // `--json src` parses as json="src" under the flag grammar; treat
+    // any non-boolean value as both the flag and a scan path.
+    let mut json_out = false;
+    let mut paths: Vec<String> = args.positional[1..].to_vec();
+    if let Some(v) = args.get("json") {
+        json_out = v != "false" && v != "0";
+        if !matches!(v, "true" | "false" | "0" | "1") {
+            paths.insert(0, v.to_string());
+        }
+    }
+    // the crate dir (where lint.json and src/ live), whether invoked
+    // from rust/ or the repo root
+    let root = if Path::new("lint.json").exists() || Path::new("src").is_dir() {
+        PathBuf::from(".")
+    } else {
+        PathBuf::from("rust")
+    };
+    let cfg = lint::LintConfig::load_or_default(&root)?;
+    if paths.is_empty() {
+        paths = cfg.paths.clone();
+    }
+    let rep = lint::run(&root, &paths, &cfg)?;
+    if json_out {
+        println!("{}", rep.to_json());
+        for v in &rep.violations {
+            eprintln!("{}:{} {} {}", v.file, v.line, v.rule, v.msg);
+        }
+    } else {
+        for v in &rep.violations {
+            println!("{}:{} {} {}", v.file, v.line, v.rule, v.msg);
+        }
+        println!(
+            "lint: {} file(s), {} violation(s), {} allow(s) ({} unused)",
+            rep.files_scanned,
+            rep.violations.len(),
+            rep.allowed.len(),
+            rep.unused_allows.len(),
+        );
+    }
+    if !rep.clean() {
+        bail!("{} un-allowlisted lint violation(s)", rep.violations.len());
     }
     Ok(())
 }

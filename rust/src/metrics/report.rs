@@ -580,10 +580,7 @@ impl ReportAccumulator {
             .set("rebinds", self.rebinds)
             .set("splits", self.splits)
             .set("split_tokens", self.split_tokens)
-            .set(
-                "mean_ttft_ms",
-                if ttft.is_finite() { Json::Num(ttft) } else { Json::Null },
-            )
+            .set("mean_ttft_ms", Json::num_or_null(ttft))
     }
 }
 

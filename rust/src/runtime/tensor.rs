@@ -53,6 +53,10 @@ impl HostTensor {
 /// Build an f32 literal from host data.
 #[cfg(feature = "real-pjrt")]
 pub fn f32_literal(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    // SAFETY: reinterpreting a live `&[f32]` as its own bytes — the
+    // pointer is valid for `len * 4` bytes for the borrow's lifetime,
+    // u8 has no alignment requirement, and f32 has no padding or
+    // invalid bit patterns.
     let bytes: &[u8] = unsafe {
         std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
     };
@@ -63,6 +67,8 @@ pub fn f32_literal(data: &[f32], dims: &[usize]) -> Result<Literal> {
 /// Build an i32 literal from host data.
 #[cfg(feature = "real-pjrt")]
 pub fn i32_literal(data: &[i32], dims: &[usize]) -> Result<Literal> {
+    // SAFETY: same as `f32_literal` — a live `&[i32]` viewed as its
+    // own `len * 4` bytes; u8 is unaligned and i32 has no padding.
     let bytes: &[u8] = unsafe {
         std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
     };

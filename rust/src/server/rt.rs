@@ -1253,7 +1253,7 @@ mod tests {
         let stats = Arc::new(Mutex::new(ReportAccumulator::new()));
         let s2 = stats.clone();
         let _ = std::thread::spawn(move || {
-            let _g = s2.lock().unwrap();
+            let _g = s2.lock().unwrap(); // lint:allow(lock-hygiene) this test deliberately poisons the mutex
             panic!("poison the lock");
         })
         .join();

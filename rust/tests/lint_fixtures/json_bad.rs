@@ -1,0 +1,6 @@
+// Fixture: `json-hygiene` must fire on the raw float constructor in a
+// serializer path.
+
+pub fn row(x: f64) -> Json {
+    Json::obj().set("x", Json::Num(x))
+}

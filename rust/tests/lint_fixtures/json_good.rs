@@ -1,0 +1,5 @@
+// Fixture: non-finite-safe float serialization passes.
+
+pub fn row(x: f64) -> Json {
+    Json::obj().set("x", Json::num_or_null(x))
+}

@@ -1,0 +1,5 @@
+// Fixture: `lock-hygiene` must fire on the poison-propagating unwrap.
+
+pub fn read(stats: &Mutex<u64>) -> u64 {
+    *stats.lock().unwrap()
+}

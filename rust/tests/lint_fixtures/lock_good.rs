@@ -1,0 +1,5 @@
+// Fixture: poison-safe lock access passes.
+
+pub fn read(stats: &Mutex<u64>) -> u64 {
+    *stats.lock().unwrap_or_else(PoisonError::into_inner)
+}

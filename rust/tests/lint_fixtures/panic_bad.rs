@@ -1,0 +1,23 @@
+// Fixture: `panic-free-hot-path` must fire on all four panic forms in
+// non-test code and stay silent inside the test fn.
+
+pub fn pick(xs: &[u64]) -> u64 {
+    *xs.first().unwrap()
+}
+
+pub fn second(xs: &[u64]) -> u64 {
+    *xs.get(1).expect("needs two")
+}
+
+pub fn boom() {
+    panic!("no");
+}
+
+pub fn later() {
+    todo!()
+}
+
+#[test]
+fn unwrap_in_tests_is_fine() {
+    Some(1).unwrap();
+}

@@ -1,0 +1,12 @@
+// Fixture: the hot path returns errors instead of panicking.
+
+pub fn pick(xs: &[u64]) -> Result<u64> {
+    xs.first().copied().context("empty batch")
+}
+
+pub fn second(xs: &[u64]) -> Result<u64> {
+    match xs.get(1) {
+        Some(v) => Ok(*v),
+        None => bail!("needs two"),
+    }
+}

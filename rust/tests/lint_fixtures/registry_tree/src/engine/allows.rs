@@ -1,0 +1,14 @@
+// Allow-mechanism fixture, in a core path so `no-wall-clock` applies.
+// One properly allowed site, one stale allow, one reasonless allow.
+
+pub fn epoch() -> Instant {
+    // lint:allow(no-wall-clock) fixture: sanctioned epoch read
+    Instant::now()
+}
+
+// lint:allow(no-wall-clock) fixture: stale escape matching nothing
+pub fn clean() {}
+
+pub fn reasonless() -> Instant {
+    Instant::now() // lint:allow(no-wall-clock)
+}

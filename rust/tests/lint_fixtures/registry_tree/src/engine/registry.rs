@@ -1,0 +1,10 @@
+// Mini registry fixture: names GoodPolicy, never BadPolicy.
+
+pub use crate::policies::GoodPolicy;
+
+pub fn build(name: &str) -> Option<GoodPolicy> {
+    match name {
+        "good" => Some(GoodPolicy),
+        _ => None,
+    }
+}

@@ -1,0 +1,10 @@
+// Mini route registry fixture: names GoodRouter, never BadRouter.
+
+pub use crate::policies::GoodRouter;
+
+pub fn build(name: &str) -> Option<GoodRouter> {
+    match name {
+        "good" => Some(GoodRouter),
+        _ => None,
+    }
+}

@@ -1,0 +1,27 @@
+// Mini policy corpus: one registered and one unregistered impl per
+// trait.  `registry-coverage` must flag exactly the Bad pair.
+
+pub struct GoodPolicy;
+
+impl SchedPolicy for GoodPolicy {}
+
+pub struct BadPolicy;
+
+impl SchedPolicy for BadPolicy {}
+
+pub struct GoodRouter;
+
+impl RoutePolicy for GoodRouter {}
+
+pub struct BadRouter;
+
+impl RoutePolicy for BadRouter {}
+
+#[cfg(test)]
+mod tests {
+    struct TestOnlyPolicy;
+
+    // impls inside test modules are exempt — test doubles need not be
+    // registered.
+    impl SchedPolicy for TestOnlyPolicy {}
+}

@@ -1,0 +1,8 @@
+// Fixture: `safety-comments` must fire on the bare unsafe block and
+// the bare unsafe impl.
+
+pub fn cast(data: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) }
+}
+
+unsafe impl Send for Wrapper {}

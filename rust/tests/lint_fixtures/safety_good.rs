@@ -1,0 +1,16 @@
+// Fixture: justified unsafe passes, including a Send+Sync pair sharing
+// one SAFETY comment (the scan steps over unsafe-impl header lines).
+
+pub fn cast(data: &[f32]) -> &[u8] {
+    // SAFETY: fixture — the slice is valid for len * 4 bytes and u8
+    // has no alignment requirement.
+    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) }
+}
+
+// SAFETY: fixture — the wrapper owns its pointer exclusively.
+unsafe impl Send for Wrapper {}
+unsafe impl Sync for Wrapper {}
+
+pub fn trailing(p: *const u8) -> u8 {
+    unsafe { *p } // SAFETY: caller contract — p is valid and aligned
+}

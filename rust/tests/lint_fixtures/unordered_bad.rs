@@ -1,0 +1,12 @@
+// Fixture: `no-unordered-iteration` must fire on order-sensitive map
+// walks — a first-element read and a bare for-loop over a set.
+
+pub fn first_key(m: &FxHashMap<u64, u64>) -> Option<u64> {
+    m.keys().next().copied()
+}
+
+pub fn walk(set: &FxHashSet<u64>) {
+    for _x in &set {
+        touch();
+    }
+}

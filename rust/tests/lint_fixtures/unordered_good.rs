@@ -1,0 +1,19 @@
+// Fixture: order-insensitive reductions over unordered maps pass —
+// the chain analysis sees through transparent adapters to order-free
+// terminals.
+
+pub fn total(m: &FxHashMap<u64, u64>) -> u64 {
+    m.values().copied().sum()
+}
+
+pub fn has_big(m: &FxHashMap<u64, u64>) -> bool {
+    m.values().any(|v| *v > 10)
+}
+
+pub fn size(set: &FxHashSet<u64>) -> usize {
+    set.iter().count()
+}
+
+pub fn live(m: &FxHashMap<u64, u64>) -> usize {
+    m.values().filter(|v| **v > 0).count()
+}

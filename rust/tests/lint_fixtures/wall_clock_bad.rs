@@ -1,0 +1,15 @@
+// Fixture: `no-wall-clock` must fire on the wall read in core code and
+// stay silent inside the test module.  Never compiled — scanned only.
+
+pub fn now_us() -> u64 {
+    let t = Instant::now();
+    t.elapsed().as_micros() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn wall_in_tests_is_fine() {
+        let _t = SystemTime::now();
+    }
+}

@@ -1,0 +1,5 @@
+// Fixture: core code reading the engine clock — no wall access.
+
+pub fn now_us(clock: &EngineClock) -> u64 {
+    clock.now_us()
+}

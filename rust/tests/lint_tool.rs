@@ -1,0 +1,168 @@
+//! Fixture-driven tests for the `agent-xpu lint` pass (DESIGN.md §10):
+//! every rule fires exactly on its bad fixture and stays silent on its
+//! good twin, the allow and registry machinery resolve over a mini
+//! tree, and the shipped tree itself scans clean under the checked-in
+//! `lint.json`.
+
+use std::path::Path;
+
+use agent_xpu::lint::{self, LintConfig};
+use agent_xpu::util::json::Json;
+
+fn fixture(name: &str) -> String {
+    let path = Path::new("tests/lint_fixtures").join(name);
+    std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
+}
+
+/// Rule names firing on fixture `name` scanned as if it lived at `rel`.
+fn rules_at(rel: &str, name: &str) -> Vec<String> {
+    let cfg = LintConfig::default_config();
+    let scan = lint::scan_source(rel, &fixture(name), &cfg);
+    scan.diags.iter().map(|d| d.rule.to_string()).collect()
+}
+
+#[test]
+fn wall_clock_fires_in_core_and_nowhere_else() {
+    // one hit: the wall read in real code; the one in the test module
+    // is exempt
+    assert_eq!(rules_at("src/engine/fx.rs", "wall_clock_bad.rs"), ["no-wall-clock"]);
+    assert!(rules_at("src/engine/fx.rs", "wall_clock_good.rs").is_empty());
+    // outside the deterministic core the rule does not apply
+    assert!(rules_at("src/server/fx.rs", "wall_clock_bad.rs").is_empty());
+}
+
+#[test]
+fn unordered_iteration_fires_on_order_sensitive_walks_only() {
+    let bad = rules_at("src/engine/fx.rs", "unordered_bad.rs");
+    assert_eq!(bad, ["no-unordered-iteration", "no-unordered-iteration"]);
+    // order-free reductions (sum / any / count) pass the chain analysis
+    assert!(rules_at("src/engine/fx.rs", "unordered_good.rs").is_empty());
+    assert!(rules_at("src/server/fx.rs", "unordered_bad.rs").is_empty());
+}
+
+#[test]
+fn lock_hygiene_fires_everywhere_including_tests() {
+    assert_eq!(rules_at("tests/fx.rs", "lock_bad.rs"), ["lock-hygiene"]);
+    assert_eq!(rules_at("src/server/fx.rs", "lock_bad.rs"), ["lock-hygiene"]);
+    assert!(rules_at("src/server/fx.rs", "lock_good.rs").is_empty());
+}
+
+#[test]
+fn panic_free_fires_on_all_four_forms_in_hot_path_files() {
+    let bad = rules_at("src/coordinator/dispatch.rs", "panic_bad.rs");
+    // unwrap, expect, panic!, todo! — the `#[test]` fn is exempt
+    assert_eq!(bad.len(), 4);
+    assert!(bad.iter().all(|r| r == "panic-free-hot-path"));
+    assert!(rules_at("src/coordinator/dispatch.rs", "panic_good.rs").is_empty());
+    // files off the hot path are not under the rule
+    assert!(rules_at("src/engine/core_api.rs", "panic_bad.rs").is_empty());
+}
+
+#[test]
+fn safety_comments_fire_on_bare_unsafe_only() {
+    let bad = rules_at("src/runtime/fx.rs", "safety_bad.rs");
+    assert_eq!(bad, ["safety-comments", "safety-comments"]);
+    // justified blocks, trailing justifications, and a Send+Sync pair
+    // sharing one comment all pass
+    assert!(rules_at("src/runtime/fx.rs", "safety_good.rs").is_empty());
+}
+
+#[test]
+fn json_hygiene_fires_in_serializer_paths_only() {
+    assert_eq!(rules_at("src/metrics/fx.rs", "json_bad.rs"), ["json-hygiene"]);
+    assert!(rules_at("src/metrics/fx.rs", "json_good.rs").is_empty());
+    assert!(rules_at("src/server/fx.rs", "json_bad.rs").is_empty());
+}
+
+#[test]
+fn registry_coverage_and_allows_resolve_over_the_mini_tree() {
+    let cfg = LintConfig::default_config();
+    let root = Path::new("tests/lint_fixtures/registry_tree");
+    let rep = lint::run(root, &["src".to_string()], &cfg).unwrap();
+
+    // exactly the unregistered pair is flagged; the registered pair and
+    // the test-module double are not
+    let mut uncovered = Vec::new();
+    for v in &rep.violations {
+        if v.rule == "registry-coverage" {
+            uncovered.push(v.msg.clone());
+        }
+    }
+    assert_eq!(uncovered.len(), 2, "registry violations: {uncovered:?}");
+    assert!(uncovered.iter().any(|m| m.contains("BadPolicy")));
+    assert!(uncovered.iter().any(|m| m.contains("BadRouter")));
+    for v in &rep.violations {
+        assert!(!v.msg.contains("GoodPolicy"), "{}", v.msg);
+        assert!(!v.msg.contains("GoodRouter"), "{}", v.msg);
+        assert!(!v.msg.contains("TestOnlyPolicy"), "{}", v.msg);
+    }
+
+    // a reasonless allow is rejected and its site stays a violation
+    assert!(rep.violations.iter().any(|v| v.rule == "lint-allow"));
+    assert!(rep
+        .violations
+        .iter()
+        .any(|v| v.file.ends_with("allows.rs") && v.rule == "no-wall-clock"));
+
+    // the proper allow suppressed its site and is recorded with its
+    // reason; the stale allow surfaces as unused, not fatal
+    assert_eq!(rep.allowed.len(), 1);
+    assert!(rep.allowed[0].reason.contains("sanctioned"));
+    assert_eq!(rep.unused_allows.len(), 1);
+}
+
+#[test]
+fn the_shipped_tree_is_lint_clean() {
+    let rep = lint::run_default(Path::new(".")).unwrap();
+    let mut lines = Vec::new();
+    for v in &rep.violations {
+        lines.push(format!("{}:{} {} {}", v.file, v.line, v.rule, v.msg));
+    }
+    assert!(rep.clean(), "lint violations in the shipped tree:\n{}", lines.join("\n"));
+    assert!(rep.files_scanned > 50, "walked only {} files", rep.files_scanned);
+    // the allowlist is real (wall-clock epoch, driver invariants, …),
+    // every entry carries a reason, and none are stale
+    assert!(rep.allowed.len() >= 20, "only {} allows recorded", rep.allowed.len());
+    for a in &rep.allowed {
+        assert!(!a.reason.is_empty(), "{}:{} allow without reason", a.file, a.line);
+    }
+    assert!(
+        rep.unused_allows.is_empty(),
+        "stale allows: {:?}",
+        rep.unused_allows
+            .iter()
+            .map(|a| format!("{}:{}", a.file, a.line))
+            .collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn the_json_report_is_strict_rfc8259() {
+    let rep = lint::run_default(Path::new(".")).unwrap();
+    let text = rep.to_json().to_string();
+    let doc = Json::parse(&text).unwrap();
+    assert_eq!(doc.opt("violation_count").unwrap().as_i64().unwrap(), 0);
+    assert!(doc.opt("allow_count").unwrap().as_i64().unwrap() > 0);
+    assert_eq!(doc.opt("rules").unwrap().as_arr().unwrap().len(), 7);
+    assert_eq!(
+        doc.opt("allow_count").unwrap().as_i64().unwrap() as usize,
+        doc.opt("allowed").unwrap().as_arr().unwrap().len(),
+    );
+}
+
+#[test]
+fn the_cli_gate_emits_the_report_and_exits_zero() {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_agent-xpu"))
+        .args(["lint", "--json"])
+        .output()
+        .expect("spawning agent-xpu");
+    assert!(
+        out.status.success(),
+        "lint CLI failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let doc = Json::parse(&String::from_utf8_lossy(&out.stdout)).unwrap();
+    assert_eq!(doc.opt("violation_count").unwrap().as_i64().unwrap(), 0);
+    assert!(doc.opt("allow_count").unwrap().as_i64().unwrap() > 0);
+}
